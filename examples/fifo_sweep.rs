@@ -1,0 +1,46 @@
+//! Reproduce the paper's FIFO-depth story across all four variants:
+//! Figure 2 (naive, needs an N+2-deep FIFO), Figure 3(a) (two long
+//! FIFOs), Figure 3(b) (one), Figure 3(c) (none — all depth 2).
+//!
+//! ```bash
+//! cargo run --release --example fifo_sweep -- [--n 64] [--d 16]
+//! ```
+
+use sdpa_dataflow::attention::Variant;
+use sdpa_dataflow::cli::Args;
+use sdpa_dataflow::experiments::fifo_sweep;
+use sdpa_dataflow::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false, &[]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let n: usize = args.get_parsed_or("n", 64).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let d: usize = args.get_parsed_or("d", 16).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    let mut summary = Table::new(
+        format!("Summary: minimum long-FIFO depth for full throughput (N={n})"),
+        &["variant", "figure", "# long FIFOs", "min depth", "paper prediction"],
+    );
+    for variant in Variant::ALL {
+        let result =
+            fifo_sweep::run(variant, n, d).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        result.table().print();
+        println!();
+        let min = result
+            .min_full_throughput_depth()
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| "-".into());
+        let prediction = match variant {
+            Variant::MemoryFree => "2 (O(1) memory)".to_string(),
+            _ => format!("{} (N+2, O(N) memory)", n + 2),
+        };
+        summary.row(&[
+            variant.name().into(),
+            variant.figure().into(),
+            variant.long_fifos().len().to_string(),
+            min,
+            prediction,
+        ]);
+    }
+    summary.print();
+    Ok(())
+}

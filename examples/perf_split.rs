@@ -1,0 +1,28 @@
+//! Split graph-build vs simulation cost for §Perf accounting.
+fn main() {
+    use sdpa_dataflow::attention::{workload::Workload, FifoPlan, Variant};
+    use std::time::Instant;
+    let w = Workload::random(64, 16, 1);
+    let reps = 300;
+    // Build cost.
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let built = Variant::MemoryFree.build(&w, &FifoPlan::paper(64)).unwrap();
+        std::hint::black_box(&built.n);
+    }
+    let build_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+    // Run cost via reset + rerun on one graph.
+    let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(64)).unwrap();
+    let (_, s) = built.run().unwrap();
+    let cycles = s.cycles;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        built.engine.reset();
+        let s = built.engine.run(1_000_000).unwrap();
+        std::hint::black_box(s.cycles);
+    }
+    let run_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+    let ticks = cycles * 21;
+    println!("build: {build_us:.0}us  run: {run_us:.0}us  ({cycles} cycles, {:.0} ns/cycle, {:.1}M node-ticks/s)",
+             run_us * 1e3 / cycles as f64, ticks as f64 / run_us);
+}

@@ -1,0 +1,9 @@
+fn main() {
+    use sdpa_dataflow::attention::{workload::Workload, FifoPlan, Variant};
+    let w = Workload::random(64, 16, 1);
+    for _ in 0..200 {
+        let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(64)).unwrap();
+        let (out, _) = built.run().unwrap();
+        std::hint::black_box(out.len());
+    }
+}

@@ -1,0 +1,129 @@
+"""AOT compile path: lower L2/L1 functions to HLO *text* artifacts.
+
+Run once via ``make artifacts``; the Rust runtime loads the results and
+Python never appears on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (in --out-dir, default ../artifacts):
+  <name>.hlo.txt   -- HLO text module (lowered with return_tuple=True)
+  <name>.testvec   -- golden inputs/outputs for Rust-side validation
+  manifest.tsv     -- one line per artifact: name, kind, files, params
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (ModelConfig, attention_head_fn, batched_attention_fn,
+                    model_fn)
+
+MAGIC = b"SDPATV1\n"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default elides big weight literals
+    # as `constant({...})`, which the downstream text parser silently
+    # zero-fills -- baked parameters MUST be printed in full.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text contains elided constants"
+    return text
+
+
+def write_testvec(path: str, name: str, inputs: dict, outputs: dict) -> None:
+    """Binary golden file: text header + raw little-endian f32 payload."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(f"name {name}\n".encode())
+        tensors = [("input", k, np.asarray(v, np.float32)) for k, v in inputs.items()]
+        tensors += [("output", k, np.asarray(v, np.float32)) for k, v in outputs.items()]
+        for role, tname, arr in tensors:
+            dims = " ".join(str(d) for d in arr.shape)
+            f.write(f"tensor {role} {tname} f32 {arr.ndim} {dims}\n".encode())
+        f.write(b"data\n")
+        for _, _, arr in tensors:
+            f.write(struct.pack(f"<{arr.size}f", *arr.ravel().tolist()))
+
+
+def lower_artifact(fn, name: str, kind: str, params: dict, out_dir: str,
+                   input_names: list, manifest: list, seed: int = 1234) -> None:
+    """Lower `fn`, run it on random inputs for goldens, write files."""
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    tv_path = os.path.join(out_dir, f"{name}.testvec")
+
+    lowered = jax.jit(fn).lower(*fn.example_args)
+    hlo = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    rng = np.random.default_rng(seed)
+    concrete = [jnp.asarray(rng.standard_normal(a.shape), jnp.float32)
+                for a in fn.example_args]
+    result = fn(*concrete)
+    inputs = dict(zip(input_names, concrete))
+    outputs = {f"out{i}": np.asarray(r) for i, r in enumerate(result)}
+    write_testvec(tv_path, name, inputs, outputs)
+
+    kv = ",".join(f"{k}={v}" for k, v in params.items())
+    manifest.append(f"{name}\t{kind}\t{name}.hlo.txt\t{name}.testvec\t{kv}")
+    print(f"  wrote {name}: hlo {len(hlo)//1024} KiB", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest artifact of each kind (CI)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list = []
+
+    # Single-head attention artifacts (runtime microbenches + validation).
+    head_shapes = [(64, 64)] if args.quick else [(64, 64), (128, 64), (256, 64)]
+    for n, d in head_shapes:
+        lower_artifact(attention_head_fn(n, d), f"sdpa_n{n}_d{d}", "sdpa",
+                       {"n": n, "d": d, "causal": 0}, out_dir,
+                       ["q", "k", "v"], manifest)
+
+    # Batched attention artifacts (the serving coordinator's shape classes).
+    batch_shapes = [(4, 64, 64)] if args.quick else [
+        (1, 64, 64), (2, 64, 64), (4, 64, 64), (8, 64, 64), (4, 128, 64)]
+    for b, n, d in batch_shapes:
+        lower_artifact(batched_attention_fn(b, n, d), f"sdpa_b{b}_n{n}_d{d}",
+                       "batched_sdpa", {"batch": b, "n": n, "d": d, "causal": 0},
+                       out_dir, ["q", "k", "v"], manifest)
+
+    # Full-model artifact (end-to-end serving driver).
+    cfg = ModelConfig(d_model=128, n_heads=4, d_ff=256, n_layers=2)
+    for b, s in ([(2, 32)] if args.quick else [(1, 32), (2, 32), (4, 64)]):
+        lower_artifact(
+            model_fn(cfg, b, s), f"model_b{b}_s{s}", "model",
+            {"batch": b, "seq": s, "d_model": cfg.d_model,
+             "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+             "n_layers": cfg.n_layers}, out_dir, ["x"], manifest)
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tkind\thlo\ttestvec\tparams\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

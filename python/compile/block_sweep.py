@@ -1,0 +1,54 @@
+"""L1 perf: Pallas block-shape sweep under the TPU VMEM/MXU model.
+
+interpret=True gives CPU-numpy timings that are NOT a TPU proxy, so the
+kernel's *structure* is optimized instead: for each (block_q, block_k)
+we report the per-step VMEM working set and estimated MXU lane
+utilization (see ``sdpa_memfree.vmem_words`` / ``mxu_utilization``), and
+pick the best config under the ~16 MiB/core budget.
+
+Run: ``cd python && python -m compile.block_sweep [n] [d]``
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .kernels.sdpa_memfree import mxu_utilization, vmem_words
+
+VMEM_BUDGET_WORDS = 16 * 1024 * 1024 // 4  # 16 MiB of f32
+
+
+def sweep(n: int, d: int):
+    rows = []
+    for bq in [8, 16, 32, 64, 128, 256]:
+        for bk in [8, 16, 32, 64, 128, 256]:
+            if n % bq or n % bk:
+                continue
+            words = vmem_words(n, d, bq, bk)
+            util = mxu_utilization(d, bq, bk)
+            # Double-buffered tiles for the HBM->VMEM pipeline.
+            words2 = 2 * words
+            rows.append((bq, bk, words, words2, util, words2 <= VMEM_BUDGET_WORDS))
+    return rows
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 1024
+    d = int(sys.argv[2]) if len(sys.argv) > 2 else 64
+    rows = sweep(n, d)
+    naive = vmem_words(n, d, min(n, 32), min(n, 32), naive=True)
+    print(f"memory-free SDPA block sweep  N={n} d={d}  "
+          f"(naive kernel working set: {naive} words)")
+    print(f"{'bq':>5} {'bk':>5} {'words':>9} {'x2buf':>9} {'mxu_util':>9} fits")
+    best = None
+    for bq, bk, words, words2, util, fits in rows:
+        print(f"{bq:>5} {bk:>5} {words:>9} {words2:>9} {util:>9.3f} {fits}")
+        if fits and (best is None or util > best[2]
+                     or (util == best[2] and words2 < best[3])):
+            best = (bq, bk, util, words2)
+    print(f"\nbest config under VMEM budget: block_q={best[0]} block_k={best[1]} "
+          f"(util={best[2]:.3f}, {best[3]} words double-buffered)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Pure-jnp / numpy reference oracles for the attention kernels.
+
+These are the correctness anchors for the whole Python layer:
+
+* ``naive_sdpa``      -- textbook softmax attention (max-subtracted), jnp.
+* ``online_sdpa``     -- the paper's Eq. 3-6 memory-free recurrence as an
+                         explicit ``lax.scan`` over keys; validates the
+                         *algorithm* independent of the Pallas mapping.
+* ``naive_sdpa_f64``  -- numpy float64 oracle (jax default is f32-only).
+
+All operate on single-head ``(n, d)`` arrays; batching/heads are applied
+by the caller with ``vmap``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def naive_sdpa(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Textbook scaled dot-product attention, numerically stable softmax."""
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], dtype=q.dtype))
+    s = (q @ k.T) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    sigma = jnp.sum(e, axis=-1, keepdims=True)
+    return (e / sigma) @ v
+
+
+def causal_sdpa(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal (autoregressive) attention: position i attends to j <= i."""
+    n = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], dtype=q.dtype))
+    s = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    sigma = jnp.sum(e, axis=-1, keepdims=True)
+    return (e / sigma) @ v
+
+
+def online_sdpa(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """The paper's memory-free recurrence (Eq. 3-6), one key at a time.
+
+    State per query row: running max ``m``, rescaled running sum ``r``,
+    rescaled running output ``l``. This is the exact computation the
+    Figure-3(c) dataflow graph performs and the Pallas kernel blocks.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], dtype=q.dtype))
+    _, d = q.shape
+
+    def row(qi):
+        def step(carry, kv):
+            m, r, l = carry
+            kj, vj = kv
+            s = jnp.dot(qi, kj) * scale
+            m_new = jnp.maximum(m, s)
+            delta = jnp.exp(m - m_new)  # exp(-inf - s) = 0 on first step
+            e = jnp.exp(s - m_new)
+            r_new = r * delta + e
+            l_new = l * delta + e * vj
+            return (m_new, r_new, l_new), None
+
+        init = (jnp.float32(-jnp.inf), jnp.float32(0.0), jnp.zeros((d,), q.dtype))
+        (m, r, l), _ = jax.lax.scan(step, init, (k, v))
+        del m
+        return l / r
+
+    return jax.vmap(row)(q)
+
+
+def naive_sdpa_f64(q: np.ndarray, k: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """float64 numpy oracle (tolerance anchor for everything else)."""
+    q64, k64, v64 = (np.asarray(a, dtype=np.float64) for a in (q, k, v))
+    s = (q64 @ k64.T) / np.sqrt(q64.shape[-1])
+    m = s.max(axis=-1, keepdims=True)
+    e = np.exp(s - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+    return p @ v64

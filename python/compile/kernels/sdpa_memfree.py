@@ -1,0 +1,196 @@
+"""L1: the paper's memory-free SDPA as a Pallas kernel (TPU-adapted).
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): the paper
+maps Eq. 3-6 to a streaming dataflow fabric where every score is an
+element in a FIFO and the running (m, r, l) state lives in a Scan node.
+On a TPU-class processor the same insight -- never materialize the N x N
+score matrix; carry a rescaled running max/sum/output -- becomes a
+*block-wise* scan:
+
+* the grid iterates over query blocks (``block_q`` rows per step);
+* inside the kernel a ``fori_loop`` scans K/V tiles of ``block_k`` rows,
+  dynamically sliced from the operands (the HBM->VMEM tile schedule a
+  streaming fabric would express with FIFOs);
+* the q @ k_tile.T and e @ v_tile contractions are MXU-shaped matmuls;
+* the (m, r, acc) carry is the paper's Scan state, rescaled by
+  ``delta = exp(m_old - m_new)`` exactly as in Eq. 4-5.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+identical; performance on TPU is estimated from the VMEM footprint
+(``vmem_words``) in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _memfree_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, n_kv: int,
+                    scale: float, causal: bool, block_q: int):
+    """One grid step: all of K/V scanned against one query block."""
+    q = q_ref[...].astype(jnp.float32)
+    bq, d = q.shape
+    qb = pl.program_id(0)
+
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    r0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    if causal:
+        # Rows of this q block attend keys j <= i; blocks entirely past
+        # the diagonal contribute nothing and are skipped. Block 0 is
+        # always processed, so every row sees at least one unmasked key
+        # and m stays finite (no -inf - -inf NaNs).
+        last_key = (qb + 1) * block_q  # exclusive upper bound on needed j
+        n_blocks = (last_key + block_k - 1) // block_k
+    else:
+        n_blocks = n_kv // block_k
+
+    def body(jb, carry):
+        m, r, acc = carry
+        k_blk = pl.load(k_ref, (pl.dslice(jb * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(jb * block_k, block_k), slice(None)))
+        k_blk = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+
+        # s: (bq, bk) scores -- MXU matmul on TPU.
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+        if causal:
+            rows = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            cols = jb * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            s = jnp.where(rows >= cols, s, -jnp.inf)
+
+        # Eq. 4: running max + rescale factor (block-wise).
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        delta = jnp.exp(m - m_new)          # 0 on the first block (m = -inf)
+        e = jnp.exp(s - m_new[:, None])      # masked entries exp(-inf) = 0
+
+        # Eq. 5: rescaled running sum and running output.
+        r_new = r * delta + jnp.sum(e, axis=-1)
+        acc_new = acc * delta[:, None] + jax.lax.dot_general(
+            e, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, r_new, acc_new
+
+    m, r, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, r0, acc0))
+    del m
+    # Eq. 6: final division, once per row.
+    o_ref[...] = (acc / r[:, None]).astype(o_ref.dtype)
+
+
+def sdpa_memfree(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 block_q: int | None = None, block_k: int | None = None,
+                 causal: bool = False, interpret: bool = True) -> jax.Array:
+    """Memory-free SDPA over single-head ``(n, d)`` operands.
+
+    Block sizes must divide ``n``; defaults pick ``min(n, 128)`` — the
+    best configuration from the VMEM/MXU block sweep
+    (``compile.block_sweep``): 128x128 tiles maximize MXU lane
+    utilization (bounded at 0.5 by d=64 heads) while the double-buffered
+    working set stays ~0.4 MiB, far under the 16 MiB VMEM budget and
+    independent of N. Batching and heads are the caller's ``vmap``
+    (see ``compile.model``).
+    """
+    n, d = q.shape
+    assert k.shape == (n, d) and v.shape == (n, d), "q/k/v shape mismatch"
+    block_q = block_q or min(n, 128)
+    block_k = block_k or min(n, 128)
+    assert n % block_q == 0, f"block_q={block_q} must divide n={n}"
+    assert n % block_k == 0, f"block_k={block_k} must divide n={n}"
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _memfree_kernel, block_k=block_k, n_kv=n, scale=scale,
+        causal=causal, block_q=block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),   # one q tile / step
+            pl.BlockSpec((n, d), lambda i: (0, 0)),          # K resident
+            pl.BlockSpec((n, d), lambda i: (0, 0)),          # V resident
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _naive_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """Baseline kernel: materializes the full score row block (the
+    quadratic-memory algorithm the paper starts from)."""
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (p @ v).astype(o_ref.dtype)
+
+
+def sdpa_naive(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               block_q: int | None = None, interpret: bool = True) -> jax.Array:
+    """Naive (score-materializing) SDPA baseline kernel, for ablations."""
+    n, d = q.shape
+    block_q = block_q or min(n, 32)
+    assert n % block_q == 0
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_naive_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_words(n: int, d: int, block_q: int, block_k: int,
+               naive: bool = False) -> int:
+    """Per-grid-step VMEM working set, in f32 words.
+
+    memfree: q tile + k/v tiles + score tile + (m, r, acc) carry.
+    naive:   q tile + full K/V + full score row block.
+    Used by the perf pass to pick block shapes under the ~16 MiB/core
+    VMEM budget and by DESIGN.md's TPU estimates.
+    """
+    if naive:
+        return block_q * d + 2 * n * d + block_q * n + block_q * d
+    return (block_q * d            # q tile
+            + 2 * block_k * d      # k, v tiles
+            + block_q * block_k    # score tile
+            + 2 * block_q          # m, r
+            + block_q * d)         # acc
+
+
+def mxu_utilization(d: int, block_q: int, block_k: int,
+                    mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for the two contractions of one step.
+
+    The MXU is a ``mxu x mxu`` systolic array; a (bq, d) @ (d, bk)
+    contraction occupies min(bq,mxu) * min(bk,mxu) * min(d,mxu) of the
+    mxu^3 volume per pass. Geometric mean of the qk and ev contractions.
+    """
+    def util(mm, kk, nn):
+        return (min(mm, mxu) / mxu) * (min(kk, mxu) / mxu) * (min(nn, mxu) / mxu)
+
+    qk = util(block_q, d, block_k)
+    ev = util(block_q, block_k, d)
+    return math.sqrt(qk * ev)

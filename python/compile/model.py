@@ -1,0 +1,140 @@
+"""L2: JAX model layer -- multi-head attention + transformer blocks built
+on the L1 Pallas kernel.
+
+Everything here is build-time only: ``compile.aot`` lowers these
+functions to HLO text once, and the Rust runtime executes the artifacts.
+Parameters are generated deterministically and baked into the lowered
+module as constants, so the Rust side feeds activations only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.sdpa_memfree import sdpa_memfree
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape configuration for the serving model."""
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    n_layers: int = 2
+    causal: bool = False
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Deterministic parameter pytree (dense init, scaled)."""
+    rng = np.random.default_rng(seed)
+
+    def mat(*shape):
+        scale = 1.0 / np.sqrt(shape[0])
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "wq": mat(cfg.d_model, cfg.d_model),
+            "wk": mat(cfg.d_model, cfg.d_model),
+            "wv": mat(cfg.d_model, cfg.d_model),
+            "wo": mat(cfg.d_model, cfg.d_model),
+            "w1": mat(cfg.d_model, cfg.d_ff),
+            "b1": jnp.zeros((cfg.d_ff,), jnp.float32),
+            "w2": mat(cfg.d_ff, cfg.d_model),
+            "b2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ln1_g": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln1_b": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ln2_g": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        })
+    return {"layers": layers}
+
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def mha(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Multi-head attention over ``x: (batch, seq, d_model)``.
+
+    Projections are plain matmuls; the attention core is the L1 Pallas
+    kernel vmapped over (batch, head).
+    """
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        y = x @ w                                    # (b, s, d_model)
+        return y.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # (b, h, s, dh)
+
+    q, k, v = split(params["wq"]), split(params["wk"]), split(params["wv"])
+    attn = jax.vmap(jax.vmap(
+        functools.partial(sdpa_memfree, causal=cfg.causal, interpret=True)))(
+        q, k, v)                                     # (b, h, s, dh)
+    merged = attn.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return merged @ params["wo"]
+
+
+def transformer_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pre-LN transformer block: x + MHA(LN(x)); x + MLP(LN(x))."""
+    a = mha(params, layer_norm(x, params["ln1_g"], params["ln1_b"]), cfg)
+    x = x + a
+    hidden = jax.nn.gelu(layer_norm(x, params["ln2_g"], params["ln2_b"]) @ params["w1"]
+                         + params["b1"])
+    return x + hidden @ params["w2"] + params["b2"]
+
+
+def forward(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full model forward: ``(batch, seq, d_model) -> same``."""
+    for layer in params["layers"]:
+        x = transformer_block(layer, x, cfg)
+    return x
+
+
+def attention_head_fn(n: int, d: int, causal: bool = False):
+    """The single-head SDPA function the attention artifacts lower:
+    ``(q, k, v) -> (o,)`` over ``(n, d)`` f32 operands."""
+    def fn(q, k, v):
+        return (sdpa_memfree(q, k, v, causal=causal, interpret=True),)
+
+    fn.example_args = tuple(
+        jax.ShapeDtypeStruct((n, d), jnp.float32) for _ in range(3))
+    return fn
+
+
+def batched_attention_fn(batch: int, n: int, d: int, causal: bool = False):
+    """Batched single-head SDPA: ``(B, n, d)^3 -> (B, n, d)`` -- the shape
+    class the serving coordinator batches requests into."""
+    def fn(q, k, v):
+        f = functools.partial(sdpa_memfree, causal=causal, interpret=True)
+        return (jax.vmap(f)(q, k, v),)
+
+    fn.example_args = tuple(
+        jax.ShapeDtypeStruct((batch, n, d), jnp.float32) for _ in range(3))
+    return fn
+
+
+def model_fn(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Full-model forward with constants-baked parameters:
+    ``x: (batch, seq, d_model) -> (y,)``."""
+    params = init_params(cfg, seed)
+
+    def fn(x):
+        return (forward(params, x, cfg),)
+
+    fn.example_args = (jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.float32),)
+    return fn

@@ -1,0 +1,192 @@
+"""L1 kernel correctness: Pallas memory-free SDPA vs the pure references.
+
+The hypothesis sweep is the core correctness signal for the kernel: it
+explores (n, d, block_q, block_k, seed, causal) jointly and checks the
+kernel against the float64 oracle with a tolerance that the f32
+references themselves satisfy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sdpa_memfree import (mxu_utilization, sdpa_memfree,
+                                          sdpa_naive, vmem_words)
+
+
+def qkv(n, d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return tuple(
+        jnp.asarray(rng.standard_normal((n, d)) * scale, jnp.float32)
+        for _ in range(3))
+
+
+# ---------------------------------------------------------------- basic
+
+def test_matches_f64_oracle_basic():
+    q, k, v = qkv(64, 32, 0)
+    out = sdpa_memfree(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), ref.naive_sdpa_f64(q, k, v),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_matches_jnp_references():
+    q, k, v = qkv(32, 16, 1)
+    out = np.asarray(sdpa_memfree(q, k, v))
+    np.testing.assert_allclose(out, np.asarray(ref.naive_sdpa(q, k, v)),
+                               atol=2e-6, rtol=1e-5)
+    np.testing.assert_allclose(out, np.asarray(ref.online_sdpa(q, k, v)),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_naive_baseline_kernel_matches():
+    q, k, v = qkv(32, 16, 2)
+    np.testing.assert_allclose(np.asarray(sdpa_naive(q, k, v)),
+                               ref.naive_sdpa_f64(q, k, v),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_block_shape_independence():
+    """The online rescaling must make results block-shape independent
+    (up to f32 reassociation)."""
+    q, k, v = qkv(64, 32, 3)
+    outs = [np.asarray(sdpa_memfree(q, k, v, block_q=bq, block_k=bk))
+            for bq, bk in [(8, 8), (16, 32), (64, 64), (32, 8)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=5e-6, rtol=1e-4)
+
+
+def test_single_row_returns_convex_combination():
+    q, k, v = qkv(16, 8, 4)
+    out = np.asarray(sdpa_memfree(q, k, v))
+    vmin, vmax = np.asarray(v).min(0), np.asarray(v).max(0)
+    assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+
+def test_adversarial_magnitude_stays_finite():
+    # At scale 100 softmax is effectively an argmax: f32 vs f64 may pick
+    # different winners on near-ties, so only finiteness is checked here
+    # (a naive *unscaled* softmax would produce inf/NaN at this scale).
+    q, k, v = qkv(32, 16, 5, scale=100.0)
+    out = np.asarray(sdpa_memfree(q, k, v))
+    assert np.isfinite(out).all()
+
+
+def test_large_but_stable_magnitude_matches_oracle():
+    # Scale 8: scores are large enough that exp would overflow without
+    # max subtraction, yet far from argmax saturation.
+    q, k, v = qkv(32, 16, 5, scale=8.0)
+    out = np.asarray(sdpa_memfree(q, k, v))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref.naive_sdpa_f64(q, k, v),
+                               atol=1e-4, rtol=1e-3)
+
+
+# --------------------------------------------------------------- causal
+
+def test_causal_matches_reference():
+    q, k, v = qkv(32, 16, 6)
+    out = sdpa_memfree(q, k, v, block_q=8, block_k=8, causal=True)
+    gold = ref.causal_sdpa(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_causal_first_row_is_v0():
+    q, k, v = qkv(16, 8, 7)
+    out = np.asarray(sdpa_memfree(q, k, v, causal=True, block_q=4, block_k=4))
+    np.testing.assert_allclose(out[0], np.asarray(v)[0], atol=1e-6)
+
+
+def test_causal_misaligned_blocks():
+    q, k, v = qkv(24, 8, 8)
+    out = sdpa_memfree(q, k, v, block_q=8, block_k=12, causal=True)
+    gold = ref.causal_sdpa(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               atol=2e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------- shape guards
+
+def test_rejects_nondividing_blocks():
+    q, k, v = qkv(30, 8, 9)
+    with pytest.raises(AssertionError):
+        sdpa_memfree(q, k, v, block_q=16, block_k=8)
+    with pytest.raises(AssertionError):
+        sdpa_memfree(q, k, v, block_q=10, block_k=16)
+
+
+def test_rejects_shape_mismatch():
+    q, _, _ = qkv(16, 8, 10)
+    k, v = qkv(32, 8, 10)[:2]
+    with pytest.raises(AssertionError):
+        sdpa_memfree(q, k, v)
+
+
+# ------------------------------------------------------------ vmap paths
+
+def test_vmap_over_batch():
+    rng = np.random.default_rng(11)
+    q, k, v = (jnp.asarray(rng.standard_normal((3, 32, 16)), jnp.float32)
+               for _ in range(3))
+    out = jax.vmap(sdpa_memfree)(q, k, v)
+    for b in range(3):
+        np.testing.assert_allclose(
+            np.asarray(out[b]), ref.naive_sdpa_f64(q[b], k[b], v[b]),
+            atol=2e-6, rtol=1e-5)
+
+
+# ----------------------------------------------------- hypothesis sweep
+
+_dims = st.sampled_from([8, 16, 32, 64])
+_blocks = st.sampled_from([4, 8, 16, 32])
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from([16, 32, 64, 96]), d=_dims, bq=_blocks, bk=_blocks,
+       seed=st.integers(0, 2**32 - 1), causal=st.booleans())
+def test_kernel_matches_oracle_sweep(n, d, bq, bk, seed, causal):
+    if n % bq or n % bk:
+        return  # invalid block config for this n; skip silently
+    q, k, v = qkv(n, d, seed)
+    out = np.asarray(sdpa_memfree(q, k, v, block_q=bq, block_k=bk,
+                                  causal=causal))
+    if causal:
+        gold = np.asarray(ref.causal_sdpa(q, k, v), np.float64)
+    else:
+        gold = ref.naive_sdpa_f64(q, k, v)
+    np.testing.assert_allclose(out, gold, atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([16, 32]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**32 - 1))
+def test_bf16_inputs_close_to_f32(n, d, seed):
+    q, k, v = qkv(n, d, seed)
+    out16 = sdpa_memfree(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                         v.astype(jnp.bfloat16))
+    assert out16.dtype == jnp.bfloat16
+    gold = ref.naive_sdpa_f64(q, k, v)
+    np.testing.assert_allclose(np.asarray(out16, np.float64), gold,
+                               atol=0.06, rtol=0.06)
+
+
+# ------------------------------------------------------- perf estimators
+
+def test_vmem_estimate_monotone_in_blocks():
+    a = vmem_words(1024, 64, 16, 16)
+    b = vmem_words(1024, 64, 64, 64)
+    assert b > a
+    # memfree footprint is independent of n; naive grows with n.
+    assert vmem_words(2048, 64, 16, 16) == a
+    assert vmem_words(2048, 64, 16, 16, naive=True) > vmem_words(
+        1024, 64, 16, 16, naive=True)
+
+
+def test_mxu_utilization_saturates_at_128():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(64, 128, 128) < 1.0
+    assert 0.0 < mxu_utilization(64, 32, 32) < 1.0

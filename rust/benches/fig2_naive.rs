@@ -1,0 +1,58 @@
+//! Figure 2 bench: the naive SDPA mapping, end to end.
+//!
+//! Regenerates the paper's Figure-2 result rows (long FIFO depth N+2 ⇒
+//! full throughput with O(N) peak occupancy; undersized ⇒ deadlock) and
+//! times the simulation itself at several sizes.
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::experiments::fifo_sweep;
+use sdpa_dataflow::report::Table;
+use sdpa_dataflow::sim::RunOutcome;
+
+fn main() {
+    let b = if quick_requested() { Bencher::quick() } else { Bencher::default() };
+    let sizes: &[usize] = if quick_requested() { &[16, 32] } else { &[16, 32, 64] };
+
+    // Paper rows: depth sweep at N=64 (or 32 in quick mode).
+    let n = *sizes.last().unwrap();
+    let sweep = fifo_sweep::run(Variant::Naive, n, 16).unwrap();
+    sweep.table().print();
+    assert_eq!(
+        sweep.min_full_throughput_depth(),
+        Some(n + 2),
+        "paper claim: naive needs depth N+2"
+    );
+    println!();
+
+    // Simulation wall-time scaling (the simulator's own cost).
+    let mut t = Table::new("fig2 simulation cost", &["N", "cycles", "sim ns/cycle"]);
+    for &n in sizes {
+        let w = Workload::random(n, 16, 2);
+        let mut cycles = 0u64;
+        let stats = b.bench(&format!("fig2/naive_n{n}"), || {
+            let mut built = Variant::Naive.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (out, s) = built.run().unwrap();
+            cycles = s.cycles;
+            black_box(out.len());
+        });
+        t.row(&[
+            n.to_string(),
+            cycles.to_string(),
+            format!("{:.0}", stats.mean_ns / cycles as f64),
+        ]);
+    }
+    t.print();
+
+    // Deadlock detection cost (undersized bypass).
+    b.bench("fig2/naive_deadlock_detect_n64", || {
+        let w = Workload::random(64, 16, 3);
+        let mut built = Variant::Naive.build(&w, &FifoPlan::with_long_depth(2)).unwrap();
+        let s = built.run_outcome();
+        assert!(matches!(s.outcome, RunOutcome::Deadlock { .. }));
+        black_box(s.cycles);
+    });
+}

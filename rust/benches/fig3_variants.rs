@@ -1,0 +1,60 @@
+//! Figure 3 bench: the three optimization stages (a→b→c) side by side.
+//!
+//! Regenerates the paper's Figure-3 narrative quantitatively: per
+//! variant, the number of O(N) FIFOs, total peak intermediate memory,
+//! cycles vs baseline, and simulation wall time.
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::report::Table;
+
+fn main() {
+    let b = if quick_requested() { Bencher::quick() } else { Bencher::default() };
+    let n = if quick_requested() { 32 } else { 64 };
+    let d = 16;
+    let w = Workload::random(n, d, 5);
+
+    let mut t = Table::new(
+        format!("Figure 3 progression (N={n}, d={d})"),
+        &[
+            "variant",
+            "figure",
+            "long FIFOs",
+            "peak long occ",
+            "peak words",
+            "cycles",
+            "full throughput",
+        ],
+    );
+    for variant in Variant::ALL {
+        let mut base = variant.build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, bs) = base.run().unwrap();
+        let mut built = variant.build(&w, &FifoPlan::paper(n)).unwrap();
+        let (_, s) = built.run().unwrap();
+        let peak_long = variant
+            .long_fifos()
+            .iter()
+            .filter_map(|f| s.peak_elems(f))
+            .max()
+            .unwrap_or(0);
+        t.row(&[
+            variant.name().into(),
+            variant.figure().into(),
+            variant.long_fifos().len().to_string(),
+            peak_long.to_string(),
+            s.total_peak_words().to_string(),
+            s.cycles.to_string(),
+            (s.cycles == bs.cycles).to_string(),
+        ]);
+        b.bench(&format!("fig3/{}_n{n}", variant.name()), || {
+            let mut built = variant.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (out, _) = built.run().unwrap();
+            black_box(out.len());
+        });
+    }
+    println!();
+    t.print();
+}

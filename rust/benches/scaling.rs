@@ -1,0 +1,40 @@
+//! Scaling bench: O(N) vs O(1) intermediate memory and N² cycles.
+//!
+//! Regenerates the asymptotic claims as a table over N, and times the
+//! simulator across the sweep (ns per simulated cycle should be roughly
+//! flat — the simulator itself is O(nodes) per cycle).
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::experiments::scaling;
+use sdpa_dataflow::sim::OccupancyClass;
+
+fn main() {
+    let b = if quick_requested() { Bencher::quick() } else { Bencher::default() };
+    let sizes: &[usize] = if quick_requested() {
+        &[8, 16, 32]
+    } else {
+        &[16, 32, 64, 128]
+    };
+
+    let result = scaling::run(sizes, 8).unwrap();
+    result.table().print();
+    assert_eq!(result.classification(Variant::Naive), OccupancyClass::Linear);
+    assert_eq!(
+        result.classification(Variant::MemoryFree),
+        OccupancyClass::Constant
+    );
+    println!();
+
+    for &n in sizes {
+        let w = Workload::random(n, 8, 4);
+        b.bench(&format!("scaling/memfree_n{n}"), || {
+            let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (out, _) = built.run().unwrap();
+            black_box(out.len());
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Serving bench (DESIGN.md §5 S3): PJRT execution latency per batch
+//! size, plus end-to-end coordinator throughput.
+//!
+//! Prints the classic serving curve — batch size vs per-request cost —
+//! from the compiled Pallas attention artifacts. Skips (with a notice)
+//! when `artifacts/` is absent.
+
+use std::hint::black_box;
+
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig};
+use sdpa_dataflow::report::Table;
+use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, Tensor};
+
+fn main() {
+    let Ok(registry) = ArtifactRegistry::load(default_artifact_dir()) else {
+        println!("serving bench skipped: artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let b = if quick_requested() { Bencher::quick() } else { Bencher::default() };
+
+    // --- raw executor latency per batch size -----------------------------
+    let mut executor = Executor::cpu().unwrap();
+    let mut t = Table::new(
+        "batched attention artifact latency (n=64, d=64)",
+        &["batch", "mean/exec", "mean/request"],
+    );
+    for batch in [1usize, 2, 4, 8] {
+        let name = format!("sdpa_b{batch}_n64_d64");
+        let Some(meta) = registry.by_name(&name) else {
+            continue;
+        };
+        let loaded = executor.load(meta).unwrap();
+        let q = Tensor::randn(vec![batch, 64, 64], 1);
+        let k = Tensor::randn(vec![batch, 64, 64], 2);
+        let v = Tensor::randn(vec![batch, 64, 64], 3);
+        let _ = loaded.run(&[q.clone(), k.clone(), v.clone()]).unwrap(); // warm
+        let stats = b.bench(&format!("serving/exec_b{batch}_n64"), || {
+            let out = loaded.run(&[q.clone(), k.clone(), v.clone()]).unwrap();
+            black_box(out.len());
+        });
+        t.row(&[
+            batch.to_string(),
+            format!("{:.0}us", stats.mean_ns / 1e3),
+            format!("{:.0}us", stats.mean_ns / 1e3 / batch as f64),
+        ]);
+    }
+    println!();
+    t.print();
+
+    // --- end-to-end coordinator throughput -------------------------------
+    let requests = if quick_requested() { 32 } else { 128 };
+    for max_batch in [1usize, 8] {
+        let server = Server::start(
+            registry.clone(),
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait_us: 1_000,
+                },
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        // Warm (compile) outside the timed window: submit a full batch so
+        // the max_batch-sized artifact compiles now, not mid-measurement.
+        let warm: Vec<_> = (0..max_batch)
+            .map(|i| {
+                h.submit(
+                    Tensor::randn(vec![64, 64], 1 + i as u64),
+                    Tensor::randn(vec![64, 64], 2 + i as u64),
+                    Tensor::randn(vec![64, 64], 3 + i as u64),
+                )
+                .unwrap()
+                .1
+            })
+            .collect();
+        for rx in warm {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let started = std::time::Instant::now();
+        let rxs: Vec<_> = (0..requests)
+            .map(|i| {
+                h.submit(
+                    Tensor::randn(vec![64, 64], 10 + i as u64),
+                    Tensor::randn(vec![64, 64], 20 + i as u64),
+                    Tensor::randn(vec![64, 64], 30 + i as u64),
+                )
+                .unwrap()
+                .1
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok());
+        }
+        let elapsed = started.elapsed().as_secs_f64();
+        println!(
+            "bench serving/e2e_maxbatch{max_batch:<2} {requests} reqs in {elapsed:.3}s = {:>8.1} req/s | {}",
+            requests as f64 / elapsed,
+            h.stats_summary()
+        );
+        server.shutdown();
+    }
+}

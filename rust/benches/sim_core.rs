@@ -1,0 +1,61 @@
+//! Simulator-core microbenchmarks (the §Perf L3 baseline).
+//!
+//! Measures raw engine throughput: node-ticks/second on a linear
+//! pipeline, channel push/pop cost, and full memory-free attention
+//! simulations at two sizes. These are the numbers the optimization
+//! pass iterates against.
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::sim::{Capacity, Elem, GraphBuilder};
+
+fn main() {
+    let b = if quick_requested() { Bencher::quick() } else { Bencher::default() };
+
+    // 1. Channel staging throughput.
+    b.bench("channel/push_pop_commit", || {
+        let mut c = sdpa_dataflow::sim::channel::Channel::new("c", Capacity::Bounded(8));
+        for _ in 0..64 {
+            if c.can_push() {
+                c.stage_push(Elem::Scalar(1.0));
+            }
+            if c.available() > 0 {
+                black_box(c.stage_pop());
+            }
+            c.commit();
+        }
+        black_box(c.len());
+    });
+
+    // 2. Linear pipeline: source → 4 maps → sink, 4k elements.
+    b.bench("engine/linear_pipeline_4k_elems", || {
+        let mut g = GraphBuilder::new();
+        let mut prev = g.short_fifo("c0").unwrap();
+        g.source_gen("src", prev, 4096, |i| Elem::Scalar(i as f32)).unwrap();
+        for stage in 0..4 {
+            let next = g.short_fifo(&format!("c{}", stage + 1)).unwrap();
+            g.map(&format!("m{stage}"), prev, next, |x| {
+                Elem::Scalar(x.scalar() + 1.0)
+            })
+            .unwrap();
+            prev = next;
+        }
+        let h = g.sink("sink", prev, Some(4096)).unwrap();
+        let mut e = g.build().unwrap();
+        e.run(100_000).unwrap();
+        black_box(h.len());
+    });
+
+    // 3. Full memory-free attention sims.
+    for n in [32usize, 64] {
+        let w = Workload::random(n, 16, 1);
+        b.bench(&format!("engine/memfree_attention_n{n}"), || {
+            let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (out, _) = built.run().unwrap();
+            black_box(out.len());
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! Figure 3(c) — the memory-free attention implementation (Eq. 3–6).
+//!
+//! The last O(N) FIFO of Figure 3(b) buffered scores while the row max
+//! was reduced. Replacing the row-wise max with a **running** max turns
+//! that reduction into an element-wise [`Scan`]: each score immediately
+//! yields a rescale factor `Δ_ij = e^{m_{i(j-1)}−m_ij}` and a numerator
+//! `e_ij = e^{s_ij−m_ij}` (Eq. 4). Downstream, running sums absorb the
+//! rescale (Eq. 5):
+//!
+//! ```text
+//! s ─ Scan(m running max → (Δ,e)) ─ Broadcast ─→ Scan(r ← r·Δ + e) ─ last-of-N → r_i ─┐
+//!                                        └→ Zip(v⃗) → Scan(l⃗ ← l⃗·Δ + e·v⃗) ─ last-of-N → l⃗_i ─ Zip(l⃗/r) → o⃗_i
+//! ```
+//!
+//! Every path is element-wise with matched latency (the r and l⃗ legs
+//! differ by one hop, absorbed by a depth-2 FIFO), so **all FIFOs have
+//! depth 2** and intermediate memory is O(1) — the paper's headline.
+
+use super::workload::Workload;
+use super::{build_score_frontend, build_v_source, BuiltAttention, FifoPlan};
+use crate::sim::{Elem, GraphBuilder};
+use crate::Result;
+
+/// Build the Figure-3(c) graph. `plan.long` is unused (no long FIFOs);
+/// pass [`FifoPlan::paper`] or all-short — the paper's configuration is
+/// every FIFO at depth 2.
+pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_impl(w, plan, false)
+}
+
+/// Causal (autoregressive) extension: scores with j > i are masked to
+/// −∞ *in the stream*, so the running-max scan sees `e = 0` for masked
+/// positions and the output row i attends only to keys 0..=i. The
+/// dataflow topology — and therefore the O(1)-memory, full-throughput
+/// property — is unchanged; causality costs nothing on this machine.
+pub fn build_causal(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_impl(w, plan, true)
+}
+
+fn build_impl(w: &Workload, plan: &FifoPlan, causal: bool) -> Result<BuiltAttention> {
+    let n = w.n;
+    let d = w.d;
+    let mut g = GraphBuilder::new();
+
+    let mut s = build_score_frontend(&mut g, w, plan)?;
+    if causal {
+        // Elementwise mask: the stream is row-major, so element t is
+        // (i, j) = (t / N, t mod N). A stateful Map plays the role of a
+        // configured address-tracking unit.
+        let s_masked = g.channel("s_masked", plan.short)?;
+        let mut t_idx: u64 = 0;
+        g.map("causal_mask", s, s_masked, move |x| {
+            let i = t_idx / n as u64;
+            let j = t_idx % n as u64;
+            t_idx += 1;
+            if j > i {
+                Elem::Scalar(f32::NEG_INFINITY)
+            } else {
+                x.clone()
+            }
+        })?;
+        s = s_masked;
+    }
+
+    // Running-max scan (Eq. 4). State = (m_prev, m); output = (Δ, e).
+    // Inline `Pair` elements: this stream carries N² values (§Perf).
+    let de = g.channel("de", plan.short)?;
+    let neg_inf = Elem::Pair(f32::NEG_INFINITY, f32::NEG_INFINITY);
+    g.scan(
+        "run_max",
+        s,
+        de,
+        n,
+        neg_inf,
+        |st, x| {
+            let (_, m_old) = st.pair();
+            let m_new = m_old.max(x.scalar());
+            Elem::Pair(m_old, m_new)
+        },
+        |st, x| {
+            let (m_old, m_new) = st.pair();
+            // First element of a row: m_old = −∞ ⇒ Δ = 0 (nothing to
+            // rescale yet); e = e^{s−m} as usual.
+            let delta = (m_old - m_new).exp();
+            let e = (x.scalar() - m_new).exp();
+            Elem::Pair(delta, e)
+        },
+    )?;
+
+    let de_r = g.channel("de_r", plan.short)?;
+    let de_l = g.channel("de_l", plan.short)?;
+    g.broadcast("bc_de", de, &[de_r, de_l])?;
+
+    // Running denominator (Eq. 5 scalar): r ← r·Δ + e, emitted each step.
+    let r_run = g.channel("r_run", plan.short)?;
+    g.scan(
+        "run_sum",
+        de_r,
+        r_run,
+        n,
+        Elem::Scalar(0.0),
+        |st, x| {
+            let (delta, e) = x.pair();
+            Elem::Scalar(st.scalar() * delta + e)
+        },
+        |st, _| st.clone(),
+    )?;
+    let r = g.channel("r", plan.short)?;
+    g.last_of("last_r", r_run, r, n)?;
+
+    // Running numerator (Eq. 5 vector): l⃗ ← l⃗·Δ + e·v⃗_j.
+    let v_cols = build_v_source(&mut g, w, plan, "v_cols")?;
+    let dev = g.channel("dev", plan.short)?;
+    g.zip("zip_v", &[de_l, v_cols], dev, |xs| {
+        Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
+    })?;
+    let l_run = g.channel("l_run", plan.short)?;
+    g.scan(
+        "run_out",
+        dev,
+        l_run,
+        n,
+        Elem::from(vec![0.0f32; d]),
+        |st, x| {
+            let (delta, e) = x.as_tuple()[0].pair();
+            let v = x.as_tuple()[1].as_vector();
+            Elem::from(
+                st.as_vector()
+                    .iter()
+                    .zip(v)
+                    .map(|(acc, vv)| acc * delta + e * vv)
+                    .collect::<Vec<_>>(),
+            )
+        },
+        |st, _| st.clone(),
+    )?;
+    let l = g.channel("l", plan.short)?;
+    g.last_of("last_l", l_run, l, n)?;
+
+    // Final division (Eq. 6): o⃗_i = l⃗_iN / r_iN.
+    let o = g.channel("o", plan.short)?;
+    g.zip("div", &[l, r], o, |xs| {
+        let r = xs[1].scalar();
+        Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
+    })?;
+    let out = g.sink("sink_o", o, Some(n as u64))?;
+
+    Ok(BuiltAttention {
+        engine: g.build()?,
+        out,
+        n,
+        d,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{assert_close, sdpa_f64, sdpa_online_f32};
+    use super::super::FifoPlan;
+    use super::*;
+    use crate::sim::metrics::is_full_throughput;
+
+    #[test]
+    fn matches_reference_numerics() {
+        let w = Workload::random(12, 8, 400);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_close(&got, &sdpa_online_f32(&w), 1e-5, "memfree vs online ref");
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "memfree vs f64 ref");
+    }
+
+    #[test]
+    fn survives_adversarial_magnitudes() {
+        let w = Workload::large_magnitude(8, 4, 19, 200.0);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert!(got.iter().flatten().all(|x| x.is_finite()));
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "memfree adversarial");
+    }
+
+    #[test]
+    fn all_short_fifos_achieve_full_throughput() {
+        // The headline claim: depth-2 FIFOs everywhere, no slowdown.
+        let w = Workload::random(16, 4, 33);
+        let mut finite = build(&w, &FifoPlan::with_long_depth(2)).unwrap();
+        let (_, s_finite) = finite.run().unwrap();
+        let mut base = build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, s_base) = base.run().unwrap();
+        assert!(
+            is_full_throughput(&s_finite, &s_base),
+            "finite {} vs baseline {}",
+            s_finite.cycles,
+            s_base.cycles
+        );
+    }
+
+    #[test]
+    fn peak_occupancy_is_constant() {
+        let w = Workload::random(24, 4, 34);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        for (name, stats) in &summary.channel_stats {
+            assert!(
+                stats.peak_occupancy_elems <= 2,
+                "channel '{name}' peaked at {} elements — not O(1)",
+                stats.peak_occupancy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn causal_matches_causal_reference() {
+        use super::super::reference::sdpa_f64_causal;
+        let w = Workload::random(16, 8, 55);
+        let mut built = build_causal(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, summary) = built.run().unwrap();
+        assert_close(&got, &sdpa_f64_causal(&w), 1e-4, "causal memfree");
+        // Causality does not change the memory story: still O(1).
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "causal: channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn causal_is_full_throughput_too() {
+        let w = Workload::random(16, 4, 56);
+        let mut finite = build_causal(&w, &FifoPlan::with_long_depth(2)).unwrap();
+        let (_, fs) = finite.run().unwrap();
+        let mut base = build_causal(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, bs) = base.run().unwrap();
+        assert!(is_full_throughput(&fs, &bs));
+    }
+
+    #[test]
+    fn output_rows_arrive_every_n_cycles() {
+        let w = Workload::random(16, 4, 35);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        built.run().unwrap();
+        // Steady state: one o⃗_i per N cycles (II=1 over N² elements).
+        let gaps = built.out.arrival_gaps(8).unwrap();
+        assert_eq!(gaps, (w.n as u64, w.n as u64));
+    }
+}

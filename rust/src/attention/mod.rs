@@ -1,0 +1,335 @@
+//! The paper's four attention dataflow graphs.
+//!
+//! | Variant | Paper figure | Long FIFOs | Intermediate memory |
+//! |---|---|---|---|
+//! | [`Variant::Naive`] | Fig. 2 | `e_bypass` (depth N+2) | O(N) |
+//! | [`Variant::Scaled`] | Fig. 3(a) | `s_bypass`, `e_bypass` | 2·O(N) |
+//! | [`Variant::Reordered`] | Fig. 3(b) | `s_bypass` | O(N) |
+//! | [`Variant::MemoryFree`] | Fig. 3(c) | none | O(1) |
+//!
+//! Every graph streams Q rows against resident K/V operands, produces
+//! one output row per N cycles at steady state (II = 1 per element), and
+//! is numerically validated against [`reference`].
+
+pub mod memfree;
+pub mod multihead;
+pub mod naive;
+pub mod reference;
+pub mod reordered;
+pub mod scaled;
+pub mod workload;
+
+use crate::sim::nodes::SinkHandle;
+use crate::sim::{Capacity, ChannelId, Elem, Engine, GraphBuilder, RunSummary};
+use crate::{Error, Result};
+use reference::Matrix;
+use workload::{dot, Workload};
+
+/// Which attention implementation to map onto the abstract hardware.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// §3 / Figure 2: softmax without max subtraction, row-sum division.
+    Naive,
+    /// Figure 3(a): softmax with scaling (row max), division in place.
+    Scaled,
+    /// Figure 3(b): division reordered past the PV contraction.
+    Reordered,
+    /// Figure 3(c): running max + running sums; the memory-free version.
+    MemoryFree,
+}
+
+impl Variant {
+    /// All variants, in paper order.
+    pub const ALL: [Variant; 4] = [
+        Variant::Naive,
+        Variant::Scaled,
+        Variant::Reordered,
+        Variant::MemoryFree,
+    ];
+
+    /// Stable lowercase name (CLI + reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::Scaled => "scaled",
+            Variant::Reordered => "reordered",
+            Variant::MemoryFree => "memfree",
+        }
+    }
+
+    /// Paper figure this variant reproduces.
+    pub fn figure(self) -> &'static str {
+        match self {
+            Variant::Naive => "Fig. 2",
+            Variant::Scaled => "Fig. 3(a)",
+            Variant::Reordered => "Fig. 3(b)",
+            Variant::MemoryFree => "Fig. 3(c)",
+        }
+    }
+
+    /// Names of this variant's long (latency-balancing) FIFOs.
+    pub fn long_fifos(self) -> &'static [&'static str] {
+        match self {
+            Variant::Naive => &["e_bypass"],
+            Variant::Scaled => &["s_bypass", "e_bypass"],
+            Variant::Reordered => &["s_bypass"],
+            Variant::MemoryFree => &[],
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Variant> {
+        Variant::ALL
+            .into_iter()
+            .find(|v| v.name() == s)
+            .ok_or_else(|| {
+                Error::Usage(format!(
+                    "unknown variant '{s}' (expected one of: naive, scaled, reordered, memfree)"
+                ))
+            })
+    }
+
+    /// Build this variant's graph over `w` with the given FIFO plan.
+    pub fn build(self, w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+        match self {
+            Variant::Naive => naive::build(w, plan),
+            Variant::Scaled => scaled::build(w, plan),
+            Variant::Reordered => reordered::build(w, plan),
+            Variant::MemoryFree => memfree::build(w, plan),
+        }
+    }
+
+    /// The reference implementation this variant must agree with
+    /// numerically (structure-matched, not just value-matched).
+    pub fn reference(self, w: &Workload) -> Matrix {
+        match self {
+            Variant::Naive => reference::sdpa_f32_unscaled(w),
+            Variant::Scaled | Variant::Reordered => reference::sdpa_f32_scaled(w),
+            Variant::MemoryFree => reference::sdpa_online_f32(w),
+        }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// FIFO depth configuration for one build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FifoPlan {
+    /// Depth of every ordinary FIFO (the paper uses 2).
+    pub short: Capacity,
+    /// Depth of the designated long FIFO(s) (the paper uses N+2).
+    pub long: Capacity,
+}
+
+impl FifoPlan {
+    /// The paper's configuration: short = 2, long = N+2.
+    pub fn paper(n: usize) -> Self {
+        FifoPlan {
+            short: Capacity::Bounded(2),
+            long: Capacity::Bounded(n + 2),
+        }
+    }
+
+    /// The paper's peak-throughput baseline: everything unbounded.
+    pub fn unbounded() -> Self {
+        FifoPlan {
+            short: Capacity::Unbounded,
+            long: Capacity::Unbounded,
+        }
+    }
+
+    /// Short FIFOs at 2, long FIFOs at an explicit depth (for sweeps).
+    pub fn with_long_depth(depth: usize) -> Self {
+        FifoPlan {
+            short: Capacity::Bounded(2),
+            long: Capacity::Bounded(depth),
+        }
+    }
+}
+
+/// A built attention graph ready to simulate.
+pub struct BuiltAttention {
+    /// The underlying engine (exposed for capacity sweeps / re-runs).
+    pub engine: Engine,
+    /// Output rows arrive here.
+    pub out: SinkHandle,
+    /// Sequence length.
+    pub n: usize,
+    /// Head dimension.
+    pub d: usize,
+}
+
+impl BuiltAttention {
+    /// Generous default cycle budget for an N×N workload.
+    pub fn default_budget(&self) -> u64 {
+        let n = self.n as u64;
+        10 * n * n + 20 * n + 500
+    }
+
+    /// Run to completion; return the output matrix and run summary.
+    pub fn run(&mut self) -> Result<(Matrix, RunSummary)> {
+        let budget = self.default_budget();
+        let summary = self.engine.run(budget)?;
+        Ok((self.out.rows(), summary))
+    }
+
+    /// Run, treating deadlock as data (depth sweeps).
+    pub fn run_outcome(&mut self) -> RunSummary {
+        let budget = self.default_budget();
+        self.engine.run_outcome(budget)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared sub-graphs
+// ---------------------------------------------------------------------
+
+/// Build the score front-end shared by all variants:
+///
+/// ```text
+/// Source(Q rows) → Repeat(N) ─┐
+///                             Zip(dot · 1/√d) → s_ij stream (N² scalars)
+/// Source(Kᵀ cols, cyclic) ────┘
+/// ```
+///
+/// Returns the `s` channel carrying row-major scores.
+pub(crate) fn build_score_frontend(
+    g: &mut GraphBuilder,
+    w: &Workload,
+    plan: &FifoPlan,
+) -> Result<ChannelId> {
+    let n = w.n;
+    let total = (n * n) as u64;
+    let q_rows = g.channel("q_rows", plan.short)?;
+    let q_rep = g.channel("q_rep", plan.short)?;
+    let k_cols = g.channel("k_cols", plan.short)?;
+    let s = g.channel("s", plan.short)?;
+
+    let q: Vec<Elem> = w.q.iter().map(|r| Elem::vector(r)).collect();
+    g.source_vec("src_q", q_rows, q)?;
+    g.repeat("rep_q", q_rows, q_rep, n)?;
+
+    // K is a resident operand: a memory unit + address generator replays
+    // its rows (columns of Kᵀ) once per query row.
+    let k: Vec<Elem> = w.k.iter().map(|r| Elem::vector(r)).collect();
+    g.source_gen("src_k", k_cols, total, move |i| {
+        k[(i % n as u64) as usize].clone()
+    })?;
+
+    let scale = w.scale();
+    g.zip("qk_dot", &[q_rep, k_cols], s, move |xs| {
+        Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
+    })?;
+    Ok(s)
+}
+
+/// Add a cyclic V-row source (`len = N²`, row `j = i mod N`).
+pub(crate) fn build_v_source(
+    g: &mut GraphBuilder,
+    w: &Workload,
+    plan: &FifoPlan,
+    name: &str,
+) -> Result<ChannelId> {
+    let n = w.n;
+    let total = (n * n) as u64;
+    let v_cols = g.channel(name, plan.short)?;
+    let v: Vec<Elem> = w.v.iter().map(|r| Elem::vector(r)).collect();
+    g.source_gen("src_v", v_cols, total, move |i| {
+        v[(i % n as u64) as usize].clone()
+    })?;
+    Ok(v_cols)
+}
+
+/// Build the probability-weighted-value tail shared by Fig. 2 / Fig. 3(a):
+///
+/// ```text
+/// p_ij ─┐
+///       Zip(p · v⃗) → MemReduce(N, 0⃗, +) → o⃗_i → Sink
+/// v⃗_j ──┘
+/// ```
+pub(crate) fn build_pv_tail(
+    g: &mut GraphBuilder,
+    w: &Workload,
+    plan: &FifoPlan,
+    p: ChannelId,
+) -> Result<SinkHandle> {
+    let n = w.n;
+    let d = w.d;
+    let v_cols = build_v_source(g, w, plan, "v_cols")?;
+    let pv = g.channel("pv", plan.short)?;
+    let o = g.channel("o", plan.short)?;
+    g.zip("pv_mul", &[p, v_cols], pv, |xs| {
+        let p = xs[0].scalar();
+        Elem::from(xs[1].as_vector().iter().map(|v| p * v).collect::<Vec<_>>())
+    })?;
+    g.mem_reduce("pv_acc", pv, o, n, vec![0.0; d], |acc, x| {
+        acc.iter().zip(x.as_vector()).map(|(a, b)| a + b).collect()
+    })?;
+    g.sink("sink_o", o, Some(n as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+            assert_eq!(format!("{v}"), v.name());
+        }
+        assert!(Variant::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn long_fifo_counts_match_paper() {
+        assert_eq!(Variant::Naive.long_fifos().len(), 1);
+        assert_eq!(Variant::Scaled.long_fifos().len(), 2);
+        assert_eq!(Variant::Reordered.long_fifos().len(), 1);
+        assert_eq!(Variant::MemoryFree.long_fifos().len(), 0);
+    }
+
+    #[test]
+    fn paper_plan_depths() {
+        let p = FifoPlan::paper(64);
+        assert_eq!(p.short, Capacity::Bounded(2));
+        assert_eq!(p.long, Capacity::Bounded(66));
+    }
+
+    #[test]
+    fn score_frontend_streams_row_major_scores() {
+        let w = Workload::random(4, 3, 21);
+        let mut g = GraphBuilder::new();
+        let plan = FifoPlan::paper(w.n);
+        let s = build_score_frontend(&mut g, &w, &plan).unwrap();
+        let h = g.sink("sink", s, Some(16)).unwrap();
+        let mut e = g.build().unwrap();
+        e.run(10_000).unwrap();
+        let got = h.scalars();
+        assert_eq!(got.len(), 16);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!(
+                    (got[i * 4 + j] - w.score(i, j)).abs() < 1e-6,
+                    "score ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontend_full_throughput_at_depth_2() {
+        let w = Workload::random(16, 4, 2);
+        let mut g = GraphBuilder::new();
+        let plan = FifoPlan::paper(w.n);
+        let s = build_score_frontend(&mut g, &w, &plan).unwrap();
+        let h = g.sink("sink", s, Some(256)).unwrap();
+        let mut e = g.build().unwrap();
+        e.run(100_000).unwrap();
+        assert_eq!(h.arrival_gaps(128), Some((1, 1)), "II=1 steady state");
+    }
+}

@@ -1,0 +1,167 @@
+//! Figure 2 — the naive SDPA algorithm mapped to the abstract hardware.
+//!
+//! ```text
+//!            ┌──────────── score front-end ───────────┐
+//! Q rows → Repeat(N) ─ Zip(dot·1/√d) ─ Map(exp) ─ Broadcast
+//! Kᵀ cols ───────────────↗                            │    │
+//!                                                     │    └→ Reduce(N, 0, +) → Repeat(N) ┐
+//!                                       e_bypass (LONG FIFO, depth N+2)                   │
+//!                                                     └───────────────→ Zip(÷) ←──────────┘
+//!                                                                        │ p_ij
+//! V rows (cyclic) ────────────────────────────────────────→ Zip(p·v⃗) ←──┘
+//!                                                             │
+//!                                              MemReduce(N, 0⃗, +) → o⃗_i → Sink
+//! ```
+//!
+//! The `Reduce` emits the row denominator only after folding all N
+//! exponentials, so the divider's other operand must buffer ~N elements:
+//! with short FIFOs everywhere, `e_bypass` needs depth **N+2** (N+1
+//! steady-state occupancy + 1 slot so the producer never stalls under
+//! two-phase commit). Shallower bypass depths wedge the broadcast and
+//! deadlock the graph — the experiment `fig2` sweeps exactly this.
+
+use super::{build_pv_tail, build_score_frontend, BuiltAttention, FifoPlan};
+use crate::sim::{Elem, GraphBuilder};
+use crate::Result;
+use super::workload::Workload;
+
+/// Build the Figure-2 graph. The long FIFO (`e_bypass`) takes
+/// `plan.long`; everything else takes `plan.short`.
+pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_with_exp_latency(w, plan, 1)
+}
+
+/// Figure-2 graph with an explicit pipeline latency on the `exp` unit.
+///
+/// Note: `exp` sits on the *common* path (before the broadcast), so its
+/// latency delays both divergent paths equally and does **not** change
+/// the required bypass depth — one of the two findings of
+/// `experiments::ablation`.
+pub fn build_with_exp_latency(
+    w: &Workload,
+    plan: &FifoPlan,
+    exp_latency: u64,
+) -> Result<BuiltAttention> {
+    build_with_delays(w, plan, exp_latency, 0)
+}
+
+/// Figure-2 graph with both ablation knobs: `exp_latency` on the common
+/// path and `sigma_delay` extra pipeline stages on the *reduction*
+/// (divergent) path between `Reduce` and `Repeat` — modelling, e.g., a
+/// deeper normalization unit. Every cycle of divergent-path latency
+/// costs one more `e_bypass` slot; common-path latency costs none.
+pub fn build_with_delays(
+    w: &Workload,
+    plan: &FifoPlan,
+    exp_latency: u64,
+    sigma_delay: u64,
+) -> Result<BuiltAttention> {
+    let n = w.n;
+    let mut g = GraphBuilder::new();
+
+    let s = build_score_frontend(&mut g, w, plan)?;
+
+    // Softmax numerator: e_ij = exp(s_ij), no max subtraction (§3).
+    let e = g.channel("e", plan.short)?;
+    g.map_latency("exp", s, e, exp_latency, |x| {
+        Elem::Scalar(x.scalar().exp())
+    })?;
+
+    // Divergent paths: row-sum reduction vs element bypass.
+    let e_sum = g.channel("e_sum", plan.short)?;
+    let e_bypass = g.channel("e_bypass", plan.long)?;
+    g.broadcast("bc_e", e, &[e_sum, e_bypass])?;
+
+    let mut sigma = g.channel("sigma", plan.short)?;
+    g.reduce("row_sum", e_sum, sigma, n, 0.0, |a, b| a + b)?;
+    if sigma_delay > 0 {
+        // Extra pipeline stages on the reduction path only.
+        let delayed = g.channel("sigma_delayed", plan.short)?;
+        g.map_latency("sigma_delay", sigma, delayed, sigma_delay, |x| x.clone())?;
+        sigma = delayed;
+    }
+    let sigma_rep = g.channel("sigma_rep", plan.short)?;
+    g.repeat("rep_sigma", sigma, sigma_rep, n)?;
+
+    // p_ij = e_ij / σ_i.
+    let p = g.channel("p", plan.short)?;
+    g.zip("div", &[e_bypass, sigma_rep], p, |xs| {
+        Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+    })?;
+
+    let out = build_pv_tail(&mut g, w, plan, p)?;
+    Ok(BuiltAttention {
+        engine: g.build()?,
+        out,
+        n,
+        d: w.d,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{assert_close, sdpa_f32_unscaled, sdpa_f64};
+    use super::super::{FifoPlan, Variant};
+    use super::*;
+    use crate::sim::metrics::is_full_throughput;
+    use crate::sim::RunOutcome;
+
+    #[test]
+    fn matches_reference_numerics() {
+        let w = Workload::random(12, 8, 100);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_close(&got, &sdpa_f32_unscaled(&w), 1e-5, "naive vs f32 ref");
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "naive vs f64 ref");
+    }
+
+    #[test]
+    fn paper_config_achieves_full_throughput() {
+        let w = Workload::random(16, 4, 3);
+        let mut finite = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, s_finite) = finite.run().unwrap();
+        let mut base = build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, s_base) = base.run().unwrap();
+        assert!(
+            is_full_throughput(&s_finite, &s_base),
+            "finite {} vs baseline {}",
+            s_finite.cycles,
+            s_base.cycles
+        );
+    }
+
+    #[test]
+    fn bypass_occupancy_is_order_n() {
+        let w = Workload::random(16, 4, 4);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        let peak = summary.peak_elems("e_bypass").unwrap();
+        assert!(
+            peak >= w.n && peak <= w.n + 2,
+            "peak {} for N={}",
+            peak,
+            w.n
+        );
+    }
+
+    #[test]
+    fn short_bypass_deadlocks() {
+        let w = Workload::random(16, 4, 5);
+        let mut built = build(&w, &FifoPlan::with_long_depth(2)).unwrap();
+        let summary = built.run_outcome();
+        assert!(
+            matches!(summary.outcome, RunOutcome::Deadlock { .. }),
+            "expected deadlock, got {:?}",
+            summary.outcome
+        );
+    }
+
+    #[test]
+    fn variant_dispatch_builds_naive() {
+        let w = Workload::random(8, 4, 6);
+        let mut built = Variant::Naive.build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_eq!(got.len(), 8);
+        assert_eq!(got[0].len(), 4);
+    }
+}

@@ -1,0 +1,249 @@
+//! Golden reference SDPA implementations.
+//!
+//! Three references, used to validate every dataflow graph and (via the
+//! Python `ref.py` twin) the Pallas kernel:
+//!
+//! * [`sdpa_f64`] — naive softmax attention in f64, the accuracy oracle.
+//! * [`sdpa_f32_unscaled`] — softmax **without** max subtraction, f32 —
+//!   matches the paper's §3 naive algorithm bit-for-bit in structure
+//!   (overflows for large scores, which the stability tests rely on).
+//! * [`sdpa_online_f32`] — the §4 memory-free recurrence (Eq. 3–6)
+//!   executed sequentially; validates the algorithm itself independent
+//!   of the dataflow mapping.
+
+use super::workload::Workload;
+
+/// Output matrix, row-major `n × d`.
+pub type Matrix = Vec<Vec<f32>>;
+
+/// f64 naive attention with max-subtracted (scaled) softmax.
+pub fn sdpa_f64(w: &Workload) -> Matrix {
+    let scale = w.scale() as f64;
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let s: Vec<f64> = (0..w.n)
+            .map(|j| {
+                w.q[i]
+                    .iter()
+                    .zip(&w.k[j])
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum::<f64>()
+                    * scale
+            })
+            .collect();
+        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = s.iter().map(|x| (x - m).exp()).collect();
+        let sigma: f64 = e.iter().sum();
+        let mut row = vec![0.0f64; w.d];
+        for j in 0..w.n {
+            let p = e[j] / sigma;
+            for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
+                *acc += p * *vv as f64;
+            }
+        }
+        out.push(row.into_iter().map(|x| x as f32).collect());
+    }
+    out
+}
+
+/// f32 naive attention, softmax **without** max subtraction — the exact
+/// algorithm the Figure-2 graph implements.
+pub fn sdpa_f32_unscaled(w: &Workload) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let e: Vec<f32> = (0..w.n).map(|j| w.score(i, j).exp()).collect();
+        let sigma: f32 = e.iter().sum();
+        let mut row = vec![0.0f32; w.d];
+        for j in 0..w.n {
+            let p = e[j] / sigma;
+            for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
+                *acc += p * vv;
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// f32 naive attention with max-subtracted softmax — the algorithm the
+/// Figure-3(a)/(b) graphs implement.
+pub fn sdpa_f32_scaled(w: &Workload) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let s: Vec<f32> = (0..w.n).map(|j| w.score(i, j)).collect();
+        let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f32> = s.iter().map(|x| (x - m).exp()).collect();
+        let sigma: f32 = e.iter().sum();
+        let mut row = vec![0.0f32; w.d];
+        for j in 0..w.n {
+            let p = e[j] / sigma;
+            for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
+                *acc += p * vv;
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// The paper's memory-free recurrence (Eq. 3–6), run sequentially:
+/// running max `m`, rescale `Δ = e^{m_old − m_new}`, running sum
+/// `r ← r·Δ + e`, running output `l⃗ ← l⃗·Δ + e·v⃗`, final `o⃗ = l⃗/r`.
+pub fn sdpa_online_f32(w: &Workload) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let mut m = f32::NEG_INFINITY;
+        let mut r = 0.0f32;
+        let mut l = vec![0.0f32; w.d];
+        for j in 0..w.n {
+            let s = w.score(i, j);
+            let m_new = m.max(s);
+            let delta = (m - m_new).exp(); // e^{-inf - m} = 0 on the first step
+            let e = (s - m_new).exp();
+            r = r * delta + e;
+            for (acc, vv) in l.iter_mut().zip(&w.v[j]) {
+                *acc = *acc * delta + e * vv;
+            }
+            m = m_new;
+        }
+        out.push(l.into_iter().map(|x| x / r).collect());
+    }
+    out
+}
+
+/// f64 causal (autoregressive) attention: row i attends keys 0..=i.
+pub fn sdpa_f64_causal(w: &Workload) -> Matrix {
+    let scale = w.scale() as f64;
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let s: Vec<f64> = (0..=i)
+            .map(|j| {
+                w.q[i]
+                    .iter()
+                    .zip(&w.k[j])
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum::<f64>()
+                    * scale
+            })
+            .collect();
+        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = s.iter().map(|x| (x - m).exp()).collect();
+        let sigma: f64 = e.iter().sum();
+        let mut row = vec![0.0f64; w.d];
+        for (j, ej) in e.iter().enumerate() {
+            let p = ej / sigma;
+            for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
+                *acc += p * *vv as f64;
+            }
+        }
+        out.push(row.into_iter().map(|x| x as f32).collect());
+    }
+    out
+}
+
+/// Max absolute element-wise difference between two matrices.
+pub fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
+    assert_eq!(a.len(), b.len(), "row count mismatch");
+    let mut worst = 0.0f32;
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.len(), rb.len(), "row width mismatch");
+        for (x, y) in ra.iter().zip(rb) {
+            let diff = (x - y).abs();
+            if diff.is_nan() {
+                return f32::NAN;
+            }
+            worst = worst.max(diff);
+        }
+    }
+    worst
+}
+
+/// Assert two matrices agree within `tol`, with a useful failure message.
+pub fn assert_close(a: &Matrix, b: &Matrix, tol: f32, what: &str) {
+    let diff = max_abs_diff(a, b);
+    assert!(
+        diff.is_finite() && diff <= tol,
+        "{what}: max |Δ| = {diff} exceeds tol {tol}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_references_agree_on_random_input() {
+        let w = Workload::random(16, 8, 42);
+        let gold = sdpa_f64(&w);
+        assert_close(&sdpa_f32_scaled(&w), &gold, 2e-5, "scaled vs f64");
+        assert_close(&sdpa_f32_unscaled(&w), &gold, 2e-5, "unscaled vs f64");
+        assert_close(&sdpa_online_f32(&w), &gold, 2e-5, "online vs f64");
+    }
+
+    #[test]
+    fn online_recurrence_handles_descending_scores() {
+        // Running max never updates after the first element: Δ stays 1.
+        let mut w = Workload::random(8, 4, 7);
+        // Force q rows so scores descend: score(i, j) = -(j); easiest is
+        // to just check agreement, which covers the branch.
+        w.q[0] = vec![3.0; 4];
+        assert_close(&sdpa_online_f32(&w), &sdpa_f64(&w), 3e-5, "online");
+    }
+
+    #[test]
+    fn unscaled_softmax_overflows_on_adversarial_input() {
+        let w = Workload::large_magnitude(8, 4, 3, 200.0);
+        let naive = sdpa_f32_unscaled(&w);
+        let any_nonfinite = naive.iter().flatten().any(|x| !x.is_finite());
+        assert!(any_nonfinite, "expected overflow in unscaled softmax");
+        // The scaled / online versions stay finite — the reason the paper
+        // uses softmax-with-scaling (§4).
+        assert!(sdpa_f32_scaled(&w).iter().flatten().all(|x| x.is_finite()));
+        assert!(sdpa_online_f32(&w).iter().flatten().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn softmax_rows_produce_convex_combinations() {
+        // Each output row must lie within the [min, max] envelope of V's
+        // columns (softmax weights are a convex combination).
+        let w = Workload::random(12, 6, 11);
+        let out = sdpa_f64(&w);
+        for col in 0..w.d {
+            let lo = w.v.iter().map(|r| r[col]).fold(f32::INFINITY, f32::min);
+            let hi = w.v.iter().map(|r| r[col]).fold(f32::NEG_INFINITY, f32::max);
+            for row in &out {
+                assert!(row[col] >= lo - 1e-5 && row[col] <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_sequence_returns_v() {
+        let w = Workload::random(1, 4, 5);
+        let out = sdpa_f64(&w);
+        for (a, b) in out[0].iter().zip(&w.v[0]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causal_first_row_is_v0_and_last_row_uses_all_keys() {
+        let w = Workload::random(8, 4, 21);
+        let causal = sdpa_f64_causal(&w);
+        for (a, b) in causal[0].iter().zip(&w.v[0]) {
+            assert!((a - b).abs() < 1e-6, "row 0 attends only key 0");
+        }
+        // Last row sees every key: equals the unmasked attention row.
+        let full = sdpa_f64(&w);
+        for (a, b) in causal[7].iter().zip(&full[7]) {
+            assert!((a - b).abs() < 1e-6, "last row equals full attention");
+        }
+    }
+
+    #[test]
+    fn max_abs_diff_detects_nan() {
+        let a = vec![vec![f32::NAN]];
+        let b = vec![vec![0.0]];
+        assert!(max_abs_diff(&a, &b).is_nan());
+    }
+}

@@ -1,0 +1,134 @@
+//! Figure 3(b) — division reordered past the PV contraction.
+//!
+//! By the distributive law, `o⃗_i = Σ_j (e_ij/σ_i)·v⃗_j = (Σ_j e_ij·v⃗_j)/σ_i`.
+//! Moving the division after the value contraction makes the row-sum
+//! reduction and the PV `MemReduce` run *in parallel on the same
+//! element stream* — both consume e_ij at one element per cycle and
+//! emit their row result after the Nth element, so their latencies
+//! match and the second long FIFO of Figure 3(a) disappears:
+//!
+//! ```text
+//! e ─ Broadcast ─→ Reduce(N, 0, +) ────────────→ r_i ─┐
+//!        └───────→ Zip(e·v⃗) → MemReduce(N, 0⃗, +) → l⃗_i ─ Zip(l⃗/r) → o⃗_i
+//! ```
+//!
+//! Only the score bypass (`s_bypass`, for the row max) still needs O(N)
+//! depth — eliminated next by Figure 3(c).
+
+use super::workload::Workload;
+use super::{build_score_frontend, build_v_source, BuiltAttention, FifoPlan};
+use crate::sim::{Elem, GraphBuilder};
+use crate::Result;
+
+/// Build the Figure-3(b) graph. `s_bypass` takes `plan.long`; everything
+/// else (including the now-balanced e paths) takes `plan.short`.
+pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    let n = w.n;
+    let d = w.d;
+    let mut g = GraphBuilder::new();
+
+    let s = build_score_frontend(&mut g, w, plan)?;
+
+    // Row max (still a row-wise reduction: the one remaining long FIFO).
+    let s_max = g.channel("s_max", plan.short)?;
+    let s_bypass = g.channel("s_bypass", plan.long)?;
+    g.broadcast("bc_s", s, &[s_max, s_bypass])?;
+
+    let m = g.channel("m", plan.short)?;
+    g.reduce("row_max", s_max, m, n, f32::NEG_INFINITY, f32::max)?;
+    let m_rep = g.channel("m_rep", plan.short)?;
+    g.repeat("rep_m", m, m_rep, n)?;
+
+    let e = g.channel("e", plan.short)?;
+    g.zip("exp_sub", &[s_bypass, m_rep], e, |xs| {
+        Elem::Scalar((xs[0].scalar() - xs[1].scalar()).exp())
+    })?;
+
+    // Balanced divergence: scalar sum and vector contraction in parallel.
+    let e_r = g.channel("e_r", plan.short)?;
+    let e_l = g.channel("e_l", plan.short)?;
+    g.broadcast("bc_e", e, &[e_r, e_l])?;
+
+    let r = g.channel("r", plan.short)?;
+    g.reduce("row_sum", e_r, r, n, 0.0, |a, b| a + b)?;
+
+    let v_cols = build_v_source(&mut g, w, plan, "v_cols")?;
+    let ev = g.channel("ev", plan.short)?;
+    g.zip("ev_mul", &[e_l, v_cols], ev, |xs| {
+        let e = xs[0].scalar();
+        Elem::from(xs[1].as_vector().iter().map(|v| e * v).collect::<Vec<_>>())
+    })?;
+    let l = g.channel("l", plan.short)?;
+    g.mem_reduce("ev_acc", ev, l, n, vec![0.0; d], |acc, x| {
+        acc.iter().zip(x.as_vector()).map(|(a, b)| a + b).collect()
+    })?;
+
+    // o⃗_i = l⃗_i / r_i — both operands arrive once per row, in step.
+    let o = g.channel("o", plan.short)?;
+    g.zip("div", &[l, r], o, |xs| {
+        let r = xs[1].scalar();
+        Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
+    })?;
+    let out = g.sink("sink_o", o, Some(n as u64))?;
+
+    Ok(BuiltAttention {
+        engine: g.build()?,
+        out,
+        n,
+        d,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{assert_close, sdpa_f32_scaled, sdpa_f64};
+    use super::super::FifoPlan;
+    use super::*;
+    use crate::sim::metrics::is_full_throughput;
+    use crate::sim::RunOutcome;
+
+    #[test]
+    fn matches_reference_numerics() {
+        let w = Workload::random(12, 8, 300);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        // Division reordering changes f32 rounding slightly vs the
+        // in-place division reference; both agree with f64 tightly.
+        assert_close(&got, &sdpa_f32_scaled(&w), 1e-4, "reordered vs f32 ref");
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "reordered vs f64 ref");
+    }
+
+    #[test]
+    fn paper_config_achieves_full_throughput() {
+        let w = Workload::random(16, 4, 23);
+        let mut finite = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, s_finite) = finite.run().unwrap();
+        let mut base = build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, s_base) = base.run().unwrap();
+        assert!(is_full_throughput(&s_finite, &s_base));
+    }
+
+    #[test]
+    fn only_s_bypass_is_order_n() {
+        let w = Workload::random(16, 4, 24);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        let s_peak = summary.peak_elems("s_bypass").unwrap();
+        assert!(s_peak >= w.n - 1, "s_bypass peak {} for N={}", s_peak, w.n);
+        // The e-side paths are balanced: short FIFOs never exceed depth 2.
+        for ch in ["e_r", "e_l", "ev", "l", "r"] {
+            let peak = summary.peak_elems(ch).unwrap();
+            assert!(peak <= 2, "{ch} peak {peak} should be O(1)");
+        }
+    }
+
+    #[test]
+    fn short_s_bypass_deadlocks_but_e_paths_need_no_long_fifo() {
+        let w = Workload::random(12, 4, 25);
+        let mut built = build(&w, &FifoPlan::with_long_depth(2)).unwrap();
+        assert!(matches!(
+            built.run_outcome().outcome,
+            RunOutcome::Deadlock { .. }
+        ));
+    }
+}

@@ -1,0 +1,144 @@
+//! Figure 3(a) — attention with softmax-with-scaling (row max).
+//!
+//! Numerically stable softmax subtracts the row max before
+//! exponentiating. On the abstract hardware this adds a *second*
+//! reduction (`row_max`) and with it a second pair of divergent paths:
+//!
+//! ```text
+//! s ─ Broadcast ─→ Reduce(N, −∞, max) → Repeat(N) ─┐
+//!        └─ s_bypass (LONG FIFO #1) ──────→ Zip(exp(s−m)) → e
+//! e ─ Broadcast ─→ Reduce(N, 0, +) → Repeat(N) ─┐
+//!        └─ e_bypass (LONG FIFO #2) ──────→ Zip(÷) → p → PV tail
+//! ```
+//!
+//! Both `s_bypass` and `e_bypass` must be ~N deep for full throughput —
+//! this variant makes the memory problem *worse* before Figure 3(b)/(c)
+//! make it better, exactly as the paper narrates.
+
+use super::workload::Workload;
+use super::{build_pv_tail, build_score_frontend, BuiltAttention, FifoPlan};
+use crate::sim::{Elem, GraphBuilder};
+use crate::Result;
+
+/// Build the Figure-3(a) graph. Both long FIFOs take `plan.long`.
+pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    let n = w.n;
+    let mut g = GraphBuilder::new();
+
+    let s = build_score_frontend(&mut g, w, plan)?;
+
+    // First divergence: row max vs score bypass.
+    let s_max = g.channel("s_max", plan.short)?;
+    let s_bypass = g.channel("s_bypass", plan.long)?;
+    g.broadcast("bc_s", s, &[s_max, s_bypass])?;
+
+    let m = g.channel("m", plan.short)?;
+    g.reduce("row_max", s_max, m, n, f32::NEG_INFINITY, f32::max)?;
+    let m_rep = g.channel("m_rep", plan.short)?;
+    g.repeat("rep_m", m, m_rep, n)?;
+
+    // e_ij = exp(s_ij − m_i).
+    let e = g.channel("e", plan.short)?;
+    g.zip("exp_sub", &[s_bypass, m_rep], e, |xs| {
+        Elem::Scalar((xs[0].scalar() - xs[1].scalar()).exp())
+    })?;
+
+    // Second divergence: row sum vs exponential bypass.
+    let e_sum = g.channel("e_sum", plan.short)?;
+    let e_bypass = g.channel("e_bypass", plan.long)?;
+    g.broadcast("bc_e", e, &[e_sum, e_bypass])?;
+
+    let sigma = g.channel("sigma", plan.short)?;
+    g.reduce("row_sum", e_sum, sigma, n, 0.0, |a, b| a + b)?;
+    let sigma_rep = g.channel("sigma_rep", plan.short)?;
+    g.repeat("rep_sigma", sigma, sigma_rep, n)?;
+
+    let p = g.channel("p", plan.short)?;
+    g.zip("div", &[e_bypass, sigma_rep], p, |xs| {
+        Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+    })?;
+
+    let out = build_pv_tail(&mut g, w, plan, p)?;
+    Ok(BuiltAttention {
+        engine: g.build()?,
+        out,
+        n,
+        d: w.d,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{assert_close, sdpa_f32_scaled, sdpa_f64};
+    use super::super::FifoPlan;
+    use super::*;
+    use crate::sim::metrics::is_full_throughput;
+    use crate::sim::RunOutcome;
+
+    #[test]
+    fn matches_reference_numerics() {
+        let w = Workload::random(12, 8, 200);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_close(&got, &sdpa_f32_scaled(&w), 1e-5, "scaled vs f32 ref");
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "scaled vs f64 ref");
+    }
+
+    #[test]
+    fn survives_adversarial_magnitudes() {
+        // The whole point of softmax-with-scaling: no overflow where the
+        // naive algorithm produces NaN.
+        let w = Workload::large_magnitude(8, 4, 9, 200.0);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert!(got.iter().flatten().all(|x| x.is_finite()));
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "scaled adversarial");
+    }
+
+    #[test]
+    fn paper_config_achieves_full_throughput() {
+        let w = Workload::random(16, 4, 13);
+        let mut finite = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, s_finite) = finite.run().unwrap();
+        let mut base = build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, s_base) = base.run().unwrap();
+        assert!(is_full_throughput(&s_finite, &s_base));
+    }
+
+    #[test]
+    fn both_bypasses_are_order_n() {
+        let w = Workload::random(16, 4, 14);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        for fifo in ["s_bypass", "e_bypass"] {
+            let peak = summary.peak_elems(fifo).unwrap();
+            assert!(
+                peak >= w.n - 1 && peak <= w.n + 2,
+                "{fifo} peak {} for N={}",
+                peak,
+                w.n
+            );
+        }
+    }
+
+    #[test]
+    fn undersized_either_bypass_deadlocks() {
+        let w = Workload::random(12, 4, 15);
+        // Both long FIFOs too shallow.
+        let mut built = build(&w, &FifoPlan::with_long_depth(3)).unwrap();
+        assert!(matches!(
+            built.run_outcome().outcome,
+            RunOutcome::Deadlock { .. }
+        ));
+        // Only s_bypass undersized (e_bypass generous).
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        built
+            .engine
+            .set_capacity("s_bypass", crate::sim::Capacity::Bounded(3))
+            .unwrap();
+        assert!(matches!(
+            built.run_outcome().outcome,
+            RunOutcome::Deadlock { .. }
+        ));
+    }
+}

@@ -1,0 +1,120 @@
+//! Deterministic Q/K/V workload generation.
+//!
+//! The paper's experiments are driven by the sequence length `N` and head
+//! dimension `d`; the actual values only matter for numeric validation
+//! against the reference, so we generate them from a seeded PRNG
+//! (reproducible across runs, required for `Engine::reset` replays).
+
+use crate::prng::SplitMix64;
+
+/// One attention head's worth of inputs: Q, K, V ∈ ℝ^{N×d}, row-major.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// Sequence length (number of tokens).
+    pub n: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Query rows.
+    pub q: Vec<Vec<f32>>,
+    /// Key rows (the graphs stream columns of Kᵀ = rows of K).
+    pub k: Vec<Vec<f32>>,
+    /// Value rows.
+    pub v: Vec<Vec<f32>>,
+}
+
+impl Workload {
+    /// Random normal workload (the distribution real QKV projections
+    /// approximate at init; softmax inputs land in a realistic range
+    /// once scaled by 1/√d).
+    pub fn random(n: usize, d: usize, seed: u64) -> Self {
+        assert!(n >= 1 && d >= 1);
+        let mut rng = SplitMix64::new(seed);
+        let mut mat = |_| (0..n).map(|_| rng.normal_vec(d)).collect::<Vec<_>>();
+        Workload {
+            n,
+            d,
+            q: mat(0),
+            k: mat(1),
+            v: mat(2),
+        }
+    }
+
+    /// Adversarial workload for numerical-stability tests: scores span a
+    /// huge dynamic range so the unscaled (no max subtraction) softmax
+    /// overflows f32 while the scaled variants stay finite.
+    pub fn large_magnitude(n: usize, d: usize, seed: u64, scale: f32) -> Self {
+        let mut w = Self::random(n, d, seed);
+        for row in w.q.iter_mut() {
+            for x in row.iter_mut() {
+                *x *= scale;
+            }
+        }
+        w
+    }
+
+    /// The softmax scale factor 1/√d used by every variant.
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.d as f32).sqrt()
+    }
+
+    /// Scaled score s_ij = (q_i · k_j) / √d (f32 accumulation, the same
+    /// order the dataflow graphs use — bit-compatible with the sim).
+    pub fn score(&self, i: usize, j: usize) -> f32 {
+        dot(&self.q[i], &self.k[j]) * self.scale()
+    }
+}
+
+/// f32 dot product (sequential accumulation).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Workload::random(8, 4, 1);
+        let b = Workload::random(8, 4, 1);
+        let c = Workload::random(8, 4, 2);
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.v, b.v);
+        assert_ne!(a.q, c.q);
+    }
+
+    #[test]
+    fn shapes_match() {
+        let w = Workload::random(5, 3, 0);
+        assert_eq!(w.q.len(), 5);
+        assert!(w.q.iter().all(|r| r.len() == 3));
+        assert_eq!(w.k.len(), 5);
+        assert_eq!(w.v.len(), 5);
+    }
+
+    #[test]
+    fn scale_is_inv_sqrt_d() {
+        let w = Workload::random(2, 16, 0);
+        assert!((w.scale() - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn score_matches_manual_dot() {
+        let w = Workload::random(4, 4, 3);
+        let manual = dot(&w.q[1], &w.k[2]) / 2.0;
+        assert_eq!(w.score(1, 2), manual);
+    }
+
+    #[test]
+    fn large_magnitude_scales_q() {
+        let base = Workload::random(4, 4, 9);
+        let big = Workload::large_magnitude(4, 4, 9, 100.0);
+        assert!((big.q[0][0] - base.q[0][0] * 100.0).abs() < 1e-3);
+        assert_eq!(big.k, base.k);
+    }
+}

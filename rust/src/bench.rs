@@ -1,0 +1,191 @@
+//! Micro-benchmark harness (criterion is unavailable offline; this is
+//! the from-scratch substrate the `rust/benches/*` targets run on).
+//!
+//! Provides warmup, adaptive iteration-count calibration, and robust
+//! statistics (mean / median / p95 / min), printed in a stable format
+//! that `cargo bench 2>&1 | tee bench_output.txt` captures.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics, in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// Iterations measured (after warmup).
+    pub iters: u64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Median ns/iter.
+    pub median_ns: f64,
+    /// 95th percentile ns/iter.
+    pub p95_ns: f64,
+    /// Minimum ns/iter.
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    /// Throughput in iterations/second based on the mean.
+    pub fn iters_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    /// Render one stable report line.
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<44} {:>12} /iter (median {:>12}, p95 {:>12}, min {:>12}) {:>14.1} it/s",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+            self.iters_per_sec(),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Target wall time spent measuring each benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measurement.
+    pub warmup_time: Duration,
+    /// Cap on measured samples (each sample = one timed batch).
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(700),
+            warmup_time: Duration::from_millis(150),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast configuration for CI / smoke runs.
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(150),
+            warmup_time: Duration::from_millis(30),
+            max_samples: 50,
+        }
+    }
+
+    /// Measure `f`, printing and returning the stats. `f` is a full
+    /// iteration; use [`std::hint::black_box`] inside to defeat DCE.
+    pub fn bench(&self, name: &str, mut f: impl FnMut()) -> BenchStats {
+        // Warmup + calibrate batch size so one batch ≈ 1ms.
+        let warm_start = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            let t = Instant::now();
+            f();
+            one = t.elapsed();
+            warm_iters += 1;
+        }
+        let batch = ((Duration::from_millis(1).as_nanos() as f64
+            / one.as_nanos().max(1) as f64)
+            .ceil() as u64)
+            .clamp(1, 10_000);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time && samples_ns.len() < self.max_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per_iter = t.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(per_iter);
+            iters += batch;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let median = samples_ns[samples_ns.len() / 2];
+        let p95 = samples_ns[((samples_ns.len() as f64 * 0.95) as usize)
+            .min(samples_ns.len() - 1)];
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            min_ns: samples_ns[0],
+        };
+        println!("{}", stats.line());
+        stats
+    }
+}
+
+/// True when `--quick` was passed or `BENCH_QUICK` is set — bench
+/// binaries use this to shrink workloads in CI.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var_os("BENCH_QUICK").is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hint::black_box;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            max_samples: 20,
+        };
+        let stats = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(black_box(i));
+            }
+            black_box(x);
+        });
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.min_ns <= stats.mean_ns);
+        assert!(stats.median_ns <= stats.p95_ns);
+        assert!(stats.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with('s'));
+    }
+
+    #[test]
+    fn line_is_stable_format() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 100.0,
+            median_ns: 90.0,
+            p95_ns: 120.0,
+            min_ns: 80.0,
+        };
+        assert!(s.line().starts_with("bench x"));
+        assert!(s.line().contains("/iter"));
+        assert!(s.iters_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional…]`
+//! with typed accessors, unknown-flag detection, and generated usage
+//! text. Used by `rust/src/main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed arguments: a subcommand, `--key value` options, bare `--flag`
+/// switches and positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag argument (if the binary declares subcommands).
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = argv[1]).
+    ///
+    /// `switches` declares the bare boolean flags; any other `--key` is
+    /// treated as `--key value` when followed by a non-flag token. This
+    /// resolves the `--flag positional` ambiguity without a full parser
+    /// generator.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        tokens: I,
+        with_subcommand: bool,
+        switches: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if with_subcommand {
+            if let Some(tok) = it.peek() {
+                if !tok.starts_with("--") {
+                    args.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::Usage("bare '--' is not supported".into()));
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else if it.peek().is_some_and(|next| !next.starts_with("--")) {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(with_subcommand: bool, switches: &[&str]) -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1), with_subcommand, switches)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option with default; errors mention the offending key.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{key}: cannot parse '{raw}'"))),
+        }
+    }
+
+    /// Comma-separated typed list option.
+    pub fn get_list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .map(|tok| {
+                    tok.trim()
+                        .parse()
+                        .map_err(|_| Error::Usage(format!("--{key}: cannot parse '{tok}'")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Whether a bare `--flag` was given.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Error if any option/flag is not in `known` (catches typos).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for key in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&key.as_str()) {
+                return Err(Error::Usage(format!(
+                    "unknown option --{key} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = Args::parse_from(toks("simulate --n 64 --variant memfree --verbose file.txt"), true, &["verbose"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("n"), Some("64"));
+        assert_eq!(a.get("variant"), Some("memfree"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals(), &["file.txt".to_string()]);
+    }
+
+    #[test]
+    fn equals_form_supported() {
+        let a = Args::parse_from(toks("--n=128 --quick"), false, &["quick"]).unwrap();
+        assert_eq!(a.get_parsed_or("n", 0usize).unwrap(), 128);
+        assert!(a.has_flag("quick"));
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn typed_parsing_and_defaults() {
+        let a = Args::parse_from(toks("--n 32"), false, &[]).unwrap();
+        assert_eq!(a.get_parsed_or("n", 8usize).unwrap(), 32);
+        assert_eq!(a.get_parsed_or("d", 64usize).unwrap(), 64);
+        assert_eq!(a.get_or("variant", "naive"), "naive");
+        assert!(Args::parse_from(toks("--n abc"), false, &[])
+            .unwrap()
+            .get_parsed_or("n", 0usize)
+            .is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse_from(toks("--sizes 16,64,256"), false, &[]).unwrap();
+        assert_eq!(a.get_list_or("sizes", &[8usize]).unwrap(), vec![16, 64, 256]);
+        assert_eq!(a.get_list_or("other", &[8usize]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let a = Args::parse_from(toks("--n 1 --oops 2"), false, &[]).unwrap();
+        assert!(a.reject_unknown(&["n"]).is_err());
+        assert!(a.reject_unknown(&["n", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_not_swallowed() {
+        let a = Args::parse_from(toks("--verbose --n 3"), false, &[]).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("n"), Some("3"));
+    }
+}

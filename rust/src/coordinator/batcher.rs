@@ -1,0 +1,289 @@
+//! Dynamic batching: group same-shape requests, flush on size or age.
+//!
+//! Pure logic with an injected clock (microsecond timestamps) so the
+//! policy is exhaustively testable without threads. The server wraps
+//! this with real time.
+//!
+//! Policy (vLLM-style, simplified to fixed shape classes):
+//! * requests are queued per [`ShapeClass`] in arrival order;
+//! * a class flushes immediately when it reaches `max_batch`;
+//! * otherwise it flushes when its **oldest** request has waited
+//!   `max_wait_us` (bounded added latency);
+//! * `flush_all` drains everything (shutdown).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::request::{AttnRequest, ShapeClass};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush a class as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush a class when its oldest request is this old (µs).
+    pub max_wait_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait_us: 2_000,
+        }
+    }
+}
+
+/// A flushed batch: same-shape requests plus their enqueue timestamps.
+pub struct Batch {
+    /// Common shape class.
+    pub class: ShapeClass,
+    /// Requests in arrival order, with enqueue timestamps (µs).
+    pub requests: Vec<(AttnRequest, u64)>,
+}
+
+impl Batch {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Whether the batch is empty (never produced by the batcher).
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// The pure batching core.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queues: BTreeMap<ShapeClass, VecDeque<(AttnRequest, u64)>>,
+}
+
+impl DynamicBatcher {
+    /// New batcher with the given policy.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        DynamicBatcher {
+            cfg,
+            queues: BTreeMap::new(),
+        }
+    }
+
+    /// Enqueue a request at time `now_us`. Returns a batch if the
+    /// request's class just reached `max_batch`.
+    pub fn push(&mut self, req: AttnRequest, class: ShapeClass, now_us: u64) -> Option<Batch> {
+        let q = self.queues.entry(class).or_default();
+        q.push_back((req, now_us));
+        if q.len() >= self.cfg.max_batch {
+            return self.take(class, self.cfg.max_batch);
+        }
+        None
+    }
+
+    /// Flush every class whose oldest request has exceeded `max_wait_us`.
+    pub fn poll(&mut self, now_us: u64) -> Vec<Batch> {
+        let expired: Vec<ShapeClass> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.front()
+                    .is_some_and(|(_, t)| now_us.saturating_sub(*t) >= self.cfg.max_wait_us)
+            })
+            .map(|(&c, _)| c)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|c| self.take(c, self.cfg.max_batch))
+            .collect()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let classes: Vec<ShapeClass> = self.queues.keys().copied().collect();
+        let mut out = Vec::new();
+        for c in classes {
+            while let Some(b) = self.take(c, self.cfg.max_batch) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Earliest enqueue time across all queues (for sleep scheduling).
+    pub fn oldest_enqueue_us(&self) -> Option<u64> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|(_, t)| *t))
+            .min()
+    }
+
+    /// Total queued requests.
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(VecDeque::len).sum()
+    }
+
+    fn take(&mut self, class: ShapeClass, limit: usize) -> Option<Batch> {
+        let q = self.queues.get_mut(&class)?;
+        if q.is_empty() {
+            return None;
+        }
+        let take = q.len().min(limit);
+        let requests: Vec<_> = q.drain(..take).collect();
+        if q.is_empty() {
+            self.queues.remove(&class);
+        }
+        Some(Batch { class, requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{for_each_case, SplitMix64};
+    use crate::runtime::Tensor;
+    use std::collections::HashMap;
+    use std::sync::mpsc;
+
+    fn req(id: u64, n: usize, d: usize) -> (AttnRequest, ShapeClass) {
+        let (tx, rx) = mpsc::channel();
+        std::mem::forget(rx); // keep the sender usable in tests
+        (
+            AttnRequest {
+                id,
+                q: Tensor::zeros(vec![n, d]),
+                k: Tensor::zeros(vec![n, d]),
+                v: Tensor::zeros(vec![n, d]),
+                reply: tx,
+            },
+            ShapeClass { n, d },
+        )
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait_us: 1_000_000,
+        });
+        for id in 0..2 {
+            let (r, c) = req(id, 64, 64);
+            assert!(b.push(r, c, 0).is_none());
+        }
+        let (r, c) = req(2, 64, 64);
+        let batch = b.push(r, c, 0).expect("third request flushes");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.requests[0].0.id, 0, "FIFO order");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_timeout_only_when_old() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait_us: 100,
+        });
+        let (r, c) = req(0, 64, 64);
+        b.push(r, c, 1_000);
+        assert!(b.poll(1_050).is_empty(), "too young");
+        let flushed = b.poll(1_100);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 1);
+    }
+
+    #[test]
+    fn classes_do_not_mix() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait_us: 1_000_000,
+        });
+        let (r0, c0) = req(0, 64, 64);
+        let (r1, c1) = req(1, 128, 64);
+        assert!(b.push(r0, c0, 0).is_none());
+        assert!(b.push(r1, c1, 0).is_none(), "different class: no flush");
+        let (r2, c2) = req(2, 64, 64);
+        let batch = b.push(r2, c2, 0).unwrap();
+        assert_eq!(batch.class, ShapeClass { n: 64, d: 64 });
+        assert_eq!(batch.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn flush_all_drains_in_chunks() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait_us: 1_000_000,
+        });
+        for id in 0..10 {
+            let (r, c) = req(id, 64, 64);
+            let _ = b.push(r, c, 0); // two full batches flush inline
+        }
+        assert_eq!(b.pending(), 2);
+        let rest = b.flush_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn oldest_enqueue_tracks_minimum() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        assert_eq!(b.oldest_enqueue_us(), None);
+        let (r, c) = req(0, 64, 64);
+        b.push(r, c, 500);
+        let (r, c) = req(1, 128, 64);
+        b.push(r, c, 300);
+        assert_eq!(b.oldest_enqueue_us(), Some(300));
+    }
+
+    /// Property: across random interleavings of pushes and polls, no
+    /// request is lost or duplicated, batches never exceed max_batch,
+    /// batches are shape-homogeneous, and per-class FIFO order holds.
+    #[test]
+    fn property_no_loss_no_dup_fifo() {
+        for_each_case(0x5EED, 50, |_case, rng: &mut SplitMix64| {
+            let max_batch = 1 + rng.below(6) as usize;
+            let mut b = DynamicBatcher::new(BatcherConfig {
+                max_batch,
+                max_wait_us: 50,
+            });
+            let classes = [(32usize, 16usize), (64, 16), (64, 64)];
+            let total = 30 + rng.below(50);
+            let mut now = 0u64;
+            let mut seen: Vec<u64> = Vec::new();
+            let mut last_per_class: HashMap<ShapeClass, u64> = HashMap::new();
+            let mut check = |batch: Batch| {
+                assert!(batch.len() <= max_batch, "batch over max");
+                assert!(!batch.is_empty());
+                for (r, _) in &batch.requests {
+                    let c = r.shape_class().unwrap();
+                    assert_eq!(c, batch.class, "shape-homogeneous");
+                    if let Some(&prev) = last_per_class.get(&c) {
+                        assert!(r.id > prev, "FIFO within class");
+                    }
+                    last_per_class.insert(c, r.id);
+                    seen.push(r.id);
+                }
+            };
+            for id in 0..total {
+                now += rng.below(40);
+                let (n, d) = *rng.choose(&classes);
+                let (r, c) = req(id, n, d);
+                if let Some(batch) = b.push(r, c, now) {
+                    check(batch);
+                }
+                if rng.below(4) == 0 {
+                    for batch in b.poll(now) {
+                        check(batch);
+                    }
+                }
+            }
+            for batch in b.flush_all() {
+                check(batch);
+            }
+            assert_eq!(b.pending(), 0);
+            seen.sort_unstable();
+            let expect: Vec<u64> = (0..total).collect();
+            assert_eq!(seen, expect, "every request exactly once");
+        });
+    }
+}

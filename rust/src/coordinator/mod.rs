@@ -1,0 +1,28 @@
+//! L3 serving coordinator.
+//!
+//! The paper's contribution lives at L1/L2 (the memory-free attention
+//! algorithm and its mapping), so per the architecture this coordinator
+//! is the serving shell that puts the compiled artifacts on a request
+//! path with Python nowhere in sight:
+//!
+//! * [`request`] — request/response types and shape classes.
+//! * [`batcher`] — a pure, clock-injected dynamic batcher (max-batch /
+//!   max-wait, per shape class), property-tested for no-loss/no-dup and
+//!   FIFO order.
+//! * [`server`] — a worker thread owning the PJRT executor: drains the
+//!   ingress queue, batches, routes each batch to the smallest artifact
+//!   that fits (padding as needed), executes, and replies per-request.
+//! * [`stats`] — latency/throughput accounting (mean, p50, p95, p99).
+//!
+//! The design mirrors a vLLM-style router at miniature scale: shape
+//! classes play the role of (model, sequence-bucket) routing keys.
+
+pub mod batcher;
+pub mod request;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use request::{AttnRequest, AttnResponse, ShapeClass};
+pub use server::{Server, ServerConfig, ServerHandle};
+pub use stats::ServingStats;

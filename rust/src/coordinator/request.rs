@@ -1,0 +1,108 @@
+//! Request/response types and shape-class routing keys.
+
+use std::sync::mpsc;
+
+use crate::runtime::Tensor;
+use crate::{Error, Result};
+
+/// The routing key: requests with equal `(n, d)` can share a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeClass {
+    /// Sequence length.
+    pub n: usize,
+    /// Head dimension.
+    pub d: usize,
+}
+
+impl std::fmt::Display for ShapeClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}xd{}", self.n, self.d)
+    }
+}
+
+/// One attention request: single-head `(n, d)` q/k/v plus a reply slot.
+pub struct AttnRequest {
+    /// Caller-assigned id, echoed in the response.
+    pub id: u64,
+    /// Query tensor `(n, d)`.
+    pub q: Tensor,
+    /// Key tensor `(n, d)`.
+    pub k: Tensor,
+    /// Value tensor `(n, d)`.
+    pub v: Tensor,
+    /// Where the server sends the response.
+    pub reply: mpsc::Sender<AttnResponse>,
+}
+
+impl AttnRequest {
+    /// Validate shapes and derive the shape class.
+    pub fn shape_class(&self) -> Result<ShapeClass> {
+        let dims = self.q.dims();
+        if dims.len() != 2 {
+            return Err(Error::Coordinator(format!(
+                "request {}: q must be rank-2, got {dims:?}",
+                self.id
+            )));
+        }
+        if self.k.dims() != dims || self.v.dims() != dims {
+            return Err(Error::Coordinator(format!(
+                "request {}: q/k/v shape mismatch ({:?}/{:?}/{:?})",
+                self.id,
+                dims,
+                self.k.dims(),
+                self.v.dims()
+            )));
+        }
+        Ok(ShapeClass {
+            n: dims[0],
+            d: dims[1],
+        })
+    }
+}
+
+/// Response to one request.
+#[derive(Clone, Debug)]
+pub struct AttnResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Attention output `(n, d)`, or an error description.
+    pub result: std::result::Result<Tensor, String>,
+    /// End-to-end latency in microseconds (enqueue → reply).
+    pub latency_us: u64,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, qd: Vec<usize>, kd: Vec<usize>) -> (AttnRequest, mpsc::Receiver<AttnResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            AttnRequest {
+                id,
+                q: Tensor::zeros(qd),
+                k: Tensor::zeros(kd.clone()),
+                v: Tensor::zeros(kd),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn shape_class_derived() {
+        let (r, _rx) = req(1, vec![64, 32], vec![64, 32]);
+        assert_eq!(r.shape_class().unwrap(), ShapeClass { n: 64, d: 32 });
+        assert_eq!(format!("{}", r.shape_class().unwrap()), "n64xd32");
+    }
+
+    #[test]
+    fn mismatched_shapes_rejected() {
+        let (r, _rx) = req(2, vec![64, 32], vec![32, 32]);
+        assert!(r.shape_class().is_err());
+        let (r, _rx) = req(3, vec![64], vec![64]);
+        assert!(r.shape_class().is_err());
+    }
+}

@@ -1,0 +1,334 @@
+//! The serving loop: a worker thread owning the PJRT executor.
+//!
+//! Architecture (single worker — PJRT literals are not `Sync`, and one
+//! CPU executor saturates the cores via XLA's own thread pool):
+//!
+//! ```text
+//! clients ── mpsc ──► worker thread:
+//!                       drain ingress → DynamicBatcher
+//!                       flush on size/age → route to artifact
+//!                       pad batch → execute → unstack → reply
+//! ```
+//!
+//! Routing picks the smallest `batched_sdpa` artifact whose batch size
+//! fits the flushed batch for the request shape class; the batch is
+//! padded with zeros up to the artifact's batch dimension (padding rows
+//! cost compute but keep the artifact set small — the classic
+//! bucketed-serving trade).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::request::{AttnRequest, AttnResponse, ShapeClass};
+use super::stats::ServingStats;
+use crate::runtime::{ArtifactRegistry, Executor, Tensor};
+use crate::{Error, Result};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+    /// Compile every batched artifact at startup (§Perf: keeps PJRT
+    /// compilation out of the request path — without it the first
+    /// request per shape/batch class pays a ~100–200 ms compile).
+    pub precompile: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            precompile: true,
+        }
+    }
+}
+
+/// Ingress message: a request, or the shutdown signal.
+enum Ingress {
+    Req(AttnRequest),
+    Shutdown,
+}
+
+/// Handle used by clients to submit requests and read stats.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Ingress>,
+    stats: Arc<Mutex<ServingStats>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    /// Submit one attention request; returns the response receiver and
+    /// the assigned request id.
+    pub fn submit(&self, q: Tensor, k: Tensor, v: Tensor) -> Result<(u64, mpsc::Receiver<AttnResponse>)> {
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Ingress::Req(AttnRequest { id, q, k, v, reply }))
+            .map_err(|_| Error::Coordinator("server stopped".into()))?;
+        Ok((id, rx))
+    }
+
+    /// Submit and block for the response.
+    pub fn call(&self, q: Tensor, k: Tensor, v: Tensor) -> Result<AttnResponse> {
+        let (_, rx) = self.submit(q, k, v)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))
+    }
+
+    /// Snapshot of the serving statistics summary.
+    pub fn stats_summary(&self) -> String {
+        self.stats.lock().unwrap().summary()
+    }
+
+    /// Run `f` against the stats under the lock.
+    pub fn with_stats<T>(&self, f: impl FnOnce(&ServingStats) -> T) -> T {
+        f(&self.stats.lock().unwrap())
+    }
+}
+
+/// The running server (join handle + client handle).
+pub struct Server {
+    handle: ServerHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker thread. Fails fast if the artifact registry has
+    /// no batched artifacts at all.
+    pub fn start(registry: ArtifactRegistry, cfg: ServerConfig) -> Result<Server> {
+        if registry
+            .by_kind(crate::runtime::ArtifactKind::BatchedSdpa)
+            .is_empty()
+        {
+            return Err(Error::Coordinator(
+                "no batched_sdpa artifacts in registry (run `make artifacts`)".into(),
+            ));
+        }
+        let (tx, rx) = mpsc::channel::<Ingress>();
+        let stats = Arc::new(Mutex::new(ServingStats::new()));
+        let worker_stats = stats.clone();
+        let worker = std::thread::Builder::new()
+            .name("sdpa-server".into())
+            .spawn(move || worker_loop(rx, registry, cfg, worker_stats))
+            .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
+        Ok(Server {
+            handle: ServerHandle {
+                tx,
+                stats,
+                next_id: Arc::new(AtomicU64::new(0)),
+            },
+            worker: Some(worker),
+        })
+    }
+
+    /// Client handle (cloneable).
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: signal, drain, join. Works even while handle
+    /// clones are still alive (they get errors on subsequent submits).
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Ingress::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Ingress::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn now_us(epoch: Instant) -> u64 {
+    epoch.elapsed().as_micros() as u64
+}
+
+fn worker_loop(
+    rx: mpsc::Receiver<Ingress>,
+    registry: ArtifactRegistry,
+    cfg: ServerConfig,
+    stats: Arc<Mutex<ServingStats>>,
+) {
+    let epoch = Instant::now();
+    let mut executor = match Executor::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("sdpa-server: executor init failed: {e}");
+            return;
+        }
+    };
+    if cfg.precompile {
+        for meta in registry
+            .by_kind(crate::runtime::ArtifactKind::BatchedSdpa)
+            .into_iter()
+            .cloned()
+            .collect::<Vec<_>>()
+        {
+            if let Err(e) = executor.load_cached(&meta) {
+                eprintln!("sdpa-server: precompile {}: {e}", meta.name);
+            }
+        }
+    }
+    let mut batcher = DynamicBatcher::new(cfg.batcher);
+    let max_wait = Duration::from_micros(cfg.batcher.max_wait_us.max(1));
+
+    'outer: loop {
+        // Wait for work (bounded by the flush deadline when queueing).
+        let timeout = if batcher.pending() > 0 {
+            let oldest = batcher.oldest_enqueue_us().unwrap_or(0);
+            let age = now_us(epoch).saturating_sub(oldest);
+            Duration::from_micros(cfg.batcher.max_wait_us.saturating_sub(age).max(1))
+        } else {
+            max_wait.max(Duration::from_millis(50))
+        };
+        let mut stop = false;
+        match rx.recv_timeout(timeout) {
+            Ok(Ingress::Req(req)) => {
+                enqueue(req, &mut batcher, epoch, &registry, &mut executor, &stats);
+                // Opportunistically drain whatever is already queued.
+                loop {
+                    match rx.try_recv() {
+                        Ok(Ingress::Req(req)) => enqueue(
+                            req, &mut batcher, epoch, &registry, &mut executor, &stats,
+                        ),
+                        Ok(Ingress::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => {
+                            stop = true;
+                            break;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                    }
+                }
+            }
+            Ok(Ingress::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => stop = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        if stop {
+            for batch in batcher.flush_all() {
+                execute_batch(batch, &registry, &mut executor, epoch, &stats);
+            }
+            break 'outer;
+        }
+        for batch in batcher.poll(now_us(epoch)) {
+            execute_batch(batch, &registry, &mut executor, epoch, &stats);
+        }
+    }
+}
+
+fn enqueue(
+    req: AttnRequest,
+    batcher: &mut DynamicBatcher,
+    epoch: Instant,
+    registry: &ArtifactRegistry,
+    executor: &mut Executor,
+    stats: &Arc<Mutex<ServingStats>>,
+) {
+    match req.shape_class() {
+        Ok(class) => {
+            if let Some(batch) = batcher.push(req, class, now_us(epoch)) {
+                execute_batch(batch, registry, executor, epoch, stats);
+            }
+        }
+        Err(e) => {
+            stats.lock().unwrap().record_error();
+            let _ = req.reply.send(AttnResponse {
+                id: req.id,
+                result: Err(e.to_string()),
+                latency_us: 0,
+                batch_size: 0,
+            });
+        }
+    }
+}
+
+fn execute_batch(
+    batch: Batch,
+    registry: &ArtifactRegistry,
+    executor: &mut Executor,
+    epoch: Instant,
+    stats: &Arc<Mutex<ServingStats>>,
+) {
+    let k = batch.len();
+    let class = batch.class;
+    let result = run_batch(&batch, class, registry, executor);
+    let finished = now_us(epoch);
+    match result {
+        Ok(outputs) => {
+            let mut st = stats.lock().unwrap();
+            for ((req, enq), out) in batch.requests.into_iter().zip(outputs) {
+                let latency = finished.saturating_sub(enq);
+                st.record(latency, k);
+                let _ = req.reply.send(AttnResponse {
+                    id: req.id,
+                    result: Ok(out),
+                    latency_us: latency,
+                    batch_size: k,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let mut st = stats.lock().unwrap();
+            for (req, enq) in batch.requests {
+                st.record_error();
+                let _ = req.reply.send(AttnResponse {
+                    id: req.id,
+                    result: Err(msg.clone()),
+                    latency_us: finished.saturating_sub(enq),
+                    batch_size: k,
+                });
+            }
+        }
+    }
+}
+
+/// Route, pad, execute, unstack.
+fn run_batch(
+    batch: &Batch,
+    class: ShapeClass,
+    registry: &ArtifactRegistry,
+    executor: &mut Executor,
+) -> Result<Vec<Tensor>> {
+    let k = batch.len();
+    let meta = registry.best_batched(k, class.n, class.d).ok_or_else(|| {
+        Error::Coordinator(format!(
+            "no artifact serves batch={k} class={class} (max_batch={:?})",
+            registry.max_batch(class.n, class.d)
+        ))
+    })?;
+    let art_batch = meta.param("batch")? as usize;
+
+    let mut qs: Vec<Tensor> = Vec::with_capacity(art_batch);
+    let mut ks: Vec<Tensor> = Vec::with_capacity(art_batch);
+    let mut vs: Vec<Tensor> = Vec::with_capacity(art_batch);
+    for (req, _) in &batch.requests {
+        qs.push(req.q.clone());
+        ks.push(req.k.clone());
+        vs.push(req.v.clone());
+    }
+    // Pad to the artifact's batch dimension with zero rows.
+    let pad = Tensor::zeros(vec![class.n, class.d]);
+    while qs.len() < art_batch {
+        qs.push(pad.clone());
+        ks.push(pad.clone());
+        vs.push(pad.clone());
+    }
+    let loaded = executor.load_cached(meta)?;
+    let out = loaded.run(&[Tensor::stack(&qs)?, Tensor::stack(&ks)?, Tensor::stack(&vs)?])?;
+    let mut rows = out.unstack()?;
+    rows.truncate(k);
+    Ok(rows)
+}
+
+// Server integration tests (spawn + real artifacts) live in
+// rust/tests/serving_integration.rs.

@@ -1,0 +1,140 @@
+//! Serving statistics: latency percentiles and throughput.
+
+use std::time::Instant;
+
+/// Accumulates per-request latencies and batch sizes.
+#[derive(Debug)]
+pub struct ServingStats {
+    latencies_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    errors: u64,
+    started: Instant,
+}
+
+impl Default for ServingStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingStats {
+    /// Empty accumulator; throughput is measured from construction.
+    pub fn new() -> Self {
+        ServingStats {
+            latencies_us: Vec::new(),
+            batch_sizes: Vec::new(),
+            errors: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, latency_us: u64, batch_size: usize) {
+        self.latencies_us.push(latency_us);
+        self.batch_sizes.push(batch_size);
+    }
+
+    /// Record a failed request.
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Completed request count.
+    pub fn completed(&self) -> u64 {
+        self.latencies_us.len() as u64
+    }
+
+    /// Failed request count.
+    pub fn errors(&self) -> u64 {
+        self.errors
+    }
+
+    /// Latency percentile in µs (0.0–1.0). None if no data.
+    pub fn latency_pct(&self, pct: f64) -> Option<u64> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() as f64 - 1.0) * pct).round() as usize;
+        Some(sorted[idx.min(sorted.len() - 1)])
+    }
+
+    /// Mean latency in µs.
+    pub fn latency_mean(&self) -> Option<f64> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        Some(self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64)
+    }
+
+    /// Mean executed batch size.
+    pub fn mean_batch(&self) -> Option<f64> {
+        if self.batch_sizes.is_empty() {
+            return None;
+        }
+        Some(self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64)
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / secs
+        }
+    }
+
+    /// One-line summary for logs/reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} errors={} mean={}us p50={}us p95={}us p99={}us mean_batch={:.2}",
+            self.completed(),
+            self.errors(),
+            self.latency_mean().map(|v| v as u64).unwrap_or(0),
+            self.latency_pct(0.50).unwrap_or(0),
+            self.latency_pct(0.95).unwrap_or(0),
+            self.latency_pct(0.99).unwrap_or(0),
+            self.mean_batch().unwrap_or(0.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_on_known_data() {
+        let mut s = ServingStats::new();
+        for v in 1..=100u64 {
+            s.record(v, 4);
+        }
+        assert_eq!(s.completed(), 100);
+        assert_eq!(s.latency_pct(0.0), Some(1));
+        assert_eq!(s.latency_pct(1.0), Some(100));
+        let p50 = s.latency_pct(0.5).unwrap();
+        assert!((49..=51).contains(&p50));
+        assert!((s.latency_mean().unwrap() - 50.5).abs() < 1e-9);
+        assert_eq!(s.mean_batch(), Some(4.0));
+    }
+
+    #[test]
+    fn empty_stats_are_none() {
+        let s = ServingStats::new();
+        assert_eq!(s.latency_pct(0.5), None);
+        assert_eq!(s.latency_mean(), None);
+        assert_eq!(s.mean_batch(), None);
+        assert!(s.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn errors_counted_separately() {
+        let mut s = ServingStats::new();
+        s.record(10, 1);
+        s.record_error();
+        assert_eq!(s.completed(), 1);
+        assert_eq!(s.errors(), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Ablation: where does the paper's "N+2" come from?
+//!
+//! The minimum full-throughput depth of the Figure-2 bypass FIFO is not
+//! a magic constant — it is set by the **latency imbalance between the
+//! divergent paths** at the divider `Zip`. Two sweeps demonstrate the
+//! mechanism:
+//!
+//! 1. **Common-path latency** (a deeper `exp` pipeline, before the
+//!    broadcast) delays both paths equally → the minimum depth stays at
+//!    N+2 regardless of latency.
+//! 2. **Divergent-path latency** (extra pipeline stages on the row-sum
+//!    path between `Reduce` and `Repeat`) widens the imbalance → every
+//!    cycle of added latency costs exactly one more bypass slot:
+//!    min depth = N+2+L.
+//!
+//! For each point the driver bisects the minimum bypass depth that
+//! matches the unbounded baseline's cycle count.
+
+use crate::attention::naive::build_with_delays;
+use crate::attention::workload::Workload;
+use crate::attention::FifoPlan;
+use crate::report::Table;
+use crate::sim::RunOutcome;
+use crate::Result;
+
+/// Which path the latency is injected on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LatencySite {
+    /// `exp` unit, before the broadcast (shared by both paths).
+    CommonPath,
+    /// Extra stages on the row-sum path (one side only).
+    DivergentPath,
+}
+
+impl LatencySite {
+    fn label(self) -> &'static str {
+        match self {
+            LatencySite::CommonPath => "common (exp unit)",
+            LatencySite::DivergentPath => "divergent (sum path)",
+        }
+    }
+}
+
+/// One ablation row.
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    /// Where the latency was injected.
+    pub site: LatencySite,
+    /// Injected latency (cycles).
+    pub latency: u64,
+    /// Minimum bypass depth achieving baseline cycles.
+    pub min_depth: usize,
+    /// Baseline (unbounded) cycles at this configuration.
+    pub baseline_cycles: u64,
+}
+
+/// Full ablation result.
+#[derive(Clone, Debug)]
+pub struct AblationResult {
+    /// Sequence length.
+    pub n: usize,
+    /// All measured points.
+    pub points: Vec<AblationPoint>,
+}
+
+impl AblationResult {
+    /// Points for one site, ascending in latency.
+    pub fn site(&self, site: LatencySite) -> Vec<&AblationPoint> {
+        self.points.iter().filter(|p| p.site == site).collect()
+    }
+
+    /// Render the table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Ablation — min bypass depth vs injected latency (N={})",
+                self.n
+            ),
+            &["latency site", "L", "min depth", "prediction", "baseline cycles"],
+        );
+        for p in &self.points {
+            let prediction = match p.site {
+                LatencySite::CommonPath => format!("{} (N+2, unchanged)", self.n + 2),
+                LatencySite::DivergentPath => {
+                    format!("{} (N+2+L)", self.n as u64 + 2 + p.latency)
+                }
+            };
+            t.row(&[
+                p.site.label().into(),
+                p.latency.to_string(),
+                p.min_depth.to_string(),
+                prediction,
+                p.baseline_cycles.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+fn cycles_at_depth(
+    w: &Workload,
+    exp_latency: u64,
+    sigma_delay: u64,
+    depth: usize,
+) -> Result<Option<u64>> {
+    let mut built = build_with_delays(
+        w,
+        &FifoPlan::with_long_depth(depth),
+        exp_latency,
+        sigma_delay,
+    )?;
+    let s = built.run_outcome();
+    Ok(match s.outcome {
+        RunOutcome::Completed => Some(s.cycles),
+        _ => None,
+    })
+}
+
+fn min_depth(w: &Workload, exp_latency: u64, sigma_delay: u64) -> Result<(usize, u64)> {
+    let mut base = build_with_delays(w, &FifoPlan::unbounded(), exp_latency, sigma_delay)?;
+    let (_, bs) = base.run()?;
+    // Bisect on [2, 2N+32]: cycles(depth) is monotone non-increasing in
+    // depth and equals baseline from the minimum depth onward.
+    let (mut lo, mut hi) = (2usize, 2 * w.n + 32);
+    debug_assert_eq!(
+        cycles_at_depth(w, exp_latency, sigma_delay, hi)?,
+        Some(bs.cycles)
+    );
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        match cycles_at_depth(w, exp_latency, sigma_delay, mid)? {
+            Some(c) if c == bs.cycles => hi = mid,
+            _ => lo = mid + 1,
+        }
+    }
+    Ok((lo, bs.cycles))
+}
+
+/// Run both sweeps over `latencies`.
+pub fn run(n: usize, d: usize, latencies: &[u64]) -> Result<AblationResult> {
+    let w = Workload::random(n, d, 0xAB1A);
+    let mut points = Vec::new();
+    for &latency in latencies {
+        let (depth, cycles) = min_depth(&w, latency, 0)?;
+        points.push(AblationPoint {
+            site: LatencySite::CommonPath,
+            latency,
+            min_depth: depth,
+            baseline_cycles: cycles,
+        });
+    }
+    for &latency in latencies {
+        let (depth, cycles) = min_depth(&w, 1, latency)?;
+        points.push(AblationPoint {
+            site: LatencySite::DivergentPath,
+            latency,
+            min_depth: depth,
+            baseline_cycles: cycles,
+        });
+    }
+    Ok(AblationResult { n, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn common_path_latency_does_not_change_depth() {
+        let r = run(16, 4, &[1, 2, 4]).unwrap();
+        for p in r.site(LatencySite::CommonPath) {
+            assert_eq!(p.min_depth, 18, "L={}: still N+2", p.latency);
+        }
+    }
+
+    #[test]
+    fn divergent_path_latency_costs_one_slot_each() {
+        let r = run(16, 4, &[1, 2, 4]).unwrap();
+        for p in r.site(LatencySite::DivergentPath) {
+            assert_eq!(
+                p.min_depth as u64,
+                16 + 2 + p.latency,
+                "L={}: N+2+L",
+                p.latency
+            );
+        }
+    }
+
+    #[test]
+    fn table_shows_both_sites() {
+        let r = run(12, 4, &[1]).unwrap();
+        let text = r.table().render();
+        assert!(text.contains("common (exp unit)"));
+        assert!(text.contains("divergent (sum path)"));
+        assert!(text.contains("N+2+L"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Figures 2 and 3(a–c): FIFO-depth vs throughput sweeps.
+//!
+//! For each variant this driver sweeps the depth of the variant's long
+//! FIFO(s) and reports, per depth: outcome (completed / deadlock),
+//! cycles, slowdown vs the infinite-FIFO baseline, and peak occupancy of
+//! the deepest channel. The paper's claims appear directly in the rows:
+//!
+//! * naive/scaled/reordered deadlock below ~N and hit baseline cycles at
+//!   N+2 with peak occupancy N+1 → O(N) intermediate memory;
+//! * memfree completes at **depth 2** with baseline cycles and O(1)
+//!   occupancy everywhere.
+
+use crate::attention::workload::Workload;
+use crate::attention::{FifoPlan, Variant};
+use crate::report::{fmt_ratio, Table};
+use crate::sim::{RunOutcome, RunSummary};
+use crate::Result;
+
+/// One sweep row.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Long-FIFO depth used (`None` = unbounded baseline).
+    pub depth: Option<usize>,
+    /// Run summary (outcome may be deadlock).
+    pub summary: RunSummary,
+}
+
+/// Full sweep result for one variant.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// Variant swept.
+    pub variant: Variant,
+    /// Sequence length.
+    pub n: usize,
+    /// Baseline (all FIFOs unbounded).
+    pub baseline: RunSummary,
+    /// Points, ascending by depth, baseline last.
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepResult {
+    /// Smallest swept depth that completed at baseline cycles.
+    pub fn min_full_throughput_depth(&self) -> Option<usize> {
+        self.points
+            .iter()
+            .filter(|p| {
+                p.depth.is_some()
+                    && p.summary.outcome == RunOutcome::Completed
+                    && p.summary.cycles == self.baseline.cycles
+            })
+            .filter_map(|p| p.depth)
+            .min()
+    }
+
+    /// Render the paper-style table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "{} — {} (N={}): long-FIFO depth sweep",
+                self.variant.figure(),
+                self.variant.name(),
+                self.n
+            ),
+            &["long depth", "outcome", "cycles", "slowdown", "peak occ (long)", "peak words (total)"],
+        );
+        for p in &self.points {
+            let depth = p
+                .depth
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "inf".into());
+            let (outcome, cycles, slow) = match &p.summary.outcome {
+                RunOutcome::Completed => (
+                    "ok".to_string(),
+                    p.summary.cycles.to_string(),
+                    fmt_ratio(p.summary.cycles as f64 / self.baseline.cycles as f64),
+                ),
+                RunOutcome::Deadlock { .. } => {
+                    ("DEADLOCK".to_string(), "-".into(), "-".into())
+                }
+                RunOutcome::BudgetExceeded => ("budget".to_string(), "-".into(), "-".into()),
+            };
+            let peak_long = self
+                .variant
+                .long_fifos()
+                .iter()
+                .filter_map(|f| p.summary.peak_elems(f))
+                .max()
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "-".into());
+            t.row(&[
+                depth,
+                outcome,
+                cycles,
+                slow,
+                peak_long,
+                p.summary.total_peak_words().to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Depths swept for sequence length `n` (plus the unbounded baseline).
+pub fn sweep_depths(n: usize) -> Vec<usize> {
+    let mut v = vec![2, n / 2, n, n + 1, n + 2, n + 8];
+    v.dedup();
+    v.retain(|&d| d >= 2);
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Run the sweep for one variant.
+pub fn run(variant: Variant, n: usize, d: usize) -> Result<SweepResult> {
+    let w = Workload::random(n, d, 0xF1F0);
+    let mut base = variant.build(&w, &FifoPlan::unbounded())?;
+    let (_, baseline) = base.run()?;
+
+    let mut points = Vec::new();
+    for depth in sweep_depths(n) {
+        let mut built = variant.build(&w, &FifoPlan::with_long_depth(depth))?;
+        let summary = built.run_outcome();
+        points.push(SweepPoint {
+            depth: Some(depth),
+            summary,
+        });
+    }
+    points.push(SweepPoint {
+        depth: None,
+        summary: baseline.clone(),
+    });
+    Ok(SweepResult {
+        variant,
+        n,
+        baseline,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_needs_n_plus_2() {
+        let r = run(Variant::Naive, 16, 4).unwrap();
+        assert_eq!(r.min_full_throughput_depth(), Some(18), "paper: N+2");
+        // Depth 2 deadlocks.
+        let p2 = r.points.iter().find(|p| p.depth == Some(2)).unwrap();
+        assert!(matches!(p2.summary.outcome, RunOutcome::Deadlock { .. }));
+    }
+
+    #[test]
+    fn scaled_and_reordered_need_n_plus_2() {
+        for v in [Variant::Scaled, Variant::Reordered] {
+            let r = run(v, 16, 4).unwrap();
+            assert_eq!(r.min_full_throughput_depth(), Some(18), "{v}");
+        }
+    }
+
+    #[test]
+    fn memfree_full_throughput_at_depth_2() {
+        let r = run(Variant::MemoryFree, 16, 4).unwrap();
+        assert_eq!(r.min_full_throughput_depth(), Some(2), "paper: O(1)");
+        // Every point completes (no long FIFO to undersize).
+        for p in &r.points {
+            assert_eq!(p.summary.outcome, RunOutcome::Completed);
+        }
+    }
+
+    #[test]
+    fn table_renders_deadlock_and_ok_rows() {
+        let r = run(Variant::Naive, 8, 4).unwrap();
+        let text = r.table().render();
+        assert!(text.contains("DEADLOCK"));
+        assert!(text.contains("1.00x"));
+        assert!(text.contains("inf"));
+    }
+}

@@ -1,0 +1,39 @@
+//! Experiment drivers — one per paper artifact (DESIGN.md §5).
+//!
+//! Every driver returns structured results *and* renders the table the
+//! paper's claims correspond to, so `cargo run -- experiments all`
+//! regenerates the full evaluation and the integration tests assert on
+//! the same data the reports print.
+//!
+//! | Driver | Paper artifact |
+//! |---|---|
+//! | [`table1::run`] | Table 1 — node semantics |
+//! | [`fifo_sweep::run`] | Figures 2 / 3(a) / 3(b) / 3(c) — FIFO-depth vs throughput |
+//! | [`scaling::run`] | O(N) vs O(1) intermediate-memory growth |
+//! | [`numerics::run`] | all variants ≡ reference SDPA |
+//! | [`ablation::run`] | extension: min FIFO depth = N+1+L(exp) latency study |
+
+pub mod ablation;
+pub mod fifo_sweep;
+pub mod numerics;
+pub mod scaling;
+pub mod table1;
+
+use crate::Result;
+
+/// Run every experiment with default parameters (the `experiments all`
+/// subcommand); prints each table to stdout.
+pub fn run_all(n: usize, d: usize) -> Result<()> {
+    table1::run().print();
+    for v in crate::attention::Variant::ALL {
+        let r = fifo_sweep::run(v, n, d)?;
+        r.table().print();
+        println!();
+    }
+    scaling::run(&[16, 32, 64, 128], d)?.table().print();
+    println!();
+    numerics::run(n, d)?.table().print();
+    println!();
+    ablation::run(n.min(32), d, &[1, 2, 4])?.table().print();
+    Ok(())
+}

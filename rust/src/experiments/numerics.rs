@@ -1,0 +1,109 @@
+//! Numeric validation: every dataflow variant vs the f64 reference.
+//!
+//! The paper's implementations must compute *the same function*; this
+//! driver quantifies the agreement (max |Δ| against the f64 oracle) on a
+//! shared random workload, including the adversarial large-magnitude
+//! case where the unscaled naive softmax overflows — demonstrating why
+//! §4 adopts softmax-with-scaling.
+
+use crate::attention::reference::{max_abs_diff, sdpa_f64};
+use crate::attention::workload::Workload;
+use crate::attention::{FifoPlan, Variant};
+use crate::report::Table;
+use crate::Result;
+
+/// One (variant, workload) agreement measurement.
+#[derive(Clone, Debug)]
+pub struct NumericsPoint {
+    /// Variant measured.
+    pub variant: Variant,
+    /// Workload label.
+    pub workload: &'static str,
+    /// max |Δ| vs f64 oracle (NaN ⇒ non-finite output).
+    pub max_err: f32,
+}
+
+/// Full numerics study.
+#[derive(Clone, Debug)]
+pub struct NumericsResult {
+    /// All measurements.
+    pub points: Vec<NumericsPoint>,
+}
+
+impl NumericsResult {
+    /// Look up one measurement.
+    pub fn err(&self, variant: Variant, workload: &str) -> Option<f32> {
+        self.points
+            .iter()
+            .find(|p| p.variant == variant && p.workload == workload)
+            .map(|p| p.max_err)
+    }
+
+    /// Render the agreement table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Numeric agreement vs f64 reference (max |Δ|)",
+            &["variant", "workload", "max |Δ|"],
+        );
+        for p in &self.points {
+            let err = if p.max_err.is_nan() {
+                "NaN/overflow".to_string()
+            } else {
+                format!("{:.2e}", p.max_err)
+            };
+            t.row(&[p.variant.name().into(), p.workload.into(), err]);
+        }
+        t
+    }
+}
+
+/// Run all variants on a normal and an adversarial workload.
+pub fn run(n: usize, d: usize) -> Result<NumericsResult> {
+    let normal = Workload::random(n, d, 0xACC);
+    let adversarial = Workload::large_magnitude(n.min(16), d, 0xACC, 200.0);
+    let mut points = Vec::new();
+    for (label, w) in [("normal", &normal), ("adversarial", &adversarial)] {
+        let gold = sdpa_f64(w);
+        for variant in Variant::ALL {
+            let mut built = variant.build(w, &FifoPlan::paper(w.n))?;
+            let (got, _) = built.run()?;
+            points.push(NumericsPoint {
+                variant,
+                workload: label,
+                max_err: max_abs_diff(&got, &gold),
+            });
+        }
+    }
+    Ok(NumericsResult { points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_variants_agree_on_normal_workload() {
+        let r = run(16, 8).unwrap();
+        for v in Variant::ALL {
+            let err = r.err(v, "normal").unwrap();
+            assert!(err < 1e-4, "{v}: {err}");
+        }
+    }
+
+    #[test]
+    fn naive_overflows_adversarial_others_do_not() {
+        let r = run(16, 8).unwrap();
+        // The unscaled softmax overflows f32 → NaN against the oracle.
+        assert!(r.err(Variant::Naive, "adversarial").unwrap().is_nan());
+        for v in [Variant::Scaled, Variant::Reordered, Variant::MemoryFree] {
+            let err = r.err(v, "adversarial").unwrap();
+            assert!(err.is_finite() && err < 1e-3, "{v}: {err}");
+        }
+    }
+
+    #[test]
+    fn table_marks_overflow() {
+        let r = run(16, 8).unwrap();
+        assert!(r.table().render().contains("NaN/overflow"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Intermediate-memory growth study: O(N) vs O(1).
+//!
+//! Runs every variant in its paper configuration across a range of
+//! sequence lengths and reports peak intermediate memory (total words
+//! buffered in FIFOs at the high-water mark) plus total cycles. The
+//! growth classification reproduces the paper's §3/§4 asymptotic claims;
+//! cycles ≈ N² + fill confirms full throughput at every size.
+
+use crate::attention::workload::Workload;
+use crate::attention::{FifoPlan, Variant};
+use crate::report::Table;
+use crate::sim::metrics::{classify_occupancy, OccupancyClass};
+use crate::Result;
+
+/// Per-(variant, N) measurement.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    /// Sequence length.
+    pub n: usize,
+    /// Peak FIFO words, *excluding* operand-delivery channels (the
+    /// cyclic K/V sources hold d-wide rows regardless of algorithm).
+    pub peak_words: usize,
+    /// Peak of the variant's long FIFOs in elements (0 if none).
+    pub peak_long_elems: usize,
+    /// Cycles to completion.
+    pub cycles: u64,
+}
+
+/// Full scaling study.
+#[derive(Clone, Debug)]
+pub struct ScalingResult {
+    /// Head dimension used.
+    pub d: usize,
+    /// `(variant, points ascending in n)`.
+    pub series: Vec<(Variant, Vec<ScalePoint>)>,
+}
+
+impl ScalingResult {
+    /// Growth class of a variant's *long-FIFO* occupancy.
+    pub fn classification(&self, variant: Variant) -> OccupancyClass {
+        let (_, points) = self
+            .series
+            .iter()
+            .find(|(v, _)| *v == variant)
+            .expect("variant present");
+        let samples: Vec<(usize, usize)> = points
+            .iter()
+            // +1 word so the O(1) case is a nonzero constant series.
+            .map(|p| (p.n, p.peak_long_elems + 1))
+            .collect();
+        classify_occupancy(&samples)
+    }
+
+    /// Render the scaling table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!("Intermediate memory vs N (d={})", self.d),
+            &["variant", "N", "peak long-FIFO (elems)", "peak FIFO words", "cycles", "cycles/N^2"],
+        );
+        for (v, points) in &self.series {
+            for p in points {
+                t.row(&[
+                    v.name().into(),
+                    p.n.to_string(),
+                    p.peak_long_elems.to_string(),
+                    p.peak_words.to_string(),
+                    p.cycles.to_string(),
+                    format!("{:.3}", p.cycles as f64 / (p.n * p.n) as f64),
+                ]);
+            }
+            t.row(&[
+                format!("{v} growth"),
+                "-".into(),
+                format!("{:?}", self.classification(*v)),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run the study over `sizes` (ascending recommended).
+pub fn run(sizes: &[usize], d: usize) -> Result<ScalingResult> {
+    let mut series = Vec::new();
+    for variant in Variant::ALL {
+        let mut points = Vec::new();
+        for &n in sizes {
+            let w = Workload::random(n, d, 0x5CA1E);
+            let mut built = variant.build(&w, &FifoPlan::paper(n))?;
+            let (_, summary) = built.run()?;
+            let peak_long_elems = variant
+                .long_fifos()
+                .iter()
+                .filter_map(|f| summary.peak_elems(f))
+                .max()
+                .unwrap_or(0);
+            points.push(ScalePoint {
+                n,
+                peak_words: summary.total_peak_words(),
+                peak_long_elems,
+                cycles: summary.cycles,
+            });
+        }
+        series.push((variant, points));
+    }
+    Ok(ScalingResult { d, series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_classes_match_paper() {
+        let r = run(&[8, 16, 32, 64], 4).unwrap();
+        assert_eq!(r.classification(Variant::Naive), OccupancyClass::Linear);
+        assert_eq!(r.classification(Variant::Scaled), OccupancyClass::Linear);
+        assert_eq!(r.classification(Variant::Reordered), OccupancyClass::Linear);
+        assert_eq!(
+            r.classification(Variant::MemoryFree),
+            OccupancyClass::Constant
+        );
+    }
+
+    #[test]
+    fn cycles_scale_quadratically_at_full_throughput() {
+        let r = run(&[16, 32], 4).unwrap();
+        for (v, points) in &r.series {
+            for p in points {
+                let ratio = p.cycles as f64 / (p.n * p.n) as f64;
+                assert!(
+                    ratio < 1.6,
+                    "{v} at N={}: cycles/N² = {ratio} — not full throughput",
+                    p.n
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memfree_peak_long_is_zero() {
+        let r = run(&[16, 32], 4).unwrap();
+        let (_, points) = r
+            .series
+            .iter()
+            .find(|(v, _)| *v == Variant::MemoryFree)
+            .unwrap();
+        assert!(points.iter().all(|p| p.peak_long_elems == 0));
+    }
+}

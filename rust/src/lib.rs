@@ -1,0 +1,86 @@
+//! # sdpa-dataflow
+//!
+//! A production-quality reproduction of *"Implementing and Optimizing the
+//! Scaled Dot-Product Attention on Streaming Dataflow"* (Sohn, Zhang,
+//! Olukotun — Stanford, cs.AR 2024).
+//!
+//! The crate is organised as the paper's three-layer system:
+//!
+//! * [`sim`] — a cycle-accurate streaming-dataflow abstract machine
+//!   (bounded FIFO channels with backpressure, Parallel-Pattern nodes per
+//!   the paper's Table 1, deterministic two-phase engine, occupancy and
+//!   throughput metrics, deadlock detection). This is our from-scratch
+//!   stand-in for the Dataflow Abstract Machine simulator the paper used.
+//! * [`attention`] — the four attention dataflow graphs the paper studies
+//!   (Figure 2 naive, Figure 3a scaled softmax, Figure 3b reordered
+//!   division, Figure 3c memory-free), plus a golden reference SDPA and
+//!   deterministic workload generators.
+//! * [`experiments`] — drivers that regenerate every table and figure in
+//!   the paper (see `DESIGN.md` §5 for the experiment index).
+//! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
+//! * [`coordinator`] — a serving coordinator (router + dynamic batcher +
+//!   worker pool) that drives the runtime on the request path with Python
+//!   fully out of the loop.
+//!
+//! Supporting substrates built from scratch (the image has no offline
+//! tokio/clap/criterion/proptest): [`cli`] argument parsing, [`bench`]
+//! micro-benchmark harness, [`prng`] deterministic PRNG + property-test
+//! helpers, and [`report`] tabular report formatting.
+
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod prng;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Top-level error type for the library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// The simulated graph reached a configuration where no node can make
+    /// progress but work remains — i.e. insufficient FIFO depth.
+    #[error("deadlock at cycle {cycle}: {detail}")]
+    Deadlock {
+        /// Cycle at which the engine detected quiescence-with-work-left.
+        cycle: u64,
+        /// Human-readable description of the blocked nodes/channels.
+        detail: String,
+    },
+    /// The simulation exceeded its configured cycle budget.
+    #[error("simulation exceeded max_cycles={max_cycles}")]
+    CycleBudgetExceeded {
+        /// The configured budget.
+        max_cycles: u64,
+    },
+    /// Graph construction error (dangling port, duplicate wiring, ...).
+    #[error("graph construction: {0}")]
+    Graph(String),
+    /// Elements of the wrong kind flowed into a node (e.g. a vector where
+    /// a scalar was expected).
+    #[error("type error in node '{node}': {detail}")]
+    ElemType {
+        /// Name of the offending node.
+        node: String,
+        /// What went wrong.
+        detail: String,
+    },
+    /// Runtime (PJRT / artifact) error.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Coordinator error (queue closed, worker died, ...).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+    /// CLI usage error.
+    #[error("usage: {0}")]
+    Usage(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}

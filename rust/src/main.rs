@@ -1,0 +1,194 @@
+//! `sdpa-dataflow` CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! sdpa-dataflow simulate    --variant memfree --n 64 --d 32 [--long-depth K] [--unbounded]
+//! sdpa-dataflow experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics] [--n N] [--d D]
+//! sdpa-dataflow validate    [--artifacts DIR]       # run every artifact vs its golden file
+//! sdpa-dataflow serve       [--requests K] [--batch B] [--wait-us U]  # demo serving loop
+//! ```
+
+use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::cli::Args;
+use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig};
+use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, Tensor};
+use sdpa_dataflow::{attention::workload::Workload, experiments, report};
+
+const USAGE: &str = "usage: sdpa-dataflow <simulate|experiments|validate|serve> [options]
+  simulate    --variant <naive|scaled|reordered|memfree> --n N --d D [--long-depth K] [--unbounded]
+  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation] [--n N] [--d D]
+  validate    [--artifacts DIR]
+  serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> sdpa_dataflow::Result<()> {
+    let args = Args::from_env(true, &["unbounded", "quick"])?;
+    match args.subcommand.as_deref() {
+        Some("simulate") => simulate(&args),
+        Some("experiments") => run_experiments(&args),
+        Some("validate") => validate(&args),
+        Some("serve") => serve(&args),
+        _ => Err(sdpa_dataflow::Error::Usage("missing subcommand".into())),
+    }
+}
+
+fn simulate(args: &Args) -> sdpa_dataflow::Result<()> {
+    let variant = Variant::parse(args.get_or("variant", "memfree"))?;
+    let n: usize = args.get_parsed_or("n", 64)?;
+    let d: usize = args.get_parsed_or("d", 32)?;
+    let w = Workload::random(n, d, args.get_parsed_or("seed", 7u64)?);
+    let plan = if args.has_flag("unbounded") {
+        FifoPlan::unbounded()
+    } else if let Some(depth) = args.get("long-depth") {
+        let depth: usize = depth
+            .parse()
+            .map_err(|_| sdpa_dataflow::Error::Usage("--long-depth".into()))?;
+        FifoPlan::with_long_depth(depth)
+    } else {
+        FifoPlan::paper(n)
+    };
+    println!(
+        "simulating {variant} ({}) N={n} d={d} plan={plan:?}",
+        variant.figure()
+    );
+    let mut built = variant.build(&w, &plan)?;
+    let summary = built.run_outcome();
+    let m = summary.metrics();
+    let mut t = report::Table::new("run summary", &["metric", "value"]);
+    t.row(&["outcome".into(), format!("{:?}", summary.outcome)]);
+    t.row(&["cycles".into(), summary.cycles.to_string()]);
+    t.row(&["total peak FIFO words".into(), m.total_peak_words.to_string()]);
+    t.row(&[
+        "deepest channel".into(),
+        format!("{} ({} words)", m.max_channel_peak.0, m.max_channel_peak.1),
+    ]);
+    t.row(&["node fires/cycle".into(), format!("{:.2}", m.fires_per_cycle())]);
+    t.print();
+    // Numeric check against the f64 oracle.
+    if summary.outcome == sdpa_dataflow::sim::RunOutcome::Completed {
+        let gold = sdpa_dataflow::attention::reference::sdpa_f64(&w);
+        let got = built.out.rows();
+        let err = sdpa_dataflow::attention::reference::max_abs_diff(&got, &gold);
+        println!("max |Δ| vs f64 reference: {err:.3e}");
+    }
+    Ok(())
+}
+
+fn run_experiments(args: &Args) -> sdpa_dataflow::Result<()> {
+    let which = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let n: usize = args.get_parsed_or("n", 64)?;
+    let d: usize = args.get_parsed_or("d", 16)?;
+    match which {
+        "all" => experiments::run_all(n, d)?,
+        "table1" => experiments::table1::run().print(),
+        "fig2" => experiments::fifo_sweep::run(Variant::Naive, n, d)?.table().print(),
+        "fig3a" => experiments::fifo_sweep::run(Variant::Scaled, n, d)?.table().print(),
+        "fig3b" => experiments::fifo_sweep::run(Variant::Reordered, n, d)?
+            .table()
+            .print(),
+        "fig3c" => experiments::fifo_sweep::run(Variant::MemoryFree, n, d)?
+            .table()
+            .print(),
+        "scaling" => experiments::scaling::run(&[16, 32, 64, 128], d)?.table().print(),
+        "numerics" => experiments::numerics::run(n, d)?.table().print(),
+        "ablation" => experiments::ablation::run(n, d, &[1, 2, 4, 8])?.table().print(),
+        other => {
+            return Err(sdpa_dataflow::Error::Usage(format!(
+                "unknown experiment '{other}'"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn validate(args: &Args) -> sdpa_dataflow::Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let registry = ArtifactRegistry::load(&dir)?;
+    let mut executor = Executor::cpu()?;
+    println!(
+        "validating {} artifacts on {}",
+        registry.all().len(),
+        executor.platform()
+    );
+    let mut t = report::Table::new("artifact validation", &["artifact", "max |Δ|", "status"]);
+    let mut failures = 0;
+    for meta in registry.all().to_vec() {
+        let tv = meta.testvec()?;
+        let loaded = executor.load_cached(&meta)?;
+        let inputs: Vec<Tensor> = tv.inputs.iter().map(|(_, t)| t.clone()).collect();
+        let got = loaded.run(&inputs)?;
+        let want = &tv.outputs[0].1;
+        let err = got.max_abs_diff(want);
+        let ok = err.is_finite() && err < 1e-4;
+        if !ok {
+            failures += 1;
+        }
+        t.row(&[
+            meta.name.clone(),
+            format!("{err:.2e}"),
+            if ok { "ok".into() } else { "FAIL".into() },
+        ]);
+    }
+    t.print();
+    if failures > 0 {
+        return Err(sdpa_dataflow::Error::Runtime(format!(
+            "{failures} artifact(s) failed golden validation"
+        )));
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let requests: usize = args.get_parsed_or("requests", 64)?;
+    let max_batch: usize = args.get_parsed_or("batch", 8)?;
+    let max_wait_us: u64 = args.get_parsed_or("wait-us", 2_000)?;
+    let registry = ArtifactRegistry::load(&dir)?;
+    let server = Server::start(
+        registry,
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait_us,
+            },
+            ..ServerConfig::default()
+        },
+    )?;
+    let handle = server.handle();
+    println!("serving {requests} attention requests (max_batch={max_batch}, max_wait={max_wait_us}us)");
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let q = Tensor::randn(vec![64, 64], 100 + i as u64);
+        let k = Tensor::randn(vec![64, 64], 200 + i as u64);
+        let v = Tensor::randn(vec![64, 64], 300 + i as u64);
+        rxs.push(handle.submit(q, k, v)?.1);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx
+            .recv()
+            .map_err(|_| sdpa_dataflow::Error::Coordinator("reply dropped".into()))?;
+        if resp.result.is_ok() {
+            ok += 1;
+        }
+    }
+    println!("completed {ok}/{requests}: {}", handle.stats_summary());
+    server.shutdown();
+    Ok(())
+}

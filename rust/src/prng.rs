@@ -1,0 +1,168 @@
+//! Deterministic PRNG + lightweight property-testing helpers.
+//!
+//! The build image has no offline `rand`/`proptest`, so this module
+//! provides what the repo needs: a SplitMix64 generator (public-domain
+//! algorithm; 64-bit state, passes BigCrush as a mixer) with uniform /
+//! normal float helpers, and a tiny randomized-cases harness used by the
+//! property-style tests on simulator and coordinator invariants.
+
+/// SplitMix64: deterministic, seedable, fast.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// New generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Rejection-free multiply-shift; bias is negligible for the test
+        // ranges used here (n ≪ 2^64).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(f64::MIN_POSITIVE);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Standard normal as f32.
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a vector with standard-normal f32s.
+    pub fn normal_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.normal_f32()).collect()
+    }
+
+    /// Pick one of the items uniformly.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+}
+
+/// Run `f` over `cases` randomized cases, reporting the failing case
+/// index and seed on panic so failures are reproducible. This is the
+/// poor-man's proptest used throughout the test suite.
+pub fn for_each_case(seed: u64, cases: usize, mut f: impl FnMut(usize, &mut SplitMix64)) {
+    for case in 0..cases {
+        // Derive an independent stream per case so failures shrink to a
+        // single reproducible seed.
+        let case_seed = SplitMix64::new(seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407))
+            .next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(case, &mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property case {case} failed (root seed {seed:#x}, case seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c = SplitMix64::new(43).next_u64();
+        assert_ne!(a[0], c);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            let v = r.uniform_f32(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = SplitMix64::new(1);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let k = r.below(7) as usize;
+            assert!(k < 7);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues reachable");
+    }
+
+    #[test]
+    fn normal_moments_sane() {
+        let mut r = SplitMix64::new(3);
+        let n = 50_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn for_each_case_runs_all() {
+        let mut count = 0;
+        for_each_case(0xDEADBEEF, 25, |_, rng| {
+            let _ = rng.next_u64();
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn choose_covers_items() {
+        let mut r = SplitMix64::new(9);
+        let items = [1, 2, 3];
+        let mut hits = [0; 3];
+        for _ in 0..300 {
+            hits[*r.choose(&items) as usize - 1] += 1;
+        }
+        assert!(hits.iter().all(|&h| h > 50));
+    }
+}

@@ -1,0 +1,340 @@
+//! Artifact manifest and golden-file (`.testvec`) parsing.
+//!
+//! `python/compile/aot.py` writes `manifest.tsv` with one row per
+//! artifact: `name \t kind \t hlo-file \t testvec-file \t k=v,...`.
+//! The `.testvec` format is a text header (`SDPATV1`, `name`, one
+//! `tensor <role> <name> f32 <ndim> <dims…>` line per tensor, `data`)
+//! followed by raw little-endian f32 payloads in header order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::tensor::Tensor;
+use crate::{Error, Result};
+
+/// What a compiled module computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Single-head SDPA `(q, k, v) → o` over `(n, d)`.
+    Sdpa,
+    /// Batched SDPA `(B, n, d)³ → (B, n, d)` — the serving shape class.
+    BatchedSdpa,
+    /// Full transformer forward `(B, S, E) → (B, S, E)`.
+    Model,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sdpa" => Ok(ArtifactKind::Sdpa),
+            "batched_sdpa" => Ok(ArtifactKind::BatchedSdpa),
+            "model" => Ok(ArtifactKind::Model),
+            other => Err(Error::Runtime(format!("unknown artifact kind '{other}'"))),
+        }
+    }
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Artifact name (stable identifier).
+    pub name: String,
+    /// What it computes.
+    pub kind: ArtifactKind,
+    /// Absolute path to the HLO text module.
+    pub hlo_path: PathBuf,
+    /// Absolute path to the golden file.
+    pub testvec_path: PathBuf,
+    /// Shape parameters (`n`, `d`, `batch`, `seq`, ...).
+    pub params: BTreeMap<String, i64>,
+}
+
+impl ArtifactMeta {
+    /// Integer parameter lookup.
+    pub fn param(&self, key: &str) -> Result<i64> {
+        self.params.get(key).copied().ok_or_else(|| {
+            Error::Runtime(format!("artifact '{}' missing param '{key}'", self.name))
+        })
+    }
+
+    /// Expected output shape, derived from kind + params.
+    pub fn output_dims(&self) -> Result<Vec<usize>> {
+        Ok(match self.kind {
+            ArtifactKind::Sdpa => vec![self.param("n")? as usize, self.param("d")? as usize],
+            ArtifactKind::BatchedSdpa => vec![
+                self.param("batch")? as usize,
+                self.param("n")? as usize,
+                self.param("d")? as usize,
+            ],
+            ArtifactKind::Model => vec![
+                self.param("batch")? as usize,
+                self.param("seq")? as usize,
+                self.param("d_model")? as usize,
+            ],
+        })
+    }
+
+    /// Load this artifact's golden inputs/outputs.
+    pub fn testvec(&self) -> Result<TestVec> {
+        TestVec::load(&self.testvec_path)
+    }
+}
+
+/// All artifacts found in a directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Parse `dir/manifest.tsv`. Fails if the directory or manifest is
+    /// missing (run `make artifacts` first).
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest.display()
+            ))
+        })?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: want 5 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let mut params = BTreeMap::new();
+            for kv in cols[4].split(',').filter(|s| !s.is_empty()) {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    Error::Runtime(format!("manifest line {}: bad param '{kv}'", lineno + 1))
+                })?;
+                let v: i64 = v.parse().map_err(|_| {
+                    Error::Runtime(format!("manifest line {}: non-integer '{kv}'", lineno + 1))
+                })?;
+                params.insert(k.to_string(), v);
+            }
+            artifacts.push(ArtifactMeta {
+                name: cols[0].to_string(),
+                kind: ArtifactKind::parse(cols[1])?,
+                hlo_path: dir.join(cols[2]),
+                testvec_path: dir.join(cols[3]),
+                params,
+            });
+        }
+        Ok(ArtifactRegistry { artifacts })
+    }
+
+    /// All artifacts.
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Find by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of one kind.
+    pub fn by_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Smallest batched-SDPA artifact whose batch ≥ `batch` with matching
+    /// `(n, d)` — the router's shape-class lookup. `None` if no artifact
+    /// can serve the request (caller splits the batch).
+    pub fn best_batched(&self, batch: usize, n: usize, d: usize) -> Option<&ArtifactMeta> {
+        self.by_kind(ArtifactKind::BatchedSdpa)
+            .into_iter()
+            .filter(|a| {
+                a.param("n").ok() == Some(n as i64)
+                    && a.param("d").ok() == Some(d as i64)
+                    && a.param("batch").ok().is_some_and(|b| b >= batch as i64)
+            })
+            .min_by_key(|a| a.param("batch").unwrap())
+    }
+
+    /// Largest available batch size for shape class `(n, d)`.
+    pub fn max_batch(&self, n: usize, d: usize) -> Option<usize> {
+        self.by_kind(ArtifactKind::BatchedSdpa)
+            .into_iter()
+            .filter(|a| {
+                a.param("n").ok() == Some(n as i64) && a.param("d").ok() == Some(d as i64)
+            })
+            .filter_map(|a| a.param("batch").ok())
+            .max()
+            .map(|b| b as usize)
+    }
+}
+
+/// Parsed golden file: named input and output tensors.
+#[derive(Clone, Debug)]
+pub struct TestVec {
+    /// Artifact name recorded in the header.
+    pub name: String,
+    /// Input tensors in declaration order.
+    pub inputs: Vec<(String, Tensor)>,
+    /// Expected output tensors in declaration order.
+    pub outputs: Vec<(String, Tensor)>,
+}
+
+impl TestVec {
+    /// Parse a `.testvec` file.
+    pub fn load(path: impl AsRef<Path>) -> Result<TestVec> {
+        let raw = std::fs::read(path.as_ref())?;
+        let magic = b"SDPATV1\n";
+        if !raw.starts_with(magic) {
+            return Err(Error::Runtime(format!(
+                "{}: bad magic (not a testvec)",
+                path.as_ref().display()
+            )));
+        }
+        // Header is newline-terminated text until the `data\n` marker.
+        let mut pos = magic.len();
+        let mut name = String::new();
+        let mut decls: Vec<(String, String, Vec<usize>)> = Vec::new();
+        loop {
+            let nl = raw[pos..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .ok_or_else(|| Error::Runtime("testvec: truncated header".into()))?;
+            let line = std::str::from_utf8(&raw[pos..pos + nl])
+                .map_err(|_| Error::Runtime("testvec: non-utf8 header".into()))?;
+            pos += nl + 1;
+            if line == "data" {
+                break;
+            } else if let Some(n) = line.strip_prefix("name ") {
+                name = n.to_string();
+            } else if let Some(rest) = line.strip_prefix("tensor ") {
+                let parts: Vec<&str> = rest.split_whitespace().collect();
+                if parts.len() < 4 || parts[2] != "f32" {
+                    return Err(Error::Runtime(format!("testvec: bad tensor line '{line}'")));
+                }
+                let ndim: usize = parts[3]
+                    .parse()
+                    .map_err(|_| Error::Runtime(format!("testvec: bad ndim '{line}'")))?;
+                if parts.len() != 4 + ndim {
+                    return Err(Error::Runtime(format!("testvec: dim count '{line}'")));
+                }
+                let dims: Vec<usize> = parts[4..]
+                    .iter()
+                    .map(|d| d.parse().unwrap_or(0))
+                    .collect();
+                decls.push((parts[0].to_string(), parts[1].to_string(), dims));
+            } else {
+                return Err(Error::Runtime(format!("testvec: unknown header '{line}'")));
+            }
+        }
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (role, tname, dims) in decls {
+            let count: usize = dims.iter().product();
+            let bytes = count * 4;
+            if pos + bytes > raw.len() {
+                return Err(Error::Runtime("testvec: truncated payload".into()));
+            }
+            let data: Vec<f32> = raw[pos..pos + bytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            pos += bytes;
+            let t = Tensor::new(dims, data)?;
+            match role.as_str() {
+                "input" => inputs.push((tname, t)),
+                "output" => outputs.push((tname, t)),
+                other => return Err(Error::Runtime(format!("testvec: bad role '{other}'"))),
+            }
+        }
+        Ok(TestVec {
+            name,
+            inputs,
+            outputs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tv(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"SDPATV1\nname unit\n").unwrap();
+        f.write_all(b"tensor input q f32 2 2 2\n").unwrap();
+        f.write_all(b"tensor output out0 f32 1 2\n").unwrap();
+        f.write_all(b"data\n").unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 9.0, 8.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn parses_testvec() {
+        let dir = std::env::temp_dir().join("sdpa_tv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("unit.testvec");
+        write_tv(&p);
+        let tv = TestVec::load(&p).unwrap();
+        assert_eq!(tv.name, "unit");
+        assert_eq!(tv.inputs.len(), 1);
+        assert_eq!(tv.inputs[0].0, "q");
+        assert_eq!(tv.inputs[0].1.dims(), &[2, 2]);
+        assert_eq!(tv.inputs[0].1.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tv.outputs[0].1.data(), &[9.0, 8.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sdpa_tv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.testvec");
+        std::fs::write(&p, b"NOTMAGIC\n").unwrap();
+        assert!(TestVec::load(&p).is_err());
+    }
+
+    #[test]
+    fn parses_manifest_and_routes() {
+        let dir = std::env::temp_dir().join("sdpa_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# header\n\
+             sdpa_n64_d64\tsdpa\ta.hlo.txt\ta.testvec\tn=64,d=64,causal=0\n\
+             sdpa_b2_n64_d64\tbatched_sdpa\tb.hlo.txt\tb.testvec\tbatch=2,n=64,d=64\n\
+             sdpa_b8_n64_d64\tbatched_sdpa\tc.hlo.txt\tc.testvec\tbatch=8,n=64,d=64\n\
+             model_b2_s32\tmodel\td.hlo.txt\td.testvec\tbatch=2,seq=32,d_model=128\n",
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.all().len(), 4);
+        assert!(reg.by_name("sdpa_n64_d64").is_some());
+        assert_eq!(reg.by_kind(ArtifactKind::BatchedSdpa).len(), 2);
+        // Router picks the smallest artifact that fits.
+        assert_eq!(reg.best_batched(1, 64, 64).unwrap().name, "sdpa_b2_n64_d64");
+        assert_eq!(reg.best_batched(3, 64, 64).unwrap().name, "sdpa_b8_n64_d64");
+        assert!(reg.best_batched(9, 64, 64).is_none());
+        assert!(reg.best_batched(1, 128, 64).is_none());
+        assert_eq!(reg.max_batch(64, 64), Some(8));
+        // Output dims derived from params.
+        let m = reg.by_name("model_b2_s32").unwrap();
+        assert_eq!(m.output_dims().unwrap(), vec![2, 32, 128]);
+    }
+
+    #[test]
+    fn manifest_errors_are_described() {
+        let dir = std::env::temp_dir().join("sdpa_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "only\tthree\tcols\n").unwrap();
+        let err = ArtifactRegistry::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("5 columns"));
+        assert!(ArtifactRegistry::load(dir.join("nope")).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT executor: compile HLO text once, execute many times.
+//!
+//! Wraps the `xla` crate (PJRT C API). The pattern follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! All artifacts are lowered with `return_tuple=True`, so each result is
+//! a 1-tuple literal unwrapped with `to_tuple1`.
+
+use std::collections::HashMap;
+
+use super::artifact::ArtifactMeta;
+use super::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A PJRT CPU client with a cache of compiled artifacts.
+pub struct Executor {
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl Executor {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Executor> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Executor {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (no caching — prefer [`Executor::load_cached`]).
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<LoadedArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path).map_err(|e| {
+            Error::Runtime(format!("parse {}: {e}", meta.hlo_path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", meta.name)))?;
+        Ok(LoadedArtifact {
+            name: meta.name.clone(),
+            output_dims: meta.output_dims()?,
+            exe,
+        })
+    }
+
+    /// Compile once per artifact name, then reuse.
+    pub fn load_cached(&mut self, meta: &ArtifactMeta) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(&meta.name) {
+            let loaded = self.load(meta)?;
+            self.cache.insert(meta.name.clone(), loaded);
+        }
+        Ok(&self.cache[&meta.name])
+    }
+
+    /// Number of compiled artifacts held.
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// A compiled executable plus its declared output shape.
+pub struct LoadedArtifact {
+    /// Artifact name.
+    pub name: String,
+    output_dims: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute on `inputs` (order must match the artifact's signature).
+    /// Returns the single output tensor.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple result: {e}")))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("read result: {e}")))?;
+        Tensor::new(self.output_dims.clone(), data)
+    }
+
+    /// Declared output shape.
+    pub fn output_dims(&self) -> &[usize] {
+        &self.output_dims
+    }
+}
+
+// PJRT integration tests live in rust/tests/runtime_integration.rs (they
+// need `make artifacts` to have run); unit tests here cover only what is
+// artifact-independent.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let exe = Executor::cpu().unwrap();
+        assert!(!exe.platform().is_empty());
+        assert_eq!(exe.cached_count(), 0);
+    }
+}

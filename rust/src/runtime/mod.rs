@@ -1,0 +1,28 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers each (function, shape) pair to **HLO text** plus a
+//! golden `.testvec` file and records both in `artifacts/manifest.tsv`.
+//! This module is the request-path half:
+//!
+//! * [`artifact`] — manifest + golden-file parsing ([`ArtifactRegistry`],
+//!   [`TestVec`]).
+//! * [`tensor`] — a minimal dense f32 tensor used at the runtime
+//!   boundary.
+//! * [`executor`] — the PJRT CPU client wrapper ([`Executor`]): HLO text
+//!   → compile once → [`LoadedArtifact::run`] with zero Python anywhere.
+
+pub mod artifact;
+pub mod executor;
+pub mod tensor;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactRegistry, TestVec};
+pub use executor::{Executor, LoadedArtifact};
+pub use tensor::Tensor;
+
+/// Default artifact directory, overridable with `SDPA_ARTIFACTS`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("SDPA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

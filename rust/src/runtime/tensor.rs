@@ -1,0 +1,191 @@
+//! Minimal dense f32 tensor for the runtime boundary.
+//!
+//! The request path moves activations between the coordinator and PJRT;
+//! a full ndarray dependency is unnecessary (and unavailable offline),
+//! so this carries exactly what the system needs: shape + contiguous
+//! row-major f32 data.
+
+use crate::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from shape and data (validates element count).
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let expect: usize = dims.iter().product();
+        if expect != data.len() {
+            return Err(Error::Runtime(format!(
+                "tensor shape {dims:?} wants {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor {
+            dims,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Deterministic standard-normal tensor (for examples/benches).
+    pub fn randn(dims: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = crate::prng::SplitMix64::new(seed);
+        let n = dims.iter().product();
+        Tensor {
+            dims,
+            data: rng.normal_vec(n),
+        }
+    }
+
+    /// Shape.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Whether the tensor has zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat data view.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data view.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into flat data.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshaped(mut self, dims: Vec<usize>) -> Result<Tensor> {
+        let expect: usize = dims.iter().product();
+        if expect != self.data.len() {
+            return Err(Error::Runtime(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        self.dims = dims;
+        Ok(self)
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis (dynamic
+    /// batching). Returns an error on shape mismatch.
+    pub fn stack(items: &[Tensor]) -> Result<Tensor> {
+        let first = items
+            .first()
+            .ok_or_else(|| Error::Runtime("stack of zero tensors".into()))?;
+        let mut data = Vec::with_capacity(first.len() * items.len());
+        for t in items {
+            if t.dims != first.dims {
+                return Err(Error::Runtime(format!(
+                    "stack shape mismatch: {:?} vs {:?}",
+                    t.dims, first.dims
+                )));
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut dims = vec![items.len()];
+        dims.extend_from_slice(&first.dims);
+        Ok(Tensor { dims, data })
+    }
+
+    /// Split a leading-axis batch back into per-item tensors.
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        let (&b, rest) = self
+            .dims
+            .split_first()
+            .ok_or_else(|| Error::Runtime("unstack of rank-0 tensor".into()))?;
+        let chunk = rest.iter().product::<usize>();
+        Ok((0..b)
+            .map(|i| Tensor {
+                dims: rest.to_vec(),
+                data: self.data[i * chunk..(i + 1) * chunk].to_vec(),
+            })
+            .collect())
+    }
+
+    /// Max absolute difference vs another tensor (NaN if shapes differ).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        if self.dims != other.dims {
+            return f32::NAN;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::randn(vec![4, 3], 1);
+        let b = Tensor::randn(vec![4, 3], 2);
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.dims(), &[2, 4, 3]);
+        let parts = s.unstack().unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched_shapes() {
+        let a = Tensor::zeros(vec![2, 2]);
+        let b = Tensor::zeros(vec![2, 3]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+        assert!(Tensor::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(vec![2, 6]);
+        assert_eq!(t.clone().reshaped(vec![3, 4]).unwrap().dims(), &[3, 4]);
+        assert!(t.reshaped(vec![5, 5]).is_err());
+    }
+
+    #[test]
+    fn diff_detects_shape_mismatch_as_nan() {
+        let a = Tensor::zeros(vec![2]);
+        let b = Tensor::zeros(vec![3]);
+        assert!(a.max_abs_diff(&b).is_nan());
+        let c = Tensor::new(vec![2], vec![1.0, 0.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&c), 1.0);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(Tensor::randn(vec![8], 5), Tensor::randn(vec![8], 5));
+        assert_ne!(Tensor::randn(vec![8], 5), Tensor::randn(vec![8], 6));
+    }
+}

@@ -1,0 +1,338 @@
+//! Bounded FIFO channels with backpressure and occupancy accounting.
+//!
+//! A channel models the paper's FIFOs between configured hardware units.
+//! Its **capacity** is the knob every experiment sweeps: the paper's
+//! "short FIFOs" have depth 2, the naive implementation's "long FIFO" has
+//! depth N+2, and the full-throughput *baseline* sets every FIFO to
+//! [`Capacity::Unbounded`].
+//!
+//! Channels operate under two-phase cycle semantics driven by the engine:
+//! during a cycle, nodes *stage* pops and pushes against the state the
+//! channel had at the start of the cycle; at the end of the cycle the
+//! engine *commits* them. Consequences:
+//!
+//! * an element pushed at cycle *t* becomes visible to the consumer at
+//!   cycle *t+1* (one-cycle channel hop, like a pipeline register);
+//! * space freed by a pop at cycle *t* becomes usable at *t+1*;
+//! * results are independent of the order nodes are ticked in.
+
+use std::collections::VecDeque;
+
+use super::elem::Elem;
+
+/// Identifies a channel within one [`super::engine::Engine`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChannelId(pub(crate) usize);
+
+impl ChannelId {
+    /// Raw index (stable for the lifetime of the graph).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// FIFO depth configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Capacity {
+    /// At most this many elements buffered. Depth 0 is rejected by the
+    /// graph builder (a 0-depth channel can never transfer anything under
+    /// two-phase semantics).
+    Bounded(usize),
+    /// Infinite depth — the paper's peak-throughput baseline.
+    Unbounded,
+}
+
+impl Capacity {
+    /// Whether `occupancy` leaves room for one more element.
+    #[inline]
+    pub fn has_space(self, occupancy: usize) -> bool {
+        match self {
+            Capacity::Bounded(d) => occupancy < d,
+            Capacity::Unbounded => true,
+        }
+    }
+}
+
+/// Lifetime statistics for one channel.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChannelStats {
+    /// Maximum committed queue length observed, in elements.
+    pub peak_occupancy_elems: usize,
+    /// Maximum committed queue length observed, in machine words
+    /// (vectors count their full width). This is the paper's
+    /// "intermediate memory" figure of merit.
+    pub peak_occupancy_words: usize,
+    /// Total elements ever pushed.
+    pub total_pushes: u64,
+    /// Total elements ever popped.
+    pub total_pops: u64,
+    /// Cycles during which the channel was full at cycle start (producer
+    /// would have been backpressured had it tried to push).
+    pub full_cycles: u64,
+}
+
+/// A bounded FIFO with staged (two-phase) mutation.
+///
+/// Perf note (§Perf step 1): `stage_pop` physically removes the element
+/// (a move, not a clone); `staged_pops` only tracks how many slots are
+/// still *occupied* for capacity accounting until the end-of-cycle
+/// commit. This saves one `Elem` clone per transfer on the hot path.
+#[derive(Debug)]
+pub struct Channel {
+    name: String,
+    capacity: Capacity,
+    queue: VecDeque<Elem>,
+    /// Words currently buffered (kept incrementally; avoids O(len) scans).
+    queued_words: usize,
+    staged_pops: usize,
+    staged_pushes: Vec<Elem>,
+    stats: ChannelStats,
+}
+
+impl Channel {
+    /// Create a channel. Use [`super::graph::GraphBuilder`] in client
+    /// code; this is public for direct engine tests.
+    pub fn new(name: impl Into<String>, capacity: Capacity) -> Self {
+        Channel {
+            name: name.into(),
+            capacity,
+            queue: VecDeque::new(),
+            queued_words: 0,
+            staged_pops: 0,
+            staged_pushes: Vec::new(),
+            stats: ChannelStats::default(),
+        }
+    }
+
+    /// Channel name (for diagnostics and reports).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> Capacity {
+        self.capacity
+    }
+
+    /// Reconfigure the capacity. Only valid between runs (the graph
+    /// builder exposes this for FIFO-depth sweeps so the same graph can
+    /// be re-simulated under different configurations).
+    pub fn set_capacity(&mut self, capacity: Capacity) {
+        self.capacity = capacity;
+    }
+
+    /// Number of elements visible to a consumer this cycle (staged pops
+    /// already removed their elements physically).
+    #[inline]
+    pub fn available(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether a producer can stage one more push this cycle: capacity
+    /// minus committed occupancy minus pushes already staged. Staged
+    /// *pops* still occupy their slots (space appears next cycle), hence
+    /// the `+ staged_pops` term.
+    #[inline]
+    pub fn can_push(&self) -> bool {
+        self.capacity
+            .has_space(self.queue.len() + self.staged_pops + self.staged_pushes.len())
+    }
+
+    /// Peek the next `k`-th element (0 = front) among those visible this
+    /// cycle. Returns `None` past the visible window.
+    #[inline]
+    pub fn peek(&self, k: usize) -> Option<&Elem> {
+        self.queue.get(k)
+    }
+
+    /// Stage a pop of the front visible element (a move — the slot stays
+    /// occupied for capacity purposes until commit). Panics if none is
+    /// visible — nodes must check [`Self::available`] first.
+    #[inline]
+    pub fn stage_pop(&mut self) -> Elem {
+        let e = self.queue.pop_front().expect("stage_pop on empty channel");
+        self.queued_words -= e.words();
+        self.staged_pops += 1;
+        e
+    }
+
+    /// Stage a push. Panics if the channel has no space this cycle —
+    /// nodes must check [`Self::can_push`] first.
+    #[inline]
+    pub fn stage_push(&mut self, e: Elem) {
+        assert!(
+            self.can_push(),
+            "push staged on full channel '{}' (depth {:?})",
+            self.name,
+            self.capacity
+        );
+        self.staged_pushes.push(e);
+    }
+
+    /// Commit the cycle: release popped slots, land staged pushes,
+    /// update statistics. Returns `true` if anything changed (progress
+    /// signal for deadlock detection).
+    #[inline]
+    pub fn commit(&mut self) -> bool {
+        if self.staged_pops == 0 && self.staged_pushes.is_empty() {
+            // Idle fast path (§Perf step 3): most channels are untouched
+            // in most cycles; only the fullness counter can still tick.
+            if !self.capacity.has_space(self.queue.len()) {
+                self.stats.full_cycles += 1;
+            }
+            return false;
+        }
+        self.stats.total_pops += self.staged_pops as u64;
+        self.staged_pops = 0;
+        for e in self.staged_pushes.drain(..) {
+            self.queued_words += e.words();
+            self.stats.total_pushes += 1;
+            self.queue.push_back(e);
+        }
+        if self.queue.len() > self.stats.peak_occupancy_elems {
+            self.stats.peak_occupancy_elems = self.queue.len();
+        }
+        if self.queued_words > self.stats.peak_occupancy_words {
+            self.stats.peak_occupancy_words = self.queued_words;
+        }
+        if !self.capacity.has_space(self.queue.len()) {
+            self.stats.full_cycles += 1;
+        }
+        true
+    }
+
+    /// Committed occupancy (elements).
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether the committed queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Lifetime statistics.
+    pub fn stats(&self) -> &ChannelStats {
+        &self.stats
+    }
+
+    /// Reset dynamic state (queue + stats), keeping the configuration.
+    /// Used to re-run a graph after a capacity sweep step.
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.queued_words = 0;
+        self.staged_pops = 0;
+        self.staged_pushes.clear();
+        self.stats = ChannelStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: f32) -> Elem {
+        Elem::Scalar(v)
+    }
+
+    #[test]
+    fn push_not_visible_until_commit() {
+        let mut c = Channel::new("c", Capacity::Bounded(4));
+        c.stage_push(s(1.0));
+        assert_eq!(c.available(), 0, "same-cycle push must be invisible");
+        c.commit();
+        assert_eq!(c.available(), 1);
+        assert_eq!(c.peek(0), Some(&s(1.0)));
+    }
+
+    #[test]
+    fn pop_does_not_free_space_same_cycle() {
+        let mut c = Channel::new("c", Capacity::Bounded(1));
+        c.stage_push(s(1.0));
+        c.commit();
+        // Full. Stage the pop; space must not appear until commit.
+        let e = c.stage_pop();
+        assert_eq!(e, s(1.0));
+        assert!(!c.can_push(), "space freed by a pop is next-cycle space");
+        c.commit();
+        assert!(c.can_push());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut c = Channel::new("c", Capacity::Unbounded);
+        for i in 0..10 {
+            c.stage_push(s(i as f32));
+        }
+        c.commit();
+        for i in 0..10 {
+            assert_eq!(c.stage_pop(), s(i as f32));
+        }
+        c.commit();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn capacity_enforced_against_staged_pushes() {
+        let mut c = Channel::new("c", Capacity::Bounded(2));
+        c.stage_push(s(1.0));
+        c.stage_push(s(2.0));
+        assert!(!c.can_push(), "two staged pushes fill a depth-2 channel");
+    }
+
+    #[test]
+    #[should_panic(expected = "push staged on full channel")]
+    fn overfull_push_panics() {
+        let mut c = Channel::new("c", Capacity::Bounded(1));
+        c.stage_push(s(1.0));
+        c.stage_push(s(2.0));
+    }
+
+    #[test]
+    fn stats_track_peaks_in_words() {
+        let mut c = Channel::new("c", Capacity::Unbounded);
+        c.stage_push(Elem::vector(&[0.0; 16]));
+        c.stage_push(Elem::vector(&[0.0; 16]));
+        c.commit();
+        assert_eq!(c.stats().peak_occupancy_elems, 2);
+        assert_eq!(c.stats().peak_occupancy_words, 32);
+        c.stage_pop();
+        c.commit();
+        // Peak is a high-water mark; it must not decrease.
+        assert_eq!(c.stats().peak_occupancy_words, 32);
+        assert_eq!(c.stats().total_pops, 1);
+        assert_eq!(c.stats().total_pushes, 2);
+    }
+
+    #[test]
+    fn full_cycles_counted() {
+        let mut c = Channel::new("c", Capacity::Bounded(1));
+        c.stage_push(s(1.0));
+        c.commit(); // full from here on
+        c.commit();
+        c.commit();
+        assert_eq!(c.stats().full_cycles, 3);
+    }
+
+    #[test]
+    fn reset_clears_state_keeps_capacity() {
+        let mut c = Channel::new("c", Capacity::Bounded(3));
+        c.stage_push(s(1.0));
+        c.commit();
+        c.reset();
+        assert!(c.is_empty());
+        assert_eq!(c.stats(), &ChannelStats::default());
+        assert_eq!(c.capacity(), Capacity::Bounded(3));
+    }
+
+    #[test]
+    fn peek_respects_staged_pops() {
+        let mut c = Channel::new("c", Capacity::Unbounded);
+        c.stage_push(s(1.0));
+        c.stage_push(s(2.0));
+        c.commit();
+        c.stage_pop();
+        assert_eq!(c.peek(0), Some(&s(2.0)));
+        assert_eq!(c.peek(1), None);
+    }
+}

@@ -1,0 +1,210 @@
+//! The element type that flows through channels.
+//!
+//! The abstract hardware streams scalars (attention scores, softmax
+//! weights), vectors (rows of K/V, partial output rows — what the paper's
+//! `MemReduce` calls "memory elements"), and small tuples (the
+//! `(Δ, e)` pairs produced by the running-max `Scan` of Eq. 4).
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A stream element: scalar, vector (memory element), or tuple.
+///
+/// Vectors are reference-counted so `Broadcast` can fan one out to
+/// multiple consumers without copying the payload — mirroring how a
+/// spatial architecture would fan out a bus rather than duplicate SRAM.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Elem {
+    /// A scalar value (one word on the wire).
+    Scalar(f32),
+    /// A memory element: a `d`-wide vector (e.g. one row of V).
+    Vector(Arc<[f32]>),
+    /// A small tuple of elements travelling together on one channel.
+    Tuple(Arc<[Elem]>),
+    /// An inline scalar pair (e.g. `(Δ_ij, e_ij)` from the running-max
+    /// scan). Same semantics as a 2-tuple of scalars but allocation-free
+    /// — the memory-free graphs move N² of these (§Perf step 2).
+    Pair(f32, f32),
+}
+
+impl Elem {
+    /// Build a vector element from a slice.
+    pub fn vector(v: &[f32]) -> Self {
+        Elem::Vector(Arc::from(v))
+    }
+
+    /// Build a tuple element.
+    pub fn tuple(items: Vec<Elem>) -> Self {
+        Elem::Tuple(Arc::from(items))
+    }
+
+    /// Extract an inline pair.
+    #[inline]
+    pub fn pair(&self) -> (f32, f32) {
+        match self {
+            Elem::Pair(a, b) => (*a, *b),
+            other => panic!("expected Pair, got {}", other.kind()),
+        }
+    }
+
+    /// Extract a scalar, panicking with a descriptive message otherwise.
+    ///
+    /// Node closures use this; a mismatch is a graph-construction bug, not
+    /// a data-dependent runtime condition, so panicking is appropriate
+    /// (it is caught by tests immediately).
+    #[inline]
+    pub fn scalar(&self) -> f32 {
+        match self {
+            Elem::Scalar(s) => *s,
+            other => panic!("expected Scalar, got {}", other.kind()),
+        }
+    }
+
+    /// Extract a vector payload.
+    #[inline]
+    pub fn as_vector(&self) -> &[f32] {
+        match self {
+            Elem::Vector(v) => v,
+            other => panic!("expected Vector, got {}", other.kind()),
+        }
+    }
+
+    /// Extract tuple fields.
+    #[inline]
+    pub fn as_tuple(&self) -> &[Elem] {
+        match self {
+            Elem::Tuple(t) => t,
+            other => panic!("expected Tuple, got {}", other.kind()),
+        }
+    }
+
+    /// Short kind name for diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Elem::Scalar(_) => "Scalar",
+            Elem::Vector(_) => "Vector",
+            Elem::Tuple(_) => "Tuple",
+            Elem::Pair(..) => "Pair",
+        }
+    }
+
+    /// Number of machine words this element occupies in a FIFO slot.
+    ///
+    /// Used by occupancy accounting: a vector of width `d` buffered in a
+    /// FIFO costs `d` words of intermediate memory, which is what the
+    /// paper's O(N) / O(1) claims count.
+    #[inline]
+    pub fn words(&self) -> usize {
+        match self {
+            Elem::Scalar(_) => 1,
+            Elem::Vector(v) => v.len(),
+            Elem::Tuple(t) => t.iter().map(Elem::words).sum(),
+            Elem::Pair(..) => 2,
+        }
+    }
+}
+
+impl fmt::Display for Elem {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Elem::Scalar(s) => write!(f, "{s}"),
+            Elem::Vector(v) => {
+                if v.len() <= 4 {
+                    write!(f, "vec{v:?}")
+                } else {
+                    write!(f, "vec[{}; len={}]", v[0], v.len())
+                }
+            }
+            Elem::Tuple(t) => {
+                write!(f, "(")?;
+                for (i, e) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                write!(f, ")")
+            }
+            Elem::Pair(a, b) => write!(f, "({a}, {b})"),
+        }
+    }
+}
+
+impl From<f32> for Elem {
+    fn from(s: f32) -> Self {
+        Elem::Scalar(s)
+    }
+}
+
+impl From<Vec<f32>> for Elem {
+    fn from(v: Vec<f32>) -> Self {
+        Elem::Vector(Arc::from(v.into_boxed_slice()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let e = Elem::from(3.5f32);
+        assert_eq!(e.scalar(), 3.5);
+        assert_eq!(e.kind(), "Scalar");
+        assert_eq!(e.words(), 1);
+    }
+
+    #[test]
+    fn vector_roundtrip() {
+        let e = Elem::vector(&[1.0, 2.0, 3.0]);
+        assert_eq!(e.as_vector(), &[1.0, 2.0, 3.0]);
+        assert_eq!(e.words(), 3);
+    }
+
+    #[test]
+    fn tuple_words_are_recursive() {
+        let e = Elem::tuple(vec![Elem::Scalar(1.0), Elem::vector(&[0.0; 8])]);
+        assert_eq!(e.words(), 9);
+        assert_eq!(e.as_tuple().len(), 2);
+    }
+
+    #[test]
+    fn broadcast_clone_shares_vector_storage() {
+        let e = Elem::vector(&[1.0; 128]);
+        let f = e.clone();
+        match (&e, &f) {
+            (Elem::Vector(a), Elem::Vector(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Scalar")]
+    fn scalar_type_mismatch_panics() {
+        Elem::vector(&[1.0]).scalar();
+    }
+
+    #[test]
+    fn pair_is_inline_and_two_words() {
+        let e = Elem::Pair(1.0, 2.0);
+        assert_eq!(e.pair(), (1.0, 2.0));
+        assert_eq!(e.words(), 2);
+        assert_eq!(e.kind(), "Pair");
+        assert_eq!(format!("{e}"), "(1, 2)");
+        assert!(std::mem::size_of::<Elem>() <= 24, "Pair must stay inline");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Pair")]
+    fn pair_type_mismatch_panics() {
+        Elem::Scalar(1.0).pair();
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(format!("{}", Elem::Scalar(1.0)), "1");
+        assert!(format!("{}", Elem::vector(&[0.0; 9])).contains("len=9"));
+        let t = Elem::tuple(vec![Elem::Scalar(1.0), Elem::Scalar(2.0)]);
+        assert_eq!(format!("{t}"), "(1, 2)");
+    }
+}

@@ -1,0 +1,392 @@
+//! Graph construction with wiring validation.
+//!
+//! [`GraphBuilder`] accumulates channels and nodes, enforces that every
+//! channel has exactly one producer and one consumer (streaming dataflow
+//! wiring is point-to-point; fan-out is explicit via `Broadcast`), and
+//! produces an [`Engine`].
+
+use std::collections::HashMap;
+
+use super::channel::{Capacity, Channel, ChannelId};
+use super::elem::Elem;
+use super::engine::Engine;
+use super::node::Node;
+use super::nodes::{Broadcast, Map, MemReduce, Reduce, Repeat, Scan, Sink, SinkHandle, Source, Zip};
+use crate::{Error, Result};
+
+/// Identifies a node within one graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(pub(crate) usize);
+
+/// Incrementally builds a dataflow graph.
+pub struct GraphBuilder {
+    channels: Vec<Channel>,
+    channel_names: HashMap<String, ChannelId>,
+    producers: Vec<Option<String>>,
+    consumers: Vec<Option<String>>,
+    nodes: Vec<Box<dyn Node>>,
+    node_names: HashMap<String, NodeId>,
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GraphBuilder {
+    /// Empty graph.
+    pub fn new() -> Self {
+        GraphBuilder {
+            channels: Vec::new(),
+            channel_names: HashMap::new(),
+            producers: Vec::new(),
+            consumers: Vec::new(),
+            nodes: Vec::new(),
+            node_names: HashMap::new(),
+        }
+    }
+
+    /// Create a channel. Depth-0 bounded channels are rejected (they can
+    /// never transfer an element under two-phase semantics).
+    pub fn channel(&mut self, name: impl Into<String>, cap: Capacity) -> Result<ChannelId> {
+        let name = name.into();
+        if let Capacity::Bounded(0) = cap {
+            return Err(Error::Graph(format!("channel '{name}': depth 0 is invalid")));
+        }
+        if self.channel_names.contains_key(&name) {
+            return Err(Error::Graph(format!("duplicate channel name '{name}'")));
+        }
+        let id = ChannelId(self.channels.len());
+        self.channel_names.insert(name.clone(), id);
+        self.channels.push(Channel::new(name, cap));
+        self.producers.push(None);
+        self.consumers.push(None);
+        Ok(id)
+    }
+
+    /// A depth-2 channel — the paper's "short FIFO".
+    pub fn short_fifo(&mut self, name: impl Into<String>) -> Result<ChannelId> {
+        self.channel(name, Capacity::Bounded(2))
+    }
+
+    fn register(
+        &mut self,
+        name: &str,
+        inputs: &[ChannelId],
+        outputs: &[ChannelId],
+    ) -> Result<NodeId> {
+        if self.node_names.contains_key(name) {
+            return Err(Error::Graph(format!("duplicate node name '{name}'")));
+        }
+        for &c in inputs {
+            match &self.consumers[c.0] {
+                Some(prev) => {
+                    return Err(Error::Graph(format!(
+                        "channel '{}' already consumed by '{prev}' (also wired to '{name}')",
+                        self.channels[c.0].name()
+                    )))
+                }
+                slot @ None => {
+                    let _ = slot;
+                    self.consumers[c.0] = Some(name.to_string());
+                }
+            }
+        }
+        for &c in outputs {
+            match &self.producers[c.0] {
+                Some(prev) => {
+                    return Err(Error::Graph(format!(
+                        "channel '{}' already produced by '{prev}' (also wired to '{name}')",
+                        self.channels[c.0].name()
+                    )))
+                }
+                None => self.producers[c.0] = Some(name.to_string()),
+            }
+        }
+        let id = NodeId(self.nodes.len());
+        self.node_names.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    /// Register an externally constructed node with explicit port roles.
+    pub fn add_node(
+        &mut self,
+        node: Box<dyn Node>,
+        inputs: &[ChannelId],
+        outputs: &[ChannelId],
+    ) -> Result<NodeId> {
+        let name = node.name().to_string();
+        let id = self.register(&name, inputs, outputs)?;
+        self.nodes.push(node);
+        Ok(id)
+    }
+
+    // ---- Table-1 node helpers -------------------------------------------
+
+    /// `Map` (unit latency).
+    pub fn map(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        f: impl FnMut(&Elem) -> Elem + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(Box::new(Map::new(name, input, output, f)), &[input], &[output])
+    }
+
+    /// `Map` with explicit pipeline latency.
+    pub fn map_latency(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        latency: u64,
+        f: impl FnMut(&Elem) -> Elem + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(
+            Box::new(Map::with_latency(name, input, output, latency, f)),
+            &[input],
+            &[output],
+        )
+    }
+
+    /// Scalar `Reduce`.
+    pub fn reduce(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: f32,
+        f: impl FnMut(f32, f32) -> f32 + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(
+            Box::new(Reduce::new(name, input, output, n, init, f)),
+            &[input],
+            &[output],
+        )
+    }
+
+    /// "Last of every n elements" — a degenerate `Reduce` whose fold
+    /// keeps the newest element. Used to sample the final value of a
+    /// running scan.
+    pub fn last_of(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+    ) -> Result<NodeId> {
+        self.add_node(
+            Box::new(Reduce::new_elem(
+                name,
+                input,
+                output,
+                n,
+                Elem::Scalar(f32::NAN),
+                |_, x| x.clone(),
+            )),
+            &[input],
+            &[output],
+        )
+    }
+
+    /// `MemReduce` over vector elements.
+    pub fn mem_reduce(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: Vec<f32>,
+        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(
+            Box::new(MemReduce::new(name, input, output, n, init, f)),
+            &[input],
+            &[output],
+        )
+    }
+
+    /// `Repeat`.
+    pub fn repeat(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+    ) -> Result<NodeId> {
+        self.add_node(Box::new(Repeat::new(name, input, output, n)), &[input], &[output])
+    }
+
+    /// `Scan`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scan(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: Elem,
+        updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(
+            Box::new(Scan::new(name, input, output, n, init, updt, f)),
+            &[input],
+            &[output],
+        )
+    }
+
+    /// `Broadcast`.
+    pub fn broadcast(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        outputs: &[ChannelId],
+    ) -> Result<NodeId> {
+        self.add_node(Box::new(Broadcast::new(name, input, outputs)), &[input], outputs)
+    }
+
+    /// `Zip` with a combining function.
+    pub fn zip(
+        &mut self,
+        name: &str,
+        inputs: &[ChannelId],
+        output: ChannelId,
+        f: impl FnMut(&[Elem]) -> Elem + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(Box::new(Zip::new(name, inputs, output, f)), inputs, &[output])
+    }
+
+    /// `Source` from a materialised sequence.
+    pub fn source_vec(
+        &mut self,
+        name: &str,
+        output: ChannelId,
+        elems: Vec<Elem>,
+    ) -> Result<NodeId> {
+        self.add_node(Box::new(Source::from_vec(name, output, elems)), &[], &[output])
+    }
+
+    /// `Source` from a generator of `len` elements.
+    pub fn source_gen(
+        &mut self,
+        name: &str,
+        output: ChannelId,
+        len: u64,
+        f: impl FnMut(u64) -> Elem + 'static,
+    ) -> Result<NodeId> {
+        self.add_node(Box::new(Source::generator(name, output, len, f)), &[], &[output])
+    }
+
+    /// `Sink`; returns the handle to read results after the run.
+    pub fn sink(
+        &mut self,
+        name: &str,
+        input: ChannelId,
+        expected: Option<u64>,
+    ) -> Result<SinkHandle> {
+        let sink = Sink::new(name, input, expected);
+        let handle = sink.handle();
+        self.add_node(Box::new(sink), &[input], &[])?;
+        Ok(handle)
+    }
+
+    /// Validate wiring and produce an [`Engine`].
+    pub fn build(self) -> Result<Engine> {
+        for (i, ch) in self.channels.iter().enumerate() {
+            if self.producers[i].is_none() {
+                return Err(Error::Graph(format!("channel '{}' has no producer", ch.name())));
+            }
+            if self.consumers[i].is_none() {
+                return Err(Error::Graph(format!("channel '{}' has no consumer", ch.name())));
+            }
+        }
+        let topology: Vec<(Option<String>, Option<String>)> = self
+            .producers
+            .iter()
+            .cloned()
+            .zip(self.consumers.iter().cloned())
+            .collect();
+        Ok(Engine::new(
+            self.channels,
+            self.channel_names,
+            self.nodes,
+            topology,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_zero_depth_channel() {
+        let mut g = GraphBuilder::new();
+        assert!(matches!(
+            g.channel("c", Capacity::Bounded(0)),
+            Err(Error::Graph(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut g = GraphBuilder::new();
+        g.channel("c", Capacity::Bounded(2)).unwrap();
+        assert!(g.channel("c", Capacity::Bounded(2)).is_err());
+    }
+
+    #[test]
+    fn rejects_dangling_channel() {
+        let mut g = GraphBuilder::new();
+        let c = g.channel("c", Capacity::Bounded(2)).unwrap();
+        g.source_gen("src", c, 1, |_| Elem::Scalar(0.0)).unwrap();
+        // No consumer for c.
+        assert!(matches!(g.build(), Err(Error::Graph(msg)) if msg.contains("no consumer")));
+    }
+
+    #[test]
+    fn rejects_double_consumer() {
+        let mut g = GraphBuilder::new();
+        let c = g.channel("c", Capacity::Bounded(2)).unwrap();
+        let d = g.channel("d", Capacity::Bounded(2)).unwrap();
+        let e = g.channel("e", Capacity::Bounded(2)).unwrap();
+        g.source_gen("src", c, 1, |_| Elem::Scalar(0.0)).unwrap();
+        g.map("m1", c, d, |x| x.clone()).unwrap();
+        let err = g.map("m2", c, e, |x| x.clone());
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("already consumed")));
+    }
+
+    #[test]
+    fn dot_export_names_nodes_and_channels() {
+        let mut g = GraphBuilder::new();
+        let c = g.short_fifo("scores").unwrap();
+        let d = g.short_fifo("exps").unwrap();
+        g.source_gen("src", c, 4, |i| Elem::Scalar(i as f32)).unwrap();
+        g.map("exp", c, d, |x| Elem::Scalar(x.scalar().exp())).unwrap();
+        g.sink("sink", d, None).unwrap();
+        let engine = g.build().unwrap();
+        let dot = engine.to_dot();
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.contains("\"src\" -> \"exp\""));
+        assert!(dot.contains("scores"));
+        assert!(dot.contains("depth=2"));
+    }
+
+    #[test]
+    fn builds_minimal_pipeline() {
+        let mut g = GraphBuilder::new();
+        let c = g.short_fifo("c").unwrap();
+        let d = g.short_fifo("d").unwrap();
+        g.source_gen("src", c, 4, |i| Elem::Scalar(i as f32)).unwrap();
+        g.map("inc", c, d, |x| Elem::Scalar(x.scalar() + 1.0)).unwrap();
+        let h = g.sink("sink", d, Some(4)).unwrap();
+        let mut engine = g.build().unwrap();
+        let summary = engine.run(1_000).unwrap();
+        assert_eq!(h.scalars(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(summary.cycles > 0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Derived metrics: occupancy classification and throughput analysis.
+//!
+//! The paper's two headline measurements are (1) whether a finite-FIFO
+//! configuration matches the infinite-FIFO baseline's cycle count —
+//! "full throughput" — and (2) how peak intermediate memory grows with
+//! the sequence length N — O(N) for the naive mapping, O(1) for the
+//! memory-free one. This module provides the analysis helpers the
+//! experiment drivers and tests use to state those results.
+
+use super::engine::RunSummary;
+
+/// Growth class of peak occupancy as a function of N.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OccupancyClass {
+    /// Peak memory is (near-)independent of N — the paper's O(1).
+    Constant,
+    /// Peak memory grows ~linearly in N — the paper's O(N).
+    Linear,
+    /// Growth faster than linear (would indicate a mis-mapped graph).
+    Superlinear,
+}
+
+/// Classify `(n, peak_words)` samples by comparing growth against N.
+///
+/// Uses the ratio of peaks at the largest and smallest N against the
+/// ratio of the Ns themselves: constant if peak grows by less than 2×
+/// while N grows by ≥ 4×, superlinear if peak grows more than 2× faster
+/// than N, linear otherwise.
+pub fn classify_occupancy(samples: &[(usize, usize)]) -> OccupancyClass {
+    assert!(
+        samples.len() >= 2,
+        "need at least two (n, peak) samples to classify growth"
+    );
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let (n0, p0) = sorted[0];
+    let (n1, p1) = sorted[sorted.len() - 1];
+    assert!(n1 > n0, "samples must span distinct N");
+    let n_ratio = n1 as f64 / n0 as f64;
+    let p_ratio = p1.max(1) as f64 / p0.max(1) as f64;
+    if p_ratio < 2.0 {
+        OccupancyClass::Constant
+    } else if p_ratio > 2.0 * n_ratio {
+        OccupancyClass::Superlinear
+    } else {
+        OccupancyClass::Linear
+    }
+}
+
+/// Full structured metrics for one run.
+#[derive(Clone, Debug)]
+pub struct GraphMetrics {
+    /// Total cycles to quiescence.
+    pub cycles: u64,
+    /// Sum over channels of peak occupancy (words).
+    pub total_peak_words: usize,
+    /// The single largest per-channel peak (words), with channel name.
+    pub max_channel_peak: (String, usize),
+    /// Sum of firing counts over all nodes (≈ dynamic work).
+    pub total_fires: u64,
+    /// Cycles during which at least one channel was full (pressure
+    /// indicator, summed over channels).
+    pub total_full_cycles: u64,
+}
+
+impl GraphMetrics {
+    /// Extract metrics from a run summary.
+    pub fn from_summary(s: &RunSummary) -> Self {
+        let max_channel_peak = s
+            .channel_stats
+            .iter()
+            .max_by_key(|(_, st)| st.peak_occupancy_words)
+            .map(|(n, st)| (n.clone(), st.peak_occupancy_words))
+            .unwrap_or_else(|| ("<none>".to_string(), 0));
+        GraphMetrics {
+            cycles: s.cycles,
+            total_peak_words: s.total_peak_words(),
+            max_channel_peak,
+            total_fires: s.node_fires.iter().map(|(_, f)| f).sum(),
+            total_full_cycles: s.channel_stats.iter().map(|(_, st)| st.full_cycles).sum(),
+        }
+    }
+
+    /// Average node firings per cycle — a utilisation proxy.
+    pub fn fires_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.total_fires as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Whether `finite` achieved the paper's *full throughput* criterion
+/// relative to the `baseline` (all-FIFOs-unbounded) run: identical
+/// cycle counts.
+pub fn is_full_throughput(finite: &RunSummary, baseline: &RunSummary) -> bool {
+    finite.cycles == baseline.cycles
+}
+
+/// Relative slowdown of `finite` vs `baseline` (1.0 = full throughput).
+pub fn slowdown(finite: &RunSummary, baseline: &RunSummary) -> f64 {
+    finite.cycles as f64 / baseline.cycles.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::channel::ChannelStats;
+    use crate::sim::engine::{RunOutcome, RunSummary};
+
+    fn summary(cycles: u64, peaks: &[(&str, usize)]) -> RunSummary {
+        RunSummary {
+            cycles,
+            outcome: RunOutcome::Completed,
+            node_fires: vec![("n".into(), cycles)],
+            channel_stats: peaks
+                .iter()
+                .map(|(name, p)| {
+                    (
+                        name.to_string(),
+                        ChannelStats {
+                            peak_occupancy_elems: *p,
+                            peak_occupancy_words: *p,
+                            ..Default::default()
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn constant_growth_classified() {
+        let samples = [(16, 6), (64, 6), (256, 7), (1024, 7)];
+        assert_eq!(classify_occupancy(&samples), OccupancyClass::Constant);
+    }
+
+    #[test]
+    fn linear_growth_classified() {
+        let samples = [(16, 18), (64, 66), (256, 258), (1024, 1026)];
+        assert_eq!(classify_occupancy(&samples), OccupancyClass::Linear);
+    }
+
+    #[test]
+    fn quadratic_growth_classified_superlinear() {
+        let samples = [(16, 256), (64, 4096), (256, 65536)];
+        assert_eq!(classify_occupancy(&samples), OccupancyClass::Superlinear);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct N")]
+    fn classify_requires_distinct_n() {
+        classify_occupancy(&[(16, 1), (16, 2)]);
+    }
+
+    #[test]
+    fn full_throughput_comparison() {
+        let base = summary(100, &[("a", 3)]);
+        let same = summary(100, &[("a", 3)]);
+        let slower = summary(150, &[("a", 3)]);
+        assert!(is_full_throughput(&same, &base));
+        assert!(!is_full_throughput(&slower, &base));
+        assert!((slowdown(&slower, &base) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_extract_max_channel() {
+        let s = summary(10, &[("small", 2), ("long_fifo", 40)]);
+        let m = s.metrics();
+        assert_eq!(m.max_channel_peak, ("long_fifo".to_string(), 40));
+        assert_eq!(m.total_peak_words, 42);
+        assert!((m.fires_per_cycle() - 1.0).abs() < 1e-12);
+    }
+}

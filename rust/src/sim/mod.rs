@@ -1,0 +1,73 @@
+//! Cycle-accurate streaming dataflow abstract machine.
+//!
+//! This module is our from-scratch equivalent of the Dataflow Abstract
+//! Machine (DAM) simulator the paper builds on. It models the abstract
+//! hardware of the paper's §2:
+//!
+//! * **Channels** ([`channel`]) are bounded FIFOs with backpressure. A
+//!   node may only fire when every input channel holds an element *at the
+//!   start of the cycle* and every output channel has space *at the start
+//!   of the cycle* (two-phase commit — see [`engine`]). Per-channel peak
+//!   occupancy is tracked; it is the paper's "intermediate memory".
+//! * **Nodes** ([`node`], [`nodes`]) implement the Parallel-Pattern
+//!   vocabulary of the paper's Table 1 — `Map`, `Reduce`, `MemReduce`,
+//!   `Repeat`, `Scan` — plus the plumbing any spatial mapping needs
+//!   (`Source`, `Sink`, `Broadcast`, `Zip`). Every node has initiation
+//!   interval II = 1 and a configurable pipeline latency.
+//! * **The engine** ([`engine`]) steps all nodes one cycle at a time with
+//!   deterministic two-phase semantics, detects quiescence (done) and
+//!   deadlock (no progress with work outstanding), and collects
+//!   [`metrics`].
+//!
+//! The paper's experimental question — *does a finite-FIFO configuration
+//! run at full throughput?* — is answered by comparing total cycles
+//! against the same graph with every FIFO set to unbounded depth
+//! ([`Capacity::Unbounded`]).
+
+pub mod channel;
+pub mod elem;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod node;
+pub mod nodes;
+
+pub use channel::{Capacity, ChannelId, ChannelStats};
+pub use elem::Elem;
+pub use engine::{Engine, RunOutcome, RunSummary};
+pub use graph::{GraphBuilder, NodeId};
+pub use metrics::{GraphMetrics, OccupancyClass};
+pub use node::{Node, PortCtx};
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared single-node test harness with a persistent cycle counter
+    //! (pipe maturity depends on absolute cycles, so tests must not
+    //! restart the clock between drive calls).
+    use super::channel::Channel;
+    use super::node::{Node, PortCtx};
+
+    pub struct Clock {
+        pub now: u64,
+    }
+
+    impl Clock {
+        pub fn new() -> Self {
+            Clock { now: 0 }
+        }
+
+        /// Tick `node` then commit all channels, for `cycles` cycles.
+        pub fn drive(&mut self, node: &mut dyn Node, chans: &mut Vec<Channel>, cycles: u64) {
+            for _ in 0..cycles {
+                {
+                    let mut ctx = PortCtx::new(chans, self.now);
+                    node.tick(&mut ctx);
+                }
+                for c in chans.iter_mut() {
+                    c.commit();
+                }
+                self.now += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! The node abstraction: two-phase ticking, output pipelines, firing rules.
+//!
+//! Every hardware unit in the abstract machine is a [`Node`]. Once per
+//! cycle the engine calls [`Node::tick`], during which the node may
+//! *stage* pops from its input channels and *stage* pushes into its
+//! output channels via the [`PortCtx`]. All nodes observe channel state
+//! as of the start of the cycle, so tick order is irrelevant.
+//!
+//! ## Firing rule (II = 1)
+//!
+//! A node *fires* at most once per cycle, and only when
+//! 1. every input channel has an element visible this cycle,
+//! 2. every output pipeline has a free register (see below).
+//!
+//! ## Output pipelines ([`OutPipe`])
+//!
+//! Each output port carries a small delay line modelling the unit's
+//! pipeline registers. Firing at cycle `t` with latency `L` makes the
+//! result eligible to enter the output channel at cycle `t + L - 1`
+//! (plus the one-cycle channel hop from two-phase commit, so a
+//! latency-1 unit behaves like a single pipeline register). If the
+//! output channel is full, results wait in the delay line and the unit
+//! stalls once all `L` registers are occupied — exactly how a real
+//! pipeline backpressures.
+
+use std::collections::VecDeque;
+
+use super::channel::{Channel, ChannelId};
+use super::elem::Elem;
+
+/// Per-cycle view of the channel array handed to each node.
+pub struct PortCtx<'a> {
+    channels: &'a mut [Channel],
+    /// Current cycle number.
+    pub cycle: u64,
+}
+
+impl<'a> PortCtx<'a> {
+    /// Wrap the engine's channel array for one node's tick.
+    pub fn new(channels: &'a mut [Channel], cycle: u64) -> Self {
+        PortCtx { channels, cycle }
+    }
+
+    /// Elements visible on `id` this cycle.
+    #[inline]
+    pub fn available(&self, id: ChannelId) -> usize {
+        self.channels[id.0].available()
+    }
+
+    /// Whether `id` can accept a push this cycle.
+    #[inline]
+    pub fn can_push(&self, id: ChannelId) -> bool {
+        self.channels[id.0].can_push()
+    }
+
+    /// Stage a pop from `id` (caller must have checked availability).
+    #[inline]
+    pub fn pop(&mut self, id: ChannelId) -> Elem {
+        self.channels[id.0].stage_pop()
+    }
+
+    /// Stage a push into `id` (caller must have checked space).
+    #[inline]
+    pub fn push(&mut self, id: ChannelId, e: Elem) {
+        self.channels[id.0].stage_push(e)
+    }
+
+    /// Peek without popping.
+    #[inline]
+    pub fn peek(&self, id: ChannelId, k: usize) -> Option<&Elem> {
+        self.channels[id.0].peek(k)
+    }
+}
+
+/// What a node did during one tick — the engine aggregates these for
+/// progress/deadlock detection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TickReport {
+    /// The node fired (consumed inputs / produced a result) this cycle.
+    pub fired: bool,
+    /// The node holds results scheduled to mature at a *future* cycle
+    /// (pipeline registers still counting down). Not a deadlock even if
+    /// no channel commits this cycle.
+    pub waiting_on_time: bool,
+}
+
+impl TickReport {
+    /// Combine reports (for nodes with multiple internal pipes).
+    pub fn merge(self, other: TickReport) -> TickReport {
+        TickReport {
+            fired: self.fired || other.fired,
+            waiting_on_time: self.waiting_on_time || other.waiting_on_time,
+        }
+    }
+}
+
+/// A hardware unit in the abstract machine.
+pub trait Node {
+    /// Diagnostic name (unique within a graph; the builder enforces it).
+    fn name(&self) -> &str;
+
+    /// Advance one cycle: drain output pipelines, then fire if ready.
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport;
+
+    /// `true` once the node will never fire again *and* its pipelines are
+    /// empty. Sources report done when exhausted; stateless nodes are
+    /// done when their pipes are empty (the engine additionally requires
+    /// all channels empty for graph quiescence).
+    fn flushed(&self) -> bool;
+
+    /// Total number of firings so far (for metrics).
+    fn fires(&self) -> u64;
+
+    /// Describe why the node is blocked, for deadlock reports.
+    /// Returns `None` when the node is idle/done rather than blocked.
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        let _ = ctx;
+        None
+    }
+
+    /// Reset dynamic state for a re-run (capacity sweeps reuse graphs).
+    fn reset(&mut self);
+}
+
+/// A delay line modelling one output port's pipeline registers.
+///
+/// `latency` ≥ 1. A latency-1 pipe stages its element into the channel
+/// in the same cycle it was produced (the element then becomes visible
+/// next cycle via two-phase commit).
+#[derive(Debug)]
+pub struct OutPipe {
+    /// Destination channel.
+    pub channel: ChannelId,
+    latency: u64,
+    /// (ready_cycle, elem) in FIFO order.
+    slots: VecDeque<(u64, Elem)>,
+}
+
+impl OutPipe {
+    /// New pipe with the given latency (panics on latency 0).
+    pub fn new(channel: ChannelId, latency: u64) -> Self {
+        assert!(latency >= 1, "pipeline latency must be >= 1");
+        OutPipe {
+            channel,
+            latency,
+            slots: VecDeque::new(),
+        }
+    }
+
+    /// Configured latency.
+    pub fn latency(&self) -> u64 {
+        self.latency
+    }
+
+    /// Move matured results into the output channel while it has space.
+    /// Returns a report with `waiting_on_time` set if immature results
+    /// remain.
+    #[inline]
+    pub fn drain(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        if self.slots.is_empty() {
+            return TickReport::default();
+        }
+        while let Some((ready, _)) = self.slots.front() {
+            if *ready > ctx.cycle || !ctx.can_push(self.channel) {
+                break;
+            }
+            let (_, e) = self.slots.pop_front().unwrap();
+            ctx.push(self.channel, e);
+        }
+        TickReport {
+            fired: false,
+            waiting_on_time: self
+                .slots
+                .front()
+                .is_some_and(|(ready, _)| *ready > ctx.cycle),
+        }
+    }
+
+    /// Whether the pipe can accept a new result this cycle (a free
+    /// pipeline register).
+    #[inline]
+    pub fn has_room(&self) -> bool {
+        (self.slots.len() as u64) < self.latency
+    }
+
+    /// Enter a result produced by a firing at `now`.
+    #[inline]
+    pub fn send(&mut self, now: u64, e: Elem) {
+        debug_assert!(self.has_room(), "send on full pipe");
+        self.slots.push_back((now + self.latency - 1, e));
+    }
+
+    /// Whether any results are still in flight.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Number of in-flight results.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Clear in-flight state (for graph re-runs).
+    pub fn reset(&mut self) {
+        self.slots.clear();
+    }
+
+    /// Diagnostic description when blocked.
+    pub fn describe_blocked(&self) -> Option<String> {
+        if self.slots.is_empty() {
+            None
+        } else {
+            Some(format!(
+                "{} result(s) in flight toward ch#{}",
+                self.slots.len(),
+                self.channel.0
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::channel::Capacity;
+    use super::*;
+
+    fn harness(depth: usize) -> Vec<Channel> {
+        vec![Channel::new("out", Capacity::Bounded(depth))]
+    }
+
+    #[test]
+    fn latency_one_pipe_is_passthrough() {
+        let mut chans = harness(4);
+        let mut pipe = OutPipe::new(ChannelId(0), 1);
+        {
+            let mut ctx = PortCtx::new(&mut chans, 0);
+            assert!(pipe.has_room());
+            pipe.send(0, Elem::Scalar(1.0));
+            assert!(!pipe.has_room(), "single register now occupied");
+            pipe.drain(&mut ctx);
+            assert!(pipe.is_empty());
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].available(), 1);
+    }
+
+    #[test]
+    fn latency_three_delays_maturity() {
+        let mut chans = harness(4);
+        let mut pipe = OutPipe::new(ChannelId(0), 3);
+        // Fire at cycle 0 → matures at cycle 2.
+        {
+            let mut ctx = PortCtx::new(&mut chans, 0);
+            pipe.send(0, Elem::Scalar(7.0));
+            let r = pipe.drain(&mut ctx);
+            assert!(r.waiting_on_time);
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].len(), 0);
+        {
+            let mut ctx = PortCtx::new(&mut chans, 1);
+            let r = pipe.drain(&mut ctx);
+            assert!(r.waiting_on_time);
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].len(), 0);
+        {
+            let mut ctx = PortCtx::new(&mut chans, 2);
+            let r = pipe.drain(&mut ctx);
+            assert!(!r.waiting_on_time);
+            assert!(pipe.is_empty());
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].len(), 1);
+    }
+
+    #[test]
+    fn blocked_channel_backpressures_pipe() {
+        let mut chans = harness(1);
+        let mut pipe = OutPipe::new(ChannelId(0), 1);
+        {
+            let mut ctx = PortCtx::new(&mut chans, 0);
+            pipe.send(0, Elem::Scalar(1.0));
+            pipe.drain(&mut ctx);
+        }
+        chans[0].commit(); // channel now full
+        {
+            let mut ctx = PortCtx::new(&mut chans, 1);
+            pipe.send(1, Elem::Scalar(2.0));
+            let r = pipe.drain(&mut ctx);
+            // Mature but channel full: stays in the register, not a timer wait.
+            assert!(!r.waiting_on_time);
+            assert!(!pipe.has_room(), "register held by blocked result");
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].len(), 1, "no push while full");
+    }
+
+    #[test]
+    fn pipe_preserves_order_under_partial_drain() {
+        let mut chans = harness(1);
+        let mut pipe = OutPipe::new(ChannelId(0), 3);
+        {
+            let mut ctx = PortCtx::new(&mut chans, 0);
+            pipe.send(0, Elem::Scalar(1.0));
+            pipe.drain(&mut ctx);
+        }
+        {
+            let mut ctx = PortCtx::new(&mut chans, 1);
+            pipe.send(1, Elem::Scalar(2.0));
+            pipe.drain(&mut ctx);
+        }
+        // Cycle 2: first matures, channel has space → staged.
+        {
+            let mut ctx = PortCtx::new(&mut chans, 2);
+            pipe.drain(&mut ctx);
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].peek(0), Some(&Elem::Scalar(1.0)));
+        // Channel full; second matured at cycle 3 but must wait.
+        {
+            let mut ctx = PortCtx::new(&mut chans, 3);
+            let r = pipe.drain(&mut ctx);
+            assert!(!r.waiting_on_time);
+            assert_eq!(pipe.len(), 1);
+        }
+    }
+}

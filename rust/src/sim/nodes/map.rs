@@ -1,0 +1,194 @@
+//! `Map` — element-wise function application (Table 1, row 1).
+
+use crate::sim::channel::ChannelId;
+use crate::sim::elem::Elem;
+use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+
+/// Applies a function to every element in the input stream.
+///
+/// II = 1; pipeline latency configurable (e.g. a transcendental unit for
+/// `exp` may be given latency > 1 for latency-sensitivity ablations).
+pub struct Map {
+    name: String,
+    input: ChannelId,
+    pipe: OutPipe,
+    f: Box<dyn FnMut(&Elem) -> Elem>,
+    fires: u64,
+}
+
+impl Map {
+    /// Create a `Map` node with unit latency.
+    pub fn new(
+        name: impl Into<String>,
+        input: ChannelId,
+        output: ChannelId,
+        f: impl FnMut(&Elem) -> Elem + 'static,
+    ) -> Self {
+        Self::with_latency(name, input, output, 1, f)
+    }
+
+    /// Create a `Map` node with an explicit pipeline latency.
+    pub fn with_latency(
+        name: impl Into<String>,
+        input: ChannelId,
+        output: ChannelId,
+        latency: u64,
+        f: impl FnMut(&Elem) -> Elem + 'static,
+    ) -> Self {
+        Map {
+            name: name.into(),
+            input,
+            pipe: OutPipe::new(output, latency),
+            f: Box::new(f),
+            fires: 0,
+        }
+    }
+}
+
+impl Node for Map {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        let mut rep = self.pipe.drain(ctx);
+        if ctx.available(self.input) > 0 && self.pipe.has_room() {
+            let x = ctx.pop(self.input);
+            let y = (self.f)(&x);
+            self.pipe.send(ctx.cycle, y);
+            self.fires += 1;
+            rep.fired = true;
+            // A latency-1 result matures immediately: stage it this cycle.
+            rep = rep.merge(self.pipe.drain(ctx));
+        }
+        rep
+    }
+
+    fn flushed(&self) -> bool {
+        self.pipe.is_empty()
+    }
+
+    fn fires(&self) -> u64 {
+        self.fires
+    }
+
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+            Some(format!(
+                "input ready but output pipe blocked ({})",
+                self.pipe.describe_blocked().unwrap_or_default()
+            ))
+        } else {
+            self.pipe.describe_blocked()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.pipe.reset();
+        self.fires = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::testutil::Clock;
+    use crate::sim::channel::{Capacity, Channel};
+
+    /// Drive a single node for `cycles`, committing channels each cycle.
+    #[test]
+    fn maps_every_element_in_order() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        for i in 0..5 {
+            chans[0].stage_push(Elem::Scalar(i as f32));
+        }
+        chans[0].commit();
+        let mut m = Map::new("double", ChannelId(0), ChannelId(1), |e| {
+            Elem::Scalar(e.scalar() * 2.0)
+        });
+        clk.drive(&mut m, &mut chans, 8);
+        assert_eq!(m.fires(), 5);
+        for i in 0..5 {
+            assert_eq!(chans[1].stage_pop().scalar(), (i * 2) as f32);
+        }
+    }
+
+    #[test]
+    fn one_element_per_cycle() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        for i in 0..4 {
+            chans[0].stage_push(Elem::Scalar(i as f32));
+        }
+        chans[0].commit();
+        let mut m = Map::new("id", ChannelId(0), ChannelId(1), |e| e.clone());
+        clk.drive(&mut m, &mut chans, 2);
+        // Cycle 0 fires (visible after commit 0), cycle 1 fires.
+        assert_eq!(m.fires(), 2);
+        assert_eq!(chans[1].len(), 2);
+    }
+
+    #[test]
+    fn stalls_when_output_full_and_resumes() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Bounded(1)),
+        ];
+        for i in 0..3 {
+            chans[0].stage_push(Elem::Scalar(i as f32));
+        }
+        chans[0].commit();
+        let mut m = Map::new("id", ChannelId(0), ChannelId(1), |e| e.clone());
+        clk.drive(&mut m, &mut chans, 3);
+        // Depth-1 output: one element lands, the next is stuck in the
+        // pipe register, so at most 2 firings happened.
+        assert_eq!(chans[1].len(), 1);
+        assert!(m.fires() <= 2);
+        // Drain one and continue: progress resumes.
+        chans[1].stage_pop();
+        chans[1].commit();
+        clk.drive(&mut m, &mut chans, 6);
+        assert_eq!(m.fires(), 3);
+    }
+
+    #[test]
+    fn latency_three_defers_first_output() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        chans[0].stage_push(Elem::Scalar(1.0));
+        chans[0].commit();
+        let mut m = Map::with_latency("slow", ChannelId(0), ChannelId(1), 3, |e| e.clone());
+        // Fires at cycle 0; matures at cycle 2; visible at cycle 3.
+        clk.drive(&mut m, &mut chans, 2);
+        assert_eq!(chans[1].len(), 0);
+        clk.drive(&mut m, &mut chans, 1);
+        assert_eq!(chans[1].len(), 1);
+    }
+
+    #[test]
+    fn reset_clears_pipe_and_count() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Bounded(1)),
+        ];
+        chans[0].stage_push(Elem::Scalar(1.0));
+        chans[0].commit();
+        let mut m = Map::new("id", ChannelId(0), ChannelId(1), |e| e.clone());
+        clk.drive(&mut m, &mut chans, 1);
+        m.reset();
+        assert!(m.flushed());
+        assert_eq!(m.fires(), 0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Node implementations.
+//!
+//! The five Parallel-Pattern nodes of the paper's Table 1:
+//!
+//! | Node | Behaviour |
+//! |---|---|
+//! | [`Map`] | applies `f` to every element of the input stream |
+//! | [`Reduce`] | folds `n` input elements with `f`, emits one output |
+//! | [`MemReduce`] | higher-order reduction over memory (vector) elements |
+//! | [`Repeat`] | repeats every input element `n` times |
+//! | [`Scan`] | stateful element-wise pass; state resets every `n` elements |
+//!
+//! plus the plumbing every spatial mapping needs: [`Source`] (stream
+//! generator / DRAM reader), [`Sink`] (stream consumer / DRAM writer),
+//! [`Broadcast`] (one-to-many fan-out with atomic backpressure) and
+//! [`Zip`] (many-to-one element-wise combiner).
+
+mod broadcast;
+mod map;
+mod reduce;
+mod repeat;
+mod scan;
+mod sink;
+mod source;
+mod zip;
+
+pub use broadcast::Broadcast;
+pub use map::Map;
+pub use reduce::{MemReduce, Reduce};
+pub use repeat::Repeat;
+pub use scan::Scan;
+pub use sink::{Sink, SinkHandle};
+pub use source::Source;
+pub use zip::Zip;

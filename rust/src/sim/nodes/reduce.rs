@@ -1,0 +1,365 @@
+//! `Reduce` and `MemReduce` — n-element reductions (Table 1, rows 2–3).
+
+use crate::sim::channel::ChannelId;
+use crate::sim::elem::Elem;
+use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+
+/// Shared machinery for scalar and memory reductions.
+///
+/// Consumes one element per cycle; after folding `n` of them emits the
+/// accumulator and re-initialises. The output therefore appears `n`
+/// cycles after the first element of a group was consumed — this is the
+/// *latency imbalance* that forces the paper's long FIFOs on the bypass
+/// paths (§4).
+struct ReduceCore {
+    name: String,
+    input: ChannelId,
+    pipe: OutPipe,
+    n: usize,
+    init: Elem,
+    acc: Elem,
+    count: usize,
+    f: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+    fires: u64,
+}
+
+impl ReduceCore {
+    fn new(
+        name: String,
+        input: ChannelId,
+        output: ChannelId,
+        latency: u64,
+        n: usize,
+        init: Elem,
+        f: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+    ) -> Self {
+        assert!(n >= 1, "Reduce group size must be >= 1");
+        ReduceCore {
+            name,
+            input,
+            pipe: OutPipe::new(output, latency),
+            n,
+            acc: init.clone(),
+            init,
+            count: 0,
+            f,
+            fires: 0,
+        }
+    }
+
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        let mut rep = self.pipe.drain(ctx);
+        if ctx.available(self.input) == 0 {
+            return rep;
+        }
+        let emitting = self.count + 1 == self.n;
+        // Consuming the n-th element produces the result; that firing
+        // needs a free output register. Earlier elements accumulate
+        // without touching the output.
+        if emitting && !self.pipe.has_room() {
+            return rep;
+        }
+        let x = ctx.pop(self.input);
+        self.acc = (self.f)(&self.acc, &x);
+        self.count += 1;
+        self.fires += 1;
+        rep.fired = true;
+        if emitting {
+            let out = std::mem::replace(&mut self.acc, self.init.clone());
+            self.pipe.send(ctx.cycle, out);
+            self.count = 0;
+            // A latency-1 result matures immediately: stage it this cycle.
+            rep = rep.merge(self.pipe.drain(ctx));
+        }
+        rep
+    }
+
+    fn flushed(&self) -> bool {
+        self.count == 0 && self.pipe.is_empty()
+    }
+
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        if self.count > 0 && ctx.available(self.input) == 0 {
+            Some(format!(
+                "mid-reduction ({}/{} folded) with empty input",
+                self.count, self.n
+            ))
+        } else if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+            Some("result ready but output pipe blocked".into())
+        } else {
+            self.pipe.describe_blocked()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.acc = self.init.clone();
+        self.count = 0;
+        self.fires = 0;
+        self.pipe.reset();
+    }
+}
+
+/// Scalar reduction: `Reduce (n) (init) (f)`.
+pub struct Reduce {
+    core: ReduceCore,
+}
+
+impl Reduce {
+    /// New scalar reduction over groups of `n` with unit latency.
+    pub fn new(
+        name: impl Into<String>,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: f32,
+        f: impl FnMut(f32, f32) -> f32 + 'static,
+    ) -> Self {
+        let mut f = f;
+        Reduce {
+            core: ReduceCore::new(
+                name.into(),
+                input,
+                output,
+                1,
+                n,
+                Elem::Scalar(init),
+                Box::new(move |acc, x| Elem::Scalar(f(acc.scalar(), x.scalar()))),
+            ),
+        }
+    }
+
+    /// Generic-element reduction (used e.g. for "last of n": `f = |_, x| x`).
+    pub fn new_elem(
+        name: impl Into<String>,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: Elem,
+        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+    ) -> Self {
+        Reduce {
+            core: ReduceCore::new(name.into(), input, output, 1, n, init, Box::new(f)),
+        }
+    }
+}
+
+impl Node for Reduce {
+    fn name(&self) -> &str {
+        &self.core.name
+    }
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        self.core.tick(ctx)
+    }
+    fn flushed(&self) -> bool {
+        self.core.flushed()
+    }
+    fn fires(&self) -> u64 {
+        self.core.fires
+    }
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        self.core.blocked_reason(ctx)
+    }
+    fn reset(&mut self) {
+        self.core.reset()
+    }
+}
+
+/// Memory-element reduction: `MemReduce (n) (init: Mem[T]) (f)`.
+///
+/// Folds vector elements; used for `o⃗_i = Σ_j p_ij · v⃗_j` where the
+/// accumulator is a `d`-wide partial output row held in a memory unit.
+pub struct MemReduce {
+    core: ReduceCore,
+}
+
+impl MemReduce {
+    /// New vector reduction: `init` is the initial memory contents, `f`
+    /// folds the accumulator with each incoming element.
+    pub fn new(
+        name: impl Into<String>,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: Vec<f32>,
+        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
+    ) -> Self {
+        let name = name.into();
+        let mut f = f;
+        let node_name = name.clone();
+        MemReduce {
+            core: ReduceCore::new(
+                name,
+                input,
+                output,
+                1,
+                n,
+                Elem::from(init),
+                Box::new(move |acc, x| {
+                    let acc = match acc {
+                        Elem::Vector(v) => &v[..],
+                        other => panic!(
+                            "MemReduce '{node_name}' accumulator must be Vector, got {}",
+                            other.kind()
+                        ),
+                    };
+                    Elem::from(f(acc, x))
+                }),
+            ),
+        }
+    }
+}
+
+impl Node for MemReduce {
+    fn name(&self) -> &str {
+        &self.core.name
+    }
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        self.core.tick(ctx)
+    }
+    fn flushed(&self) -> bool {
+        self.core.flushed()
+    }
+    fn fires(&self) -> u64 {
+        self.core.fires
+    }
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        self.core.blocked_reason(ctx)
+    }
+    fn reset(&mut self) {
+        self.core.reset()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::testutil::Clock;
+    use crate::sim::channel::{Capacity, Channel};
+
+    fn io(n_in: usize) -> Vec<Channel> {
+        let mut v = vec![Channel::new("in", Capacity::Unbounded)];
+        for i in 0..n_in {
+            v[0].stage_push(Elem::Scalar(i as f32 + 1.0));
+        }
+        v[0].commit();
+        v.push(Channel::new("out", Capacity::Unbounded));
+        v
+    }
+
+    #[test]
+    fn sums_groups_of_n() {
+        let mut clk = Clock::new();
+        let mut chans = io(6);
+        let mut r = Reduce::new("sum", ChannelId(0), ChannelId(1), 3, 0.0, |a, b| a + b);
+        clk.drive(&mut r, &mut chans, 10);
+        // Groups (1,2,3) and (4,5,6).
+        assert_eq!(chans[1].stage_pop().scalar(), 6.0);
+        assert_eq!(chans[1].stage_pop().scalar(), 15.0);
+        assert!(r.flushed());
+    }
+
+    #[test]
+    fn emits_n_cycles_after_group_start() {
+        let mut clk = Clock::new();
+        let mut chans = io(4);
+        let mut r = Reduce::new("sum", ChannelId(0), ChannelId(1), 4, 0.0, |a, b| a + b);
+        // Consumes at cycles 0..3; output staged at 3, visible at 4.
+        clk.drive(&mut r, &mut chans, 4);
+        assert_eq!(chans[1].len(), 1, "one output after n cycles");
+        assert_eq!(chans[1].stage_pop().scalar(), 10.0);
+    }
+
+    #[test]
+    fn max_reduction_with_neg_inf_init() {
+        let mut clk = Clock::new();
+        let mut chans = vec![Channel::new("in", Capacity::Unbounded)];
+        for v in [3.0f32, -1.0, 7.0, 2.0] {
+            chans[0].stage_push(Elem::Scalar(v));
+        }
+        chans[0].commit();
+        chans.push(Channel::new("out", Capacity::Unbounded));
+        let mut r = Reduce::new(
+            "max",
+            ChannelId(0),
+            ChannelId(1),
+            4,
+            f32::NEG_INFINITY,
+            f32::max,
+        );
+        clk.drive(&mut r, &mut chans, 6);
+        assert_eq!(chans[1].stage_pop().scalar(), 7.0);
+    }
+
+    #[test]
+    fn last_of_n_via_generic_reduce() {
+        let mut clk = Clock::new();
+        let mut chans = io(6);
+        let mut r = Reduce::new_elem(
+            "last",
+            ChannelId(0),
+            ChannelId(1),
+            3,
+            Elem::Scalar(f32::NAN),
+            |_, x| x.clone(),
+        );
+        clk.drive(&mut r, &mut chans, 10);
+        assert_eq!(chans[1].stage_pop().scalar(), 3.0);
+        assert_eq!(chans[1].stage_pop().scalar(), 6.0);
+    }
+
+    #[test]
+    fn stalls_only_on_emitting_element_when_output_full() {
+        let mut clk = Clock::new();
+        let mut chans = io(6);
+        chans[1] = Channel::new("out", Capacity::Bounded(1));
+        let mut r = Reduce::new("sum", ChannelId(0), ChannelId(1), 3, 0.0, |a, b| a + b);
+        clk.drive(&mut r, &mut chans, 12);
+        // First group lands; second group's result is stuck in the pipe
+        // register (output channel full), third element of group 2 was
+        // still consumable.
+        assert_eq!(chans[1].len(), 1);
+        assert_eq!(chans[1].stage_pop().scalar(), 6.0);
+        chans[1].commit();
+        clk.drive(&mut r, &mut chans, 4);
+        assert_eq!(chans[1].stage_pop().scalar(), 15.0);
+    }
+
+    #[test]
+    fn mem_reduce_accumulates_vectors() {
+        let mut clk = Clock::new();
+        let mut chans = vec![Channel::new("in", Capacity::Unbounded)];
+        chans[0].stage_push(Elem::vector(&[1.0, 0.0]));
+        chans[0].stage_push(Elem::vector(&[0.0, 2.0]));
+        chans[0].stage_push(Elem::vector(&[1.0, 1.0]));
+        chans[0].commit();
+        chans.push(Channel::new("out", Capacity::Unbounded));
+        let mut r = MemReduce::new(
+            "vsum",
+            ChannelId(0),
+            ChannelId(1),
+            3,
+            vec![0.0, 0.0],
+            |acc, x| {
+                acc.iter()
+                    .zip(x.as_vector())
+                    .map(|(a, b)| a + b)
+                    .collect()
+            },
+        );
+        clk.drive(&mut r, &mut chans, 6);
+        assert_eq!(chans[1].stage_pop().as_vector(), &[2.0, 3.0]);
+        assert!(r.flushed());
+    }
+
+    #[test]
+    fn reset_reinitialises_accumulator() {
+        let mut clk = Clock::new();
+        let mut chans = io(2);
+        let mut r = Reduce::new("sum", ChannelId(0), ChannelId(1), 3, 0.0, |a, b| a + b);
+        clk.drive(&mut r, &mut chans, 2);
+        assert!(!r.flushed(), "mid-group");
+        r.reset();
+        assert!(r.flushed());
+        assert_eq!(r.fires(), 0);
+    }
+}

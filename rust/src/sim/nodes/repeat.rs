@@ -1,0 +1,194 @@
+//! `Repeat` — stream element replication (Table 1, row 4).
+
+use crate::sim::channel::ChannelId;
+use crate::sim::elem::Elem;
+use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+
+/// Repeats every element of the input stream `n` times.
+///
+/// Used to align a once-per-row value (e.g. the row softmax denominator
+/// `σ_i`, or a whole `q⃗_i` row) with a once-per-element stream: the
+/// repeated copies are consumed by an element-wise `Zip`/`Map` pair.
+/// Emits one element per cycle (II = 1), so repeating an element `n`
+/// times occupies the unit for `n` cycles.
+pub struct Repeat {
+    name: String,
+    input: ChannelId,
+    pipe: OutPipe,
+    n: usize,
+    /// Element currently being repeated + how many copies remain.
+    current: Option<(Elem, usize)>,
+    fires: u64,
+}
+
+impl Repeat {
+    /// New `Repeat` node (panics if `n == 0`).
+    pub fn new(name: impl Into<String>, input: ChannelId, output: ChannelId, n: usize) -> Self {
+        assert!(n >= 1, "Repeat count must be >= 1");
+        Repeat {
+            name: name.into(),
+            input,
+            pipe: OutPipe::new(output, 1),
+            n,
+            current: None,
+            fires: 0,
+        }
+    }
+}
+
+impl Node for Repeat {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        let mut rep = self.pipe.drain(ctx);
+        if !self.pipe.has_room() {
+            return rep;
+        }
+        // Acquire a new element if idle.
+        if self.current.is_none() && ctx.available(self.input) > 0 {
+            let e = ctx.pop(self.input);
+            self.current = Some((e, self.n));
+        }
+        if let Some((e, remaining)) = &mut self.current {
+            self.pipe.send(ctx.cycle, e.clone());
+            self.fires += 1;
+            rep.fired = true;
+            *remaining -= 1;
+            if *remaining == 0 {
+                self.current = None;
+            }
+            rep = rep.merge(self.pipe.drain(ctx));
+        }
+        rep
+    }
+
+    fn flushed(&self) -> bool {
+        self.current.is_none() && self.pipe.is_empty()
+    }
+
+    fn fires(&self) -> u64 {
+        self.fires
+    }
+
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        if self.current.is_some() && !self.pipe.has_room() {
+            Some("mid-repeat with output pipe blocked".into())
+        } else if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+            Some("input ready but output pipe blocked".into())
+        } else {
+            self.pipe.describe_blocked()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.current = None;
+        self.fires = 0;
+        self.pipe.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::testutil::Clock;
+    use crate::sim::channel::{Capacity, Channel};
+
+    #[test]
+    fn repeats_each_element_n_times() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        chans[0].stage_push(Elem::Scalar(1.0));
+        chans[0].stage_push(Elem::Scalar(2.0));
+        chans[0].commit();
+        let mut r = Repeat::new("rep3", ChannelId(0), ChannelId(1), 3);
+        clk.drive(&mut r, &mut chans, 8);
+        let got: Vec<f32> = (0..6).map(|_| chans[1].stage_pop().scalar()).collect();
+        assert_eq!(got, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        assert!(r.flushed());
+    }
+
+    #[test]
+    fn one_copy_per_cycle() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        chans[0].stage_push(Elem::Scalar(5.0));
+        chans[0].commit();
+        let mut r = Repeat::new("rep4", ChannelId(0), ChannelId(1), 4);
+        clk.drive(&mut r, &mut chans, 2);
+        assert_eq!(chans[1].len(), 2, "II=1: two copies after two cycles");
+    }
+
+    #[test]
+    fn repeat_one_is_identity() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        for i in 0..3 {
+            chans[0].stage_push(Elem::Scalar(i as f32));
+        }
+        chans[0].commit();
+        let mut r = Repeat::new("rep1", ChannelId(0), ChannelId(1), 1);
+        clk.drive(&mut r, &mut chans, 5);
+        for i in 0..3 {
+            assert_eq!(chans[1].stage_pop().scalar(), i as f32);
+        }
+    }
+
+    #[test]
+    fn backpressure_pauses_mid_repeat() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Bounded(1)),
+        ];
+        chans[0].stage_push(Elem::Scalar(9.0));
+        chans[0].commit();
+        let mut r = Repeat::new("rep3", ChannelId(0), ChannelId(1), 3);
+        clk.drive(&mut r, &mut chans, 4);
+        // Output depth 1 never drained: at most first copy landed plus
+        // one stuck in the register.
+        assert_eq!(chans[1].len(), 1);
+        // Drain continuously: all three copies eventually arrive.
+        let mut got = vec![chans[1].stage_pop().scalar()];
+        chans[1].commit();
+        for t in 4..12 {
+            {
+                let mut ctx = PortCtx::new(&mut chans, t);
+                r.tick(&mut ctx);
+            }
+            if chans[1].available() > 0 {
+                got.push(chans[1].stage_pop().scalar());
+            }
+            for c in chans.iter_mut() {
+                c.commit();
+            }
+        }
+        assert_eq!(got, vec![9.0, 9.0, 9.0]);
+        assert!(r.flushed());
+    }
+
+    #[test]
+    fn repeats_vectors_by_reference() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        chans[0].stage_push(Elem::vector(&[1.0, 2.0]));
+        chans[0].commit();
+        let mut r = Repeat::new("repv", ChannelId(0), ChannelId(1), 2);
+        clk.drive(&mut r, &mut chans, 4);
+        assert_eq!(chans[1].stage_pop().as_vector(), &[1.0, 2.0]);
+        assert_eq!(chans[1].stage_pop().as_vector(), &[1.0, 2.0]);
+    }
+}

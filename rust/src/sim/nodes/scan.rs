@@ -1,0 +1,259 @@
+//! `Scan` — stateful element-wise pass (Table 1, row 5).
+//!
+//! The key node for the paper's §4: converting row-wise reductions into
+//! element-wise scans is what eliminates the latency-unbalanced paths
+//! and hence the O(N) FIFOs.
+
+use crate::sim::channel::ChannelId;
+use crate::sim::elem::Elem;
+use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+
+/// `Scan (n) (init) (updt) (f)`.
+///
+/// On every input element the state is updated with `updt(state, x)`;
+/// then `f(state', x)` is emitted (where `state'` is the *post-update*
+/// state, so `f` sees the running value including the current element).
+/// After `n` elements the state re-initialises to `init` — one scan per
+/// attention row.
+///
+/// Because the running-max recurrence of Eq. 4 needs *both* the previous
+/// and the new max (`Δ_ij = e^{m_{i(j-1)} − m_ij}`), the state is a full
+/// [`Elem`] — pack whatever the recurrence needs into a tuple.
+pub struct Scan {
+    name: String,
+    input: ChannelId,
+    pipe: OutPipe,
+    n: usize,
+    init: Elem,
+    state: Elem,
+    count: usize,
+    updt: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+    f: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+    fires: u64,
+}
+
+impl Scan {
+    /// New `Scan` node with unit latency.
+    pub fn new(
+        name: impl Into<String>,
+        input: ChannelId,
+        output: ChannelId,
+        n: usize,
+        init: Elem,
+        updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+    ) -> Self {
+        assert!(n >= 1, "Scan group size must be >= 1");
+        Scan {
+            name: name.into(),
+            input,
+            pipe: OutPipe::new(output, 1),
+            n,
+            state: init.clone(),
+            init,
+            count: 0,
+            updt: Box::new(updt),
+            f: Box::new(f),
+            fires: 0,
+        }
+    }
+}
+
+impl Node for Scan {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        let mut rep = self.pipe.drain(ctx);
+        if ctx.available(self.input) == 0 || !self.pipe.has_room() {
+            return rep;
+        }
+        let x = ctx.pop(self.input);
+        self.state = (self.updt)(&self.state, &x);
+        let out = (self.f)(&self.state, &x);
+        self.pipe.send(ctx.cycle, out);
+        self.count += 1;
+        self.fires += 1;
+        rep.fired = true;
+        if self.count == self.n {
+            self.state = self.init.clone();
+            self.count = 0;
+        }
+        rep = rep.merge(self.pipe.drain(ctx));
+        rep
+    }
+
+    fn flushed(&self) -> bool {
+        self.count == 0 && self.pipe.is_empty()
+    }
+
+    fn fires(&self) -> u64 {
+        self.fires
+    }
+
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+            Some("input ready but output pipe blocked".into())
+        } else if self.count > 0 && ctx.available(self.input) == 0 {
+            Some(format!(
+                "mid-scan ({}/{} seen) with empty input",
+                self.count, self.n
+            ))
+        } else {
+            self.pipe.describe_blocked()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.state = self.init.clone();
+        self.count = 0;
+        self.fires = 0;
+        self.pipe.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::testutil::Clock;
+    use crate::sim::channel::{Capacity, Channel};
+
+    fn feed(vals: &[f32]) -> Vec<Channel> {
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        for &v in vals {
+            chans[0].stage_push(Elem::Scalar(v));
+        }
+        chans[0].commit();
+        chans
+    }
+
+    #[test]
+    fn running_sum_emits_every_cycle() {
+        let mut clk = Clock::new();
+        let mut chans = feed(&[1.0, 2.0, 3.0, 4.0]);
+        let mut s = Scan::new(
+            "runsum",
+            ChannelId(0),
+            ChannelId(1),
+            4,
+            Elem::Scalar(0.0),
+            |st, x| Elem::Scalar(st.scalar() + x.scalar()),
+            |st, _| st.clone(),
+        );
+        clk.drive(&mut s, &mut chans, 6);
+        let got: Vec<f32> = (0..4).map(|_| chans[1].stage_pop().scalar()).collect();
+        assert_eq!(got, vec![1.0, 3.0, 6.0, 10.0]);
+        assert!(s.flushed());
+    }
+
+    #[test]
+    fn state_resets_every_n() {
+        let mut clk = Clock::new();
+        let mut chans = feed(&[1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let mut s = Scan::new(
+            "runsum3",
+            ChannelId(0),
+            ChannelId(1),
+            3,
+            Elem::Scalar(0.0),
+            |st, x| Elem::Scalar(st.scalar() + x.scalar()),
+            |st, _| st.clone(),
+        );
+        clk.drive(&mut s, &mut chans, 8);
+        let got: Vec<f32> = (0..6).map(|_| chans[1].stage_pop().scalar()).collect();
+        assert_eq!(got, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn running_max_with_delta_rescale() {
+        let mut clk = Clock::new();
+        // The Eq. 4 recurrence: state = (m_prev, m); output = (Δ, e).
+        let mut chans = feed(&[2.0, 1.0, 3.0]);
+        let mut s = Scan::new(
+            "runmax",
+            ChannelId(0),
+            ChannelId(1),
+            3,
+            Elem::tuple(vec![
+                Elem::Scalar(f32::NEG_INFINITY),
+                Elem::Scalar(f32::NEG_INFINITY),
+            ]),
+            |st, x| {
+                let m_old = st.as_tuple()[1].scalar();
+                let m_new = m_old.max(x.scalar());
+                Elem::tuple(vec![Elem::Scalar(m_old), Elem::Scalar(m_new)])
+            },
+            |st, x| {
+                let (m_old, m_new) = (st.as_tuple()[0].scalar(), st.as_tuple()[1].scalar());
+                let delta = (m_old - m_new).exp(); // exp(-inf - m) = 0 first step
+                let e = (x.scalar() - m_new).exp();
+                Elem::tuple(vec![Elem::Scalar(delta), Elem::Scalar(e)])
+            },
+        );
+        clk.drive(&mut s, &mut chans, 5);
+        let o0 = chans[1].stage_pop();
+        let o1 = chans[1].stage_pop();
+        let o2 = chans[1].stage_pop();
+        // Step 0: Δ = exp(-inf−2) = 0, e = exp(0) = 1.
+        assert_eq!(o0.as_tuple()[0].scalar(), 0.0);
+        assert_eq!(o0.as_tuple()[1].scalar(), 1.0);
+        // Step 1: max unchanged → Δ = 1, e = exp(1−2).
+        assert_eq!(o1.as_tuple()[0].scalar(), 1.0);
+        assert!((o1.as_tuple()[1].scalar() - (-1.0f32).exp()).abs() < 1e-6);
+        // Step 2: max 2→3 → Δ = exp(−1), e = 1.
+        assert!((o2.as_tuple()[0].scalar() - (-1.0f32).exp()).abs() < 1e-6);
+        assert_eq!(o2.as_tuple()[1].scalar(), 1.0);
+    }
+
+    #[test]
+    fn scan_stalls_on_full_output() {
+        let mut clk = Clock::new();
+        let mut chans = feed(&[1.0, 2.0, 3.0]);
+        chans[1] = Channel::new("out", Capacity::Bounded(1));
+        let mut s = Scan::new(
+            "runsum",
+            ChannelId(0),
+            ChannelId(1),
+            3,
+            Elem::Scalar(0.0),
+            |st, x| Elem::Scalar(st.scalar() + x.scalar()),
+            |st, _| st.clone(),
+        );
+        clk.drive(&mut s, &mut chans, 6);
+        // Only the first output landed (plus one in the register).
+        assert!(s.fires() <= 2);
+        assert_eq!(chans[1].stage_pop().scalar(), 1.0);
+    }
+
+    #[test]
+    fn vector_state_scan() {
+        let mut clk = Clock::new();
+        // Running vector accumulate: l⃗ += x · v⃗ with fixed v⃗ = [1, 10].
+        let mut chans = feed(&[1.0, 2.0]);
+        let v = [1.0f32, 10.0];
+        let mut s = Scan::new(
+            "vacc",
+            ChannelId(0),
+            ChannelId(1),
+            2,
+            Elem::vector(&[0.0, 0.0]),
+            move |st, x| {
+                let acc = st.as_vector();
+                Elem::from(
+                    acc.iter()
+                        .zip(v.iter())
+                        .map(|(a, b)| a + x.scalar() * b)
+                        .collect::<Vec<_>>(),
+                )
+            },
+            |st, _| st.clone(),
+        );
+        clk.drive(&mut s, &mut chans, 4);
+        assert_eq!(chans[1].stage_pop().as_vector(), &[1.0, 10.0]);
+        assert_eq!(chans[1].stage_pop().as_vector(), &[3.0, 30.0]);
+    }
+}

@@ -1,0 +1,217 @@
+//! `Zip` — many-to-one element-wise combination.
+//!
+//! A `Zip` followed by a `Map` is how the abstract machine expresses
+//! element-wise binary operations between two streams (e.g. dividing the
+//! buffered `e_ij` stream by the repeated row sum `σ_i`). `Zip` is the
+//! node that *requires matched path latencies*: it pops one element from
+//! every input each firing, so if one path runs N cycles behind, the
+//! other path's elements must wait in a FIFO — the paper's §4 argument.
+
+use crate::sim::channel::ChannelId;
+use crate::sim::elem::Elem;
+use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+
+/// Combines one element from each input with `f` (II = 1).
+pub struct Zip {
+    name: String,
+    inputs: Vec<ChannelId>,
+    pipe: OutPipe,
+    f: Box<dyn FnMut(&[Elem]) -> Elem>,
+    /// Spill buffer for arity > 4 (rare).
+    overflow: Vec<Elem>,
+    fires: u64,
+}
+
+impl Zip {
+    /// New `Zip` applying `f` to one element from each input per firing.
+    pub fn new(
+        name: impl Into<String>,
+        inputs: &[ChannelId],
+        output: ChannelId,
+        f: impl FnMut(&[Elem]) -> Elem + 'static,
+    ) -> Self {
+        assert!(inputs.len() >= 2, "Zip needs at least two inputs");
+        Zip {
+            name: name.into(),
+            inputs: inputs.to_vec(),
+            pipe: OutPipe::new(output, 1),
+            f: Box::new(f),
+            overflow: Vec::new(),
+            fires: 0,
+        }
+    }
+
+    /// `Zip` that packs its inputs into a tuple (pure Table-1 style;
+    /// follow with a `Map` for the combining function).
+    pub fn tuple(name: impl Into<String>, inputs: &[ChannelId], output: ChannelId) -> Self {
+        Zip::new(name, inputs, output, |xs| Elem::tuple(xs.to_vec()))
+    }
+}
+
+impl Node for Zip {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
+        let mut rep = self.pipe.drain(ctx);
+        let ready = self.inputs.iter().all(|&c| ctx.available(c) > 0);
+        if ready && self.pipe.has_room() {
+            // Fixed arity ≤ 4 in practice: pop into a stack buffer to
+            // avoid a per-firing Vec allocation (§Perf step 3).
+            let mut buf: [Elem; 4] = [
+                Elem::Scalar(0.0),
+                Elem::Scalar(0.0),
+                Elem::Scalar(0.0),
+                Elem::Scalar(0.0),
+            ];
+            let xs: &[Elem] = if self.inputs.len() <= 4 {
+                for (slot, &c) in buf.iter_mut().zip(&self.inputs) {
+                    *slot = ctx.pop(c);
+                }
+                &buf[..self.inputs.len()]
+            } else {
+                self.overflow = self.inputs.iter().map(|&c| ctx.pop(c)).collect();
+                &self.overflow
+            };
+            let y = (self.f)(xs);
+            self.pipe.send(ctx.cycle, y);
+            self.fires += 1;
+            rep.fired = true;
+            rep = rep.merge(self.pipe.drain(ctx));
+        }
+        rep
+    }
+
+    fn flushed(&self) -> bool {
+        self.pipe.is_empty()
+    }
+
+    fn fires(&self) -> u64 {
+        self.fires
+    }
+
+    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+        let waiting: Vec<String> = self
+            .inputs
+            .iter()
+            .filter(|&&c| ctx.available(c) == 0)
+            .map(|c| format!("ch#{}", c.0))
+            .collect();
+        let any_input = self.inputs.iter().any(|&c| ctx.available(c) > 0);
+        if any_input && !waiting.is_empty() {
+            Some(format!("partial inputs; starving on {}", waiting.join(", ")))
+        } else if waiting.is_empty() && !self.pipe.has_room() {
+            Some("inputs ready but output pipe blocked".into())
+        } else {
+            self.pipe.describe_blocked()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.pipe.reset();
+        self.fires = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::testutil::Clock;
+    use crate::sim::channel::{Capacity, Channel};
+
+    #[test]
+    fn zips_pairwise_in_order() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("a", Capacity::Unbounded),
+            Channel::new("b", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        for i in 0..3 {
+            chans[0].stage_push(Elem::Scalar(i as f32));
+            chans[1].stage_push(Elem::Scalar(10.0 * i as f32));
+        }
+        chans[0].commit();
+        chans[1].commit();
+        let mut z = Zip::new(
+            "add",
+            &[ChannelId(0), ChannelId(1)],
+            ChannelId(2),
+            |xs| Elem::Scalar(xs[0].scalar() + xs[1].scalar()),
+        );
+        clk.drive(&mut z, &mut chans, 5);
+        let got: Vec<f32> = (0..3).map(|_| chans[2].stage_pop().scalar()).collect();
+        assert_eq!(got, vec![0.0, 11.0, 22.0]);
+    }
+
+    #[test]
+    fn waits_for_slow_input() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("a", Capacity::Unbounded),
+            Channel::new("b", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        chans[0].stage_push(Elem::Scalar(1.0));
+        chans[0].commit();
+        let mut z = Zip::tuple("z", &[ChannelId(0), ChannelId(1)], ChannelId(2));
+        clk.drive(&mut z, &mut chans, 3);
+        assert_eq!(z.fires(), 0, "must not fire with one input empty");
+        assert!(z
+            .blocked_reason(&PortCtx::new(&mut chans, 3))
+            .unwrap()
+            .contains("starving"));
+        chans[1].stage_push(Elem::Scalar(2.0));
+        chans[1].commit();
+        clk.drive(&mut z, &mut chans, 2);
+        assert_eq!(z.fires(), 1);
+        let t = chans[2].stage_pop();
+        assert_eq!(t.as_tuple()[0].scalar(), 1.0);
+        assert_eq!(t.as_tuple()[1].scalar(), 2.0);
+    }
+
+    #[test]
+    fn three_input_zip() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("a", Capacity::Unbounded),
+            Channel::new("b", Capacity::Unbounded),
+            Channel::new("c", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        for ch in 0..3 {
+            chans[ch].stage_push(Elem::Scalar(ch as f32 + 1.0));
+            chans[ch].commit();
+        }
+        let mut z = Zip::new(
+            "sum3",
+            &[ChannelId(0), ChannelId(1), ChannelId(2)],
+            ChannelId(3),
+            |xs| Elem::Scalar(xs.iter().map(Elem::scalar).sum()),
+        );
+        clk.drive(&mut z, &mut chans, 3);
+        assert_eq!(chans[3].stage_pop().scalar(), 6.0);
+    }
+
+    #[test]
+    fn mixed_scalar_vector_zip() {
+        let mut clk = Clock::new();
+        let mut chans = vec![
+            Channel::new("p", Capacity::Unbounded),
+            Channel::new("v", Capacity::Unbounded),
+            Channel::new("out", Capacity::Unbounded),
+        ];
+        chans[0].stage_push(Elem::Scalar(2.0));
+        chans[1].stage_push(Elem::vector(&[1.0, 3.0]));
+        chans[0].commit();
+        chans[1].commit();
+        // p_ij * v⃗_j — the weighted-value product feeding MemReduce.
+        let mut z = Zip::new("pv", &[ChannelId(0), ChannelId(1)], ChannelId(2), |xs| {
+            let p = xs[0].scalar();
+            Elem::from(xs[1].as_vector().iter().map(|v| p * v).collect::<Vec<_>>())
+        });
+        clk.drive(&mut z, &mut chans, 3);
+        assert_eq!(chans[2].stage_pop().as_vector(), &[2.0, 6.0]);
+    }
+}

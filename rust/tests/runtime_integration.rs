@@ -1,0 +1,153 @@
+//! Runtime integration: PJRT execution of real artifacts.
+//!
+//! These tests need `make artifacts` to have run; if the artifact
+//! directory is absent they print a notice and pass vacuously (so
+//! `cargo test` works on a fresh checkout, and `make test` — which
+//! builds artifacts first — exercises them fully).
+
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::runtime::{
+    default_artifact_dir, ArtifactKind, ArtifactRegistry, Executor, Tensor,
+};
+
+fn registry_or_skip(test: &str) -> Option<ArtifactRegistry> {
+    match ArtifactRegistry::load(default_artifact_dir()) {
+        Ok(r) => Some(r),
+        Err(_) => {
+            eprintln!("{test}: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn registry_lists_expected_artifact_kinds() {
+    let Some(reg) = registry_or_skip("registry_lists_expected_artifact_kinds") else {
+        return;
+    };
+    assert!(!reg.by_kind(ArtifactKind::Sdpa).is_empty());
+    assert!(!reg.by_kind(ArtifactKind::BatchedSdpa).is_empty());
+    assert!(!reg.by_kind(ArtifactKind::Model).is_empty());
+    for meta in reg.all() {
+        assert!(meta.hlo_path.exists(), "{} hlo missing", meta.name);
+        assert!(meta.testvec_path.exists(), "{} testvec missing", meta.name);
+        assert!(!meta.output_dims().unwrap().is_empty());
+    }
+}
+
+#[test]
+fn every_artifact_reproduces_its_golden_outputs() {
+    let Some(reg) = registry_or_skip("every_artifact_reproduces_its_golden_outputs") else {
+        return;
+    };
+    let mut executor = Executor::cpu().unwrap();
+    for meta in reg.all().to_vec() {
+        let tv = meta.testvec().unwrap();
+        assert_eq!(tv.name, meta.name);
+        let loaded = executor.load_cached(&meta).unwrap();
+        let inputs: Vec<Tensor> = tv.inputs.iter().map(|(_, t)| t.clone()).collect();
+        let got = loaded.run(&inputs).unwrap();
+        let err = got.max_abs_diff(&tv.outputs[0].1);
+        assert!(
+            err.is_finite() && err < 1e-4,
+            "{}: max|Δ|={err} vs golden",
+            meta.name
+        );
+    }
+}
+
+#[test]
+fn pjrt_attention_matches_rust_reference_on_fresh_inputs() {
+    // Cross-language check: the compiled Pallas kernel and the Rust f64
+    // reference must agree on inputs neither has seen at compile time.
+    let Some(reg) = registry_or_skip("pjrt_attention_matches_rust_reference") else {
+        return;
+    };
+    let Some(meta) = reg.by_name("sdpa_n64_d64") else {
+        eprintln!("sdpa_n64_d64 not in registry; skipping");
+        return;
+    };
+    let mut executor = Executor::cpu().unwrap();
+    let loaded = executor.load_cached(meta).unwrap();
+    for seed in [100u64, 200, 300] {
+        let w = Workload::random(64, 64, seed);
+        let flat = |rows: &Vec<Vec<f32>>| -> Tensor {
+            Tensor::new(vec![64, 64], rows.iter().flatten().copied().collect()).unwrap()
+        };
+        let got = loaded.run(&[flat(&w.q), flat(&w.k), flat(&w.v)]).unwrap();
+        let gold: Vec<f32> = sdpa_dataflow::attention::reference::sdpa_f64(&w)
+            .into_iter()
+            .flatten()
+            .collect();
+        let err = got
+            .data()
+            .iter()
+            .zip(&gold)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-4, "seed {seed}: max|Δ|={err}");
+    }
+}
+
+#[test]
+fn batched_artifact_equals_per_item_execution() {
+    let Some(reg) = registry_or_skip("batched_artifact_equals_per_item_execution") else {
+        return;
+    };
+    let (Some(single), Some(batched)) = (reg.by_name("sdpa_n64_d64"), reg.by_name("sdpa_b4_n64_d64"))
+    else {
+        eprintln!("needed artifacts missing; skipping");
+        return;
+    };
+    let mut executor = Executor::cpu().unwrap();
+    let qs: Vec<Tensor> = (0..4).map(|i| Tensor::randn(vec![64, 64], 10 + i)).collect();
+    let ks: Vec<Tensor> = (0..4).map(|i| Tensor::randn(vec![64, 64], 20 + i)).collect();
+    let vs: Vec<Tensor> = (0..4).map(|i| Tensor::randn(vec![64, 64], 30 + i)).collect();
+
+    let loaded_b = executor.load(batched).unwrap();
+    let out_b = loaded_b
+        .run(&[
+            Tensor::stack(&qs).unwrap(),
+            Tensor::stack(&ks).unwrap(),
+            Tensor::stack(&vs).unwrap(),
+        ])
+        .unwrap();
+    let per_item = out_b.unstack().unwrap();
+
+    let loaded_s = executor.load(single).unwrap();
+    for i in 0..4 {
+        let got = loaded_s
+            .run(&[qs[i].clone(), ks[i].clone(), vs[i].clone()])
+            .unwrap();
+        let err = got.max_abs_diff(&per_item[i]);
+        assert!(err < 1e-5, "batch item {i}: max|Δ|={err}");
+    }
+}
+
+#[test]
+fn executor_caches_compilations() {
+    let Some(reg) = registry_or_skip("executor_caches_compilations") else {
+        return;
+    };
+    let meta = reg.all()[0].clone();
+    let mut executor = Executor::cpu().unwrap();
+    assert_eq!(executor.cached_count(), 0);
+    let _ = executor.load_cached(&meta).unwrap();
+    assert_eq!(executor.cached_count(), 1);
+    let _ = executor.load_cached(&meta).unwrap();
+    assert_eq!(executor.cached_count(), 1, "second load hits the cache");
+}
+
+#[test]
+fn run_rejects_wrong_input_count() {
+    let Some(reg) = registry_or_skip("run_rejects_wrong_input_count") else {
+        return;
+    };
+    let Some(meta) = reg.by_name("sdpa_n64_d64") else {
+        return;
+    };
+    let mut executor = Executor::cpu().unwrap();
+    let loaded = executor.load_cached(meta).unwrap();
+    let q = Tensor::randn(vec![64, 64], 1);
+    assert!(loaded.run(&[q]).is_err(), "2 missing inputs must error");
+}

@@ -1,0 +1,176 @@
+//! Coordinator integration: the full serving loop over real artifacts.
+//!
+//! Skipped gracefully when `artifacts/` is absent (see
+//! runtime_integration.rs for the rationale).
+
+use std::collections::HashSet;
+
+use sdpa_dataflow::attention::reference::sdpa_f64;
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig};
+use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Tensor};
+
+fn server_or_skip(test: &str, max_batch: usize, max_wait_us: u64) -> Option<Server> {
+    let reg = match ArtifactRegistry::load(default_artifact_dir()) {
+        Ok(r) => r,
+        Err(_) => {
+            eprintln!("{test}: artifacts/ missing — run `make artifacts`; skipping");
+            return None;
+        }
+    };
+    Some(
+        Server::start(
+            reg,
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait_us,
+                },
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+fn wl_tensors(n: usize, d: usize, seed: u64) -> (Workload, Tensor, Tensor, Tensor) {
+    let w = Workload::random(n, d, seed);
+    let flat = |rows: &Vec<Vec<f32>>| {
+        Tensor::new(vec![n, d], rows.iter().flatten().copied().collect()).unwrap()
+    };
+    let (q, k, v) = (flat(&w.q), flat(&w.k), flat(&w.v));
+    (w, q, k, v)
+}
+
+fn check_response(w: &Workload, out: &Tensor) {
+    let gold: Vec<f32> = sdpa_f64(w).into_iter().flatten().collect();
+    let err = out
+        .data()
+        .iter()
+        .zip(&gold)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-4, "served result off by {err}");
+}
+
+#[test]
+fn serves_correct_results_under_batching() {
+    let Some(server) = server_or_skip("serves_correct_results_under_batching", 4, 500) else {
+        return;
+    };
+    let h = server.handle();
+    let mut pending = Vec::new();
+    for seed in 0..10u64 {
+        let (w, q, k, v) = wl_tensors(64, 64, seed);
+        let (id, rx) = h.submit(q, k, v).unwrap();
+        pending.push((id, w, rx));
+    }
+    let mut ids = HashSet::new();
+    for (id, w, rx) in pending {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert!(ids.insert(resp.id), "duplicate response id");
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+        check_response(&w, &resp.result.expect("ok result"));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_get_their_own_answers() {
+    let Some(server) = server_or_skip("concurrent_clients_all_get_their_own_answers", 8, 1_000)
+    else {
+        return;
+    };
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let h = server.handle();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..6u64 {
+                let (w, q, k, v) = wl_tensors(64, 64, c * 100 + i);
+                let resp = h.call(q, k, v).unwrap();
+                check_response(&w, &resp.result.expect("ok"));
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let h = server.handle();
+    h.with_stats(|s| {
+        assert_eq!(s.completed(), 24);
+        assert_eq!(s.errors(), 0);
+        assert!(s.latency_pct(0.95).unwrap() > 0);
+    });
+    server.shutdown();
+}
+
+#[test]
+fn unservable_shape_gets_error_not_hang() {
+    let Some(server) = server_or_skip("unservable_shape_gets_error_not_hang", 4, 200) else {
+        return;
+    };
+    let h = server.handle();
+    // 32x32 has no batched artifact in the default set.
+    let q = Tensor::randn(vec![32, 32], 1);
+    let k = Tensor::randn(vec![32, 32], 2);
+    let v = Tensor::randn(vec![32, 32], 3);
+    let resp = h.call(q, k, v).unwrap();
+    assert!(resp.result.is_err(), "expected routing error");
+    assert!(resp.result.unwrap_err().contains("no artifact"));
+    // Mismatched q/k/v shapes are rejected before batching.
+    let q = Tensor::randn(vec![64, 64], 1);
+    let k = Tensor::randn(vec![32, 64], 2);
+    let v = Tensor::randn(vec![32, 64], 3);
+    let resp = h.call(q, k, v).unwrap();
+    assert!(resp.result.unwrap_err().contains("mismatch"));
+    server.shutdown();
+}
+
+#[test]
+fn timeout_flush_serves_partial_batches() {
+    let Some(server) = server_or_skip("timeout_flush_serves_partial_batches", 64, 300) else {
+        return;
+    };
+    let h = server.handle();
+    // A single request can never fill max_batch=64; only the max-wait
+    // flush can serve it.
+    let (w, q, k, v) = wl_tensors(64, 64, 77);
+    let resp = h.call(q, k, v).unwrap();
+    assert!(resp.batch_size < 64);
+    check_response(&w, &resp.result.expect("ok"));
+    server.shutdown();
+}
+
+#[test]
+fn mixed_shape_classes_batched_separately() {
+    let Some(server) = server_or_skip("mixed_shape_classes_batched_separately", 4, 500) else {
+        return;
+    };
+    let h = server.handle();
+    let mut pending = Vec::new();
+    for seed in 0..4u64 {
+        let (w, q, k, v) = wl_tensors(64, 64, seed);
+        pending.push((w, h.submit(q, k, v).unwrap().1));
+        let (w, q, k, v) = wl_tensors(128, 64, seed);
+        pending.push((w, h.submit(q, k, v).unwrap().1));
+    }
+    for (w, rx) in pending {
+        let resp = rx.recv().unwrap();
+        check_response(&w, &resp.result.expect("ok"));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn submit_after_shutdown_errors() {
+    let Some(server) = server_or_skip("submit_after_shutdown_errors", 4, 200) else {
+        return;
+    };
+    let h = server.handle();
+    server.shutdown();
+    let q = Tensor::randn(vec![64, 64], 1);
+    let k = Tensor::randn(vec![64, 64], 2);
+    let v = Tensor::randn(vec![64, 64], 3);
+    assert!(h.submit(q, k, v).is_err());
+}

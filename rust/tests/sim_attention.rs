@@ -1,0 +1,202 @@
+//! Integration tests: full attention graphs on the simulator.
+//!
+//! These assert the paper's claims end-to-end (numerics + throughput +
+//! memory) across all variants and several sizes, plus engine-level
+//! properties (determinism, element conservation, monotonicity of
+//! finite-vs-infinite FIFO cycles) in property-test style.
+
+use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::prng::{for_each_case, SplitMix64};
+use sdpa_dataflow::sim::metrics::{is_full_throughput, slowdown};
+use sdpa_dataflow::sim::{Capacity, RunOutcome};
+
+#[test]
+fn all_variants_match_reference_across_sizes() {
+    for variant in Variant::ALL {
+        for (n, d) in [(4, 4), (8, 16), (16, 8), (32, 32)] {
+            let w = Workload::random(n, d, (n * 1000 + d) as u64);
+            let mut built = variant.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (got, _) = built.run().unwrap();
+            let err = max_abs_diff(&got, &sdpa_f64(&w));
+            assert!(
+                err < 1e-4,
+                "{variant} N={n} d={d}: max|Δ|={err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_configuration_is_full_throughput_everywhere() {
+    for variant in Variant::ALL {
+        for n in [8, 16, 32] {
+            let w = Workload::random(n, 8, 7);
+            let mut finite = variant.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (_, fs) = finite.run().unwrap();
+            let mut base = variant.build(&w, &FifoPlan::unbounded()).unwrap();
+            let (_, bs) = base.run().unwrap();
+            assert!(
+                is_full_throughput(&fs, &bs),
+                "{variant} N={n}: {} vs baseline {}",
+                fs.cycles,
+                bs.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn n_equals_one_edge_case() {
+    // A single token: softmax over one element ⇒ output = V row.
+    for variant in Variant::ALL {
+        let w = Workload::random(1, 4, 3);
+        let mut built = variant.build(&w, &FifoPlan::paper(1)).unwrap();
+        let (got, _) = built.run().unwrap();
+        for (a, b) in got[0].iter().zip(&w.v[0]) {
+            assert!((a - b).abs() < 1e-5, "{variant}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_reset_and_rebuild() {
+    let w = Workload::random(16, 8, 11);
+    let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(16)).unwrap();
+    let (out1, s1) = built.run().unwrap();
+    built.engine.reset();
+    let s2 = built.engine.run(100_000).unwrap();
+    assert_eq!(s1.cycles, s2.cycles, "reset re-run identical");
+    let mut rebuilt = Variant::MemoryFree.build(&w, &FifoPlan::paper(16)).unwrap();
+    let (out2, s3) = rebuilt.run().unwrap();
+    assert_eq!(s1.cycles, s3.cycles, "rebuild identical");
+    assert_eq!(out1, out2);
+}
+
+#[test]
+fn element_conservation_every_channel() {
+    // Pushes == pops on every channel once a run completes (no element
+    // is created or destroyed inside the fabric).
+    let w = Workload::random(16, 8, 13);
+    for variant in Variant::ALL {
+        let mut built = variant.build(&w, &FifoPlan::paper(16)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        for (name, st) in &summary.channel_stats {
+            assert_eq!(
+                st.total_pushes, st.total_pops,
+                "{variant}: channel '{name}' leaked elements"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_finite_fifos_never_faster_than_unbounded() {
+    for_each_case(0xBEEF, 12, |_case, rng: &mut SplitMix64| {
+        let n = *rng.choose(&[4usize, 8, 12, 16]);
+        let d = *rng.choose(&[2usize, 4, 8]);
+        let variant = *rng.choose(&Variant::ALL);
+        let depth = 2 + rng.below(2 * n as u64 + 4) as usize;
+        let w = Workload::random(n, d, rng.next_u64());
+        let mut base = variant.build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, bs) = base.run().unwrap();
+        let mut finite = variant.build(&w, &FifoPlan::with_long_depth(depth)).unwrap();
+        let fs = finite.run_outcome();
+        match fs.outcome {
+            RunOutcome::Completed => {
+                assert!(
+                    slowdown(&fs, &bs) >= 1.0 - 1e-9,
+                    "{variant} N={n} depth={depth}: finite faster than unbounded?"
+                );
+            }
+            RunOutcome::Deadlock { .. } => {
+                // Legal outcome for undersized long FIFOs; memfree never
+                // deadlocks (no long FIFO to undersize).
+                assert_ne!(variant, Variant::MemoryFree, "memfree must not deadlock");
+            }
+            RunOutcome::BudgetExceeded => panic!("budget exceeded at N={n}"),
+        }
+    });
+}
+
+#[test]
+fn property_memfree_constant_memory_for_random_shapes() {
+    for_each_case(0xF00D, 10, |_case, rng: &mut SplitMix64| {
+        let n = 4 + rng.below(40) as usize;
+        let d = 2 + rng.below(14) as usize;
+        let w = Workload::random(n, d, rng.next_u64());
+        let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "N={n} d={d}: channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
+    });
+}
+
+#[test]
+fn undersized_deadlock_names_the_guilty_channel() {
+    let w = Workload::random(16, 4, 5);
+    let mut built = Variant::Naive.build(&w, &FifoPlan::with_long_depth(4)).unwrap();
+    let s = built.run_outcome();
+    match s.outcome {
+        RunOutcome::Deadlock { detail } => {
+            assert!(
+                detail.contains("e_bypass"),
+                "deadlock detail should name the bypass FIFO: {detail}"
+            );
+        }
+        other => panic!("expected deadlock, got {other:?}"),
+    }
+}
+
+#[test]
+fn capacity_sweep_via_engine_reconfiguration() {
+    // Sweep without rebuilding: set_capacity + reset must agree with a
+    // fresh build at the same depth.
+    let w = Workload::random(12, 4, 17);
+    let mut built = Variant::Naive.build(&w, &FifoPlan::paper(12)).unwrap();
+    let (_, s_paper) = built.run().unwrap();
+
+    built.engine.reset();
+    built
+        .engine
+        .set_capacity("e_bypass", Capacity::Bounded(2))
+        .unwrap();
+    let s_shallow = built.engine.run_outcome(1_000_000);
+    assert!(matches!(s_shallow.outcome, RunOutcome::Deadlock { .. }));
+
+    built.engine.reset();
+    built
+        .engine
+        .set_capacity("e_bypass", Capacity::Bounded(14))
+        .unwrap();
+    let s_back = built.engine.run_outcome(1_000_000);
+    assert_eq!(s_back.outcome, RunOutcome::Completed);
+    assert_eq!(s_back.cycles, s_paper.cycles);
+}
+
+#[test]
+fn throughput_gap_between_deadlock_and_full() {
+    // Depths between deadlock and N+2 may complete slower — if they
+    // complete, slowdown must be ≥ 1 and the N+2 row exactly 1.
+    let n = 16;
+    let w = Workload::random(n, 4, 19);
+    let mut base = Variant::Naive.build(&w, &FifoPlan::unbounded()).unwrap();
+    let (_, bs) = base.run().unwrap();
+    for depth in [n, n + 1, n + 2] {
+        let mut built = Variant::Naive.build(&w, &FifoPlan::with_long_depth(depth)).unwrap();
+        let s = built.run_outcome();
+        if let RunOutcome::Completed = s.outcome {
+            let slow = slowdown(&s, &bs);
+            assert!(slow >= 1.0 - 1e-9);
+            if depth == n + 2 {
+                assert!((slow - 1.0).abs() < 1e-9, "N+2 must be full throughput");
+            }
+        }
+    }
+}
