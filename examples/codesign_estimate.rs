@@ -22,17 +22,17 @@ use sdpa_dataflow::cli::Args;
 use sdpa_dataflow::report::{fmt_f, Table};
 use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, Tensor};
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(false, &[]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let n: usize = args.get_parsed_or("n", 64).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(false, &[]).map_err(|e| e.to_string())?;
+    let n: usize = args.get_parsed_or("n", 64).map_err(|e| e.to_string())?;
     let d = 64usize;
 
     // --- (a) streaming dataflow, cycle-accurate -------------------------
     let w = Workload::random(n, d, 9);
     let mut built = Variant::MemoryFree
         .build(&w, &FifoPlan::paper(n))
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let (_, summary) = built.run().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        .map_err(|e| e.to_string())?;
+    let (_, summary) = built.run().map_err(|e| e.to_string())?;
     let m = summary.metrics();
 
     // A modest CGRA-class fabric clock for the estimate.
@@ -41,25 +41,25 @@ fn main() -> anyhow::Result<()> {
 
     // --- (b) processor path: compiled Pallas artifact on PJRT -----------
     let registry = ArtifactRegistry::load(default_artifact_dir())
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
     let name = format!("sdpa_n{n}_d{d}");
     let meta = registry
         .by_name(&name)
-        .ok_or_else(|| anyhow::anyhow!("no artifact '{name}' (sizes: 64/128/256 at d=64)"))?;
-    let mut executor = Executor::cpu().map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let loaded = executor.load_cached(meta).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        .ok_or_else(|| format!("no artifact '{name}' (sizes: 64/128/256 at d=64)"))?;
+    let mut executor = Executor::cpu().map_err(|e| e.to_string())?;
+    let loaded = executor.load_cached(meta).map_err(|e| e.to_string())?;
 
     let q = Tensor::randn(vec![n, d], 1);
     let k = Tensor::randn(vec![n, d], 2);
     let v = Tensor::randn(vec![n, d], 3);
     // Warm up, then time.
-    let _ = loaded.run(&[q.clone(), k.clone(), v.clone()]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let _ = loaded.run(&[q.clone(), k.clone(), v.clone()]).map_err(|e| e.to_string())?;
     let reps = 20;
     let t0 = Instant::now();
     for _ in 0..reps {
         let _ = loaded
             .run(&[q.clone(), k.clone(), v.clone()])
-            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            .map_err(|e| e.to_string())?;
     }
     let pjrt_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
 

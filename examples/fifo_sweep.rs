@@ -11,10 +11,10 @@ use sdpa_dataflow::cli::Args;
 use sdpa_dataflow::experiments::fifo_sweep;
 use sdpa_dataflow::report::Table;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(false, &[]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let n: usize = args.get_parsed_or("n", 64).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let d: usize = args.get_parsed_or("d", 16).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(false, &[]).map_err(|e| e.to_string())?;
+    let n: usize = args.get_parsed_or("n", 64).map_err(|e| e.to_string())?;
+    let d: usize = args.get_parsed_or("d", 16).map_err(|e| e.to_string())?;
 
     let mut summary = Table::new(
         format!("Summary: minimum long-FIFO depth for full throughput (N={n})"),
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     );
     for variant in Variant::ALL {
         let result =
-            fifo_sweep::run(variant, n, d).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            fifo_sweep::run(variant, n, d).map_err(|e| e.to_string())?;
         result.table().print();
         println!();
         let min = result

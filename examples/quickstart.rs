@@ -1,6 +1,12 @@
-//! Quickstart: map the paper's memory-free attention (Figure 3c) onto the
-//! abstract streaming dataflow machine, run it cycle-accurately, and
+//! Quickstart: map the paper's attention graphs onto the abstract
+//! streaming dataflow machine with the port-based builder, let the
+//! compile stage infer every FIFO depth, run cycle-accurately, and
 //! check the numbers against the f64 reference.
+//!
+//! No channel is named and no depth is chosen anywhere in this file:
+//! `DepthPolicy::Inferred` derives the paper's configuration — depth 2
+//! everywhere for the memory-free graph (Fig. 3c), and the N+2 bypass
+//! for the naive graph (Fig. 2).
 //!
 //! ```bash
 //! cargo run --release --example quickstart -- [--n 64] [--d 32]
@@ -8,50 +14,91 @@
 
 use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64};
 use sdpa_dataflow::attention::workload::Workload;
-use sdpa_dataflow::attention::{FifoPlan, Variant};
+use sdpa_dataflow::attention::{DepthPolicy, Variant};
 use sdpa_dataflow::cli::Args;
 use sdpa_dataflow::report::Table;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(false, &[]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let n: usize = args.get_parsed_or("n", 64).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let d: usize = args.get_parsed_or("d", 32).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(false, &[]).map_err(|e| e.to_string())?;
+    let n: usize = args.get_parsed_or("n", 64).map_err(|e| e.to_string())?;
+    let d: usize = args.get_parsed_or("d", 32).map_err(|e| e.to_string())?;
 
     println!("== sdpa-dataflow quickstart ==");
     println!("workload: N={n} tokens, d={d} head dim, seed=42\n");
     let w = Workload::random(n, d, 42);
 
-    // 1. The paper's headline configuration: every FIFO depth 2.
+    // 1. The paper's headline graph with compile-time inferred depths
+    //    (every FIFO comes out at depth 2: the O(1)-memory claim).
     let mut memfree = Variant::MemoryFree
-        .build(&w, &FifoPlan::paper(n))
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let (out, summary) = memfree.run().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        .build_with_policy(&w, DepthPolicy::Inferred)
+        .map_err(|e| e.to_string())?;
+    let (out, summary) = memfree.run().map_err(|e| e.to_string())?;
 
     // 2. The peak-throughput baseline: unbounded FIFOs.
     let mut baseline = Variant::MemoryFree
-        .build(&w, &FifoPlan::unbounded())
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let (_, base_summary) = baseline.run().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        .build_with_policy(&w, DepthPolicy::Unbounded)
+        .map_err(|e| e.to_string())?;
+    let (_, base_summary) = baseline.run().map_err(|e| e.to_string())?;
 
     let m = summary.metrics();
-    let mut t = Table::new("memory-free attention (Fig. 3c), all FIFOs depth 2", &["metric", "value"]);
+    let deepest_inferred = summary.depths.iter().map(|c| c.inferred).max().unwrap_or(0);
+    let mut t = Table::new(
+        "memory-free attention (Fig. 3c), all FIFO depths inferred",
+        &["metric", "value"],
+    );
     t.row(&["cycles".into(), summary.cycles.to_string()]);
-    t.row(&["baseline cycles (unbounded FIFOs)".into(), base_summary.cycles.to_string()]);
+    t.row(&[
+        "baseline cycles (unbounded FIFOs)".into(),
+        base_summary.cycles.to_string(),
+    ]);
     t.row(&[
         "full throughput?".into(),
-        if summary.cycles == base_summary.cycles { "YES".into() } else { "no".into() },
+        if summary.cycles == base_summary.cycles {
+            "YES".into()
+        } else {
+            "no".into()
+        },
+    ]);
+    t.row(&[
+        "deepest inferred FIFO".into(),
+        format!("{deepest_inferred} (O(1): no long FIFO exists)"),
     ]);
     t.row(&["peak FIFO words (total)".into(), m.total_peak_words.to_string()]);
     t.row(&[
-        "deepest channel".into(),
+        "deepest channel at runtime".into(),
         format!("{} ({} words)", m.max_channel_peak.0, m.max_channel_peak.1),
     ]);
     t.print();
 
+    // 3. Contrast: the naive graph (Fig. 2) needs one long FIFO — the
+    //    compile stage derives the paper's N+2 without being told.
+    let naive = Variant::Naive
+        .build_with_policy(&w, DepthPolicy::Inferred)
+        .map_err(|e| e.to_string())?;
+    let bypass = naive
+        .engine
+        .depth_report()
+        .iter()
+        .find(|c| c.is_long)
+        .ok_or("naive graph should have a long FIFO")?;
+    println!(
+        "\nnaive (Fig. 2) contrast: compile() infers '{}' at depth {} = N+2 = {}",
+        bypass.name,
+        bypass.inferred,
+        n + 2
+    );
+    if bypass.inferred != n + 2 {
+        return Err("inferred naive bypass depth should be N+2".into());
+    }
+
     let err = max_abs_diff(&out, &sdpa_f64(&w));
-    println!("\nmax |Δ| vs f64 reference: {err:.3e}");
-    anyhow::ensure!(err < 1e-4, "numeric check failed");
-    anyhow::ensure!(summary.cycles == base_summary.cycles, "not full throughput");
-    println!("quickstart OK: O(1) intermediate memory at full throughput");
+    println!("max |Δ| vs f64 reference: {err:.3e}");
+    if err >= 1e-4 {
+        return Err("numeric check failed".into());
+    }
+    if summary.cycles != base_summary.cycles {
+        return Err("not full throughput".into());
+    }
+    println!("quickstart OK: O(1) intermediate memory at full throughput, depths inferred");
     Ok(())
 }

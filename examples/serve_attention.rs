@@ -27,16 +27,16 @@ fn tensor_from_rows(rows: &[Vec<f32>]) -> Tensor {
     Tensor::new(dims, data).expect("consistent rows")
 }
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(false, &[]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let requests: usize = args.get_parsed_or("requests", 256).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let clients: usize = args.get_parsed_or("clients", 4).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let batch: usize = args.get_parsed_or("batch", 8).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let wait_us: u64 = args.get_parsed_or("wait-us", 2_000).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(false, &[]).map_err(|e| e.to_string())?;
+    let requests: usize = args.get_parsed_or("requests", 256).map_err(|e| e.to_string())?;
+    let clients: usize = args.get_parsed_or("clients", 4).map_err(|e| e.to_string())?;
+    let batch: usize = args.get_parsed_or("batch", 8).map_err(|e| e.to_string())?;
+    let wait_us: u64 = args.get_parsed_or("wait-us", 2_000).map_err(|e| e.to_string())?;
     let (n, d) = (64usize, 64usize);
 
     let registry = ArtifactRegistry::load(default_artifact_dir())
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
     println!(
         "== serve_attention: {requests} requests x {clients} client threads, shape {n}x{d} =="
     );
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
             ..ServerConfig::default()
         },
     )
-    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    .map_err(|e| e.to_string())?;
 
     // Warm up (compiles the artifact; excluded from the timed window).
     let h = server.handle();
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
             tensor_from_rows(&w0.k),
             tensor_from_rows(&w0.v),
         )
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        .map_err(|e| e.to_string())?;
 
     let started = Instant::now();
     let per_client = requests / clients;
@@ -103,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     let mut total_ok = 0;
     let mut worst = 0.0f32;
     for j in joins {
-        let (ok, w) = j.join().expect("client").map_err(|e| anyhow::anyhow!(e))?;
+        let (ok, w) = j.join().expect("client").map_err(|e| e.to_string())?;
         total_ok += ok;
         worst = worst.max(w);
     }
@@ -120,7 +120,9 @@ fn main() -> anyhow::Result<()> {
     t.print();
     println!("server stats: {}", h.stats_summary());
     server.shutdown();
-    anyhow::ensure!(total_ok == per_client * clients, "validation failures");
+    if total_ok != per_client * clients {
+        return Err("validation failures".into());
+    }
     println!("serve_attention OK");
     Ok(())
 }

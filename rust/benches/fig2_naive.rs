@@ -26,6 +26,11 @@ fn main() {
         Some(n + 2),
         "paper claim: naive needs depth N+2"
     );
+    assert_eq!(
+        sweep.inferred_long_depth,
+        Some(n + 2),
+        "compile-time depth inference agrees with the empirical sweep"
+    );
     println!();
 
     // Simulation wall-time scaling (the simulator's own cost).

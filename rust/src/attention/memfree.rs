@@ -2,10 +2,10 @@
 //!
 //! The last O(N) FIFO of Figure 3(b) buffered scores while the row max
 //! was reduced. Replacing the row-wise max with a **running** max turns
-//! that reduction into an element-wise [`Scan`]: each score immediately
-//! yields a rescale factor `Δ_ij = e^{m_{i(j-1)}−m_ij}` and a numerator
-//! `e_ij = e^{s_ij−m_ij}` (Eq. 4). Downstream, running sums absorb the
-//! rescale (Eq. 5):
+//! that reduction into an element-wise [`crate::sim::nodes::Scan`]: each
+//! score immediately yields a rescale factor `Δ_ij = e^{m_{i(j-1)}−m_ij}`
+//! and a numerator `e_ij = e^{s_ij−m_ij}` (Eq. 4). Downstream, running
+//! sums absorb the rescale (Eq. 5):
 //!
 //! ```text
 //! s ─ Scan(m running max → (Δ,e)) ─ Broadcast ─→ Scan(r ← r·Δ + e) ─ last-of-N → r_i ─┐
@@ -15,17 +15,26 @@
 //! Every path is element-wise with matched latency (the r and l⃗ legs
 //! differ by one hop, absorbed by a depth-2 FIFO), so **all FIFOs have
 //! depth 2** and intermediate memory is O(1) — the paper's headline.
+//! Accordingly the builder below names *no* channel and picks *no*
+//! depth: the compile stage verifies the balance and sizes everything
+//! at 2.
 
 use super::workload::Workload;
-use super::{build_score_frontend, build_v_source, BuiltAttention, FifoPlan};
-use crate::sim::{Elem, GraphBuilder};
+use super::{score_frontend, v_source, BuiltAttention, DepthPolicy, FifoPlan};
+use crate::sim::nodes::SinkHandle;
+use crate::sim::{Elem, GraphBuilder, Scope};
 use crate::Result;
 
-/// Build the Figure-3(c) graph. `plan.long` is unused (no long FIFOs);
-/// pass [`FifoPlan::paper`] or all-short — the paper's configuration is
-/// every FIFO at depth 2.
+/// Build the Figure-3(c) graph. No long FIFOs exist, so `plan.long` is
+/// unused; the paper's configuration is every FIFO at depth 2.
 pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
-    build_impl(w, plan, false)
+    build_with_policy(w, DepthPolicy::Explicit(*plan))
+}
+
+/// Figure-3(c) graph under a depth policy (`Inferred` sizes every FIFO
+/// at 2 — the compile-time proof of the O(1)-memory claim).
+pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_impl(w, policy, false)
 }
 
 /// Causal (autoregressive) extension: scores with j > i are masked to
@@ -34,22 +43,39 @@ pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
 /// dataflow topology — and therefore the O(1)-memory, full-throughput
 /// property — is unchanged; causality costs nothing on this machine.
 pub fn build_causal(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
-    build_impl(w, plan, true)
+    build_impl(w, DepthPolicy::Explicit(*plan), true)
 }
 
-fn build_impl(w: &Workload, plan: &FifoPlan, causal: bool) -> Result<BuiltAttention> {
+fn build_impl(w: &Workload, policy: DepthPolicy, causal: bool) -> Result<BuiltAttention> {
+    let mut g = GraphBuilder::new();
+    let mut sc = g.root();
+    let out = build_into_impl(&mut sc, w, causal)?;
+    Ok(BuiltAttention {
+        engine: g.compile(policy)?,
+        out,
+        n: w.n,
+        d: w.d,
+    })
+}
+
+/// Build one memory-free pipeline into an existing scope — the
+/// composition point for multi-head / sharded graphs (see
+/// [`super::multihead`]). Returns the head's output sink.
+pub fn build_into(sc: &mut Scope<'_>, w: &Workload) -> Result<SinkHandle> {
+    build_into_impl(sc, w, false)
+}
+
+fn build_into_impl(sc: &mut Scope<'_>, w: &Workload, causal: bool) -> Result<SinkHandle> {
     let n = w.n;
     let d = w.d;
-    let mut g = GraphBuilder::new();
 
-    let mut s = build_score_frontend(&mut g, w, plan)?;
+    let mut s = score_frontend(sc, w)?;
     if causal {
         // Elementwise mask: the stream is row-major, so element t is
         // (i, j) = (t / N, t mod N). A stateful Map plays the role of a
         // configured address-tracking unit.
-        let s_masked = g.channel("s_masked", plan.short)?;
         let mut t_idx: u64 = 0;
-        g.map("causal_mask", s, s_masked, move |x| {
+        s = sc.map("causal_mask", s, move |x| {
             let i = t_idx / n as u64;
             let j = t_idx % n as u64;
             t_idx += 1;
@@ -59,17 +85,14 @@ fn build_impl(w: &Workload, plan: &FifoPlan, causal: bool) -> Result<BuiltAttent
                 x.clone()
             }
         })?;
-        s = s_masked;
     }
 
     // Running-max scan (Eq. 4). State = (m_prev, m); output = (Δ, e).
     // Inline `Pair` elements: this stream carries N² values (§Perf).
-    let de = g.channel("de", plan.short)?;
     let neg_inf = Elem::Pair(f32::NEG_INFINITY, f32::NEG_INFINITY);
-    g.scan(
+    let de = sc.scan(
         "run_max",
         s,
-        de,
         n,
         neg_inf,
         |st, x| {
@@ -87,16 +110,12 @@ fn build_impl(w: &Workload, plan: &FifoPlan, causal: bool) -> Result<BuiltAttent
         },
     )?;
 
-    let de_r = g.channel("de_r", plan.short)?;
-    let de_l = g.channel("de_l", plan.short)?;
-    g.broadcast("bc_de", de, &[de_r, de_l])?;
+    let [de_r, de_l] = sc.broadcast("bc_de", de, ["de_r", "de_l"])?;
 
     // Running denominator (Eq. 5 scalar): r ← r·Δ + e, emitted each step.
-    let r_run = g.channel("r_run", plan.short)?;
-    g.scan(
+    let r_run = sc.scan(
         "run_sum",
         de_r,
-        r_run,
         n,
         Elem::Scalar(0.0),
         |st, x| {
@@ -105,20 +124,16 @@ fn build_impl(w: &Workload, plan: &FifoPlan, causal: bool) -> Result<BuiltAttent
         },
         |st, _| st.clone(),
     )?;
-    let r = g.channel("r", plan.short)?;
-    g.last_of("last_r", r_run, r, n)?;
+    let r = sc.last_of("last_r", r_run, n)?;
 
     // Running numerator (Eq. 5 vector): l⃗ ← l⃗·Δ + e·v⃗_j.
-    let v_cols = build_v_source(&mut g, w, plan, "v_cols")?;
-    let dev = g.channel("dev", plan.short)?;
-    g.zip("zip_v", &[de_l, v_cols], dev, |xs| {
+    let v_cols = v_source(sc, w)?;
+    let dev = sc.zip("zip_v", [de_l, v_cols], |xs| {
         Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
     })?;
-    let l_run = g.channel("l_run", plan.short)?;
-    g.scan(
+    let l_run = sc.scan(
         "run_out",
         dev,
-        l_run,
         n,
         Elem::from(vec![0.0f32; d]),
         |st, x| {
@@ -134,23 +149,14 @@ fn build_impl(w: &Workload, plan: &FifoPlan, causal: bool) -> Result<BuiltAttent
         },
         |st, _| st.clone(),
     )?;
-    let l = g.channel("l", plan.short)?;
-    g.last_of("last_l", l_run, l, n)?;
+    let l = sc.last_of("last_l", l_run, n)?;
 
     // Final division (Eq. 6): o⃗_i = l⃗_iN / r_iN.
-    let o = g.channel("o", plan.short)?;
-    g.zip("div", &[l, r], o, |xs| {
+    let o = sc.zip("div", [l, r], |xs| {
         let r = xs[1].scalar();
         Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
     })?;
-    let out = g.sink("sink_o", o, Some(n as u64))?;
-
-    Ok(BuiltAttention {
-        engine: g.build()?,
-        out,
-        n,
-        d,
-    })
+    sc.sink("sink_o", o, Some(n as u64))
 }
 
 #[cfg(test)]
@@ -159,6 +165,7 @@ mod tests {
     use super::super::FifoPlan;
     use super::*;
     use crate::sim::metrics::is_full_throughput;
+    use crate::sim::Capacity;
 
     #[test]
     fn matches_reference_numerics() {
@@ -192,6 +199,18 @@ mod tests {
             s_finite.cycles,
             s_base.cycles
         );
+    }
+
+    #[test]
+    fn inference_finds_no_long_fifo() {
+        // The compile-time twin of the O(1) claim: the analysis sizes
+        // every channel at depth 2.
+        let w = Workload::random(24, 4, 34);
+        let built = build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "channel '{}' flagged long", c.name);
+            assert_eq!(c.capacity, Capacity::Bounded(2), "channel '{}'", c.name);
+        }
     }
 
     #[test]

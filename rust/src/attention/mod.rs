@@ -10,6 +10,20 @@
 //! Every graph streams Q rows against resident K/V operands, produces
 //! one output row per N cycles at steady state (II = 1 per element), and
 //! is numerically validated against [`reference`].
+//!
+//! ## Construction model
+//!
+//! The builders use the `sim` **port API**: node helpers return typed
+//! [`Port`]s, channels appear implicitly, and
+//! [`GraphBuilder::compile`](crate::sim::GraphBuilder::compile) sizes
+//! every FIFO under a [`DepthPolicy`]. The default
+//! [`DepthPolicy::Inferred`] derives the long-FIFO depths (the paper's
+//! N+2) from the graph structure, so a builder like [`memfree::build`]
+//! mentions **no channel names and no depths**; the `FifoPlan`-taking
+//! entry points remain for depth sweeps and ablations and are exactly
+//! `DepthPolicy::Explicit(plan)`. Multi-head graphs compose by
+//! instantiating one head per [`Scope`](crate::sim::Scope) — see
+//! [`multihead`].
 
 pub mod memfree;
 pub mod multihead;
@@ -20,10 +34,12 @@ pub mod scaled;
 pub mod workload;
 
 use crate::sim::nodes::SinkHandle;
-use crate::sim::{Capacity, ChannelId, Elem, Engine, GraphBuilder, RunSummary};
+use crate::sim::{Elem, Engine, Port, RunSummary, Scope};
 use crate::{Error, Result};
 use reference::Matrix;
 use workload::{dot, Workload};
+
+pub use crate::sim::{DepthPolicy, FifoPlan};
 
 /// Which attention implementation to map onto the abstract hardware.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,7 +83,9 @@ impl Variant {
         }
     }
 
-    /// Names of this variant's long (latency-balancing) FIFOs.
+    /// Names of this variant's long (latency-balancing) FIFOs. The
+    /// compile-time depth analysis flags exactly these channels
+    /// (`ChannelDepth::is_long`) — asserted by the integration tests.
     pub fn long_fifos(self) -> &'static [&'static str] {
         match self {
             Variant::Naive => &["e_bypass"],
@@ -83,19 +101,32 @@ impl Variant {
             .into_iter()
             .find(|v| v.name() == s)
             .ok_or_else(|| {
+                let names: Vec<&str> = Variant::ALL.iter().map(|v| v.name()).collect();
                 Error::Usage(format!(
-                    "unknown variant '{s}' (expected one of: naive, scaled, reordered, memfree)"
+                    "unknown variant '{s}' (expected one of: {})",
+                    names.join(", ")
                 ))
             })
     }
 
-    /// Build this variant's graph over `w` with the given FIFO plan.
+    /// Build this variant's graph over `w` with the given FIFO plan —
+    /// shorthand for `build_with_policy(w, DepthPolicy::Explicit(*plan))`.
     pub fn build(self, w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+        self.build_with_policy(w, DepthPolicy::Explicit(*plan))
+    }
+
+    /// Build with compile-time inferred FIFO depths (no hand plan).
+    pub fn build_inferred(self, w: &Workload) -> Result<BuiltAttention> {
+        self.build_with_policy(w, DepthPolicy::Inferred)
+    }
+
+    /// Build this variant's graph over `w` under a depth policy.
+    pub fn build_with_policy(self, w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
         match self {
-            Variant::Naive => naive::build(w, plan),
-            Variant::Scaled => scaled::build(w, plan),
-            Variant::Reordered => reordered::build(w, plan),
-            Variant::MemoryFree => memfree::build(w, plan),
+            Variant::Naive => naive::build_with_policy(w, policy),
+            Variant::Scaled => scaled::build_with_policy(w, policy),
+            Variant::Reordered => reordered::build_with_policy(w, policy),
+            Variant::MemoryFree => memfree::build_with_policy(w, policy),
         }
     }
 
@@ -116,44 +147,18 @@ impl std::fmt::Display for Variant {
     }
 }
 
-/// FIFO depth configuration for one build.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct FifoPlan {
-    /// Depth of every ordinary FIFO (the paper uses 2).
-    pub short: Capacity,
-    /// Depth of the designated long FIFO(s) (the paper uses N+2).
-    pub long: Capacity,
-}
-
-impl FifoPlan {
-    /// The paper's configuration: short = 2, long = N+2.
-    pub fn paper(n: usize) -> Self {
-        FifoPlan {
-            short: Capacity::Bounded(2),
-            long: Capacity::Bounded(n + 2),
-        }
-    }
-
-    /// The paper's peak-throughput baseline: everything unbounded.
-    pub fn unbounded() -> Self {
-        FifoPlan {
-            short: Capacity::Unbounded,
-            long: Capacity::Unbounded,
-        }
-    }
-
-    /// Short FIFOs at 2, long FIFOs at an explicit depth (for sweeps).
-    pub fn with_long_depth(depth: usize) -> Self {
-        FifoPlan {
-            short: Capacity::Bounded(2),
-            long: Capacity::Bounded(depth),
-        }
-    }
+/// Generous simulation cycle budget for an N×N attention workload:
+/// ~10 cycles of slack per score plus fill. Shared by every runner
+/// (single-head and multi-head) so the bound lives in one place.
+pub fn cycle_budget(n: usize) -> u64 {
+    let n = n as u64;
+    10 * n * n + 20 * n + 500
 }
 
 /// A built attention graph ready to simulate.
 pub struct BuiltAttention {
-    /// The underlying engine (exposed for capacity sweeps / re-runs).
+    /// The underlying engine (exposed for capacity sweeps / re-runs and
+    /// its compile-time depth report).
     pub engine: Engine,
     /// Output rows arrive here.
     pub out: SinkHandle,
@@ -166,8 +171,7 @@ pub struct BuiltAttention {
 impl BuiltAttention {
     /// Generous default cycle budget for an N×N workload.
     pub fn default_budget(&self) -> u64 {
-        let n = self.n as u64;
-        10 * n * n + 20 * n + 500
+        cycle_budget(self.n)
     }
 
     /// Run to completion; return the output matrix and run summary.
@@ -185,7 +189,7 @@ impl BuiltAttention {
 }
 
 // ---------------------------------------------------------------------
-// Shared sub-graphs
+// Shared sub-graphs (port API)
 // ---------------------------------------------------------------------
 
 /// Build the score front-end shared by all variants:
@@ -196,52 +200,32 @@ impl BuiltAttention {
 /// Source(Kᵀ cols, cyclic) ────┘
 /// ```
 ///
-/// Returns the `s` channel carrying row-major scores.
-pub(crate) fn build_score_frontend(
-    g: &mut GraphBuilder,
-    w: &Workload,
-    plan: &FifoPlan,
-) -> Result<ChannelId> {
+/// Returns the port carrying row-major scores.
+pub(crate) fn score_frontend(sc: &mut Scope<'_>, w: &Workload) -> Result<Port> {
     let n = w.n;
     let total = (n * n) as u64;
-    let q_rows = g.channel("q_rows", plan.short)?;
-    let q_rep = g.channel("q_rep", plan.short)?;
-    let k_cols = g.channel("k_cols", plan.short)?;
-    let s = g.channel("s", plan.short)?;
 
     let q: Vec<Elem> = w.q.iter().map(|r| Elem::vector(r)).collect();
-    g.source_vec("src_q", q_rows, q)?;
-    g.repeat("rep_q", q_rows, q_rep, n)?;
+    let q_rows = sc.source_vec("src_q", q)?;
+    let q_rep = sc.repeat("rep_q", q_rows, n)?;
 
     // K is a resident operand: a memory unit + address generator replays
     // its rows (columns of Kᵀ) once per query row.
     let k: Vec<Elem> = w.k.iter().map(|r| Elem::vector(r)).collect();
-    g.source_gen("src_k", k_cols, total, move |i| {
-        k[(i % n as u64) as usize].clone()
-    })?;
+    let k_cols = sc.source_gen("src_k", total, move |i| k[(i % n as u64) as usize].clone())?;
 
     let scale = w.scale();
-    g.zip("qk_dot", &[q_rep, k_cols], s, move |xs| {
+    sc.zip("qk_dot", [q_rep, k_cols], move |xs| {
         Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
-    })?;
-    Ok(s)
+    })
 }
 
 /// Add a cyclic V-row source (`len = N²`, row `j = i mod N`).
-pub(crate) fn build_v_source(
-    g: &mut GraphBuilder,
-    w: &Workload,
-    plan: &FifoPlan,
-    name: &str,
-) -> Result<ChannelId> {
+pub(crate) fn v_source(sc: &mut Scope<'_>, w: &Workload) -> Result<Port> {
     let n = w.n;
     let total = (n * n) as u64;
-    let v_cols = g.channel(name, plan.short)?;
     let v: Vec<Elem> = w.v.iter().map(|r| Elem::vector(r)).collect();
-    g.source_gen("src_v", v_cols, total, move |i| {
-        v[(i % n as u64) as usize].clone()
-    })?;
-    Ok(v_cols)
+    sc.source_gen("src_v", total, move |i| v[(i % n as u64) as usize].clone())
 }
 
 /// Build the probability-weighted-value tail shared by Fig. 2 / Fig. 3(a):
@@ -251,30 +235,24 @@ pub(crate) fn build_v_source(
 ///       Zip(p · v⃗) → MemReduce(N, 0⃗, +) → o⃗_i → Sink
 /// v⃗_j ──┘
 /// ```
-pub(crate) fn build_pv_tail(
-    g: &mut GraphBuilder,
-    w: &Workload,
-    plan: &FifoPlan,
-    p: ChannelId,
-) -> Result<SinkHandle> {
+pub(crate) fn pv_tail(sc: &mut Scope<'_>, w: &Workload, p: Port) -> Result<SinkHandle> {
     let n = w.n;
     let d = w.d;
-    let v_cols = build_v_source(g, w, plan, "v_cols")?;
-    let pv = g.channel("pv", plan.short)?;
-    let o = g.channel("o", plan.short)?;
-    g.zip("pv_mul", &[p, v_cols], pv, |xs| {
+    let v_cols = v_source(sc, w)?;
+    let pv = sc.zip("pv_mul", [p, v_cols], |xs| {
         let p = xs[0].scalar();
         Elem::from(xs[1].as_vector().iter().map(|v| p * v).collect::<Vec<_>>())
     })?;
-    g.mem_reduce("pv_acc", pv, o, n, vec![0.0; d], |acc, x| {
+    let o = sc.mem_reduce("pv_acc", pv, n, vec![0.0; d], |acc, x| {
         acc.iter().zip(x.as_vector()).map(|(a, b)| a + b).collect()
     })?;
-    g.sink("sink_o", o, Some(n as u64))
+    sc.sink("sink_o", o, Some(n as u64))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::{Capacity, GraphBuilder};
 
     #[test]
     fn variant_names_roundtrip() {
@@ -283,6 +261,14 @@ mod tests {
             assert_eq!(format!("{v}"), v.name());
         }
         assert!(Variant::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_error_lists_every_variant() {
+        let err = Variant::parse("bogus").unwrap_err().to_string();
+        for v in Variant::ALL {
+            assert!(err.contains(v.name()), "message misses {v}: {err}");
+        }
     }
 
     #[test]
@@ -301,12 +287,19 @@ mod tests {
     }
 
     #[test]
+    fn shared_cycle_budget_used_by_built_graphs() {
+        let w = Workload::random(8, 4, 1);
+        let built = Variant::MemoryFree.build_inferred(&w).unwrap();
+        assert_eq!(built.default_budget(), cycle_budget(8));
+    }
+
+    #[test]
     fn score_frontend_streams_row_major_scores() {
         let w = Workload::random(4, 3, 21);
         let mut g = GraphBuilder::new();
-        let plan = FifoPlan::paper(w.n);
-        let s = build_score_frontend(&mut g, &w, &plan).unwrap();
-        let h = g.sink("sink", s, Some(16)).unwrap();
+        let mut sc = g.root();
+        let s = score_frontend(&mut sc, &w).unwrap();
+        let h = sc.sink("sink", s, Some(16)).unwrap();
         let mut e = g.build().unwrap();
         e.run(10_000).unwrap();
         let got = h.scalars();
@@ -325,10 +318,13 @@ mod tests {
     fn frontend_full_throughput_at_depth_2() {
         let w = Workload::random(16, 4, 2);
         let mut g = GraphBuilder::new();
-        let plan = FifoPlan::paper(w.n);
-        let s = build_score_frontend(&mut g, &w, &plan).unwrap();
-        let h = g.sink("sink", s, Some(256)).unwrap();
+        let mut sc = g.root();
+        let s = score_frontend(&mut sc, &w).unwrap();
+        let h = sc.sink("sink", s, Some(256)).unwrap();
         let mut e = g.build().unwrap();
+        // The front-end has no reconvergent paths: inference keeps
+        // every FIFO at depth 2 and the stream still runs at II=1.
+        assert!(e.depth_report().iter().all(|c| !c.is_long));
         e.run(100_000).unwrap();
         assert_eq!(h.arrival_gaps(128), Some((1, 1)), "II=1 steady state");
     }

@@ -2,9 +2,12 @@
 //!
 //! A streaming dataflow fabric scales attention throughput by placing
 //! independent head pipelines side by side — the execution model's
-//! answer to a GPU's grid dimension. This module instantiates `H`
-//! memory-free (Figure 3c) pipelines in one engine, each with its own
-//! sources and sink, and measures aggregate throughput.
+//! answer to a GPU's grid dimension. This module composes `H`
+//! memory-free (Figure 3c) pipelines in one engine by instantiating
+//! [`super::memfree::build_into`] once per [`Scope`](crate::sim::Scope):
+//! each head's nodes and channels are automatically namespaced
+//! (`h{i}/...`), so summaries and deadlock reports stay readable and no
+//! builder code ever concatenates name strings.
 //!
 //! Because the pipelines share no channels, the engine simulates true
 //! spatial parallelism: total cycles stay ≈ N² + fill while *aggregate*
@@ -12,10 +15,10 @@
 //! linearly in H but stays O(1) in N — the paper's claim, per head.
 
 use super::reference::Matrix;
-use super::workload::{dot, Workload};
-use super::{BuiltAttention, FifoPlan};
+use super::workload::Workload;
+use super::{cycle_budget, memfree, DepthPolicy, FifoPlan};
 use crate::sim::nodes::SinkHandle;
-use crate::sim::{Elem, GraphBuilder, RunSummary};
+use crate::sim::{GraphBuilder, RunSummary};
 use crate::Result;
 
 /// A built multi-head graph: one engine, `H` independent head pipelines.
@@ -33,8 +36,7 @@ pub struct BuiltMultiHead {
 impl BuiltMultiHead {
     /// Run to completion, returning per-head outputs and the summary.
     pub fn run(&mut self) -> Result<(Vec<Matrix>, RunSummary)> {
-        let n = self.n as u64;
-        let summary = self.engine.run(10 * n * n + 20 * n + 500)?;
+        let summary = self.engine.run(cycle_budget(self.n))?;
         Ok((self.heads.iter().map(SinkHandle::rows).collect(), summary))
     }
 
@@ -44,13 +46,20 @@ impl BuiltMultiHead {
     }
 }
 
-/// Build one memory-free pipeline per workload, all in one engine.
-///
-/// Each head gets uniquely prefixed node/channel names (`h{i}/...`), so
-/// summaries and deadlock reports stay readable.
+/// Build one memory-free pipeline per workload, all in one engine, with
+/// the given FIFO plan.
 pub fn build_memfree_heads(
     workloads: &[Workload],
     plan: &FifoPlan,
+) -> Result<BuiltMultiHead> {
+    build_memfree_heads_with_policy(workloads, DepthPolicy::Explicit(*plan))
+}
+
+/// Build one memory-free pipeline per workload under a depth policy.
+/// Head `i` lives in scope `h{i}`.
+pub fn build_memfree_heads_with_policy(
+    workloads: &[Workload],
+    policy: DepthPolicy,
 ) -> Result<BuiltMultiHead> {
     assert!(!workloads.is_empty());
     let n = workloads[0].n;
@@ -59,120 +68,15 @@ pub fn build_memfree_heads(
     let mut heads = Vec::with_capacity(workloads.len());
     for (h, w) in workloads.iter().enumerate() {
         assert_eq!((w.n, w.d), (n, d), "heads must share shape");
-        heads.push(build_one_head(&mut g, w, plan, &format!("h{h}/"))?);
+        let mut scope = g.scope(format!("h{h}"));
+        heads.push(memfree::build_into(&mut scope, w)?);
     }
     Ok(BuiltMultiHead {
-        engine: g.build()?,
+        engine: g.compile(policy)?,
         heads,
         n,
         d,
     })
-}
-
-/// One prefixed memory-free pipeline (same topology as
-/// [`super::memfree::build`]).
-fn build_one_head(
-    g: &mut GraphBuilder,
-    w: &Workload,
-    plan: &FifoPlan,
-    p: &str,
-) -> Result<SinkHandle> {
-    let n = w.n;
-    let d = w.d;
-    let total = (n * n) as u64;
-
-    // Score front-end.
-    let q_rows = g.channel(format!("{p}q_rows"), plan.short)?;
-    let q_rep = g.channel(format!("{p}q_rep"), plan.short)?;
-    let k_cols = g.channel(format!("{p}k_cols"), plan.short)?;
-    let s = g.channel(format!("{p}s"), plan.short)?;
-    let q: Vec<Elem> = w.q.iter().map(|r| Elem::vector(r)).collect();
-    g.source_vec(&format!("{p}src_q"), q_rows, q)?;
-    g.repeat(&format!("{p}rep_q"), q_rows, q_rep, n)?;
-    let k: Vec<Elem> = w.k.iter().map(|r| Elem::vector(r)).collect();
-    g.source_gen(&format!("{p}src_k"), k_cols, total, move |i| {
-        k[(i % n as u64) as usize].clone()
-    })?;
-    let scale = w.scale();
-    g.zip(&format!("{p}qk_dot"), &[q_rep, k_cols], s, move |xs| {
-        Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
-    })?;
-
-    // Running-max scan → (Δ, e).
-    let de = g.channel(format!("{p}de"), plan.short)?;
-    g.scan(
-        &format!("{p}run_max"),
-        s,
-        de,
-        n,
-        Elem::Pair(f32::NEG_INFINITY, f32::NEG_INFINITY),
-        |st, x| {
-            let (_, m_old) = st.pair();
-            Elem::Pair(m_old, m_old.max(x.scalar()))
-        },
-        |st, x| {
-            let (m_old, m_new) = st.pair();
-            Elem::Pair((m_old - m_new).exp(), (x.scalar() - m_new).exp())
-        },
-    )?;
-    let de_r = g.channel(format!("{p}de_r"), plan.short)?;
-    let de_l = g.channel(format!("{p}de_l"), plan.short)?;
-    g.broadcast(&format!("{p}bc_de"), de, &[de_r, de_l])?;
-
-    let r_run = g.channel(format!("{p}r_run"), plan.short)?;
-    g.scan(
-        &format!("{p}run_sum"),
-        de_r,
-        r_run,
-        n,
-        Elem::Scalar(0.0),
-        |st, x| {
-            let (delta, e) = x.pair();
-            Elem::Scalar(st.scalar() * delta + e)
-        },
-        |st, _| st.clone(),
-    )?;
-    let r = g.channel(format!("{p}r"), plan.short)?;
-    g.last_of(&format!("{p}last_r"), r_run, r, n)?;
-
-    let v_cols = g.channel(format!("{p}v_cols"), plan.short)?;
-    let v: Vec<Elem> = w.v.iter().map(|row| Elem::vector(row)).collect();
-    g.source_gen(&format!("{p}src_v"), v_cols, total, move |i| {
-        v[(i % n as u64) as usize].clone()
-    })?;
-    let dev = g.channel(format!("{p}dev"), plan.short)?;
-    g.zip(&format!("{p}zip_v"), &[de_l, v_cols], dev, |xs| {
-        Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
-    })?;
-    let l_run = g.channel(format!("{p}l_run"), plan.short)?;
-    g.scan(
-        &format!("{p}run_out"),
-        dev,
-        l_run,
-        n,
-        Elem::from(vec![0.0f32; d]),
-        |st, x| {
-            let (delta, e) = x.as_tuple()[0].pair();
-            let v = x.as_tuple()[1].as_vector();
-            Elem::from(
-                st.as_vector()
-                    .iter()
-                    .zip(v)
-                    .map(|(acc, vv)| acc * delta + e * vv)
-                    .collect::<Vec<_>>(),
-            )
-        },
-        |st, _| st.clone(),
-    )?;
-    let l = g.channel(format!("{p}l"), plan.short)?;
-    g.last_of(&format!("{p}last_l"), l_run, l, n)?;
-
-    let o = g.channel(format!("{p}o"), plan.short)?;
-    g.zip(&format!("{p}div"), &[l, r], o, |xs| {
-        let r = xs[1].scalar();
-        Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
-    })?;
-    g.sink(&format!("{p}sink_o"), o, Some(n as u64))
 }
 
 #[cfg(test)]
@@ -193,6 +97,19 @@ mod tests {
         for (out, w) in outs.iter().zip(&ws) {
             assert_close(out, &sdpa_f64(w), 1e-4, "head output");
         }
+    }
+
+    #[test]
+    fn inferred_heads_match_reference_too() {
+        let ws = heads(2, 12, 4);
+        let mut built =
+            build_memfree_heads_with_policy(&ws, DepthPolicy::Inferred).unwrap();
+        let (outs, summary) = built.run().unwrap();
+        for (out, w) in outs.iter().zip(&ws) {
+            assert_close(out, &sdpa_f64(w), 1e-4, "inferred head output");
+        }
+        // Memory-free per head: the analysis finds no long FIFO anywhere.
+        assert!(summary.depths.iter().all(|c| !c.is_long));
     }
 
     #[test]
@@ -231,8 +148,8 @@ mod tests {
         let ws = heads(2, 8, 4);
         let built = build_memfree_heads(&ws, &FifoPlan::paper(8)).unwrap();
         let names = built.engine.channel_names();
-        assert!(names.iter().any(|n| n == "h0/de"));
-        assert!(names.iter().any(|n| n == "h1/de"));
+        assert!(names.iter().any(|n| n == "h0/run_max"));
+        assert!(names.iter().any(|n| n == "h1/run_max"));
     }
 
     #[test]

@@ -17,18 +17,25 @@
 //! exponentials, so the divider's other operand must buffer ~N elements:
 //! with short FIFOs everywhere, `e_bypass` needs depth **N+2** (N+1
 //! steady-state occupancy + 1 slot so the producer never stalls under
-//! two-phase commit). Shallower bypass depths wedge the broadcast and
-//! deadlock the graph — the experiment `fig2` sweeps exactly this.
+//! two-phase commit). The compile-time depth analysis derives exactly
+//! this bound ([`DepthPolicy::Inferred`]); shallower bypass depths wedge
+//! the broadcast and deadlock the graph — the experiment `fig2` sweeps
+//! exactly this.
 
-use super::{build_pv_tail, build_score_frontend, BuiltAttention, FifoPlan};
+use super::workload::Workload;
+use super::{pv_tail, score_frontend, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::{Elem, GraphBuilder};
 use crate::Result;
-use super::workload::Workload;
 
 /// Build the Figure-2 graph. The long FIFO (`e_bypass`) takes
 /// `plan.long`; everything else takes `plan.short`.
 pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
-    build_with_exp_latency(w, plan, 1)
+    build_with_policy(w, DepthPolicy::Explicit(*plan))
+}
+
+/// Figure-2 graph under a depth policy (`Inferred` derives N+2).
+pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_with_delays_policy(w, policy, 1, 0)
 }
 
 /// Figure-2 graph with an explicit pipeline latency on the `exp` unit.
@@ -56,42 +63,45 @@ pub fn build_with_delays(
     exp_latency: u64,
     sigma_delay: u64,
 ) -> Result<BuiltAttention> {
+    build_with_delays_policy(w, DepthPolicy::Explicit(*plan), exp_latency, sigma_delay)
+}
+
+/// The ablation builder under an arbitrary depth policy. With
+/// `DepthPolicy::Inferred` the compile stage must reproduce the
+/// N+2+`sigma_delay` bound the empirical bisection finds.
+pub fn build_with_delays_policy(
+    w: &Workload,
+    policy: DepthPolicy,
+    exp_latency: u64,
+    sigma_delay: u64,
+) -> Result<BuiltAttention> {
     let n = w.n;
     let mut g = GraphBuilder::new();
+    let mut sc = g.root();
 
-    let s = build_score_frontend(&mut g, w, plan)?;
+    let s = score_frontend(&mut sc, w)?;
 
     // Softmax numerator: e_ij = exp(s_ij), no max subtraction (§3).
-    let e = g.channel("e", plan.short)?;
-    g.map_latency("exp", s, e, exp_latency, |x| {
-        Elem::Scalar(x.scalar().exp())
-    })?;
+    let e = sc.map_latency("exp", s, exp_latency, |x| Elem::Scalar(x.scalar().exp()))?;
 
     // Divergent paths: row-sum reduction vs element bypass.
-    let e_sum = g.channel("e_sum", plan.short)?;
-    let e_bypass = g.channel("e_bypass", plan.long)?;
-    g.broadcast("bc_e", e, &[e_sum, e_bypass])?;
+    let [e_sum, e_bypass] = sc.broadcast("bc_e", e, ["e_sum", "e_bypass"])?;
 
-    let mut sigma = g.channel("sigma", plan.short)?;
-    g.reduce("row_sum", e_sum, sigma, n, 0.0, |a, b| a + b)?;
+    let mut sigma = sc.reduce("row_sum", e_sum, n, 0.0, |a, b| a + b)?;
     if sigma_delay > 0 {
         // Extra pipeline stages on the reduction path only.
-        let delayed = g.channel("sigma_delayed", plan.short)?;
-        g.map_latency("sigma_delay", sigma, delayed, sigma_delay, |x| x.clone())?;
-        sigma = delayed;
+        sigma = sc.map_latency("sigma_delay", sigma, sigma_delay, |x| x.clone())?;
     }
-    let sigma_rep = g.channel("sigma_rep", plan.short)?;
-    g.repeat("rep_sigma", sigma, sigma_rep, n)?;
+    let sigma_rep = sc.repeat("rep_sigma", sigma, n)?;
 
     // p_ij = e_ij / σ_i.
-    let p = g.channel("p", plan.short)?;
-    g.zip("div", &[e_bypass, sigma_rep], p, |xs| {
+    let p = sc.zip("div", [e_bypass, sigma_rep], |xs| {
         Elem::Scalar(xs[0].scalar() / xs[1].scalar())
     })?;
 
-    let out = build_pv_tail(&mut g, w, plan, p)?;
+    let out = pv_tail(&mut sc, w, p)?;
     Ok(BuiltAttention {
-        engine: g.build()?,
+        engine: g.compile(policy)?,
         out,
         n,
         d: w.d,
@@ -104,7 +114,7 @@ mod tests {
     use super::super::{FifoPlan, Variant};
     use super::*;
     use crate::sim::metrics::is_full_throughput;
-    use crate::sim::RunOutcome;
+    use crate::sim::{Capacity, RunOutcome};
 
     #[test]
     fn matches_reference_numerics() {
@@ -154,6 +164,21 @@ mod tests {
             "expected deadlock, got {:?}",
             summary.outcome
         );
+    }
+
+    #[test]
+    fn inferred_depths_match_paper_plan() {
+        let w = Workload::random(16, 4, 6);
+        let built = build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        let rec = built
+            .engine
+            .depth_report()
+            .iter()
+            .find(|c| c.name == "e_bypass")
+            .unwrap();
+        assert!(rec.is_long);
+        assert_eq!(rec.inferred, w.n + 2);
+        assert_eq!(rec.capacity, Capacity::Bounded(w.n + 2));
     }
 
     #[test]

@@ -13,66 +13,61 @@
 //! ```
 //!
 //! Only the score bypass (`s_bypass`, for the row max) still needs O(N)
-//! depth — eliminated next by Figure 3(c).
+//! depth — the depth analysis flags exactly that one channel here —
+//! eliminated next by Figure 3(c).
 
 use super::workload::Workload;
-use super::{build_score_frontend, build_v_source, BuiltAttention, FifoPlan};
+use super::{score_frontend, v_source, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::{Elem, GraphBuilder};
 use crate::Result;
 
 /// Build the Figure-3(b) graph. `s_bypass` takes `plan.long`; everything
 /// else (including the now-balanced e paths) takes `plan.short`.
 pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_with_policy(w, DepthPolicy::Explicit(*plan))
+}
+
+/// Figure-3(b) graph under a depth policy (`Inferred` derives N+2 for
+/// `s_bypass` and depth 2 for the balanced e-side paths).
+pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
     let n = w.n;
     let d = w.d;
     let mut g = GraphBuilder::new();
+    let mut sc = g.root();
 
-    let s = build_score_frontend(&mut g, w, plan)?;
+    let s = score_frontend(&mut sc, w)?;
 
     // Row max (still a row-wise reduction: the one remaining long FIFO).
-    let s_max = g.channel("s_max", plan.short)?;
-    let s_bypass = g.channel("s_bypass", plan.long)?;
-    g.broadcast("bc_s", s, &[s_max, s_bypass])?;
+    let [s_max, s_bypass] = sc.broadcast("bc_s", s, ["s_max", "s_bypass"])?;
+    let m = sc.reduce("row_max", s_max, n, f32::NEG_INFINITY, f32::max)?;
+    let m_rep = sc.repeat("rep_m", m, n)?;
 
-    let m = g.channel("m", plan.short)?;
-    g.reduce("row_max", s_max, m, n, f32::NEG_INFINITY, f32::max)?;
-    let m_rep = g.channel("m_rep", plan.short)?;
-    g.repeat("rep_m", m, m_rep, n)?;
-
-    let e = g.channel("e", plan.short)?;
-    g.zip("exp_sub", &[s_bypass, m_rep], e, |xs| {
+    let e = sc.zip("exp_sub", [s_bypass, m_rep], |xs| {
         Elem::Scalar((xs[0].scalar() - xs[1].scalar()).exp())
     })?;
 
     // Balanced divergence: scalar sum and vector contraction in parallel.
-    let e_r = g.channel("e_r", plan.short)?;
-    let e_l = g.channel("e_l", plan.short)?;
-    g.broadcast("bc_e", e, &[e_r, e_l])?;
+    let [e_r, e_l] = sc.broadcast("bc_e", e, ["e_r", "e_l"])?;
+    let r = sc.reduce("row_sum", e_r, n, 0.0, |a, b| a + b)?;
 
-    let r = g.channel("r", plan.short)?;
-    g.reduce("row_sum", e_r, r, n, 0.0, |a, b| a + b)?;
-
-    let v_cols = build_v_source(&mut g, w, plan, "v_cols")?;
-    let ev = g.channel("ev", plan.short)?;
-    g.zip("ev_mul", &[e_l, v_cols], ev, |xs| {
+    let v_cols = v_source(&mut sc, w)?;
+    let ev = sc.zip("ev_mul", [e_l, v_cols], |xs| {
         let e = xs[0].scalar();
         Elem::from(xs[1].as_vector().iter().map(|v| e * v).collect::<Vec<_>>())
     })?;
-    let l = g.channel("l", plan.short)?;
-    g.mem_reduce("ev_acc", ev, l, n, vec![0.0; d], |acc, x| {
+    let l = sc.mem_reduce("ev_acc", ev, n, vec![0.0; d], |acc, x| {
         acc.iter().zip(x.as_vector()).map(|(a, b)| a + b).collect()
     })?;
 
     // o⃗_i = l⃗_i / r_i — both operands arrive once per row, in step.
-    let o = g.channel("o", plan.short)?;
-    g.zip("div", &[l, r], o, |xs| {
+    let o = sc.zip("div", [l, r], |xs| {
         let r = xs[1].scalar();
         Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
     })?;
-    let out = g.sink("sink_o", o, Some(n as u64))?;
+    let out = sc.sink("sink_o", o, Some(n as u64))?;
 
     Ok(BuiltAttention {
-        engine: g.build()?,
+        engine: g.compile(policy)?,
         out,
         n,
         d,
@@ -116,10 +111,24 @@ mod tests {
         let s_peak = summary.peak_elems("s_bypass").unwrap();
         assert!(s_peak >= w.n - 1, "s_bypass peak {} for N={}", s_peak, w.n);
         // The e-side paths are balanced: short FIFOs never exceed depth 2.
-        for ch in ["e_r", "e_l", "ev", "l", "r"] {
+        for ch in ["e_r", "e_l", "ev_mul", "ev_acc", "row_sum"] {
             let peak = summary.peak_elems(ch).unwrap();
             assert!(peak <= 2, "{ch} peak {peak} should be O(1)");
         }
+    }
+
+    #[test]
+    fn inference_flags_only_s_bypass() {
+        let w = Workload::random(16, 4, 24);
+        let built = build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        let long: Vec<&str> = built
+            .engine
+            .depth_report()
+            .iter()
+            .filter(|c| c.is_long)
+            .map(|c| c.name.as_str())
+            .collect();
+        assert_eq!(long, vec!["s_bypass"]);
     }
 
     #[test]

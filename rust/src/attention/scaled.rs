@@ -13,54 +13,50 @@
 //!
 //! Both `s_bypass` and `e_bypass` must be ~N deep for full throughput —
 //! this variant makes the memory problem *worse* before Figure 3(b)/(c)
-//! make it better, exactly as the paper narrates.
+//! make it better, exactly as the paper narrates. The depth analysis
+//! flags both channels and sizes each at N+2.
 
 use super::workload::Workload;
-use super::{build_pv_tail, build_score_frontend, BuiltAttention, FifoPlan};
+use super::{pv_tail, score_frontend, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::{Elem, GraphBuilder};
 use crate::Result;
 
 /// Build the Figure-3(a) graph. Both long FIFOs take `plan.long`.
 pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_with_policy(w, DepthPolicy::Explicit(*plan))
+}
+
+/// Figure-3(a) graph under a depth policy (`Inferred` derives N+2 for
+/// both bypasses).
+pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
     let n = w.n;
     let mut g = GraphBuilder::new();
+    let mut sc = g.root();
 
-    let s = build_score_frontend(&mut g, w, plan)?;
+    let s = score_frontend(&mut sc, w)?;
 
     // First divergence: row max vs score bypass.
-    let s_max = g.channel("s_max", plan.short)?;
-    let s_bypass = g.channel("s_bypass", plan.long)?;
-    g.broadcast("bc_s", s, &[s_max, s_bypass])?;
-
-    let m = g.channel("m", plan.short)?;
-    g.reduce("row_max", s_max, m, n, f32::NEG_INFINITY, f32::max)?;
-    let m_rep = g.channel("m_rep", plan.short)?;
-    g.repeat("rep_m", m, m_rep, n)?;
+    let [s_max, s_bypass] = sc.broadcast("bc_s", s, ["s_max", "s_bypass"])?;
+    let m = sc.reduce("row_max", s_max, n, f32::NEG_INFINITY, f32::max)?;
+    let m_rep = sc.repeat("rep_m", m, n)?;
 
     // e_ij = exp(s_ij − m_i).
-    let e = g.channel("e", plan.short)?;
-    g.zip("exp_sub", &[s_bypass, m_rep], e, |xs| {
+    let e = sc.zip("exp_sub", [s_bypass, m_rep], |xs| {
         Elem::Scalar((xs[0].scalar() - xs[1].scalar()).exp())
     })?;
 
     // Second divergence: row sum vs exponential bypass.
-    let e_sum = g.channel("e_sum", plan.short)?;
-    let e_bypass = g.channel("e_bypass", plan.long)?;
-    g.broadcast("bc_e", e, &[e_sum, e_bypass])?;
+    let [e_sum, e_bypass] = sc.broadcast("bc_e", e, ["e_sum", "e_bypass"])?;
+    let sigma = sc.reduce("row_sum", e_sum, n, 0.0, |a, b| a + b)?;
+    let sigma_rep = sc.repeat("rep_sigma", sigma, n)?;
 
-    let sigma = g.channel("sigma", plan.short)?;
-    g.reduce("row_sum", e_sum, sigma, n, 0.0, |a, b| a + b)?;
-    let sigma_rep = g.channel("sigma_rep", plan.short)?;
-    g.repeat("rep_sigma", sigma, sigma_rep, n)?;
-
-    let p = g.channel("p", plan.short)?;
-    g.zip("div", &[e_bypass, sigma_rep], p, |xs| {
+    let p = sc.zip("div", [e_bypass, sigma_rep], |xs| {
         Elem::Scalar(xs[0].scalar() / xs[1].scalar())
     })?;
 
-    let out = build_pv_tail(&mut g, w, plan, p)?;
+    let out = pv_tail(&mut sc, w, p)?;
     Ok(BuiltAttention {
-        engine: g.build()?,
+        engine: g.compile(policy)?,
         out,
         n,
         d: w.d,
@@ -118,6 +114,22 @@ mod tests {
                 peak,
                 w.n
             );
+        }
+    }
+
+    #[test]
+    fn inference_flags_both_bypasses() {
+        let w = Workload::random(16, 4, 14);
+        let built = build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        for fifo in ["s_bypass", "e_bypass"] {
+            let rec = built
+                .engine
+                .depth_report()
+                .iter()
+                .find(|c| c.name == fifo)
+                .unwrap();
+            assert!(rec.is_long, "{fifo}");
+            assert_eq!(rec.inferred, w.n + 2, "{fifo}");
         }
     }
 

@@ -16,9 +16,9 @@
 //! For each point the driver bisects the minimum bypass depth that
 //! matches the unbounded baseline's cycle count.
 
-use crate::attention::naive::build_with_delays;
+use crate::attention::naive::{build_with_delays, build_with_delays_policy};
 use crate::attention::workload::Workload;
-use crate::attention::FifoPlan;
+use crate::attention::{DepthPolicy, FifoPlan};
 use crate::report::Table;
 use crate::sim::RunOutcome;
 use crate::Result;
@@ -48,8 +48,12 @@ pub struct AblationPoint {
     pub site: LatencySite,
     /// Injected latency (cycles).
     pub latency: u64,
-    /// Minimum bypass depth achieving baseline cycles.
+    /// Minimum bypass depth achieving baseline cycles (empirical
+    /// bisection over simulations).
     pub min_depth: usize,
+    /// Bypass depth the compile-time analysis derives for the same
+    /// configuration — must equal `min_depth`.
+    pub inferred_depth: usize,
     /// Baseline (unbounded) cycles at this configuration.
     pub baseline_cycles: u64,
 }
@@ -76,7 +80,7 @@ impl AblationResult {
                 "Ablation — min bypass depth vs injected latency (N={})",
                 self.n
             ),
-            &["latency site", "L", "min depth", "prediction", "baseline cycles"],
+            &["latency site", "L", "min depth", "inferred", "prediction", "baseline cycles"],
         );
         for p in &self.points {
             let prediction = match p.site {
@@ -89,6 +93,7 @@ impl AblationResult {
                 p.site.label().into(),
                 p.latency.to_string(),
                 p.min_depth.to_string(),
+                p.inferred_depth.to_string(),
                 prediction,
                 p.baseline_cycles.to_string(),
             ]);
@@ -136,6 +141,20 @@ fn min_depth(w: &Workload, exp_latency: u64, sigma_delay: u64) -> Result<(usize,
     Ok((lo, bs.cycles))
 }
 
+/// Compile-time counterpart of [`min_depth`]: the bypass depth the
+/// static latency-balance analysis derives for this configuration.
+fn inferred_depth(w: &Workload, exp_latency: u64, sigma_delay: u64) -> Result<usize> {
+    let built = build_with_delays_policy(w, DepthPolicy::Inferred, exp_latency, sigma_delay)?;
+    Ok(built
+        .engine
+        .depth_report()
+        .iter()
+        .filter(|c| c.is_long)
+        .map(|c| c.inferred)
+        .max()
+        .unwrap_or(2))
+}
+
 /// Run both sweeps over `latencies`.
 pub fn run(n: usize, d: usize, latencies: &[u64]) -> Result<AblationResult> {
     let w = Workload::random(n, d, 0xAB1A);
@@ -146,6 +165,7 @@ pub fn run(n: usize, d: usize, latencies: &[u64]) -> Result<AblationResult> {
             site: LatencySite::CommonPath,
             latency,
             min_depth: depth,
+            inferred_depth: inferred_depth(&w, latency, 0)?,
             baseline_cycles: cycles,
         });
     }
@@ -155,6 +175,7 @@ pub fn run(n: usize, d: usize, latencies: &[u64]) -> Result<AblationResult> {
             site: LatencySite::DivergentPath,
             latency,
             min_depth: depth,
+            inferred_depth: inferred_depth(&w, 1, latency)?,
             baseline_cycles: cycles,
         });
     }
@@ -182,6 +203,21 @@ mod tests {
                 16 + 2 + p.latency,
                 "L={}: N+2+L",
                 p.latency
+            );
+        }
+    }
+
+    #[test]
+    fn static_analysis_matches_empirical_bisection() {
+        // The tentpole claim of the compile stage: its depth formula is
+        // not a heuristic — at every ablation point it lands exactly on
+        // the bisected minimum.
+        let r = run(16, 4, &[1, 2, 4]).unwrap();
+        for p in &r.points {
+            assert_eq!(
+                p.inferred_depth, p.min_depth,
+                "{:?} L={}",
+                p.site, p.latency
             );
         }
     }

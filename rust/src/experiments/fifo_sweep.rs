@@ -11,7 +11,7 @@
 //!   occupancy everywhere.
 
 use crate::attention::workload::Workload;
-use crate::attention::{FifoPlan, Variant};
+use crate::attention::{DepthPolicy, FifoPlan, Variant};
 use crate::report::{fmt_ratio, Table};
 use crate::sim::{RunOutcome, RunSummary};
 use crate::Result;
@@ -36,6 +36,10 @@ pub struct SweepResult {
     pub baseline: RunSummary,
     /// Points, ascending by depth, baseline last.
     pub points: Vec<SweepPoint>,
+    /// Long-FIFO depth the compile-time analysis derives
+    /// (`DepthPolicy::Inferred`), `None` when the variant has no long
+    /// FIFO. The sweep's empirical minimum must land exactly here.
+    pub inferred_long_depth: Option<usize>,
 }
 
 impl SweepResult {
@@ -96,6 +100,16 @@ impl SweepResult {
                 p.summary.total_peak_words().to_string(),
             ]);
         }
+        t.row(&[
+            self.inferred_long_depth
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "- (no long FIFO)".into()),
+            "inferred (compile-time)".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
         t
     }
 }
@@ -129,11 +143,23 @@ pub fn run(variant: Variant, n: usize, d: usize) -> Result<SweepResult> {
         depth: None,
         summary: baseline.clone(),
     });
+
+    // Compile-time prediction of the sweep's answer.
+    let inferred = variant.build_with_policy(&w, DepthPolicy::Inferred)?;
+    let inferred_long_depth = inferred
+        .engine
+        .depth_report()
+        .iter()
+        .filter(|c| c.is_long)
+        .map(|c| c.inferred)
+        .max();
+
     Ok(SweepResult {
         variant,
         n,
         baseline,
         points,
+        inferred_long_depth,
     })
 }
 
@@ -156,6 +182,20 @@ mod tests {
             let r = run(v, 16, 4).unwrap();
             assert_eq!(r.min_full_throughput_depth(), Some(18), "{v}");
         }
+    }
+
+    #[test]
+    fn compile_time_inference_predicts_the_sweep() {
+        for v in [Variant::Naive, Variant::Scaled, Variant::Reordered] {
+            let r = run(v, 16, 4).unwrap();
+            assert_eq!(
+                r.inferred_long_depth,
+                r.min_full_throughput_depth(),
+                "{v}: static analysis vs empirical sweep"
+            );
+        }
+        let r = run(Variant::MemoryFree, 16, 4).unwrap();
+        assert_eq!(r.inferred_long_depth, None, "memfree has no long FIFO");
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //! * [`sim`] — a cycle-accurate streaming-dataflow abstract machine
 //!   (bounded FIFO channels with backpressure, Parallel-Pattern nodes per
 //!   the paper's Table 1, deterministic two-phase engine, occupancy and
-//!   throughput metrics, deadlock detection). This is our from-scratch
-//!   stand-in for the Dataflow Abstract Machine simulator the paper used.
+//!   throughput metrics, deadlock detection). Graphs are assembled with
+//!   a port/scope builder whose `compile()` stage statically infers the
+//!   latency-balancing FIFO depths (the paper's N+2). This is our
+//!   from-scratch stand-in for the Dataflow Abstract Machine simulator
+//!   the paper used.
 //! * [`attention`] — the four attention dataflow graphs the paper studies
 //!   (Figure 2 naive, Figure 3a scaled softmax, Figure 3b reordered
 //!   division, Figure 3c memory-free), plus a golden reference SDPA and
@@ -42,11 +45,14 @@ pub mod sim;
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Top-level error type for the library.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display`/`Error`/`From` are hand-implemented: the build image has no
+/// offline crate registry, so the crate carries zero external
+/// dependencies (no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
     /// The simulated graph reached a configuration where no node can make
     /// progress but work remains — i.e. insufficient FIFO depth.
-    #[error("deadlock at cycle {cycle}: {detail}")]
     Deadlock {
         /// Cycle at which the engine detected quiescence-with-work-left.
         cycle: u64,
@@ -54,17 +60,14 @@ pub enum Error {
         detail: String,
     },
     /// The simulation exceeded its configured cycle budget.
-    #[error("simulation exceeded max_cycles={max_cycles}")]
     CycleBudgetExceeded {
         /// The configured budget.
         max_cycles: u64,
     },
     /// Graph construction error (dangling port, duplicate wiring, ...).
-    #[error("graph construction: {0}")]
     Graph(String),
     /// Elements of the wrong kind flowed into a node (e.g. a vector where
     /// a scalar was expected).
-    #[error("type error in node '{node}': {detail}")]
     ElemType {
         /// Name of the offending node.
         node: String,
@@ -72,15 +75,48 @@ pub enum Error {
         detail: String,
     },
     /// Runtime (PJRT / artifact) error.
-    #[error("runtime: {0}")]
     Runtime(String),
     /// Coordinator error (queue closed, worker died, ...).
-    #[error("coordinator: {0}")]
     Coordinator(String),
     /// CLI usage error.
-    #[error("usage: {0}")]
     Usage(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Deadlock { cycle, detail } => {
+                write!(f, "deadlock at cycle {cycle}: {detail}")
+            }
+            Error::CycleBudgetExceeded { max_cycles } => {
+                write!(f, "simulation exceeded max_cycles={max_cycles}")
+            }
+            Error::Graph(msg) => write!(f, "graph construction: {msg}"),
+            Error::ElemType { node, detail } => {
+                write!(f, "type error in node '{node}': {detail}")
+            }
+            Error::Runtime(msg) => write!(f, "runtime: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator: {msg}"),
+            Error::Usage(msg) => write!(f, "usage: {msg}"),
+            // Transparent: io errors print as themselves.
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }

@@ -14,7 +14,7 @@ use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, T
 use sdpa_dataflow::{attention::workload::Workload, experiments, report};
 
 const USAGE: &str = "usage: sdpa-dataflow <simulate|experiments|validate|serve> [options]
-  simulate    --variant <naive|scaled|reordered|memfree> --n N --d D [--long-depth K] [--unbounded]
+  simulate    --variant <naive|scaled|reordered|memfree> --n N --d D [--long-depth K] [--unbounded] [--inferred]
   experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation] [--n N] [--d D]
   validate    [--artifacts DIR]
   serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]";
@@ -28,7 +28,7 @@ fn main() {
 }
 
 fn run() -> sdpa_dataflow::Result<()> {
-    let args = Args::from_env(true, &["unbounded", "quick"])?;
+    let args = Args::from_env(true, &["unbounded", "inferred", "quick"])?;
     match args.subcommand.as_deref() {
         Some("simulate") => simulate(&args),
         Some("experiments") => run_experiments(&args),
@@ -43,21 +43,35 @@ fn simulate(args: &Args) -> sdpa_dataflow::Result<()> {
     let n: usize = args.get_parsed_or("n", 64)?;
     let d: usize = args.get_parsed_or("d", 32)?;
     let w = Workload::random(n, d, args.get_parsed_or("seed", 7u64)?);
-    let plan = if args.has_flag("unbounded") {
-        FifoPlan::unbounded()
+    let policy = if args.has_flag("inferred") {
+        sdpa_dataflow::attention::DepthPolicy::Inferred
+    } else if args.has_flag("unbounded") {
+        sdpa_dataflow::attention::DepthPolicy::Explicit(FifoPlan::unbounded())
     } else if let Some(depth) = args.get("long-depth") {
         let depth: usize = depth
             .parse()
             .map_err(|_| sdpa_dataflow::Error::Usage("--long-depth".into()))?;
-        FifoPlan::with_long_depth(depth)
+        sdpa_dataflow::attention::DepthPolicy::Explicit(FifoPlan::with_long_depth(depth))
     } else {
-        FifoPlan::paper(n)
+        sdpa_dataflow::attention::DepthPolicy::Explicit(FifoPlan::paper(n))
     };
     println!(
-        "simulating {variant} ({}) N={n} d={d} plan={plan:?}",
+        "simulating {variant} ({}) N={n} d={d} policy={policy:?}",
         variant.figure()
     );
-    let mut built = variant.build(&w, &plan)?;
+    let mut built = variant.build_with_policy(&w, policy)?;
+    if let Some(deepest) = built
+        .engine
+        .depth_report()
+        .iter()
+        .filter(|c| c.is_long)
+        .max_by_key(|c| c.inferred)
+    {
+        println!(
+            "compile: long FIFO '{}' inferred depth {} (configured {:?})",
+            deepest.name, deepest.inferred, deepest.capacity
+        );
+    }
     let summary = built.run_outcome();
     let m = summary.metrics();
     let mut t = report::Table::new("run summary", &["metric", "value"]);

@@ -4,7 +4,11 @@
 //! Its **capacity** is the knob every experiment sweeps: the paper's
 //! "short FIFOs" have depth 2, the naive implementation's "long FIFO" has
 //! depth N+2, and the full-throughput *baseline* sets every FIFO to
-//! [`Capacity::Unbounded`].
+//! [`Capacity::Unbounded`]. Client code rarely picks depths by hand:
+//! the compile stage ([`super::compile`]) sizes implicitly created
+//! channels, deriving the N+2 bound for latency-balancing FIFOs from
+//! the graph structure (override with a
+//! [`DepthPolicy`](super::compile::DepthPolicy) for sweeps).
 //!
 //! Channels operate under two-phase cycle semantics driven by the engine:
 //! during a cycle, nodes *stage* pops and pushes against the state the

@@ -1,0 +1,516 @@
+//! The compile stage: structural validation and FIFO depth inference.
+//!
+//! [`super::graph::GraphBuilder::compile`] turns an accumulated graph
+//! into a runnable [`Engine`] in two passes:
+//!
+//! 1. **Structural validation** — every channel must have exactly one
+//!    producer and one consumer (enforced incrementally by the builder,
+//!    re-checked for danglers here), and the channel graph must be
+//!    acyclic: a channel cycle can never transfer its first element
+//!    under two-phase semantics, so it is a guaranteed deadlock and is
+//!    rejected at compile time rather than discovered at cycle N.
+//! 2. **Depth inference** — a static latency/occupancy analysis walks
+//!    the graph in topological order, propagating for every channel the
+//!    *arrival cycle* of its first element and its steady-state *rate*
+//!    (elements per cycle), assuming II = 1 everywhere. At each
+//!    reconvergence (a `Zip` whose inputs descend from a common
+//!    `Broadcast`), the early-arriving side must buffer
+//!    `(t_slow − t_fast) · rate` elements before the first joint firing;
+//!    sizing that FIFO to the buildup plus one slack slot reproduces the
+//!    paper's **N+2** bound for the Figure-2/3 bypass FIFOs — and its
+//!    N+2+L generalisation under injected divergent-path latency —
+//!    without any hand-annotated depths.
+//!
+//! Channels declared through the channel-first API keep their explicit
+//! capacities; only implicitly created (port API) channels are sized by
+//! the selected [`DepthPolicy`].
+
+use std::collections::HashSet;
+
+use super::channel::{Capacity, Channel};
+use super::engine::Engine;
+use super::graph::{GraphBuilder, NodeKind};
+use crate::{Error, Result};
+
+/// FIFO depth configuration for one build: one knob for the ordinary
+/// (short) FIFOs and one for the latency-balancing (long) FIFOs that
+/// the depth analysis flags. The paper's configuration is `short = 2`,
+/// `long = N+2`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FifoPlan {
+    /// Depth of every ordinary FIFO (the paper uses 2).
+    pub short: Capacity,
+    /// Depth of the designated long FIFO(s) (the paper uses N+2).
+    pub long: Capacity,
+}
+
+impl FifoPlan {
+    /// The paper's configuration: short = 2, long = N+2.
+    pub fn paper(n: usize) -> Self {
+        FifoPlan {
+            short: Capacity::Bounded(2),
+            long: Capacity::Bounded(n + 2),
+        }
+    }
+
+    /// The paper's peak-throughput baseline: everything unbounded.
+    pub fn unbounded() -> Self {
+        FifoPlan {
+            short: Capacity::Unbounded,
+            long: Capacity::Unbounded,
+        }
+    }
+
+    /// Short FIFOs at 2, long FIFOs at an explicit depth (for sweeps).
+    pub fn with_long_depth(depth: usize) -> Self {
+        FifoPlan {
+            short: Capacity::Bounded(2),
+            long: Capacity::Bounded(depth),
+        }
+    }
+}
+
+/// How [`super::graph::GraphBuilder::compile`] sizes channels that were
+/// not explicitly sized by the caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DepthPolicy {
+    /// The latency-balance analysis sizes every FIFO (the default):
+    /// balanced channels get depth 2, reconvergent bypass channels get
+    /// their computed buildup + 1 (= the paper's N+2 for Fig. 2/3).
+    Inferred,
+    /// The paper's hand configuration for sequence length `n`: depth 2
+    /// everywhere, N+2 on the channels the analysis flags as long.
+    Paper(usize),
+    /// Explicit short/long depths (FIFO-depth sweeps and ablations);
+    /// `plan.long` applies to the channels the analysis flags as long.
+    Explicit(FifoPlan),
+    /// Every FIFO unbounded — the peak-throughput baseline.
+    Unbounded,
+}
+
+/// Compile-time record for one channel: what the analysis derived and
+/// what capacity was actually applied. Reported via
+/// [`Engine::depth_report`] and on every
+/// [`super::engine::RunSummary::depths`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChannelDepth {
+    /// Channel name.
+    pub name: String,
+    /// Depth the latency-balance analysis computed (≥ 2).
+    pub inferred: usize,
+    /// Capacity actually configured (after policy / explicit sizing).
+    pub capacity: Capacity,
+    /// Whether the analysis classified this as a long (latency-
+    /// balancing) FIFO, i.e. `inferred > 2`.
+    pub is_long: bool,
+}
+
+/// Numeric slack for the f64 arrival/rate propagation: rates like 1/N
+/// are not exactly representable, so comparisons and ceilings tolerate
+/// tiny rounding before snapping to integers.
+const EPS: f64 = 1e-6;
+
+pub(crate) fn compile(b: GraphBuilder, policy: DepthPolicy) -> Result<Engine> {
+    let GraphBuilder {
+        specs,
+        channel_names,
+        producers,
+        consumers,
+        nodes,
+        meta,
+        ..
+    } = b;
+
+    // ---- 1. structural validation -----------------------------------
+    for (i, spec) in specs.iter().enumerate() {
+        if producers[i].is_none() {
+            return Err(Error::Graph(format!(
+                "channel '{}' has no producer",
+                spec.name
+            )));
+        }
+        if consumers[i].is_none() {
+            return Err(Error::Graph(format!(
+                "channel '{}' has no consumer",
+                spec.name
+            )));
+        }
+    }
+
+    let nn = nodes.len();
+    let nc = specs.len();
+
+    // Depth inference needs every node's timing. An externally
+    // constructed node ([`super::graph::GraphBuilder::add_node`]) has
+    // unknown latency/rate behaviour, so sizing *implicit* channels in
+    // its presence could silently under-provision a bypass FIFO and
+    // deadlock at runtime. Refuse instead — explicit capacities (the
+    // channel-first API) and the Unbounded policy involve no sizing
+    // decisions and remain fine.
+    if !matches!(policy, DepthPolicy::Unbounded) && specs.iter().any(|s| s.declared.is_none()) {
+        if let Some(op) = meta
+            .iter()
+            .position(|m| matches!(m.kind, NodeKind::Opaque))
+        {
+            return Err(Error::Graph(format!(
+                "cannot infer FIFO depths: node '{}' was added via add_node and its \
+                 timing is unknown; declare explicit channel capacities for this graph \
+                 or compile with DepthPolicy::Unbounded",
+                nodes[op].name()
+            )));
+        }
+    }
+
+    // Kahn topological sort over nodes; every channel is one edge
+    // producer → consumer.
+    let mut indeg = vec![0usize; nn];
+    for i in 0..nc {
+        indeg[consumers[i].expect("validated")] += 1;
+    }
+    let mut order: Vec<usize> = (0..nn).filter(|&i| indeg[i] == 0).collect();
+    let mut qi = 0;
+    while qi < order.len() {
+        let ni = order[qi];
+        qi += 1;
+        for &c in &meta[ni].outputs {
+            let cons = consumers[c.0].expect("validated");
+            indeg[cons] -= 1;
+            if indeg[cons] == 0 {
+                order.push(cons);
+            }
+        }
+    }
+    if order.len() != nn {
+        let stuck: Vec<&str> = (0..nn)
+            .filter(|&i| indeg[i] > 0)
+            .map(|i| nodes[i].name())
+            .collect();
+        return Err(Error::Graph(format!(
+            "channel cycle through node(s): {} (a cyclic dataflow graph can \
+             never transfer its first element)",
+            stuck.join(", ")
+        )));
+    }
+
+    // ---- 2. arrival / rate propagation ------------------------------
+    // arrival[c]: cycle the channel's first element becomes visible,
+    // relative to cycle 0, assuming no backpressure stalls.
+    // rate[c]: steady-state elements per cycle (≤ 1).
+    let mut arrival = vec![0f64; nc];
+    let mut rate = vec![1f64; nc];
+    for &ni in &order {
+        let m = &meta[ni];
+        let first_in = m
+            .inputs
+            .iter()
+            .map(|c| arrival[c.0])
+            .fold(0.0f64, f64::max);
+        let min_rate = m
+            .inputs
+            .iter()
+            .map(|c| rate[c.0])
+            .fold(1.0f64, f64::min)
+            .max(EPS);
+        let (out_a, out_r) = match m.kind {
+            // A source fires at cycle 0; its first element is visible
+            // after the one-cycle channel hop.
+            NodeKind::Source => (1.0, 1.0),
+            // A latency-ℓ unit fires on its first input and lands the
+            // result ℓ cycles later (ℓ−1 pipeline stages + channel hop).
+            NodeKind::Map { latency } => (first_in + latency as f64, min_rate),
+            NodeKind::Scan => (first_in + 1.0, min_rate),
+            // A window-n reduction holds its output until the n-th
+            // input, which at rate r arrives (n−1)/r cycles after the
+            // first — this is the latency imbalance the long FIFOs pay
+            // for.
+            NodeKind::Reduce { n } => (
+                first_in + (n as f64 - 1.0) / min_rate + 1.0,
+                min_rate / n as f64,
+            ),
+            NodeKind::Repeat { n } => (first_in + 1.0, (min_rate * n as f64).min(1.0)),
+            NodeKind::Broadcast | NodeKind::Zip => (first_in + 1.0, min_rate),
+            NodeKind::Sink => (0.0, 0.0),
+            // Externally constructed nodes: assume a unit-latency
+            // pass-through. Reached only when every channel is
+            // explicitly sized (see the guard above), so the guess can
+            // only skew the advisory report, never a real capacity.
+            NodeKind::Opaque => (first_in + 1.0, min_rate),
+        };
+        for &c in &m.outputs {
+            arrival[c.0] = out_a;
+            rate[c.0] = out_r;
+        }
+    }
+
+    // ---- 3. ancestor sets (for reconvergence detection) -------------
+    // anc[c] = Broadcast nodes upstream of channel c — the only
+    // ancestors the reconvergence test consults, so restricting the
+    // sets to broadcasts keeps this pass near-linear (a handful of
+    // broadcasts per graph) instead of O(V²) over all nodes.
+    let mut anc: Vec<HashSet<usize>> = vec![HashSet::new(); nc];
+    for &ni in &order {
+        let mut up = HashSet::new();
+        for &c in &meta[ni].inputs {
+            up.extend(anc[c.0].iter().copied());
+        }
+        if matches!(meta[ni].kind, NodeKind::Broadcast) {
+            up.insert(ni);
+        }
+        for &c in &meta[ni].outputs {
+            anc[c.0] = up.clone();
+        }
+    }
+
+    // ---- 4. per-channel inferred depth ------------------------------
+    // Only reconvergent fan-out needs latency-balancing depth: a fast
+    // path whose backpressure reaches the shared broadcast would stall
+    // the slow (reduction) side and deadlock. Imbalanced joins of
+    // *independent* streams (e.g. a V-row source meeting the score
+    // pipeline) are free: stalling a source costs nothing.
+    let mut inferred = vec![2usize; nc];
+    for m in &meta {
+        if !matches!(m.kind, NodeKind::Zip) || m.inputs.len() < 2 {
+            continue;
+        }
+        let fire = m
+            .inputs
+            .iter()
+            .map(|c| arrival[c.0])
+            .fold(0.0f64, f64::max);
+        for &c in &m.inputs {
+            let buildup = ((fire - arrival[c.0]) * rate[c.0]).max(0.0);
+            if buildup <= 1.0 + EPS {
+                continue; // absorbed by a short (depth-2) FIFO
+            }
+            let reconvergent = m.inputs.iter().any(|&o| {
+                o != c
+                    && arrival[o.0] > arrival[c.0] + EPS
+                    && anc[o.0].intersection(&anc[c.0]).next().is_some()
+            });
+            if reconvergent {
+                // Buildup elements in flight + 1 slot so the producer
+                // never stalls under two-phase commit.
+                let depth = (buildup + 1.0 - EPS).ceil() as usize;
+                inferred[c.0] = inferred[c.0].max(depth);
+            }
+        }
+    }
+
+    // ---- 5. apply the policy and materialise ------------------------
+    let mut channels = Vec::with_capacity(nc);
+    let mut depths = Vec::with_capacity(nc);
+    for (i, spec) in specs.iter().enumerate() {
+        let is_long = inferred[i] > 2;
+        let capacity = match spec.declared {
+            Some(cap) => cap,
+            None => match policy {
+                DepthPolicy::Inferred => Capacity::Bounded(inferred[i]),
+                DepthPolicy::Paper(n) => {
+                    if is_long {
+                        Capacity::Bounded(n + 2)
+                    } else {
+                        Capacity::Bounded(2)
+                    }
+                }
+                DepthPolicy::Explicit(plan) => {
+                    if is_long {
+                        plan.long
+                    } else {
+                        plan.short
+                    }
+                }
+                DepthPolicy::Unbounded => Capacity::Unbounded,
+            },
+        };
+        if capacity == Capacity::Bounded(0) {
+            return Err(Error::Graph(format!(
+                "channel '{}': depth 0 is invalid",
+                spec.name
+            )));
+        }
+        channels.push(Channel::new(spec.name.clone(), capacity));
+        depths.push(ChannelDepth {
+            name: spec.name.clone(),
+            inferred: inferred[i],
+            capacity,
+            is_long,
+        });
+    }
+
+    let topology: Vec<(Option<String>, Option<String>)> = (0..nc)
+        .map(|i| {
+            (
+                producers[i].map(|ni| nodes[ni].name().to_string()),
+                consumers[i].map(|ni| nodes[ni].name().to_string()),
+            )
+        })
+        .collect();
+
+    Ok(Engine::new(channels, channel_names, nodes, topology, depths))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::elem::Elem;
+    use crate::sim::graph::GraphBuilder;
+
+    /// The canonical Figure-2 shape: broadcast → (reduce → repeat) vs
+    /// bypass, rejoined at a zip. The bypass must be inferred at n+2.
+    fn reconvergent(n: usize) -> GraphBuilder {
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let src = sc
+            .source_gen("src", (n * n) as u64, |i| Elem::Scalar(1.0 + i as f32))
+            .unwrap();
+        let [to_sum, bypass] = sc.broadcast("bc", src, ["to_sum", "bypass"]).unwrap();
+        let sum = sc.reduce("sum", to_sum, n, 0.0, |a, b| a + b).unwrap();
+        let rep = sc.repeat("rep", sum, n).unwrap();
+        let div = sc
+            .zip("div", [bypass, rep], |xs| {
+                Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+            })
+            .unwrap();
+        sc.sink("sink", div, Some((n * n) as u64)).unwrap();
+        g
+    }
+
+    #[test]
+    fn bypass_inferred_at_n_plus_2() {
+        for n in [4usize, 16, 64] {
+            let engine = reconvergent(n).compile(DepthPolicy::Inferred).unwrap();
+            let report = engine.depth_report();
+            let bypass = report.iter().find(|c| c.name == "bypass").unwrap();
+            assert!(bypass.is_long);
+            assert_eq!(bypass.inferred, n + 2, "N={n}");
+            assert_eq!(bypass.capacity, Capacity::Bounded(n + 2));
+            // Everything else is a short FIFO.
+            for c in report.iter().filter(|c| c.name != "bypass") {
+                assert_eq!(c.inferred, 2, "channel '{}'", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn inferred_depth_completes_at_full_throughput() {
+        let n = 16;
+        let mut finite = reconvergent(n).compile(DepthPolicy::Inferred).unwrap();
+        let fs = finite.run(100_000).unwrap();
+        let mut base = reconvergent(n).compile(DepthPolicy::Unbounded).unwrap();
+        let bs = base.run(100_000).unwrap();
+        assert_eq!(fs.cycles, bs.cycles, "inferred depths match baseline");
+    }
+
+    #[test]
+    fn paper_policy_equals_inferred_here() {
+        let n = 8;
+        let a = reconvergent(n).compile(DepthPolicy::Paper(n)).unwrap();
+        let b = reconvergent(n).compile(DepthPolicy::Inferred).unwrap();
+        assert_eq!(a.depth_report(), b.depth_report());
+    }
+
+    #[test]
+    fn explicit_plan_overrides_long_channels_only() {
+        let n = 8;
+        let engine = reconvergent(n)
+            .compile(DepthPolicy::Explicit(FifoPlan::with_long_depth(3)))
+            .unwrap();
+        let bypass = engine
+            .depth_report()
+            .iter()
+            .find(|c| c.name == "bypass")
+            .unwrap()
+            .clone();
+        assert_eq!(bypass.capacity, Capacity::Bounded(3));
+        assert_eq!(bypass.inferred, n + 2, "analysis result still reported");
+    }
+
+    #[test]
+    fn unbounded_policy_unbounds_everything() {
+        let engine = reconvergent(4).compile(DepthPolicy::Unbounded).unwrap();
+        assert!(engine
+            .depth_report()
+            .iter()
+            .all(|c| c.capacity == Capacity::Unbounded));
+    }
+
+    #[test]
+    fn independent_source_join_stays_short() {
+        // Two independent sources zipped: arbitrarily imbalanced arrival,
+        // but no shared broadcast → backpressure is free → depth 2.
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let a = sc
+            .source_gen("src_a", 8, |i| Elem::Scalar(i as f32))
+            .unwrap();
+        let slow = sc.reduce("slow", a, 8, 0.0, |x, y| x + y).unwrap();
+        let b = sc
+            .source_gen("src_b", 1, |i| Elem::Scalar(i as f32))
+            .unwrap();
+        let z = sc
+            .zip("join", [b, slow], |xs| {
+                Elem::Scalar(xs[0].scalar() + xs[1].scalar())
+            })
+            .unwrap();
+        sc.sink("sink", z, Some(1)).unwrap();
+        let engine = g.compile(DepthPolicy::Inferred).unwrap();
+        assert!(engine.depth_report().iter().all(|c| c.inferred == 2));
+    }
+
+    #[test]
+    fn opaque_node_with_implicit_channels_is_rejected() {
+        use crate::sim::nodes::Map;
+        let mut g = GraphBuilder::new();
+        let src = {
+            let mut sc = g.root();
+            sc.source_gen("src", 4, |i| Elem::Scalar(i as f32)).unwrap()
+        };
+        // Externally constructed node wired across an implicit (port)
+        // channel: its timing is unknown, so sizing must refuse.
+        let out = g.channel("out", Capacity::Bounded(2)).unwrap();
+        let input = src.channel();
+        g.add_node(
+            Box::new(Map::new("ext", input, out, |x| x.clone())),
+            &[input],
+            &[out],
+        )
+        .unwrap();
+        g.sink("sink", out, Some(4)).unwrap();
+        let err = g.compile(DepthPolicy::Inferred);
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("add_node")));
+    }
+
+    #[test]
+    fn divergent_latency_costs_one_slot_per_cycle() {
+        // Extra latency L on the reduction path ⇒ inferred depth n+2+L,
+        // the ablation experiment's compile-time twin.
+        let n = 8;
+        for lat in [1u64, 3, 7] {
+            let mut g = GraphBuilder::new();
+            let mut sc = g.root();
+            let src = sc
+                .source_gen("src", (n * n) as u64, |i| Elem::Scalar(1.0 + i as f32))
+                .unwrap();
+            let [to_sum, bypass] = sc.broadcast("bc", src, ["to_sum", "bypass"]).unwrap();
+            let sum = sc.reduce("sum", to_sum, n, 0.0, |a, b| a + b).unwrap();
+            let delayed = sc
+                .map_latency("delay", sum, lat, |x| x.clone())
+                .unwrap();
+            let rep = sc.repeat("rep", delayed, n).unwrap();
+            let div = sc
+                .zip("div", [bypass, rep], |xs| {
+                    Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+                })
+                .unwrap();
+            sc.sink("sink", div, Some((n * n) as u64)).unwrap();
+            let engine = g.compile(DepthPolicy::Inferred).unwrap();
+            let bypass = engine
+                .depth_report()
+                .iter()
+                .find(|c| c.name == "bypass")
+                .unwrap()
+                .clone();
+            assert_eq!(bypass.inferred as u64, n as u64 + 2 + lat, "L={lat}");
+        }
+    }
+}

@@ -16,6 +16,7 @@
 use std::collections::HashMap;
 
 use super::channel::{Capacity, Channel, ChannelId, ChannelStats};
+use super::compile::ChannelDepth;
 use super::metrics::GraphMetrics;
 use super::node::{Node, PortCtx};
 use crate::{Error, Result};
@@ -45,6 +46,10 @@ pub struct RunSummary {
     pub node_fires: Vec<(String, u64)>,
     /// Per-channel statistics, by channel name.
     pub channel_stats: Vec<(String, ChannelStats)>,
+    /// Compile-time depth report: per channel, the inferred depth, the
+    /// capacity actually configured, and whether the latency-balance
+    /// analysis classified it as a long FIFO.
+    pub depths: Vec<ChannelDepth>,
 }
 
 impl RunSummary {
@@ -69,6 +74,11 @@ impl RunSummary {
     pub fn metrics(&self) -> GraphMetrics {
         GraphMetrics::from_summary(self)
     }
+
+    /// Compile-time depth record for one channel by name.
+    pub fn depth_of(&self, channel: &str) -> Option<&ChannelDepth> {
+        self.depths.iter().find(|d| d.name == channel)
+    }
 }
 
 /// A validated, runnable dataflow graph.
@@ -79,6 +89,8 @@ pub struct Engine {
     /// Per-channel `(producer, consumer)` node names (graph topology,
     /// used by [`Engine::to_dot`]).
     topology: Vec<(Option<String>, Option<String>)>,
+    /// Compile-time depth report (see [`ChannelDepth`]).
+    depths: Vec<ChannelDepth>,
     cycle: u64,
 }
 
@@ -88,14 +100,23 @@ impl Engine {
         channel_names: HashMap<String, ChannelId>,
         nodes: Vec<Box<dyn Node>>,
         topology: Vec<(Option<String>, Option<String>)>,
+        depths: Vec<ChannelDepth>,
     ) -> Self {
         Engine {
             channels,
             channel_names,
             nodes,
             topology,
+            depths,
             cycle: 0,
         }
+    }
+
+    /// The compile-time depth report: per channel, the depth the
+    /// latency-balance analysis derived and the capacity actually
+    /// configured. See [`super::compile`].
+    pub fn depth_report(&self) -> &[ChannelDepth] {
+        &self.depths
     }
 
     /// Graphviz DOT rendering of the wiring: nodes are units, edges are
@@ -264,6 +285,7 @@ impl Engine {
                 .iter()
                 .map(|c| (c.name().to_string(), c.stats().clone()))
                 .collect(),
+            depths: self.depths.clone(),
         }
     }
 }

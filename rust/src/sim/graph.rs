@@ -1,13 +1,36 @@
-//! Graph construction with wiring validation.
+//! Graph construction: ports, scopes, and wiring validation.
 //!
-//! [`GraphBuilder`] accumulates channels and nodes, enforces that every
-//! channel has exactly one producer and one consumer (streaming dataflow
-//! wiring is point-to-point; fan-out is explicit via `Broadcast`), and
-//! produces an [`Engine`].
+//! Graphs are built through two cooperating APIs over one core:
+//!
+//! * **Port API** (preferred) — node helpers on a [`Scope`] return a
+//!   typed output [`Port`]; channels are created implicitly and named
+//!   after their producer (`Broadcast` outputs carry caller-chosen
+//!   labels, which is how the paper's `e_bypass`/`s_bypass` FIFOs keep
+//!   their names). A `Port` is consumed *by value*, so the
+//!   exactly-one-consumer rule of point-to-point streaming dataflow is
+//!   enforced by the borrow checker rather than at runtime. Scopes
+//!   nest: [`GraphBuilder::scope`] prefixes every node and channel name
+//!   (`h0/...`), which is how multi-head / sharded graphs compose
+//!   without manual string plumbing. Finish with
+//!   [`GraphBuilder::compile`], which validates the structure and sizes
+//!   every implicit FIFO per the chosen
+//!   [`DepthPolicy`](super::compile::DepthPolicy) — including the
+//!   automatic N+2 long-FIFO inference (see [`super::compile`]).
+//! * **Channel-first API** (legacy) — pre-declare channels with
+//!   [`GraphBuilder::channel`] and wire nodes to explicit
+//!   [`ChannelId`]s. Explicitly declared capacities are always kept
+//!   verbatim; [`GraphBuilder::build`] is `compile(DepthPolicy::
+//!   Inferred)`, which leaves them untouched.
+//!
+//! Both APIs accumulate into the same structures, so they can be mixed,
+//! and both enforce that every channel has exactly one producer and one
+//! consumer (fan-out is explicit via `Broadcast`).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::channel::{Capacity, Channel, ChannelId};
+use super::channel::{Capacity, ChannelId};
+use super::compile::{self, DepthPolicy};
 use super::elem::Elem;
 use super::engine::Engine;
 use super::node::Node;
@@ -18,14 +41,70 @@ use crate::{Error, Result};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct NodeId(pub(crate) usize);
 
+/// A typed handle to one node's output stream.
+///
+/// Ports are move-only: passing a `Port` to a consuming helper transfers
+/// the stream, so wiring two consumers to one channel is a *compile-time*
+/// error in client code. A `Port` left unused is a dangling channel and
+/// is rejected by [`GraphBuilder::compile`].
+#[must_use = "an unconsumed Port leaves its channel without a consumer"]
+#[derive(Debug)]
+pub struct Port {
+    chan: ChannelId,
+    graph: u64,
+}
+
+impl Port {
+    /// The underlying channel (for diagnostics / capacity overrides).
+    pub fn channel(&self) -> ChannelId {
+        self.chan
+    }
+}
+
+static NEXT_GRAPH_UID: AtomicU64 = AtomicU64::new(1);
+
+/// Per-channel build-time record.
+pub(crate) struct ChannelSpec {
+    pub(crate) name: String,
+    /// `Some` = explicitly sized (channel-first API); `None` = sized by
+    /// `compile()` under the selected depth policy.
+    pub(crate) declared: Option<Capacity>,
+}
+
+/// Structural classification of a node, recorded for the compile-time
+/// latency/occupancy analysis (see [`super::compile`]).
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum NodeKind {
+    Source,
+    Map { latency: u64 },
+    Reduce { n: usize },
+    Repeat { n: usize },
+    Scan,
+    Broadcast,
+    Zip,
+    Sink,
+    /// Externally constructed node ([`GraphBuilder::add_node`]).
+    Opaque,
+}
+
+/// Wiring + kind metadata for one node.
+pub(crate) struct NodeMeta {
+    pub(crate) kind: NodeKind,
+    pub(crate) inputs: Vec<ChannelId>,
+    pub(crate) outputs: Vec<ChannelId>,
+}
+
 /// Incrementally builds a dataflow graph.
 pub struct GraphBuilder {
-    channels: Vec<Channel>,
-    channel_names: HashMap<String, ChannelId>,
-    producers: Vec<Option<String>>,
-    consumers: Vec<Option<String>>,
-    nodes: Vec<Box<dyn Node>>,
-    node_names: HashMap<String, NodeId>,
+    pub(crate) uid: u64,
+    pub(crate) specs: Vec<ChannelSpec>,
+    pub(crate) channel_names: HashMap<String, ChannelId>,
+    /// Producing / consuming node index per channel.
+    pub(crate) producers: Vec<Option<usize>>,
+    pub(crate) consumers: Vec<Option<usize>>,
+    pub(crate) nodes: Vec<Box<dyn Node>>,
+    pub(crate) node_names: HashMap<String, NodeId>,
+    pub(crate) meta: Vec<NodeMeta>,
 }
 
 impl Default for GraphBuilder {
@@ -38,31 +117,55 @@ impl GraphBuilder {
     /// Empty graph.
     pub fn new() -> Self {
         GraphBuilder {
-            channels: Vec::new(),
+            uid: NEXT_GRAPH_UID.fetch_add(1, Ordering::Relaxed),
+            specs: Vec::new(),
             channel_names: HashMap::new(),
             producers: Vec::new(),
             consumers: Vec::new(),
             nodes: Vec::new(),
             node_names: HashMap::new(),
+            meta: Vec::new(),
         }
     }
 
-    /// Create a channel. Depth-0 bounded channels are rejected (they can
-    /// never transfer an element under two-phase semantics).
-    pub fn channel(&mut self, name: impl Into<String>, cap: Capacity) -> Result<ChannelId> {
-        let name = name.into();
-        if let Capacity::Bounded(0) = cap {
+    /// The root (unprefixed) scope for port-based construction.
+    pub fn root(&mut self) -> Scope<'_> {
+        Scope {
+            b: self,
+            prefix: String::new(),
+        }
+    }
+
+    /// A named scope: every node and channel created through it gets a
+    /// `name/` prefix, so independent subgraphs (attention heads,
+    /// shards) compose without manual string plumbing. Scopes nest.
+    pub fn scope(&mut self, name: impl AsRef<str>) -> Scope<'_> {
+        Scope {
+            prefix: format!("{}/", name.as_ref()),
+            b: self,
+        }
+    }
+
+    fn new_channel(&mut self, name: String, declared: Option<Capacity>) -> Result<ChannelId> {
+        if let Some(Capacity::Bounded(0)) = declared {
             return Err(Error::Graph(format!("channel '{name}': depth 0 is invalid")));
         }
         if self.channel_names.contains_key(&name) {
             return Err(Error::Graph(format!("duplicate channel name '{name}'")));
         }
-        let id = ChannelId(self.channels.len());
+        let id = ChannelId(self.specs.len());
         self.channel_names.insert(name.clone(), id);
-        self.channels.push(Channel::new(name, cap));
+        self.specs.push(ChannelSpec { name, declared });
         self.producers.push(None);
         self.consumers.push(None);
         Ok(id)
+    }
+
+    /// Create an explicitly sized channel. Depth-0 bounded channels are
+    /// rejected (they can never transfer an element under two-phase
+    /// semantics).
+    pub fn channel(&mut self, name: impl Into<String>, cap: Capacity) -> Result<ChannelId> {
+        self.new_channel(name.into(), Some(cap))
     }
 
     /// A depth-2 channel — the paper's "short FIFO".
@@ -70,8 +173,11 @@ impl GraphBuilder {
         self.channel(name, Capacity::Bounded(2))
     }
 
+    /// Register wiring + metadata for a node about to be added; returns
+    /// its id. The node itself is pushed by the caller right after.
     fn register(
         &mut self,
+        kind: NodeKind,
         name: &str,
         inputs: &[ChannelId],
         outputs: &[ChannelId],
@@ -79,33 +185,47 @@ impl GraphBuilder {
         if self.node_names.contains_key(name) {
             return Err(Error::Graph(format!("duplicate node name '{name}'")));
         }
+        let idx = self.nodes.len();
         for &c in inputs {
-            match &self.consumers[c.0] {
-                Some(prev) => {
-                    return Err(Error::Graph(format!(
-                        "channel '{}' already consumed by '{prev}' (also wired to '{name}')",
-                        self.channels[c.0].name()
-                    )))
-                }
-                slot @ None => {
-                    let _ = slot;
-                    self.consumers[c.0] = Some(name.to_string());
-                }
+            if let Some(prev) = self.consumers[c.0] {
+                return Err(Error::Graph(format!(
+                    "channel '{}' already consumed by '{}' (also wired to '{name}')",
+                    self.specs[c.0].name,
+                    self.nodes[prev].name()
+                )));
             }
+            self.consumers[c.0] = Some(idx);
         }
         for &c in outputs {
-            match &self.producers[c.0] {
-                Some(prev) => {
-                    return Err(Error::Graph(format!(
-                        "channel '{}' already produced by '{prev}' (also wired to '{name}')",
-                        self.channels[c.0].name()
-                    )))
-                }
-                None => self.producers[c.0] = Some(name.to_string()),
+            if let Some(prev) = self.producers[c.0] {
+                return Err(Error::Graph(format!(
+                    "channel '{}' already produced by '{}' (also wired to '{name}')",
+                    self.specs[c.0].name,
+                    self.nodes[prev].name()
+                )));
             }
+            self.producers[c.0] = Some(idx);
         }
-        let id = NodeId(self.nodes.len());
+        let id = NodeId(idx);
         self.node_names.insert(name.to_string(), id);
+        self.meta.push(NodeMeta {
+            kind,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+        });
+        Ok(id)
+    }
+
+    fn add_node_kind(
+        &mut self,
+        kind: NodeKind,
+        node: Box<dyn Node>,
+        inputs: &[ChannelId],
+        outputs: &[ChannelId],
+    ) -> Result<NodeId> {
+        let name = node.name().to_string();
+        let id = self.register(kind, &name, inputs, outputs)?;
+        self.nodes.push(node);
         Ok(id)
     }
 
@@ -116,13 +236,10 @@ impl GraphBuilder {
         inputs: &[ChannelId],
         outputs: &[ChannelId],
     ) -> Result<NodeId> {
-        let name = node.name().to_string();
-        let id = self.register(&name, inputs, outputs)?;
-        self.nodes.push(node);
-        Ok(id)
+        self.add_node_kind(NodeKind::Opaque, node, inputs, outputs)
     }
 
-    // ---- Table-1 node helpers -------------------------------------------
+    // ---- Table-1 node helpers (channel-first API) -----------------------
 
     /// `Map` (unit latency).
     pub fn map(
@@ -132,7 +249,7 @@ impl GraphBuilder {
         output: ChannelId,
         f: impl FnMut(&Elem) -> Elem + 'static,
     ) -> Result<NodeId> {
-        self.add_node(Box::new(Map::new(name, input, output, f)), &[input], &[output])
+        self.map_latency(name, input, output, 1, f)
     }
 
     /// `Map` with explicit pipeline latency.
@@ -144,7 +261,8 @@ impl GraphBuilder {
         latency: u64,
         f: impl FnMut(&Elem) -> Elem + 'static,
     ) -> Result<NodeId> {
-        self.add_node(
+        self.add_node_kind(
+            NodeKind::Map { latency },
             Box::new(Map::with_latency(name, input, output, latency, f)),
             &[input],
             &[output],
@@ -161,7 +279,8 @@ impl GraphBuilder {
         init: f32,
         f: impl FnMut(f32, f32) -> f32 + 'static,
     ) -> Result<NodeId> {
-        self.add_node(
+        self.add_node_kind(
+            NodeKind::Reduce { n },
             Box::new(Reduce::new(name, input, output, n, init, f)),
             &[input],
             &[output],
@@ -178,7 +297,8 @@ impl GraphBuilder {
         output: ChannelId,
         n: usize,
     ) -> Result<NodeId> {
-        self.add_node(
+        self.add_node_kind(
+            NodeKind::Reduce { n },
             Box::new(Reduce::new_elem(
                 name,
                 input,
@@ -202,7 +322,8 @@ impl GraphBuilder {
         init: Vec<f32>,
         f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
     ) -> Result<NodeId> {
-        self.add_node(
+        self.add_node_kind(
+            NodeKind::Reduce { n },
             Box::new(MemReduce::new(name, input, output, n, init, f)),
             &[input],
             &[output],
@@ -217,7 +338,12 @@ impl GraphBuilder {
         output: ChannelId,
         n: usize,
     ) -> Result<NodeId> {
-        self.add_node(Box::new(Repeat::new(name, input, output, n)), &[input], &[output])
+        self.add_node_kind(
+            NodeKind::Repeat { n },
+            Box::new(Repeat::new(name, input, output, n)),
+            &[input],
+            &[output],
+        )
     }
 
     /// `Scan`.
@@ -232,7 +358,8 @@ impl GraphBuilder {
         updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
         f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
     ) -> Result<NodeId> {
-        self.add_node(
+        self.add_node_kind(
+            NodeKind::Scan,
             Box::new(Scan::new(name, input, output, n, init, updt, f)),
             &[input],
             &[output],
@@ -246,7 +373,12 @@ impl GraphBuilder {
         input: ChannelId,
         outputs: &[ChannelId],
     ) -> Result<NodeId> {
-        self.add_node(Box::new(Broadcast::new(name, input, outputs)), &[input], outputs)
+        self.add_node_kind(
+            NodeKind::Broadcast,
+            Box::new(Broadcast::new(name, input, outputs)),
+            &[input],
+            outputs,
+        )
     }
 
     /// `Zip` with a combining function.
@@ -257,7 +389,12 @@ impl GraphBuilder {
         output: ChannelId,
         f: impl FnMut(&[Elem]) -> Elem + 'static,
     ) -> Result<NodeId> {
-        self.add_node(Box::new(Zip::new(name, inputs, output, f)), inputs, &[output])
+        self.add_node_kind(
+            NodeKind::Zip,
+            Box::new(Zip::new(name, inputs, output, f)),
+            inputs,
+            &[output],
+        )
     }
 
     /// `Source` from a materialised sequence.
@@ -267,7 +404,12 @@ impl GraphBuilder {
         output: ChannelId,
         elems: Vec<Elem>,
     ) -> Result<NodeId> {
-        self.add_node(Box::new(Source::from_vec(name, output, elems)), &[], &[output])
+        self.add_node_kind(
+            NodeKind::Source,
+            Box::new(Source::from_vec(name, output, elems)),
+            &[],
+            &[output],
+        )
     }
 
     /// `Source` from a generator of `len` elements.
@@ -278,7 +420,12 @@ impl GraphBuilder {
         len: u64,
         f: impl FnMut(u64) -> Elem + 'static,
     ) -> Result<NodeId> {
-        self.add_node(Box::new(Source::generator(name, output, len, f)), &[], &[output])
+        self.add_node_kind(
+            NodeKind::Source,
+            Box::new(Source::generator(name, output, len, f)),
+            &[],
+            &[output],
+        )
     }
 
     /// `Sink`; returns the handle to read results after the run.
@@ -290,32 +437,245 @@ impl GraphBuilder {
     ) -> Result<SinkHandle> {
         let sink = Sink::new(name, input, expected);
         let handle = sink.handle();
-        self.add_node(Box::new(sink), &[input], &[])?;
+        self.add_node_kind(NodeKind::Sink, Box::new(sink), &[input], &[])?;
         Ok(handle)
     }
 
+    /// Validate the structure, size every implicitly created channel
+    /// under `policy`, and produce a runnable [`Engine`] carrying the
+    /// compile-time depth report. See [`super::compile`].
+    pub fn compile(self, policy: DepthPolicy) -> Result<Engine> {
+        compile::compile(self, policy)
+    }
+
     /// Validate wiring and produce an [`Engine`].
+    ///
+    /// Equivalent to `compile(DepthPolicy::Inferred)`: explicitly sized
+    /// channels (the whole graph, under the channel-first API) keep
+    /// their declared capacities.
     pub fn build(self) -> Result<Engine> {
-        for (i, ch) in self.channels.iter().enumerate() {
-            if self.producers[i].is_none() {
-                return Err(Error::Graph(format!("channel '{}' has no producer", ch.name())));
-            }
-            if self.consumers[i].is_none() {
-                return Err(Error::Graph(format!("channel '{}' has no consumer", ch.name())));
-            }
+        self.compile(DepthPolicy::Inferred)
+    }
+}
+
+/// A namespaced sub-builder: node helpers return typed [`Port`]s and
+/// create channels implicitly. Obtained from [`GraphBuilder::root`] or
+/// [`GraphBuilder::scope`]; see the module docs for the construction
+/// model.
+pub struct Scope<'g> {
+    b: &'g mut GraphBuilder,
+    prefix: String,
+}
+
+impl Scope<'_> {
+    /// A nested scope (`outer/inner/...`).
+    pub fn scope(&mut self, name: impl AsRef<str>) -> Scope<'_> {
+        let prefix = format!("{}{}/", self.prefix, name.as_ref());
+        Scope {
+            prefix,
+            b: &mut *self.b,
         }
-        let topology: Vec<(Option<String>, Option<String>)> = self
-            .producers
-            .iter()
-            .cloned()
-            .zip(self.consumers.iter().cloned())
-            .collect();
-        Ok(Engine::new(
-            self.channels,
-            self.channel_names,
-            self.nodes,
-            topology,
+    }
+
+    /// This scope's name prefix (`""` for the root).
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    fn qualify(&self, name: &str) -> String {
+        format!("{}{name}", self.prefix)
+    }
+
+    /// Create this scope's output channel for node `label`; the channel
+    /// is named after its producer.
+    fn fresh(&mut self, label: &str) -> Result<(ChannelId, Port)> {
+        let qualified = self.qualify(label);
+        let id = self.b.new_channel(qualified, None)?;
+        Ok((
+            id,
+            Port {
+                chan: id,
+                graph: self.b.uid,
+            },
         ))
+    }
+
+    fn claim(&self, port: &Port, node: &str) -> Result<ChannelId> {
+        if port.graph != self.b.uid {
+            return Err(Error::Graph(format!(
+                "node '{}': input port belongs to a different graph",
+                self.qualify(node)
+            )));
+        }
+        Ok(port.chan)
+    }
+
+    /// `Source` from a materialised sequence.
+    pub fn source_vec(&mut self, name: &str, elems: Vec<Elem>) -> Result<Port> {
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.source_vec(&qname, out, elems)?;
+        Ok(port)
+    }
+
+    /// `Source` from a generator of `len` elements.
+    pub fn source_gen(
+        &mut self,
+        name: &str,
+        len: u64,
+        f: impl FnMut(u64) -> Elem + 'static,
+    ) -> Result<Port> {
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.source_gen(&qname, out, len, f)?;
+        Ok(port)
+    }
+
+    /// `Map` (unit latency).
+    pub fn map(
+        &mut self,
+        name: &str,
+        input: Port,
+        f: impl FnMut(&Elem) -> Elem + 'static,
+    ) -> Result<Port> {
+        self.map_latency(name, input, 1, f)
+    }
+
+    /// `Map` with explicit pipeline latency.
+    pub fn map_latency(
+        &mut self,
+        name: &str,
+        input: Port,
+        latency: u64,
+        f: impl FnMut(&Elem) -> Elem + 'static,
+    ) -> Result<Port> {
+        let input = self.claim(&input, name)?;
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.map_latency(&qname, input, out, latency, f)?;
+        Ok(port)
+    }
+
+    /// Scalar `Reduce` over windows of `n`.
+    pub fn reduce(
+        &mut self,
+        name: &str,
+        input: Port,
+        n: usize,
+        init: f32,
+        f: impl FnMut(f32, f32) -> f32 + 'static,
+    ) -> Result<Port> {
+        let input = self.claim(&input, name)?;
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.reduce(&qname, input, out, n, init, f)?;
+        Ok(port)
+    }
+
+    /// "Last of every n elements" (samples a running scan).
+    pub fn last_of(&mut self, name: &str, input: Port, n: usize) -> Result<Port> {
+        let input = self.claim(&input, name)?;
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.last_of(&qname, input, out, n)?;
+        Ok(port)
+    }
+
+    /// `MemReduce` over vector elements.
+    pub fn mem_reduce(
+        &mut self,
+        name: &str,
+        input: Port,
+        n: usize,
+        init: Vec<f32>,
+        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
+    ) -> Result<Port> {
+        let input = self.claim(&input, name)?;
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.mem_reduce(&qname, input, out, n, init, f)?;
+        Ok(port)
+    }
+
+    /// `Repeat` each element `n` times.
+    pub fn repeat(&mut self, name: &str, input: Port, n: usize) -> Result<Port> {
+        let input = self.claim(&input, name)?;
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.repeat(&qname, input, out, n)?;
+        Ok(port)
+    }
+
+    /// `Scan` with window `n`.
+    pub fn scan(
+        &mut self,
+        name: &str,
+        input: Port,
+        n: usize,
+        init: Elem,
+        updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+    ) -> Result<Port> {
+        let input = self.claim(&input, name)?;
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.scan(&qname, input, out, n, init, updt, f)?;
+        Ok(port)
+    }
+
+    /// `Broadcast` into `K` labelled output streams. The labels name
+    /// the fan-out channels (e.g. `["e_sum", "e_bypass"]`), so depth
+    /// reports and deadlock diagnostics stay readable.
+    pub fn broadcast<const K: usize>(
+        &mut self,
+        name: &str,
+        input: Port,
+        labels: [&str; K],
+    ) -> Result<[Port; K]> {
+        let input = self.claim(&input, name)?;
+        let mut outs = Vec::with_capacity(K);
+        let mut ports = Vec::with_capacity(K);
+        for label in labels {
+            let (out, port) = self.fresh(label)?;
+            outs.push(out);
+            ports.push(port);
+        }
+        let qname = self.qualify(name);
+        self.b.broadcast(&qname, input, &outs)?;
+        match ports.try_into() {
+            Ok(arr) => Ok(arr),
+            Err(_) => unreachable!("built exactly K ports"),
+        }
+    }
+
+    /// `Zip` with a combining function over two or more input streams.
+    pub fn zip(
+        &mut self,
+        name: &str,
+        inputs: impl IntoIterator<Item = Port>,
+        f: impl FnMut(&[Elem]) -> Elem + 'static,
+    ) -> Result<Port> {
+        let mut ins = Vec::new();
+        for p in inputs {
+            ins.push(self.claim(&p, name)?);
+        }
+        if ins.len() < 2 {
+            return Err(Error::Graph(format!(
+                "zip '{}' needs at least two inputs",
+                self.qualify(name)
+            )));
+        }
+        let (out, port) = self.fresh(name)?;
+        let qname = self.qualify(name);
+        self.b.zip(&qname, &ins, out, f)?;
+        Ok(port)
+    }
+
+    /// `Sink`; returns the handle to read results after the run.
+    pub fn sink(&mut self, name: &str, input: Port, expected: Option<u64>) -> Result<SinkHandle> {
+        let input = self.claim(&input, name)?;
+        let qname = self.qualify(name);
+        self.b.sink(&qname, input, expected)
     }
 }
 
@@ -361,6 +721,19 @@ mod tests {
     }
 
     #[test]
+    fn rejects_channel_cycle() {
+        // a → inc1 → b → inc2 → a is structurally well-formed (every
+        // channel has one producer + one consumer) but can never move
+        // its first element; compile must reject it.
+        let mut g = GraphBuilder::new();
+        let a = g.short_fifo("a").unwrap();
+        let b = g.short_fifo("b").unwrap();
+        g.map("inc1", a, b, |x| x.clone()).unwrap();
+        g.map("inc2", b, a, |x| x.clone()).unwrap();
+        assert!(matches!(g.build(), Err(Error::Graph(msg)) if msg.contains("cycle")));
+    }
+
+    #[test]
     fn dot_export_names_nodes_and_channels() {
         let mut g = GraphBuilder::new();
         let c = g.short_fifo("scores").unwrap();
@@ -388,5 +761,85 @@ mod tests {
         let summary = engine.run(1_000).unwrap();
         assert_eq!(h.scalars(), vec![1.0, 2.0, 3.0, 4.0]);
         assert!(summary.cycles > 0);
+    }
+
+    // ---- port / scope API ------------------------------------------------
+
+    #[test]
+    fn port_pipeline_runs_without_channel_declarations() {
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let src = sc
+            .source_gen("src", 4, |i| Elem::Scalar(i as f32))
+            .unwrap();
+        let inc = sc.map("inc", src, |x| Elem::Scalar(x.scalar() + 1.0)).unwrap();
+        let h = sc.sink("sink", inc, Some(4)).unwrap();
+        let mut engine = g.build().unwrap();
+        engine.run(1_000).unwrap();
+        assert_eq!(h.scalars(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scopes_prefix_nodes_and_channels() {
+        let mut g = GraphBuilder::new();
+        for h in 0..2 {
+            let mut sc = g.scope(format!("h{h}"));
+            let src = sc.source_gen("src", 2, |i| Elem::Scalar(i as f32)).unwrap();
+            let mut inner = sc.scope("post");
+            let inc = inner.map("inc", src, |x| x.clone()).unwrap();
+            inner.sink("sink", inc, Some(2)).unwrap();
+        }
+        let engine = g.build().unwrap();
+        let names = engine.channel_names();
+        assert!(names.iter().any(|n| n == "h0/src"));
+        assert!(names.iter().any(|n| n == "h1/post/inc"));
+    }
+
+    #[test]
+    fn duplicate_names_in_same_scope_rejected() {
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let a = sc.source_gen("src", 1, |_| Elem::Scalar(0.0)).unwrap();
+        let b = sc.map("stage", a, |x| x.clone()).unwrap();
+        let err = sc.map("stage", b, |x| x.clone());
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("duplicate")));
+    }
+
+    #[test]
+    fn dangling_port_is_rejected_at_compile() {
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let _dangling = sc.source_gen("src", 1, |_| Elem::Scalar(0.0)).unwrap();
+        assert!(matches!(g.build(), Err(Error::Graph(msg)) if msg.contains("no consumer")));
+    }
+
+    #[test]
+    fn foreign_port_is_rejected() {
+        let mut g1 = GraphBuilder::new();
+        let mut sc1 = g1.root();
+        let p = sc1.source_gen("src", 1, |_| Elem::Scalar(0.0)).unwrap();
+        let mut g2 = GraphBuilder::new();
+        let mut sc2 = g2.root();
+        let err = sc2.sink("sink", p, None);
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("different graph")));
+    }
+
+    #[test]
+    fn broadcast_labels_name_fanout_channels() {
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let src = sc.source_gen("src", 4, |i| Elem::Scalar(i as f32)).unwrap();
+        let [left, right] = sc.broadcast("bc", src, ["left", "right"]).unwrap();
+        let z = sc
+            .zip("add", [left, right], |xs| {
+                Elem::Scalar(xs[0].scalar() + xs[1].scalar())
+            })
+            .unwrap();
+        let h = sc.sink("sink", z, Some(4)).unwrap();
+        let mut engine = g.build().unwrap();
+        assert!(engine.channel_id("left").is_some());
+        assert!(engine.channel_id("right").is_some());
+        engine.run(1_000).unwrap();
+        assert_eq!(h.scalars(), vec![0.0, 2.0, 4.0, 6.0]);
     }
 }

@@ -114,6 +114,7 @@ mod tests {
             cycles,
             outcome: RunOutcome::Completed,
             node_fires: vec![("n".into(), cycles)],
+            depths: Vec::new(),
             channel_stats: peaks
                 .iter()
                 .map(|(name, p)| {

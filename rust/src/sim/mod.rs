@@ -19,12 +19,31 @@
 //!   deadlock (no progress with work outstanding), and collects
 //!   [`metrics`].
 //!
+//! ## Building graphs: ports, scopes, compile
+//!
+//! Graphs are assembled with the [`GraphBuilder`] **port API**
+//! ([`graph`]): node helpers on a [`Scope`] return a typed output
+//! [`Port`] which the next helper consumes *by value* — channels are
+//! created implicitly, the one-producer/one-consumer rule is enforced by
+//! move semantics, and [`GraphBuilder::scope`] namespaces whole
+//! subgraphs (`h0/...`) so multi-head graphs compose. The final
+//! [`GraphBuilder::compile`] step ([`compile`]) validates the structure
+//! (danglers, channel cycles) and sizes every FIFO under a
+//! [`DepthPolicy`]: the default `Inferred` policy statically derives the
+//! latency imbalance of reconvergent `Broadcast → … → Zip` paths and
+//! sizes the deep bypass FIFOs to the paper's **N+2** bound
+//! automatically; `Paper(n)` / `Explicit(plan)` / `Unbounded` reproduce
+//! the hand-planned configurations for sweeps and baselines. The
+//! chosen depths are reported on the [`Engine`] and every
+//! [`RunSummary`] ([`ChannelDepth`]).
+//!
 //! The paper's experimental question — *does a finite-FIFO configuration
 //! run at full throughput?* — is answered by comparing total cycles
 //! against the same graph with every FIFO set to unbounded depth
 //! ([`Capacity::Unbounded`]).
 
 pub mod channel;
+pub mod compile;
 pub mod elem;
 pub mod engine;
 pub mod graph;
@@ -33,9 +52,10 @@ pub mod node;
 pub mod nodes;
 
 pub use channel::{Capacity, ChannelId, ChannelStats};
+pub use compile::{ChannelDepth, DepthPolicy, FifoPlan};
 pub use elem::Elem;
 pub use engine::{Engine, RunOutcome, RunSummary};
-pub use graph::{GraphBuilder, NodeId};
+pub use graph::{GraphBuilder, NodeId, Port, Scope};
 pub use metrics::{GraphMetrics, OccupancyClass};
 pub use node::{Node, PortCtx};
 

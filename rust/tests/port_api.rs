@@ -1,0 +1,166 @@
+//! Acceptance tests for the port/scope/compile graph API.
+//!
+//! The redesign's contract, end to end:
+//!
+//! * building through ports with `DepthPolicy::Inferred` derives the
+//!   paper's N+2 long-FIFO depths for naive/scaled/reordered across
+//!   sizes, with throughput identical to the hand-planned `FifoPlan`
+//!   builds (II = 1 steady state);
+//! * all four variants agree with their golden references on random
+//!   shapes when built through ports + inferred depths (property test);
+//! * scoped multi-head construction produces stable, namespaced
+//!   graphs (golden `to_dot`).
+
+use sdpa_dataflow::attention::reference::max_abs_diff;
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{multihead, DepthPolicy, FifoPlan, Variant};
+use sdpa_dataflow::prng::{for_each_case, SplitMix64};
+use sdpa_dataflow::sim::{Capacity, Elem, GraphBuilder, RunOutcome};
+
+#[test]
+fn inferred_long_depths_match_paper_bound() {
+    for variant in [Variant::Naive, Variant::Scaled, Variant::Reordered] {
+        for n in [4usize, 16, 64] {
+            let w = Workload::random(n, 8, (n + 7) as u64);
+            let built = variant.build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+            let report = built.engine.depth_report();
+            // Exactly the paper's long FIFOs are flagged, each at N+2.
+            for name in variant.long_fifos() {
+                let rec = report.iter().find(|c| c.name == *name).unwrap();
+                assert!(rec.is_long, "{variant} N={n}: {name} not flagged");
+                assert_eq!(rec.inferred, n + 2, "{variant} N={n}: {name}");
+                assert_eq!(
+                    rec.capacity,
+                    Capacity::Bounded(n + 2),
+                    "{variant} N={n}: {name}"
+                );
+            }
+            let long_count = report.iter().filter(|c| c.is_long).count();
+            assert_eq!(
+                long_count,
+                variant.long_fifos().len(),
+                "{variant} N={n}: spurious long FIFOs"
+            );
+        }
+    }
+}
+
+#[test]
+fn memfree_inference_is_all_short() {
+    for n in [4usize, 16, 64] {
+        let w = Workload::random(n, 8, n as u64);
+        let built = Variant::MemoryFree
+            .build_with_policy(&w, DepthPolicy::Inferred)
+            .unwrap();
+        for c in built.engine.depth_report() {
+            assert_eq!(c.inferred, 2, "N={n}: channel '{}'", c.name);
+            assert_eq!(c.capacity, Capacity::Bounded(2), "N={n}: '{}'", c.name);
+        }
+    }
+}
+
+#[test]
+fn inferred_builds_match_hand_planned_throughput() {
+    for variant in Variant::ALL {
+        for n in [4usize, 16, 64] {
+            let w = Workload::random(n, 8, (31 * n) as u64);
+            let mut inferred = variant.build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+            let (out_inf, s_inf) = inferred.run().unwrap();
+            let mut planned = variant.build(&w, &FifoPlan::paper(n)).unwrap();
+            let (out_plan, s_plan) = planned.run().unwrap();
+            assert_eq!(
+                s_inf.cycles, s_plan.cycles,
+                "{variant} N={n}: inferred vs hand-planned cycles"
+            );
+            assert_eq!(out_inf, out_plan, "{variant} N={n}: outputs differ");
+            // Also full throughput vs the unbounded baseline.
+            let mut base = variant.build(&w, &FifoPlan::unbounded()).unwrap();
+            let (_, s_base) = base.run().unwrap();
+            assert_eq!(
+                s_inf.cycles, s_base.cycles,
+                "{variant} N={n}: inferred build not at full throughput"
+            );
+            // II = 1 steady state: one output row every N cycles.
+            if n >= 16 {
+                let gaps = inferred.out.arrival_gaps(8).unwrap();
+                assert_eq!(gaps, (n as u64, n as u64), "{variant} N={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn depth_report_travels_with_run_summaries() {
+    let w = Workload::random(16, 4, 77);
+    let mut built = Variant::Naive
+        .build_with_policy(&w, DepthPolicy::Inferred)
+        .unwrap();
+    let (_, summary) = built.run().unwrap();
+    assert_eq!(summary.outcome, RunOutcome::Completed);
+    let rec = summary.depth_of("e_bypass").unwrap();
+    assert!(rec.is_long);
+    assert_eq!(rec.inferred, 18);
+    // The observed peak never exceeds the configured depth.
+    assert!(summary.peak_elems("e_bypass").unwrap() <= 18);
+}
+
+#[test]
+fn property_variants_match_reference_via_inferred_ports() {
+    for_each_case(0x90A7, 12, |_case, rng: &mut SplitMix64| {
+        let n = 1 + rng.below(24) as usize;
+        let d = 1 + rng.below(12) as usize;
+        let variant = *rng.choose(&Variant::ALL);
+        let w = Workload::random(n, d, rng.next_u64());
+        let mut built = variant.build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        let (got, summary) = built.run().unwrap();
+        assert_eq!(summary.outcome, RunOutcome::Completed);
+        let gold = variant.reference(&w);
+        let err = max_abs_diff(&got, &gold);
+        assert!(
+            err < 1e-4,
+            "{variant} N={n} d={d}: max|Δ|={err} vs structure-matched reference"
+        );
+    });
+}
+
+#[test]
+fn scoped_two_head_graph_has_golden_dot() {
+    let mut g = GraphBuilder::new();
+    for h in 0..2 {
+        let mut sc = g.scope(format!("h{h}"));
+        let src = sc.source_gen("src", 3, |i| Elem::Scalar(i as f32)).unwrap();
+        let inc = sc.map("inc", src, |x| Elem::Scalar(x.scalar() + 1.0)).unwrap();
+        sc.sink("sink", inc, Some(3)).unwrap();
+    }
+    let engine = g.compile(DepthPolicy::Inferred).unwrap();
+    let expected = "\
+digraph dataflow {
+  rankdir=LR;
+  \"h0/src\" [shape=box];
+  \"h0/inc\" [shape=box];
+  \"h0/sink\" [shape=box];
+  \"h1/src\" [shape=box];
+  \"h1/inc\" [shape=box];
+  \"h1/sink\" [shape=box];
+  \"h0/src\" -> \"h0/inc\" [label=\"h0/src (depth=2)\"];
+  \"h0/inc\" -> \"h0/sink\" [label=\"h0/inc (depth=2)\"];
+  \"h1/src\" -> \"h1/inc\" [label=\"h1/src (depth=2)\"];
+  \"h1/inc\" -> \"h1/sink\" [label=\"h1/inc (depth=2)\"];
+}
+";
+    assert_eq!(engine.to_dot(), expected);
+}
+
+#[test]
+fn scoped_multihead_attention_is_namespaced_and_correct() {
+    let ws: Vec<Workload> = (0..2).map(|i| Workload::random(8, 4, 40 + i)).collect();
+    let mut built =
+        multihead::build_memfree_heads_with_policy(&ws, DepthPolicy::Inferred).unwrap();
+    let names = built.engine.channel_names();
+    assert!(names.iter().all(|n| n.starts_with("h0/") || n.starts_with("h1/")));
+    let (outs, _) = built.run().unwrap();
+    for (out, w) in outs.iter().zip(&ws) {
+        let gold = Variant::MemoryFree.reference(w);
+        assert!(max_abs_diff(out, &gold) < 1e-4);
+    }
+}
