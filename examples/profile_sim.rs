@@ -1,9 +1,57 @@
-fn main() {
-    use sdpa_dataflow::attention::{workload::Workload, FifoPlan, Variant};
-    let w = Workload::random(64, 16, 1);
-    for _ in 0..200 {
-        let mut built = Variant::MemoryFree.build(&w, &FifoPlan::paper(64)).unwrap();
-        let (out, _) = built.run().unwrap();
-        std::hint::black_box(out.len());
+//! Profiling driver for the simulation core: runs the same attention
+//! workload under both schedulers and prints wall-clock plus the
+//! engine's tick counters, so `perf`/flamegraph sessions have a stable
+//! target and the event-driven savings are visible at a glance.
+//!
+//! ```bash
+//! cargo run --release --example profile_sim -- [--n 64] [--d 16] [--reps 100]
+//! ```
+
+use std::time::Instant;
+
+use sdpa_dataflow::attention::{workload::Workload, FifoPlan, Variant};
+use sdpa_dataflow::cli::Args;
+use sdpa_dataflow::sim::SchedulerMode;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(false, &[]).map_err(|e| e.to_string())?;
+    let n: usize = args.get_parsed_or("n", 64).map_err(|e| e.to_string())?;
+    let d: usize = args.get_parsed_or("d", 16).map_err(|e| e.to_string())?;
+    let reps: usize = args.get_parsed_or("reps", 100).map_err(|e| e.to_string())?;
+
+    let w = Workload::random(n, d, 1);
+    for variant in [Variant::MemoryFree, Variant::Naive] {
+        for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+            let mut built = variant
+                .build(&w, &FifoPlan::paper(n))
+                .map_err(|e| e.to_string())?;
+            built.engine.set_scheduler_mode(mode);
+            let start = Instant::now();
+            let mut last = None;
+            for rep in 0..reps {
+                if rep > 0 {
+                    built.engine.reset();
+                }
+                let (out, summary) = built.run().map_err(|e| e.to_string())?;
+                std::hint::black_box(out.len());
+                last = Some(summary);
+            }
+            let elapsed = start.elapsed();
+            let s = last.expect("reps >= 1");
+            println!(
+                "{:<9} {:<12} {} reps: {:>8.1}ms total, {} cycles/run, \
+                 {} ticks executed, {} skipped (ratio {:.3}), {} cycles jumped",
+                variant.name(),
+                format!("{mode:?}"),
+                reps,
+                elapsed.as_secs_f64() * 1e3,
+                s.cycles,
+                s.sched.node_ticks_executed,
+                s.sched.node_ticks_skipped,
+                s.sched.tick_ratio(),
+                s.sched.cycles_jumped,
+            );
+        }
     }
+    Ok(())
 }

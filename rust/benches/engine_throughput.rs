@@ -1,0 +1,114 @@
+//! Engine scheduler throughput: Dense vs EventDriven.
+//!
+//! Measures wall-clock per full simulation and derived simulated
+//! cycles/second for the naive and reordered attention variants at
+//! N ∈ {64, 256, 1024} (quick mode: {64, 256}) under both scheduler
+//! modes, and emits the results as `BENCH_engine.json` for CI
+//! artifact upload.
+//!
+//! ```bash
+//! cargo bench --bench engine_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::{workload::Workload, FifoPlan, Variant};
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::sim::{RunSummary, SchedulerMode};
+
+struct Row {
+    variant: &'static str,
+    n: usize,
+    mode: SchedulerMode,
+    mean_ns: f64,
+    summary: RunSummary,
+}
+
+impl Row {
+    fn sim_cycles_per_sec(&self) -> f64 {
+        self.summary.cycles as f64 / (self.mean_ns / 1e9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"variant\":\"{}\",\"n\":{},\"mode\":\"{:?}\",\"mean_ns\":{:.1},\
+             \"cycles\":{},\"sim_cycles_per_sec\":{:.1},\"ticks_executed\":{},\
+             \"ticks_skipped\":{},\"tick_ratio\":{:.4},\"cycles_jumped\":{}}}",
+            self.variant,
+            self.n,
+            self.mode,
+            self.mean_ns,
+            self.summary.cycles,
+            self.sim_cycles_per_sec(),
+            self.summary.sched.node_ticks_executed,
+            self.summary.sched.node_ticks_skipped,
+            self.summary.sched.tick_ratio(),
+            self.summary.sched.cycles_jumped,
+        )
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let sizes: &[usize] = if quick_requested() {
+        &[64, 256]
+    } else {
+        &[64, 256, 1024]
+    };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for variant in [Variant::Naive, Variant::Reordered] {
+        for &n in sizes {
+            let d = 16;
+            let w = Workload::random(n, d, 0xE47);
+            for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+                let mut built = variant.build(&w, &FifoPlan::paper(n)).unwrap();
+                built.engine.set_scheduler_mode(mode);
+                let mut last: Option<RunSummary> = None;
+                let stats = b.bench(
+                    &format!("engine/{}_n{}_{:?}", variant.name(), n, mode),
+                    || {
+                        built.engine.reset();
+                        let s = built.run_outcome();
+                        black_box(s.cycles);
+                        last = Some(s);
+                    },
+                );
+                rows.push(Row {
+                    variant: variant.name(),
+                    n,
+                    mode,
+                    mean_ns: stats.mean_ns,
+                    summary: last.expect("benched at least once"),
+                });
+            }
+        }
+    }
+
+    // Per-configuration speedup summary (event-driven vs dense).
+    println!();
+    for pair in rows.chunks(2) {
+        let [dense, event] = pair else { continue };
+        println!(
+            "speedup {:<10} N={:<5} wall {:.2}x  ticks {:.2}x  ({} vs {} ticks)",
+            dense.variant,
+            dense.n,
+            dense.mean_ns / event.mean_ns,
+            dense.summary.sched.node_ticks_executed as f64
+                / event.summary.sched.node_ticks_executed.max(1) as f64,
+            dense.summary.sched.node_ticks_executed,
+            event.summary.sched.node_ticks_executed,
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json ({} rows)", rows.len());
+}

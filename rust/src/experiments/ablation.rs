@@ -18,9 +18,9 @@
 
 use crate::attention::naive::{build_with_delays, build_with_delays_policy};
 use crate::attention::workload::Workload;
-use crate::attention::{DepthPolicy, FifoPlan};
+use crate::attention::{BuiltAttention, DepthPolicy, FifoPlan};
 use crate::report::Table;
-use crate::sim::RunOutcome;
+use crate::sim::{Capacity, RunOutcome};
 use crate::Result;
 
 /// Which path the latency is injected on.
@@ -102,19 +102,15 @@ impl AblationResult {
     }
 }
 
-fn cycles_at_depth(
-    w: &Workload,
-    exp_latency: u64,
-    sigma_delay: u64,
-    depth: usize,
-) -> Result<Option<u64>> {
-    let mut built = build_with_delays(
-        w,
-        &FifoPlan::with_long_depth(depth),
-        exp_latency,
-        sigma_delay,
-    )?;
-    let s = built.run_outcome();
+/// Re-run the shared probe engine at one bypass depth: reconfigure the
+/// `e_bypass` capacity in place and reset, instead of recompiling the
+/// graph for every bisection step. The per-run depth report
+/// ([`RunSummary::depths`](crate::sim::RunSummary::depths)) reflects
+/// the reconfigured capacity.
+fn cycles_at_depth(probe: &mut BuiltAttention, depth: usize) -> Result<Option<u64>> {
+    probe.engine.set_capacity("e_bypass", Capacity::Bounded(depth))?;
+    probe.engine.reset();
+    let s = probe.run_outcome();
     Ok(match s.outcome {
         RunOutcome::Completed => Some(s.cycles),
         _ => None,
@@ -125,15 +121,15 @@ fn min_depth(w: &Workload, exp_latency: u64, sigma_delay: u64) -> Result<(usize,
     let mut base = build_with_delays(w, &FifoPlan::unbounded(), exp_latency, sigma_delay)?;
     let (_, bs) = base.run()?;
     // Bisect on [2, 2N+32]: cycles(depth) is monotone non-increasing in
-    // depth and equals baseline from the minimum depth onward.
+    // depth and equals baseline from the minimum depth onward. One
+    // probe engine serves every step.
     let (mut lo, mut hi) = (2usize, 2 * w.n + 32);
-    debug_assert_eq!(
-        cycles_at_depth(w, exp_latency, sigma_delay, hi)?,
-        Some(bs.cycles)
-    );
+    let mut probe =
+        build_with_delays(w, &FifoPlan::with_long_depth(hi), exp_latency, sigma_delay)?;
+    debug_assert_eq!(cycles_at_depth(&mut probe, hi)?, Some(bs.cycles));
     while lo < hi {
         let mid = (lo + hi) / 2;
-        match cycles_at_depth(w, exp_latency, sigma_delay, mid)? {
+        match cycles_at_depth(&mut probe, mid)? {
             Some(c) if c == bs.cycles => hi = mid,
             _ => lo = mid + 1,
         }

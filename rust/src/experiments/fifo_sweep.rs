@@ -13,7 +13,7 @@
 use crate::attention::workload::Workload;
 use crate::attention::{DepthPolicy, FifoPlan, Variant};
 use crate::report::{fmt_ratio, Table};
-use crate::sim::{RunOutcome, RunSummary};
+use crate::sim::{RunOutcome, RunSummary, SchedStats, SchedulerMode};
 use crate::Result;
 
 /// One sweep row.
@@ -32,6 +32,8 @@ pub struct SweepResult {
     pub variant: Variant,
     /// Sequence length.
     pub n: usize,
+    /// Scheduler the sweep ran under.
+    pub mode: SchedulerMode,
     /// Baseline (all FIFOs unbounded).
     pub baseline: RunSummary,
     /// Points, ascending by depth, baseline last.
@@ -43,6 +45,31 @@ pub struct SweepResult {
 }
 
 impl SweepResult {
+    /// Sum a scheduler counter over every run in the sweep: the
+    /// baseline plus each depth point (the depth-None point *is* the
+    /// baseline, so it is excluded to avoid double counting).
+    fn total_ticks(&self, f: impl Fn(&SchedStats) -> u64) -> u64 {
+        f(&self.baseline.sched)
+            + self
+                .points
+                .iter()
+                .filter(|p| p.depth.is_some())
+                .map(|p| f(&p.summary.sched))
+                .sum::<u64>()
+    }
+
+    /// Node ticks the scheduler executed, summed over every run in the
+    /// sweep (baseline included).
+    pub fn total_ticks_executed(&self) -> u64 {
+        self.total_ticks(|s| s.node_ticks_executed)
+    }
+
+    /// Node ticks skipped vs. the dense loop, summed over the sweep
+    /// (0 when `mode` is dense).
+    pub fn total_ticks_skipped(&self) -> u64 {
+        self.total_ticks(|s| s.node_ticks_skipped)
+    }
+
     /// Smallest swept depth that completed at baseline cycles.
     pub fn min_full_throughput_depth(&self) -> Option<usize> {
         self.points
@@ -124,15 +151,46 @@ pub fn sweep_depths(n: usize) -> Vec<usize> {
     v
 }
 
-/// Run the sweep for one variant.
+/// Run the sweep for one variant under the default (event-driven)
+/// scheduler.
 pub fn run(variant: Variant, n: usize, d: usize) -> Result<SweepResult> {
+    run_with_mode(variant, n, d, SchedulerMode::EventDriven)
+}
+
+/// Run the sweep for one variant under an explicit scheduler mode.
+///
+/// The graph is built **once** per configuration family and re-swept by
+/// reconfiguring the long-FIFO capacities in place
+/// ([`Engine::set_capacity`](crate::sim::Engine::set_capacity) +
+/// [`Engine::reset`](crate::sim::Engine::reset)) rather than recompiled
+/// per depth; each point's [`RunSummary::depths`] reports the capacity
+/// that actually ran.
+pub fn run_with_mode(
+    variant: Variant,
+    n: usize,
+    d: usize,
+    mode: SchedulerMode,
+) -> Result<SweepResult> {
     let w = Workload::random(n, d, 0xF1F0);
     let mut base = variant.build(&w, &FifoPlan::unbounded())?;
+    base.engine.set_scheduler_mode(mode);
     let (_, baseline) = base.run()?;
 
+    let depths = sweep_depths(n);
+    let mut built = variant.build(&w, &FifoPlan::with_long_depth(depths[0]))?;
+    built.engine.set_scheduler_mode(mode);
     let mut points = Vec::new();
-    for depth in sweep_depths(n) {
-        let mut built = variant.build(&w, &FifoPlan::with_long_depth(depth))?;
+    let mut first = true;
+    for depth in depths {
+        for fifo in variant.long_fifos() {
+            built
+                .engine
+                .set_capacity(fifo, crate::sim::Capacity::Bounded(depth))?;
+        }
+        if !first {
+            built.engine.reset();
+        }
+        first = false;
         let summary = built.run_outcome();
         points.push(SweepPoint {
             depth: Some(depth),
@@ -157,6 +215,7 @@ pub fn run(variant: Variant, n: usize, d: usize) -> Result<SweepResult> {
     Ok(SweepResult {
         variant,
         n,
+        mode,
         baseline,
         points,
         inferred_long_depth,
@@ -206,6 +265,28 @@ mod tests {
         for p in &r.points {
             assert_eq!(p.summary.outcome, RunOutcome::Completed);
         }
+    }
+
+    #[test]
+    fn sweep_is_scheduler_invariant_and_cheaper_event_driven() {
+        let ev = run_with_mode(Variant::Naive, 32, 4, SchedulerMode::EventDriven).unwrap();
+        let de = run_with_mode(Variant::Naive, 32, 4, SchedulerMode::Dense).unwrap();
+        assert_eq!(
+            ev.min_full_throughput_depth(),
+            de.min_full_throughput_depth()
+        );
+        for (pe, pd) in ev.points.iter().zip(&de.points) {
+            assert_eq!(pe.summary.cycles, pd.summary.cycles, "depth {:?}", pe.depth);
+            assert_eq!(pe.summary.outcome, pd.summary.outcome, "depth {:?}", pe.depth);
+        }
+        assert!(
+            ev.total_ticks_executed() < de.total_ticks_executed(),
+            "event {} vs dense {}",
+            ev.total_ticks_executed(),
+            de.total_ticks_executed()
+        );
+        assert!(ev.total_ticks_skipped() > 0);
+        assert_eq!(de.total_ticks_skipped(), 0);
     }
 
     #[test]

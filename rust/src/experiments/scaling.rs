@@ -24,6 +24,10 @@ pub struct ScalePoint {
     pub peak_long_elems: usize,
     /// Cycles to completion.
     pub cycles: u64,
+    /// Node ticks the (event-driven) scheduler executed.
+    pub ticks_executed: u64,
+    /// Node ticks skipped vs. the dense loop over the same span.
+    pub ticks_skipped: u64,
 }
 
 /// Full scaling study.
@@ -55,7 +59,7 @@ impl ScalingResult {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             format!("Intermediate memory vs N (d={})", self.d),
-            &["variant", "N", "peak long-FIFO (elems)", "peak FIFO words", "cycles", "cycles/N^2"],
+            &["variant", "N", "peak long-FIFO (elems)", "peak FIFO words", "cycles", "cycles/N^2", "ticks exec/skipped"],
         );
         for (v, points) in &self.series {
             for p in points {
@@ -66,12 +70,14 @@ impl ScalingResult {
                     p.peak_words.to_string(),
                     p.cycles.to_string(),
                     format!("{:.3}", p.cycles as f64 / (p.n * p.n) as f64),
+                    format!("{}/{}", p.ticks_executed, p.ticks_skipped),
                 ]);
             }
             t.row(&[
                 format!("{v} growth"),
                 "-".into(),
                 format!("{:?}", self.classification(*v)),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -101,6 +107,8 @@ pub fn run(sizes: &[usize], d: usize) -> Result<ScalingResult> {
                 peak_words: summary.total_peak_words(),
                 peak_long_elems,
                 cycles: summary.cycles,
+                ticks_executed: summary.sched.node_ticks_executed,
+                ticks_skipped: summary.sched.node_ticks_skipped,
             });
         }
         series.push((variant, points));

@@ -174,16 +174,33 @@ impl Channel {
     }
 
     /// Commit the cycle: release popped slots, land staged pushes,
-    /// update statistics. Returns `true` if anything changed (progress
-    /// signal for deadlock detection).
+    /// update statistics (including the per-cycle fullness counter —
+    /// the dense engine calls this once per channel per cycle).
+    /// Returns `true` if anything changed (progress signal for deadlock
+    /// detection).
     #[inline]
     pub fn commit(&mut self) -> bool {
+        let changed = self.commit_inner();
+        if self.is_full() {
+            self.stats.full_cycles += 1;
+        }
+        changed
+    }
+
+    /// Commit without touching the fullness counter. The event-driven
+    /// engine commits only *dirty* channels and cycle-jumps over idle
+    /// spans, so it accounts `full_cycles` lazily — as spans between the
+    /// commits at which fullness changed — via [`Self::add_full_cycles`].
+    #[inline]
+    pub(crate) fn commit_untimed(&mut self) -> bool {
+        self.commit_inner()
+    }
+
+    #[inline]
+    fn commit_inner(&mut self) -> bool {
         if self.staged_pops == 0 && self.staged_pushes.is_empty() {
             // Idle fast path (§Perf step 3): most channels are untouched
-            // in most cycles; only the fullness counter can still tick.
-            if !self.capacity.has_space(self.queue.len()) {
-                self.stats.full_cycles += 1;
-            }
+            // in most cycles.
             return false;
         }
         self.stats.total_pops += self.staged_pops as u64;
@@ -199,10 +216,40 @@ impl Channel {
         if self.queued_words > self.stats.peak_occupancy_words {
             self.stats.peak_occupancy_words = self.queued_words;
         }
-        if !self.capacity.has_space(self.queue.len()) {
-            self.stats.full_cycles += 1;
-        }
         true
+    }
+
+    /// Whether the *committed* queue leaves no room (bounded and at
+    /// capacity). Matches what the fullness statistics count.
+    #[inline]
+    pub(crate) fn is_full(&self) -> bool {
+        !self.capacity.has_space(self.queue.len())
+    }
+
+    /// Credit `n` cycles of fullness at once (event-driven span
+    /// accounting; see [`Self::commit_untimed`]).
+    #[inline]
+    pub(crate) fn add_full_cycles(&mut self, n: u64) {
+        self.stats.full_cycles += n;
+    }
+
+    /// Whether any ops are staged for this cycle (the engine's dirty
+    /// test).
+    #[inline]
+    pub(crate) fn has_staged(&self) -> bool {
+        self.staged_pops > 0 || !self.staged_pushes.is_empty()
+    }
+
+    /// Number of pops staged this cycle.
+    #[inline]
+    pub(crate) fn staged_pop_count(&self) -> usize {
+        self.staged_pops
+    }
+
+    /// Number of pushes staged this cycle.
+    #[inline]
+    pub(crate) fn staged_push_count(&self) -> usize {
+        self.staged_pushes.len()
     }
 
     /// Committed occupancy (elements).

@@ -337,16 +337,19 @@ pub(crate) fn compile(b: GraphBuilder, policy: DepthPolicy) -> Result<Engine> {
         });
     }
 
-    let topology: Vec<(Option<String>, Option<String>)> = (0..nc)
+    // Per-channel (producer, consumer) node indices — total after the
+    // dangler validation above. The engine's event-driven scheduler
+    // routes commit wake-ups through this adjacency.
+    let adjacency: Vec<(usize, usize)> = (0..nc)
         .map(|i| {
             (
-                producers[i].map(|ni| nodes[ni].name().to_string()),
-                consumers[i].map(|ni| nodes[ni].name().to_string()),
+                producers[i].expect("validated"),
+                consumers[i].expect("validated"),
             )
         })
         .collect();
 
-    Ok(Engine::new(channels, channel_names, nodes, topology, depths))
+    Ok(Engine::new(channels, channel_names, nodes, adjacency, depths))
 }
 
 #[cfg(test)]

@@ -1,25 +1,113 @@
-//! The deterministic two-phase simulation engine.
+//! The deterministic simulation engine: dense and event-driven schedulers.
 //!
-//! Each cycle has two phases:
+//! Both schedulers implement the same **two-phase cycle semantics**:
 //!
-//! 1. **Tick** — every node observes the channel state as of the start of
-//!    the cycle and stages pops/pushes. Because staged mutations are
-//!    invisible within the cycle, results do not depend on node order.
-//! 2. **Commit** — every channel applies its staged pops then pushes and
-//!    updates occupancy statistics.
+//! 1. **Tick** — a node observes the channel state as of the start of
+//!    the cycle and stages pops/pushes. Staged mutations are invisible
+//!    within the cycle, so results do not depend on node order.
+//! 2. **Commit** — channels apply their staged pops then pushes and
+//!    update occupancy statistics.
 //!
-//! The engine terminates on **quiescence** (every node flushed, every
-//! channel empty — the workload completed), on **deadlock** (no channel
-//! committed anything, no node fired, and no pipeline register is
-//! counting down — yet work remains), or when the cycle budget runs out.
+//! [`SchedulerMode::Dense`] ticks *every node every cycle* and commits
+//! every channel — the original loop, O(nodes × cycles), kept as the
+//! executable specification for differential testing.
+//!
+//! [`SchedulerMode::EventDriven`] (the default) runs the same machine
+//! but only touches state that can change:
+//!
+//! * **Wake-on-commit.** A node that cannot make progress goes to sleep
+//!   declaring what it is blocked on (recorded automatically by the
+//!   traced [`PortCtx`](super::node::PortCtx) — an input observed empty
+//!   is a *data need*, an output observed full is a *space need*). At
+//!   commit time a channel that landed pushes wakes its consumer if it
+//!   was waiting for data, and a channel that released slots wakes its
+//!   producer if it was waiting for space — for the *next* cycle, which
+//!   is exactly when two-phase commit makes the change visible.
+//! * **Timers.** Pipeline registers ([`OutPipe`](super::node::OutPipe))
+//!   holding results that mature at a future cycle post that cycle
+//!   through [`TickReport::next_ready`]; the engine keeps them in a
+//!   min-heap and wakes the node at the reported cycle.
+//! * **Cycle-jump.** When no node is scheduled for the next cycle but
+//!   timers are pending, the engine jumps the cycle counter straight to
+//!   the earliest timer instead of idling one cycle at a time. This
+//!   preserves cycle accuracy because during the skipped span *no node
+//!   could have made progress*: channel state only changes at commits
+//!   (and nothing is staged), and every time-based change was posted as
+//!   a timer.
+//! * **Self-scheduling.** A node that fired at cycle `t` is re-ticked
+//!   at `t + 1` (II = 1 pipelining); it keeps ticking until it reports
+//!   no progress, at which point its recorded needs become its wake set.
+//!
+//! **Why this is cycle-exact.** By induction over cycles: a sleeping
+//! node's behaviour is a function of its observed channel state and the
+//! clock. The traced `PortCtx` records every observation that blocked
+//! progress, each such observation can only change at a commit of that
+//! channel (data/space) or at the reported maturity cycle (time), and
+//! each of those events wakes the node for the exact cycle the change
+//! becomes visible. Spurious wake-ups are harmless (a tick that cannot
+//! make progress stages nothing), so the event-driven run fires every
+//! node at exactly the cycles the dense run would — same cycle counts,
+//! same fire counts, same per-channel statistics (fullness spans are
+//! credited lazily at the commits where fullness changes, and settled
+//! at termination). The property test in `tests/scheduler_parity.rs`
+//! enforces this over randomized graphs, including deadlock and
+//! budget-exceeded paths.
+//!
+//! Termination is re-derived from scheduler state: **quiescence** when
+//! the ready set and timer heap are empty with every node flushed and
+//! every channel empty; **deadlock** when they are empty but work
+//! remains; **budget exhaustion** when the next cycle to execute (or
+//! jump target) would reach `max_cycles`.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use super::channel::{Capacity, Channel, ChannelId, ChannelStats};
 use super::compile::ChannelDepth;
 use super::metrics::GraphMetrics;
-use super::node::{Node, PortCtx};
+use super::node::{ChanView, Node, PortCtx, TickTrace};
 use crate::{Error, Result};
+
+/// Which scheduling strategy [`Engine::run_outcome`] uses. Both are
+/// cycle-exact; see the module docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Tick every node every cycle (the executable specification).
+    Dense,
+    /// Wake-on-commit scheduling with timer heap and cycle-jump.
+    #[default]
+    EventDriven,
+}
+
+/// Scheduler work counters for one run: how many node ticks actually
+/// executed vs. how many the dense loop would have executed over the
+/// same simulated span.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Scheduler that produced the run.
+    pub mode: SchedulerMode,
+    /// Node ticks actually executed.
+    pub node_ticks_executed: u64,
+    /// Node ticks avoided vs. the dense equivalent
+    /// (`nodes × cycles_walked − executed`; always 0 in dense mode).
+    pub node_ticks_skipped: u64,
+    /// Cycles never executed because the engine jumped over them to the
+    /// next timer event (always 0 in dense mode).
+    pub cycles_jumped: u64,
+}
+
+impl SchedStats {
+    /// Fraction of dense-equivalent ticks actually executed (1.0 for
+    /// dense; lower is better for event-driven).
+    pub fn tick_ratio(&self) -> f64 {
+        let dense = self.node_ticks_executed + self.node_ticks_skipped;
+        if dense == 0 {
+            1.0
+        } else {
+            self.node_ticks_executed as f64 / dense as f64
+        }
+    }
+}
 
 /// Why a run ended.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,10 +134,14 @@ pub struct RunSummary {
     pub node_fires: Vec<(String, u64)>,
     /// Per-channel statistics, by channel name.
     pub channel_stats: Vec<(String, ChannelStats)>,
-    /// Compile-time depth report: per channel, the inferred depth, the
-    /// capacity actually configured, and whether the latency-balance
-    /// analysis classified it as a long FIFO.
+    /// Per-channel depth report: the compile-time inferred depth and
+    /// long-FIFO flag, with the `capacity` column refreshed from the
+    /// *live* channel configuration at summarise time (so sweeps that
+    /// reconfigure via [`Engine::set_capacity`] /
+    /// [`Engine::set_all_unbounded`] report what actually ran).
     pub depths: Vec<ChannelDepth>,
+    /// Scheduler work counters for this run.
+    pub sched: SchedStats,
 }
 
 impl RunSummary {
@@ -75,7 +167,7 @@ impl RunSummary {
         GraphMetrics::from_summary(self)
     }
 
-    /// Compile-time depth record for one channel by name.
+    /// Depth record for one channel by name (capacity as-run).
     pub fn depth_of(&self, channel: &str) -> Option<&ChannelDepth> {
         self.depths.iter().find(|d| d.name == channel)
     }
@@ -86,12 +178,15 @@ pub struct Engine {
     channels: Vec<Channel>,
     channel_names: HashMap<String, ChannelId>,
     nodes: Vec<Box<dyn Node>>,
-    /// Per-channel `(producer, consumer)` node names (graph topology,
-    /// used by [`Engine::to_dot`]).
-    topology: Vec<(Option<String>, Option<String>)>,
+    /// Per-channel `(producer, consumer)` node indices, precomputed by
+    /// the compile stage. Total (every channel has both ends — the
+    /// compiler rejects danglers); the event scheduler uses it to route
+    /// commit wake-ups, [`Engine::to_dot`] to label edges.
+    adjacency: Vec<(usize, usize)>,
     /// Compile-time depth report (see [`ChannelDepth`]).
     depths: Vec<ChannelDepth>,
     cycle: u64,
+    mode: SchedulerMode,
 }
 
 impl Engine {
@@ -99,22 +194,36 @@ impl Engine {
         channels: Vec<Channel>,
         channel_names: HashMap<String, ChannelId>,
         nodes: Vec<Box<dyn Node>>,
-        topology: Vec<(Option<String>, Option<String>)>,
+        adjacency: Vec<(usize, usize)>,
         depths: Vec<ChannelDepth>,
     ) -> Self {
         Engine {
             channels,
             channel_names,
             nodes,
-            topology,
+            adjacency,
             depths,
             cycle: 0,
+            mode: SchedulerMode::default(),
         }
     }
 
+    /// Select the scheduling strategy for subsequent runs (default
+    /// [`SchedulerMode::EventDriven`]; `Dense` is retained for
+    /// differential testing and as the executable specification).
+    pub fn set_scheduler_mode(&mut self, mode: SchedulerMode) {
+        self.mode = mode;
+    }
+
+    /// The currently selected scheduling strategy.
+    pub fn scheduler_mode(&self) -> SchedulerMode {
+        self.mode
+    }
+
     /// The compile-time depth report: per channel, the depth the
-    /// latency-balance analysis derived and the capacity actually
-    /// configured. See [`super::compile`].
+    /// latency-balance analysis derived and the capacity configured *at
+    /// compile time*. Capacities reconfigured later (sweeps) show up in
+    /// [`RunSummary::depths`], which is refreshed per run.
     pub fn depth_report(&self) -> &[ChannelDepth] {
         &self.depths
     }
@@ -129,15 +238,16 @@ impl Engine {
             let _ = writeln!(out, "  \"{}\" [shape=box];", n.name());
         }
         for (i, c) in self.channels.iter().enumerate() {
-            let (p, s) = &self.topology[i];
-            let (Some(p), Some(s)) = (p, s) else { continue };
+            let (p, s) = self.adjacency[i];
             let depth = match c.capacity() {
                 Capacity::Bounded(d) => format!("depth={d}"),
                 Capacity::Unbounded => "depth=inf".to_string(),
             };
             let _ = writeln!(
                 out,
-                "  \"{p}\" -> \"{s}\" [label=\"{} ({depth})\"];",
+                "  \"{}\" -> \"{}\" [label=\"{} ({depth})\"];",
+                self.nodes[p].name(),
+                self.nodes[s].name(),
                 c.name()
             );
         }
@@ -206,8 +316,19 @@ impl Engine {
     }
 
     /// Run, reporting deadlock/budget exhaustion in the summary instead
-    /// of as an error.
+    /// of as an error. Dispatches on the selected [`SchedulerMode`].
     pub fn run_outcome(&mut self, max_cycles: u64) -> RunSummary {
+        match self.mode {
+            SchedulerMode::Dense => self.run_dense(max_cycles),
+            SchedulerMode::EventDriven => self.run_event(max_cycles),
+        }
+    }
+
+    /// The original dense two-phase loop: every node ticks, every
+    /// channel commits, every cycle. Kept as the executable
+    /// specification the event-driven scheduler is tested against.
+    fn run_dense(&mut self, max_cycles: u64) -> RunSummary {
+        let mut ticks_executed = 0u64;
         let mut last_progress = self.cycle;
         while self.cycle < max_cycles {
             let mut any_fired = false;
@@ -216,8 +337,9 @@ impl Engine {
                 let mut ctx = PortCtx::new(&mut self.channels, self.cycle);
                 let rep = node.tick(&mut ctx);
                 any_fired |= rep.fired;
-                waiting_on_time |= rep.waiting_on_time;
+                waiting_on_time |= rep.next_ready.is_some();
             }
+            ticks_executed += self.nodes.len() as u64;
             let mut any_commit = false;
             for c in &mut self.channels {
                 any_commit |= c.commit();
@@ -237,31 +359,249 @@ impl Engine {
                         detail: self.describe_blockage(),
                     }
                 };
-                return self.summarise(last_progress + 1, outcome);
+                let sched = SchedStats {
+                    mode: SchedulerMode::Dense,
+                    node_ticks_executed: ticks_executed,
+                    ..SchedStats::default()
+                };
+                return self.summarise(last_progress + 1, outcome, sched);
             }
             self.cycle += 1;
         }
-        self.summarise(self.cycle, RunOutcome::BudgetExceeded)
+        let sched = SchedStats {
+            mode: SchedulerMode::Dense,
+            node_ticks_executed: ticks_executed,
+            ..SchedStats::default()
+        };
+        self.summarise(self.cycle, RunOutcome::BudgetExceeded, sched)
     }
 
-    fn describe_blockage(&mut self) -> String {
+    /// Wake-on-commit scheduler with timer heap and cycle-jump. See the
+    /// module docs for the invariants; cycle-exact vs. [`Self::run_dense`].
+    fn run_event(&mut self, max_cycles: u64) -> RunSummary {
+        let nn = self.nodes.len();
+        let start = self.cycle;
+        if start >= max_cycles {
+            // Matches the dense loop never entering its while body.
+            let sched = SchedStats {
+                mode: SchedulerMode::EventDriven,
+                ..SchedStats::default()
+            };
+            return self.summarise(start, RunOutcome::BudgetExceeded, sched);
+        }
+
+        let mut t = start;
+        let mut last_progress = start;
+        let mut ticks_executed = 0u64;
+        let mut cycles_jumped = 0u64;
+
+        // Ready set for cycle `t`, wake set being built for the next
+        // executed cycle, and the dedupe map telling which cycle each
+        // node is already queued for.
+        let mut ready: Vec<usize> = (0..nn).collect();
+        let mut pending: Vec<usize> = Vec::new();
+        let mut scheduled_for: Vec<u64> = vec![start; nn];
+        // Timer heap of (wake_cycle, node) plus a per-node dedupe of the
+        // last posted wake cycle (stale entries wake harmlessly).
+        let mut timers: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        let mut timer_armed: Vec<u64> = vec![u64::MAX; nn];
+        // Per-channel waiter flags: the consumer is blocked on data /
+        // the producer is blocked on space (one producer + one consumer
+        // per channel, so single flags suffice).
+        let mut data_wait = vec![false; self.channels.len()];
+        let mut space_wait = vec![false; self.channels.len()];
+        // Lazy fullness spans: cycle since which each channel has been
+        // full, credited to `full_cycles` when fullness changes or at
+        // termination — exactly matching the dense per-cycle counter.
+        let mut full_since: Vec<Option<u64>> = self
+            .channels
+            .iter()
+            .map(|c| c.is_full().then_some(start))
+            .collect();
+        let mut dirty: Vec<ChannelId> = Vec::new();
+        let mut trace = TickTrace::default();
+
+        loop {
+            // ---- tick phase (cycle t) -------------------------------
+            let mut any_fired = false;
+            for ni in ready.drain(..) {
+                trace.clear();
+                let rep = {
+                    let mut ctx = PortCtx::traced(&mut self.channels, t, &mut trace);
+                    self.nodes[ni].tick(&mut ctx)
+                };
+                ticks_executed += 1;
+                if rep.fired {
+                    // II = 1: a node that fired may fire again next cycle.
+                    any_fired = true;
+                    if scheduled_for[ni] != t + 1 {
+                        scheduled_for[ni] = t + 1;
+                        pending.push(ni);
+                    }
+                } else {
+                    // No progress: the recorded observations become the
+                    // node's wake set.
+                    for &c in &trace.needs_data {
+                        data_wait[c.0] = true;
+                    }
+                    for &c in &trace.needs_space {
+                        space_wait[c.0] = true;
+                    }
+                }
+                if let Some(r) = rep.next_ready {
+                    if timer_armed[ni] != r {
+                        timer_armed[ni] = r;
+                        timers.push(Reverse((r, ni)));
+                    }
+                }
+                dirty.append(&mut trace.touched);
+            }
+
+            // ---- commit phase (dirty channels only) -----------------
+            let mut any_commit = false;
+            for id in dirty.drain(..) {
+                let i = id.0;
+                let had_push = self.channels[i].staged_push_count() > 0;
+                let had_pop = self.channels[i].staged_pop_count() > 0;
+                any_commit |= self.channels[i].commit_untimed();
+                if self.channels[i].is_full() {
+                    full_since[i].get_or_insert(t);
+                } else if let Some(s) = full_since[i].take() {
+                    self.channels[i].add_full_cycles(t - s);
+                }
+                // Wake-on-commit: new data wakes a waiting consumer,
+                // freed space wakes a waiting producer — at t + 1, when
+                // two-phase commit makes the change visible.
+                if had_push && data_wait[i] {
+                    data_wait[i] = false;
+                    let consumer = self.adjacency[i].1;
+                    if scheduled_for[consumer] != t + 1 {
+                        scheduled_for[consumer] = t + 1;
+                        pending.push(consumer);
+                    }
+                }
+                if had_pop && space_wait[i] {
+                    space_wait[i] = false;
+                    let producer = self.adjacency[i].0;
+                    if scheduled_for[producer] != t + 1 {
+                        scheduled_for[producer] = t + 1;
+                        pending.push(producer);
+                    }
+                }
+            }
+            if any_fired || any_commit {
+                last_progress = t;
+            }
+
+            // ---- advance: next cycle, timer jump, or terminate ------
+            let t_next = if !pending.is_empty() {
+                t + 1
+            } else if let Some(&Reverse((tc, _))) = timers.peek() {
+                tc // tc > t: merged entries are always past the cursor
+            } else {
+                // No wake-ups anywhere: quiescent or deadlocked. Dense
+                // detects at the first *quiet* cycle — if this cycle
+                // still made progress (e.g. a drain-commit that woke
+                // nobody), that is one cycle later — and its per-cycle
+                // fullness counter runs through detection.
+                let detect = if any_fired || any_commit { t + 1 } else { t };
+                if detect >= max_cycles {
+                    // Dense runs out of budget before reaching the quiet
+                    // detection cycle; fall through to the budget path.
+                    detect
+                } else {
+                    self.cycle = detect;
+                    for (i, c) in self.channels.iter_mut().enumerate() {
+                        if let Some(s) = full_since[i].take() {
+                            c.add_full_cycles(detect - s + 1);
+                        }
+                    }
+                    let sched = SchedStats {
+                        mode: SchedulerMode::EventDriven,
+                        node_ticks_executed: ticks_executed,
+                        node_ticks_skipped: (nn as u64 * (detect - start + 1))
+                            .saturating_sub(ticks_executed),
+                        cycles_jumped,
+                    };
+                    let done = self.nodes.iter().all(|n| n.flushed())
+                        && self.channels.iter().all(Channel::is_empty);
+                    let outcome = if done {
+                        RunOutcome::Completed
+                    } else {
+                        RunOutcome::Deadlock {
+                            detail: self.describe_blockage(),
+                        }
+                    };
+                    return self.summarise(last_progress + 1, outcome, sched);
+                }
+            };
+
+            if t_next >= max_cycles {
+                // The dense loop would have kept committing through
+                // max_cycles - 1; settle fullness spans to that point.
+                self.cycle = max_cycles;
+                let settle = max_cycles - 1;
+                for (i, c) in self.channels.iter_mut().enumerate() {
+                    if let Some(s) = full_since[i].take() {
+                        c.add_full_cycles(settle - s + 1);
+                    }
+                }
+                let sched = SchedStats {
+                    mode: SchedulerMode::EventDriven,
+                    node_ticks_executed: ticks_executed,
+                    node_ticks_skipped: (nn as u64 * (max_cycles - start))
+                        .saturating_sub(ticks_executed),
+                    cycles_jumped,
+                };
+                return self.summarise(max_cycles, RunOutcome::BudgetExceeded, sched);
+            }
+
+            // Merge timers due at or before the next executed cycle.
+            while let Some(&Reverse((tc, ni))) = timers.peek() {
+                if tc > t_next {
+                    break;
+                }
+                timers.pop();
+                if timer_armed[ni] == tc {
+                    timer_armed[ni] = u64::MAX;
+                }
+                if scheduled_for[ni] != t_next {
+                    scheduled_for[ni] = t_next;
+                    pending.push(ni);
+                }
+            }
+            if t_next > t + 1 {
+                cycles_jumped += t_next - t - 1;
+            }
+            t = t_next;
+            std::mem::swap(&mut ready, &mut pending);
+        }
+    }
+
+    /// Describe every blocked node and full channel — the deadlock
+    /// detail. Works on shared state so sweeps can probe a wedged
+    /// engine without mutable access.
+    pub fn describe_blockage(&self) -> String {
         let mut parts = Vec::new();
-        let cycle = self.cycle;
-        // Split borrow: inspect nodes against an immutable ctx view.
-        let channels = &mut self.channels;
+        let view = ChanView::new(&self.channels);
         for node in &self.nodes {
-            let ctx = PortCtx::new(channels, cycle);
-            if let Some(reason) = node.blocked_reason(&ctx) {
+            if let Some(reason) = node.blocked_reason(&view) {
                 parts.push(format!("{}: {}", node.name(), reason));
             }
         }
-        for c in channels.iter() {
-            if !c.capacity().has_space(c.len()) {
-                parts.push(format!(
-                    "channel '{}' full at depth {}",
-                    c.name(),
-                    c.len()
-                ));
+        for c in &self.channels {
+            if let Capacity::Bounded(depth) = c.capacity() {
+                if c.len() >= depth {
+                    parts.push(format!(
+                        "channel '{}' full at {}/{} (peak {}, {} pushes/{} pops)",
+                        c.name(),
+                        c.len(),
+                        depth,
+                        c.stats().peak_occupancy_elems,
+                        c.stats().total_pushes,
+                        c.stats().total_pops,
+                    ));
+                }
             }
         }
         if parts.is_empty() {
@@ -271,7 +611,7 @@ impl Engine {
         }
     }
 
-    fn summarise(&self, cycles: u64, outcome: RunOutcome) -> RunSummary {
+    fn summarise(&self, cycles: u64, outcome: RunOutcome, sched: SchedStats) -> RunSummary {
         RunSummary {
             cycles,
             outcome,
@@ -285,7 +625,19 @@ impl Engine {
                 .iter()
                 .map(|c| (c.name().to_string(), c.stats().clone()))
                 .collect(),
-            depths: self.depths.clone(),
+            // Refresh the configured-capacity column from the live
+            // channels: sweeps reconfigure capacities after compile.
+            depths: self
+                .depths
+                .iter()
+                .zip(&self.channels)
+                .map(|(d, c)| {
+                    let mut d = d.clone();
+                    d.capacity = c.capacity();
+                    d
+                })
+                .collect(),
+            sched,
         }
     }
 }
@@ -307,6 +659,27 @@ mod tests {
         (g.build().unwrap(), h)
     }
 
+    /// The canonical Figure-2 deadlock shape with a bypass of `depth`.
+    fn diamond(depth: usize) -> Engine {
+        let mut g = GraphBuilder::new();
+        let a = g.short_fifo("a").unwrap();
+        let b1 = g.short_fifo("to_reduce").unwrap();
+        let b2 = g.channel("bypass", Capacity::Bounded(depth)).unwrap();
+        let r = g.short_fifo("sum").unwrap();
+        let rep = g.short_fifo("sum_rep").unwrap();
+        let z = g.short_fifo("z").unwrap();
+        g.source_gen("src", a, 8, |i| Elem::Scalar(1.0 + i as f32)).unwrap();
+        g.broadcast("bc", a, &[b1, b2]).unwrap();
+        g.reduce("sum8", b1, r, 8, 0.0, |x, y| x + y).unwrap();
+        g.repeat("rep8", r, rep, 8).unwrap();
+        g.zip("div", &[b2, rep], z, |xs| {
+            Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+        })
+        .unwrap();
+        g.sink("sink", z, Some(8)).unwrap();
+        g.build().unwrap()
+    }
+
     #[test]
     fn linear_pipeline_runs_at_full_throughput() {
         let (mut e, h) = pipeline(100);
@@ -320,31 +693,15 @@ mod tests {
 
     #[test]
     fn deadlock_detected_on_undersized_fifo_with_zip() {
-        // src ─ broadcast ─→ reduce(n=8) ──→ zip
-        //            └──── bypass fifo ────↗
         // With a bypass FIFO shallower than the reduction latency the
         // broadcast wedges — the canonical Figure-2 failure mode.
-        let mut g = GraphBuilder::new();
-        let a = g.short_fifo("a").unwrap();
-        let b1 = g.short_fifo("to_reduce").unwrap();
-        let b2 = g.channel("bypass", Capacity::Bounded(2)).unwrap();
-        let r = g.short_fifo("sum").unwrap();
-        let rep = g.short_fifo("sum_rep").unwrap();
-        let z = g.short_fifo("z").unwrap();
-        g.source_gen("src", a, 8, |i| Elem::Scalar(i as f32)).unwrap();
-        g.broadcast("bc", a, &[b1, b2]).unwrap();
-        g.reduce("sum8", b1, r, 8, 0.0, |x, y| x + y).unwrap();
-        g.repeat("rep8", r, rep, 8).unwrap();
-        g.zip("div", &[b2, rep], z, |xs| {
-            Elem::Scalar(xs[0].scalar() / xs[1].scalar())
-        })
-        .unwrap();
-        g.sink("sink", z, Some(8)).unwrap();
-        let mut e = g.build().unwrap();
+        let mut e = diamond(2);
         let s = e.run_outcome(100_000);
         match s.outcome {
             RunOutcome::Deadlock { detail } => {
                 assert!(detail.contains("bypass"), "detail: {detail}");
+                // Enriched detail: occupancy/capacity of the full FIFO.
+                assert!(detail.contains("2/2"), "detail: {detail}");
             }
             other => panic!("expected deadlock, got {other:?}"),
         }
@@ -383,6 +740,7 @@ mod tests {
         let (mut e, _h) = pipeline(1000);
         let s = e.run_outcome(10);
         assert_eq!(s.outcome, RunOutcome::BudgetExceeded);
+        assert_eq!(s.cycles, 10);
         assert!(matches!(
             pipeline(1000).0.run(10),
             Err(Error::CycleBudgetExceeded { .. })
@@ -431,5 +789,132 @@ mod tests {
         assert!(s.total_peak_words() >= 2);
         assert!(s.peak_elems("a").is_some());
         assert!(s.peak_elems("zzz").is_none());
+    }
+
+    // ---- scheduler parity + event-driven specifics ------------------
+
+    fn assert_same_run(a: &RunSummary, b: &RunSummary, label: &str) {
+        assert_eq!(a.cycles, b.cycles, "{label}: cycles");
+        assert_eq!(a.outcome, b.outcome, "{label}: outcome");
+        assert_eq!(a.node_fires, b.node_fires, "{label}: node fires");
+        assert_eq!(a.channel_stats, b.channel_stats, "{label}: channel stats");
+    }
+
+    #[test]
+    fn dense_and_event_agree_on_pipeline() {
+        let (mut d, _) = pipeline(100);
+        d.set_scheduler_mode(SchedulerMode::Dense);
+        let sd = d.run_outcome(10_000);
+        let (mut e, _) = pipeline(100);
+        assert_eq!(e.scheduler_mode(), SchedulerMode::EventDriven);
+        let se = e.run_outcome(10_000);
+        assert_same_run(&sd, &se, "pipeline(100)");
+        assert!(se.sched.node_ticks_executed <= sd.sched.node_ticks_executed);
+    }
+
+    #[test]
+    fn dense_and_event_agree_on_deadlock() {
+        let mut d = diamond(2);
+        d.set_scheduler_mode(SchedulerMode::Dense);
+        let sd = d.run_outcome(100_000);
+        let mut e = diamond(2);
+        let se = e.run_outcome(100_000);
+        assert_same_run(&sd, &se, "diamond(2) deadlock");
+        assert!(matches!(se.outcome, RunOutcome::Deadlock { .. }));
+    }
+
+    #[test]
+    fn dense_and_event_agree_on_budget() {
+        let (mut d, _) = pipeline(1000);
+        d.set_scheduler_mode(SchedulerMode::Dense);
+        let sd = d.run_outcome(10);
+        let (mut e, _) = pipeline(1000);
+        let se = e.run_outcome(10);
+        assert_same_run(&sd, &se, "pipeline budget");
+        assert_eq!(se.outcome, RunOutcome::BudgetExceeded);
+    }
+
+    #[test]
+    fn cycle_jump_skips_long_latency_idle_spans() {
+        // src(1 elem) → map(latency 200) → sink: the dense loop idles
+        // ~200 cycles waiting for the pipe register; the event-driven
+        // scheduler jumps straight to the maturity timer.
+        fn build() -> (Engine, crate::sim::nodes::SinkHandle) {
+            let mut g = GraphBuilder::new();
+            let a = g.short_fifo("a").unwrap();
+            let b = g.short_fifo("b").unwrap();
+            g.source_gen("src", a, 1, |i| Elem::Scalar(i as f32)).unwrap();
+            g.map_latency("slow", a, b, 200, |x| x.clone()).unwrap();
+            let h = g.sink("sink", b, Some(1)).unwrap();
+            (g.build().unwrap(), h)
+        }
+        let (mut d, _) = build();
+        d.set_scheduler_mode(SchedulerMode::Dense);
+        let sd = d.run_outcome(10_000);
+        let (mut e, h) = build();
+        let se = e.run_outcome(10_000);
+        assert_same_run(&sd, &se, "latency-200 pipeline");
+        assert_eq!(h.len(), 1);
+        assert!(se.cycles > 200, "latency dominates the run");
+        assert!(
+            se.sched.cycles_jumped > 150,
+            "cycle-jump should cover the idle span, jumped {}",
+            se.sched.cycles_jumped
+        );
+        assert!(
+            se.sched.node_ticks_executed * 5 < sd.sched.node_ticks_executed,
+            "event {} vs dense {} ticks",
+            se.sched.node_ticks_executed,
+            sd.sched.node_ticks_executed
+        );
+        assert!(se.sched.tick_ratio() < 0.2);
+    }
+
+    #[test]
+    fn summary_depths_track_live_capacity() {
+        // Regression: RunSummary::depths used to clone the compile-time
+        // report, so set_capacity/set_all_unbounded never showed up.
+        let (mut e, _h) = pipeline(10);
+        e.set_capacity("a", Capacity::Bounded(9)).unwrap();
+        let s = e.run_outcome(1_000);
+        assert_eq!(
+            s.depth_of("a").unwrap().capacity,
+            Capacity::Bounded(9),
+            "summary must report the capacity that actually ran"
+        );
+        e.reset();
+        e.set_all_unbounded();
+        let s2 = e.run_outcome(1_000);
+        assert!(s2.depths.iter().all(|d| d.capacity == Capacity::Unbounded));
+        // The engine's compile-time report is unchanged by design.
+        assert_eq!(
+            e.depth_report().iter().find(|d| d.name == "a").unwrap().capacity,
+            Capacity::Bounded(2)
+        );
+    }
+
+    #[test]
+    fn describe_blockage_works_on_shared_engine() {
+        let mut e = diamond(2);
+        let _ = e.run_outcome(100_000);
+        let e_ref: &Engine = &e; // shared probe, no &mut needed
+        let detail = e_ref.describe_blockage();
+        assert!(detail.contains("bypass"));
+    }
+
+    #[test]
+    fn full_cycles_identical_across_schedulers() {
+        // The lazy span accounting must reproduce the dense per-cycle
+        // fullness counter exactly — including for a wedged graph whose
+        // FIFOs stay full until detection.
+        let mut d = diamond(2);
+        d.set_scheduler_mode(SchedulerMode::Dense);
+        let sd = d.run_outcome(100_000);
+        let mut e = diamond(2);
+        let se = e.run_outcome(100_000);
+        for ((dn, ds), (en, es)) in sd.channel_stats.iter().zip(&se.channel_stats) {
+            assert_eq!(dn, en);
+            assert_eq!(ds.full_cycles, es.full_cycles, "channel '{dn}'");
+        }
     }
 }

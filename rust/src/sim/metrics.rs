@@ -61,6 +61,11 @@ pub struct GraphMetrics {
     /// Cycles during which at least one channel was full (pressure
     /// indicator, summed over channels).
     pub total_full_cycles: u64,
+    /// Node ticks the scheduler actually executed.
+    pub ticks_executed: u64,
+    /// Node ticks the event-driven scheduler skipped relative to the
+    /// dense loop over the same simulated span (0 in dense mode).
+    pub ticks_skipped: u64,
 }
 
 impl GraphMetrics {
@@ -78,6 +83,8 @@ impl GraphMetrics {
             max_channel_peak,
             total_fires: s.node_fires.iter().map(|(_, f)| f).sum(),
             total_full_cycles: s.channel_stats.iter().map(|(_, st)| st.full_cycles).sum(),
+            ticks_executed: s.sched.node_ticks_executed,
+            ticks_skipped: s.sched.node_ticks_skipped,
         }
     }
 
@@ -115,6 +122,7 @@ mod tests {
             outcome: RunOutcome::Completed,
             node_fires: vec![("n".into(), cycles)],
             depths: Vec::new(),
+            sched: Default::default(),
             channel_stats: peaks
                 .iter()
                 .map(|(name, p)| {

@@ -14,10 +14,13 @@
 //!   `Repeat`, `Scan` — plus the plumbing any spatial mapping needs
 //!   (`Source`, `Sink`, `Broadcast`, `Zip`). Every node has initiation
 //!   interval II = 1 and a configurable pipeline latency.
-//! * **The engine** ([`engine`]) steps all nodes one cycle at a time with
-//!   deterministic two-phase semantics, detects quiescence (done) and
-//!   deadlock (no progress with work outstanding), and collects
-//!   [`metrics`].
+//! * **The engine** ([`engine`]) runs the graph under deterministic
+//!   two-phase semantics, detects quiescence (done) and deadlock (no
+//!   progress with work outstanding), and collects [`metrics`]. Two
+//!   cycle-exact schedulers are provided ([`SchedulerMode`]): the dense
+//!   reference loop (every node, every cycle) and the default
+//!   event-driven scheduler (wake-on-commit + timer heap + cycle-jump),
+//!   which skips nodes that cannot fire and jumps idle spans.
 //!
 //! ## Building graphs: ports, scopes, compile
 //!
@@ -54,10 +57,10 @@ pub mod nodes;
 pub use channel::{Capacity, ChannelId, ChannelStats};
 pub use compile::{ChannelDepth, DepthPolicy, FifoPlan};
 pub use elem::Elem;
-pub use engine::{Engine, RunOutcome, RunSummary};
+pub use engine::{Engine, RunOutcome, RunSummary, SchedStats, SchedulerMode};
 pub use graph::{GraphBuilder, NodeId, Port, Scope};
 pub use metrics::{GraphMetrics, OccupancyClass};
-pub use node::{Node, PortCtx};
+pub use node::{ChanView, Node, PortCtx};
 
 #[cfg(test)]
 pub(crate) mod testutil {

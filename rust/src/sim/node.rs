@@ -1,16 +1,32 @@
 //! The node abstraction: two-phase ticking, output pipelines, firing rules.
 //!
-//! Every hardware unit in the abstract machine is a [`Node`]. Once per
-//! cycle the engine calls [`Node::tick`], during which the node may
-//! *stage* pops from its input channels and *stage* pushes into its
-//! output channels via the [`PortCtx`]. All nodes observe channel state
-//! as of the start of the cycle, so tick order is irrelevant.
+//! Every hardware unit in the abstract machine is a [`Node`]. When the
+//! engine calls [`Node::tick`], the node may *stage* pops from its input
+//! channels and *stage* pushes into its output channels via the
+//! [`PortCtx`]. All nodes observe channel state as of the start of the
+//! cycle, so tick order is irrelevant.
 //!
 //! ## Firing rule (II = 1)
 //!
 //! A node *fires* at most once per cycle, and only when
 //! 1. every input channel has an element visible this cycle,
 //! 2. every output pipeline has a free register (see below).
+//!
+//! ## Blocked-on declarations (event-driven scheduling)
+//!
+//! A node that cannot make progress is, by construction, blocked on one
+//! of three things: an input with no visible element, an output channel
+//! with no space, or a pipeline register that matures at a future cycle.
+//! Rather than asking every node to spell this out, the [`PortCtx`]
+//! *observes* it: in traced mode (used by the event-driven scheduler),
+//! every [`PortCtx::available`] call that returns 0 records a data need
+//! and every [`PortCtx::can_push`] that returns `false` records a space
+//! need, while [`OutPipe::drain`] reports the earliest future maturity
+//! cycle through [`TickReport::next_ready`]. Because a node's firing
+//! decision is a function of exactly these observations, the recorded
+//! set is a sound wake set: the node cannot make progress until one of
+//! the recorded conditions changes, and each of them changes only at a
+//! channel commit or at the reported cycle.
 //!
 //! ## Output pipelines ([`OutPipe`])
 //!
@@ -28,40 +44,108 @@ use std::collections::VecDeque;
 use super::channel::{Channel, ChannelId};
 use super::elem::Elem;
 
+/// Blocked-on observations recorded during one traced tick — the raw
+/// material of the event-driven scheduler's wake lists. See the module
+/// docs for why observation-based recording is a sound wake set.
+#[derive(Debug, Default)]
+pub(crate) struct TickTrace {
+    /// Input channels observed empty (node needs data to progress).
+    pub(crate) needs_data: Vec<ChannelId>,
+    /// Output channels observed full (node needs space to progress).
+    pub(crate) needs_space: Vec<ChannelId>,
+    /// Channels that received their *first* staged op this tick (the
+    /// engine's dirty list — channels already carrying staged ops from
+    /// an earlier node this cycle are not re-recorded).
+    pub(crate) touched: Vec<ChannelId>,
+}
+
+impl TickTrace {
+    pub(crate) fn clear(&mut self) {
+        self.needs_data.clear();
+        self.needs_space.clear();
+        self.touched.clear();
+    }
+}
+
 /// Per-cycle view of the channel array handed to each node.
 pub struct PortCtx<'a> {
     channels: &'a mut [Channel],
     /// Current cycle number.
     pub cycle: u64,
+    trace: Option<&'a mut TickTrace>,
 }
 
 impl<'a> PortCtx<'a> {
-    /// Wrap the engine's channel array for one node's tick.
+    /// Wrap the engine's channel array for one node's tick (untraced —
+    /// the dense scheduler and unit tests).
     pub fn new(channels: &'a mut [Channel], cycle: u64) -> Self {
-        PortCtx { channels, cycle }
+        PortCtx {
+            channels,
+            cycle,
+            trace: None,
+        }
     }
 
-    /// Elements visible on `id` this cycle.
-    #[inline]
-    pub fn available(&self, id: ChannelId) -> usize {
-        self.channels[id.0].available()
+    /// Traced variant: blocked-on observations and first-staged-op
+    /// channels are recorded into `trace` (the event-driven scheduler).
+    pub(crate) fn traced(
+        channels: &'a mut [Channel],
+        cycle: u64,
+        trace: &'a mut TickTrace,
+    ) -> Self {
+        PortCtx {
+            channels,
+            cycle,
+            trace: Some(trace),
+        }
     }
 
-    /// Whether `id` can accept a push this cycle.
+    /// Elements visible on `id` this cycle. In traced mode, observing 0
+    /// records a data need on `id`.
     #[inline]
-    pub fn can_push(&self, id: ChannelId) -> bool {
-        self.channels[id.0].can_push()
+    pub fn available(&mut self, id: ChannelId) -> usize {
+        let n = self.channels[id.0].available();
+        if n == 0 {
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.needs_data.push(id);
+            }
+        }
+        n
+    }
+
+    /// Whether `id` can accept a push this cycle. In traced mode,
+    /// observing `false` records a space need on `id`.
+    #[inline]
+    pub fn can_push(&mut self, id: ChannelId) -> bool {
+        let ok = self.channels[id.0].can_push();
+        if !ok {
+            if let Some(t) = self.trace.as_deref_mut() {
+                t.needs_space.push(id);
+            }
+        }
+        ok
+    }
+
+    #[inline]
+    fn note_touched(&mut self, id: ChannelId) {
+        if let Some(t) = self.trace.as_deref_mut() {
+            if !self.channels[id.0].has_staged() {
+                t.touched.push(id);
+            }
+        }
     }
 
     /// Stage a pop from `id` (caller must have checked availability).
     #[inline]
     pub fn pop(&mut self, id: ChannelId) -> Elem {
+        self.note_touched(id);
         self.channels[id.0].stage_pop()
     }
 
     /// Stage a push into `id` (caller must have checked space).
     #[inline]
     pub fn push(&mut self, id: ChannelId, e: Elem) {
+        self.note_touched(id);
         self.channels[id.0].stage_push(e)
     }
 
@@ -72,24 +156,61 @@ impl<'a> PortCtx<'a> {
     }
 }
 
+/// Read-only view of the channel array, for blockage probes
+/// ([`Node::blocked_reason`]) — no staging, no trace, shared access.
+pub struct ChanView<'a> {
+    channels: &'a [Channel],
+}
+
+impl<'a> ChanView<'a> {
+    /// Wrap the engine's channel array for diagnostics.
+    pub fn new(channels: &'a [Channel]) -> Self {
+        ChanView { channels }
+    }
+
+    /// Elements visible on `id` this cycle.
+    #[inline]
+    pub fn available(&self, id: ChannelId) -> usize {
+        self.channels[id.0].available()
+    }
+
+    /// Whether `id` could accept a push this cycle.
+    #[inline]
+    pub fn can_push(&self, id: ChannelId) -> bool {
+        self.channels[id.0].can_push()
+    }
+
+    /// Peek without popping.
+    #[inline]
+    pub fn peek(&self, id: ChannelId, k: usize) -> Option<&Elem> {
+        self.channels[id.0].peek(k)
+    }
+}
+
 /// What a node did during one tick — the engine aggregates these for
-/// progress/deadlock detection.
+/// progress/deadlock detection and timer scheduling.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TickReport {
     /// The node fired (consumed inputs / produced a result) this cycle.
     pub fired: bool,
-    /// The node holds results scheduled to mature at a *future* cycle
-    /// (pipeline registers still counting down). Not a deadlock even if
-    /// no channel commits this cycle.
-    pub waiting_on_time: bool,
+    /// Earliest *future* cycle at which a result held in a pipeline
+    /// register matures (`None` = nothing waiting on time). The
+    /// event-driven scheduler posts this as a wake-up; the dense loop
+    /// treats `Some` as "not a deadlock even if nothing commits".
+    pub next_ready: Option<u64>,
 }
 
 impl TickReport {
-    /// Combine reports (for nodes with multiple internal pipes).
+    /// Combine reports (for nodes with multiple internal pipes): fires
+    /// OR together, timers take the earliest.
     pub fn merge(self, other: TickReport) -> TickReport {
         TickReport {
             fired: self.fired || other.fired,
-            waiting_on_time: self.waiting_on_time || other.waiting_on_time,
+            next_ready: match (self.next_ready, other.next_ready) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, None) => a,
+                (None, b) => b,
+            },
         }
     }
 }
@@ -113,8 +234,8 @@ pub trait Node {
 
     /// Describe why the node is blocked, for deadlock reports.
     /// Returns `None` when the node is idle/done rather than blocked.
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        let _ = ctx;
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        let _ = view;
         None
     }
 
@@ -153,26 +274,30 @@ impl OutPipe {
     }
 
     /// Move matured results into the output channel while it has space.
-    /// Returns a report with `waiting_on_time` set if immature results
-    /// remain.
+    /// The returned report carries [`TickReport::next_ready`] when the
+    /// front result matures at a future cycle (a matured-but-blocked
+    /// front instead records a space need through the ctx).
     #[inline]
     pub fn drain(&mut self, ctx: &mut PortCtx<'_>) -> TickReport {
         if self.slots.is_empty() {
             return TickReport::default();
         }
         while let Some((ready, _)) = self.slots.front() {
-            if *ready > ctx.cycle || !ctx.can_push(self.channel) {
-                break;
+            if *ready > ctx.cycle {
+                break; // immature: report a timer below
+            }
+            if !ctx.can_push(self.channel) {
+                break; // matured but blocked: ctx recorded the space need
             }
             let (_, e) = self.slots.pop_front().unwrap();
             ctx.push(self.channel, e);
         }
         TickReport {
             fired: false,
-            waiting_on_time: self
+            next_ready: self
                 .slots
                 .front()
-                .is_some_and(|(ready, _)| *ready > ctx.cycle),
+                .and_then(|(ready, _)| (*ready > ctx.cycle).then_some(*ready)),
         }
     }
 
@@ -253,21 +378,21 @@ mod tests {
             let mut ctx = PortCtx::new(&mut chans, 0);
             pipe.send(0, Elem::Scalar(7.0));
             let r = pipe.drain(&mut ctx);
-            assert!(r.waiting_on_time);
+            assert_eq!(r.next_ready, Some(2), "maturity cycle reported");
         }
         chans[0].commit();
         assert_eq!(chans[0].len(), 0);
         {
             let mut ctx = PortCtx::new(&mut chans, 1);
             let r = pipe.drain(&mut ctx);
-            assert!(r.waiting_on_time);
+            assert_eq!(r.next_ready, Some(2));
         }
         chans[0].commit();
         assert_eq!(chans[0].len(), 0);
         {
             let mut ctx = PortCtx::new(&mut chans, 2);
             let r = pipe.drain(&mut ctx);
-            assert!(!r.waiting_on_time);
+            assert_eq!(r.next_ready, None);
             assert!(pipe.is_empty());
         }
         chans[0].commit();
@@ -289,7 +414,7 @@ mod tests {
             pipe.send(1, Elem::Scalar(2.0));
             let r = pipe.drain(&mut ctx);
             // Mature but channel full: stays in the register, not a timer wait.
-            assert!(!r.waiting_on_time);
+            assert_eq!(r.next_ready, None);
             assert!(!pipe.has_room(), "register held by blocked result");
         }
         chans[0].commit();
@@ -321,8 +446,55 @@ mod tests {
         {
             let mut ctx = PortCtx::new(&mut chans, 3);
             let r = pipe.drain(&mut ctx);
-            assert!(!r.waiting_on_time);
+            assert_eq!(r.next_ready, None);
             assert_eq!(pipe.len(), 1);
         }
+    }
+
+    #[test]
+    fn traced_ctx_records_data_space_and_touches() {
+        let mut chans = vec![
+            Channel::new("in", Capacity::Unbounded),
+            Channel::new("out", Capacity::Bounded(1)),
+        ];
+        chans[1].stage_push(Elem::Scalar(9.0));
+        chans[1].commit(); // out is now full
+        let mut trace = TickTrace::default();
+        {
+            let mut ctx = PortCtx::traced(&mut chans, 0, &mut trace);
+            assert_eq!(ctx.available(ChannelId(0)), 0);
+            assert!(!ctx.can_push(ChannelId(1)));
+        }
+        assert_eq!(trace.needs_data, vec![ChannelId(0)]);
+        assert_eq!(trace.needs_space, vec![ChannelId(1)]);
+        assert!(trace.touched.is_empty());
+
+        trace.clear();
+        {
+            let mut ctx = PortCtx::traced(&mut chans, 1, &mut trace);
+            // First staged op on a channel is recorded; later staged ops
+            // on the now-dirty channel are not re-recorded.
+            ctx.push(ChannelId(0), Elem::Scalar(1.0));
+            ctx.push(ChannelId(0), Elem::Scalar(2.0));
+            let _ = ctx.pop(ChannelId(1));
+        }
+        assert_eq!(trace.touched, vec![ChannelId(0), ChannelId(1)]);
+    }
+
+    #[test]
+    fn merge_takes_earliest_timer() {
+        let a = TickReport {
+            fired: false,
+            next_ready: Some(7),
+        };
+        let b = TickReport {
+            fired: true,
+            next_ready: Some(3),
+        };
+        let c = TickReport::default();
+        assert_eq!(a.merge(b).next_ready, Some(3));
+        assert!(a.merge(b).fired);
+        assert_eq!(a.merge(c).next_ready, Some(7));
+        assert_eq!(c.merge(c).next_ready, None);
     }
 }

@@ -8,7 +8,7 @@
 //! producing) deadlocks the whole graph.
 
 use crate::sim::channel::ChannelId;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// Copies each input element to every output channel. Fires only when
 /// *all* output pipes have room (atomic fan-out, as a wired bus would).
@@ -65,8 +65,8 @@ impl Node for Broadcast {
         self.fires
     }
 
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        if ctx.available(self.input) > 0 && !self.pipes.iter().all(OutPipe::has_room) {
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        if view.available(self.input) > 0 && !self.pipes.iter().all(OutPipe::has_room) {
             let stuck: Vec<String> = self
                 .pipes
                 .iter()
@@ -138,7 +138,7 @@ mod tests {
         assert_eq!(chans[1].len(), 1);
         assert!(chans[2].len() <= 2);
         assert!(b
-            .blocked_reason(&PortCtx::new(&mut chans, 10))
+            .blocked_reason(&ChanView::new(&chans))
             .unwrap()
             .contains("fan-out blocked"));
     }

@@ -2,7 +2,7 @@
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// Applies a function to every element in the input stream.
 ///
@@ -72,8 +72,8 @@ impl Node for Map {
         self.fires
     }
 
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        if view.available(self.input) > 0 && !self.pipe.has_room() {
             Some(format!(
                 "input ready but output pipe blocked ({})",
                 self.pipe.describe_blocked().unwrap_or_default()

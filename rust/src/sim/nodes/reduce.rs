@@ -2,7 +2,7 @@
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// Shared machinery for scalar and memory reductions.
 ///
@@ -78,13 +78,13 @@ impl ReduceCore {
         self.count == 0 && self.pipe.is_empty()
     }
 
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        if self.count > 0 && ctx.available(self.input) == 0 {
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        if self.count > 0 && view.available(self.input) == 0 {
             Some(format!(
                 "mid-reduction ({}/{} folded) with empty input",
                 self.count, self.n
             ))
-        } else if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+        } else if view.available(self.input) > 0 && !self.pipe.has_room() {
             Some("result ready but output pipe blocked".into())
         } else {
             self.pipe.describe_blocked()
@@ -156,8 +156,8 @@ impl Node for Reduce {
     fn fires(&self) -> u64 {
         self.core.fires
     }
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        self.core.blocked_reason(ctx)
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        self.core.blocked_reason(view)
     }
     fn reset(&mut self) {
         self.core.reset()
@@ -222,8 +222,8 @@ impl Node for MemReduce {
     fn fires(&self) -> u64 {
         self.core.fires
     }
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        self.core.blocked_reason(ctx)
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        self.core.blocked_reason(view)
     }
     fn reset(&mut self) {
         self.core.reset()

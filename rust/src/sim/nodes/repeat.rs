@@ -2,7 +2,7 @@
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// Repeats every element of the input stream `n` times.
 ///
@@ -72,10 +72,10 @@ impl Node for Repeat {
         self.fires
     }
 
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
         if self.current.is_some() && !self.pipe.has_room() {
             Some("mid-repeat with output pipe blocked".into())
-        } else if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+        } else if view.available(self.input) > 0 && !self.pipe.has_room() {
             Some("input ready but output pipe blocked".into())
         } else {
             self.pipe.describe_blocked()

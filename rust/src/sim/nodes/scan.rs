@@ -6,7 +6,7 @@
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// `Scan (n) (init) (updt) (f)`.
 ///
@@ -92,10 +92,10 @@ impl Node for Scan {
         self.fires
     }
 
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
-        if ctx.available(self.input) > 0 && !self.pipe.has_room() {
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
+        if view.available(self.input) > 0 && !self.pipe.has_room() {
             Some("input ready but output pipe blocked".into())
-        } else if self.count > 0 && ctx.available(self.input) == 0 {
+        } else if self.count > 0 && view.available(self.input) == 0 {
             Some(format!(
                 "mid-scan ({}/{} seen) with empty input",
                 self.count, self.n

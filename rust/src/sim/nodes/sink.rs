@@ -5,7 +5,7 @@ use std::rc::Rc;
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, PortCtx, TickReport};
 
 /// Shared handle to a sink's captured output.
 ///
@@ -139,7 +139,7 @@ impl Node for Sink {
         self.fires
     }
 
-    fn blocked_reason(&self, _ctx: &PortCtx<'_>) -> Option<String> {
+    fn blocked_reason(&self, _view: &ChanView<'_>) -> Option<String> {
         match self.expected {
             Some(exp) if self.fires < exp => Some(format!(
                 "received {}/{} expected elements",
@@ -204,9 +204,9 @@ mod tests {
 
     #[test]
     fn shortfall_reported_when_blocked() {
-        let mut chans = vec![Channel::new("in", Capacity::Unbounded)];
+        let chans = vec![Channel::new("in", Capacity::Unbounded)];
         let sink = Sink::new("s", ChannelId(0), Some(5));
-        let ctx = PortCtx::new(&mut chans, 0);
-        assert!(sink.blocked_reason(&ctx).unwrap().contains("0/5"));
+        let view = ChanView::new(&chans);
+        assert!(sink.blocked_reason(&view).unwrap().contains("0/5"));
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// Produces a finite stream of elements, one per cycle (II = 1).
 ///
@@ -92,7 +92,7 @@ impl Node for Source {
         self.fires
     }
 
-    fn blocked_reason(&self, _ctx: &PortCtx<'_>) -> Option<String> {
+    fn blocked_reason(&self, _view: &ChanView<'_>) -> Option<String> {
         if self.next < self.len && !self.pipe.has_room() {
             Some(format!(
                 "source backpressured at element {}/{}",
@@ -155,7 +155,7 @@ mod tests {
         assert_eq!(s.fires(), 3);
         assert!(!s.flushed());
         assert!(s
-            .blocked_reason(&PortCtx::new(&mut chans, 10))
+            .blocked_reason(&ChanView::new(&chans))
             .unwrap()
             .contains("backpressured"));
     }

@@ -9,7 +9,7 @@
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
-use crate::sim::node::{Node, OutPipe, PortCtx, TickReport};
+use crate::sim::node::{ChanView, Node, OutPipe, PortCtx, TickReport};
 
 /// Combines one element from each input with `f` (II = 1).
 pub struct Zip {
@@ -91,14 +91,14 @@ impl Node for Zip {
         self.fires
     }
 
-    fn blocked_reason(&self, ctx: &PortCtx<'_>) -> Option<String> {
+    fn blocked_reason(&self, view: &ChanView<'_>) -> Option<String> {
         let waiting: Vec<String> = self
             .inputs
             .iter()
-            .filter(|&&c| ctx.available(c) == 0)
+            .filter(|&&c| view.available(c) == 0)
             .map(|c| format!("ch#{}", c.0))
             .collect();
-        let any_input = self.inputs.iter().any(|&c| ctx.available(c) > 0);
+        let any_input = self.inputs.iter().any(|&c| view.available(c) > 0);
         if any_input && !waiting.is_empty() {
             Some(format!("partial inputs; starving on {}", waiting.join(", ")))
         } else if waiting.is_empty() && !self.pipe.has_room() {
@@ -159,7 +159,7 @@ mod tests {
         clk.drive(&mut z, &mut chans, 3);
         assert_eq!(z.fires(), 0, "must not fire with one input empty");
         assert!(z
-            .blocked_reason(&PortCtx::new(&mut chans, 3))
+            .blocked_reason(&ChanView::new(&chans))
             .unwrap()
             .contains("starving"));
         chans[1].stage_push(Elem::Scalar(2.0));

@@ -1,0 +1,336 @@
+//! Differential tests: `SchedulerMode::EventDriven` must be cycle-exact
+//! against the dense reference loop on every graph — same total cycles,
+//! same outcome (including deadlock detail and budget exhaustion), same
+//! per-node fire counts, and identical per-channel statistics (peaks,
+//! push/pop totals, fullness cycles).
+//!
+//! Coverage: randomized linear pipelines (latencies, capacities, vector
+//! elements), randomized reconvergent diamonds (the Figure-2 shape,
+//! including undersized-bypass deadlocks), imbalanced independent
+//! joins, scan/repeat/reduce chains, all four attention variants plus
+//! multihead at N ∈ {4, 16, 64}, and tiny budgets for the
+//! budget-exceeded path.
+
+use sdpa_dataflow::attention::multihead::build_memfree_heads;
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{cycle_budget, FifoPlan, Variant};
+use sdpa_dataflow::prng::{for_each_case, SplitMix64};
+use sdpa_dataflow::sim::{
+    Capacity, Elem, Engine, GraphBuilder, RunOutcome, RunSummary, SchedulerMode,
+};
+
+fn run_both(mut mk: impl FnMut() -> Engine, budget: u64) -> (RunSummary, RunSummary) {
+    let mut dense = mk();
+    dense.set_scheduler_mode(SchedulerMode::Dense);
+    let sd = dense.run_outcome(budget);
+    let mut event = mk(); // EventDriven is the default mode
+    assert_eq!(event.scheduler_mode(), SchedulerMode::EventDriven);
+    let se = event.run_outcome(budget);
+    (sd, se)
+}
+
+fn assert_parity(sd: &RunSummary, se: &RunSummary, label: &str) {
+    assert_eq!(sd.cycles, se.cycles, "{label}: cycles");
+    assert_eq!(sd.outcome, se.outcome, "{label}: outcome");
+    assert_eq!(sd.node_fires, se.node_fires, "{label}: node fires");
+    assert_eq!(sd.channel_stats, se.channel_stats, "{label}: channel stats");
+    assert!(
+        se.sched.node_ticks_executed <= sd.sched.node_ticks_executed,
+        "{label}: event executed {} ticks, dense {}",
+        se.sched.node_ticks_executed,
+        sd.sched.node_ticks_executed
+    );
+}
+
+fn random_cap(rng: &mut SplitMix64) -> Capacity {
+    if rng.below(5) == 0 {
+        Capacity::Unbounded
+    } else {
+        Capacity::Bounded(1 + rng.below(3) as usize)
+    }
+}
+
+fn random_budget(rng: &mut SplitMix64) -> u64 {
+    if rng.below(4) == 0 {
+        rng.below(30) // exercise the budget-exceeded path
+    } else {
+        50_000
+    }
+}
+
+// ---- randomized linear pipelines -----------------------------------
+
+struct LinearSpec {
+    len: u64,
+    vector_width: Option<usize>,
+    first_cap: Capacity,
+    stages: Vec<(u64, Capacity)>, // (latency, output capacity)
+}
+
+fn build_linear(s: &LinearSpec) -> Engine {
+    let mut g = GraphBuilder::new();
+    let first = g.channel("c0", s.first_cap).unwrap();
+    if let Some(wd) = s.vector_width {
+        g.source_gen("src", first, s.len, move |i| {
+            Elem::vector(&vec![i as f32; wd])
+        })
+        .unwrap();
+    } else {
+        g.source_gen("src", first, s.len, |i| Elem::Scalar(i as f32))
+            .unwrap();
+    }
+    let mut prev = first;
+    for (k, (lat, cap)) in s.stages.iter().enumerate() {
+        let next = g.channel(format!("c{}", k + 1), *cap).unwrap();
+        g.map_latency(&format!("m{k}"), prev, next, *lat, |x| x.clone())
+            .unwrap();
+        prev = next;
+    }
+    g.sink("sink", prev, Some(s.len)).unwrap();
+    g.build().unwrap()
+}
+
+#[test]
+fn property_linear_pipelines_are_scheduler_invariant() {
+    for_each_case(0x11EA5, 24, |case, rng| {
+        let spec = LinearSpec {
+            len: rng.below(41),
+            vector_width: (rng.below(4) == 0).then(|| 1 + rng.below(4) as usize),
+            first_cap: random_cap(rng),
+            stages: (0..1 + rng.below(4))
+                .map(|_| (1 + rng.below(5), random_cap(rng)))
+                .collect(),
+        };
+        let budget = random_budget(rng);
+        let (sd, se) = run_both(|| build_linear(&spec), budget);
+        assert_parity(&sd, &se, &format!("linear case {case} (budget {budget})"));
+    });
+}
+
+// ---- randomized reconvergent diamonds (the Figure-2 shape) ---------
+
+struct DiamondSpec {
+    len: u64,
+    n: usize,
+    bypass: Capacity,
+    delay: u64,
+}
+
+fn build_diamond(s: &DiamondSpec) -> Engine {
+    let mut g = GraphBuilder::new();
+    let a = g.short_fifo("a").unwrap();
+    let b1 = g.short_fifo("to_sum").unwrap();
+    let b2 = g.channel("bypass", s.bypass).unwrap();
+    let r = g.short_fifo("sum").unwrap();
+    let rd = g.short_fifo("sum_delayed").unwrap();
+    let rep = g.short_fifo("rep").unwrap();
+    let z = g.short_fifo("z").unwrap();
+    g.source_gen("src", a, s.len, |i| Elem::Scalar(1.0 + i as f32))
+        .unwrap();
+    g.broadcast("bc", a, &[b1, b2]).unwrap();
+    g.reduce("sum", b1, r, s.n, 0.0, |x, y| x + y).unwrap();
+    g.map_latency("delay", r, rd, s.delay, |x| x.clone()).unwrap();
+    g.repeat("rep", rd, rep, s.n).unwrap();
+    g.zip("div", &[b2, rep], z, |xs| {
+        Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+    })
+    .unwrap();
+    g.sink("sink", z, None).unwrap();
+    g.build().unwrap()
+}
+
+#[test]
+fn property_diamonds_are_scheduler_invariant_including_deadlock() {
+    // Pinned shapes guarantee both paths are exercised regardless of
+    // what the randomized sweep below happens to draw.
+    let wedge = DiamondSpec {
+        len: 40,
+        n: 8,
+        bypass: Capacity::Bounded(2),
+        delay: 1,
+    };
+    let (sd, se) = run_both(|| build_diamond(&wedge), 50_000);
+    assert_parity(&sd, &se, "diamond pinned wedge");
+    assert!(matches!(se.outcome, RunOutcome::Deadlock { .. }));
+
+    let ok = DiamondSpec {
+        len: 16,
+        n: 4,
+        bypass: Capacity::Bounded(8),
+        delay: 1,
+    };
+    let (sd, se) = run_both(|| build_diamond(&ok), 50_000);
+    assert_parity(&sd, &se, "diamond pinned ok");
+    assert_eq!(se.outcome, RunOutcome::Completed);
+
+    for_each_case(0xD1A, 24, |case, rng| {
+        let n = 2 + rng.below(7) as usize;
+        let spec = DiamondSpec {
+            len: rng.below(41),
+            n,
+            // Often shallower than the reduction window → deadlock.
+            bypass: Capacity::Bounded(2 + rng.below(n as u64 + 4) as usize),
+            delay: 1 + rng.below(4),
+        };
+        let budget = random_budget(rng);
+        let (sd, se) = run_both(|| build_diamond(&spec), budget);
+        assert_parity(&sd, &se, &format!("diamond case {case} (budget {budget})"));
+    });
+}
+
+// ---- imbalanced independent joins ----------------------------------
+
+struct JoinSpec {
+    len_a: u64,
+    len_b: u64,
+    n: usize,
+    cap: Capacity,
+}
+
+fn build_join(s: &JoinSpec) -> Engine {
+    let mut g = GraphBuilder::new();
+    let a = g.channel("a", s.cap).unwrap();
+    let b = g.short_fifo("b").unwrap();
+    let rb = g.short_fifo("rb").unwrap();
+    let z = g.short_fifo("z").unwrap();
+    g.source_gen("src_a", a, s.len_a, |i| Elem::Scalar(i as f32))
+        .unwrap();
+    g.source_gen("src_b", b, s.len_b, |i| Elem::Scalar(i as f32))
+        .unwrap();
+    g.reduce("slow", b, rb, s.n, 0.0, |x, y| x + y).unwrap();
+    g.zip("join", &[a, rb], z, |xs| {
+        Elem::Scalar(xs[0].scalar() + xs[1].scalar())
+    })
+    .unwrap();
+    g.sink("sink", z, None).unwrap();
+    g.build().unwrap()
+}
+
+#[test]
+fn property_imbalanced_joins_are_scheduler_invariant() {
+    for_each_case(0x2017, 16, |case, rng| {
+        let spec = JoinSpec {
+            len_a: rng.below(30),
+            len_b: rng.below(30),
+            n: 1 + rng.below(5) as usize,
+            cap: random_cap(rng),
+        };
+        let budget = random_budget(rng);
+        let (sd, se) = run_both(|| build_join(&spec), budget);
+        assert_parity(&sd, &se, &format!("join case {case} (budget {budget})"));
+    });
+}
+
+// ---- scan / repeat / reduce chains ---------------------------------
+
+struct MixSpec {
+    len: u64,
+    n: usize,
+    rep: usize,
+    caps: [Capacity; 4],
+}
+
+fn build_mix(s: &MixSpec) -> Engine {
+    let mut g = GraphBuilder::new();
+    let a = g.channel("a", s.caps[0]).unwrap();
+    let b = g.channel("b", s.caps[1]).unwrap();
+    let c = g.channel("c", s.caps[2]).unwrap();
+    let d = g.channel("d", s.caps[3]).unwrap();
+    g.source_gen("src", a, s.len, |i| Elem::Scalar(i as f32))
+        .unwrap();
+    g.scan(
+        "runsum",
+        a,
+        b,
+        s.n,
+        Elem::Scalar(0.0),
+        |st, x| Elem::Scalar(st.scalar() + x.scalar()),
+        |st, _| st.clone(),
+    )
+    .unwrap();
+    g.repeat("rep", b, c, s.rep).unwrap();
+    g.reduce("fold", c, d, s.rep, f32::NEG_INFINITY, f32::max)
+        .unwrap();
+    g.sink("sink", d, None).unwrap();
+    g.build().unwrap()
+}
+
+#[test]
+fn property_scan_repeat_reduce_chains_are_scheduler_invariant() {
+    for_each_case(0x5CAB, 16, |case, rng| {
+        let spec = MixSpec {
+            len: rng.below(41),
+            n: 1 + rng.below(6) as usize,
+            rep: 1 + rng.below(4) as usize,
+            caps: [
+                random_cap(rng),
+                random_cap(rng),
+                random_cap(rng),
+                random_cap(rng),
+            ],
+        };
+        let budget = random_budget(rng);
+        let (sd, se) = run_both(|| build_mix(&spec), budget);
+        assert_parity(&sd, &se, &format!("mix case {case} (budget {budget})"));
+    });
+}
+
+// ---- attention variants + multihead (the acceptance grid) ----------
+
+#[test]
+fn attention_variants_cycle_exact_across_modes() {
+    for variant in Variant::ALL {
+        for n in [4usize, 16, 64] {
+            let w = Workload::random(n, 4, 0xA11 + n as u64);
+            let (sd, se) = run_both(
+                || variant.build(&w, &FifoPlan::paper(n)).unwrap().engine,
+                cycle_budget(n),
+            );
+            assert_parity(&sd, &se, &format!("{variant} N={n}"));
+            assert_eq!(se.outcome, RunOutcome::Completed, "{variant} N={n}");
+        }
+    }
+}
+
+#[test]
+fn undersized_attention_deadlock_parity() {
+    let n = 16;
+    let w = Workload::random(n, 4, 99);
+    let (sd, se) = run_both(
+        || {
+            Variant::Naive
+                .build(&w, &FifoPlan::with_long_depth(4))
+                .unwrap()
+                .engine
+        },
+        cycle_budget(n),
+    );
+    assert_parity(&sd, &se, "naive undersized bypass");
+    assert!(matches!(se.outcome, RunOutcome::Deadlock { .. }));
+}
+
+#[test]
+fn attention_budget_exceeded_parity() {
+    let n = 16;
+    let w = Workload::random(n, 4, 123);
+    let (sd, se) = run_both(
+        || Variant::Reordered.build(&w, &FifoPlan::paper(n)).unwrap().engine,
+        100,
+    );
+    assert_parity(&sd, &se, "reordered tiny budget");
+    assert_eq!(se.outcome, RunOutcome::BudgetExceeded);
+    assert_eq!(se.cycles, 100);
+}
+
+#[test]
+fn multihead_cycle_exact_across_modes() {
+    for n in [4usize, 16, 64] {
+        let ws: Vec<Workload> = (0..2u64).map(|h| Workload::random(n, 4, 0x3AD + h)).collect();
+        let (sd, se) = run_both(
+            || build_memfree_heads(&ws, &FifoPlan::paper(n)).unwrap().engine,
+            cycle_budget(n),
+        );
+        assert_parity(&sd, &se, &format!("multihead N={n}"));
+        assert_eq!(se.outcome, RunOutcome::Completed, "multihead N={n}");
+    }
+}
