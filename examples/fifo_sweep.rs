@@ -20,7 +20,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         format!("Summary: minimum long-FIFO depth for full throughput (N={n})"),
         &["variant", "figure", "# long FIFOs", "min depth", "paper prediction"],
     );
-    for variant in Variant::ALL {
+    for variant in Variant::PAPER {
         let result =
             fifo_sweep::run(variant, n, d).map_err(|e| e.to_string())?;
         result.table().print();

@@ -12,9 +12,10 @@
 //! cargo run --release --example quickstart -- [--n 64] [--d 32]
 //! ```
 
-use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64};
+use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession};
+use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64, sdpa_f64_masked};
 use sdpa_dataflow::attention::workload::Workload;
-use sdpa_dataflow::attention::{DepthPolicy, Variant};
+use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
 use sdpa_dataflow::cli::Args;
 use sdpa_dataflow::report::Table;
 
@@ -99,6 +100,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if summary.cycles != base_summary.cycles {
         return Err("not full throughput".into());
     }
+
+    // 4. Autoregressive decode: the same recurrence serves tokens one
+    //    at a time against the growing K/V cache — O(1) memory per step.
+    let steps = n.min(4);
+    let mut session = DecodeSession::new(DecodeKind::MemoryFree, d);
+    for t in 0..steps {
+        session
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .map_err(|e| e.to_string())?;
+    }
+    let causal_gold = sdpa_f64_masked(&w.prefix(steps), &Mask::Causal);
+    let derr = max_abs_diff(session.outputs(), &causal_gold);
+    println!("decode: {steps} steps, max |Δ| vs causal f64 reference: {derr:.3e}");
+    if derr >= 1e-4 {
+        return Err("decode numeric check failed".into());
+    }
+
     println!("quickstart OK: O(1) intermediate memory at full throughput, depths inferred");
     Ok(())
 }

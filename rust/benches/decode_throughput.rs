@@ -1,0 +1,137 @@
+//! Decode-step throughput: buffered vs memory-free decode mappings.
+//!
+//! Measures wall-clock per decode step (engine reset + full run) and
+//! derived simulated cycles/second across cache lengths and scheduler
+//! modes, and emits the results as `BENCH_decode.json` for CI artifact
+//! upload alongside `BENCH_engine.json`.
+//!
+//! ```bash
+//! cargo bench --bench decode_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::decode::{self, DecodeKind};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::DepthPolicy;
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::sim::{RunSummary, SchedulerMode};
+
+struct Row {
+    kind: &'static str,
+    len: usize,
+    mode: SchedulerMode,
+    mean_ns: f64,
+    summary: RunSummary,
+}
+
+impl Row {
+    fn sim_cycles_per_sec(&self) -> f64 {
+        self.summary.cycles as f64 / (self.mean_ns / 1e9)
+    }
+
+    fn json(&self) -> String {
+        let peak_elems = self
+            .summary
+            .channel_stats
+            .iter()
+            .map(|(_, st)| st.peak_occupancy_elems)
+            .max()
+            .unwrap_or(0);
+        let long_depth = self
+            .summary
+            .depths
+            .iter()
+            .filter(|c| c.is_long)
+            .map(|c| c.inferred)
+            .max()
+            .unwrap_or(0);
+        format!(
+            "{{\"kind\":\"{}\",\"len\":{},\"mode\":\"{:?}\",\"mean_ns\":{:.1},\
+             \"cycles\":{},\"sim_cycles_per_sec\":{:.1},\"cycles_per_key\":{:.3},\
+             \"peak_elems\":{},\"long_depth\":{},\"ticks_executed\":{},\
+             \"ticks_skipped\":{}}}",
+            self.kind,
+            self.len,
+            self.mode,
+            self.mean_ns,
+            self.summary.cycles,
+            self.sim_cycles_per_sec(),
+            self.summary.cycles as f64 / self.len as f64,
+            peak_elems,
+            long_depth,
+            self.summary.sched.node_ticks_executed,
+            self.summary.sched.node_ticks_skipped,
+        )
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let lens: &[usize] = if quick_requested() {
+        &[32, 128]
+    } else {
+        &[32, 128, 512]
+    };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for kind in DecodeKind::ALL {
+        for &len in lens {
+            let d = 16;
+            let w = Workload::random(len, d, 0xDEC0);
+            for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+                let mut built = decode::build_step(
+                    kind,
+                    &w.q[len - 1],
+                    &w.k,
+                    &w.v,
+                    DepthPolicy::Inferred,
+                )
+                .unwrap();
+                built.engine.set_scheduler_mode(mode);
+                let mut last: Option<RunSummary> = None;
+                let stats = b.bench(
+                    &format!("decode/{}_len{}_{:?}", kind.name(), len, mode),
+                    || {
+                        built.engine.reset();
+                        let s = built.run_outcome();
+                        black_box(s.cycles);
+                        last = Some(s);
+                    },
+                );
+                rows.push(Row {
+                    kind: kind.name(),
+                    len,
+                    mode,
+                    mean_ns: stats.mean_ns,
+                    summary: last.expect("benched at least once"),
+                });
+            }
+        }
+    }
+
+    // Per-configuration speedup summary (event-driven vs dense).
+    println!();
+    for pair in rows.chunks(2) {
+        let [dense, event] = pair else { continue };
+        println!(
+            "speedup {:<10} len={:<5} wall {:.2}x  ({} vs {} ticks)",
+            dense.kind,
+            dense.len,
+            dense.mean_ns / event.mean_ns,
+            dense.summary.sched.node_ticks_executed,
+            event.summary.sched.node_ticks_executed,
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_decode.json", &json).expect("write BENCH_decode.json");
+    println!("\nwrote BENCH_decode.json ({} rows)", rows.len());
+}

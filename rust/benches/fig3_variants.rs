@@ -29,7 +29,7 @@ fn main() {
             "full throughput",
         ],
     );
-    for variant in Variant::ALL {
+    for variant in Variant::PAPER {
         let mut base = variant.build(&w, &FifoPlan::unbounded()).unwrap();
         let (_, bs) = base.run().unwrap();
         let mut built = variant.build(&w, &FifoPlan::paper(n)).unwrap();

@@ -1,0 +1,174 @@
+//! Causal (masked) prefill on the streaming engine, and the
+//! causal-aware long-FIFO bound.
+//!
+//! ## In-stream masking
+//!
+//! The four prefill graphs stream N² scores row-major. Masking is a
+//! *configured address pattern*, not data: a stateless mask source is
+//! zipped into the score front-end
+//! ([`score_frontend_masked`](super::score_frontend_masked)) and masked
+//! positions emit −∞. Downstream everything follows from IEEE
+//! arithmetic: `exp(−∞) = 0` drops the position from every row sum and
+//! contraction, `max(m, −∞) = m` leaves the row max alone, and the
+//! memory-free running scans reduce to exact identity updates
+//! (`Δ = 1`, `e = 0`). Because key 0 is visible to every row (a
+//! [`Mask`] invariant), the running max is seeded before any masked
+//! position arrives and no NaN can form.
+//!
+//! ## The causal depth bound
+//!
+//! In-stream masking does **not** change any FIFO bound: masked
+//! elements still occupy one stream slot per cycle, so the
+//! Broadcast→Reduce→Zip imbalance the compile stage measures — and the
+//! N+2 bypass depth it derives — is identical to the unmasked graph.
+//! (`causal_inference_matches_unmasked_bound` asserts this.)
+//!
+//! The causal *savings* appear only under a **compressed** mapping that
+//! streams just the visible prefix: a row with ℓ visible keys then has
+//! a Reduce window of ℓ, and the reconvergence analysis yields a bypass
+//! depth of ℓ+2 ([`long_fifo_bound`]) instead of N+2. The decode-step
+//! graphs of [`super::decode`] are exactly this mapping (one row, ℓ =
+//! cache length) and the compile stage re-derives the bound per step —
+//! asserted in `decode`'s tests. The memory-free recurrence needs no
+//! bypass either way: its bound is 2, independent of ℓ and N, which is
+//! why causal decode inherits the paper's O(1)-memory headline intact.
+
+use super::workload::{Mask, Workload};
+use super::{memfree, naive, reordered, scaled, BuiltAttention, DepthPolicy, Variant};
+use crate::{Error, Result};
+
+/// Build a masked prefill graph for one of the paper's four base
+/// variants. `base` must be an unmasked prefill variant
+/// ([`Variant::PAPER`]); causal/decode members are themselves built on
+/// top of this dispatch and are rejected here.
+pub fn build_masked(
+    base: Variant,
+    w: &Workload,
+    mask: &Mask,
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
+    match base {
+        Variant::Naive => naive::build_masked_with_policy(w, mask, policy),
+        Variant::Scaled => scaled::build_masked_with_policy(w, mask, policy),
+        Variant::Reordered => reordered::build_masked_with_policy(w, mask, policy),
+        Variant::MemoryFree => memfree::build_masked_with_policy(w, mask, policy),
+        other => Err(Error::Graph(format!(
+            "build_masked takes a base prefill variant (one of \
+             naive|scaled|reordered|memfree), got '{other}'"
+        ))),
+    }
+}
+
+/// Build the causal prefill graph for a base variant.
+pub fn build_causal(base: Variant, w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_masked(base, w, &Mask::Causal, policy)
+}
+
+/// Long-FIFO depth a *compressed* causal row with `visible` keys needs
+/// under each base algorithm: the buffering variants pay
+/// `visible + 2` (the N+2 bound with the row's own length), the
+/// memory-free recurrence a constant 2. The decode-step graphs
+/// instantiate this bound and the compile-time inference re-derives it
+/// — see [`super::decode::step_long_fifo_bound`].
+pub fn long_fifo_bound(base: Variant, visible: usize) -> usize {
+    assert!(visible >= 1, "a row attends at least one key");
+    match base.base() {
+        Variant::MemoryFree => 2,
+        _ => visible + 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{
+        assert_close, sdpa_f32_scaled_masked, sdpa_f64_masked, sdpa_online_f32_masked,
+    };
+    use super::*;
+    use crate::sim::{Capacity, RunOutcome};
+
+    #[test]
+    fn every_base_variant_matches_the_masked_references() {
+        let w = Workload::random(12, 6, 0xCA05);
+        for mask in [Mask::Causal, Mask::ragged(5)] {
+            let gold = sdpa_f64_masked(&w, &mask);
+            for base in Variant::PAPER {
+                let mut built = build_masked(base, &w, &mask, DepthPolicy::Inferred).unwrap();
+                let (got, summary) = built.run().unwrap();
+                assert_eq!(summary.outcome, RunOutcome::Completed);
+                assert_close(
+                    &got,
+                    &gold,
+                    1e-4,
+                    &format!("{base} masked {} vs f64", mask.name()),
+                );
+            }
+            // Structure-matched f32 agreement is much tighter.
+            let mut scaled =
+                build_masked(Variant::Scaled, &w, &mask, DepthPolicy::Inferred).unwrap();
+            let (got, _) = scaled.run().unwrap();
+            assert_close(
+                &got,
+                &sdpa_f32_scaled_masked(&w, &mask),
+                1e-6,
+                "scaled masked f32 structure match",
+            );
+            let mut mf =
+                build_masked(Variant::MemoryFree, &w, &mask, DepthPolicy::Inferred).unwrap();
+            let (got, _) = mf.run().unwrap();
+            assert_close(
+                &got,
+                &sdpa_online_f32_masked(&w, &mask),
+                1e-6,
+                "memfree masked f32 structure match",
+            );
+        }
+    }
+
+    #[test]
+    fn causal_inference_matches_unmasked_bound() {
+        // The documented claim: in-stream masking leaves every long-FIFO
+        // bound untouched — masked slots still occupy stream slots.
+        let w = Workload::random(16, 4, 0xCA06);
+        for base in [Variant::Naive, Variant::Scaled, Variant::Reordered] {
+            let built = build_causal(base, &w, DepthPolicy::Inferred).unwrap();
+            for name in base.long_fifos() {
+                let rec = built
+                    .engine
+                    .depth_report()
+                    .iter()
+                    .find(|c| c.name == *name)
+                    .unwrap();
+                assert!(rec.is_long, "{base}: {name}");
+                assert_eq!(rec.inferred, w.n + 2, "{base}: {name}");
+            }
+        }
+        // The masked memory-free graph stays all-short.
+        let built = build_causal(Variant::MemoryFree, &w, DepthPolicy::Inferred).unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "channel '{}'", c.name);
+            assert_eq!(c.capacity, Capacity::Bounded(2), "channel '{}'", c.name);
+        }
+    }
+
+    #[test]
+    fn compressed_bound_is_len_plus_2_for_buffering_variants() {
+        for len in [1usize, 4, 16] {
+            assert_eq!(long_fifo_bound(Variant::Naive, len), len + 2);
+            assert_eq!(long_fifo_bound(Variant::CausalScaled, len), len + 2);
+            assert_eq!(long_fifo_bound(Variant::MemoryFree, len), 2);
+            assert_eq!(long_fifo_bound(Variant::Decode, len), 2);
+        }
+    }
+
+    #[test]
+    fn non_base_variants_are_rejected() {
+        let w = Workload::random(4, 4, 1);
+        let err = build_masked(
+            Variant::CausalNaive,
+            &w,
+            &Mask::Causal,
+            DepthPolicy::Inferred,
+        );
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("base prefill")));
+    }
+}

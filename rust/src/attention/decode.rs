@@ -1,0 +1,544 @@
+//! Autoregressive decode on the streaming engine.
+//!
+//! Token-by-token serving is the compressed causal mapping of
+//! [`super::causal`]: at step `t` the new query row `q_t` streams
+//! against the `t+1` cached K/V rows — only the visible prefix, no
+//! masked bubbles. Two step mappings are provided:
+//!
+//! * [`DecodeKind::MemoryFree`] — the paper's reordered online-softmax
+//!   recurrence. The `(m, ℓ⃗, r)` state rides element-wise `Scan`s along
+//!   the K/V stream, so every FIFO is depth 2 and intermediate memory
+//!   is **O(1) per step, independent of the cache length** — the
+//!   paper's headline carried into decode.
+//! * [`DecodeKind::Buffered`] — the Figure-2 mapping of the same step:
+//!   exponentials buffer in an `e_bypass` FIFO while the row sum
+//!   reduces, which needs depth `len + 2`
+//!   ([`step_long_fifo_bound`], the causal-aware bound the compile
+//!   stage re-derives per step). Kept as the O(len) contrast the
+//!   scaling study measures.
+//!
+//! [`DecodeSession`] chains steps: it owns the growing K/V cache and
+//! replays it into a fresh step graph per token (the simulator's
+//! equivalent of re-configuring the fabric's address generators for the
+//! new sequence length). Graph state never leaks across steps — the
+//! per-query softmax state is carried *within* a step by the scans, and
+//! the only cross-step state is the K/V cache itself. A full session
+//! over a workload ([`decode_workload`]) must therefore agree with the
+//! causal prefill references row for row; `tests/causal_decode.rs`
+//! enforces this differentially, along with bit-identical
+//! `Engine::reset` replays of step graphs.
+
+use super::reference::Matrix;
+use super::workload::{dot, Workload};
+use super::{BuiltAttention, DepthPolicy};
+use crate::sim::nodes::SinkHandle;
+use crate::sim::{Elem, GraphBuilder, RunSummary, SchedulerMode, Scope};
+use crate::{Error, Result};
+
+/// Which decode-step mapping to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeKind {
+    /// Figure-2 style: buffer exponentials while the row sum reduces —
+    /// `e_bypass` needs depth len+2, O(len) memory per step.
+    Buffered,
+    /// Figure-3(c) style: running max/sum scans — every FIFO depth 2,
+    /// O(1) memory per step.
+    MemoryFree,
+}
+
+impl DecodeKind {
+    /// Both mappings, buffered (contrast) first.
+    pub const ALL: [DecodeKind; 2] = [DecodeKind::Buffered, DecodeKind::MemoryFree];
+
+    /// Stable lowercase name (reports, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeKind::Buffered => "buffered",
+            DecodeKind::MemoryFree => "memfree",
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Long-FIFO depth one decode step needs at cache length `len` — the
+/// causal-aware bound ([`super::causal::long_fifo_bound`] with
+/// `visible = len`). `DepthPolicy::Inferred` re-derives exactly this
+/// from the step graph's structure.
+pub fn step_long_fifo_bound(kind: DecodeKind, len: usize) -> usize {
+    match kind {
+        DecodeKind::Buffered => len + 2,
+        DecodeKind::MemoryFree => 2,
+    }
+}
+
+/// Build one decode step: query row `q` against `len = keys.len()`
+/// cached K/V rows. The returned graph emits exactly one output row.
+pub fn build_step(
+    kind: DecodeKind,
+    q: &[f32],
+    keys: &[Vec<f32>],
+    values: &[Vec<f32>],
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
+    let len = keys.len();
+    let d = q.len();
+    if len == 0 {
+        return Err(Error::Graph(
+            "decode step needs at least one cached K/V row".into(),
+        ));
+    }
+    if d == 0 {
+        return Err(Error::Graph("decode step: query row is empty".into()));
+    }
+    if values.len() != len {
+        return Err(Error::Graph(format!(
+            "decode step: {} keys but {} values",
+            len,
+            values.len()
+        )));
+    }
+    if let Some(row) = keys.iter().chain(values).find(|r| r.len() != d) {
+        return Err(Error::Graph(format!(
+            "decode step: cached row has dim {}, query has {}",
+            row.len(),
+            d
+        )));
+    }
+    let mut g = GraphBuilder::new();
+    let mut sc = g.root();
+    let out = build_step_into(&mut sc, kind, q, keys, values)?;
+    Ok(BuiltAttention {
+        engine: g.compile(policy)?,
+        out,
+        n: len,
+        d,
+    })
+}
+
+/// The decode-step pipeline, buildable into any scope (so step graphs
+/// compose into multi-session engines the same way attention heads do).
+fn build_step_into(
+    sc: &mut Scope<'_>,
+    kind: DecodeKind,
+    q: &[f32],
+    keys: &[Vec<f32>],
+    values: &[Vec<f32>],
+) -> Result<SinkHandle> {
+    let len = keys.len();
+    let d = q.len();
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // One query row, replayed once per cached key; K/V replay from the
+    // cache (resident operands — stateless, reset-safe sources).
+    let q_rows = sc.source_vec("src_q", vec![Elem::vector(q)])?;
+    let q_rep = sc.repeat("rep_q", q_rows, len)?;
+    let k: Vec<Elem> = keys.iter().map(|r| Elem::vector(r)).collect();
+    let k_cols = sc.source_gen("src_k", len as u64, move |j| k[j as usize].clone())?;
+    let s = sc.zip("qk_dot", [q_rep, k_cols], move |xs| {
+        Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
+    })?;
+    let v: Vec<Elem> = values.iter().map(|r| Elem::vector(r)).collect();
+
+    match kind {
+        DecodeKind::MemoryFree => {
+            // Eq. 4: running max → (Δ, e) per cached key.
+            let neg_inf = Elem::Pair(f32::NEG_INFINITY, f32::NEG_INFINITY);
+            let de = sc.scan(
+                "run_max",
+                s,
+                len,
+                neg_inf,
+                |st, x| {
+                    let (_, m_old) = st.pair();
+                    let m_new = m_old.max(x.scalar());
+                    Elem::Pair(m_old, m_new)
+                },
+                |st, x| {
+                    let (m_old, m_new) = st.pair();
+                    let delta = (m_old - m_new).exp();
+                    let e = (x.scalar() - m_new).exp();
+                    Elem::Pair(delta, e)
+                },
+            )?;
+            let [de_r, de_l] = sc.broadcast("bc_de", de, ["de_r", "de_l"])?;
+
+            // Eq. 5 scalar: r ← r·Δ + e.
+            let r_run = sc.scan(
+                "run_sum",
+                de_r,
+                len,
+                Elem::Scalar(0.0),
+                |st, x| {
+                    let (delta, e) = x.pair();
+                    Elem::Scalar(st.scalar() * delta + e)
+                },
+                |st, _| st.clone(),
+            )?;
+            let r = sc.last_of("last_r", r_run, len)?;
+
+            // Eq. 5 vector: l⃗ ← l⃗·Δ + e·v⃗_j.
+            let v_cols = sc.source_gen("src_v", len as u64, move |j| v[j as usize].clone())?;
+            let dev = sc.zip("zip_v", [de_l, v_cols], |xs| {
+                Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
+            })?;
+            let l_run = sc.scan(
+                "run_out",
+                dev,
+                len,
+                Elem::from(vec![0.0f32; d]),
+                |st, x| {
+                    let (delta, e) = x.as_tuple()[0].pair();
+                    let vv = x.as_tuple()[1].as_vector();
+                    Elem::from(
+                        st.as_vector()
+                            .iter()
+                            .zip(vv)
+                            .map(|(acc, v)| acc * delta + e * v)
+                            .collect::<Vec<_>>(),
+                    )
+                },
+                |st, _| st.clone(),
+            )?;
+            let l = sc.last_of("last_l", l_run, len)?;
+
+            // Eq. 6: o⃗_t = l⃗ / r.
+            let o = sc.zip("div", [l, r], |xs| {
+                let r = xs[1].scalar();
+                Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
+            })?;
+            sc.sink("sink_o", o, Some(1))
+        }
+        DecodeKind::Buffered => {
+            // Figure-2 shape at window `len`: the bypass must hold the
+            // whole visible prefix while the row sum reduces.
+            let e = sc.map("exp", s, |x| Elem::Scalar(x.scalar().exp()))?;
+            let [e_sum, e_bypass] = sc.broadcast("bc_e", e, ["e_sum", "e_bypass"])?;
+            let sigma = sc.reduce("row_sum", e_sum, len, 0.0, |a, b| a + b)?;
+            let sigma_rep = sc.repeat("rep_sigma", sigma, len)?;
+            let p = sc.zip("div", [e_bypass, sigma_rep], |xs| {
+                Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+            })?;
+            let v_cols = sc.source_gen("src_v", len as u64, move |j| v[j as usize].clone())?;
+            let pv = sc.zip("pv_mul", [p, v_cols], |xs| {
+                let p = xs[0].scalar();
+                Elem::from(xs[1].as_vector().iter().map(|v| p * v).collect::<Vec<_>>())
+            })?;
+            let o = sc.mem_reduce("pv_acc", pv, len, vec![0.0; d], |acc, x| {
+                acc.iter().zip(x.as_vector()).map(|(a, b)| a + b).collect()
+            })?;
+            sc.sink("sink_o", o, Some(1))
+        }
+    }
+}
+
+/// The serving steady state as a one-shot graph: the *last* decode step
+/// of workload `w` (query row N−1 against the full K/V cache, the
+/// memory-free mapping). This is what [`super::Variant::Decode`]
+/// builds, so the whole experiment/test grid exercises decode through
+/// the ordinary variant machinery.
+pub fn build_last_row(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_step(DecodeKind::MemoryFree, &w.q[w.n - 1], &w.k, &w.v, policy)
+}
+
+/// One completed decode step.
+#[derive(Clone, Debug)]
+pub struct DecodeStepOutcome {
+    /// 0-based step index within the session.
+    pub step: usize,
+    /// The attention output row o⃗_t.
+    pub row: Vec<f32>,
+    /// The step graph's run summary (cycles, occupancy, depth report).
+    pub summary: RunSummary,
+}
+
+/// An autoregressive decode session: owns the growing K/V cache, builds
+/// and runs one step graph per token, and accumulates the output rows.
+pub struct DecodeSession {
+    kind: DecodeKind,
+    d: usize,
+    policy: DepthPolicy,
+    mode: Option<SchedulerMode>,
+    keys: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+    outputs: Matrix,
+}
+
+impl DecodeSession {
+    /// New session for head dimension `d` with inferred FIFO depths.
+    pub fn new(kind: DecodeKind, d: usize) -> Self {
+        Self::with_policy(kind, d, DepthPolicy::Inferred)
+    }
+
+    /// New session under an explicit depth policy.
+    pub fn with_policy(kind: DecodeKind, d: usize, policy: DepthPolicy) -> Self {
+        assert!(d >= 1, "head dimension must be at least 1");
+        DecodeSession {
+            kind,
+            d,
+            policy,
+            mode: None,
+            keys: Vec::new(),
+            values: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Force a scheduler mode on every step engine (differential tests;
+    /// the default is the engine's own default, i.e. `SDPA_SCHED`).
+    pub fn set_scheduler_mode(&mut self, mode: SchedulerMode) {
+        self.mode = Some(mode);
+    }
+
+    /// The step mapping this session uses.
+    pub fn kind(&self) -> DecodeKind {
+        self.kind
+    }
+
+    /// Tokens decoded so far (== cached K/V rows == output rows).
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Whether no token has been decoded yet.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Output rows accumulated so far, one per step.
+    pub fn outputs(&self) -> &Matrix {
+        &self.outputs
+    }
+
+    /// Decode one token: append `(k, v)` to the cache, stream `q`
+    /// against it, return the output row and the step's run summary.
+    pub fn step(&mut self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Result<DecodeStepOutcome> {
+        for (what, row) in [("q", &q), ("k", &k), ("v", &v)] {
+            if row.len() != self.d {
+                return Err(Error::Graph(format!(
+                    "decode step {}: {what} has dim {}, session expects {}",
+                    self.keys.len(),
+                    row.len(),
+                    self.d
+                )));
+            }
+        }
+        self.keys.push(k);
+        self.values.push(v);
+        let result = build_step(self.kind, &q, &self.keys, &self.values, self.policy)
+            .and_then(|mut built| {
+                if let Some(mode) = self.mode {
+                    built.engine.set_scheduler_mode(mode);
+                }
+                built.run()
+            });
+        let (rows, summary) = match result {
+            Ok(ok) => ok,
+            Err(e) => {
+                // A failed step (e.g. deadlock under an undersized
+                // explicit plan) must not corrupt the session: unwind
+                // the cache so a retry sees the pre-step state.
+                self.keys.pop();
+                self.values.pop();
+                return Err(e);
+            }
+        };
+        let row = rows.into_iter().next().expect("decode step emits one row");
+        self.outputs.push(row.clone());
+        Ok(DecodeStepOutcome {
+            step: self.keys.len() - 1,
+            row,
+            summary,
+        })
+    }
+}
+
+/// Run a full autoregressive pass over `w` — step `t` feeds
+/// `(q_t, k_t, v_t)` — and return the N output rows. Must agree with
+/// the causal prefill references row for row (the decode-chain half of
+/// the differential conformance suite).
+pub fn decode_workload(kind: DecodeKind, w: &Workload) -> Result<Matrix> {
+    let mut session = DecodeSession::new(kind, w.d);
+    for t in 0..w.n {
+        session.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())?;
+    }
+    Ok(session.outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{assert_close, sdpa_f64_masked, sdpa_online_f32_masked};
+    use super::super::workload::Mask;
+    use super::super::{FifoPlan, Variant};
+    use super::*;
+    use crate::sim::Capacity;
+
+    #[test]
+    fn memfree_chain_matches_online_causal_reference_tightly() {
+        let w = Workload::random(12, 8, 0xDEC1);
+        let chain = decode_workload(DecodeKind::MemoryFree, &w).unwrap();
+        // Same f32 operations in the same order as the oracle.
+        assert_close(
+            &chain,
+            &sdpa_online_f32_masked(&w, &Mask::Causal),
+            1e-6,
+            "decode chain vs online causal",
+        );
+        assert_close(
+            &chain,
+            &sdpa_f64_masked(&w, &Mask::Causal),
+            1e-4,
+            "decode chain vs f64 causal",
+        );
+    }
+
+    #[test]
+    fn buffered_chain_matches_f64_causal() {
+        let w = Workload::random(10, 4, 0xDEC2);
+        let chain = decode_workload(DecodeKind::Buffered, &w).unwrap();
+        assert_close(
+            &chain,
+            &sdpa_f64_masked(&w, &Mask::Causal),
+            1e-4,
+            "buffered decode chain vs f64 causal",
+        );
+    }
+
+    #[test]
+    fn inferred_step_depths_match_the_causal_bound() {
+        let w = Workload::random(16, 4, 0xDEC3);
+        for len in [1usize, 4, 16] {
+            let p = w.prefix(len);
+            let buffered = build_step(
+                DecodeKind::Buffered,
+                &p.q[len - 1],
+                &p.k,
+                &p.v,
+                DepthPolicy::Inferred,
+            )
+            .unwrap();
+            let long_max = buffered
+                .engine
+                .depth_report()
+                .iter()
+                .filter(|c| c.is_long)
+                .map(|c| c.inferred)
+                .max();
+            assert_eq!(
+                long_max,
+                Some(step_long_fifo_bound(DecodeKind::Buffered, len)),
+                "buffered len={len}"
+            );
+
+            let memfree = build_step(
+                DecodeKind::MemoryFree,
+                &p.q[len - 1],
+                &p.k,
+                &p.v,
+                DepthPolicy::Inferred,
+            )
+            .unwrap();
+            for c in memfree.engine.depth_report() {
+                assert!(!c.is_long, "memfree len={len}: '{}'", c.name);
+                assert_eq!(c.capacity, Capacity::Bounded(2), "len={len}: '{}'", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn memfree_step_memory_is_constant_in_cache_length() {
+        for len in [4usize, 16, 64] {
+            let w = Workload::random(len, 4, 0xDEC4);
+            let mut built = build_step(
+                DecodeKind::MemoryFree,
+                &w.q[len - 1],
+                &w.k,
+                &w.v,
+                DepthPolicy::Inferred,
+            )
+            .unwrap();
+            let (_, summary) = built.run().unwrap();
+            for (name, st) in &summary.channel_stats {
+                assert!(
+                    st.peak_occupancy_elems <= 2,
+                    "len={len}: channel '{name}' peaked at {}",
+                    st.peak_occupancy_elems
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variant_decode_builds_the_last_chain_row() {
+        let w = Workload::random(9, 4, 0xDEC5);
+        let mut built = Variant::Decode
+            .build(&w, &FifoPlan::paper(w.n))
+            .unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_eq!(got.len(), 1);
+        let chain = decode_workload(DecodeKind::MemoryFree, &w).unwrap();
+        let last: Matrix = vec![chain[w.n - 1].clone()];
+        assert_close(&got, &last, 1e-6, "Variant::Decode vs chain last row");
+    }
+
+    #[test]
+    fn session_validates_shapes_and_counts_steps() {
+        let mut s = DecodeSession::new(DecodeKind::MemoryFree, 4);
+        assert!(s.is_empty());
+        let out = s
+            .step(vec![0.1; 4], vec![0.2; 4], vec![0.3; 4])
+            .unwrap();
+        assert_eq!(out.step, 0);
+        assert_eq!(out.row.len(), 4);
+        let out = s
+            .step(vec![0.4; 4], vec![0.5; 4], vec![0.6; 4])
+            .unwrap();
+        assert_eq!(out.step, 1);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.outputs().len(), 2);
+        let err = s.step(vec![0.0; 3], vec![0.0; 4], vec![0.0; 4]);
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("dim 3")));
+        // The failed step must not have touched the cache.
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn failed_step_leaves_the_session_cache_untouched() {
+        // Under a depth-2 explicit plan the buffered step deadlocks as
+        // soon as the cache outgrows the bypass (len = 3 > 2): the
+        // broadcast can no longer land the last exponential before the
+        // row sum completes. The error must not advance the cache — a
+        // retry after the failure sees the pre-step state, not a
+        // double-cached token.
+        let mut s = DecodeSession::with_policy(
+            DecodeKind::Buffered,
+            4,
+            DepthPolicy::Explicit(FifoPlan::with_long_depth(2)),
+        );
+        s.step(vec![0.1; 4], vec![0.2; 4], vec![0.3; 4]).unwrap();
+        s.step(vec![0.4; 4], vec![0.5; 4], vec![0.6; 4]).unwrap();
+        assert_eq!(s.len(), 2);
+        let err = s.step(vec![0.7; 4], vec![0.8; 4], vec![0.9; 4]);
+        assert!(err.is_err(), "undersized bypass must deadlock at len 3");
+        assert_eq!(s.len(), 2, "failed step must not grow the cache");
+        assert_eq!(s.outputs().len(), 2, "no phantom output row");
+    }
+
+    #[test]
+    fn build_step_rejects_empty_and_ragged_caches() {
+        let empty = build_step(DecodeKind::MemoryFree, &[1.0], &[], &[], DepthPolicy::Inferred);
+        assert!(empty.is_err());
+        let err = build_step(
+            DecodeKind::MemoryFree,
+            &[1.0, 2.0],
+            &[vec![1.0, 2.0]],
+            &[vec![1.0]],
+            DepthPolicy::Inferred,
+        );
+        assert!(err.is_err());
+    }
+}

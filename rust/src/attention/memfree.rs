@@ -19,8 +19,8 @@
 //! depth: the compile stage verifies the balance and sizes everything
 //! at 2.
 
-use super::workload::Workload;
-use super::{score_frontend, v_source, BuiltAttention, DepthPolicy, FifoPlan};
+use super::workload::{Mask, Workload};
+use super::{score_frontend_masked, v_source, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::nodes::SinkHandle;
 use crate::sim::{Elem, GraphBuilder, Scope};
 use crate::Result;
@@ -34,7 +34,7 @@ pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
 /// Figure-3(c) graph under a depth policy (`Inferred` sizes every FIFO
 /// at 2 — the compile-time proof of the O(1)-memory claim).
 pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
-    build_impl(w, policy, false)
+    build_masked_with_policy(w, &Mask::Full, policy)
 }
 
 /// Causal (autoregressive) extension: scores with j > i are masked to
@@ -43,13 +43,22 @@ pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAtten
 /// dataflow topology — and therefore the O(1)-memory, full-throughput
 /// property — is unchanged; causality costs nothing on this machine.
 pub fn build_causal(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
-    build_impl(w, DepthPolicy::Explicit(*plan), true)
+    build_masked_with_policy(w, &Mask::Causal, DepthPolicy::Explicit(*plan))
 }
 
-fn build_impl(w: &Workload, policy: DepthPolicy, causal: bool) -> Result<BuiltAttention> {
+/// Figure-3(c) graph with an arbitrary in-stream [`Mask`] (causal,
+/// ragged). The mask rides a stateless source zipped into the score
+/// front-end — not a counting `Map`, whose captured counter would
+/// survive [`Engine::reset`](crate::sim::Engine::reset) and corrupt
+/// replays (the decode replay property test guards this).
+pub fn build_masked_with_policy(
+    w: &Workload,
+    mask: &Mask,
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
     let mut g = GraphBuilder::new();
     let mut sc = g.root();
-    let out = build_into_impl(&mut sc, w, causal)?;
+    let out = build_into_masked(&mut sc, w, mask)?;
     Ok(BuiltAttention {
         engine: g.compile(policy)?,
         out,
@@ -62,30 +71,14 @@ fn build_impl(w: &Workload, policy: DepthPolicy, causal: bool) -> Result<BuiltAt
 /// composition point for multi-head / sharded graphs (see
 /// [`super::multihead`]). Returns the head's output sink.
 pub fn build_into(sc: &mut Scope<'_>, w: &Workload) -> Result<SinkHandle> {
-    build_into_impl(sc, w, false)
+    build_into_masked(sc, w, &Mask::Full)
 }
 
-fn build_into_impl(sc: &mut Scope<'_>, w: &Workload, causal: bool) -> Result<SinkHandle> {
+fn build_into_masked(sc: &mut Scope<'_>, w: &Workload, mask: &Mask) -> Result<SinkHandle> {
     let n = w.n;
     let d = w.d;
 
-    let mut s = score_frontend(sc, w)?;
-    if causal {
-        // Elementwise mask: the stream is row-major, so element t is
-        // (i, j) = (t / N, t mod N). A stateful Map plays the role of a
-        // configured address-tracking unit.
-        let mut t_idx: u64 = 0;
-        s = sc.map("causal_mask", s, move |x| {
-            let i = t_idx / n as u64;
-            let j = t_idx % n as u64;
-            t_idx += 1;
-            if j > i {
-                Elem::Scalar(f32::NEG_INFINITY)
-            } else {
-                x.clone()
-            }
-        })?;
-    }
+    let s = score_frontend_masked(sc, w, mask)?;
 
     // Running-max scan (Eq. 4). State = (m_prev, m); output = (Δ, e).
     // Inline `Pair` elements: this stream carries N² values (§Perf).
@@ -252,6 +245,38 @@ mod tests {
         let mut base = build_causal(&w, &FifoPlan::unbounded()).unwrap();
         let (_, bs) = base.run().unwrap();
         assert!(is_full_throughput(&fs, &bs));
+    }
+
+    #[test]
+    fn ragged_mask_matches_masked_online_reference() {
+        use super::super::reference::sdpa_online_f32_masked;
+        let w = Workload::random(10, 4, 58);
+        let mask = Mask::ragged(6);
+        let mut built =
+            build_masked_with_policy(&w, &mask, DepthPolicy::Inferred).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_close(
+            &got,
+            &sdpa_online_f32_masked(&w, &mask),
+            1e-6,
+            "ragged memfree vs masked online ref",
+        );
+    }
+
+    #[test]
+    fn causal_reset_replay_is_bit_identical() {
+        // Regression: the causal mask used to live in a counting Map
+        // whose captured counter survived Engine::reset, so a replay
+        // masked the wrong positions. The mask now rides a stateless
+        // source.
+        let w = Workload::random(8, 4, 59);
+        let mut built = build_causal(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (first, s1) = built.run().unwrap();
+        built.engine.reset();
+        let (second, s2) = built.run().unwrap();
+        assert_eq!(first, second, "replay must reproduce outputs bitwise");
+        assert_eq!(s1.cycles, s2.cycles);
+        assert_eq!(s1.node_fires, s2.node_fires);
     }
 
     #[test]

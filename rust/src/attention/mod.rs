@@ -1,4 +1,5 @@
-//! The paper's four attention dataflow graphs.
+//! The paper's four attention dataflow graphs, their causal (masked)
+//! twins, and the autoregressive decode mapping.
 //!
 //! | Variant | Paper figure | Long FIFOs | Intermediate memory |
 //! |---|---|---|---|
@@ -6,10 +7,16 @@
 //! | [`Variant::Scaled`] | Fig. 3(a) | `s_bypass`, `e_bypass` | 2·O(N) |
 //! | [`Variant::Reordered`] | Fig. 3(b) | `s_bypass` | O(N) |
 //! | [`Variant::MemoryFree`] | Fig. 3(c) | none | O(1) |
+//! | [`Variant::CausalNaive`] … [`Variant::CausalMemoryFree`] | same + causal mask | same as base | same as base |
+//! | [`Variant::Decode`] | decode step (1×N) | none | O(1) per step |
 //!
-//! Every graph streams Q rows against resident K/V operands, produces
-//! one output row per N cycles at steady state (II = 1 per element), and
-//! is numerically validated against [`reference`].
+//! Every prefill graph streams Q rows against resident K/V operands,
+//! produces one output row per N cycles at steady state (II = 1 per
+//! element), and is numerically validated against [`reference`]. The
+//! causal variants mask scores *in the stream* (see [`causal`]) — the
+//! topology, and therefore every FIFO bound, is unchanged. The decode
+//! variant builds one autoregressive step (see [`decode`]): a single
+//! query row against the full K/V cache, O(1) intermediate memory.
 //!
 //! ## Construction model
 //!
@@ -25,6 +32,8 @@
 //! instantiating one head per [`Scope`](crate::sim::Scope) — see
 //! [`multihead`].
 
+pub mod causal;
+pub mod decode;
 pub mod memfree;
 pub mod multihead;
 pub mod naive;
@@ -40,6 +49,7 @@ use reference::Matrix;
 use workload::{dot, Workload};
 
 pub use crate::sim::{DepthPolicy, FifoPlan};
+pub use workload::Mask;
 
 /// Which attention implementation to map onto the abstract hardware.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,11 +62,38 @@ pub enum Variant {
     Reordered,
     /// Figure 3(c): running max + running sums; the memory-free version.
     MemoryFree,
+    /// Figure 2 with an in-stream causal mask.
+    CausalNaive,
+    /// Figure 3(a) with an in-stream causal mask.
+    CausalScaled,
+    /// Figure 3(b) with an in-stream causal mask.
+    CausalReordered,
+    /// Figure 3(c) with an in-stream causal mask — causal serving at
+    /// O(1) intermediate memory.
+    CausalMemoryFree,
+    /// One autoregressive decode step (the serving steady state): the
+    /// last query row streamed against the full K/V cache through the
+    /// memory-free recurrence. Sessions chain these — see [`decode`].
+    Decode,
 }
 
 impl Variant {
-    /// All variants, in paper order.
-    pub const ALL: [Variant; 4] = [
+    /// All variants, paper order first, then the causal/decode family.
+    pub const ALL: [Variant; 9] = [
+        Variant::Naive,
+        Variant::Scaled,
+        Variant::Reordered,
+        Variant::MemoryFree,
+        Variant::CausalNaive,
+        Variant::CausalScaled,
+        Variant::CausalReordered,
+        Variant::CausalMemoryFree,
+        Variant::Decode,
+    ];
+
+    /// The paper's four prefill variants (Figures 2, 3a–c) — the set
+    /// the figure-replication experiments sweep.
+    pub const PAPER: [Variant; 4] = [
         Variant::Naive,
         Variant::Scaled,
         Variant::Reordered,
@@ -70,29 +107,88 @@ impl Variant {
             Variant::Scaled => "scaled",
             Variant::Reordered => "reordered",
             Variant::MemoryFree => "memfree",
+            Variant::CausalNaive => "causal-naive",
+            Variant::CausalScaled => "causal-scaled",
+            Variant::CausalReordered => "causal-reordered",
+            Variant::CausalMemoryFree => "causal-memfree",
+            Variant::Decode => "decode",
         }
     }
 
-    /// Paper figure this variant reproduces.
+    /// Paper figure this variant reproduces (or extends).
     pub fn figure(self) -> &'static str {
         match self {
             Variant::Naive => "Fig. 2",
             Variant::Scaled => "Fig. 3(a)",
             Variant::Reordered => "Fig. 3(b)",
             Variant::MemoryFree => "Fig. 3(c)",
+            Variant::CausalNaive => "Fig. 2 + causal",
+            Variant::CausalScaled => "Fig. 3(a) + causal",
+            Variant::CausalReordered => "Fig. 3(b) + causal",
+            Variant::CausalMemoryFree => "Fig. 3(c) + causal",
+            Variant::Decode => "decode step (1×N)",
+        }
+    }
+
+    /// The underlying prefill algorithm: causal variants map to their
+    /// unmasked base, the decode step to the memory-free recurrence.
+    pub fn base(self) -> Variant {
+        match self {
+            Variant::CausalNaive => Variant::Naive,
+            Variant::CausalScaled => Variant::Scaled,
+            Variant::CausalReordered => Variant::Reordered,
+            Variant::CausalMemoryFree | Variant::Decode => Variant::MemoryFree,
+            v => v,
+        }
+    }
+
+    /// Whether this is a masked (causal) prefill variant.
+    pub fn is_causal(self) -> bool {
+        matches!(
+            self,
+            Variant::CausalNaive
+                | Variant::CausalScaled
+                | Variant::CausalReordered
+                | Variant::CausalMemoryFree
+        )
+    }
+
+    /// Whether this is the decode-step variant.
+    pub fn is_decode(self) -> bool {
+        matches!(self, Variant::Decode)
+    }
+
+    /// The score mask this variant applies.
+    pub fn mask(self) -> Mask {
+        if self.is_causal() || self.is_decode() {
+            Mask::Causal
+        } else {
+            Mask::Full
         }
     }
 
     /// Names of this variant's long (latency-balancing) FIFOs. The
     /// compile-time depth analysis flags exactly these channels
     /// (`ChannelDepth::is_long`) — asserted by the integration tests.
+    /// In-stream masking does not change the stream timing, so the
+    /// causal variants share their base's long FIFOs (and N+2 bound).
     pub fn long_fifos(self) -> &'static [&'static str] {
         match self {
-            Variant::Naive => &["e_bypass"],
-            Variant::Scaled => &["s_bypass", "e_bypass"],
-            Variant::Reordered => &["s_bypass"],
-            Variant::MemoryFree => &[],
+            Variant::Naive | Variant::CausalNaive => &["e_bypass"],
+            Variant::Scaled | Variant::CausalScaled => &["s_bypass", "e_bypass"],
+            Variant::Reordered | Variant::CausalReordered => &["s_bypass"],
+            Variant::MemoryFree | Variant::CausalMemoryFree | Variant::Decode => &[],
         }
+    }
+
+    /// `name|name|…` over [`Variant::ALL`] — usage strings derive from
+    /// this so the CLI can never fall out of sync with the enum.
+    pub fn usage_list() -> String {
+        Variant::ALL
+            .iter()
+            .map(|v| v.name())
+            .collect::<Vec<_>>()
+            .join("|")
     }
 
     /// Parse a CLI name.
@@ -127,6 +223,13 @@ impl Variant {
             Variant::Scaled => scaled::build_with_policy(w, policy),
             Variant::Reordered => reordered::build_with_policy(w, policy),
             Variant::MemoryFree => memfree::build_with_policy(w, policy),
+            Variant::CausalNaive
+            | Variant::CausalScaled
+            | Variant::CausalReordered
+            | Variant::CausalMemoryFree => {
+                causal::build_masked(self.base(), w, &Mask::Causal, policy)
+            }
+            Variant::Decode => decode::build_last_row(w, policy),
         }
     }
 
@@ -137,6 +240,33 @@ impl Variant {
             Variant::Naive => reference::sdpa_f32_unscaled(w),
             Variant::Scaled | Variant::Reordered => reference::sdpa_f32_scaled(w),
             Variant::MemoryFree => reference::sdpa_online_f32(w),
+            Variant::CausalNaive => reference::sdpa_f32_unscaled_masked(w, &Mask::Causal),
+            Variant::CausalScaled | Variant::CausalReordered => {
+                reference::sdpa_f32_scaled_masked(w, &Mask::Causal)
+            }
+            Variant::CausalMemoryFree => reference::sdpa_online_f32_masked(w, &Mask::Causal),
+            Variant::Decode => vec![reference::sdpa_online_f32_masked(w, &Mask::Causal)
+                .pop()
+                .expect("workloads have n ≥ 1")],
+        }
+    }
+
+    /// The f64 accuracy oracle computing the same *function* as this
+    /// variant (full attention for the prefill variants, causal
+    /// attention for the masked ones, the final causal row for the
+    /// decode step) — what end-to-end numeric tests compare against.
+    pub fn oracle_f64(self, w: &Workload) -> Matrix {
+        match self {
+            Variant::Naive | Variant::Scaled | Variant::Reordered | Variant::MemoryFree => {
+                reference::sdpa_f64(w)
+            }
+            Variant::CausalNaive
+            | Variant::CausalScaled
+            | Variant::CausalReordered
+            | Variant::CausalMemoryFree => reference::sdpa_f64_masked(w, &Mask::Causal),
+            Variant::Decode => vec![reference::sdpa_f64_masked(w, &Mask::Causal)
+                .pop()
+                .expect("workloads have n ≥ 1")],
         }
     }
 }
@@ -202,6 +332,18 @@ impl BuiltAttention {
 ///
 /// Returns the port carrying row-major scores.
 pub(crate) fn score_frontend(sc: &mut Scope<'_>, w: &Workload) -> Result<Port> {
+    let (q_rep, k_cols) = qk_sources(sc, w)?;
+    let scale = w.scale();
+    sc.zip("qk_dot", [q_rep, k_cols], move |xs| {
+        Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
+    })
+}
+
+/// The Q/K operand delivery shared by the masked and unmasked score
+/// front-ends: Q rows repeated N times each, and K as a resident
+/// operand whose rows (columns of Kᵀ) a memory unit + address
+/// generator replays once per query row.
+fn qk_sources(sc: &mut Scope<'_>, w: &Workload) -> Result<(Port, Port)> {
     let n = w.n;
     let total = (n * n) as u64;
 
@@ -209,14 +351,47 @@ pub(crate) fn score_frontend(sc: &mut Scope<'_>, w: &Workload) -> Result<Port> {
     let q_rows = sc.source_vec("src_q", q)?;
     let q_rep = sc.repeat("rep_q", q_rows, n)?;
 
-    // K is a resident operand: a memory unit + address generator replays
-    // its rows (columns of Kᵀ) once per query row.
     let k: Vec<Elem> = w.k.iter().map(|r| Elem::vector(r)).collect();
     let k_cols = sc.source_gen("src_k", total, move |i| k[(i % n as u64) as usize].clone())?;
+    Ok((q_rep, k_cols))
+}
+
+/// [`score_frontend`] with an in-stream mask: a third, *stateless* mask
+/// stream joins the q·k zip, so masked positions emit −∞ scores without
+/// perturbing the stream timing — masked elements still occupy their
+/// slot each cycle, which is why in-stream masking leaves every
+/// long-FIFO bound unchanged (see [`causal`]). The mask rides a
+/// [`Scope::source_gen`] (index-driven, no captured counter), so
+/// [`Engine::reset`] replays are bit-identical — a stateful counting
+/// `Map` would keep counting across resets.
+pub(crate) fn score_frontend_masked(
+    sc: &mut Scope<'_>,
+    w: &Workload,
+    mask: &Mask,
+) -> Result<Port> {
+    if *mask == Mask::Full {
+        return score_frontend(sc, w);
+    }
+    let n = w.n;
+    let total = (n * n) as u64;
+    let (q_rep, k_cols) = qk_sources(sc, w)?;
+
+    // The mask is a configured address pattern, not data: stream
+    // element t is score (i, j) = (t / N, t mod N).
+    let m = mask.clone();
+    let bits = sc.source_gen("src_mask", total, move |t| {
+        let i = (t / n as u64) as usize;
+        let j = (t % n as u64) as usize;
+        Elem::Scalar(if m.visible(i, j) { 1.0 } else { 0.0 })
+    })?;
 
     let scale = w.scale();
-    sc.zip("qk_dot", [q_rep, k_cols], move |xs| {
-        Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
+    sc.zip("qk_dot", [q_rep, k_cols, bits], move |xs| {
+        if xs[2].scalar() == 0.0 {
+            Elem::Scalar(f32::NEG_INFINITY)
+        } else {
+            Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
+        }
     })
 }
 
@@ -277,6 +452,61 @@ mod tests {
         assert_eq!(Variant::Scaled.long_fifos().len(), 2);
         assert_eq!(Variant::Reordered.long_fifos().len(), 1);
         assert_eq!(Variant::MemoryFree.long_fifos().len(), 0);
+        // Causal twins share their base's long FIFOs; decode has none.
+        for v in Variant::ALL {
+            if v.is_causal() {
+                assert_eq!(v.long_fifos(), v.base().long_fifos(), "{v}");
+            }
+        }
+        assert_eq!(Variant::Decode.long_fifos().len(), 0);
+    }
+
+    #[test]
+    fn usage_list_names_every_variant() {
+        let usage = Variant::usage_list();
+        for v in Variant::ALL {
+            assert!(usage.contains(v.name()), "usage list misses {v}: {usage}");
+        }
+        assert!(usage.contains("causal-memfree") && usage.contains("decode"));
+    }
+
+    #[test]
+    fn base_and_mask_classification() {
+        assert_eq!(Variant::CausalNaive.base(), Variant::Naive);
+        assert_eq!(Variant::CausalMemoryFree.base(), Variant::MemoryFree);
+        assert_eq!(Variant::Decode.base(), Variant::MemoryFree);
+        assert_eq!(Variant::Reordered.base(), Variant::Reordered);
+        assert!(Variant::CausalScaled.is_causal());
+        assert!(!Variant::Decode.is_causal() && Variant::Decode.is_decode());
+        assert_eq!(Variant::CausalReordered.mask(), Mask::Causal);
+        assert_eq!(Variant::Naive.mask(), Mask::Full);
+        // The PAPER set is exactly the unmasked prefill family.
+        for v in Variant::PAPER {
+            assert_eq!(v.base(), v);
+            assert!(!v.is_causal() && !v.is_decode());
+        }
+    }
+
+    #[test]
+    fn masked_frontend_emits_neg_inf_outside_the_mask() {
+        let w = Workload::random(4, 3, 22);
+        let mut g = GraphBuilder::new();
+        let mut sc = g.root();
+        let s = score_frontend_masked(&mut sc, &w, &Mask::Causal).unwrap();
+        let h = sc.sink("sink", s, Some(16)).unwrap();
+        let mut e = g.build().unwrap();
+        e.run(10_000).unwrap();
+        let got = h.scalars();
+        for i in 0..4 {
+            for j in 0..4 {
+                let x = got[i * 4 + j];
+                if j <= i {
+                    assert!((x - w.score(i, j)).abs() < 1e-6, "visible ({i},{j})");
+                } else {
+                    assert_eq!(x, f32::NEG_INFINITY, "masked ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,8 +22,8 @@
 //! the broadcast and deadlock the graph — the experiment `fig2` sweeps
 //! exactly this.
 
-use super::workload::Workload;
-use super::{pv_tail, score_frontend, BuiltAttention, DepthPolicy, FifoPlan};
+use super::workload::{Mask, Workload};
+use super::{pv_tail, score_frontend_masked, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::{Elem, GraphBuilder};
 use crate::Result;
 
@@ -75,11 +75,33 @@ pub fn build_with_delays_policy(
     exp_latency: u64,
     sigma_delay: u64,
 ) -> Result<BuiltAttention> {
+    build_masked_impl(w, policy, exp_latency, sigma_delay, &Mask::Full)
+}
+
+/// Figure-2 graph with an in-stream [`Mask`]: masked scores enter the
+/// exponential as −∞ ⇒ e = 0, dropping out of the row sum and the PV
+/// contraction while still occupying their stream slot — so the bypass
+/// depth bound stays N+2 (see [`super::causal`]).
+pub fn build_masked_with_policy(
+    w: &Workload,
+    mask: &Mask,
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
+    build_masked_impl(w, policy, 1, 0, mask)
+}
+
+fn build_masked_impl(
+    w: &Workload,
+    policy: DepthPolicy,
+    exp_latency: u64,
+    sigma_delay: u64,
+    mask: &Mask,
+) -> Result<BuiltAttention> {
     let n = w.n;
     let mut g = GraphBuilder::new();
     let mut sc = g.root();
 
-    let s = score_frontend(&mut sc, w)?;
+    let s = score_frontend_masked(&mut sc, w, mask)?;
 
     // Softmax numerator: e_ij = exp(s_ij), no max subtraction (§3).
     let e = sc.map_latency("exp", s, exp_latency, |x| Elem::Scalar(x.scalar().exp()))?;
@@ -188,5 +210,31 @@ mod tests {
         let (got, _) = built.run().unwrap();
         assert_eq!(got.len(), 8);
         assert_eq!(got[0].len(), 4);
+    }
+
+    #[test]
+    fn causal_mask_matches_masked_reference_and_keeps_bypass_bound() {
+        use super::super::reference::sdpa_f32_unscaled_masked;
+        let w = Workload::random(12, 4, 61);
+        let built = build_masked_with_policy(&w, &Mask::Causal, DepthPolicy::Inferred).unwrap();
+        // In-stream masking does not shorten the stream: the bypass is
+        // still inferred at N+2.
+        let rec = built
+            .engine
+            .depth_report()
+            .iter()
+            .find(|c| c.name == "e_bypass")
+            .unwrap()
+            .clone();
+        assert!(rec.is_long);
+        assert_eq!(rec.inferred, w.n + 2);
+        let mut built = built;
+        let (got, _) = built.run().unwrap();
+        assert_close(
+            &got,
+            &sdpa_f32_unscaled_masked(&w, &Mask::Causal),
+            1e-5,
+            "causal naive vs masked ref",
+        );
     }
 }

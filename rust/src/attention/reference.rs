@@ -1,7 +1,7 @@
 //! Golden reference SDPA implementations.
 //!
-//! Three references, used to validate every dataflow graph and (via the
-//! Python `ref.py` twin) the Pallas kernel:
+//! Three reference families, used to validate every dataflow graph and
+//! (via the Python `ref.py` twin) the Pallas kernel:
 //!
 //! * [`sdpa_f64`] — naive softmax attention in f64, the accuracy oracle.
 //! * [`sdpa_f32_unscaled`] — softmax **without** max subtraction, f32 —
@@ -10,8 +10,15 @@
 //! * [`sdpa_online_f32`] — the §4 memory-free recurrence (Eq. 3–6)
 //!   executed sequentially; validates the algorithm itself independent
 //!   of the dataflow mapping.
+//!
+//! Each has a `_masked` twin taking a [`Mask`]: row `i` folds only its
+//! visible key prefix `0..mask.row_visible(i)`, in stream order — so
+//! the masked online reference executes the *same f32 operation
+//! sequence* as a decode-step chain and as the masked graphs' visible
+//! positions (masked stream slots reduce to exact identity updates:
+//! `Δ = 1`, `e = 0`).
 
-use super::workload::Workload;
+use super::workload::{Mask, Workload};
 
 /// Output matrix, row-major `n × d`.
 pub type Matrix = Vec<Vec<f32>>;
@@ -113,10 +120,16 @@ pub fn sdpa_online_f32(w: &Workload) -> Matrix {
 
 /// f64 causal (autoregressive) attention: row i attends keys 0..=i.
 pub fn sdpa_f64_causal(w: &Workload) -> Matrix {
+    sdpa_f64_masked(w, &Mask::Causal)
+}
+
+/// f64 masked attention: row i folds its visible key prefix only.
+pub fn sdpa_f64_masked(w: &Workload, mask: &Mask) -> Matrix {
     let scale = w.scale() as f64;
     let mut out = Vec::with_capacity(w.n);
     for i in 0..w.n {
-        let s: Vec<f64> = (0..=i)
+        let vis = mask.row_visible(i, w.n);
+        let s: Vec<f64> = (0..vis)
             .map(|j| {
                 w.q[i]
                     .iter()
@@ -137,6 +150,78 @@ pub fn sdpa_f64_causal(w: &Workload) -> Matrix {
             }
         }
         out.push(row.into_iter().map(|x| x as f32).collect());
+    }
+    out
+}
+
+/// f32 unscaled-softmax attention over the visible prefix — what the
+/// masked Figure-2 graph computes (masked slots contribute e = 0).
+pub fn sdpa_f32_unscaled_masked(w: &Workload, mask: &Mask) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let vis = mask.row_visible(i, w.n);
+        let e: Vec<f32> = (0..vis).map(|j| w.score(i, j).exp()).collect();
+        let sigma: f32 = e.iter().sum();
+        let mut row = vec![0.0f32; w.d];
+        for (j, ej) in e.iter().enumerate() {
+            let p = ej / sigma;
+            for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
+                *acc += p * vv;
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// f32 max-subtracted-softmax attention over the visible prefix — what
+/// the masked Figure-3(a)/(b) graphs compute (the row max over the full
+/// stream equals the max over the visible prefix, since masked scores
+/// enter as −∞).
+pub fn sdpa_f32_scaled_masked(w: &Workload, mask: &Mask) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let vis = mask.row_visible(i, w.n);
+        let s: Vec<f32> = (0..vis).map(|j| w.score(i, j)).collect();
+        let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f32> = s.iter().map(|x| (x - m).exp()).collect();
+        let sigma: f32 = e.iter().sum();
+        let mut row = vec![0.0f32; w.d];
+        for (j, ej) in e.iter().enumerate() {
+            let p = ej / sigma;
+            for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
+                *acc += p * vv;
+            }
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// The memory-free recurrence over the visible prefix — the incremental
+/// decode oracle. Step `t` of an autoregressive decode session executes
+/// exactly this row-`t` loop (same f32 operations, same order), so a
+/// decode-step chain must agree with this reference essentially
+/// bit-for-bit.
+pub fn sdpa_online_f32_masked(w: &Workload, mask: &Mask) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let vis = mask.row_visible(i, w.n);
+        let mut m = f32::NEG_INFINITY;
+        let mut r = 0.0f32;
+        let mut l = vec![0.0f32; w.d];
+        for j in 0..vis {
+            let s = w.score(i, j);
+            let m_new = m.max(s);
+            let delta = (m - m_new).exp();
+            let e = (s - m_new).exp();
+            r = r * delta + e;
+            for (acc, vv) in l.iter_mut().zip(&w.v[j]) {
+                *acc = *acc * delta + e * vv;
+            }
+            m = m_new;
+        }
+        out.push(l.into_iter().map(|x| x / r).collect());
     }
     out
 }
@@ -245,5 +330,66 @@ mod tests {
         let a = vec![vec![f32::NAN]];
         let b = vec![vec![0.0]];
         assert!(max_abs_diff(&a, &b).is_nan());
+    }
+
+    #[test]
+    fn masked_references_agree_with_f64_oracle() {
+        let w = Workload::random(12, 6, 77);
+        for mask in [Mask::Causal, Mask::ragged(5), Mask::Full] {
+            let gold = sdpa_f64_masked(&w, &mask);
+            assert_close(
+                &sdpa_f32_scaled_masked(&w, &mask),
+                &gold,
+                3e-5,
+                &format!("scaled masked {}", mask.name()),
+            );
+            assert_close(
+                &sdpa_f32_unscaled_masked(&w, &mask),
+                &gold,
+                3e-5,
+                &format!("unscaled masked {}", mask.name()),
+            );
+            assert_close(
+                &sdpa_online_f32_masked(&w, &mask),
+                &gold,
+                3e-5,
+                &format!("online masked {}", mask.name()),
+            );
+        }
+    }
+
+    #[test]
+    fn full_mask_reduces_to_unmasked_references() {
+        let w = Workload::random(8, 4, 31);
+        assert_eq!(sdpa_f64_masked(&w, &Mask::Full), sdpa_f64(&w));
+        assert_eq!(sdpa_online_f32_masked(&w, &Mask::Full), sdpa_online_f32(&w));
+        assert_eq!(
+            sdpa_f32_scaled_masked(&w, &Mask::Full),
+            sdpa_f32_scaled(&w)
+        );
+    }
+
+    #[test]
+    fn ragged_padding_rows_repeat_the_last_valid_visibility() {
+        // Padding rows (i ≥ len) attend the full valid prefix; with
+        // row-dependent q they differ per row but use the same keys.
+        let w = Workload::random(6, 4, 91);
+        let masked = sdpa_f64_masked(&w, &Mask::ragged(3));
+        let trunc = sdpa_f64_causal(&w.prefix(3));
+        for i in 0..3 {
+            for (a, b) in masked[i].iter().zip(&trunc[i]) {
+                assert!((a - b).abs() < 1e-6, "valid row {i}");
+            }
+        }
+        // Padding rows: each equals full (unmasked) attention of its
+        // own query over exactly the valid prefix's keys/values.
+        for i in 3..6 {
+            let mut wp = w.prefix(3);
+            wp.q = vec![w.q[i].clone(); 3];
+            let expect = sdpa_f64(&wp);
+            for (a, b) in masked[i].iter().zip(&expect[0]) {
+                assert!((a - b).abs() < 1e-6, "padding row {i}");
+            }
+        }
     }
 }

@@ -16,8 +16,8 @@
 //! depth — the depth analysis flags exactly that one channel here —
 //! eliminated next by Figure 3(c).
 
-use super::workload::Workload;
-use super::{score_frontend, v_source, BuiltAttention, DepthPolicy, FifoPlan};
+use super::workload::{Mask, Workload};
+use super::{score_frontend_masked, v_source, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::{Elem, GraphBuilder};
 use crate::Result;
 
@@ -30,12 +30,23 @@ pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
 /// Figure-3(b) graph under a depth policy (`Inferred` derives N+2 for
 /// `s_bypass` and depth 2 for the balanced e-side paths).
 pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_masked_with_policy(w, &Mask::Full, policy)
+}
+
+/// Figure-3(b) graph with an in-stream [`Mask`] — masked positions ride
+/// the stream as −∞ scores / zero exponentials; `s_bypass` keeps its
+/// N+2 bound.
+pub fn build_masked_with_policy(
+    w: &Workload,
+    mask: &Mask,
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
     let n = w.n;
     let d = w.d;
     let mut g = GraphBuilder::new();
     let mut sc = g.root();
 
-    let s = score_frontend(&mut sc, w)?;
+    let s = score_frontend_masked(&mut sc, w, mask)?;
 
     // Row max (still a row-wise reduction: the one remaining long FIFO).
     let [s_max, s_bypass] = sc.broadcast("bc_s", s, ["s_max", "s_bypass"])?;

@@ -16,8 +16,8 @@
 //! make it better, exactly as the paper narrates. The depth analysis
 //! flags both channels and sizes each at N+2.
 
-use super::workload::Workload;
-use super::{pv_tail, score_frontend, BuiltAttention, DepthPolicy, FifoPlan};
+use super::workload::{Mask, Workload};
+use super::{pv_tail, score_frontend_masked, BuiltAttention, DepthPolicy, FifoPlan};
 use crate::sim::{Elem, GraphBuilder};
 use crate::Result;
 
@@ -29,11 +29,23 @@ pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
 /// Figure-3(a) graph under a depth policy (`Inferred` derives N+2 for
 /// both bypasses).
 pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_masked_with_policy(w, &Mask::Full, policy)
+}
+
+/// Figure-3(a) graph with an in-stream [`Mask`]. Masked scores enter
+/// the row-max reduction as −∞ (a no-op under `max`, since key 0 is
+/// always visible) and the exponential as e = 0; timing, and therefore
+/// both N+2 bypass bounds, are unchanged.
+pub fn build_masked_with_policy(
+    w: &Workload,
+    mask: &Mask,
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
     let n = w.n;
     let mut g = GraphBuilder::new();
     let mut sc = g.root();
 
-    let s = score_frontend(&mut sc, w)?;
+    let s = score_frontend_masked(&mut sc, w, mask)?;
 
     // First divergence: row max vs score bypass.
     let [s_max, s_bypass] = sc.broadcast("bc_s", s, ["s_max", "s_bypass"])?;

@@ -1,11 +1,82 @@
-//! Deterministic Q/K/V workload generation.
+//! Deterministic Q/K/V workload generation and attention masks.
 //!
 //! The paper's experiments are driven by the sequence length `N` and head
 //! dimension `d`; the actual values only matter for numeric validation
 //! against the reference, so we generate them from a seeded PRNG
 //! (reproducible across runs, required for `Engine::reset` replays).
+//!
+//! [`Mask`] describes which score positions are visible — full
+//! (prefill), causal (autoregressive), or ragged-causal (a padded
+//! sequence whose valid length is shorter than `N`). All masks are
+//! *prefix* masks: row `i` sees keys `0..row_visible(i)`, and key 0 is
+//! visible to every row — the invariant the running-max scan of the
+//! memory-free graphs (and softmax itself) requires.
 
 use crate::prng::SplitMix64;
+
+/// Which `(query row, key)` score positions are visible.
+///
+/// Every mask keeps key 0 visible to every row (softmax over an empty
+/// set is undefined, and the memory-free running-max scan seeds its
+/// state from the first visible score).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Mask {
+    /// Every row attends every key — the paper's prefill setting.
+    Full,
+    /// Row `i` attends keys `j ≤ i` — autoregressive attention.
+    Causal,
+    /// Causal attention over a padded sequence whose valid length is
+    /// `len` (< N typically): keys at `j ≥ len` are padding and masked
+    /// for every row; padding query rows (`i ≥ len`) attend the whole
+    /// valid prefix, so their outputs are well-defined but ignorable.
+    Ragged {
+        /// Valid sequence length (≥ 1).
+        len: usize,
+    },
+}
+
+impl Mask {
+    /// Ragged-causal mask for a valid length (must be ≥ 1).
+    pub fn ragged(len: usize) -> Mask {
+        assert!(len >= 1, "ragged mask needs a valid length of at least 1");
+        Mask::Ragged { len }
+    }
+
+    /// Whether score `(i, j)` is visible.
+    #[inline]
+    pub fn visible(&self, i: usize, j: usize) -> bool {
+        match *self {
+            Mask::Full => true,
+            Mask::Causal => j <= i,
+            Mask::Ragged { len } => {
+                if i < len {
+                    j <= i
+                } else {
+                    j < len
+                }
+            }
+        }
+    }
+
+    /// Number of visible keys in row `i` of an `n`-key sequence. Masks
+    /// are prefix masks, so the visible set is exactly `0..row_visible`.
+    pub fn row_visible(&self, i: usize, n: usize) -> usize {
+        match *self {
+            Mask::Full => n,
+            Mask::Causal => (i + 1).min(n),
+            Mask::Ragged { len } => (i + 1).min(len).min(n),
+        }
+    }
+
+    /// Stable name for reports.
+    pub fn name(&self) -> String {
+        match self {
+            Mask::Full => "full".into(),
+            Mask::Causal => "causal".into(),
+            Mask::Ragged { len } => format!("ragged({len})"),
+        }
+    }
+}
 
 /// One attention head's worth of inputs: Q, K, V ∈ ℝ^{N×d}, row-major.
 #[derive(Clone, Debug)]
@@ -62,6 +133,19 @@ impl Workload {
     pub fn score(&self, i: usize, j: usize) -> f32 {
         dot(&self.q[i], &self.k[j]) * self.scale()
     }
+
+    /// The first `len` tokens of this workload (1 ≤ len ≤ N) — ragged
+    /// sequences and decode-session prefixes are truncations.
+    pub fn prefix(&self, len: usize) -> Workload {
+        assert!(len >= 1 && len <= self.n, "prefix length out of range");
+        Workload {
+            n: len,
+            d: self.d,
+            q: self.q[..len].to_vec(),
+            k: self.k[..len].to_vec(),
+            v: self.v[..len].to_vec(),
+        }
+    }
 }
 
 /// f32 dot product (sequential accumulation).
@@ -116,5 +200,57 @@ mod tests {
         let big = Workload::large_magnitude(4, 4, 9, 100.0);
         assert!((big.q[0][0] - base.q[0][0] * 100.0).abs() < 1e-3);
         assert_eq!(big.k, base.k);
+    }
+
+    #[test]
+    fn prefix_truncates_all_three_operands() {
+        let w = Workload::random(8, 4, 12);
+        let p = w.prefix(3);
+        assert_eq!(p.n, 3);
+        assert_eq!(p.q, w.q[..3].to_vec());
+        assert_eq!(p.k, w.k[..3].to_vec());
+        assert_eq!(p.v, w.v[..3].to_vec());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn prefix_rejects_zero_length() {
+        Workload::random(4, 4, 1).prefix(0);
+    }
+
+    #[test]
+    fn causal_mask_is_lower_triangular() {
+        let m = Mask::Causal;
+        assert!(m.visible(3, 0) && m.visible(3, 3));
+        assert!(!m.visible(3, 4));
+        assert_eq!(m.row_visible(0, 8), 1);
+        assert_eq!(m.row_visible(7, 8), 8);
+    }
+
+    #[test]
+    fn ragged_mask_clamps_to_valid_length() {
+        let m = Mask::ragged(3);
+        // Real rows: causal within the valid prefix.
+        assert!(m.visible(1, 1) && !m.visible(1, 2));
+        // Padding rows attend the whole valid prefix, nothing beyond.
+        assert!(m.visible(5, 2) && !m.visible(5, 3));
+        assert_eq!(m.row_visible(1, 8), 2);
+        assert_eq!(m.row_visible(5, 8), 3);
+    }
+
+    #[test]
+    fn every_mask_keeps_key_zero_visible() {
+        for m in [Mask::Full, Mask::Causal, Mask::ragged(1), Mask::ragged(5)] {
+            for i in 0..10 {
+                assert!(m.visible(i, 0), "{} row {i}", m.name());
+                assert!(m.row_visible(i, 10) >= 1, "{} row {i}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn ragged_mask_rejects_zero() {
+        Mask::ragged(0);
     }
 }

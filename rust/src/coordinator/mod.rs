@@ -5,24 +5,34 @@
 //! is the serving shell that puts the compiled artifacts on a request
 //! path with Python nowhere in sight:
 //!
-//! * [`request`] — request/response types and shape classes.
+//! * [`request`] — request/response types and shape classes, for both
+//!   one-shot prefill attention and decode-session steps.
 //! * [`batcher`] — a pure, clock-injected dynamic batcher (max-batch /
 //!   max-wait, per shape class), property-tested for no-loss/no-dup and
 //!   FIFO order.
+//! * [`sessions`] — decode-session management: sticky shape-class
+//!   routing, per-session step counters, admission control, and the
+//!   context window, backed by the simulator's
+//!   [`DecodeSession`](crate::attention::decode::DecodeSession)s.
 //! * [`server`] — a worker thread owning the PJRT executor: drains the
 //!   ingress queue, batches, routes each batch to the smallest artifact
 //!   that fits (padding as needed), executes, and replies per-request.
 //! * [`stats`] — latency/throughput accounting (mean, p50, p95, p99).
 //!
 //! The design mirrors a vLLM-style router at miniature scale: shape
-//! classes play the role of (model, sequence-bucket) routing keys.
+//! classes play the role of (model, sequence-bucket) routing keys, and
+//! decode sessions the role of its sticky sequence → worker pinning.
 
 pub mod batcher;
 pub mod request;
 pub mod server;
+pub mod sessions;
 pub mod stats;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use request::{AttnRequest, AttnResponse, ShapeClass};
+pub use request::{
+    AttnRequest, AttnResponse, DecodeClass, DecodeStepRequest, DecodeStepResponse, ShapeClass,
+};
 pub use server::{Server, ServerConfig, ServerHandle};
+pub use sessions::{SessionConfig, SessionTable};
 pub use stats::ServingStats;

@@ -1,4 +1,10 @@
 //! Request/response types and shape-class routing keys.
+//!
+//! Two request families share this module: one-shot prefill attention
+//! ([`AttnRequest`], routed by [`ShapeClass`] and batchable) and
+//! decode-session steps ([`DecodeStepRequest`], routed by
+//! [`DecodeClass`] with *sticky* per-session routing — see
+//! [`super::sessions`]).
 
 use std::sync::mpsc;
 
@@ -60,6 +66,75 @@ impl AttnRequest {
     }
 }
 
+/// Routing key for decode sessions: only the head dimension, because a
+/// session's sequence length grows by one token per step. A session is
+/// *sticky*: every step must carry the class the session was opened
+/// with (enforced by [`super::sessions::SessionTable`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DecodeClass {
+    /// Head dimension.
+    pub d: usize,
+}
+
+impl std::fmt::Display for DecodeClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode_d{}", self.d)
+    }
+}
+
+/// One decode step: the session's next token projections (row vectors,
+/// all of the session's head dimension).
+#[derive(Clone, Debug)]
+pub struct DecodeStepRequest {
+    /// Session id returned by `SessionTable::open`.
+    pub session: u64,
+    /// Query row for the new token.
+    pub q: Vec<f32>,
+    /// Key row appended to the session's cache.
+    pub k: Vec<f32>,
+    /// Value row appended to the session's cache.
+    pub v: Vec<f32>,
+}
+
+impl DecodeStepRequest {
+    /// Validate row shapes and derive the decode class.
+    pub fn class(&self) -> Result<DecodeClass> {
+        let d = self.q.len();
+        if d == 0 {
+            return Err(Error::Coordinator(format!(
+                "decode step for session {}: empty query row",
+                self.session
+            )));
+        }
+        if self.k.len() != d || self.v.len() != d {
+            return Err(Error::Coordinator(format!(
+                "decode step for session {}: q/k/v dims differ ({}/{}/{})",
+                self.session,
+                d,
+                self.k.len(),
+                self.v.len()
+            )));
+        }
+        Ok(DecodeClass { d })
+    }
+}
+
+/// Response to one decode step.
+#[derive(Clone, Debug)]
+pub struct DecodeStepResponse {
+    /// Echo of the session id.
+    pub session: u64,
+    /// 0-based step index within the session (== tokens cached before
+    /// this step) — the per-session counter.
+    pub step: u64,
+    /// The session's sticky routing class.
+    pub class: DecodeClass,
+    /// Attention output row for the new token.
+    pub row: Vec<f32>,
+    /// Simulated cycles the step graph took.
+    pub cycles: u64,
+}
+
 /// Response to one request.
 #[derive(Clone, Debug)]
 pub struct AttnResponse {
@@ -104,5 +179,36 @@ mod tests {
         assert!(r.shape_class().is_err());
         let (r, _rx) = req(3, vec![64], vec![64]);
         assert!(r.shape_class().is_err());
+    }
+
+    #[test]
+    fn decode_class_derived_and_displayed() {
+        let r = DecodeStepRequest {
+            session: 7,
+            q: vec![0.0; 16],
+            k: vec![0.0; 16],
+            v: vec![0.0; 16],
+        };
+        let c = r.class().unwrap();
+        assert_eq!(c, DecodeClass { d: 16 });
+        assert_eq!(format!("{c}"), "decode_d16");
+    }
+
+    #[test]
+    fn decode_step_shape_mismatch_rejected() {
+        let r = DecodeStepRequest {
+            session: 1,
+            q: vec![0.0; 8],
+            k: vec![0.0; 4],
+            v: vec![0.0; 8],
+        };
+        assert!(r.class().is_err());
+        let r = DecodeStepRequest {
+            session: 2,
+            q: vec![],
+            k: vec![],
+            v: vec![],
+        };
+        assert!(r.class().is_err());
     }
 }

@@ -1,0 +1,275 @@
+//! Decode-session management: sticky shape-class routing and
+//! per-session step counters.
+//!
+//! Prefill requests are stateless and batchable ([`super::batcher`]);
+//! decode is the opposite — each session owns a growing K/V cache, so
+//! routing must be **sticky**: every step of a session runs on the
+//! decode pipeline the session was opened on. [`SessionTable`] is the
+//! pure (thread-free, clock-free) core that enforces this:
+//!
+//! * `open(d)` admits a session under a [`DecodeClass`] (the head
+//!   dimension — the only shape that must stay fixed; the sequence
+//!   length grows per step) and pins it to a simulator-backed
+//!   [`DecodeSession`].
+//! * `step(req)` validates the request's class against the session's
+//!   sticky class, rejects context-window overruns, runs one decode
+//!   step, and stamps the response with the per-session step counter.
+//! * `close(id)` retires the session and returns its transcript.
+//!
+//! Admission control (`max_sessions`) and the context window
+//! (`max_len`) are the two serving limits a real deployment would
+//! enforce at this layer; both are tested.
+
+use std::collections::HashMap;
+
+use super::request::{DecodeClass, DecodeStepRequest, DecodeStepResponse};
+use crate::attention::decode::{DecodeKind, DecodeSession};
+use crate::attention::reference::Matrix;
+use crate::{Error, Result};
+
+/// Session-table policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Which decode-step mapping sessions run on.
+    pub kind: DecodeKind,
+    /// Maximum concurrently open sessions (admission control).
+    pub max_sessions: usize,
+    /// Maximum tokens per session (the context window).
+    pub max_len: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            kind: DecodeKind::MemoryFree,
+            max_sessions: 64,
+            max_len: 4096,
+        }
+    }
+}
+
+struct Entry {
+    class: DecodeClass,
+    session: DecodeSession,
+}
+
+/// The decode-session coordinator core.
+pub struct SessionTable {
+    cfg: SessionConfig,
+    next_id: u64,
+    sessions: HashMap<u64, Entry>,
+    steps_served: u64,
+}
+
+impl SessionTable {
+    /// New table under a policy.
+    pub fn new(cfg: SessionConfig) -> Self {
+        assert!(cfg.max_sessions >= 1 && cfg.max_len >= 1);
+        SessionTable {
+            cfg,
+            next_id: 0,
+            sessions: HashMap::new(),
+            steps_served: 0,
+        }
+    }
+
+    /// Open a session for head dimension `d`; returns its id.
+    pub fn open(&mut self, d: usize) -> Result<u64> {
+        if d == 0 {
+            return Err(Error::Coordinator(
+                "decode session needs a head dimension ≥ 1".into(),
+            ));
+        }
+        if self.sessions.len() >= self.cfg.max_sessions {
+            return Err(Error::Coordinator(format!(
+                "session table full ({} active)",
+                self.sessions.len()
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.insert(
+            id,
+            Entry {
+                class: DecodeClass { d },
+                session: DecodeSession::new(self.cfg.kind, d),
+            },
+        );
+        Ok(id)
+    }
+
+    /// The sticky class a session was opened with.
+    pub fn class_of(&self, id: u64) -> Option<DecodeClass> {
+        self.sessions.get(&id).map(|e| e.class)
+    }
+
+    /// Tokens a session has decoded so far (its step counter).
+    pub fn len_of(&self, id: u64) -> Option<usize> {
+        self.sessions.get(&id).map(|e| e.session.len())
+    }
+
+    /// Run one decode step for the request's session.
+    pub fn step(&mut self, req: DecodeStepRequest) -> Result<DecodeStepResponse> {
+        let class = req.class()?;
+        let entry = self.sessions.get_mut(&req.session).ok_or_else(|| {
+            Error::Coordinator(format!("unknown decode session {}", req.session))
+        })?;
+        if class != entry.class {
+            return Err(Error::Coordinator(format!(
+                "sticky routing violation: session {} was opened for {}, step is {}",
+                req.session, entry.class, class
+            )));
+        }
+        if entry.session.len() >= self.cfg.max_len {
+            return Err(Error::Coordinator(format!(
+                "session {} exceeded the context window ({} tokens)",
+                req.session, self.cfg.max_len
+            )));
+        }
+        let outcome = entry.session.step(req.q, req.k, req.v)?;
+        self.steps_served += 1;
+        Ok(DecodeStepResponse {
+            session: req.session,
+            step: outcome.step as u64,
+            class,
+            row: outcome.row,
+            cycles: outcome.summary.cycles,
+        })
+    }
+
+    /// Retire a session, returning its output transcript (one row per
+    /// decoded token), or `None` if the id is unknown.
+    pub fn close(&mut self, id: u64) -> Option<Matrix> {
+        self.sessions
+            .remove(&id)
+            .map(|e| e.session.outputs().clone())
+    }
+
+    /// Number of open sessions.
+    pub fn active(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Total steps served across all sessions (monotonic).
+    pub fn steps_served(&self) -> u64 {
+        self.steps_served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::reference::{assert_close, sdpa_online_f32_masked};
+    use crate::attention::workload::{Mask, Workload};
+
+    fn req(session: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> DecodeStepRequest {
+        DecodeStepRequest { session, q, k, v }
+    }
+
+    #[test]
+    fn open_step_close_roundtrip_matches_causal_reference() {
+        let w = Workload::random(6, 4, 0x5E55);
+        let mut table = SessionTable::new(SessionConfig::default());
+        let id = table.open(4).unwrap();
+        for t in 0..w.n {
+            let resp = table
+                .step(req(id, w.q[t].clone(), w.k[t].clone(), w.v[t].clone()))
+                .unwrap();
+            assert_eq!(resp.session, id);
+            assert_eq!(resp.step, t as u64, "per-session step counter");
+            assert_eq!(resp.class, DecodeClass { d: 4 });
+            assert!(resp.cycles > 0);
+        }
+        assert_eq!(table.len_of(id), Some(w.n));
+        let transcript = table.close(id).unwrap();
+        assert_close(
+            &transcript,
+            &sdpa_online_f32_masked(&w, &Mask::Causal),
+            1e-6,
+            "session transcript vs causal reference",
+        );
+        assert_eq!(table.active(), 0);
+        assert_eq!(table.steps_served(), w.n as u64);
+    }
+
+    #[test]
+    fn sticky_routing_rejects_class_changes() {
+        let mut table = SessionTable::new(SessionConfig::default());
+        let id = table.open(4).unwrap();
+        assert_eq!(table.class_of(id), Some(DecodeClass { d: 4 }));
+        let err = table.step(req(id, vec![0.0; 8], vec![0.0; 8], vec![0.0; 8]));
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("sticky routing")),
+            "a d=8 step must not land on a d=4 session"
+        );
+        // The rejected step left the session untouched.
+        assert_eq!(table.len_of(id), Some(0));
+    }
+
+    #[test]
+    fn interleaved_ragged_sessions_stay_independent() {
+        // Three sessions of different lengths, steps interleaved — the
+        // ragged-batch serving shape. Each transcript must match the
+        // causal reference of its own (truncated) workload.
+        let lens = [1usize, 3, 5];
+        let ws: Vec<Workload> = lens
+            .iter()
+            .map(|&l| Workload::random(l, 4, 0x1000 + l as u64))
+            .collect();
+        let mut table = SessionTable::new(SessionConfig::default());
+        let ids: Vec<u64> = ws.iter().map(|_| table.open(4).unwrap()).collect();
+        let max_len = *lens.iter().max().unwrap();
+        for t in 0..max_len {
+            for (s, w) in ws.iter().enumerate() {
+                if t < w.n {
+                    let resp = table
+                        .step(req(ids[s], w.q[t].clone(), w.k[t].clone(), w.v[t].clone()))
+                        .unwrap();
+                    assert_eq!(resp.step, t as u64, "session {s} counter");
+                }
+            }
+        }
+        for (s, w) in ws.iter().enumerate() {
+            let transcript = table.close(ids[s]).unwrap();
+            assert_close(
+                &transcript,
+                &sdpa_online_f32_masked(w, &Mask::Causal),
+                1e-6,
+                &format!("interleaved session {s}"),
+            );
+        }
+    }
+
+    #[test]
+    fn admission_control_and_context_window() {
+        let mut table = SessionTable::new(SessionConfig {
+            kind: DecodeKind::MemoryFree,
+            max_sessions: 2,
+            max_len: 2,
+        });
+        let a = table.open(2).unwrap();
+        let _b = table.open(2).unwrap();
+        assert!(matches!(table.open(2), Err(Error::Coordinator(_))));
+        // Free a slot and re-admit.
+        assert!(table.close(a).is_some());
+        let c = table.open(2).unwrap();
+        // Context window: third step must be rejected.
+        for _ in 0..2 {
+            table
+                .step(req(c, vec![0.1, 0.2], vec![0.3, 0.4], vec![0.5, 0.6]))
+                .unwrap();
+        }
+        let err = table.step(req(c, vec![0.1, 0.2], vec![0.3, 0.4], vec![0.5, 0.6]));
+        assert!(matches!(err, Err(Error::Coordinator(msg)) if msg.contains("context window")));
+    }
+
+    #[test]
+    fn unknown_sessions_and_zero_d_rejected() {
+        let mut table = SessionTable::new(SessionConfig::default());
+        assert!(table.open(0).is_err());
+        let err = table.step(req(99, vec![0.0], vec![0.0], vec![0.0]));
+        assert!(matches!(err, Err(Error::Coordinator(msg)) if msg.contains("unknown")));
+        assert!(table.close(99).is_none());
+        assert_eq!(table.class_of(99), None);
+    }
+}

@@ -1,0 +1,203 @@
+//! Decode scaling study: per-step cost and memory of autoregressive
+//! decode vs cache length.
+//!
+//! For each decode mapping ([`DecodeKind`]) and cache length this
+//! driver builds one decode step under inferred depths and reports:
+//! cycles (≈ len + fill at II = 1), cycles per cached key, peak FIFO
+//! occupancy, and the inferred long-FIFO depth — the causal-aware
+//! bound. The table states the extension's claim directly: the
+//! memory-free step stays O(1) while the buffered step's bypass grows
+//! as len+2.
+
+use crate::attention::decode::{self, DecodeKind};
+use crate::attention::workload::Workload;
+use crate::attention::DepthPolicy;
+use crate::report::Table;
+use crate::sim::metrics::{classify_occupancy, OccupancyClass};
+use crate::Result;
+
+/// Per-(kind, len) measurement.
+#[derive(Clone, Debug)]
+pub struct DecodePoint {
+    /// Cached K/V rows the step attends.
+    pub len: usize,
+    /// Cycles to completion.
+    pub cycles: u64,
+    /// Cycles per cached key (→ ~1 at II = 1 for long caches).
+    pub cycles_per_key: f64,
+    /// Largest per-channel peak occupancy (elements).
+    pub peak_elems: usize,
+    /// Inferred long-FIFO depth (`None` when every FIFO is short).
+    pub long_depth: Option<usize>,
+    /// The causal-aware bound [`decode::step_long_fifo_bound`].
+    pub bound: usize,
+}
+
+/// Full decode scaling study.
+#[derive(Clone, Debug)]
+pub struct DecodeResult {
+    /// Head dimension used.
+    pub d: usize,
+    /// `(kind, points ascending in len)`.
+    pub series: Vec<(DecodeKind, Vec<DecodePoint>)>,
+}
+
+impl DecodeResult {
+    /// Growth class of a kind's peak occupancy vs cache length.
+    pub fn classification(&self, kind: DecodeKind) -> OccupancyClass {
+        let (_, points) = self
+            .series
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .expect("kind present");
+        let samples: Vec<(usize, usize)> = points
+            .iter()
+            .map(|p| (p.len, p.peak_elems + 1))
+            .collect();
+        classify_occupancy(&samples)
+    }
+
+    /// Look up one point.
+    pub fn point(&self, kind: DecodeKind, len: usize) -> Option<&DecodePoint> {
+        self.series
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .and_then(|(_, ps)| ps.iter().find(|p| p.len == len))
+    }
+
+    /// Render the study table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!("Decode step vs cache length (d={})", self.d),
+            &[
+                "kind",
+                "len",
+                "cycles",
+                "cycles/key",
+                "peak FIFO (elems)",
+                "long depth (inferred)",
+                "bound",
+            ],
+        );
+        for (kind, points) in &self.series {
+            for p in points {
+                t.row(&[
+                    kind.name().into(),
+                    p.len.to_string(),
+                    p.cycles.to_string(),
+                    format!("{:.2}", p.cycles_per_key),
+                    p.peak_elems.to_string(),
+                    p.long_depth
+                        .map(|d| d.to_string())
+                        .unwrap_or_else(|| "- (all short)".into()),
+                    p.bound.to_string(),
+                ]);
+            }
+            t.row(&[
+                format!("{kind} growth"),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{:?}", self.classification(*kind)),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run the study over ascending cache lengths (each ≥ 1).
+pub fn run(lens: &[usize], d: usize) -> Result<DecodeResult> {
+    let mut series = Vec::new();
+    for kind in DecodeKind::ALL {
+        let mut points = Vec::new();
+        for &len in lens {
+            let w = Workload::random(len, d, 0xDEC0DE);
+            let mut built = decode::build_step(
+                kind,
+                &w.q[len - 1],
+                &w.k,
+                &w.v,
+                DepthPolicy::Inferred,
+            )?;
+            let (_, summary) = built.run()?;
+            let peak_elems = summary
+                .channel_stats
+                .iter()
+                .map(|(_, st)| st.peak_occupancy_elems)
+                .max()
+                .unwrap_or(0);
+            let long_depth = summary
+                .depths
+                .iter()
+                .filter(|c| c.is_long)
+                .map(|c| c.inferred)
+                .max();
+            points.push(DecodePoint {
+                len,
+                cycles: summary.cycles,
+                cycles_per_key: summary.cycles as f64 / len as f64,
+                peak_elems,
+                long_depth,
+                bound: decode::step_long_fifo_bound(kind, len),
+            });
+        }
+        series.push((kind, points));
+    }
+    Ok(DecodeResult { d, series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memfree_is_constant_and_buffered_linear() {
+        let r = run(&[4, 16, 64], 4).unwrap();
+        assert_eq!(
+            r.classification(DecodeKind::MemoryFree),
+            OccupancyClass::Constant
+        );
+        assert_eq!(
+            r.classification(DecodeKind::Buffered),
+            OccupancyClass::Linear
+        );
+    }
+
+    #[test]
+    fn inferred_long_depth_tracks_the_causal_bound() {
+        let r = run(&[4, 16, 64], 4).unwrap();
+        for len in [4usize, 16, 64] {
+            let p = r.point(DecodeKind::Buffered, len).unwrap();
+            assert_eq!(p.long_depth, Some(len + 2), "buffered len={len}");
+            assert_eq!(p.bound, len + 2);
+            let p = r.point(DecodeKind::MemoryFree, len).unwrap();
+            assert_eq!(p.long_depth, None, "memfree len={len}");
+            assert!(p.peak_elems <= 2, "memfree len={len}: O(1) peak");
+        }
+    }
+
+    #[test]
+    fn decode_steps_run_near_ii_1() {
+        let r = run(&[16, 64], 4).unwrap();
+        for (kind, points) in &r.series {
+            for p in points {
+                assert!(
+                    p.cycles_per_key < 3.0,
+                    "{kind} len={}: {:.2} cycles/key — pipeline not streaming",
+                    p.len,
+                    p.cycles_per_key
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table_reports_growth_classes() {
+        let r = run(&[4, 16], 4).unwrap();
+        let text = r.table().render();
+        assert!(text.contains("memfree growth"));
+        assert!(text.contains("all short"));
+    }
+}

@@ -10,10 +10,12 @@
 //! | [`table1::run`] | Table 1 — node semantics |
 //! | [`fifo_sweep::run`] | Figures 2 / 3(a) / 3(b) / 3(c) — FIFO-depth vs throughput |
 //! | [`scaling::run`] | O(N) vs O(1) intermediate-memory growth |
-//! | [`numerics::run`] | all variants ≡ reference SDPA |
+//! | [`numerics::run`] | all variants (incl. causal/decode) ≡ their reference SDPA |
 //! | [`ablation::run`] | extension: min FIFO depth = N+1+L(exp) latency study |
+//! | [`decode::run`] | extension: decode-step cost/memory vs cache length |
 
 pub mod ablation;
+pub mod decode;
 pub mod fifo_sweep;
 pub mod numerics;
 pub mod scaling;
@@ -25,7 +27,7 @@ use crate::Result;
 /// subcommand); prints each table to stdout.
 pub fn run_all(n: usize, d: usize) -> Result<()> {
     table1::run().print();
-    for v in crate::attention::Variant::ALL {
+    for v in crate::attention::Variant::PAPER {
         let r = fifo_sweep::run(v, n, d)?;
         r.table().print();
         println!();
@@ -35,5 +37,7 @@ pub fn run_all(n: usize, d: usize) -> Result<()> {
     numerics::run(n, d)?.table().print();
     println!();
     ablation::run(n.min(32), d, &[1, 2, 4])?.table().print();
+    println!();
+    decode::run(&[4, 16, 64], d)?.table().print();
     Ok(())
 }

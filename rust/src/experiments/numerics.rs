@@ -1,12 +1,14 @@
-//! Numeric validation: every dataflow variant vs the f64 reference.
+//! Numeric validation: every dataflow variant vs its f64 oracle.
 //!
-//! The paper's implementations must compute *the same function*; this
-//! driver quantifies the agreement (max |Δ| against the f64 oracle) on a
-//! shared random workload, including the adversarial large-magnitude
-//! case where the unscaled naive softmax overflows — demonstrating why
-//! §4 adopts softmax-with-scaling.
+//! Each implementation must compute *the same function* as its oracle
+//! — full attention for the prefill variants, causal attention for the
+//! masked ones, the final causal row for the decode step
+//! ([`Variant::oracle_f64`]). This driver quantifies the agreement
+//! (max |Δ|) on a shared random workload, including the adversarial
+//! large-magnitude case where the unscaled naive softmax overflows —
+//! demonstrating why §4 adopts softmax-with-scaling.
 
-use crate::attention::reference::{max_abs_diff, sdpa_f64};
+use crate::attention::reference::max_abs_diff;
 use crate::attention::workload::Workload;
 use crate::attention::{FifoPlan, Variant};
 use crate::report::Table;
@@ -63,8 +65,8 @@ pub fn run(n: usize, d: usize) -> Result<NumericsResult> {
     let adversarial = Workload::large_magnitude(n.min(16), d, 0xACC, 200.0);
     let mut points = Vec::new();
     for (label, w) in [("normal", &normal), ("adversarial", &adversarial)] {
-        let gold = sdpa_f64(w);
         for variant in Variant::ALL {
+            let gold = variant.oracle_f64(w);
             let mut built = variant.build(w, &FifoPlan::paper(w.n))?;
             let (got, _) = built.run()?;
             points.push(NumericsPoint {
@@ -95,7 +97,17 @@ mod tests {
         let r = run(16, 8).unwrap();
         // The unscaled softmax overflows f32 → NaN against the oracle.
         assert!(r.err(Variant::Naive, "adversarial").unwrap().is_nan());
-        for v in [Variant::Scaled, Variant::Reordered, Variant::MemoryFree] {
+        // Every scaling-based variant — prefill, causal, decode — stays
+        // finite and accurate on the same inputs.
+        for v in [
+            Variant::Scaled,
+            Variant::Reordered,
+            Variant::MemoryFree,
+            Variant::CausalScaled,
+            Variant::CausalReordered,
+            Variant::CausalMemoryFree,
+            Variant::Decode,
+        ] {
             let err = r.err(v, "adversarial").unwrap();
             assert!(err.is_finite() && err < 1e-3, "{v}: {err}");
         }

@@ -1,10 +1,12 @@
 //! Intermediate-memory growth study: O(N) vs O(1).
 //!
-//! Runs every variant in its paper configuration across a range of
-//! sequence lengths and reports peak intermediate memory (total words
-//! buffered in FIFOs at the high-water mark) plus total cycles. The
-//! growth classification reproduces the paper's §3/§4 asymptotic claims;
-//! cycles ≈ N² + fill confirms full throughput at every size.
+//! Runs the paper's four prefill variants in their paper configuration
+//! across a range of sequence lengths and reports peak intermediate
+//! memory (total words buffered in FIFOs at the high-water mark) plus
+//! total cycles. The growth classification reproduces the paper's
+//! §3/§4 asymptotic claims; cycles ≈ N² + fill confirms full
+//! throughput at every size. (The decode-side study lives in
+//! [`super::decode`].)
 
 use crate::attention::workload::Workload;
 use crate::attention::{FifoPlan, Variant};
@@ -90,7 +92,7 @@ impl ScalingResult {
 /// Run the study over `sizes` (ascending recommended).
 pub fn run(sizes: &[usize], d: usize) -> Result<ScalingResult> {
     let mut series = Vec::new();
-    for variant in Variant::ALL {
+    for variant in Variant::PAPER {
         let mut points = Vec::new();
         for &n in sizes {
             let w = Workload::random(n, d, 0x5CA1E);

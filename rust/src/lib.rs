@@ -16,8 +16,9 @@
 //!   the paper used.
 //! * [`attention`] — the four attention dataflow graphs the paper studies
 //!   (Figure 2 naive, Figure 3a scaled softmax, Figure 3b reordered
-//!   division, Figure 3c memory-free), plus a golden reference SDPA and
-//!   deterministic workload generators.
+//!   division, Figure 3c memory-free), their causal (masked) twins and
+//!   the autoregressive decode mapping, plus golden reference SDPAs
+//!   (full, masked, online) and deterministic workload generators.
 //! * [`experiments`] — drivers that regenerate every table and figure in
 //!   the paper (see `DESIGN.md` §5 for the experiment index).
 //! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas

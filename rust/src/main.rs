@@ -13,16 +13,25 @@ use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig};
 use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, Tensor};
 use sdpa_dataflow::{attention::workload::Workload, experiments, report};
 
-const USAGE: &str = "usage: sdpa-dataflow <simulate|experiments|validate|serve> [options]
-  simulate    --variant <naive|scaled|reordered|memfree> --n N --d D [--long-depth K] [--unbounded] [--inferred]
-  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation] [--n N] [--d D]
+/// Usage text, derived from `Variant::ALL` so the variant list can
+/// never fall out of sync with the enum (the PR-1 rule, extended to
+/// the causal/decode family).
+fn usage() -> String {
+    format!(
+        "usage: sdpa-dataflow <simulate|experiments|validate|serve|help> [options]
+  simulate    --variant <{variants}>
+              --n N --d D [--long-depth K] [--unbounded] [--inferred]
+  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode] [--n N] [--d D]
   validate    [--artifacts DIR]
-  serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]";
+  serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]",
+        variants = Variant::usage_list()
+    )
+}
 
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e}");
-        eprintln!("{USAGE}");
+        eprintln!("{}", usage());
         std::process::exit(1);
     }
 }
@@ -34,6 +43,10 @@ fn run() -> sdpa_dataflow::Result<()> {
         Some("experiments") => run_experiments(&args),
         Some("validate") => validate(&args),
         Some("serve") => serve(&args),
+        Some("help") => {
+            println!("{}", usage());
+            Ok(())
+        }
         _ => Err(sdpa_dataflow::Error::Usage("missing subcommand".into())),
     }
 }
@@ -84,9 +97,10 @@ fn simulate(args: &Args) -> sdpa_dataflow::Result<()> {
     ]);
     t.row(&["node fires/cycle".into(), format!("{:.2}", m.fires_per_cycle())]);
     t.print();
-    // Numeric check against the f64 oracle.
+    // Numeric check against this variant's f64 oracle (full attention,
+    // causal attention, or the final causal row for decode).
     if summary.outcome == sdpa_dataflow::sim::RunOutcome::Completed {
-        let gold = sdpa_dataflow::attention::reference::sdpa_f64(&w);
+        let gold = variant.oracle_f64(&w);
         let got = built.out.rows();
         let err = sdpa_dataflow::attention::reference::max_abs_diff(&got, &gold);
         println!("max |Δ| vs f64 reference: {err:.3e}");
@@ -116,6 +130,12 @@ fn run_experiments(args: &Args) -> sdpa_dataflow::Result<()> {
         "scaling" => experiments::scaling::run(&[16, 32, 64, 128], d)?.table().print(),
         "numerics" => experiments::numerics::run(n, d)?.table().print(),
         "ablation" => experiments::ablation::run(n, d, &[1, 2, 4, 8])?.table().print(),
+        "decode" => {
+            let mut lens = vec![4usize, 16, 64, n.max(1)];
+            lens.sort_unstable();
+            lens.dedup();
+            experiments::decode::run(&lens, d)?.table().print()
+        }
         other => {
             return Err(sdpa_dataflow::Error::Usage(format!(
                 "unknown experiment '{other}'"

@@ -79,6 +79,29 @@ pub enum SchedulerMode {
     EventDriven,
 }
 
+impl SchedulerMode {
+    /// Parse a mode name (`"dense"`, `"event"` / `"event-driven"`).
+    pub fn parse(s: &str) -> Option<SchedulerMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dense" => Some(SchedulerMode::Dense),
+            "event" | "eventdriven" | "event-driven" => Some(SchedulerMode::EventDriven),
+            _ => None,
+        }
+    }
+
+    /// Default mode for newly built engines: the `SDPA_SCHED`
+    /// environment variable when set to a recognised name — the CI test
+    /// matrix runs the whole suite once under each scheduler this way —
+    /// otherwise the built-in default. Tests that *compare* schedulers
+    /// set modes explicitly and are unaffected.
+    pub fn default_from_env() -> SchedulerMode {
+        std::env::var("SDPA_SCHED")
+            .ok()
+            .and_then(|s| SchedulerMode::parse(&s))
+            .unwrap_or_default()
+    }
+}
+
 /// Scheduler work counters for one run: how many node ticks actually
 /// executed vs. how many the dense loop would have executed over the
 /// same simulated span.
@@ -204,7 +227,7 @@ impl Engine {
             adjacency,
             depths,
             cycle: 0,
-            mode: SchedulerMode::default(),
+            mode: SchedulerMode::default_from_env(),
         }
     }
 
@@ -806,10 +829,24 @@ mod tests {
         d.set_scheduler_mode(SchedulerMode::Dense);
         let sd = d.run_outcome(10_000);
         let (mut e, _) = pipeline(100);
-        assert_eq!(e.scheduler_mode(), SchedulerMode::EventDriven);
+        e.set_scheduler_mode(SchedulerMode::EventDriven);
         let se = e.run_outcome(10_000);
         assert_same_run(&sd, &se, "pipeline(100)");
         assert!(se.sched.node_ticks_executed <= sd.sched.node_ticks_executed);
+    }
+
+    #[test]
+    fn scheduler_mode_parses_stable_names() {
+        assert_eq!(SchedulerMode::parse("dense"), Some(SchedulerMode::Dense));
+        assert_eq!(SchedulerMode::parse("event"), Some(SchedulerMode::EventDriven));
+        assert_eq!(
+            SchedulerMode::parse("Event-Driven"),
+            Some(SchedulerMode::EventDriven)
+        );
+        assert_eq!(SchedulerMode::parse("bogus"), None);
+        // Unknown env values fall back to the built-in default, so a
+        // typo'd SDPA_SCHED cannot silently change semantics.
+        assert_eq!(SchedulerMode::default(), SchedulerMode::EventDriven);
     }
 
     #[test]
@@ -818,6 +855,7 @@ mod tests {
         d.set_scheduler_mode(SchedulerMode::Dense);
         let sd = d.run_outcome(100_000);
         let mut e = diamond(2);
+        e.set_scheduler_mode(SchedulerMode::EventDriven);
         let se = e.run_outcome(100_000);
         assert_same_run(&sd, &se, "diamond(2) deadlock");
         assert!(matches!(se.outcome, RunOutcome::Deadlock { .. }));
@@ -829,6 +867,7 @@ mod tests {
         d.set_scheduler_mode(SchedulerMode::Dense);
         let sd = d.run_outcome(10);
         let (mut e, _) = pipeline(1000);
+        e.set_scheduler_mode(SchedulerMode::EventDriven);
         let se = e.run_outcome(10);
         assert_same_run(&sd, &se, "pipeline budget");
         assert_eq!(se.outcome, RunOutcome::BudgetExceeded);
@@ -852,6 +891,7 @@ mod tests {
         d.set_scheduler_mode(SchedulerMode::Dense);
         let sd = d.run_outcome(10_000);
         let (mut e, h) = build();
+        e.set_scheduler_mode(SchedulerMode::EventDriven);
         let se = e.run_outcome(10_000);
         assert_same_run(&sd, &se, "latency-200 pipeline");
         assert_eq!(h.len(), 1);
@@ -911,6 +951,7 @@ mod tests {
         d.set_scheduler_mode(SchedulerMode::Dense);
         let sd = d.run_outcome(100_000);
         let mut e = diamond(2);
+        e.set_scheduler_mode(SchedulerMode::EventDriven);
         let se = e.run_outcome(100_000);
         for ((dn, ds), (en, es)) in sd.channel_stats.iter().zip(&se.channel_stats) {
             assert_eq!(dn, en);

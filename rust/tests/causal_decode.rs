@@ -1,0 +1,314 @@
+//! Differential conformance suite for causal masking and autoregressive
+//! decode.
+//!
+//! Three independent implementations of causal attention must agree:
+//!
+//! 1. the **decode-step chain** (one step graph per token, K/V cache
+//!    replayed — `attention::decode`),
+//! 2. the **masked streaming prefill graphs** (in-stream −∞ masking —
+//!    `attention::causal`),
+//! 3. the **sequential references** (`sdpa_online_f32_masked` /
+//!    `sdpa_f64_masked`).
+//!
+//! The grid covers N ∈ {1, 4, 16, 64}, d ∈ {4, 16}, both scheduler
+//! modes, and ragged batch lengths. On top of the differential checks,
+//! this file holds the acceptance assertions (O(1) decode FIFO
+//! occupancy proven by the depth report, decode ≤ 1e-5 vs the causal
+//! reference at N = 64) and the `Engine::reset` replay property that
+//! guards the stateful decode path against hidden engine state.
+
+use sdpa_dataflow::attention::decode::{self, DecodeKind, DecodeSession};
+use sdpa_dataflow::attention::reference::{
+    assert_close, max_abs_diff, sdpa_f64_masked, sdpa_online_f32_masked,
+};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{causal, DepthPolicy, Mask, Variant};
+use sdpa_dataflow::prng::{for_each_case, SplitMix64};
+use sdpa_dataflow::sim::{Capacity, RunOutcome, SchedulerMode};
+
+const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
+
+/// Run a full decode session over `w` under an explicit scheduler mode.
+fn chain(kind: DecodeKind, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
+    let mut session = DecodeSession::new(kind, w.d);
+    session.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        session
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+    }
+    session.outputs().clone()
+}
+
+/// Run the masked memory-free prefill graph under a scheduler mode.
+fn masked_prefill(base: Variant, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
+    let mut built = causal::build_masked(base, w, &Mask::Causal, DepthPolicy::Inferred).unwrap();
+    built.engine.set_scheduler_mode(mode);
+    let (out, summary) = built.run().unwrap();
+    assert_eq!(summary.outcome, RunOutcome::Completed);
+    out
+}
+
+#[test]
+fn decode_chain_equals_causal_prefill_equals_reference_over_the_grid() {
+    for n in [1usize, 4, 16, 64] {
+        for d in [4usize, 16] {
+            let w = Workload::random(n, d, (n * 100 + d) as u64);
+            let online = sdpa_online_f32_masked(&w, &Mask::Causal);
+            let gold = sdpa_f64_masked(&w, &Mask::Causal);
+            for mode in MODES {
+                let label = format!("N={n} d={d} {mode:?}");
+                let chain_out = chain(DecodeKind::MemoryFree, &w, mode);
+                // Decode chain vs the structure-matched causal oracle:
+                // same f32 ops in the same order — essentially exact,
+                // and comfortably inside the 1e-5 acceptance bar.
+                assert_close(&chain_out, &online, 1e-5, &format!("chain vs online, {label}"));
+                assert!(
+                    max_abs_diff(&chain_out, &online) <= 1e-6,
+                    "{label}: chain drifted from the step-for-step oracle"
+                );
+                // Decode chain vs the masked streaming prefill graph.
+                let prefill = masked_prefill(Variant::MemoryFree, &w, mode);
+                assert_close(&chain_out, &prefill, 1e-5, &format!("chain vs prefill, {label}"));
+                // Both vs the f64 accuracy oracle.
+                assert_close(&chain_out, &gold, 1e-4, &format!("chain vs f64, {label}"));
+                assert_close(&prefill, &gold, 1e-4, &format!("prefill vs f64, {label}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn buffered_decode_joins_the_agreement_at_moderate_sizes() {
+    // The O(len) contrast mapping computes the same function.
+    for n in [1usize, 4, 16] {
+        let w = Workload::random(n, 4, 0xB0F + n as u64);
+        let gold = sdpa_f64_masked(&w, &Mask::Causal);
+        for mode in MODES {
+            let out = chain(DecodeKind::Buffered, &w, mode);
+            assert_close(&out, &gold, 1e-4, &format!("buffered chain N={n} {mode:?}"));
+        }
+    }
+}
+
+#[test]
+fn ragged_batch_of_sessions_matches_truncated_causal_references() {
+    // A ragged batch: sessions of different lengths decoded side by
+    // side (interleaved), each checked against the causal reference of
+    // its own truncated workload — and against the ragged-masked
+    // prefill graph of the padded workload on the valid rows.
+    let n = 16;
+    let d = 4;
+    let w = Workload::random(n, d, 0x4A66);
+    let lens = [1usize, 3, 8, 16];
+    let mut sessions: Vec<DecodeSession> = lens
+        .iter()
+        .map(|_| DecodeSession::new(DecodeKind::MemoryFree, d))
+        .collect();
+    for t in 0..n {
+        for (s, &len) in sessions.iter_mut().zip(&lens) {
+            if t < len {
+                s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                    .unwrap();
+            }
+        }
+    }
+    for (s, &len) in sessions.iter().zip(&lens) {
+        let trunc = w.prefix(len);
+        assert_close(
+            s.outputs(),
+            &sdpa_online_f32_masked(&trunc, &Mask::Causal),
+            1e-6,
+            &format!("ragged session len={len}"),
+        );
+        // The ragged-masked prefill graph agrees on the valid rows.
+        let mut built =
+            causal::build_masked(Variant::MemoryFree, &w, &Mask::ragged(len), DepthPolicy::Inferred)
+                .unwrap();
+        let (padded, _) = built.run().unwrap();
+        let valid: Vec<Vec<f32>> = padded[..len].to_vec();
+        assert_close(
+            s.outputs(),
+            &valid,
+            1e-5,
+            &format!("ragged prefill valid rows len={len}"),
+        );
+    }
+}
+
+#[test]
+fn masked_prefill_variants_agree_pairwise_on_the_grid() {
+    // All four masked streaming graphs compute causal attention.
+    for n in [4usize, 16] {
+        let w = Workload::random(n, 8, 0xA9C + n as u64);
+        let gold = sdpa_f64_masked(&w, &Mask::Causal);
+        for base in Variant::PAPER {
+            for mode in MODES {
+                let out = masked_prefill(base, &w, mode);
+                assert_close(
+                    &out,
+                    &gold,
+                    1e-4,
+                    &format!("masked {base} N={n} {mode:?}"),
+                );
+            }
+        }
+    }
+}
+
+// ---- acceptance: O(1) decode memory, proven twice ------------------
+
+#[test]
+fn memfree_decode_memory_is_o1_in_the_depth_report_and_at_runtime() {
+    // Compile-time: every FIFO of the memory-free decode step is depth
+    // 2 regardless of the cache length. Runtime: peak occupancy ≤ 2.
+    let mut peaks = Vec::new();
+    for len in [4usize, 16, 64, 128] {
+        let w = Workload::random(len, 8, 0x01AE);
+        let mut built = decode::build_step(
+            DecodeKind::MemoryFree,
+            &w.q[len - 1],
+            &w.k,
+            &w.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "len={len}: '{}' flagged long", c.name);
+            assert_eq!(
+                c.capacity,
+                Capacity::Bounded(2),
+                "len={len}: '{}' not depth-2",
+                c.name
+            );
+        }
+        let (_, summary) = built.run().unwrap();
+        let peak = summary
+            .channel_stats
+            .iter()
+            .map(|(_, st)| st.peak_occupancy_elems)
+            .max()
+            .unwrap();
+        assert!(peak <= 2, "len={len}: peak {peak} elements");
+        peaks.push(peak);
+    }
+    // Independence of N, stated directly: growing the cache 32× never
+    // pushes the peak past the constant bound.
+    let max_peak = peaks.iter().copied().max().unwrap();
+    assert!(max_peak <= 2, "peaks {peaks:?} grew with cache length");
+}
+
+#[test]
+fn buffered_decode_pays_the_causal_aware_bound_instead() {
+    for len in [4usize, 16, 64] {
+        let w = Workload::random(len, 4, 0x01AF);
+        let built = decode::build_step(
+            DecodeKind::Buffered,
+            &w.q[len - 1],
+            &w.k,
+            &w.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        let bypass = built
+            .engine
+            .depth_report()
+            .iter()
+            .find(|c| c.name == "e_bypass")
+            .expect("buffered step has a bypass")
+            .clone();
+        assert!(bypass.is_long);
+        assert_eq!(bypass.inferred, decode::step_long_fifo_bound(DecodeKind::Buffered, len));
+        assert_eq!(bypass.inferred, causal::long_fifo_bound(Variant::Naive, len));
+    }
+}
+
+// ---- Engine::reset replay: no hidden state on the decode path ------
+
+#[test]
+fn property_decode_step_reset_replay_is_bit_identical() {
+    // A decode step graph must be a pure function of its configuration:
+    // reset + re-run must reproduce cycles, fire counts, channel stats,
+    // and output rows bit for bit, and match a freshly built engine.
+    for_each_case(0x5EED5, 12, |case, rng: &mut SplitMix64| {
+        let len = 1 + rng.below(24) as usize;
+        let d = 1 + rng.below(8) as usize;
+        let kind = *rng.choose(&DecodeKind::ALL);
+        let mode = *rng.choose(&MODES);
+        let w = Workload::random(len, d, rng.next_u64());
+        let build = || {
+            let mut b = decode::build_step(
+                kind,
+                &w.q[len - 1],
+                &w.k,
+                &w.v,
+                DepthPolicy::Inferred,
+            )
+            .unwrap();
+            b.engine.set_scheduler_mode(mode);
+            b
+        };
+        let mut first = build();
+        let (rows1, s1) = first.run().unwrap();
+        first.engine.reset();
+        let (rows2, s2) = first.run().unwrap();
+        let mut fresh = build();
+        let (rows3, s3) = fresh.run().unwrap();
+        let label = format!("case {case}: {kind} len={len} d={d} {mode:?}");
+        assert_eq!(rows1, rows2, "{label}: replay rows");
+        assert_eq!(rows1, rows3, "{label}: fresh rows");
+        assert_eq!(s1.cycles, s2.cycles, "{label}: replay cycles");
+        assert_eq!(s1.cycles, s3.cycles, "{label}: fresh cycles");
+        assert_eq!(s1.node_fires, s2.node_fires, "{label}: replay fires");
+        assert_eq!(s1.node_fires, s3.node_fires, "{label}: fresh fires");
+        assert_eq!(s1.channel_stats, s2.channel_stats, "{label}: replay stats");
+        assert_eq!(s1.channel_stats, s3.channel_stats, "{label}: fresh stats");
+    });
+}
+
+#[test]
+fn property_session_replay_is_bit_identical() {
+    // Whole-session determinism: decoding the same token stream twice
+    // (fresh sessions) produces bitwise-identical transcripts — the
+    // cross-step state is exactly the K/V cache, nothing hidden.
+    for_each_case(0x5EED6, 6, |case, rng: &mut SplitMix64| {
+        let n = 1 + rng.below(10) as usize;
+        let d = 1 + rng.below(6) as usize;
+        let kind = *rng.choose(&DecodeKind::ALL);
+        let w = Workload::random(n, d, rng.next_u64());
+        let mut a = DecodeSession::new(kind, d);
+        let mut b = DecodeSession::new(kind, d);
+        for t in 0..n {
+            let ra = a
+                .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            let rb = b
+                .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            assert_eq!(ra.row, rb.row, "case {case}: step {t}");
+            assert_eq!(ra.summary.cycles, rb.summary.cycles, "case {case}: step {t}");
+        }
+        assert_eq!(a.outputs(), b.outputs(), "case {case}: transcripts");
+    });
+}
+
+#[test]
+fn masked_prefill_reset_replay_is_bit_identical() {
+    // Regression for the pre-refactor bug: the causal mask lived in a
+    // counting Map whose captured counter survived Engine::reset, so a
+    // replay masked the wrong positions. The mask now rides a stateless
+    // source; replays must be exact for every variant and mask.
+    for base in Variant::PAPER {
+        for mask in [Mask::Causal, Mask::ragged(5)] {
+            let w = Workload::random(8, 4, 0x9E9);
+            let mut built =
+                causal::build_masked(base, &w, &mask, DepthPolicy::Inferred).unwrap();
+            let (rows1, s1) = built.run().unwrap();
+            built.engine.reset();
+            let (rows2, s2) = built.run().unwrap();
+            assert_eq!(rows1, rows2, "{base} {}: replay rows", mask.name());
+            assert_eq!(s1.cycles, s2.cycles, "{base} {}", mask.name());
+            assert_eq!(s1.node_fires, s2.node_fires, "{base} {}", mask.name());
+        }
+    }
+}

@@ -81,7 +81,10 @@ fn inferred_builds_match_hand_planned_throughput() {
                 "{variant} N={n}: inferred build not at full throughput"
             );
             // II = 1 steady state: one output row every N cycles.
-            if n >= 16 {
+            // (The decode step emits a single row — no gaps to measure;
+            // the causal variants keep the full-prefill cadence because
+            // masked slots still stream.)
+            if n >= 16 && !variant.is_decode() {
                 let gaps = inferred.out.arrival_gaps(8).unwrap();
                 assert_eq!(gaps, (n as u64, n as u64), "{variant} N={n}");
             }

@@ -7,24 +7,29 @@
 //! Coverage: randomized linear pipelines (latencies, capacities, vector
 //! elements), randomized reconvergent diamonds (the Figure-2 shape,
 //! including undersized-bypass deadlocks), imbalanced independent
-//! joins, scan/repeat/reduce chains, all four attention variants plus
-//! multihead at N ∈ {4, 16, 64}, and tiny budgets for the
-//! budget-exceeded path.
+//! joins, scan/repeat/reduce chains, all nine attention variants
+//! (prefill, causal, decode) plus multihead at N ∈ {4, 16, 64}, masked
+//! ragged streams, decode-step graphs across cache lengths, and tiny
+//! budgets for the budget-exceeded path.
 
+use sdpa_dataflow::attention::decode::{self, DecodeKind};
 use sdpa_dataflow::attention::multihead::build_memfree_heads;
 use sdpa_dataflow::attention::workload::Workload;
-use sdpa_dataflow::attention::{cycle_budget, FifoPlan, Variant};
+use sdpa_dataflow::attention::{causal, cycle_budget, DepthPolicy, FifoPlan, Mask, Variant};
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
 use sdpa_dataflow::sim::{
     Capacity, Elem, Engine, GraphBuilder, RunOutcome, RunSummary, SchedulerMode,
 };
 
 fn run_both(mut mk: impl FnMut() -> Engine, budget: u64) -> (RunSummary, RunSummary) {
+    // Modes are pinned explicitly: the engine default is env-selected
+    // (SDPA_SCHED) so the CI matrix can run the whole suite per mode,
+    // but a differential test must always compare dense vs event.
     let mut dense = mk();
     dense.set_scheduler_mode(SchedulerMode::Dense);
     let sd = dense.run_outcome(budget);
-    let mut event = mk(); // EventDriven is the default mode
-    assert_eq!(event.scheduler_mode(), SchedulerMode::EventDriven);
+    let mut event = mk();
+    event.set_scheduler_mode(SchedulerMode::EventDriven);
     let se = event.run_outcome(budget);
     (sd, se)
 }
@@ -332,5 +337,99 @@ fn multihead_cycle_exact_across_modes() {
         );
         assert_parity(&sd, &se, &format!("multihead N={n}"));
         assert_eq!(se.outcome, RunOutcome::Completed, "multihead N={n}");
+    }
+}
+
+// ---- causal (masked, bubble-heavy) + decode graphs -----------------
+
+#[test]
+fn property_masked_ragged_streams_cycle_exact() {
+    // Masked streams carry long runs of −∞/zero elements — firing
+    // patterns the cycle-jump path never saw before this suite.
+    for_each_case(0xCA7, 12, |case, rng| {
+        let n = 2 + rng.below(14) as usize;
+        let d = 1 + rng.below(6) as usize;
+        let base = *rng.choose(&Variant::PAPER);
+        let mask = if rng.below(2) == 0 {
+            Mask::Causal
+        } else {
+            Mask::ragged(1 + rng.below(n as u64) as usize)
+        };
+        let w = Workload::random(n, d, rng.next_u64());
+        let budget = random_budget(rng);
+        let (sd, se) = run_both(
+            || {
+                causal::build_masked(base, &w, &mask, DepthPolicy::Paper(n))
+                    .unwrap()
+                    .engine
+            },
+            budget,
+        );
+        assert_parity(
+            &sd,
+            &se,
+            &format!("masked case {case}: {base} {} N={n} (budget {budget})", mask.name()),
+        );
+    });
+}
+
+#[test]
+fn undersized_causal_bypass_deadlock_parity() {
+    let n = 16;
+    let w = Workload::random(n, 4, 0xCA8);
+    let (sd, se) = run_both(
+        || {
+            causal::build_masked(
+                Variant::Naive,
+                &w,
+                &Mask::Causal,
+                DepthPolicy::Explicit(FifoPlan::with_long_depth(4)),
+            )
+            .unwrap()
+            .engine
+        },
+        cycle_budget(n),
+    );
+    assert_parity(&sd, &se, "causal naive undersized bypass");
+    assert!(matches!(se.outcome, RunOutcome::Deadlock { .. }));
+}
+
+#[test]
+fn decode_steps_cycle_exact_across_modes() {
+    for kind in DecodeKind::ALL {
+        for len in [1usize, 4, 16, 64] {
+            let w = Workload::random(len, 4, 0xDEC + len as u64);
+            let (sd, se) = run_both(
+                || {
+                    decode::build_step(kind, &w.q[len - 1], &w.k, &w.v, DepthPolicy::Inferred)
+                        .unwrap()
+                        .engine
+                },
+                cycle_budget(len),
+            );
+            assert_parity(&sd, &se, &format!("decode {kind} len={len}"));
+            assert_eq!(se.outcome, RunOutcome::Completed, "decode {kind} len={len}");
+        }
+    }
+}
+
+#[test]
+fn decode_chains_agree_across_modes() {
+    // A full session, one chain per scheduler: identical rows bitwise.
+    let w = Workload::random(12, 4, 0xDEC9);
+    let mut dense = decode::DecodeSession::new(DecodeKind::MemoryFree, 4);
+    dense.set_scheduler_mode(SchedulerMode::Dense);
+    let mut event = decode::DecodeSession::new(DecodeKind::MemoryFree, 4);
+    event.set_scheduler_mode(SchedulerMode::EventDriven);
+    for t in 0..w.n {
+        let a = dense
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        let b = event
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        assert_eq!(a.row, b.row, "step {t} rows");
+        assert_eq!(a.summary.cycles, b.summary.cycles, "step {t} cycles");
+        assert_eq!(a.summary.node_fires, b.summary.node_fires, "step {t} fires");
     }
 }
