@@ -1,0 +1,156 @@
+//! Serving lane-pool throughput: aggregate decode steps/sec vs lane
+//! count, at fixed per-step (wave) latency.
+//!
+//! Wall-clock twin of `experiments/serving.rs`: for each lane count it
+//! builds one continuous-batching wave — `L` memory-free decode steps,
+//! one lane scope each, sharing one engine — and measures engine reset +
+//! full run. Emits `BENCH_serving.json` for CI artifact upload alongside
+//! `BENCH_engine.json` / `BENCH_decode.json`. The spatial-independence
+//! claim shows up twice: simulated `wave_cycles` stays ≈ flat as lanes
+//! grow (fixed per-step latency), while `steps_per_kilocycle` — the
+//! hardware-facing aggregate-throughput figure — scales ≈ linearly.
+//!
+//! ```bash
+//! cargo bench --bench serving_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::decode::DecodeKind;
+use sdpa_dataflow::attention::multihead::{build_decode_lanes, LaneStep};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::DepthPolicy;
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::sim::{RunSummary, SchedulerMode};
+
+struct Row {
+    lanes: usize,
+    len: usize,
+    mode: SchedulerMode,
+    mean_ns: f64,
+    summary: RunSummary,
+}
+
+impl Row {
+    /// Aggregate decode steps per wall-clock second (lanes per wave /
+    /// wave wall time).
+    fn steps_per_sec(&self) -> f64 {
+        self.lanes as f64 / (self.mean_ns / 1e9)
+    }
+
+    /// Aggregate decode steps per 1000 simulated cycles.
+    fn steps_per_kilocycle(&self) -> f64 {
+        self.lanes as f64 * 1000.0 / self.summary.cycles as f64
+    }
+
+    fn json(&self) -> String {
+        let peak_elems = self
+            .summary
+            .channel_stats
+            .iter()
+            .map(|(_, st)| st.peak_occupancy_elems)
+            .max()
+            .unwrap_or(0);
+        format!(
+            "{{\"lanes\":{},\"len\":{},\"mode\":\"{:?}\",\"mean_ns\":{:.1},\
+             \"wave_cycles\":{},\"steps_per_sec\":{:.1},\
+             \"steps_per_kilocycle\":{:.3},\"peak_elems\":{},\
+             \"ticks_executed\":{},\"ticks_skipped\":{}}}",
+            self.lanes,
+            self.len,
+            self.mode,
+            self.mean_ns,
+            self.summary.cycles,
+            self.steps_per_sec(),
+            self.steps_per_kilocycle(),
+            peak_elems,
+            self.summary.sched.node_ticks_executed,
+            self.summary.sched.node_ticks_skipped,
+        )
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let lane_counts: &[usize] = if quick_requested() {
+        &[1, 4]
+    } else {
+        &[1, 2, 4, 8]
+    };
+    let len = if quick_requested() { 32 } else { 64 };
+    let d = 16;
+
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+        for &lanes in lane_counts {
+            let ws: Vec<Workload> = (0..lanes)
+                .map(|l| Workload::random(len, d, 0x5E21 + l as u64))
+                .collect();
+            let steps: Vec<LaneStep<'_>> = ws
+                .iter()
+                .enumerate()
+                .map(|(l, w)| LaneStep {
+                    kind: DecodeKind::MemoryFree,
+                    lane: l,
+                    q: &w.q[len - 1],
+                    keys: &w.k,
+                    values: &w.v,
+                })
+                .collect();
+            let mut pool = build_decode_lanes(&steps, DepthPolicy::Inferred).unwrap();
+            pool.engine.set_scheduler_mode(mode);
+            let mut last: Option<RunSummary> = None;
+            let stats = b.bench(
+                &format!("serving/wave_lanes{lanes}_len{len}_{mode:?}"),
+                || {
+                    pool.engine.reset();
+                    let (rows, summary) = pool.run().expect("wave completes");
+                    black_box(rows.len());
+                    last = Some(summary);
+                },
+            );
+            rows.push(Row {
+                lanes,
+                len,
+                mode,
+                mean_ns: stats.mean_ns,
+                summary: last.expect("benched at least once"),
+            });
+        }
+    }
+
+    // Scaling summary per mode: fixed per-step latency, growing
+    // aggregate throughput.
+    println!();
+    for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+        let of = |lanes: usize| {
+            rows.iter()
+                .find(|r| r.mode == mode && r.lanes == lanes)
+                .expect("measured")
+        };
+        let base = of(lane_counts[0]);
+        for &lanes in lane_counts {
+            let r = of(lanes);
+            println!(
+                "scaling {mode:?} lanes={lanes:<2} wave {:>6} cycles ({:+.1}% vs {} lane) \
+                 {:>10.1} steps/s  {:.2} steps/kcyc",
+                r.summary.cycles,
+                100.0 * (r.summary.cycles as f64 / base.summary.cycles as f64 - 1.0),
+                base.lanes,
+                r.steps_per_sec(),
+                r.steps_per_kilocycle(),
+            );
+        }
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("\nwrote BENCH_serving.json ({} rows)", rows.len());
+}

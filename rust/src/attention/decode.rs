@@ -87,6 +87,33 @@ pub fn build_step(
 ) -> Result<BuiltAttention> {
     let len = keys.len();
     let d = q.len();
+    let mut g = GraphBuilder::new();
+    let mut sc = g.root();
+    let out = build_step_into(&mut sc, kind, q, keys, values)?;
+    Ok(BuiltAttention {
+        engine: g.compile(policy)?,
+        out,
+        n: len,
+        d,
+    })
+}
+
+/// The decode-step pipeline, buildable into any scope — the composition
+/// point for the multi-lane serving engines: one scheduling iteration of
+/// the continuous-batching server instantiates one of these per active
+/// session inside its own lane scope (see
+/// [`super::multihead::build_decode_lanes`]), exactly the way attention
+/// heads compose spatially. Inputs are validated the same way
+/// [`build_step`] validates them.
+pub fn build_step_into(
+    sc: &mut Scope<'_>,
+    kind: DecodeKind,
+    q: &[f32],
+    keys: &[Vec<f32>],
+    values: &[Vec<f32>],
+) -> Result<SinkHandle> {
+    let len = keys.len();
+    let d = q.len();
     if len == 0 {
         return Err(Error::Graph(
             "decode step needs at least one cached K/V row".into(),
@@ -109,28 +136,6 @@ pub fn build_step(
             d
         )));
     }
-    let mut g = GraphBuilder::new();
-    let mut sc = g.root();
-    let out = build_step_into(&mut sc, kind, q, keys, values)?;
-    Ok(BuiltAttention {
-        engine: g.compile(policy)?,
-        out,
-        n: len,
-        d,
-    })
-}
-
-/// The decode-step pipeline, buildable into any scope (so step graphs
-/// compose into multi-session engines the same way attention heads do).
-fn build_step_into(
-    sc: &mut Scope<'_>,
-    kind: DecodeKind,
-    q: &[f32],
-    keys: &[Vec<f32>],
-    values: &[Vec<f32>],
-) -> Result<SinkHandle> {
-    let len = keys.len();
-    let d = q.len();
     let scale = 1.0 / (d as f32).sqrt();
 
     // One query row, replayed once per cached key; K/V replay from the
@@ -314,21 +319,54 @@ impl DecodeSession {
         &self.outputs
     }
 
-    /// Decode one token: append `(k, v)` to the cache, stream `q`
-    /// against it, return the output row and the step's run summary.
-    pub fn step(&mut self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Result<DecodeStepOutcome> {
-        for (what, row) in [("q", &q), ("k", &k), ("v", &v)] {
-            if row.len() != self.d {
+    /// The cached key rows (one per decoded token).
+    pub fn keys(&self) -> &[Vec<f32>] {
+        &self.keys
+    }
+
+    /// The cached value rows (one per decoded token).
+    pub fn values(&self) -> &[Vec<f32>] {
+        &self.values
+    }
+
+    /// Validate one step's row shapes and append `(k, v)` to the cache —
+    /// the first half of a step. The caller either runs the step graph
+    /// and [`Self::commit_row`]s the result, or [`Self::unstage`]s on
+    /// failure so the cache is left exactly as it was. The serving lane
+    /// pool uses this split to run many sessions' staged steps in one
+    /// engine (see `coordinator::sessions::SessionTable::step_wave`).
+    pub(crate) fn stage(&mut self, q: &[f32], k: Vec<f32>, v: Vec<f32>) -> Result<()> {
+        for (what, len) in [("q", q.len()), ("k", k.len()), ("v", v.len())] {
+            if len != self.d {
                 return Err(Error::Graph(format!(
                     "decode step {}: {what} has dim {}, session expects {}",
                     self.keys.len(),
-                    row.len(),
+                    len,
                     self.d
                 )));
             }
         }
         self.keys.push(k);
         self.values.push(v);
+        Ok(())
+    }
+
+    /// Undo the most recent [`Self::stage`] (a failed step must not
+    /// corrupt the session: a retry sees the pre-step state).
+    pub(crate) fn unstage(&mut self) {
+        self.keys.pop();
+        self.values.pop();
+    }
+
+    /// Record the staged step's output row, completing the step.
+    pub(crate) fn commit_row(&mut self, row: Vec<f32>) {
+        self.outputs.push(row);
+    }
+
+    /// Decode one token: append `(k, v)` to the cache, stream `q`
+    /// against it, return the output row and the step's run summary.
+    pub fn step(&mut self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Result<DecodeStepOutcome> {
+        self.stage(&q, k, v)?;
         let result = build_step(self.kind, &q, &self.keys, &self.values, self.policy)
             .and_then(|mut built| {
                 if let Some(mode) = self.mode {
@@ -342,13 +380,12 @@ impl DecodeSession {
                 // A failed step (e.g. deadlock under an undersized
                 // explicit plan) must not corrupt the session: unwind
                 // the cache so a retry sees the pre-step state.
-                self.keys.pop();
-                self.values.pop();
+                self.unstage();
                 return Err(e);
             }
         };
         let row = rows.into_iter().next().expect("decode step emits one row");
-        self.outputs.push(row.clone());
+        self.commit_row(row.clone());
         Ok(DecodeStepOutcome {
             step: self.keys.len() - 1,
             row,

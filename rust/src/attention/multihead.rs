@@ -1,48 +1,76 @@
-//! Multi-head attention as *spatial* scale-out (extension).
+//! Multi-head / multi-lane attention as *spatial* scale-out.
 //!
 //! A streaming dataflow fabric scales attention throughput by placing
-//! independent head pipelines side by side — the execution model's
-//! answer to a GPU's grid dimension. This module composes `H`
-//! memory-free (Figure 3c) pipelines in one engine by instantiating
-//! [`super::memfree::build_into`] once per [`Scope`](crate::sim::Scope):
-//! each head's nodes and channels are automatically namespaced
-//! (`h{i}/...`), so summaries and deadlock reports stay readable and no
-//! builder code ever concatenates name strings.
+//! independent pipelines side by side — the execution model's answer to
+//! a GPU's grid dimension. Two compositions live here, both built by
+//! instantiating one pipeline per [`Scope`](crate::sim::Scope) so nodes
+//! and channels are automatically namespaced and no builder code ever
+//! concatenates name strings:
 //!
-//! Because the pipelines share no channels, the engine simulates true
-//! spatial parallelism: total cycles stay ≈ N² + fill while *aggregate*
-//! throughput grows to H scores/cycle, and intermediate memory grows
-//! linearly in H but stays O(1) in N — the paper's claim, per head.
+//! * **Prefill heads** ([`build_memfree_heads`]): `H` memory-free
+//!   (Figure 3c) pipelines, one per workload, sharing one engine. Heads
+//!   may have *heterogeneous* shapes — each lane carries its own
+//!   `(n, d)` and the aggregate throughput / cycle budget are computed
+//!   from the actual per-lane workloads (a homogeneity `assert!` here
+//!   used to panic the library on caller input; it is now an `Err`-free
+//!   supported case, which the serving lane pool depends on).
+//! * **Decode lanes** ([`build_decode_lanes`]): one decode *step* per
+//!   active session (arbitrary per-lane cache length and head
+//!   dimension), the engine one scheduling iteration of the
+//!   continuous-batching server runs. Lanes share no channels, so each
+//!   session's step computes bit-identically to the same step run alone
+//!   — the property `tests/continuous_batching.rs` enforces.
+//!
+//! Because pipelines are independent, the engine simulates true spatial
+//! parallelism: total cycles stay ≈ the slowest lane while *aggregate*
+//! throughput grows with the lane count, and intermediate memory grows
+//! linearly in lanes but stays O(1) in sequence length — the paper's
+//! claim, per pipeline.
 
+use super::decode::{build_step_into, DecodeKind};
 use super::reference::Matrix;
 use super::workload::Workload;
 use super::{cycle_budget, memfree, DepthPolicy, FifoPlan};
 use crate::sim::nodes::SinkHandle;
-use crate::sim::{GraphBuilder, RunSummary};
-use crate::Result;
+use crate::sim::{Engine, GraphBuilder, RunSummary};
+use crate::{Error, Result};
 
-/// A built multi-head graph: one engine, `H` independent head pipelines.
+/// A built multi-head graph: one engine, `H` independent head pipelines
+/// (possibly heterogeneous shapes).
 pub struct BuiltMultiHead {
     /// The shared engine.
-    pub engine: crate::sim::Engine,
+    pub engine: Engine,
     /// Per-head output sinks.
     pub heads: Vec<SinkHandle>,
-    /// Sequence length.
-    pub n: usize,
-    /// Head dimension.
-    pub d: usize,
+    /// Per-head `(n, d)` shapes, in head order.
+    pub shapes: Vec<(usize, usize)>,
 }
 
 impl BuiltMultiHead {
+    /// Largest sequence length across heads — the lane that bounds the
+    /// run, since spatial pipelines finish independently.
+    pub fn max_n(&self) -> usize {
+        self.shapes.iter().map(|&(n, _)| n).max().unwrap_or(0)
+    }
+
+    /// Total scores the graph processes (Σ nᵢ² over heads).
+    pub fn total_scores(&self) -> u64 {
+        self.shapes.iter().map(|&(n, _)| (n * n) as u64).sum()
+    }
+
     /// Run to completion, returning per-head outputs and the summary.
+    /// The cycle budget covers the *slowest* lane — budgeting from head
+    /// 0's shape used to starve runs whose later heads were larger.
     pub fn run(&mut self) -> Result<(Vec<Matrix>, RunSummary)> {
-        let summary = self.engine.run(cycle_budget(self.n))?;
+        let summary = self.engine.run(cycle_budget(self.max_n()))?;
         Ok((self.heads.iter().map(SinkHandle::rows).collect(), summary))
     }
 
-    /// Aggregate scores processed per cycle for a completed run.
+    /// Aggregate scores processed per cycle for a completed run,
+    /// computed from the actual per-lane workloads (Σ nᵢ², not
+    /// `H · n₀²` — those differ as soon as lanes do).
     pub fn scores_per_cycle(&self, summary: &RunSummary) -> f64 {
-        (self.heads.len() * self.n * self.n) as f64 / summary.cycles as f64
+        self.total_scores() as f64 / summary.cycles as f64
     }
 }
 
@@ -56,26 +84,136 @@ pub fn build_memfree_heads(
 }
 
 /// Build one memory-free pipeline per workload under a depth policy.
-/// Head `i` lives in scope `h{i}`.
+/// Head `i` lives in scope `h{i}`. Workloads may differ in shape;
+/// empty or degenerate (n = 0 / d = 0) inputs are rejected with an
+/// `Err` — never a panic, these are caller inputs.
 pub fn build_memfree_heads_with_policy(
     workloads: &[Workload],
     policy: DepthPolicy,
 ) -> Result<BuiltMultiHead> {
-    assert!(!workloads.is_empty());
-    let n = workloads[0].n;
-    let d = workloads[0].d;
+    if workloads.is_empty() {
+        return Err(Error::Graph(
+            "multi-head build needs at least one workload".into(),
+        ));
+    }
+    if let Some((h, w)) = workloads
+        .iter()
+        .enumerate()
+        .find(|(_, w)| w.n == 0 || w.d == 0)
+    {
+        return Err(Error::Graph(format!(
+            "head {h}: degenerate workload shape ({}, {})",
+            w.n, w.d
+        )));
+    }
     let mut g = GraphBuilder::new();
     let mut heads = Vec::with_capacity(workloads.len());
     for (h, w) in workloads.iter().enumerate() {
-        assert_eq!((w.n, w.d), (n, d), "heads must share shape");
         let mut scope = g.scope(format!("h{h}"));
         heads.push(memfree::build_into(&mut scope, w)?);
     }
     Ok(BuiltMultiHead {
         engine: g.compile(policy)?,
         heads,
-        n,
-        d,
+        shapes: workloads.iter().map(|w| (w.n, w.d)).collect(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Decode lane pool
+// ---------------------------------------------------------------------
+
+/// One lane's pending decode step: a session's new query row against its
+/// cached K/V rows. Lanes are heterogeneous by construction — every
+/// session sits at its own cache length, and head dimensions may differ
+/// across sessions.
+pub struct LaneStep<'a> {
+    /// Which decode-step mapping this lane runs.
+    pub kind: DecodeKind,
+    /// The lane index the owning session is pinned to (scope `lane{i}`;
+    /// must be unique within one wave).
+    pub lane: usize,
+    /// Query row for the new token.
+    pub q: &'a [f32],
+    /// Cached key rows (all of the query's dimension).
+    pub keys: &'a [Vec<f32>],
+    /// Cached value rows.
+    pub values: &'a [Vec<f32>],
+}
+
+/// A built decode wave: one engine, one independent decode-step pipeline
+/// per lane. Produced by [`build_decode_lanes`]; each lane emits exactly
+/// one output row.
+pub struct BuiltLanePool {
+    /// The shared engine.
+    pub engine: Engine,
+    /// Per-lane output sinks, in the order the steps were given.
+    pub lanes: Vec<SinkHandle>,
+    /// Per-lane cache lengths (the wave's workload profile).
+    pub lens: Vec<usize>,
+}
+
+impl BuiltLanePool {
+    /// Longest per-lane cache in the wave — bounds the wave's cycles.
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Run the wave to completion: one output row per lane, plus the
+    /// shared run summary (spatial execution ⇒ the wave's cycles track
+    /// the longest lane, not the lane count).
+    pub fn run(&mut self) -> Result<(Vec<Vec<f32>>, RunSummary)> {
+        let summary = self.engine.run(cycle_budget(self.max_len()))?;
+        let mut rows = Vec::with_capacity(self.lanes.len());
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let mut out = lane.rows();
+            if out.len() != 1 {
+                return Err(Error::Coordinator(format!(
+                    "lane {i}: expected one decode row, got {}",
+                    out.len()
+                )));
+            }
+            rows.push(out.pop().expect("checked length 1"));
+        }
+        Ok((rows, summary))
+    }
+
+    /// Aggregate decode steps per cycle for a completed wave — the
+    /// serving-throughput figure of merit (scales with lane count while
+    /// per-step latency stays fixed).
+    pub fn steps_per_cycle(&self, summary: &RunSummary) -> f64 {
+        self.lanes.len() as f64 / summary.cycles as f64
+    }
+}
+
+/// Build one engine carrying one decode-step pipeline per entry of
+/// `steps` (scope `lane{i}` from each step's lane index). This is the
+/// generalisation of the multi-head builder the serving loop runs every
+/// scheduling iteration: heterogeneous shapes per lane are the normal
+/// case, and every input problem is an `Err`, not a panic.
+pub fn build_decode_lanes(
+    steps: &[LaneStep<'_>],
+    policy: DepthPolicy,
+) -> Result<BuiltLanePool> {
+    if steps.is_empty() {
+        return Err(Error::Graph("decode wave needs at least one lane".into()));
+    }
+    let mut g = GraphBuilder::new();
+    let mut lanes = Vec::with_capacity(steps.len());
+    for step in steps {
+        let mut scope = g.scope(format!("lane{}", step.lane));
+        lanes.push(build_step_into(
+            &mut scope,
+            step.kind,
+            step.q,
+            step.keys,
+            step.values,
+        )?);
+    }
+    Ok(BuiltLanePool {
+        engine: g.compile(policy)?,
+        lanes,
+        lens: steps.iter().map(|s| s.keys.len()).collect(),
     })
 }
 
@@ -153,9 +291,199 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "heads must share shape")]
-    fn mismatched_head_shapes_rejected() {
-        let ws = vec![Workload::random(8, 4, 1), Workload::random(16, 4, 2)];
-        let _ = build_memfree_heads(&ws, &FifoPlan::paper(8));
+    fn heterogeneous_head_shapes_are_supported() {
+        // Regression: heterogeneous workloads used to panic an
+        // assert_eq!; the lane pool needs them to *work*. Shapes differ
+        // in both n and d.
+        let ws = vec![
+            Workload::random(4, 4, 1),
+            Workload::random(16, 8, 2),
+            Workload::random(9, 2, 3),
+        ];
+        let mut built =
+            build_memfree_heads_with_policy(&ws, DepthPolicy::Inferred).unwrap();
+        assert_eq!(built.shapes, vec![(4, 4), (16, 8), (9, 2)]);
+        let (outs, summary) = built.run().unwrap();
+        for (out, w) in outs.iter().zip(&ws) {
+            assert_close(out, &sdpa_f64(w), 1e-4, "heterogeneous head");
+        }
+        // Aggregate throughput must come from the actual workloads
+        // (Σ nᵢ² = 16 + 256 + 81), not heads.len() · n₀². The largest
+        // lane dominates the cycles, so the aggregate lands near 1
+        // score/cycle — the stale formula would report ~0.13.
+        let spc = built.scores_per_cycle(&summary);
+        assert_eq!(built.total_scores(), 353);
+        assert!(spc > 0.5 && spc < 1.6, "aggregate {spc} scores/cycle");
+    }
+
+    #[test]
+    fn small_first_head_does_not_starve_the_cycle_budget() {
+        // Regression: run() used to budget cycle_budget(head0.n); with a
+        // tiny head 0 and a large head 1 the engine hit the budget long
+        // before the big lane finished.
+        let ws = vec![Workload::random(2, 2, 7), Workload::random(64, 4, 8)];
+        let mut built =
+            build_memfree_heads_with_policy(&ws, DepthPolicy::Inferred).unwrap();
+        assert_eq!(built.max_n(), 64);
+        let (outs, _) = built.run().unwrap();
+        assert_close(&outs[1], &sdpa_f64(&ws[1]), 1e-4, "large second head");
+    }
+
+    #[test]
+    fn empty_workloads_error_not_panic() {
+        let err = build_memfree_heads_with_policy(&[], DepthPolicy::Inferred);
+        assert!(matches!(err, Err(Error::Graph(msg)) if msg.contains("at least one")));
+    }
+
+    // ---- decode lane pool -------------------------------------------
+
+    use super::super::reference::sdpa_online_f32_masked;
+    use super::super::workload::Mask;
+    use super::super::decode::build_step;
+
+    /// Build the wave for the last step of each workload (session `s`
+    /// sits at cache length `w.n`).
+    fn last_steps(ws: &[Workload]) -> Vec<LaneStep<'_>> {
+        ws.iter()
+            .enumerate()
+            .map(|(i, w)| LaneStep {
+                kind: DecodeKind::MemoryFree,
+                lane: i,
+                q: &w.q[w.n - 1],
+                keys: &w.k,
+                values: &w.v,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn heterogeneous_lanes_match_each_sessions_reference() {
+        let ws = vec![
+            Workload::random(3, 4, 0xA0),
+            Workload::random(7, 2, 0xA1),
+            Workload::random(12, 8, 0xA2),
+        ];
+        let steps = last_steps(&ws);
+        let mut pool = build_decode_lanes(&steps, DepthPolicy::Inferred).unwrap();
+        assert_eq!(pool.lens, vec![3, 7, 12]);
+        assert_eq!(pool.max_len(), 12);
+        let (rows, summary) = pool.run().unwrap();
+        for (row, w) in rows.iter().zip(&ws) {
+            let gold = sdpa_online_f32_masked(w, &Mask::Causal);
+            assert_close(
+                &vec![row.clone()],
+                &vec![gold[w.n - 1].clone()],
+                1e-6,
+                "lane vs causal last row",
+            );
+        }
+        assert!(pool.steps_per_cycle(&summary) > 0.0);
+    }
+
+    #[test]
+    fn lanes_compute_bit_identically_to_solo_steps() {
+        // The continuous-batching guarantee at its core: a lane's row is
+        // bitwise the row the same step computes in its own engine,
+        // regardless of what shares the wave.
+        let ws = vec![
+            Workload::random(5, 4, 0xB0),
+            Workload::random(9, 4, 0xB1),
+            Workload::random(2, 2, 0xB2),
+        ];
+        let steps = last_steps(&ws);
+        let mut pool = build_decode_lanes(&steps, DepthPolicy::Inferred).unwrap();
+        let (rows, _) = pool.run().unwrap();
+        for (w, row) in ws.iter().zip(&rows) {
+            let mut solo = build_step(
+                DecodeKind::MemoryFree,
+                &w.q[w.n - 1],
+                &w.k,
+                &w.v,
+                DepthPolicy::Inferred,
+            )
+            .unwrap();
+            let (solo_rows, _) = solo.run().unwrap();
+            assert_eq!(&solo_rows[0], row, "wave row ≡ solo row bitwise");
+        }
+    }
+
+    #[test]
+    fn lane_scopes_carry_the_sticky_lane_index() {
+        let ws = vec![Workload::random(3, 2, 1), Workload::random(4, 2, 2)];
+        let steps: Vec<LaneStep<'_>> = ws
+            .iter()
+            .zip([5usize, 2])
+            .map(|(w, lane)| LaneStep {
+                kind: DecodeKind::MemoryFree,
+                lane,
+                q: &w.q[w.n - 1],
+                keys: &w.k,
+                values: &w.v,
+            })
+            .collect();
+        let pool = build_decode_lanes(&steps, DepthPolicy::Inferred).unwrap();
+        let names = pool.engine.channel_names();
+        assert!(names.iter().any(|n| n.starts_with("lane5/")));
+        assert!(names.iter().any(|n| n.starts_with("lane2/")));
+        assert!(!names.iter().any(|n| n.starts_with("lane0/")));
+    }
+
+    #[test]
+    fn wave_memory_stays_constant_per_lane() {
+        // The paper's O(1) claim per pipeline, across a wave: every
+        // channel of every lane peaks at ≤ 2 elements no matter the
+        // per-lane cache lengths.
+        let ws = vec![
+            Workload::random(8, 4, 0xC0),
+            Workload::random(32, 4, 0xC1),
+            Workload::random(64, 4, 0xC2),
+        ];
+        let steps = last_steps(&ws);
+        let mut pool = build_decode_lanes(&steps, DepthPolicy::Inferred).unwrap();
+        let (_, summary) = pool.run().unwrap();
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn empty_wave_and_bad_lane_inputs_error_not_panic() {
+        assert!(matches!(
+            build_decode_lanes(&[], DepthPolicy::Inferred),
+            Err(Error::Graph(_))
+        ));
+        // A lane with a ragged cache propagates the step validation Err.
+        let keys = vec![vec![1.0f32, 2.0]];
+        let values = vec![vec![1.0f32]];
+        let steps = [LaneStep {
+            kind: DecodeKind::MemoryFree,
+            lane: 0,
+            q: &[1.0, 2.0],
+            keys: &keys,
+            values: &values,
+        }];
+        assert!(matches!(
+            build_decode_lanes(&steps, DepthPolicy::Inferred),
+            Err(Error::Graph(_))
+        ));
+        // Duplicate lane indices collide on scope names → Err, no panic.
+        let w = Workload::random(3, 2, 9);
+        let dup: Vec<LaneStep<'_>> = (0..2)
+            .map(|_| LaneStep {
+                kind: DecodeKind::MemoryFree,
+                lane: 4,
+                q: &w.q[2],
+                keys: &w.k,
+                values: &w.v,
+            })
+            .collect();
+        assert!(matches!(
+            build_decode_lanes(&dup, DepthPolicy::Inferred),
+            Err(Error::Graph(msg)) if msg.contains("duplicate")
+        ));
     }
 }

@@ -144,9 +144,12 @@ mod tests {
     use std::collections::HashMap;
     use std::sync::mpsc;
 
-    fn req(id: u64, n: usize, d: usize) -> (AttnRequest, ShapeClass) {
+    /// Build a test request. Returns the reply receiver so the caller
+    /// can hold it for the request's lifetime — a `std::mem::forget(rx)`
+    /// here used to leak one receiver allocation per request, which adds
+    /// up in the property test's thousands of requests.
+    fn req(id: u64, n: usize, d: usize) -> (AttnRequest, ShapeClass, mpsc::Receiver<AttnResponse>) {
         let (tx, rx) = mpsc::channel();
-        std::mem::forget(rx); // keep the sender usable in tests
         (
             AttnRequest {
                 id,
@@ -156,6 +159,7 @@ mod tests {
                 reply: tx,
             },
             ShapeClass { n, d },
+            rx,
         )
     }
 
@@ -165,11 +169,14 @@ mod tests {
             max_batch: 3,
             max_wait_us: 1_000_000,
         });
+        let mut rxs = Vec::new();
         for id in 0..2 {
-            let (r, c) = req(id, 64, 64);
+            let (r, c, rx) = req(id, 64, 64);
+            rxs.push(rx);
             assert!(b.push(r, c, 0).is_none());
         }
-        let (r, c) = req(2, 64, 64);
+        let (r, c, rx) = req(2, 64, 64);
+        rxs.push(rx);
         let batch = b.push(r, c, 0).expect("third request flushes");
         assert_eq!(batch.len(), 3);
         assert_eq!(batch.requests[0].0.id, 0, "FIFO order");
@@ -182,7 +189,7 @@ mod tests {
             max_batch: 8,
             max_wait_us: 100,
         });
-        let (r, c) = req(0, 64, 64);
+        let (r, c, _rx) = req(0, 64, 64);
         b.push(r, c, 1_000);
         assert!(b.poll(1_050).is_empty(), "too young");
         let flushed = b.poll(1_100);
@@ -196,11 +203,11 @@ mod tests {
             max_batch: 2,
             max_wait_us: 1_000_000,
         });
-        let (r0, c0) = req(0, 64, 64);
-        let (r1, c1) = req(1, 128, 64);
+        let (r0, c0, _rx0) = req(0, 64, 64);
+        let (r1, c1, _rx1) = req(1, 128, 64);
         assert!(b.push(r0, c0, 0).is_none());
         assert!(b.push(r1, c1, 0).is_none(), "different class: no flush");
-        let (r2, c2) = req(2, 64, 64);
+        let (r2, c2, _rx2) = req(2, 64, 64);
         let batch = b.push(r2, c2, 0).unwrap();
         assert_eq!(batch.class, ShapeClass { n: 64, d: 64 });
         assert_eq!(batch.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![0, 2]);
@@ -213,8 +220,10 @@ mod tests {
             max_batch: 4,
             max_wait_us: 1_000_000,
         });
+        let mut rxs = Vec::new();
         for id in 0..10 {
-            let (r, c) = req(id, 64, 64);
+            let (r, c, rx) = req(id, 64, 64);
+            rxs.push(rx);
             let _ = b.push(r, c, 0); // two full batches flush inline
         }
         assert_eq!(b.pending(), 2);
@@ -228,9 +237,9 @@ mod tests {
     fn oldest_enqueue_tracks_minimum() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         assert_eq!(b.oldest_enqueue_us(), None);
-        let (r, c) = req(0, 64, 64);
+        let (r, c, _rx0) = req(0, 64, 64);
         b.push(r, c, 500);
-        let (r, c) = req(1, 128, 64);
+        let (r, c, _rx1) = req(1, 128, 64);
         b.push(r, c, 300);
         assert_eq!(b.oldest_enqueue_us(), Some(300));
     }
@@ -264,10 +273,12 @@ mod tests {
                     seen.push(r.id);
                 }
             };
+            let mut rxs = Vec::new();
             for id in 0..total {
                 now += rng.below(40);
                 let (n, d) = *rng.choose(&classes);
-                let (r, c) = req(id, n, d);
+                let (r, c, rx) = req(id, n, d);
+                rxs.push(rx);
                 if let Some(batch) = b.push(r, c, now) {
                     check(batch);
                 }

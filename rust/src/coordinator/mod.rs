@@ -10,18 +10,27 @@
 //! * [`batcher`] — a pure, clock-injected dynamic batcher (max-batch /
 //!   max-wait, per shape class), property-tested for no-loss/no-dup and
 //!   FIFO order.
-//! * [`sessions`] — decode-session management: sticky shape-class
-//!   routing, per-session step counters, admission control, and the
-//!   context window, backed by the simulator's
-//!   [`DecodeSession`](crate::attention::decode::DecodeSession)s.
-//! * [`server`] — a worker thread owning the PJRT executor: drains the
-//!   ingress queue, batches, routes each batch to the smallest artifact
-//!   that fits (padding as needed), executes, and replies per-request.
-//! * [`stats`] — latency/throughput accounting (mean, p50, p95, p99).
+//! * [`sessions`] — decode-session management: sticky session→lane
+//!   placement over a fixed-width lane pool (admission, eviction-on-
+//!   close, lowest-lane reclamation), per-session step counters, the
+//!   context window, and **wave execution** —
+//!   [`SessionTable::step_wave`] runs one pending step per session
+//!   spatially in a single engine, one lane scope per session, backed by
+//!   the simulator's [`DecodeSession`](crate::attention::decode::DecodeSession)s.
+//! * [`server`] — a worker thread owning the executor: drains the
+//!   ingress queue; prefill batches route to the smallest artifact that
+//!   fits (padding as needed) while each scheduling iteration gathers
+//!   one pending decode step from every active session and runs them as
+//!   a wave across the lane pool — iteration-level continuous batching,
+//!   with prefill and decode interleaving through one ingress.
+//! * [`stats`] — O(1)-memory latency/throughput accounting (streaming
+//!   sums + bounded reservoirs): prefill percentiles, decode per-step
+//!   latency, steps/sec, wave lane occupancy, session lifecycle.
 //!
 //! The design mirrors a vLLM-style router at miniature scale: shape
-//! classes play the role of (model, sequence-bucket) routing keys, and
-//! decode sessions the role of its sticky sequence → worker pinning.
+//! classes play the role of (model, sequence-bucket) routing keys,
+//! decode sessions the role of its sticky sequence → worker pinning,
+//! and waves the role of its iteration-level continuous batching.
 
 pub mod batcher;
 pub mod request;
@@ -31,7 +40,8 @@ pub mod stats;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use request::{
-    AttnRequest, AttnResponse, DecodeClass, DecodeStepRequest, DecodeStepResponse, ShapeClass,
+    AttnRequest, AttnResponse, DecodeClass, DecodeCloseResponse, DecodeOpenResponse,
+    DecodeStepRequest, DecodeStepResponse, ShapeClass,
 };
 pub use server::{Server, ServerConfig, ServerHandle};
 pub use sessions::{SessionConfig, SessionTable};

@@ -129,10 +129,41 @@ pub struct DecodeStepResponse {
     pub step: u64,
     /// The session's sticky routing class.
     pub class: DecodeClass,
+    /// The pool lane the session is pinned to (constant for a session's
+    /// lifetime — the sticky-placement witness).
+    pub lane: usize,
+    /// How many lanes ran in the same scheduling iteration (wave) as
+    /// this step — 1 when the step ran alone, up to the pool width under
+    /// continuous batching.
+    pub wave_lanes: usize,
     /// Attention output row for the new token.
     pub row: Vec<f32>,
-    /// Simulated cycles the step graph took.
+    /// Simulated cycles the step's wave took (spatial execution: the
+    /// wave tracks its longest lane, not the lane count).
     pub cycles: u64,
+}
+
+/// Response to opening a decode session on the serving loop.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeOpenResponse {
+    /// The new session's id (use it in every subsequent step).
+    pub session: u64,
+    /// The pool lane the session was pinned to.
+    pub lane: usize,
+    /// The sticky routing class every step must carry.
+    pub class: DecodeClass,
+}
+
+/// Response to closing a decode session: the retired session's full
+/// transcript.
+#[derive(Clone, Debug)]
+pub struct DecodeCloseResponse {
+    /// Echo of the session id.
+    pub session: u64,
+    /// Steps the session served (== transcript rows).
+    pub steps: u64,
+    /// One attention output row per decoded token, in step order.
+    pub transcript: Vec<Vec<f32>>,
 }
 
 /// Response to one request.

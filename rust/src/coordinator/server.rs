@@ -1,28 +1,44 @@
-//! The serving loop: a worker thread owning the PJRT executor.
+//! The serving loop: a worker thread owning the executor, the dynamic
+//! prefill batcher, and the decode lane pool.
 //!
-//! Architecture (single worker — PJRT literals are not `Sync`, and one
-//! CPU executor saturates the cores via XLA's own thread pool):
+//! Architecture (single worker — one executor saturates the cores, and
+//! the simulator engines are deliberately single-threaded):
 //!
 //! ```text
-//! clients ── mpsc ──► worker thread:
-//!                       drain ingress → DynamicBatcher
-//!                       flush on size/age → route to artifact
-//!                       pad batch → execute → unstack → reply
+//! clients ── mpsc ──► worker thread, each scheduling iteration:
+//!                       drain ingress → prefill batcher + session table
+//!                       flush prefill batches (size/age) → execute → reply
+//!                       gather ≤ 1 pending step per active session
+//!                         → one wave across pool lanes → reply per session
+//!                       fire deferred closes whose queues drained
 //! ```
 //!
-//! Routing picks the smallest `batched_sdpa` artifact whose batch size
-//! fits the flushed batch for the request shape class; the batch is
-//! padded with zeros up to the artifact's batch dimension (padding rows
-//! cost compute but keep the artifact set small — the classic
-//! bucketed-serving trade).
+//! Prefill requests route to the smallest `batched_sdpa` artifact whose
+//! batch size fits the flushed batch for the request shape class; the
+//! batch is padded with zeros up to the artifact's batch dimension
+//! (padding rows cost compute but keep the artifact set small — the
+//! classic bucketed-serving trade).
+//!
+//! Decode serving is **iteration-level continuous batching** over the
+//! [`SessionTable`]'s lane pool: sessions join and leave between waves
+//! (open/close), and every wave runs one pending step from each session
+//! that has one — spatially, in a single engine, one lane per session
+//! (see [`SessionTable::step_wave`]). Prefill batches and decode waves
+//! interleave through the same ingress, so a decode-heavy server still
+//! flushes prefill on time and vice versa.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
-use super::request::{AttnRequest, AttnResponse, ShapeClass};
+use super::request::{
+    AttnRequest, AttnResponse, DecodeCloseResponse, DecodeOpenResponse, DecodeStepRequest,
+    DecodeStepResponse, ShapeClass,
+};
+use super::sessions::{SessionConfig, SessionTable};
 use super::stats::ServingStats;
 use crate::runtime::{ArtifactRegistry, Executor, Tensor};
 use crate::{Error, Result};
@@ -30,12 +46,14 @@ use crate::{Error, Result};
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Batching policy.
+    /// Prefill batching policy.
     pub batcher: BatcherConfig,
-    /// Compile every batched artifact at startup (§Perf: keeps PJRT
+    /// Compile every batched artifact at startup (§Perf: keeps
     /// compilation out of the request path — without it the first
-    /// request per shape/batch class pays a ~100–200 ms compile).
+    /// request per shape/batch class pays the compile).
     pub precompile: bool,
+    /// Decode lane-pool / session policy.
+    pub sessions: SessionConfig,
 }
 
 impl Default for ServerConfig {
@@ -43,13 +61,21 @@ impl Default for ServerConfig {
         ServerConfig {
             batcher: BatcherConfig::default(),
             precompile: true,
+            sessions: SessionConfig::default(),
         }
     }
 }
 
-/// Ingress message: a request, or the shutdown signal.
+/// Reply slot for decode-path messages (string errors cross the channel,
+/// like [`AttnResponse::result`]).
+type Reply<T> = mpsc::Sender<std::result::Result<T, String>>;
+
+/// Ingress message: a request, a decode-session verb, or shutdown.
 enum Ingress {
     Req(AttnRequest),
+    Open { d: usize, reply: Reply<DecodeOpenResponse> },
+    Step { req: DecodeStepRequest, reply: Reply<DecodeStepResponse> },
+    Close { session: u64, reply: Reply<DecodeCloseResponse> },
     Shutdown,
 }
 
@@ -62,14 +88,18 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    fn send(&self, msg: Ingress) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| Error::Coordinator("server stopped".into()))
+    }
+
     /// Submit one attention request; returns the response receiver and
     /// the assigned request id.
     pub fn submit(&self, q: Tensor, k: Tensor, v: Tensor) -> Result<(u64, mpsc::Receiver<AttnResponse>)> {
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Ingress::Req(AttnRequest { id, q, k, v, reply }))
-            .map_err(|_| Error::Coordinator("server stopped".into()))?;
+        self.send(Ingress::Req(AttnRequest { id, q, k, v, reply }))?;
         Ok((id, rx))
     }
 
@@ -78,6 +108,59 @@ impl ServerHandle {
         let (_, rx) = self.submit(q, k, v)?;
         rx.recv()
             .map_err(|_| Error::Coordinator("server dropped reply".into()))
+    }
+
+    /// Open a decode session for head dimension `d` (blocking; opens are
+    /// handled inline by the worker, off the wave path).
+    pub fn open_session(&self, d: usize) -> Result<DecodeOpenResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Open { d, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Submit one decode step for a session; returns the response
+    /// receiver. Steps of one session execute in submission order; steps
+    /// of different sessions share waves (continuous batching).
+    pub fn submit_step(
+        &self,
+        session: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<mpsc::Receiver<std::result::Result<DecodeStepResponse, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Step {
+            req: DecodeStepRequest { session, q, k, v },
+            reply,
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit one decode step and block for its response.
+    pub fn step_call(
+        &self,
+        session: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<DecodeStepResponse> {
+        let rx = self.submit_step(session, q, k, v)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Close a decode session, blocking for its transcript. Steps the
+    /// session already queued are served first (the close is deferred
+    /// until its queue drains), then the lane is reclaimed.
+    pub fn close_session(&self, session: u64) -> Result<DecodeCloseResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Close { session, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
     }
 
     /// Snapshot of the serving statistics summary.
@@ -98,8 +181,8 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker thread. Fails fast if the artifact registry has
-    /// no batched artifacts at all.
+    /// Start the worker thread with prefill artifacts. Fails fast if the
+    /// artifact registry has no batched artifacts at all.
     pub fn start(registry: ArtifactRegistry, cfg: ServerConfig) -> Result<Server> {
         if registry
             .by_kind(crate::runtime::ArtifactKind::BatchedSdpa)
@@ -109,12 +192,28 @@ impl Server {
                 "no batched_sdpa artifacts in registry (run `make artifacts`)".into(),
             ));
         }
+        Self::start_inner(Some(registry), cfg)
+    }
+
+    /// Start a decode-only server: no artifact registry, so prefill
+    /// submits are answered with an error while decode sessions serve
+    /// normally (the lane pool needs no artifacts — steps run on the
+    /// simulator engines).
+    pub fn start_decode_only(cfg: ServerConfig) -> Result<Server> {
+        Self::start_inner(None, cfg)
+    }
+
+    fn start_inner(registry: Option<ArtifactRegistry>, cfg: ServerConfig) -> Result<Server> {
+        // Build the session table up front so a degenerate session
+        // config fails the start call, not the worker thread.
+        let table = SessionTable::new(cfg.sessions)?;
         let (tx, rx) = mpsc::channel::<Ingress>();
         let stats = Arc::new(Mutex::new(ServingStats::new()));
+        stats.lock().unwrap().set_lane_capacity(cfg.sessions.lanes);
         let worker_stats = stats.clone();
         let worker = std::thread::Builder::new()
             .name("sdpa-server".into())
-            .spawn(move || worker_loop(rx, registry, cfg, worker_stats))
+            .spawn(move || worker_loop(rx, registry, cfg, table, worker_stats))
             .map_err(|e| Error::Coordinator(format!("spawn worker: {e}")))?;
         Ok(Server {
             handle: ServerHandle {
@@ -154,10 +253,115 @@ fn now_us(epoch: Instant) -> u64 {
     epoch.elapsed().as_micros() as u64
 }
 
+/// One queued decode step: the request plus its reply slot and enqueue
+/// timestamp (µs since the worker epoch).
+type QueuedStep = (DecodeStepRequest, Reply<DecodeStepResponse>, u64);
+
+/// Worker-side decode state: per-session FIFO step queues and closes
+/// deferred behind them.
+struct DecodeState {
+    table: SessionTable,
+    pending: HashMap<u64, VecDeque<QueuedStep>>,
+    deferred_closes: Vec<(u64, Reply<DecodeCloseResponse>)>,
+}
+
+impl DecodeState {
+    fn new(table: SessionTable) -> Self {
+        DecodeState {
+            table,
+            pending: HashMap::new(),
+            deferred_closes: Vec::new(),
+        }
+    }
+
+    fn steps_pending(&self) -> bool {
+        self.pending.values().any(|q| !q.is_empty())
+    }
+
+    fn close_now(
+        &mut self,
+        session: u64,
+        stats: &Arc<Mutex<ServingStats>>,
+    ) -> std::result::Result<DecodeCloseResponse, String> {
+        match self.table.close(session) {
+            Some(transcript) => {
+                stats.lock().unwrap().record_session_close();
+                Ok(DecodeCloseResponse {
+                    session,
+                    steps: transcript.len() as u64,
+                    transcript,
+                })
+            }
+            None => Err(format!("unknown decode session {session}")),
+        }
+    }
+
+    /// Fire every deferred close whose step queue has drained.
+    fn flush_ready_closes(&mut self, stats: &Arc<Mutex<ServingStats>>) {
+        let mut i = 0;
+        while i < self.deferred_closes.len() {
+            let session = self.deferred_closes[i].0;
+            if self
+                .pending
+                .get(&session)
+                .is_some_and(|q| !q.is_empty())
+            {
+                i += 1;
+                continue;
+            }
+            let (session, reply) = self.deferred_closes.remove(i);
+            let _ = reply.send(self.close_now(session, stats));
+        }
+    }
+
+    /// Run one scheduling iteration: gather at most one pending step per
+    /// session, execute them as a spatial wave, reply per session.
+    fn run_wave(&mut self, epoch: Instant, stats: &Arc<Mutex<ServingStats>>) {
+        let mut ids: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&id, _)| id)
+            .collect();
+        if ids.is_empty() {
+            return;
+        }
+        ids.sort_unstable();
+        let mut reqs = Vec::with_capacity(ids.len());
+        let mut envelopes = Vec::with_capacity(ids.len());
+        for id in ids {
+            let queue = self.pending.get_mut(&id).expect("listed as pending");
+            let (req, reply, enq) = queue.pop_front().expect("non-empty");
+            reqs.push(req);
+            envelopes.push((reply, enq));
+        }
+        self.pending.retain(|_, q| !q.is_empty());
+        let results = self.table.step_wave(reqs);
+        let finished = now_us(epoch);
+        {
+            let mut st = stats.lock().unwrap();
+            let lanes_used = results.iter().filter(|r| r.is_ok()).count();
+            if lanes_used > 0 {
+                st.record_wave(lanes_used);
+            }
+            for ((_, enq), res) in envelopes.iter().zip(&results) {
+                match res {
+                    Ok(_) => st.record_decode_step(finished.saturating_sub(*enq)),
+                    Err(_) => st.record_decode_error(),
+                }
+            }
+        }
+        for ((reply, _), res) in envelopes.into_iter().zip(results) {
+            let _ = reply.send(res.map_err(|e| e.to_string()));
+        }
+    }
+}
+
 fn worker_loop(
     rx: mpsc::Receiver<Ingress>,
-    registry: ArtifactRegistry,
+    registry: Option<ArtifactRegistry>,
     cfg: ServerConfig,
+    table: SessionTable,
     stats: Arc<Mutex<ServingStats>>,
 ) {
     let epoch = Instant::now();
@@ -169,23 +373,30 @@ fn worker_loop(
         }
     };
     if cfg.precompile {
-        for meta in registry
-            .by_kind(crate::runtime::ArtifactKind::BatchedSdpa)
-            .into_iter()
-            .cloned()
-            .collect::<Vec<_>>()
-        {
-            if let Err(e) = executor.load_cached(&meta) {
-                eprintln!("sdpa-server: precompile {}: {e}", meta.name);
+        if let Some(reg) = &registry {
+            for meta in reg
+                .by_kind(crate::runtime::ArtifactKind::BatchedSdpa)
+                .into_iter()
+                .cloned()
+                .collect::<Vec<_>>()
+            {
+                if let Err(e) = executor.load_cached(&meta) {
+                    eprintln!("sdpa-server: precompile {}: {e}", meta.name);
+                }
             }
         }
     }
     let mut batcher = DynamicBatcher::new(cfg.batcher);
+    let mut decode = DecodeState::new(table);
     let max_wait = Duration::from_micros(cfg.batcher.max_wait_us.max(1));
 
     'outer: loop {
-        // Wait for work (bounded by the flush deadline when queueing).
-        let timeout = if batcher.pending() > 0 {
+        // Wait for work. With decode steps queued the iteration must not
+        // sleep (the wave below is the work); with a prefill batch
+        // queueing, sleep is bounded by its flush deadline.
+        let timeout = if decode.steps_pending() {
+            Duration::ZERO
+        } else if batcher.pending() > 0 {
             let oldest = batcher.oldest_enqueue_us().unwrap_or(0);
             let age = now_us(epoch).saturating_sub(oldest);
             Duration::from_micros(cfg.batcher.max_wait_us.saturating_sub(age).max(1))
@@ -194,34 +405,110 @@ fn worker_loop(
         };
         let mut stop = false;
         match rx.recv_timeout(timeout) {
-            Ok(Ingress::Req(req)) => {
-                enqueue(req, &mut batcher, epoch, &registry, &mut executor, &stats);
-                // Opportunistically drain whatever is already queued.
-                loop {
-                    match rx.try_recv() {
-                        Ok(Ingress::Req(req)) => enqueue(
-                            req, &mut batcher, epoch, &registry, &mut executor, &stats,
-                        ),
-                        Ok(Ingress::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => {
-                            stop = true;
-                            break;
+            Ok(msg) => {
+                if handle_ingress(
+                    msg, &mut batcher, &mut decode, epoch, &registry, &mut executor, &stats,
+                ) {
+                    stop = true;
+                } else {
+                    // Opportunistically drain whatever is already queued.
+                    loop {
+                        match rx.try_recv() {
+                            Ok(msg) => {
+                                if handle_ingress(
+                                    msg, &mut batcher, &mut decode, epoch, &registry,
+                                    &mut executor, &stats,
+                                ) {
+                                    stop = true;
+                                    break;
+                                }
+                            }
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                stop = true;
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
                         }
-                        Err(mpsc::TryRecvError::Empty) => break,
                     }
                 }
             }
-            Ok(Ingress::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => stop = true,
+            Err(mpsc::RecvTimeoutError::Disconnected) => stop = true,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
         }
         if stop {
+            // Graceful drain: no request may be lost. Flush queued
+            // prefill batches, run decode waves until every queued step
+            // has replied, then fire the deferred closes.
             for batch in batcher.flush_all() {
                 execute_batch(batch, &registry, &mut executor, epoch, &stats);
             }
+            while decode.steps_pending() {
+                decode.run_wave(epoch, &stats);
+            }
+            decode.flush_ready_closes(&stats);
             break 'outer;
         }
         for batch in batcher.poll(now_us(epoch)) {
             execute_batch(batch, &registry, &mut executor, epoch, &stats);
         }
+        decode.run_wave(epoch, &stats);
+        decode.flush_ready_closes(&stats);
+    }
+}
+
+/// Apply one ingress message to the worker state. Returns `true` on
+/// shutdown.
+#[allow(clippy::too_many_arguments)]
+fn handle_ingress(
+    msg: Ingress,
+    batcher: &mut DynamicBatcher,
+    decode: &mut DecodeState,
+    epoch: Instant,
+    registry: &Option<ArtifactRegistry>,
+    executor: &mut Executor,
+    stats: &Arc<Mutex<ServingStats>>,
+) -> bool {
+    match msg {
+        Ingress::Req(req) => {
+            enqueue(req, batcher, epoch, registry, executor, stats);
+            false
+        }
+        Ingress::Open { d, reply } => {
+            let res = decode.table.open(d).map_err(|e| e.to_string()).map(|id| {
+                stats.lock().unwrap().record_session_open();
+                DecodeOpenResponse {
+                    session: id,
+                    lane: decode.table.lane_of(id).unwrap_or(0),
+                    class: super::request::DecodeClass { d },
+                }
+            });
+            let _ = reply.send(res);
+            false
+        }
+        Ingress::Step { req, reply } => {
+            decode
+                .pending
+                .entry(req.session)
+                .or_default()
+                .push_back((req, reply, now_us(epoch)));
+            false
+        }
+        Ingress::Close { session, reply } => {
+            if decode
+                .pending
+                .get(&session)
+                .is_some_and(|q| !q.is_empty())
+            {
+                // The session still has queued steps: serve them first,
+                // then retire (FIFO per session).
+                decode.deferred_closes.push((session, reply));
+            } else {
+                let res = decode.close_now(session, stats);
+                let _ = reply.send(res);
+            }
+            false
+        }
+        Ingress::Shutdown => true,
     }
 }
 
@@ -229,10 +516,20 @@ fn enqueue(
     req: AttnRequest,
     batcher: &mut DynamicBatcher,
     epoch: Instant,
-    registry: &ArtifactRegistry,
+    registry: &Option<ArtifactRegistry>,
     executor: &mut Executor,
     stats: &Arc<Mutex<ServingStats>>,
 ) {
+    if registry.is_none() {
+        stats.lock().unwrap().record_error();
+        let _ = req.reply.send(AttnResponse {
+            id: req.id,
+            result: Err("prefill serving disabled: decode-only server (no artifact registry)".into()),
+            latency_us: 0,
+            batch_size: 0,
+        });
+        return;
+    }
     match req.shape_class() {
         Ok(class) => {
             if let Some(batch) = batcher.push(req, class, now_us(epoch)) {
@@ -253,14 +550,19 @@ fn enqueue(
 
 fn execute_batch(
     batch: Batch,
-    registry: &ArtifactRegistry,
+    registry: &Option<ArtifactRegistry>,
     executor: &mut Executor,
     epoch: Instant,
     stats: &Arc<Mutex<ServingStats>>,
 ) {
     let k = batch.len();
     let class = batch.class;
-    let result = run_batch(&batch, class, registry, executor);
+    let result = match registry {
+        Some(reg) => run_batch(&batch, class, reg, executor),
+        None => Err(Error::Coordinator(
+            "prefill serving disabled: decode-only server".into(),
+        )),
+    };
     let finished = now_us(epoch);
     match result {
         Ok(outputs) => {
@@ -330,5 +632,6 @@ fn run_batch(
     Ok(rows)
 }
 
-// Server integration tests (spawn + real artifacts) live in
-// rust/tests/serving_integration.rs.
+// Server integration tests (spawn + real artifacts, plus the
+// decode-only continuous-batching suite) live in
+// rust/tests/serving_integration.rs and rust/tests/continuous_batching.rs.

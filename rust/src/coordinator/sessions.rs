@@ -1,30 +1,40 @@
-//! Decode-session management: sticky shape-class routing and
-//! per-session step counters.
+//! Decode-session management: sticky session→lane placement and
+//! iteration-level wave execution.
 //!
 //! Prefill requests are stateless and batchable ([`super::batcher`]);
 //! decode is the opposite — each session owns a growing K/V cache, so
 //! routing must be **sticky**: every step of a session runs on the
-//! decode pipeline the session was opened on. [`SessionTable`] is the
-//! pure (thread-free, clock-free) core that enforces this:
+//! decode pipeline (pool *lane*) the session was opened on.
+//! [`SessionTable`] is the pure (thread-free, clock-free) core that
+//! enforces this:
 //!
 //! * `open(d)` admits a session under a [`DecodeClass`] (the head
 //!   dimension — the only shape that must stay fixed; the sequence
-//!   length grows per step) and pins it to a simulator-backed
-//!   [`DecodeSession`].
-//! * `step(req)` validates the request's class against the session's
-//!   sticky class, rejects context-window overruns, runs one decode
-//!   step, and stamps the response with the per-session step counter.
-//! * `close(id)` retires the session and returns its transcript.
+//!   length grows per step), pins it to the lowest free pool lane, and
+//!   backs it with a simulator [`DecodeSession`].
+//! * `step(req)` validates and runs one decode step alone (the
+//!   standalone path the differential tests compare against).
+//! * `step_wave(reqs)` is the continuous-batching path: it stages at
+//!   most one step per session, builds **one engine with one decode
+//!   pipeline per lane** ([`build_decode_lanes`]), runs them spatially,
+//!   and commits every lane's row. Lanes share no channels, so each
+//!   row is bit-identical to the same step run alone — enforced by
+//!   `tests/continuous_batching.rs`.
+//! * `close(id)` retires the session, returns its transcript, and
+//!   reclaims the lane for the next admission (lowest-index reuse).
 //!
-//! Admission control (`max_sessions`) and the context window
-//! (`max_len`) are the two serving limits a real deployment would
-//! enforce at this layer; both are tested.
+//! Admission control (`max_sessions` *and* a free lane), the context
+//! window (`max_len`), and eviction-on-close are the serving limits a
+//! real deployment enforces at this layer; all are tested.
 
 use std::collections::HashMap;
 
 use super::request::{DecodeClass, DecodeStepRequest, DecodeStepResponse};
 use crate::attention::decode::{DecodeKind, DecodeSession};
+use crate::attention::multihead::{build_decode_lanes, LaneStep};
 use crate::attention::reference::Matrix;
+use crate::attention::DepthPolicy;
+use crate::sim::SchedulerMode;
 use crate::{Error, Result};
 
 /// Session-table policy knobs.
@@ -32,24 +42,33 @@ use crate::{Error, Result};
 pub struct SessionConfig {
     /// Which decode-step mapping sessions run on.
     pub kind: DecodeKind,
+    /// Pool width: independent decode lanes, each holding at most one
+    /// session. Bounds concurrency alongside `max_sessions`.
+    pub lanes: usize,
     /// Maximum concurrently open sessions (admission control).
     pub max_sessions: usize,
     /// Maximum tokens per session (the context window).
     pub max_len: usize,
+    /// Scheduler mode pinned onto every step/wave engine (`None` = the
+    /// engine default, i.e. `SDPA_SCHED`). Differential tests pin both.
+    pub mode: Option<SchedulerMode>,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
         SessionConfig {
             kind: DecodeKind::MemoryFree,
+            lanes: 8,
             max_sessions: 64,
             max_len: 4096,
+            mode: None,
         }
     }
 }
 
 struct Entry {
     class: DecodeClass,
+    lane: usize,
     session: DecodeSession,
 }
 
@@ -58,22 +77,33 @@ pub struct SessionTable {
     cfg: SessionConfig,
     next_id: u64,
     sessions: HashMap<u64, Entry>,
+    /// `lane_owner[l]` = session currently pinned to lane `l`.
+    lane_owner: Vec<Option<u64>>,
     steps_served: u64,
 }
 
 impl SessionTable {
-    /// New table under a policy.
-    pub fn new(cfg: SessionConfig) -> Self {
-        assert!(cfg.max_sessions >= 1 && cfg.max_len >= 1);
-        SessionTable {
+    /// New table under a policy. The config is caller input, so a
+    /// degenerate one (zero lanes / sessions / window) is an `Err`,
+    /// not a panic.
+    pub fn new(cfg: SessionConfig) -> Result<Self> {
+        if cfg.lanes == 0 || cfg.max_sessions == 0 || cfg.max_len == 0 {
+            return Err(Error::Coordinator(
+                "session config needs lanes ≥ 1, max_sessions ≥ 1 and max_len ≥ 1".into(),
+            ));
+        }
+        Ok(SessionTable {
+            lane_owner: vec![None; cfg.lanes],
             cfg,
             next_id: 0,
             sessions: HashMap::new(),
             steps_served: 0,
-        }
+        })
     }
 
-    /// Open a session for head dimension `d`; returns its id.
+    /// Open a session for head dimension `d`; returns its id. Admission
+    /// needs both a session slot and a free lane; the session is pinned
+    /// to the lowest free lane (closed sessions' lanes are reclaimed).
     pub fn open(&mut self, d: usize) -> Result<u64> {
         if d == 0 {
             return Err(Error::Coordinator(
@@ -86,13 +116,29 @@ impl SessionTable {
                 self.sessions.len()
             )));
         }
+        let lane = self
+            .lane_owner
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "no free lane ({} lanes busy)",
+                    self.cfg.lanes
+                ))
+            })?;
         let id = self.next_id;
         self.next_id += 1;
+        let mut session = DecodeSession::new(self.cfg.kind, d);
+        if let Some(mode) = self.cfg.mode {
+            session.set_scheduler_mode(mode);
+        }
+        self.lane_owner[lane] = Some(id);
         self.sessions.insert(
             id,
             Entry {
                 class: DecodeClass { d },
-                session: DecodeSession::new(self.cfg.kind, d),
+                lane,
+                session,
             },
         );
         Ok(id)
@@ -103,15 +149,31 @@ impl SessionTable {
         self.sessions.get(&id).map(|e| e.class)
     }
 
+    /// The pool lane a session is pinned to.
+    pub fn lane_of(&self, id: u64) -> Option<usize> {
+        self.sessions.get(&id).map(|e| e.lane)
+    }
+
     /// Tokens a session has decoded so far (its step counter).
     pub fn len_of(&self, id: u64) -> Option<usize> {
         self.sessions.get(&id).map(|e| e.session.len())
     }
 
-    /// Run one decode step for the request's session.
-    pub fn step(&mut self, req: DecodeStepRequest) -> Result<DecodeStepResponse> {
+    /// Pool width (configured lanes).
+    pub fn lanes(&self) -> usize {
+        self.cfg.lanes
+    }
+
+    /// Lanes currently pinned to a session.
+    pub fn lanes_in_use(&self) -> usize {
+        self.lane_owner.iter().filter(|o| o.is_some()).count()
+    }
+
+    /// Validate one step request against the table and its session;
+    /// returns the session's class.
+    fn admit_step(&self, req: &DecodeStepRequest) -> Result<DecodeClass> {
         let class = req.class()?;
-        let entry = self.sessions.get_mut(&req.session).ok_or_else(|| {
+        let entry = self.sessions.get(&req.session).ok_or_else(|| {
             Error::Coordinator(format!("unknown decode session {}", req.session))
         })?;
         if class != entry.class {
@@ -126,23 +188,141 @@ impl SessionTable {
                 req.session, self.cfg.max_len
             )));
         }
+        Ok(class)
+    }
+
+    /// Run one decode step for the request's session, alone in its own
+    /// engine — the standalone path waves are differentially compared
+    /// against.
+    pub fn step(&mut self, req: DecodeStepRequest) -> Result<DecodeStepResponse> {
+        let class = self.admit_step(&req)?;
+        let entry = self.sessions.get_mut(&req.session).expect("admitted");
+        let lane = entry.lane;
         let outcome = entry.session.step(req.q, req.k, req.v)?;
         self.steps_served += 1;
         Ok(DecodeStepResponse {
             session: req.session,
             step: outcome.step as u64,
             class,
+            lane,
+            wave_lanes: 1,
             row: outcome.row,
             cycles: outcome.summary.cycles,
         })
     }
 
+    /// Run one scheduling iteration of continuous batching: at most one
+    /// step per session, all staged steps executed spatially in **one
+    /// engine** (one lane scope per session, sticky lane indices), with
+    /// per-request results in input order. Requests that fail admission
+    /// (unknown session, sticky-class violation, context window, a
+    /// duplicate session in the wave, bad shapes) error individually
+    /// without disturbing the rest of the wave.
+    pub fn step_wave(
+        &mut self,
+        mut reqs: Vec<DecodeStepRequest>,
+    ) -> Vec<Result<DecodeStepResponse>> {
+        let mut results: Vec<Option<Result<DecodeStepResponse>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        // Stage: validate and move each step's (k, v) into its cache
+        // (the wave owns `reqs`, so staging transfers the rows instead
+        // of cloning them — this runs once per decode step served).
+        let mut staged: Vec<(usize, u64, DecodeClass)> = Vec::new();
+        for (i, req) in reqs.iter_mut().enumerate() {
+            if staged.iter().any(|&(_, id, _)| id == req.session) {
+                results[i] = Some(Err(Error::Coordinator(format!(
+                    "session {} appears twice in one wave (iteration-level \
+                     batching runs one step per session)",
+                    req.session
+                ))));
+                continue;
+            }
+            let admitted = self.admit_step(req).and_then(|class| {
+                let entry = self.sessions.get_mut(&req.session).expect("admitted");
+                let k = std::mem::take(&mut req.k);
+                let v = std::mem::take(&mut req.v);
+                entry.session.stage(&req.q, k, v).map(|()| class)
+            });
+            match admitted {
+                Ok(class) => staged.push((i, req.session, class)),
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+        if !staged.is_empty() {
+            // Build one engine with one decode pipeline per staged
+            // session, scoped by its sticky lane.
+            let built = {
+                let steps: Vec<LaneStep<'_>> = staged
+                    .iter()
+                    .map(|&(i, id, _)| {
+                        let entry = self.sessions.get(&id).expect("staged");
+                        LaneStep {
+                            kind: entry.session.kind(),
+                            lane: entry.lane,
+                            q: &reqs[i].q,
+                            keys: entry.session.keys(),
+                            values: entry.session.values(),
+                        }
+                    })
+                    .collect();
+                build_decode_lanes(&steps, DepthPolicy::Inferred)
+            };
+            let run = built.and_then(|mut pool| {
+                if let Some(mode) = self.cfg.mode {
+                    pool.engine.set_scheduler_mode(mode);
+                }
+                pool.run()
+            });
+            match run {
+                Ok((mut rows, summary)) => {
+                    let wave_lanes = staged.len();
+                    for (j, &(i, id, class)) in staged.iter().enumerate() {
+                        let entry = self.sessions.get_mut(&id).expect("staged");
+                        entry.session.commit_row(rows[j].clone());
+                        let lane = entry.lane;
+                        let step = (entry.session.len() - 1) as u64;
+                        self.steps_served += 1;
+                        results[i] = Some(Ok(DecodeStepResponse {
+                            session: id,
+                            step,
+                            class,
+                            lane,
+                            wave_lanes,
+                            // The transcript keeps the clone above; the
+                            // response takes the original row.
+                            row: std::mem::take(&mut rows[j]),
+                            cycles: summary.cycles,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    // Unwind every staged cache: a failed wave must
+                    // leave all sessions exactly as they were.
+                    let msg = e.to_string();
+                    for &(i, id, _) in &staged {
+                        if let Some(entry) = self.sessions.get_mut(&id) {
+                            entry.session.unstage();
+                        }
+                        results[i] = Some(Err(Error::Coordinator(format!(
+                            "decode wave failed: {msg}"
+                        ))));
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every wave request resolved"))
+            .collect()
+    }
+
     /// Retire a session, returning its output transcript (one row per
-    /// decoded token), or `None` if the id is unknown.
+    /// decoded token), or `None` if the id is unknown. The session's
+    /// lane is reclaimed for the next admission.
     pub fn close(&mut self, id: u64) -> Option<Matrix> {
-        self.sessions
-            .remove(&id)
-            .map(|e| e.session.outputs().clone())
+        let entry = self.sessions.remove(&id)?;
+        self.lane_owner[entry.lane] = None;
+        Some(entry.session.outputs().clone())
     }
 
     /// Number of open sessions.
@@ -166,18 +346,22 @@ mod tests {
         DecodeStepRequest { session, q, k, v }
     }
 
+    fn wreq(w: &Workload, session: u64, t: usize) -> DecodeStepRequest {
+        req(session, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+    }
+
     #[test]
     fn open_step_close_roundtrip_matches_causal_reference() {
         let w = Workload::random(6, 4, 0x5E55);
-        let mut table = SessionTable::new(SessionConfig::default());
+        let mut table = SessionTable::new(SessionConfig::default()).unwrap();
         let id = table.open(4).unwrap();
         for t in 0..w.n {
-            let resp = table
-                .step(req(id, w.q[t].clone(), w.k[t].clone(), w.v[t].clone()))
-                .unwrap();
+            let resp = table.step(wreq(&w, id, t)).unwrap();
             assert_eq!(resp.session, id);
             assert_eq!(resp.step, t as u64, "per-session step counter");
             assert_eq!(resp.class, DecodeClass { d: 4 });
+            assert_eq!(resp.lane, 0, "first session takes lane 0");
+            assert_eq!(resp.wave_lanes, 1, "standalone step runs alone");
             assert!(resp.cycles > 0);
         }
         assert_eq!(table.len_of(id), Some(w.n));
@@ -189,12 +373,13 @@ mod tests {
             "session transcript vs causal reference",
         );
         assert_eq!(table.active(), 0);
+        assert_eq!(table.lanes_in_use(), 0, "lane reclaimed on close");
         assert_eq!(table.steps_served(), w.n as u64);
     }
 
     #[test]
     fn sticky_routing_rejects_class_changes() {
-        let mut table = SessionTable::new(SessionConfig::default());
+        let mut table = SessionTable::new(SessionConfig::default()).unwrap();
         let id = table.open(4).unwrap();
         assert_eq!(table.class_of(id), Some(DecodeClass { d: 4 }));
         let err = table.step(req(id, vec![0.0; 8], vec![0.0; 8], vec![0.0; 8]));
@@ -216,15 +401,13 @@ mod tests {
             .iter()
             .map(|&l| Workload::random(l, 4, 0x1000 + l as u64))
             .collect();
-        let mut table = SessionTable::new(SessionConfig::default());
+        let mut table = SessionTable::new(SessionConfig::default()).unwrap();
         let ids: Vec<u64> = ws.iter().map(|_| table.open(4).unwrap()).collect();
         let max_len = *lens.iter().max().unwrap();
         for t in 0..max_len {
             for (s, w) in ws.iter().enumerate() {
                 if t < w.n {
-                    let resp = table
-                        .step(req(ids[s], w.q[t].clone(), w.k[t].clone(), w.v[t].clone()))
-                        .unwrap();
+                    let resp = table.step(wreq(w, ids[s], t)).unwrap();
                     assert_eq!(resp.step, t as u64, "session {s} counter");
                 }
             }
@@ -246,7 +429,9 @@ mod tests {
             kind: DecodeKind::MemoryFree,
             max_sessions: 2,
             max_len: 2,
-        });
+            ..SessionConfig::default()
+        })
+        .unwrap();
         let a = table.open(2).unwrap();
         let _b = table.open(2).unwrap();
         assert!(matches!(table.open(2), Err(Error::Coordinator(_))));
@@ -264,12 +449,173 @@ mod tests {
     }
 
     #[test]
+    fn lane_pool_admission_and_lowest_lane_reclamation() {
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 3,
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let a = table.open(2).unwrap();
+        let b = table.open(2).unwrap();
+        let c = table.open(2).unwrap();
+        assert_eq!(
+            (table.lane_of(a), table.lane_of(b), table.lane_of(c)),
+            (Some(0), Some(1), Some(2))
+        );
+        // Pool exhausted: admission fails on lanes even though
+        // max_sessions (64) has room.
+        let err = table.open(2);
+        assert!(matches!(err, Err(Error::Coordinator(msg)) if msg.contains("no free lane")));
+        // Eviction-on-close reclaims the lane; reuse is lowest-first.
+        table.close(b).unwrap();
+        assert_eq!(table.lanes_in_use(), 2);
+        let d = table.open(2).unwrap();
+        assert_eq!(table.lane_of(d), Some(1), "freed lane 1 reused");
+        for id in [a, c, d] {
+            table.close(id).unwrap();
+        }
+        assert_eq!(table.lanes_in_use(), 0, "no lane leaked");
+    }
+
+    #[test]
+    fn wave_transcripts_are_bit_identical_to_solo_sessions() {
+        // The continuous-batching core guarantee, at the table level:
+        // stepping sessions in waves yields transcripts bitwise equal
+        // to stepping each session alone.
+        let lens = [2usize, 5, 3, 4];
+        let ws: Vec<Workload> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| Workload::random(l, 4, 0x2000 + i as u64))
+            .collect();
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 4,
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let ids: Vec<u64> = ws.iter().map(|_| table.open(4).unwrap()).collect();
+        let max_len = *lens.iter().max().unwrap();
+        for t in 0..max_len {
+            let reqs: Vec<DecodeStepRequest> = ws
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| t < w.n)
+                .map(|(s, w)| wreq(w, ids[s], t))
+                .collect();
+            let expect_lanes = reqs.len();
+            for res in table.step_wave(reqs) {
+                let resp = res.unwrap();
+                assert_eq!(resp.step, t as u64);
+                assert_eq!(resp.wave_lanes, expect_lanes, "all lanes co-scheduled");
+            }
+        }
+        for (s, w) in ws.iter().enumerate() {
+            let transcript = table.close(ids[s]).unwrap();
+            let mut solo = DecodeSession::new(DecodeKind::MemoryFree, w.d);
+            for t in 0..w.n {
+                solo.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                    .unwrap();
+            }
+            assert_eq!(
+                &transcript,
+                solo.outputs(),
+                "session {s}: wave transcript ≡ solo transcript bitwise"
+            );
+        }
+    }
+
+    #[test]
+    fn wave_rejects_bad_requests_individually() {
+        let w = Workload::random(3, 4, 0x3000);
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 4,
+            max_len: 2,
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let id = table.open(4).unwrap();
+        // Wave: one good step, one unknown session, one duplicate of
+        // the good session, one shape mismatch for a second session.
+        let id2 = table.open(2).unwrap();
+        let reqs = vec![
+            wreq(&w, id, 0),
+            req(99, vec![0.0; 4], vec![0.0; 4], vec![0.0; 4]),
+            wreq(&w, id, 1),
+            req(id2, vec![0.0; 4], vec![0.0; 4], vec![0.0; 4]),
+        ];
+        let results = table.step_wave(reqs);
+        assert!(results[0].is_ok(), "good step survives bad neighbours");
+        assert!(
+            matches!(&results[1], Err(Error::Coordinator(m)) if m.contains("unknown")),
+            "unknown session"
+        );
+        assert!(
+            matches!(&results[2], Err(Error::Coordinator(m)) if m.contains("twice")),
+            "duplicate session in wave"
+        );
+        assert!(
+            matches!(&results[3], Err(Error::Coordinator(m)) if m.contains("sticky")),
+            "shape mismatch vs sticky class"
+        );
+        assert_eq!(table.len_of(id), Some(1), "only the good step landed");
+        assert_eq!(table.len_of(id2), Some(0));
+        // Context window applies to waves too.
+        let r = table.step_wave(vec![wreq(&w, id, 1)]);
+        assert!(r[0].is_ok());
+        let r = table.step_wave(vec![wreq(&w, id, 2)]);
+        assert!(
+            matches!(&r[0], Err(Error::Coordinator(m)) if m.contains("context window"))
+        );
+    }
+
+    #[test]
+    fn heterogeneous_wave_mixes_head_dimensions_and_lengths() {
+        // Lanes differ in both d and cache length — the case the old
+        // multihead builder panicked on must *work* end to end.
+        let wa = Workload::random(4, 2, 0x4000);
+        let wb = Workload::random(2, 6, 0x4001);
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 2,
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let a = table.open(2).unwrap();
+        let b = table.open(6).unwrap();
+        // Advance a by two solo steps so the wave sees different lens.
+        table.step(wreq(&wa, a, 0)).unwrap();
+        table.step(wreq(&wa, a, 1)).unwrap();
+        let results = table.step_wave(vec![wreq(&wa, a, 2), wreq(&wb, b, 0)]);
+        for r in &results {
+            assert!(r.is_ok(), "heterogeneous wave must be Ok: {r:?}");
+        }
+        assert_eq!(results[0].as_ref().unwrap().step, 2);
+        assert_eq!(results[1].as_ref().unwrap().step, 0);
+        assert_eq!(table.len_of(a), Some(3));
+        assert_eq!(table.len_of(b), Some(1));
+    }
+
+    #[test]
+    fn degenerate_config_is_an_err_not_a_panic() {
+        for bad in [
+            SessionConfig { lanes: 0, ..SessionConfig::default() },
+            SessionConfig { max_sessions: 0, ..SessionConfig::default() },
+            SessionConfig { max_len: 0, ..SessionConfig::default() },
+        ] {
+            assert!(
+                matches!(SessionTable::new(bad), Err(Error::Coordinator(_))),
+                "config {bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
     fn unknown_sessions_and_zero_d_rejected() {
-        let mut table = SessionTable::new(SessionConfig::default());
+        let mut table = SessionTable::new(SessionConfig::default()).unwrap();
         assert!(table.open(0).is_err());
         let err = table.step(req(99, vec![0.0], vec![0.0], vec![0.0]));
         assert!(matches!(err, Err(Error::Coordinator(msg)) if msg.contains("unknown")));
         assert!(table.close(99).is_none());
         assert_eq!(table.class_of(99), None);
+        assert_eq!(table.lane_of(99), None);
     }
 }

@@ -1,14 +1,97 @@
-//! Serving statistics: latency percentiles and throughput.
+//! Serving statistics: latency percentiles and throughput, in O(1)
+//! memory.
+//!
+//! A long-running server records millions of requests, so nothing here
+//! may grow with traffic: percentiles come from fixed-size
+//! reservoir samples (Vitter's Algorithm R over a deterministic
+//! [`SplitMix64`]), means from streaming sums, and counts from plain
+//! counters. Two request families are tracked — stateless prefill
+//! requests and decode steps — plus wave (scheduling-iteration) lane
+//! occupancy and session lifecycle counters.
+//!
+//! Throughput is measured from the **first recorded event**, not from
+//! construction: precompile and idle time before the first request used
+//! to be silently charged against req/s.
 
 use std::time::Instant;
 
-/// Accumulates per-request latencies and batch sizes.
+use crate::prng::SplitMix64;
+
+/// Fixed reservoir size per latency stream. 1024 samples hold
+/// percentile error well under the scheduling noise at p99 while
+/// keeping `latency_pct` a bounded sort.
+const RESERVOIR_CAP: usize = 1024;
+
+/// Uniform reservoir sample (Algorithm R) over a `u64` stream.
+#[derive(Debug)]
+struct Reservoir {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: SplitMix64,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Self {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    fn push(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            // Replace a random slot with probability CAP / seen.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Percentile over the held sample (exact while `seen ≤ CAP`).
+    fn pct(&self, pct: f64) -> Option<u64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() as f64 - 1.0) * pct).round() as usize;
+        Some(sorted[idx.min(sorted.len() - 1)])
+    }
+
+    fn held(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+/// Accumulates serving statistics in constant memory.
 #[derive(Debug)]
 pub struct ServingStats {
-    latencies_us: Vec<u64>,
-    batch_sizes: Vec<usize>,
+    // Prefill requests.
+    completed: u64,
     errors: u64,
-    started: Instant,
+    latency_sum_us: u128,
+    batch_sum: u128,
+    prefill_latency: Reservoir,
+    // Decode steps.
+    decode_steps: u64,
+    decode_errors: u64,
+    decode_latency_sum_us: u128,
+    decode_latency: Reservoir,
+    // Waves (one per scheduling iteration that ran ≥ 1 lane).
+    waves: u64,
+    wave_lane_sum: u128,
+    lane_capacity: usize,
+    // Session lifecycle.
+    sessions_opened: u64,
+    sessions_closed: u64,
+    /// Set on the first recorded event; throughput denominators start
+    /// here, not at construction.
+    first_event: Option<Instant>,
 }
 
 impl Default for ServingStats {
@@ -18,30 +101,64 @@ impl Default for ServingStats {
 }
 
 impl ServingStats {
-    /// Empty accumulator; throughput is measured from construction.
+    /// Empty accumulator.
     pub fn new() -> Self {
         ServingStats {
-            latencies_us: Vec::new(),
-            batch_sizes: Vec::new(),
+            completed: 0,
             errors: 0,
-            started: Instant::now(),
+            latency_sum_us: 0,
+            batch_sum: 0,
+            prefill_latency: Reservoir::new(0x5EED_0001),
+            decode_steps: 0,
+            decode_errors: 0,
+            decode_latency_sum_us: 0,
+            decode_latency: Reservoir::new(0x5EED_0002),
+            waves: 0,
+            wave_lane_sum: 0,
+            lane_capacity: 0,
+            sessions_opened: 0,
+            sessions_closed: 0,
+            first_event: None,
         }
     }
 
-    /// Record one completed request.
+    fn touch(&mut self) {
+        if self.first_event.is_none() {
+            self.first_event = Some(Instant::now());
+        }
+    }
+
+    /// Seconds since the first recorded event (`None` before any).
+    fn active_secs(&self) -> Option<f64> {
+        self.first_event
+            .map(|t| t.elapsed().as_secs_f64().max(1e-9))
+    }
+
+    /// Record the lane-pool width (for the occupancy ratio).
+    pub fn set_lane_capacity(&mut self, lanes: usize) {
+        self.lane_capacity = lanes;
+    }
+
+    // ---- prefill ----------------------------------------------------
+
+    /// Record one completed prefill request.
     pub fn record(&mut self, latency_us: u64, batch_size: usize) {
-        self.latencies_us.push(latency_us);
-        self.batch_sizes.push(batch_size);
+        self.touch();
+        self.completed += 1;
+        self.latency_sum_us += latency_us as u128;
+        self.batch_sum += batch_size as u128;
+        self.prefill_latency.push(latency_us);
     }
 
     /// Record a failed request.
     pub fn record_error(&mut self) {
+        self.touch();
         self.errors += 1;
     }
 
-    /// Completed request count.
+    /// Completed prefill request count.
     pub fn completed(&self) -> u64 {
-        self.latencies_us.len() as u64
+        self.completed
     }
 
     /// Failed request count.
@@ -49,46 +166,144 @@ impl ServingStats {
         self.errors
     }
 
-    /// Latency percentile in µs (0.0–1.0). None if no data.
+    /// Prefill latency percentile in µs (0.0–1.0). `None` if no data.
+    /// Exact until the reservoir fills; a uniform sample afterwards.
     pub fn latency_pct(&self, pct: f64) -> Option<u64> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_unstable();
-        let idx = ((sorted.len() as f64 - 1.0) * pct).round() as usize;
-        Some(sorted[idx.min(sorted.len() - 1)])
+        self.prefill_latency.pct(pct)
     }
 
-    /// Mean latency in µs.
+    /// Mean prefill latency in µs (exact — streaming sum, not sampled).
     pub fn latency_mean(&self) -> Option<f64> {
-        if self.latencies_us.is_empty() {
+        if self.completed == 0 {
             return None;
         }
-        Some(self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64)
+        Some(self.latency_sum_us as f64 / self.completed as f64)
     }
 
-    /// Mean executed batch size.
+    /// Mean executed batch size (exact).
     pub fn mean_batch(&self) -> Option<f64> {
-        if self.batch_sizes.is_empty() {
+        if self.completed == 0 {
             return None;
         }
-        Some(self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64)
+        Some(self.batch_sum as f64 / self.completed as f64)
     }
 
-    /// Requests per second since construction.
+    /// Prefill requests per second since the first recorded event
+    /// (pre-first-request idle — e.g. precompile — is excluded).
     pub fn throughput(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64();
-        if secs <= 0.0 {
-            0.0
-        } else {
-            self.completed() as f64 / secs
+        match self.active_secs() {
+            Some(secs) => self.completed as f64 / secs,
+            None => 0.0,
         }
+    }
+
+    /// Latency samples currently held (bounded by the reservoir — the
+    /// O(1)-memory regression hook).
+    pub fn latency_samples_held(&self) -> usize {
+        self.prefill_latency.held() + self.decode_latency.held()
+    }
+
+    // ---- decode -----------------------------------------------------
+
+    /// Record one completed decode step.
+    pub fn record_decode_step(&mut self, latency_us: u64) {
+        self.touch();
+        self.decode_steps += 1;
+        self.decode_latency_sum_us += latency_us as u128;
+        self.decode_latency.push(latency_us);
+    }
+
+    /// Record a failed decode step.
+    pub fn record_decode_error(&mut self) {
+        self.touch();
+        self.decode_errors += 1;
+    }
+
+    /// Record one executed wave and how many lanes it co-scheduled.
+    pub fn record_wave(&mut self, lanes_used: usize) {
+        self.touch();
+        self.waves += 1;
+        self.wave_lane_sum += lanes_used as u128;
+    }
+
+    /// Record a session admission / retirement.
+    pub fn record_session_open(&mut self) {
+        self.touch();
+        self.sessions_opened += 1;
+    }
+
+    /// Record a session retirement.
+    pub fn record_session_close(&mut self) {
+        self.touch();
+        self.sessions_closed += 1;
+    }
+
+    /// Completed decode steps.
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps
+    }
+
+    /// Failed decode steps.
+    pub fn decode_errors(&self) -> u64 {
+        self.decode_errors
+    }
+
+    /// Decode step latency percentile in µs.
+    pub fn decode_latency_pct(&self, pct: f64) -> Option<u64> {
+        self.decode_latency.pct(pct)
+    }
+
+    /// Mean decode step latency in µs (exact).
+    pub fn decode_latency_mean(&self) -> Option<f64> {
+        if self.decode_steps == 0 {
+            return None;
+        }
+        Some(self.decode_latency_sum_us as f64 / self.decode_steps as f64)
+    }
+
+    /// Aggregate decode steps per second since the first event.
+    pub fn decode_steps_per_sec(&self) -> f64 {
+        match self.active_secs() {
+            Some(secs) => self.decode_steps as f64 / secs,
+            None => 0.0,
+        }
+    }
+
+    /// Executed waves.
+    pub fn waves(&self) -> u64 {
+        self.waves
+    }
+
+    /// Mean lanes co-scheduled per wave.
+    pub fn mean_wave_lanes(&self) -> Option<f64> {
+        if self.waves == 0 {
+            return None;
+        }
+        Some(self.wave_lane_sum as f64 / self.waves as f64)
+    }
+
+    /// Mean wave lanes over the pool width (0.0–1.0), `None` without
+    /// waves or a known capacity.
+    pub fn lane_occupancy(&self) -> Option<f64> {
+        match (self.mean_wave_lanes(), self.lane_capacity) {
+            (Some(mean), cap) if cap > 0 => Some(mean / cap as f64),
+            _ => None,
+        }
+    }
+
+    /// Sessions opened so far.
+    pub fn sessions_opened(&self) -> u64 {
+        self.sessions_opened
+    }
+
+    /// Sessions closed so far.
+    pub fn sessions_closed(&self) -> u64 {
+        self.sessions_closed
     }
 
     /// One-line summary for logs/reports.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} errors={} mean={}us p50={}us p95={}us p99={}us mean_batch={:.2}",
             self.completed(),
             self.errors(),
@@ -97,7 +312,23 @@ impl ServingStats {
             self.latency_pct(0.95).unwrap_or(0),
             self.latency_pct(0.99).unwrap_or(0),
             self.mean_batch().unwrap_or(0.0),
-        )
+        );
+        if self.decode_steps > 0 || self.sessions_opened > 0 {
+            s.push_str(&format!(
+                " | decode steps={} errors={} p50={}us steps/s={:.1} \
+                 waves={} mean_lanes={:.2} occupancy={:.2} sessions={}/{}",
+                self.decode_steps,
+                self.decode_errors,
+                self.decode_latency_pct(0.50).unwrap_or(0),
+                self.decode_steps_per_sec(),
+                self.waves,
+                self.mean_wave_lanes().unwrap_or(0.0),
+                self.lane_occupancy().unwrap_or(0.0),
+                self.sessions_opened,
+                self.sessions_closed,
+            ));
+        }
+        s
     }
 }
 
@@ -112,6 +343,7 @@ mod tests {
             s.record(v, 4);
         }
         assert_eq!(s.completed(), 100);
+        // Below the reservoir cap every sample is held → exact values.
         assert_eq!(s.latency_pct(0.0), Some(1));
         assert_eq!(s.latency_pct(1.0), Some(100));
         let p50 = s.latency_pct(0.5).unwrap();
@@ -126,6 +358,9 @@ mod tests {
         assert_eq!(s.latency_pct(0.5), None);
         assert_eq!(s.latency_mean(), None);
         assert_eq!(s.mean_batch(), None);
+        assert_eq!(s.decode_latency_pct(0.5), None);
+        assert_eq!(s.mean_wave_lanes(), None);
+        assert_eq!(s.throughput(), 0.0, "no events → no throughput");
         assert!(s.summary().contains("requests=0"));
     }
 
@@ -136,5 +371,71 @@ mod tests {
         s.record_error();
         assert_eq!(s.completed(), 1);
         assert_eq!(s.errors(), 1);
+    }
+
+    #[test]
+    fn memory_stays_bounded_under_heavy_traffic() {
+        // Regression: latencies/batch sizes used to grow one Vec entry
+        // per request forever (and percentile reads cloned + sorted the
+        // lot). 100k records must hold at most the reservoir caps while
+        // keeping the exact streaming mean.
+        let mut s = ServingStats::new();
+        for i in 0..100_000u64 {
+            s.record(i % 1_000, 8);
+            s.record_decode_step(i % 500);
+        }
+        assert!(s.latency_samples_held() <= 2 * RESERVOIR_CAP);
+        assert_eq!(s.completed(), 100_000);
+        assert_eq!(s.decode_steps(), 100_000);
+        // Exact mean of 0..1000 cycle = 499.5 despite sampling.
+        assert!((s.latency_mean().unwrap() - 499.5).abs() < 1e-9);
+        // The sampled p50 of a uniform 0..1000 stream lands near 500.
+        let p50 = s.latency_pct(0.5).unwrap();
+        assert!((300..=700).contains(&p50), "sampled p50 = {p50}");
+    }
+
+    #[test]
+    fn throughput_excludes_pre_first_request_idle() {
+        // Regression: the clock used to start at construction, so idle
+        // precompile time deflated req/s. Now it starts at the first
+        // event: a single request recorded just before reading gives a
+        // rate far above 1/idle. The bound is deliberately loose (the
+        // old behaviour caps at 1/0.25s = 4 req/s; the new one only
+        // dips to 8 req/s if this thread stalls > 125 ms between record
+        // and read) so CI scheduling delay cannot flake it.
+        let s0 = ServingStats::new();
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        let mut s = s0;
+        s.record(5, 1);
+        assert!(
+            s.throughput() > 8.0,
+            "throughput {} should ignore pre-first-request idle",
+            s.throughput()
+        );
+    }
+
+    #[test]
+    fn decode_wave_and_session_accounting() {
+        let mut s = ServingStats::new();
+        s.set_lane_capacity(4);
+        s.record_session_open();
+        s.record_session_open();
+        s.record_wave(2);
+        s.record_decode_step(100);
+        s.record_decode_step(300);
+        s.record_wave(4);
+        s.record_decode_error();
+        s.record_session_close();
+        assert_eq!(s.decode_steps(), 2);
+        assert_eq!(s.decode_errors(), 1);
+        assert_eq!(s.waves(), 2);
+        assert_eq!(s.mean_wave_lanes(), Some(3.0));
+        assert_eq!(s.lane_occupancy(), Some(0.75));
+        assert_eq!(s.decode_latency_mean(), Some(200.0));
+        assert!(s.decode_steps_per_sec() > 0.0);
+        assert_eq!((s.sessions_opened(), s.sessions_closed()), (2, 1));
+        let line = s.summary();
+        assert!(line.contains("decode steps=2"));
+        assert!(line.contains("sessions=2/1"));
     }
 }

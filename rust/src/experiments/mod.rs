@@ -13,12 +13,14 @@
 //! | [`numerics::run`] | all variants (incl. causal/decode) ≡ their reference SDPA |
 //! | [`ablation::run`] | extension: min FIFO depth = N+1+L(exp) latency study |
 //! | [`decode::run`] | extension: decode-step cost/memory vs cache length |
+//! | [`serving::run`] | extension: serving lane-pool throughput vs lane count |
 
 pub mod ablation;
 pub mod decode;
 pub mod fifo_sweep;
 pub mod numerics;
 pub mod scaling;
+pub mod serving;
 pub mod table1;
 
 use crate::Result;
@@ -39,5 +41,7 @@ pub fn run_all(n: usize, d: usize) -> Result<()> {
     ablation::run(n.min(32), d, &[1, 2, 4])?.table().print();
     println!();
     decode::run(&[4, 16, 64], d)?.table().print();
+    println!();
+    serving::run(&[1, 2, 4, 8], n.clamp(1, 64), d)?.table().print();
     Ok(())
 }

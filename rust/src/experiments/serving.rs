@@ -1,0 +1,169 @@
+//! Serving lane-pool scaling study: aggregate decode throughput vs
+//! lane count at fixed per-step latency.
+//!
+//! The continuous-batching claim is the paper's spatial-independence
+//! claim worn by the serving loop: decode lanes share no channels, so a
+//! wave of `L` concurrent session steps completes in ≈ the cycles of
+//! **one** step (the longest lane), while aggregate throughput grows to
+//! `L` steps per wave. This driver builds one wave per lane count —
+//! every lane a memory-free decode step at the same cache length — runs
+//! it, and reports wave cycles (should stay flat — this *is* the
+//! per-step latency, and its staying fixed as lanes grow is the claim),
+//! aggregate steps per kilocycle (should grow ~linearly), and peak FIFO
+//! occupancy (O(1) per lane, so the pool's peak per channel stays ≤ 2). `benches/serving_throughput.rs` is the
+//! wall-clock twin emitting `BENCH_serving.json` for CI.
+
+use crate::attention::decode::DecodeKind;
+use crate::attention::multihead::{build_decode_lanes, LaneStep};
+use crate::attention::workload::Workload;
+use crate::attention::DepthPolicy;
+use crate::report::Table;
+use crate::Result;
+
+/// One lane-count measurement.
+#[derive(Clone, Debug)]
+pub struct ServingPoint {
+    /// Concurrent lanes in the wave.
+    pub lanes: usize,
+    /// Cycles the wave took (its slowest lane) — this *is* every
+    /// co-scheduled step's latency; staying fixed across lane counts is
+    /// the spatial-independence claim.
+    pub wave_cycles: u64,
+    /// Aggregate decode steps per 1000 simulated cycles.
+    pub steps_per_kilocycle: f64,
+    /// Largest per-channel peak occupancy across the pool (elements).
+    pub peak_elems: usize,
+}
+
+/// Full lane-scaling study at one `(len, d)` serving shape.
+#[derive(Clone, Debug)]
+pub struct ServingResult {
+    /// Cache length every lane's step attends.
+    pub len: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Points ascending in lane count.
+    pub points: Vec<ServingPoint>,
+}
+
+impl ServingResult {
+    /// Look up one point.
+    pub fn point(&self, lanes: usize) -> Option<&ServingPoint> {
+        self.points.iter().find(|p| p.lanes == lanes)
+    }
+
+    /// Render the study table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Decode serving wave vs lane count (len={}, d={}, memfree)",
+                self.len, self.d
+            ),
+            &[
+                "lanes",
+                "wave cycles (= per-step latency)",
+                "steps/kilocycle",
+                "peak FIFO (elems)",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.lanes.to_string(),
+                p.wave_cycles.to_string(),
+                format!("{:.2}", p.steps_per_kilocycle),
+                p.peak_elems.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run the study over ascending lane counts (each ≥ 1). Every lane runs
+/// a memory-free decode step over its own random session cache of
+/// `len` rows.
+pub fn run(lane_counts: &[usize], len: usize, d: usize) -> Result<ServingResult> {
+    if len == 0 || d == 0 {
+        return Err(crate::Error::Usage(format!(
+            "serving study needs len ≥ 1 and d ≥ 1 (got len={len}, d={d})"
+        )));
+    }
+    let mut points = Vec::new();
+    for &lanes in lane_counts {
+        // Distinct per-lane session data, same length (the steady-state
+        // serving profile; heterogeneous lengths are covered by the
+        // multihead and coordinator tests).
+        let ws: Vec<Workload> = (0..lanes)
+            .map(|l| Workload::random(len, d, 0x5E21 + l as u64))
+            .collect();
+        let steps: Vec<LaneStep<'_>> = ws
+            .iter()
+            .enumerate()
+            .map(|(l, w)| LaneStep {
+                kind: DecodeKind::MemoryFree,
+                lane: l,
+                q: &w.q[len - 1],
+                keys: &w.k,
+                values: &w.v,
+            })
+            .collect();
+        let mut pool = build_decode_lanes(&steps, DepthPolicy::Inferred)?;
+        let (_, summary) = pool.run()?;
+        let peak_elems = summary
+            .channel_stats
+            .iter()
+            .map(|(_, st)| st.peak_occupancy_elems)
+            .max()
+            .unwrap_or(0);
+        points.push(ServingPoint {
+            lanes,
+            wave_cycles: summary.cycles,
+            steps_per_kilocycle: lanes as f64 * 1000.0 / summary.cycles as f64,
+            peak_elems,
+        });
+    }
+    Ok(ServingResult { len, d, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wave_cycles_stay_flat_as_lanes_grow() {
+        // Spatial independence: 8 lanes cost ≈ the same cycles as 1.
+        let r = run(&[1, 2, 4, 8], 32, 4).unwrap();
+        let one = r.point(1).unwrap().wave_cycles as f64;
+        let eight = r.point(8).unwrap().wave_cycles as f64;
+        assert!(
+            eight <= 1.1 * one,
+            "8-lane wave {eight} cycles vs 1-lane {one} — not spatial"
+        );
+    }
+
+    #[test]
+    fn aggregate_throughput_scales_with_lanes() {
+        let r = run(&[1, 4], 32, 4).unwrap();
+        let t1 = r.point(1).unwrap().steps_per_kilocycle;
+        let t4 = r.point(4).unwrap().steps_per_kilocycle;
+        assert!(
+            t4 > 3.5 * t1,
+            "4 lanes: {t4} steps/kcyc vs 1 lane {t1} — expected ~4x"
+        );
+    }
+
+    #[test]
+    fn pool_memory_stays_constant_per_channel() {
+        let r = run(&[1, 8], 24, 4).unwrap();
+        for p in &r.points {
+            assert!(p.peak_elems <= 2, "lanes={}: peak {}", p.lanes, p.peak_elems);
+        }
+    }
+
+    #[test]
+    fn table_lists_every_lane_count() {
+        let r = run(&[1, 2], 8, 2).unwrap();
+        let text = r.table().render();
+        assert!(text.contains("steps/kilocycle"));
+        assert!(r.point(2).is_some() && r.point(3).is_none());
+    }
+}

@@ -21,11 +21,14 @@
 //!   (full, masked, online) and deterministic workload generators.
 //! * [`experiments`] — drivers that regenerate every table and figure in
 //!   the paper (see `DESIGN.md` §5 for the experiment index).
-//! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
-//! * [`coordinator`] — a serving coordinator (router + dynamic batcher +
-//!   worker pool) that drives the runtime on the request path with Python
-//!   fully out of the loop.
+//! * [`runtime`] — loads the AOT-compiled JAX/Pallas artifact manifest
+//!   (`artifacts/*.hlo.txt` + goldens) and executes the artifact
+//!   functions from Rust (natively in-crate — the offline image has no
+//!   PJRT; see `runtime::executor`).
+//! * [`coordinator`] — a serving coordinator (router + dynamic prefill
+//!   batcher + continuously-batched decode lane pool) that drives the
+//!   runtime and the simulator on the request path with Python fully
+//!   out of the loop.
 //!
 //! Supporting substrates built from scratch (the image has no offline
 //! tokio/clap/criterion/proptest): [`cli`] argument parsing, [`bench`]

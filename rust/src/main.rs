@@ -2,14 +2,15 @@
 //!
 //! ```text
 //! sdpa-dataflow simulate    --variant memfree --n 64 --d 32 [--long-depth K] [--unbounded]
-//! sdpa-dataflow experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics] [--n N] [--d D]
+//! sdpa-dataflow experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving] [--n N] [--d D]
 //! sdpa-dataflow validate    [--artifacts DIR]       # run every artifact vs its golden file
-//! sdpa-dataflow serve       [--requests K] [--batch B] [--wait-us U]  # demo serving loop
+//! sdpa-dataflow serve       [--requests K] [--batch B] [--wait-us U]  # prefill batching demo
+//!                           [--sessions S] [--steps T] [--lanes L]    # + continuous-batching decode
 //! ```
 
 use sdpa_dataflow::attention::{FifoPlan, Variant};
 use sdpa_dataflow::cli::Args;
-use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig};
+use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig, SessionConfig};
 use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, Tensor};
 use sdpa_dataflow::{attention::workload::Workload, experiments, report};
 
@@ -21,9 +22,10 @@ fn usage() -> String {
         "usage: sdpa-dataflow <simulate|experiments|validate|serve|help> [options]
   simulate    --variant <{variants}>
               --n N --d D [--long-depth K] [--unbounded] [--inferred]
-  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode] [--n N] [--d D]
+  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving] [--n N] [--d D]
   validate    [--artifacts DIR]
-  serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]",
+  serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]
+              [--sessions S] [--steps T] [--lanes L] [--decode-d D]",
         variants = Variant::usage_list()
     )
 }
@@ -136,6 +138,9 @@ fn run_experiments(args: &Args) -> sdpa_dataflow::Result<()> {
             lens.dedup();
             experiments::decode::run(&lens, d)?.table().print()
         }
+        "serving" => experiments::serving::run(&[1, 2, 4, 8], n.clamp(1, 64), d)?
+            .table()
+            .print(),
         other => {
             return Err(sdpa_dataflow::Error::Usage(format!(
                 "unknown experiment '{other}'"
@@ -160,6 +165,14 @@ fn validate(args: &Args) -> sdpa_dataflow::Result<()> {
     let mut t = report::Table::new("artifact validation", &["artifact", "max |Δ|", "status"]);
     let mut failures = 0;
     for meta in registry.all().to_vec() {
+        if !Executor::supports(meta.kind) {
+            t.row(&[
+                meta.name.clone(),
+                "-".into(),
+                "skipped (needs PJRT)".into(),
+            ]);
+            continue;
+        }
         let tv = meta.testvec()?;
         let loaded = executor.load_cached(&meta)?;
         let inputs: Vec<Tensor> = tv.inputs.iter().map(|(_, t)| t.clone()).collect();
@@ -193,36 +206,107 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
     let requests: usize = args.get_parsed_or("requests", 64)?;
     let max_batch: usize = args.get_parsed_or("batch", 8)?;
     let max_wait_us: u64 = args.get_parsed_or("wait-us", 2_000)?;
-    let registry = ArtifactRegistry::load(&dir)?;
-    let server = Server::start(
-        registry,
-        ServerConfig {
-            batcher: BatcherConfig {
-                max_batch,
-                max_wait_us,
-            },
-            ..ServerConfig::default()
+    let sessions: usize = args.get_parsed_or("sessions", 4)?;
+    let steps: usize = args.get_parsed_or("steps", 8)?;
+    let lanes: usize = args.get_parsed_or("lanes", sessions.max(1))?;
+    let decode_d: usize = args.get_parsed_or("decode-d", 16)?;
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_wait_us,
         },
-    )?;
+        sessions: SessionConfig {
+            lanes: lanes.max(1),
+            ..SessionConfig::default()
+        },
+        ..ServerConfig::default()
+    };
+    // Prefill serving needs the compiled artifacts; decode serving runs
+    // on the simulator's lane pool and works without them.
+    let (server, prefill) = match ArtifactRegistry::load(&dir) {
+        Ok(registry) => (Server::start(registry, cfg)?, true),
+        Err(e) if sessions > 0 => {
+            println!("prefill disabled ({e}); starting decode-only");
+            (Server::start_decode_only(cfg)?, false)
+        }
+        Err(e) => return Err(e),
+    };
     let handle = server.handle();
-    println!("serving {requests} attention requests (max_batch={max_batch}, max_wait={max_wait_us}us)");
-    let mut rxs = Vec::new();
-    for i in 0..requests {
-        let q = Tensor::randn(vec![64, 64], 100 + i as u64);
-        let k = Tensor::randn(vec![64, 64], 200 + i as u64);
-        let v = Tensor::randn(vec![64, 64], 300 + i as u64);
-        rxs.push(handle.submit(q, k, v)?.1);
+
+    if prefill && requests > 0 {
+        println!(
+            "serving {requests} attention requests (max_batch={max_batch}, max_wait={max_wait_us}us)"
+        );
+        let mut rxs = Vec::new();
+        for i in 0..requests {
+            let q = Tensor::randn(vec![64, 64], 100 + i as u64);
+            let k = Tensor::randn(vec![64, 64], 200 + i as u64);
+            let v = Tensor::randn(vec![64, 64], 300 + i as u64);
+            rxs.push(handle.submit(q, k, v)?.1);
+        }
+        let mut ok = 0;
+        for rx in rxs {
+            let resp = rx
+                .recv()
+                .map_err(|_| sdpa_dataflow::Error::Coordinator("reply dropped".into()))?;
+            if resp.result.is_ok() {
+                ok += 1;
+            }
+        }
+        println!("prefill completed {ok}/{requests}");
     }
-    let mut ok = 0;
-    for rx in rxs {
-        let resp = rx
-            .recv()
-            .map_err(|_| sdpa_dataflow::Error::Coordinator("reply dropped".into()))?;
-        if resp.result.is_ok() {
-            ok += 1;
+
+    if sessions > 0 && steps > 0 {
+        // Continuous-batching decode demo: open S sessions on the lane
+        // pool, submit one step per session per round (the steps of a
+        // round share waves), and close each session for its transcript.
+        println!(
+            "decoding {steps} tokens x {sessions} sessions (lanes={}, d={decode_d})",
+            lanes.max(1)
+        );
+        let opened: Vec<_> = (0..sessions)
+            .map(|_| handle.open_session(decode_d))
+            .collect::<sdpa_dataflow::Result<Vec<_>>>()?;
+        let traffic: Vec<Workload> = opened
+            .iter()
+            .map(|open| Workload::random(steps, decode_d, 0xD0 + open.session * 1_000))
+            .collect();
+        for open in &opened {
+            println!("  session {} → lane {}", open.session, open.lane);
+        }
+        for t in 0..steps {
+            let rxs: Vec<_> = opened
+                .iter()
+                .zip(&traffic)
+                .map(|(open, w)| {
+                    handle.submit_step(
+                        open.session,
+                        w.q[t].clone(),
+                        w.k[t].clone(),
+                        w.v[t].clone(),
+                    )
+                })
+                .collect::<sdpa_dataflow::Result<Vec<_>>>()?;
+            for rx in rxs {
+                let resp = rx
+                    .recv()
+                    .map_err(|_| sdpa_dataflow::Error::Coordinator("reply dropped".into()))?
+                    .map_err(sdpa_dataflow::Error::Coordinator)?;
+                if t + 1 == steps {
+                    println!(
+                        "  session {} step {} ran in a {}-lane wave ({} cycles)",
+                        resp.session, resp.step, resp.wave_lanes, resp.cycles
+                    );
+                }
+            }
+        }
+        for open in &opened {
+            let closed = handle.close_session(open.session)?;
+            assert_eq!(closed.steps as usize, steps, "transcript length");
         }
     }
-    println!("completed {ok}/{requests}: {}", handle.stats_summary());
+
+    println!("stats: {}", handle.stats_summary());
     server.shutdown();
     Ok(())
 }

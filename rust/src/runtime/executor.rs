@@ -1,57 +1,90 @@
-//! PJRT executor: compile HLO text once, execute many times.
+//! Artifact executor: native in-crate execution of the AOT-compiled
+//! artifact *functions*.
 //!
-//! Wraps the `xla` crate (PJRT C API). The pattern follows
-//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! All artifacts are lowered with `return_tuple=True`, so each result is
-//! a 1-tuple literal unwrapped with `to_tuple1`.
+//! The original design wrapped the `xla` crate (PJRT C API) and compiled
+//! the artifacts' HLO text. That crate is unavailable in the offline
+//! build (the repo carries zero external dependencies), and the code
+//! referenced it anyway — so the whole crate failed to compile. Per the
+//! repo's stub-or-gate rule this module now *implements the artifact
+//! semantics natively*: each [`ArtifactKind`] names a pure function
+//! (batched scaled-dot-product attention in f32), and
+//! [`LoadedArtifact::run`] computes it directly on the [`Tensor`]
+//! payloads. The HLO text and `.testvec` goldens remain the artifact
+//! contract: `sdpa-dataflow validate` and the runtime integration tests
+//! compare this executor's outputs against the JAX-produced goldens,
+//! so swapping a real PJRT backend back in is a drop-in change behind
+//! the same `Executor` / `LoadedArtifact` API.
 
 use std::collections::HashMap;
 
-use super::artifact::ArtifactMeta;
+use super::artifact::{ArtifactKind, ArtifactMeta};
 use super::tensor::Tensor;
 use crate::{Error, Result};
 
-/// A PJRT CPU client with a cache of compiled artifacts.
+/// An executor with a cache of loaded artifacts.
 pub struct Executor {
-    client: xla::PjRtClient,
     cache: HashMap<String, LoadedArtifact>,
 }
 
 impl Executor {
-    /// Create the CPU client.
+    /// Create the (native CPU) executor. Kept fallible for API parity
+    /// with a real PJRT client.
     pub fn cpu() -> Result<Executor> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
         Ok(Executor {
-            client,
             cache: HashMap::new(),
         })
     }
 
-    /// PJRT platform string (diagnostics).
+    /// Platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".into()
     }
 
-    /// Compile an artifact (no caching — prefer [`Executor::load_cached`]).
+    /// Whether this executor can run artifacts of `kind`. The native
+    /// backend implements the attention kinds; full-model artifacts
+    /// need a real PJRT backend — callers iterating a registry (the
+    /// `validate` CLI, integration tests) skip unsupported kinds
+    /// instead of aborting the sweep.
+    pub fn supports(kind: ArtifactKind) -> bool {
+        !matches!(kind, ArtifactKind::Model)
+    }
+
+    /// Load an artifact (no caching — prefer [`Executor::load_cached`]).
     pub fn load(&self, meta: &ArtifactMeta) -> Result<LoadedArtifact> {
-        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path).map_err(|e| {
-            Error::Runtime(format!("parse {}: {e}", meta.hlo_path.display()))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {}: {e}", meta.name)))?;
+        let output_dims = meta.output_dims()?;
+        let (batch, n, d, causal) = match meta.kind {
+            ArtifactKind::Sdpa => (
+                1usize,
+                meta.param("n")? as usize,
+                meta.param("d")? as usize,
+                meta.params.get("causal").copied().unwrap_or(0) != 0,
+            ),
+            ArtifactKind::BatchedSdpa => (
+                meta.param("batch")? as usize,
+                meta.param("n")? as usize,
+                meta.param("d")? as usize,
+                meta.params.get("causal").copied().unwrap_or(0) != 0,
+            ),
+            ArtifactKind::Model => {
+                return Err(Error::Runtime(format!(
+                    "artifact '{}': model artifacts need the PJRT backend, \
+                     which is unavailable in this offline build",
+                    meta.name
+                )));
+            }
+        };
         Ok(LoadedArtifact {
             name: meta.name.clone(),
-            output_dims: meta.output_dims()?,
-            exe,
+            kind: meta.kind,
+            output_dims,
+            batch,
+            n,
+            d,
+            causal,
         })
     }
 
-    /// Compile once per artifact name, then reuse.
+    /// Load once per artifact name, then reuse.
     pub fn load_cached(&mut self, meta: &ArtifactMeta) -> Result<&LoadedArtifact> {
         if !self.cache.contains_key(&meta.name) {
             let loaded = self.load(meta)?;
@@ -60,47 +93,65 @@ impl Executor {
         Ok(&self.cache[&meta.name])
     }
 
-    /// Number of compiled artifacts held.
+    /// Number of loaded artifacts held.
     pub fn cached_count(&self) -> usize {
         self.cache.len()
     }
 }
 
-/// A compiled executable plus its declared output shape.
+/// A loaded artifact: the function its manifest row names, plus its
+/// declared output shape.
 pub struct LoadedArtifact {
     /// Artifact name.
     pub name: String,
+    kind: ArtifactKind,
     output_dims: Vec<usize>,
-    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    n: usize,
+    d: usize,
+    causal: bool,
 }
 
 impl LoadedArtifact {
-    /// Execute on `inputs` (order must match the artifact's signature).
-    /// Returns the single output tensor.
+    /// Execute on `inputs` (order must match the artifact's signature:
+    /// `q, k, v` for the attention kinds). Returns the single output
+    /// tensor.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Tensor> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(t.data())
-                    .reshape(&dims)
-                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
-        let out = literal
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("untuple result: {e}")))?;
-        let data = out
-            .to_vec::<f32>()
-            .map_err(|e| Error::Runtime(format!("read result: {e}")))?;
-        Tensor::new(self.output_dims.clone(), data)
+        if inputs.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "{}: expected 3 inputs (q, k, v), got {}",
+                self.name,
+                inputs.len()
+            )));
+        }
+        let expect: Vec<usize> = match self.kind {
+            ArtifactKind::Sdpa => vec![self.n, self.d],
+            _ => vec![self.batch, self.n, self.d],
+        };
+        for (role, t) in ["q", "k", "v"].iter().zip(inputs) {
+            if t.dims() != expect.as_slice() {
+                return Err(Error::Runtime(format!(
+                    "{}: input {role} has shape {:?}, artifact wants {expect:?}",
+                    self.name,
+                    t.dims()
+                )));
+            }
+        }
+        let (q, k, v) = (inputs[0].data(), inputs[1].data(), inputs[2].data());
+        let mut out = vec![0.0f32; self.batch * self.n * self.d];
+        let slice = self.n * self.d;
+        for b in 0..self.batch {
+            sdpa_f32_into(
+                &q[b * slice..(b + 1) * slice],
+                &k[b * slice..(b + 1) * slice],
+                &v[b * slice..(b + 1) * slice],
+                self.n,
+                self.d,
+                self.causal,
+                &mut out[b * slice..(b + 1) * slice],
+            );
+        }
+        Tensor::new(self.output_dims.clone(), out)
     }
 
     /// Declared output shape.
@@ -109,17 +160,172 @@ impl LoadedArtifact {
     }
 }
 
-// PJRT integration tests live in rust/tests/runtime_integration.rs (they
-// need `make artifacts` to have run); unit tests here cover only what is
-// artifact-independent.
+/// Single-head scaled-dot-product attention in f32 with max-subtracted
+/// softmax (matching the lowered JAX function): `out = softmax(q·kᵀ/√d)·v`,
+/// optionally causal.
+fn sdpa_f32_into(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, causal: bool, out: &mut [f32]) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = vec![0.0f32; n];
+    for i in 0..n {
+        let visible = if causal { i + 1 } else { n };
+        let qi = &q[i * d..(i + 1) * d];
+        let mut m = f32::NEG_INFINITY;
+        for (j, s) in scores.iter_mut().enumerate().take(visible) {
+            let kj = &k[j * d..(j + 1) * d];
+            let dot: f32 = qi.iter().zip(kj).map(|(a, b)| a * b).sum();
+            *s = dot * scale;
+            m = m.max(*s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut().take(visible) {
+            *s = (*s - m).exp();
+            denom += *s;
+        }
+        let oi = &mut out[i * d..(i + 1) * d];
+        for (j, &p) in scores.iter().enumerate().take(visible) {
+            let w = p / denom;
+            let vj = &v[j * d..(j + 1) * d];
+            for (o, &x) in oi.iter_mut().zip(vj) {
+                *o += w * x;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::reference::{sdpa_f64, sdpa_f64_masked};
+    use crate::attention::workload::{Mask, Workload};
+    use std::collections::BTreeMap;
+
+    fn meta(kind: ArtifactKind, params: &[(&str, i64)]) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "test_artifact".into(),
+            kind,
+            hlo_path: "unused.hlo.txt".into(),
+            testvec_path: "unused.testvec".into(),
+            params: params
+                .iter()
+                .map(|&(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        }
+    }
+
+    fn tensor_from_rows(rows: &[Vec<f32>]) -> Tensor {
+        Tensor::new(
+            vec![rows.len(), rows[0].len()],
+            rows.iter().flatten().copied().collect(),
+        )
+        .unwrap()
+    }
 
     #[test]
     fn cpu_client_comes_up() {
         let exe = Executor::cpu().unwrap();
         assert!(!exe.platform().is_empty());
         assert_eq!(exe.cached_count(), 0);
+    }
+
+    #[test]
+    fn single_head_matches_f64_reference() {
+        let w = Workload::random(16, 8, 0xE0);
+        let mut exe = Executor::cpu().unwrap();
+        let m = meta(ArtifactKind::Sdpa, &[("n", 16), ("d", 8), ("causal", 0)]);
+        let loaded = exe.load_cached(&m).unwrap();
+        let got = loaded
+            .run(&[
+                tensor_from_rows(&w.q),
+                tensor_from_rows(&w.k),
+                tensor_from_rows(&w.v),
+            ])
+            .unwrap();
+        let gold: Vec<f32> = sdpa_f64(&w).into_iter().flatten().collect();
+        let worst = got
+            .data()
+            .iter()
+            .zip(&gold)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 1e-4, "max |Δ| = {worst}");
+        assert_eq!(exe.cached_count(), 1);
+    }
+
+    #[test]
+    fn batched_execution_keeps_rows_independent() {
+        let ws: Vec<Workload> = (0..3).map(|i| Workload::random(8, 4, 0xF0 + i)).collect();
+        let exe = Executor::cpu().unwrap();
+        let m = meta(
+            ArtifactKind::BatchedSdpa,
+            &[("batch", 3), ("n", 8), ("d", 4)],
+        );
+        let loaded = exe.load(&m).unwrap();
+        let stack = |f: fn(&Workload) -> &Vec<Vec<f32>>| {
+            Tensor::stack(&ws.iter().map(|w| tensor_from_rows(f(w))).collect::<Vec<_>>())
+                .unwrap()
+        };
+        let got = loaded
+            .run(&[stack(|w| &w.q), stack(|w| &w.k), stack(|w| &w.v)])
+            .unwrap();
+        assert_eq!(got.dims(), &[3, 8, 4]);
+        for (row, w) in got.unstack().unwrap().iter().zip(&ws) {
+            let gold: Vec<f32> = sdpa_f64(w).into_iter().flatten().collect();
+            let worst = row
+                .data()
+                .iter()
+                .zip(&gold)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(worst < 1e-4, "batch row off by {worst}");
+        }
+    }
+
+    #[test]
+    fn causal_artifacts_mask_the_future() {
+        let w = Workload::random(6, 4, 0xE7);
+        let exe = Executor::cpu().unwrap();
+        let m = meta(ArtifactKind::Sdpa, &[("n", 6), ("d", 4), ("causal", 1)]);
+        let loaded = exe.load(&m).unwrap();
+        let got = loaded
+            .run(&[
+                tensor_from_rows(&w.q),
+                tensor_from_rows(&w.k),
+                tensor_from_rows(&w.v),
+            ])
+            .unwrap();
+        let gold: Vec<f32> = sdpa_f64_masked(&w, &Mask::Causal)
+            .into_iter()
+            .flatten()
+            .collect();
+        let worst = got
+            .data()
+            .iter()
+            .zip(&gold)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 1e-4, "causal max |Δ| = {worst}");
+    }
+
+    #[test]
+    fn bad_inputs_and_model_kind_are_errors() {
+        let exe = Executor::cpu().unwrap();
+        let m = meta(ArtifactKind::Sdpa, &[("n", 4), ("d", 2)]);
+        let loaded = exe.load(&m).unwrap();
+        assert!(loaded.run(&[]).is_err(), "input count");
+        let wrong = Tensor::zeros(vec![3, 2]);
+        assert!(
+            loaded
+                .run(&[wrong.clone(), wrong.clone(), wrong])
+                .is_err(),
+            "input shape"
+        );
+        let m = meta(
+            ArtifactKind::Model,
+            &[("batch", 1), ("seq", 8), ("d_model", 16)],
+        );
+        assert!(!Executor::supports(ArtifactKind::Model));
+        assert!(Executor::supports(ArtifactKind::Sdpa));
+        assert!(Executor::supports(ArtifactKind::BatchedSdpa));
+        assert!(matches!(exe.load(&m), Err(Error::Runtime(msg)) if msg.contains("PJRT")));
     }
 }

@@ -1,4 +1,5 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Artifact runtime: load and execute the AOT-compiled JAX/Pallas
+//! artifacts.
 //!
 //! The compile path (`python/compile/aot.py`, run once by `make
 //! artifacts`) lowers each (function, shape) pair to **HLO text** plus a
@@ -9,8 +10,11 @@
 //!   [`TestVec`]).
 //! * [`tensor`] — a minimal dense f32 tensor used at the runtime
 //!   boundary.
-//! * [`executor`] — the PJRT CPU client wrapper ([`Executor`]): HLO text
-//!   → compile once → [`LoadedArtifact::run`] with zero Python anywhere.
+//! * [`executor`] — the artifact executor ([`Executor`]): load once →
+//!   [`LoadedArtifact::run`] with zero Python anywhere. The offline
+//!   build has no PJRT (`xla` crate), so the executor implements the
+//!   artifact functions natively in-crate and is validated against the
+//!   same `.testvec` goldens a PJRT backend would be.
 
 pub mod artifact;
 pub mod executor;
