@@ -12,12 +12,13 @@
 //! cargo run --release --example quickstart -- [--n 64] [--d 32]
 //! ```
 
-use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession};
+use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession, PagedDecodeSession};
 use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64, sdpa_f64_masked};
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
 use sdpa_dataflow::cli::Args;
 use sdpa_dataflow::report::Table;
+use sdpa_dataflow::runtime::kvcache::{BlockPool, KvCacheConfig};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env(false, &[]).map_err(|e| e.to_string())?;
@@ -115,6 +116,59 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("decode: {steps} steps, max |Δ| vs causal f64 reference: {derr:.3e}");
     if derr >= 1e-4 {
         return Err("decode numeric check failed".into());
+    }
+
+    // 5. Paged serving: fork two sessions from one shared prefix. The
+    //    prefix K/V blocks are refcounted, not copied — both forks read
+    //    the same pool blocks and diverge copy-on-write — and each
+    //    fork's output rows are bit-identical to the contiguous
+    //    session's (the paged cache is invisible to the numbers).
+    let mut pool = BlockPool::new(KvCacheConfig {
+        block_size: 2,
+        num_blocks: 32,
+    })
+    .map_err(|e| e.to_string())?;
+    let mut parent = PagedDecodeSession::new(DecodeKind::MemoryFree, d);
+    for t in 0..steps {
+        parent
+            .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .map_err(|e| e.to_string())?;
+    }
+    let shared_before = pool.used_blocks();
+    let mut fork_a = parent.fork(&mut pool).map_err(|e| e.to_string())?;
+    let mut fork_b = parent.fork(&mut pool).map_err(|e| e.to_string())?;
+    if pool.used_blocks() != shared_before {
+        return Err("forking must share blocks, not copy them".into());
+    }
+    // Each fork decodes the next token independently (same input here,
+    // so the rows must agree with the contiguous chain — and with each
+    // other — bit for bit).
+    let t = steps.min(n - 1);
+    let row_a = fork_a
+        .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+        .map_err(|e| e.to_string())?
+        .row;
+    let row_b = fork_b
+        .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+        .map_err(|e| e.to_string())?
+        .row;
+    session
+        .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+        .map_err(|e| e.to_string())?;
+    let contiguous_row = session.outputs().last().expect("stepped").clone();
+    if row_a != contiguous_row || row_b != contiguous_row {
+        return Err("paged fork rows must be bit-identical to the contiguous session".into());
+    }
+    println!(
+        "paged decode: 2 forks share {} prefix blocks ({} shared in pool), rows bit-identical",
+        shared_before,
+        pool.shared_blocks()
+    );
+    fork_a.close(&mut pool);
+    fork_b.close(&mut pool);
+    parent.close(&mut pool);
+    if pool.used_blocks() != 0 {
+        return Err("closing every session must free every block".into());
     }
 
     println!("quickstart OK: O(1) intermediate memory at full throughput, depths inferred");

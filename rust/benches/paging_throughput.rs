@@ -1,0 +1,156 @@
+//! Paged KV-cache serving throughput: wall-clock cost of a full
+//! fork-and-decode episode vs block-pool pressure.
+//!
+//! Wall-clock twin of `experiments/paging.rs`, driving the **same**
+//! episode driver (`experiments::paging::run_episode` — parent
+//! prefills a shared prefix, the remaining sessions fork from it, and
+//! every session decodes its continuation through continuous-batching
+//! waves), so the bench can never diverge from the study it mirrors.
+//! Two pool regimes are measured per scheduler mode: **ample** (no
+//! pressure — the prefix-sharing fast path) and **tight** (the pool
+//! cannot hold every session at once, so waves preempt/swap and
+//! deferred steps requeue). Emits `BENCH_paging.json` for CI artifact
+//! upload alongside `BENCH_engine.json` / `BENCH_decode.json` /
+//! `BENCH_serving.json`.
+//!
+//! ```bash
+//! cargo bench --bench paging_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::coordinator::KvCacheConfig;
+use sdpa_dataflow::experiments::paging::{run_episode, EpisodeReport};
+use sdpa_dataflow::sim::SchedulerMode;
+
+struct Shape {
+    sessions: usize,
+    prefix: usize,
+    steps: usize,
+    d: usize,
+    block_size: usize,
+}
+
+struct Row {
+    mode: SchedulerMode,
+    regime: &'static str,
+    num_blocks: usize,
+    mean_ns: f64,
+    report: EpisodeReport,
+}
+
+impl Row {
+    /// Aggregate decode steps per wall-clock second.
+    fn steps_per_sec(&self) -> f64 {
+        self.report.total_steps() as f64 / (self.mean_ns / 1e9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"mode\":\"{:?}\",\"regime\":\"{}\",\"pool_blocks\":{},\
+             \"mean_ns\":{:.1},\"steps_per_sec\":{:.1},\"waves\":{},\
+             \"preemptions\":{},\"deferrals\":{},\"shared_blocks\":{},\
+             \"peak_used_blocks\":{}}}",
+            self.mode,
+            self.regime,
+            self.num_blocks,
+            self.mean_ns,
+            self.steps_per_sec(),
+            self.report.waves,
+            self.report.preemptions,
+            self.report.deferrals,
+            self.report.shared_blocks,
+            self.report.peak_used_blocks,
+        )
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let shape = if quick_requested() {
+        Shape {
+            sessions: 3,
+            prefix: 4,
+            steps: 2,
+            d: 8,
+            block_size: 2,
+        }
+    } else {
+        Shape {
+            sessions: 4,
+            prefix: 8,
+            steps: 4,
+            d: 16,
+            block_size: 2,
+        }
+    };
+    // Ample: everything resident, sharing only. Tight: the pool cannot
+    // hold all sessions at once but still fits any one of them, so the
+    // episode exercises preempt/swap and deferred-step requeue.
+    let per_session = (shape.prefix + shape.steps).div_ceil(shape.block_size);
+    let ample = 8 * per_session * shape.sessions;
+    let tight = per_session + 1;
+    let regimes: [(&'static str, usize); 2] = [("ample", ample), ("tight", tight)];
+
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+        for (regime, num_blocks) in regimes {
+            let mut last: Option<EpisodeReport> = None;
+            let stats = b.bench(
+                &format!("paging/episode_{}_pool{}_{mode:?}", regime, num_blocks),
+                || {
+                    let report = run_episode(
+                        Some(mode),
+                        shape.sessions,
+                        shape.prefix,
+                        shape.steps,
+                        shape.d,
+                        KvCacheConfig {
+                            block_size: shape.block_size,
+                            num_blocks,
+                        },
+                    )
+                    .expect("episode completes");
+                    black_box(report.waves);
+                    last = Some(report);
+                },
+            );
+            rows.push(Row {
+                mode,
+                regime,
+                num_blocks,
+                mean_ns: stats.mean_ns,
+                report: last.expect("benched at least once"),
+            });
+        }
+    }
+
+    println!();
+    for r in &rows {
+        println!(
+            "summary {:?} {:<5} pool={:<3} {:>10.1} steps/s waves={} preempts={} \
+             deferrals={} shared={} peak={}",
+            r.mode,
+            r.regime,
+            r.num_blocks,
+            r.steps_per_sec(),
+            r.report.waves,
+            r.report.preemptions,
+            r.report.deferrals,
+            r.report.shared_blocks,
+            r.report.peak_used_blocks,
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_paging.json", &json).expect("write BENCH_paging.json");
+    println!("\nwrote BENCH_paging.json ({} rows)", rows.len());
+}

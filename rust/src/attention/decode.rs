@@ -27,10 +27,21 @@
 //! causal prefill references row for row; `tests/causal_decode.rs`
 //! enforces this differentially, along with bit-identical
 //! `Engine::reset` replays of step graphs.
+//!
+//! [`PagedDecodeSession`] is the serving twin: instead of contiguous
+//! rows it holds a [`BlockTable`] into a shared, bounded [`BlockPool`]
+//! (see [`crate::runtime::kvcache`]), which buys prefix sharing
+//! ([`PagedDecodeSession::fork`]), copy-on-write tails, and swap-out
+//! preemption. Each step gathers the table ([`BlockPool::view`]) and
+//! replays exactly the same row stream through
+//! [`build_step_rows_into`], so paged transcripts are **bit-identical**
+//! to contiguous ones — `tests/paged_conformance.rs` enforces this
+//! differentially, including across fork and preempt/requeue cycles.
 
 use super::reference::Matrix;
 use super::workload::{dot, Workload};
 use super::{BuiltAttention, DepthPolicy};
+use crate::runtime::kvcache::{BlockPool, BlockTable, SwappedKv};
 use crate::sim::nodes::SinkHandle;
 use crate::sim::{Elem, GraphBuilder, RunSummary, SchedulerMode, Scope};
 use crate::{Error, Result};
@@ -85,11 +96,28 @@ pub fn build_step(
     values: &[Vec<f32>],
     policy: DepthPolicy,
 ) -> Result<BuiltAttention> {
+    let k: Vec<&[f32]> = keys.iter().map(Vec::as_slice).collect();
+    let v: Vec<&[f32]> = values.iter().map(Vec::as_slice).collect();
+    build_step_rows(kind, q, &k, &v, policy)
+}
+
+/// [`build_step`] over borrowed rows — the entry point the paged
+/// KV-cache path uses: a [`BlockPool::view`] gather walks a session's
+/// block table and hands the row slices straight here, so the step
+/// graph is *identical* to the contiguous build (same sources, same
+/// element order, bit-identical output).
+pub fn build_step_rows(
+    kind: DecodeKind,
+    q: &[f32],
+    keys: &[&[f32]],
+    values: &[&[f32]],
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
     let len = keys.len();
     let d = q.len();
     let mut g = GraphBuilder::new();
     let mut sc = g.root();
-    let out = build_step_into(&mut sc, kind, q, keys, values)?;
+    let out = build_step_rows_into(&mut sc, kind, q, keys, values)?;
     Ok(BuiltAttention {
         engine: g.compile(policy)?,
         out,
@@ -112,6 +140,22 @@ pub fn build_step_into(
     keys: &[Vec<f32>],
     values: &[Vec<f32>],
 ) -> Result<SinkHandle> {
+    let k: Vec<&[f32]> = keys.iter().map(Vec::as_slice).collect();
+    let v: Vec<&[f32]> = values.iter().map(Vec::as_slice).collect();
+    build_step_rows_into(sc, kind, q, &k, &v)
+}
+
+/// [`build_step_into`] over borrowed rows. The K/V sources replay the
+/// gathered row sequence — whether it came from contiguous `Vec`s or a
+/// block-table walk is invisible to the graph, which is exactly why
+/// paged and contiguous decode are bit-identical.
+pub fn build_step_rows_into(
+    sc: &mut Scope<'_>,
+    kind: DecodeKind,
+    q: &[f32],
+    keys: &[&[f32]],
+    values: &[&[f32]],
+) -> Result<SinkHandle> {
     let len = keys.len();
     let d = q.len();
     if len == 0 {
@@ -129,7 +173,7 @@ pub fn build_step_into(
             values.len()
         )));
     }
-    if let Some(row) = keys.iter().chain(values).find(|r| r.len() != d) {
+    if let Some(row) = keys.iter().chain(values.iter()).find(|r| r.len() != d) {
         return Err(Error::Graph(format!(
             "decode step: cached row has dim {}, query has {}",
             row.len(),
@@ -394,6 +438,269 @@ impl DecodeSession {
     }
 }
 
+/// An autoregressive decode session over the **paged** KV cache: the
+/// session's rows live in fixed-size blocks of a shared [`BlockPool`],
+/// addressed through a private [`BlockTable`]. The pool is passed into
+/// every mutating call (the coordinator owns one pool for all
+/// sessions), so the session itself stays plain data.
+///
+/// Semantics relative to [`DecodeSession`]:
+///
+/// * **Steps are bit-identical.** A step gathers the table in row
+///   order ([`BlockPool::view`]) and feeds the same slices to the same
+///   graph builder; block boundaries are invisible to the pipeline.
+/// * **Forking** ([`Self::fork`]) shares the whole current cache with
+///   a child session at zero copies (refcounts, CoW on the tail block
+///   at the first divergent append). The child's transcript starts
+///   empty: it records only rows the child itself decodes.
+/// * **Preemption** ([`Self::preempt`]) swaps the cache out of the
+///   bounded pool; the next step (or an explicit [`Self::restore`])
+///   swaps it back in bit-exactly, so a preempt/requeue cycle cannot
+///   perturb the transcript. While the pool lacks room, staging and
+///   restoring return [`Error::AdmissionDeferred`] for the caller to
+///   requeue.
+pub struct PagedDecodeSession {
+    kind: DecodeKind,
+    d: usize,
+    policy: DepthPolicy,
+    mode: Option<SchedulerMode>,
+    table: BlockTable,
+    /// `Some` while preempted (cache swapped out of the pool). The
+    /// table is empty exactly when this is `Some` (or the session has
+    /// decoded nothing).
+    swapped: Option<SwappedKv>,
+    /// Pending copy-on-write of the currently staged step: the shared
+    /// tail block the stage replaced (reference retained by the pool
+    /// until the step commits or unwinds — see
+    /// [`BlockPool::append_row`]).
+    staged_cow: Option<usize>,
+    outputs: Matrix,
+}
+
+impl PagedDecodeSession {
+    /// New paged session for head dimension `d`, inferred FIFO depths.
+    pub fn new(kind: DecodeKind, d: usize) -> Self {
+        Self::with_policy(kind, d, DepthPolicy::Inferred)
+    }
+
+    /// New paged session under an explicit depth policy.
+    pub fn with_policy(kind: DecodeKind, d: usize, policy: DepthPolicy) -> Self {
+        assert!(d >= 1, "head dimension must be at least 1");
+        PagedDecodeSession {
+            kind,
+            d,
+            policy,
+            mode: None,
+            table: BlockTable::new(),
+            swapped: None,
+            staged_cow: None,
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Force a scheduler mode on every step engine (differential tests;
+    /// the default is the engine's own default, i.e. `SDPA_SCHED`).
+    pub fn set_scheduler_mode(&mut self, mode: SchedulerMode) {
+        self.mode = Some(mode);
+    }
+
+    /// The step mapping this session uses.
+    pub fn kind(&self) -> DecodeKind {
+        self.kind
+    }
+
+    /// Tokens decoded so far (cached rows, resident or swapped out).
+    pub fn len(&self) -> usize {
+        match &self.swapped {
+            Some(s) => s.len(),
+            None => self.table.len(),
+        }
+    }
+
+    /// Whether no token has been decoded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Output rows accumulated so far, one per step.
+    pub fn outputs(&self) -> &Matrix {
+        &self.outputs
+    }
+
+    /// The session's block table (empty while preempted).
+    pub fn table(&self) -> &BlockTable {
+        &self.table
+    }
+
+    /// Whether the cache is currently swapped out of the pool.
+    pub fn is_preempted(&self) -> bool {
+        self.swapped.is_some()
+    }
+
+    /// Fork: a child session sharing every cached block (no copies;
+    /// refcounted, CoW on first divergent append). The child inherits
+    /// kind, head dimension, depth policy, and scheduler mode, and
+    /// starts with an empty transcript. The parent must be resident.
+    pub fn fork(&self, pool: &mut BlockPool) -> Result<PagedDecodeSession> {
+        if self.is_preempted() {
+            return Err(Error::Coordinator(
+                "cannot fork a preempted session (restore it first)".into(),
+            ));
+        }
+        Ok(PagedDecodeSession {
+            kind: self.kind,
+            d: self.d,
+            policy: self.policy,
+            mode: self.mode,
+            table: pool.fork(&self.table),
+            swapped: None,
+            staged_cow: None,
+            outputs: Vec::new(),
+        })
+    }
+
+    /// Swap the cache out of the pool (freeing every block this
+    /// session exclusively owns) so another session can run. No-op if
+    /// already preempted or empty.
+    pub fn preempt(&mut self, pool: &mut BlockPool) {
+        debug_assert!(
+            self.staged_cow.is_none(),
+            "preempting a session with a step staged (waves exclude staged members)"
+        );
+        if self.swapped.is_some() || self.table.is_empty() {
+            return;
+        }
+        self.swapped = Some(pool.swap_out(&mut self.table));
+    }
+
+    /// Swap a preempted cache back into the pool (bit-exact; sharing
+    /// is not re-established). [`Error::AdmissionDeferred`] when the
+    /// pool lacks room — the swap is kept and the call can be retried.
+    pub fn restore(&mut self, pool: &mut BlockPool) -> Result<()> {
+        let Some(swapped) = &self.swapped else {
+            return Ok(());
+        };
+        pool.swap_in(&mut self.table, swapped)?;
+        self.swapped = None;
+        Ok(())
+    }
+
+    /// Validate one step's row shapes and append `(k, v)` to the block
+    /// table — the first half of a step (see [`DecodeSession::stage`]).
+    /// [`Error::AdmissionDeferred`] when the pool has no block for the
+    /// append; the table is left exactly as it was. The rows are
+    /// copied into the pool once here (the pool owns its rows; the
+    /// borrowed request stays intact so a deferred step can requeue
+    /// copy-free) — a deliberate O(d) cost per served step, dwarfed by
+    /// the step's engine run.
+    pub(crate) fn stage(
+        &mut self,
+        pool: &mut BlockPool,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        if self.is_preempted() {
+            return Err(Error::Coordinator(
+                "cannot stage a step on a preempted session (restore it first)".into(),
+            ));
+        }
+        for (what, len) in [("q", q.len()), ("k", k.len()), ("v", v.len())] {
+            if len != self.d {
+                return Err(Error::Graph(format!(
+                    "decode step {}: {what} has dim {}, session expects {}",
+                    self.table.len(),
+                    len,
+                    self.d
+                )));
+            }
+        }
+        debug_assert!(
+            self.staged_cow.is_none(),
+            "stage without resolving the previous staged step"
+        );
+        self.staged_cow = pool.append_row(&mut self.table, k.to_vec(), v.to_vec())?;
+        Ok(())
+    }
+
+    /// Undo the most recent [`Self::stage`] (a failed step must not
+    /// corrupt the session) — including reverting a copy-on-write tail
+    /// split, so block accounting and sharing end exactly as they were.
+    pub(crate) fn unstage(&mut self, pool: &mut BlockPool) {
+        pool.undo_append(&mut self.table, self.staged_cow.take());
+    }
+
+    /// Record the staged step's output row, completing the step (and
+    /// resolving a pending copy-on-write, if the stage made one).
+    pub(crate) fn commit_row(&mut self, pool: &mut BlockPool, row: Vec<f32>) {
+        pool.commit_append(self.staged_cow.take());
+        self.outputs.push(row);
+    }
+
+    /// Build and run the already-staged step alone in its own engine,
+    /// returning the output row and summary *without* committing — the
+    /// caller commits ([`Self::commit_row`]) or unwinds
+    /// ([`Self::unstage`]); this borrows the pool immutably, so it can
+    /// do neither itself.
+    pub(crate) fn run_staged(
+        &mut self,
+        pool: &BlockPool,
+        q: &[f32],
+    ) -> Result<(Vec<f32>, RunSummary)> {
+        let result = {
+            let view = pool.view(&self.table);
+            build_step_rows(self.kind, q, &view.keys, &view.values, self.policy)
+        }
+        .and_then(|mut built| {
+            if let Some(mode) = self.mode {
+                built.engine.set_scheduler_mode(mode);
+            }
+            built.run()
+        });
+        let (rows, summary) = result?;
+        let row = rows.into_iter().next().expect("decode step emits one row");
+        Ok((row, summary))
+    }
+
+    /// Decode one token against the paged cache: restore if preempted,
+    /// append `(k, v)`, stream `q` against the gathered table, return
+    /// the output row. A failed step (including
+    /// [`Error::AdmissionDeferred`] from a full pool) leaves the
+    /// session exactly as it was, so the caller can retry.
+    pub fn step(
+        &mut self,
+        pool: &mut BlockPool,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<DecodeStepOutcome> {
+        self.restore(pool)?;
+        self.stage(pool, &q, &k, &v)?;
+        match self.run_staged(pool, &q) {
+            Ok((row, summary)) => {
+                self.commit_row(pool, row.clone());
+                Ok(DecodeStepOutcome {
+                    step: self.table.len() - 1,
+                    row,
+                    summary,
+                })
+            }
+            Err(e) => {
+                self.unstage(pool);
+                Err(e)
+            }
+        }
+    }
+
+    /// Retire the session: release every block reference (resolving any
+    /// pending copy-on-write first) and return the transcript.
+    pub fn close(mut self, pool: &mut BlockPool) -> Matrix {
+        pool.commit_append(self.staged_cow.take());
+        pool.release(&mut self.table);
+        self.outputs
+    }
+}
+
 /// Run a full autoregressive pass over `w` — step `t` feeds
 /// `(q_t, k_t, v_t)` — and return the N output rows. Must agree with
 /// the causal prefill references row for row (the decode-chain half of
@@ -563,6 +870,165 @@ mod tests {
         assert!(err.is_err(), "undersized bypass must deadlock at len 3");
         assert_eq!(s.len(), 2, "failed step must not grow the cache");
         assert_eq!(s.outputs().len(), 2, "no phantom output row");
+    }
+
+    fn small_pool(block_size: usize, num_blocks: usize) -> BlockPool {
+        BlockPool::new(crate::runtime::kvcache::KvCacheConfig {
+            block_size,
+            num_blocks,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn paged_session_is_bit_identical_to_contiguous() {
+        let w = Workload::random(9, 4, 0x9A6E01);
+        let mut pool = small_pool(2, 8);
+        let mut paged = PagedDecodeSession::new(DecodeKind::MemoryFree, w.d);
+        let mut contiguous = DecodeSession::new(DecodeKind::MemoryFree, w.d);
+        for t in 0..w.n {
+            paged
+                .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            contiguous
+                .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        assert_eq!(
+            paged.outputs(),
+            contiguous.outputs(),
+            "paged transcript ≡ contiguous transcript bitwise"
+        );
+        assert_eq!(paged.table().num_blocks(), 5, "9 rows / 2 per block");
+        let outs = paged.close(&mut pool);
+        assert_eq!(outs.len(), 9);
+        assert_eq!(pool.used_blocks(), 0, "close releases every block");
+    }
+
+    #[test]
+    fn paged_step_keeps_o1_memory_and_depths() {
+        // The O(1)-per-step claim survives paging: the step graph built
+        // from a block-table gather has the same depth-2-everywhere
+        // report and ≤ 2-element runtime peaks as the contiguous build.
+        let w = Workload::random(16, 4, 0x9A6E02);
+        let mut pool = small_pool(4, 8);
+        let mut s = PagedDecodeSession::new(DecodeKind::MemoryFree, w.d);
+        for t in 0..w.n - 1 {
+            s.step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        s.stage(&mut pool, &w.q[w.n - 1], &w.k[w.n - 1], &w.v[w.n - 1])
+            .unwrap();
+        let view = pool.view(s.table());
+        let mut built = build_step_rows(
+            DecodeKind::MemoryFree,
+            &w.q[w.n - 1],
+            &view.keys,
+            &view.values,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "paged step channel '{}' is long", c.name);
+            assert_eq!(c.capacity, Capacity::Bounded(2), "'{}'", c.name);
+        }
+        let (_, summary) = built.run().unwrap();
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "paged step channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn paged_session_survives_preempt_restore_bit_exactly() {
+        let w = Workload::random(6, 4, 0x9A6E03);
+        let mut pool = small_pool(2, 8);
+        let mut paged = PagedDecodeSession::new(DecodeKind::MemoryFree, w.d);
+        for t in 0..3 {
+            paged
+                .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        paged.preempt(&mut pool);
+        assert!(paged.is_preempted());
+        assert_eq!(paged.len(), 3, "len visible while swapped out");
+        assert_eq!(pool.used_blocks(), 0, "preempt freed the blocks");
+        // The next step restores transparently.
+        for t in 3..w.n {
+            paged
+                .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        assert!(!paged.is_preempted());
+        let baseline = decode_workload(DecodeKind::MemoryFree, &w).unwrap();
+        assert_eq!(
+            paged.outputs(),
+            &baseline,
+            "preempt/restore cycle must not perturb a bit"
+        );
+        paged.close(&mut pool);
+    }
+
+    #[test]
+    fn forked_paged_sessions_share_prefix_and_diverge() {
+        let w = Workload::random(8, 4, 0x9A6E04);
+        let m = 4; // shared prefix rows (= 2 full blocks at size 2)
+        let mut pool = small_pool(2, 16);
+        let mut parent = PagedDecodeSession::new(DecodeKind::MemoryFree, w.d);
+        for t in 0..m {
+            parent
+                .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        let mut child = parent.fork(&mut pool).unwrap();
+        assert_eq!(child.len(), m, "child sees the shared prefix");
+        assert!(child.outputs().is_empty(), "child transcript starts empty");
+        assert_eq!(pool.shared_blocks(), 2, "prefix blocks shared, not copied");
+        // Child continues with the workload's suffix; a contiguous
+        // session over the whole workload is the oracle for its rows.
+        for t in m..w.n {
+            child
+                .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        let baseline = decode_workload(DecodeKind::MemoryFree, &w).unwrap();
+        assert_eq!(
+            child.outputs().as_slice(),
+            &baseline[m..],
+            "forked continuation ≡ contiguous suffix bitwise"
+        );
+        // Parent is untouched by the child's appends.
+        assert_eq!(parent.len(), m);
+        child.close(&mut pool);
+        parent.close(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn paged_pool_exhaustion_defers_and_leaves_session_intact() {
+        let w = Workload::random(6, 4, 0x9A6E05);
+        let mut pool = small_pool(1, 2);
+        let mut s = PagedDecodeSession::new(DecodeKind::MemoryFree, w.d);
+        for t in 0..2 {
+            s.step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        let err = s.step(
+            &mut pool,
+            w.q[2].clone(),
+            w.k[2].clone(),
+            w.v[2].clone(),
+        );
+        assert!(
+            matches!(err, Err(Error::AdmissionDeferred(_))),
+            "full pool defers, it does not hard-fail"
+        );
+        assert_eq!(s.len(), 2, "deferred step left the cache unchanged");
+        assert_eq!(s.outputs().len(), 2, "no phantom output row");
+        s.close(&mut pool);
     }
 
     #[test]

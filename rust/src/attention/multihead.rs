@@ -27,7 +27,7 @@
 //! linearly in lanes but stays O(1) in sequence length — the paper's
 //! claim, per pipeline.
 
-use super::decode::{build_step_into, DecodeKind};
+use super::decode::{build_step_rows_into, DecodeKind};
 use super::reference::Matrix;
 use super::workload::Workload;
 use super::{cycle_budget, memfree, DepthPolicy, FifoPlan};
@@ -195,6 +195,43 @@ pub fn build_decode_lanes(
     steps: &[LaneStep<'_>],
     policy: DepthPolicy,
 ) -> Result<BuiltLanePool> {
+    let rows: Vec<LaneStepRows<'_>> = steps
+        .iter()
+        .map(|s| LaneStepRows {
+            kind: s.kind,
+            lane: s.lane,
+            q: s.q,
+            keys: s.keys.iter().map(Vec::as_slice).collect(),
+            values: s.values.iter().map(Vec::as_slice).collect(),
+        })
+        .collect();
+    build_decode_lanes_rows(&rows, policy)
+}
+
+/// One lane's pending decode step as gathered rows — what the paged
+/// KV-cache path produces: a [`BlockPool::view`]
+/// (`crate::runtime::kvcache`) walk of the session's block table hands
+/// its borrowed row slices straight here, no copies and no layout
+/// assumptions.
+pub struct LaneStepRows<'a> {
+    /// Which decode-step mapping this lane runs.
+    pub kind: DecodeKind,
+    /// The lane index the owning session is pinned to (scope `lane{i}`;
+    /// must be unique within one wave).
+    pub lane: usize,
+    /// Query row for the new token.
+    pub q: &'a [f32],
+    /// Cached key rows in cache order (all of the query's dimension).
+    pub keys: Vec<&'a [f32]>,
+    /// Cached value rows in cache order.
+    pub values: Vec<&'a [f32]>,
+}
+
+/// [`build_decode_lanes`] over gathered rows (the paged serving path).
+pub fn build_decode_lanes_rows(
+    steps: &[LaneStepRows<'_>],
+    policy: DepthPolicy,
+) -> Result<BuiltLanePool> {
     if steps.is_empty() {
         return Err(Error::Graph("decode wave needs at least one lane".into()));
     }
@@ -202,12 +239,12 @@ pub fn build_decode_lanes(
     let mut lanes = Vec::with_capacity(steps.len());
     for step in steps {
         let mut scope = g.scope(format!("lane{}", step.lane));
-        lanes.push(build_step_into(
+        lanes.push(build_step_rows_into(
             &mut scope,
             step.kind,
             step.q,
-            step.keys,
-            step.values,
+            &step.keys,
+            &step.values,
         )?);
     }
     Ok(BuiltLanePool {

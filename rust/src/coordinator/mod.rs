@@ -15,8 +15,16 @@
 //!   close, lowest-lane reclamation), per-session step counters, the
 //!   context window, and **wave execution** —
 //!   [`SessionTable::step_wave`] runs one pending step per session
-//!   spatially in a single engine, one lane scope per session, backed by
-//!   the simulator's [`DecodeSession`](crate::attention::decode::DecodeSession)s.
+//!   spatially in a single engine, one lane scope per session, backed
+//!   by paged
+//!   [`PagedDecodeSession`](crate::attention::decode::PagedDecodeSession)s
+//!   over one shared, bounded KV-cache
+//!   [`BlockPool`](crate::runtime::kvcache::BlockPool): sessions can
+//!   fork from a shared prefix (refcounted blocks, copy-on-write
+//!   tails), pool exhaustion preempts victims (swap-out, bit-exact
+//!   swap-in), and full tables/pools *defer* admission
+//!   ([`crate::Error::AdmissionDeferred`]) for the server to requeue
+//!   instead of hard-failing.
 //! * [`server`] — a worker thread owning the executor: drains the
 //!   ingress queue; prefill batches route to the smallest artifact that
 //!   fits (padding as needed) while each scheduling iteration gathers
@@ -46,3 +54,5 @@ pub use request::{
 pub use server::{Server, ServerConfig, ServerHandle};
 pub use sessions::{SessionConfig, SessionTable};
 pub use stats::ServingStats;
+
+pub use crate::runtime::kvcache::KvCacheConfig;

@@ -143,7 +143,8 @@ pub struct DecodeStepResponse {
     pub cycles: u64,
 }
 
-/// Response to opening a decode session on the serving loop.
+/// Response to opening a decode session on the serving loop — either a
+/// fresh session or one forked from a shared prefix.
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeOpenResponse {
     /// The new session's id (use it in every subsequent step).
@@ -152,6 +153,10 @@ pub struct DecodeOpenResponse {
     pub lane: usize,
     /// The sticky routing class every step must carry.
     pub class: DecodeClass,
+    /// `Some(parent)` when this session was forked from `parent`'s
+    /// cached prefix (shared KV blocks, copy-on-write divergence);
+    /// `None` for a fresh open.
+    pub parent: Option<u64>,
 }
 
 /// Response to closing a decode session: the retired session's full

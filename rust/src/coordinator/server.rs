@@ -71,9 +71,12 @@ impl Default for ServerConfig {
 type Reply<T> = mpsc::Sender<std::result::Result<T, String>>;
 
 /// Ingress message: a request, a decode-session verb, or shutdown.
+/// `wait: true` admissions requeue on [`crate::Error::AdmissionDeferred`]
+/// until capacity frees; `wait: false` answers immediately either way.
 enum Ingress {
     Req(AttnRequest),
-    Open { d: usize, reply: Reply<DecodeOpenResponse> },
+    Open { d: usize, wait: bool, reply: Reply<DecodeOpenResponse> },
+    Fork { parent: u64, wait: bool, reply: Reply<DecodeOpenResponse> },
     Step { req: DecodeStepRequest, reply: Reply<DecodeStepResponse> },
     Close { session: u64, reply: Reply<DecodeCloseResponse> },
     Shutdown,
@@ -110,11 +113,73 @@ impl ServerHandle {
             .map_err(|_| Error::Coordinator("server dropped reply".into()))
     }
 
-    /// Open a decode session for head dimension `d` (blocking; opens are
-    /// handled inline by the worker, off the wave path).
-    pub fn open_session(&self, d: usize) -> Result<DecodeOpenResponse> {
+    /// Submit a decode-session open for head dimension `d`; the reply
+    /// arrives once a session slot and lane are available (a deferred
+    /// admission is requeued by the worker, so a burst of opens beyond
+    /// the lane count drains in FIFO order as sessions close).
+    pub fn submit_open(
+        &self,
+        d: usize,
+    ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, reply })?;
+        self.send(Ingress::Open { d, wait: true, reply })?;
+        Ok(rx)
+    }
+
+    /// Open a decode session for head dimension `d`, blocking until it
+    /// is admitted. Deferred admissions wait for capacity, which only
+    /// frees when a session **closes** — so do not call this in a loop
+    /// that opens more than `lanes`/`max_sessions` sessions before
+    /// closing any (that caller waits forever). For open-everything-
+    /// first patterns use [`Self::try_open_session`] (immediate typed
+    /// error at capacity) or [`Self::submit_open`] (non-blocking
+    /// receiver).
+    pub fn open_session(&self, d: usize) -> Result<DecodeOpenResponse> {
+        let rx = self.submit_open(d)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Try to open a decode session *now*: a full table or lane pool
+    /// answers immediately with the admission-deferred error instead of
+    /// waiting (capacity probes, load shedding).
+    pub fn try_open_session(&self, d: usize) -> Result<DecodeOpenResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Open { d, wait: false, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Submit a fork of session `parent`: the new session shares the
+    /// parent's cached prefix (refcounted KV blocks, copy-on-write on
+    /// divergence). Replies once admitted, like [`Self::submit_open`].
+    pub fn submit_fork(
+        &self,
+        parent: u64,
+    ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Fork { parent, wait: true, reply })?;
+        Ok(rx)
+    }
+
+    /// Fork a decode session from `parent`'s cached prefix, blocking
+    /// until the child is admitted (same waiting caveat as
+    /// [`Self::open_session`]: don't open/fork past capacity before
+    /// closing anything — use [`Self::try_fork_session`] there).
+    pub fn fork_session(&self, parent: u64) -> Result<DecodeOpenResponse> {
+        let rx = self.submit_fork(parent)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Try to fork *now*: a full table or lane pool answers immediately
+    /// with the admission-deferred error instead of waiting.
+    pub fn try_fork_session(&self, parent: u64) -> Result<DecodeOpenResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Fork { parent, wait: false, reply })?;
         rx.recv()
             .map_err(|_| Error::Coordinator("server dropped reply".into()))?
             .map_err(Error::Coordinator)
@@ -209,7 +274,11 @@ impl Server {
         let table = SessionTable::new(cfg.sessions)?;
         let (tx, rx) = mpsc::channel::<Ingress>();
         let stats = Arc::new(Mutex::new(ServingStats::new()));
-        stats.lock().unwrap().set_lane_capacity(cfg.sessions.lanes);
+        {
+            let mut st = stats.lock().unwrap();
+            st.set_lane_capacity(cfg.sessions.lanes);
+            st.set_pool_capacity(cfg.sessions.kv.num_blocks);
+        }
         let worker_stats = stats.clone();
         let worker = std::thread::Builder::new()
             .name("sdpa-server".into())
@@ -257,12 +326,35 @@ fn now_us(epoch: Instant) -> u64 {
 /// timestamp (µs since the worker epoch).
 type QueuedStep = (DecodeStepRequest, Reply<DecodeStepResponse>, u64);
 
-/// Worker-side decode state: per-session FIFO step queues and closes
-/// deferred behind them.
+/// One admission (open or fork) waiting for capacity to free.
+enum PendingAdmission {
+    Open { d: usize, reply: Reply<DecodeOpenResponse> },
+    Fork { parent: u64, reply: Reply<DecodeOpenResponse> },
+}
+
+impl PendingAdmission {
+    /// Take the reply slot out (both variants carry one).
+    fn into_reply(self) -> Reply<DecodeOpenResponse> {
+        match self {
+            PendingAdmission::Open { reply, .. } => reply,
+            PendingAdmission::Fork { reply, .. } => reply,
+        }
+    }
+}
+
+/// Worker-side decode state: per-session FIFO step queues, closes
+/// deferred behind them, and admissions (opens/forks) requeued while
+/// the session table or lane pool is full.
 struct DecodeState {
     table: SessionTable,
     pending: HashMap<u64, VecDeque<QueuedStep>>,
     deferred_closes: Vec<(u64, Reply<DecodeCloseResponse>)>,
+    /// FIFO of deferred opens/forks, retried each iteration.
+    pending_admissions: VecDeque<PendingAdmission>,
+    /// Sessions whose step deferred in the last wave: they stage first
+    /// in the next one, so pool pressure rotates instead of starving
+    /// the same session every iteration.
+    retry_first: Vec<u64>,
 }
 
 impl DecodeState {
@@ -271,11 +363,64 @@ impl DecodeState {
             table,
             pending: HashMap::new(),
             deferred_closes: Vec::new(),
+            pending_admissions: VecDeque::new(),
+            retry_first: Vec::new(),
         }
     }
 
     fn steps_pending(&self) -> bool {
         self.pending.values().any(|q| !q.is_empty())
+    }
+
+    /// Admit one open/fork, mapping the result to the reply type.
+    fn admit_now(
+        &mut self,
+        adm: &PendingAdmission,
+        stats: &Arc<Mutex<ServingStats>>,
+    ) -> Result<DecodeOpenResponse> {
+        let (id, parent) = match adm {
+            PendingAdmission::Open { d, .. } => (self.table.open(*d)?, None),
+            PendingAdmission::Fork { parent, .. } => {
+                (self.table.fork(*parent)?, Some(*parent))
+            }
+        };
+        stats.lock().unwrap().record_session_open();
+        Ok(DecodeOpenResponse {
+            session: id,
+            lane: self.table.lane_of(id).unwrap_or(0),
+            class: self.table.class_of(id).expect("just admitted"),
+            parent,
+        })
+    }
+
+    /// Retry deferred admissions in FIFO order; stop at the first that
+    /// still defers (admission order is part of the contract).
+    fn flush_admissions(&mut self, stats: &Arc<Mutex<ServingStats>>) {
+        while let Some(adm) = self.pending_admissions.pop_front() {
+            match self.admit_now(&adm, stats) {
+                Ok(resp) => {
+                    let _ = adm.into_reply().send(Ok(resp));
+                }
+                Err(Error::AdmissionDeferred(_)) => {
+                    self.pending_admissions.push_front(adm);
+                    break;
+                }
+                // e.g. a fork whose parent closed while queued.
+                Err(e) => {
+                    let _ = adm.into_reply().send(Err(e.to_string()));
+                }
+            }
+        }
+    }
+
+    /// Mirror the block-pool gauges into the shared stats.
+    fn publish_pool_gauges(&self, stats: &Arc<Mutex<ServingStats>>) {
+        let mut st = stats.lock().unwrap();
+        st.set_pool_gauges(
+            self.table.pool_used_blocks(),
+            self.table.pool_shared_blocks(),
+            self.table.preemptions(),
+        );
     }
 
     fn close_now(
@@ -316,7 +461,11 @@ impl DecodeState {
 
     /// Run one scheduling iteration: gather at most one pending step per
     /// session, execute them as a spatial wave, reply per session.
-    fn run_wave(&mut self, epoch: Instant, stats: &Arc<Mutex<ServingStats>>) {
+    /// Steps the block pool deferred are requeued at the front of their
+    /// session's queue (and that session stages first next wave) instead
+    /// of erroring. Returns whether any request was finally answered —
+    /// the drain loop's progress signal.
+    fn run_wave(&mut self, epoch: Instant, stats: &Arc<Mutex<ServingStats>>) -> bool {
         let mut ids: Vec<u64> = self
             .pending
             .iter()
@@ -324,9 +473,12 @@ impl DecodeState {
             .map(|(&id, _)| id)
             .collect();
         if ids.is_empty() {
-            return;
+            return false;
         }
-        ids.sort_unstable();
+        // Ascending ids, but sessions deferred last wave go first so
+        // pool pressure rotates rather than starving one session.
+        let retry_first = std::mem::take(&mut self.retry_first);
+        ids.sort_unstable_by_key(|id| (!retry_first.contains(id), *id));
         let mut reqs = Vec::with_capacity(ids.len());
         let mut envelopes = Vec::with_capacity(ids.len());
         for id in ids {
@@ -335,9 +487,12 @@ impl DecodeState {
             reqs.push(req);
             envelopes.push((reply, enq));
         }
-        self.pending.retain(|_, q| !q.is_empty());
-        let results = self.table.step_wave(reqs);
+        // The wave borrows the requests: staging copies each row into
+        // the block pool once (the pool must own its rows), and a
+        // deferred request requeues below without any further copy.
+        let results = self.table.step_wave(&reqs);
         let finished = now_us(epoch);
+        let mut progressed = false;
         {
             let mut st = stats.lock().unwrap();
             let lanes_used = results.iter().filter(|r| r.is_ok()).count();
@@ -347,12 +502,46 @@ impl DecodeState {
             for ((_, enq), res) in envelopes.iter().zip(&results) {
                 match res {
                     Ok(_) => st.record_decode_step(finished.saturating_sub(*enq)),
+                    Err(Error::AdmissionDeferred(_)) => st.record_deferral(),
                     Err(_) => st.record_decode_error(),
                 }
             }
         }
-        for ((reply, _), res) in envelopes.into_iter().zip(results) {
-            let _ = reply.send(res.map_err(|e| e.to_string()));
+        for ((req, (reply, enq)), res) in reqs.into_iter().zip(envelopes).zip(results) {
+            match res {
+                Err(Error::AdmissionDeferred(_)) => {
+                    let session = req.session;
+                    self.pending
+                        .entry(session)
+                        .or_default()
+                        .push_front((req, reply, enq));
+                    self.retry_first.push(session);
+                }
+                res => {
+                    progressed = true;
+                    let _ = reply.send(res.map_err(|e| e.to_string()));
+                }
+            }
+        }
+        self.pending.retain(|_, q| !q.is_empty());
+        progressed
+    }
+
+    /// Shutdown backstop: answer anything still queued after the drain
+    /// loop stopped progressing, so no client blocks forever.
+    fn fail_remaining(&mut self, stats: &Arc<Mutex<ServingStats>>) {
+        for (_, queue) in self.pending.drain() {
+            for (_, reply, _) in queue {
+                stats.lock().unwrap().record_decode_error();
+                let _ = reply.send(Err(
+                    "server shut down before the step could be admitted".into(),
+                ));
+            }
+        }
+        for adm in self.pending_admissions.drain(..) {
+            let _ = adm.into_reply().send(Err(
+                "server shut down before the session could be admitted".into(),
+            ));
         }
     }
 }
@@ -389,13 +578,20 @@ fn worker_loop(
     let mut batcher = DynamicBatcher::new(cfg.batcher);
     let mut decode = DecodeState::new(table);
     let max_wait = Duration::from_micros(cfg.batcher.max_wait_us.max(1));
+    let mut wave_progressed = true;
 
     'outer: loop {
         // Wait for work. With decode steps queued the iteration must not
-        // sleep (the wave below is the work); with a prefill batch
-        // queueing, sleep is bounded by its flush deadline.
+        // sleep (the wave below is the work) — unless the last wave
+        // finalized nothing (every queued step deferred on pool
+        // capacity): then back off briefly instead of busy-spinning on
+        // deferrals that need a close/step elsewhere to unblock.
         let timeout = if decode.steps_pending() {
-            Duration::ZERO
+            if wave_progressed {
+                Duration::ZERO
+            } else {
+                Duration::from_millis(1)
+            }
         } else if batcher.pending() > 0 {
             let oldest = batcher.oldest_enqueue_us().unwrap_or(0);
             let age = now_us(epoch).saturating_sub(oldest);
@@ -438,21 +634,35 @@ fn worker_loop(
         if stop {
             // Graceful drain: no request may be lost. Flush queued
             // prefill batches, run decode waves until every queued step
-            // has replied, then fire the deferred closes.
+            // has replied (deferred steps retry with priority; if two
+            // consecutive waves finalize nothing, the leftovers get an
+            // explicit shutdown error instead of a silent drop), then
+            // fire the deferred closes and fail leftover admissions.
             for batch in batcher.flush_all() {
                 execute_batch(batch, &registry, &mut executor, epoch, &stats);
             }
-            while decode.steps_pending() {
-                decode.run_wave(epoch, &stats);
+            let mut stalled = 0;
+            while decode.steps_pending() && stalled < 2 {
+                if decode.run_wave(epoch, &stats) {
+                    stalled = 0;
+                } else {
+                    stalled += 1;
+                }
             }
+            decode.fail_remaining(&stats);
             decode.flush_ready_closes(&stats);
+            decode.publish_pool_gauges(&stats);
             break 'outer;
         }
         for batch in batcher.poll(now_us(epoch)) {
             execute_batch(batch, &registry, &mut executor, epoch, &stats);
         }
-        decode.run_wave(epoch, &stats);
+        wave_progressed = decode.run_wave(epoch, &stats) || !decode.steps_pending();
         decode.flush_ready_closes(&stats);
+        // Closes and completed waves may have freed lanes/blocks: admit
+        // deferred opens/forks, then refresh the pool gauges.
+        decode.flush_admissions(&stats);
+        decode.publish_pool_gauges(&stats);
     }
 }
 
@@ -473,16 +683,14 @@ fn handle_ingress(
             enqueue(req, batcher, epoch, registry, executor, stats);
             false
         }
-        Ingress::Open { d, reply } => {
-            let res = decode.table.open(d).map_err(|e| e.to_string()).map(|id| {
-                stats.lock().unwrap().record_session_open();
-                DecodeOpenResponse {
-                    session: id,
-                    lane: decode.table.lane_of(id).unwrap_or(0),
-                    class: super::request::DecodeClass { d },
-                }
-            });
-            let _ = reply.send(res);
+        Ingress::Open { d, wait, reply } => {
+            let adm = PendingAdmission::Open { d, reply };
+            admit_or_requeue(decode, adm, wait, stats);
+            false
+        }
+        Ingress::Fork { parent, wait, reply } => {
+            let adm = PendingAdmission::Fork { parent, reply };
+            admit_or_requeue(decode, adm, wait, stats);
             false
         }
         Ingress::Step { req, reply } => {
@@ -509,6 +717,28 @@ fn handle_ingress(
             false
         }
         Ingress::Shutdown => true,
+    }
+}
+
+/// Try one open/fork now; a deferred admission either joins the FIFO
+/// retry queue (`wait`) or answers immediately with the typed error.
+fn admit_or_requeue(
+    decode: &mut DecodeState,
+    adm: PendingAdmission,
+    wait: bool,
+    stats: &Arc<Mutex<ServingStats>>,
+) {
+    match decode.admit_now(&adm, stats) {
+        Ok(resp) => {
+            let _ = adm.into_reply().send(Ok(resp));
+        }
+        Err(Error::AdmissionDeferred(_)) if wait => {
+            stats.lock().unwrap().record_deferral();
+            decode.pending_admissions.push_back(adm);
+        }
+        Err(e) => {
+            let _ = adm.into_reply().send(Err(e.to_string()));
+        }
     }
 }
 

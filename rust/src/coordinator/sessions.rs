@@ -1,5 +1,5 @@
-//! Decode-session management: sticky session→lane placement and
-//! iteration-level wave execution.
+//! Decode-session management: sticky session→lane placement, a shared
+//! paged KV-cache pool, and iteration-level wave execution.
 //!
 //! Prefill requests are stateless and batchable ([`super::batcher`]);
 //! decode is the opposite — each session owns a growing K/V cache, so
@@ -11,29 +11,50 @@
 //! * `open(d)` admits a session under a [`DecodeClass`] (the head
 //!   dimension — the only shape that must stay fixed; the sequence
 //!   length grows per step), pins it to the lowest free pool lane, and
-//!   backs it with a simulator [`DecodeSession`].
+//!   backs it with a paged [`PagedDecodeSession`] whose K/V rows live
+//!   in fixed-size blocks of **one shared bounded [`BlockPool`]**.
+//! * `fork(parent)` admits a new session sharing the parent's entire
+//!   cached prefix at zero copies (refcounted blocks, copy-on-write on
+//!   the tail at the first divergent append).
 //! * `step(req)` validates and runs one decode step alone (the
 //!   standalone path the differential tests compare against).
 //! * `step_wave(reqs)` is the continuous-batching path: it stages at
-//!   most one step per session, builds **one engine with one decode
-//!   pipeline per lane** ([`build_decode_lanes`]), runs them spatially,
-//!   and commits every lane's row. Lanes share no channels, so each
-//!   row is bit-identical to the same step run alone — enforced by
-//!   `tests/continuous_batching.rs`.
-//! * `close(id)` retires the session, returns its transcript, and
-//!   reclaims the lane for the next admission (lowest-index reuse).
+//!   most one step per session — **transactionally**: block
+//!   allocations of a failed wave unwind row by row — builds one
+//!   engine with one decode pipeline per lane
+//!   ([`build_decode_lanes_rows`]), runs them spatially, and commits
+//!   every lane's row. Lanes share no channels, so each row is
+//!   bit-identical to the same step run alone — enforced by
+//!   `tests/continuous_batching.rs` and `tests/paged_conformance.rs`.
+//! * `close(id)` retires the session, returns its transcript, releases
+//!   its block references, and reclaims the lane (lowest-index reuse).
 //!
-//! Admission control (`max_sessions` *and* a free lane), the context
-//! window (`max_len`), and eviction-on-close are the serving limits a
-//! real deployment enforces at this layer; all are tested.
+//! **Admission is deferred, not refused.** A full session table, an
+//! exhausted lane pool, or an exhausted block pool all surface as
+//! [`Error::AdmissionDeferred`] — the typed signal that the request is
+//! valid and should be retried once capacity frees. The serving loop
+//! requeues deferred work; only genuine errors (unknown session,
+//! sticky-class violation, context window, a session too large for the
+//! whole pool) hard-fail.
+//!
+//! **Preemption.** When a step cannot get a block, the table swaps out
+//! a victim session (the resident one with the most exclusively-owned
+//! blocks; ties to the lowest id; when every candidate's blocks are
+//! shared, the one holding the most references — dropping refcounts so
+//! the next retry finds exclusive blocks) and retries. Victims restore
+//! bit-exactly on their next step, so a preempt/requeue cycle cannot
+//! perturb any transcript — the conformance suite's acceptance
+//! property. Sessions already staged in the current wave are never
+//! victims (their rows are wired into the running engine).
 
 use std::collections::HashMap;
 
 use super::request::{DecodeClass, DecodeStepRequest, DecodeStepResponse};
-use crate::attention::decode::{DecodeKind, DecodeSession};
-use crate::attention::multihead::{build_decode_lanes, LaneStep};
+use crate::attention::decode::{DecodeKind, PagedDecodeSession};
+use crate::attention::multihead::{build_decode_lanes_rows, LaneStepRows};
 use crate::attention::reference::Matrix;
 use crate::attention::DepthPolicy;
+use crate::runtime::kvcache::{BlockPool, KvCacheConfig};
 use crate::sim::SchedulerMode;
 use crate::{Error, Result};
 
@@ -52,6 +73,9 @@ pub struct SessionConfig {
     /// Scheduler mode pinned onto every step/wave engine (`None` = the
     /// engine default, i.e. `SDPA_SCHED`). Differential tests pin both.
     pub mode: Option<SchedulerMode>,
+    /// Paged KV-cache geometry: every session's K/V rows come from one
+    /// shared pool of `kv.num_blocks` blocks of `kv.block_size` rows.
+    pub kv: KvCacheConfig,
 }
 
 impl Default for SessionConfig {
@@ -62,6 +86,7 @@ impl Default for SessionConfig {
             max_sessions: 64,
             max_len: 4096,
             mode: None,
+            kv: KvCacheConfig::default(),
         }
     }
 }
@@ -69,7 +94,7 @@ impl Default for SessionConfig {
 struct Entry {
     class: DecodeClass,
     lane: usize,
-    session: DecodeSession,
+    session: PagedDecodeSession,
 }
 
 /// The decode-session coordinator core.
@@ -79,13 +104,16 @@ pub struct SessionTable {
     sessions: HashMap<u64, Entry>,
     /// `lane_owner[l]` = session currently pinned to lane `l`.
     lane_owner: Vec<Option<u64>>,
+    /// The shared paged KV-cache pool backing every session.
+    pool: BlockPool,
     steps_served: u64,
+    preemptions: u64,
 }
 
 impl SessionTable {
     /// New table under a policy. The config is caller input, so a
-    /// degenerate one (zero lanes / sessions / window) is an `Err`,
-    /// not a panic.
+    /// degenerate one (zero lanes / sessions / window / blocks) is an
+    /// `Err`, not a panic.
     pub fn new(cfg: SessionConfig) -> Result<Self> {
         if cfg.lanes == 0 || cfg.max_sessions == 0 || cfg.max_len == 0 {
             return Err(Error::Coordinator(
@@ -94,41 +122,51 @@ impl SessionTable {
         }
         Ok(SessionTable {
             lane_owner: vec![None; cfg.lanes],
+            pool: BlockPool::new(cfg.kv)?,
             cfg,
             next_id: 0,
             sessions: HashMap::new(),
             steps_served: 0,
+            preemptions: 0,
         })
     }
 
+    /// Claim a session slot and the lowest free lane, or defer.
+    fn admit_slot(&self) -> Result<usize> {
+        if self.sessions.len() >= self.cfg.max_sessions {
+            return Err(Error::AdmissionDeferred(format!(
+                "session table full ({} active)",
+                self.sessions.len()
+            )));
+        }
+        self.lane_owner
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| {
+                Error::AdmissionDeferred(format!(
+                    "no free lane ({} lanes busy)",
+                    self.cfg.lanes
+                ))
+            })
+    }
+
     /// Open a session for head dimension `d`; returns its id. Admission
-    /// needs both a session slot and a free lane; the session is pinned
-    /// to the lowest free lane (closed sessions' lanes are reclaimed).
+    /// needs both a session slot and a free lane — when either is
+    /// exhausted the result is [`Error::AdmissionDeferred`], the typed
+    /// retry signal the serving loop requeues on (a hard reject here
+    /// used to strand burst traffic with no retry path). The session is
+    /// pinned to the lowest free lane (closed sessions' lanes are
+    /// reclaimed).
     pub fn open(&mut self, d: usize) -> Result<u64> {
         if d == 0 {
             return Err(Error::Coordinator(
                 "decode session needs a head dimension ≥ 1".into(),
             ));
         }
-        if self.sessions.len() >= self.cfg.max_sessions {
-            return Err(Error::Coordinator(format!(
-                "session table full ({} active)",
-                self.sessions.len()
-            )));
-        }
-        let lane = self
-            .lane_owner
-            .iter()
-            .position(Option::is_none)
-            .ok_or_else(|| {
-                Error::Coordinator(format!(
-                    "no free lane ({} lanes busy)",
-                    self.cfg.lanes
-                ))
-            })?;
+        let lane = self.admit_slot()?;
         let id = self.next_id;
         self.next_id += 1;
-        let mut session = DecodeSession::new(self.cfg.kind, d);
+        let mut session = PagedDecodeSession::new(self.cfg.kind, d);
         if let Some(mode) = self.cfg.mode {
             session.set_scheduler_mode(mode);
         }
@@ -139,6 +177,39 @@ impl SessionTable {
                 class: DecodeClass { d },
                 lane,
                 session,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Open a session **forked from `parent`**: the child shares the
+    /// parent's entire cached prefix (refcounted blocks, zero copies;
+    /// copy-on-write on the first divergent append) and starts with an
+    /// empty transcript. Admission control and lane placement match
+    /// [`Self::open`]; an unknown parent is a hard error, a full table
+    /// or pool defers.
+    pub fn fork(&mut self, parent: u64) -> Result<u64> {
+        if !self.sessions.contains_key(&parent) {
+            return Err(Error::Coordinator(format!(
+                "unknown decode session {parent}"
+            )));
+        }
+        let lane = self.admit_slot()?;
+        // A preempted parent must be resident to share its blocks.
+        self.ensure_resident(parent, &[parent])?;
+        let (class, child) = {
+            let entry = self.sessions.get(&parent).expect("checked above");
+            (entry.class, entry.session.fork(&mut self.pool)?)
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        self.lane_owner[lane] = Some(id);
+        self.sessions.insert(
+            id,
+            Entry {
+                class,
+                lane,
+                session: child,
             },
         );
         Ok(id)
@@ -159,6 +230,17 @@ impl SessionTable {
         self.sessions.get(&id).map(|e| e.session.len())
     }
 
+    /// Blocks a session's table currently references (0 while
+    /// preempted).
+    pub fn blocks_of(&self, id: u64) -> Option<usize> {
+        self.sessions.get(&id).map(|e| e.session.table().num_blocks())
+    }
+
+    /// Whether a session's cache is currently swapped out.
+    pub fn is_preempted(&self, id: u64) -> Option<bool> {
+        self.sessions.get(&id).map(|e| e.session.is_preempted())
+    }
+
     /// Pool width (configured lanes).
     pub fn lanes(&self) -> usize {
         self.cfg.lanes
@@ -167,6 +249,37 @@ impl SessionTable {
     /// Lanes currently pinned to a session.
     pub fn lanes_in_use(&self) -> usize {
         self.lane_owner.iter().filter(|o| o.is_some()).count()
+    }
+
+    /// Total blocks in the shared KV-cache pool.
+    pub fn pool_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    /// Blocks currently allocated from the pool.
+    pub fn pool_used_blocks(&self) -> usize {
+        self.pool.used_blocks()
+    }
+
+    /// Blocks currently free in the pool.
+    pub fn pool_free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Allocated blocks referenced by more than one session — the
+    /// prefix-sharing win.
+    pub fn pool_shared_blocks(&self) -> usize {
+        self.pool.shared_blocks()
+    }
+
+    /// Rows per block in the shared pool.
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    /// Sessions preempted (swapped out) so far — monotonic counter.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 
     /// Validate one step request against the table and its session;
@@ -191,23 +304,156 @@ impl SessionTable {
         Ok(class)
     }
 
+    /// Swap out the resident session (outside `exclude`) that frees the
+    /// most blocks; ties go to the lowest id so victim choice is
+    /// deterministic. When no candidate owns an exclusive block — e.g.
+    /// a fork family whose blocks are all shared at refcount > 1 — the
+    /// fallback preempts the candidate holding the *most* block
+    /// references: that frees nothing immediately but drops the
+    /// refcounts, so the next call (every caller retries in a loop)
+    /// finds exclusive blocks and reclaims them. Each call strictly
+    /// decreases the total reference count, so the retry loops
+    /// terminate. Returns whether anything was preempted.
+    fn preempt_victim(&mut self, exclude: &[u64]) -> bool {
+        // (exclusive blocks, total block refs, id) per candidate.
+        let mut best_exclusive: Option<(usize, u64)> = None;
+        let mut best_any: Option<(usize, u64)> = None;
+        for (&id, entry) in &self.sessions {
+            if exclude.contains(&id) || entry.session.is_preempted() {
+                continue;
+            }
+            let held = entry.session.table().num_blocks();
+            if held == 0 {
+                continue;
+            }
+            let freed = self.pool.exclusive_blocks(entry.session.table());
+            let better = |best: Option<(usize, u64)>, score: usize| match best {
+                None => true,
+                Some((bs, bid)) => score > bs || (score == bs && id < bid),
+            };
+            if freed > 0 && better(best_exclusive, freed) {
+                best_exclusive = Some((freed, id));
+            }
+            if better(best_any, held) {
+                best_any = Some((held, id));
+            }
+        }
+        let Some((_, victim)) = best_exclusive.or(best_any) else {
+            return false;
+        };
+        let entry = self.sessions.get_mut(&victim).expect("selected above");
+        entry.session.preempt(&mut self.pool);
+        self.preemptions += 1;
+        true
+    }
+
+    /// Hard cap: a cache of `rows` rows that cannot fit the pool even
+    /// alone can never be served — that is a configuration error, not a
+    /// deferral (deferring it would livelock the retry loop).
+    fn check_pool_fits(&self, id: u64, rows: usize) -> Result<()> {
+        let needed = self.pool.blocks_for(rows);
+        if needed > self.pool.capacity() {
+            return Err(Error::Coordinator(format!(
+                "session {id} needs {needed} blocks for {rows} rows; the kv-cache \
+                 pool holds only {} (raise num_blocks or block_size)",
+                self.pool.capacity()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Restore a preempted session's cache, preempting victims outside
+    /// `exclude` as needed. Defers only when no victim can free another
+    /// block.
+    fn ensure_resident(&mut self, id: u64, exclude: &[u64]) -> Result<()> {
+        let len = self
+            .sessions
+            .get(&id)
+            .map(|e| e.session.len())
+            .ok_or_else(|| Error::Coordinator(format!("unknown decode session {id}")))?;
+        self.check_pool_fits(id, len)?;
+        loop {
+            let entry = self.sessions.get_mut(&id).expect("checked above");
+            match entry.session.restore(&mut self.pool) {
+                Ok(()) => return Ok(()),
+                Err(Error::AdmissionDeferred(msg)) => {
+                    if !self.preempt_victim(exclude) {
+                        return Err(Error::AdmissionDeferred(msg));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Stage one step's `(k, v)` onto a session under pool pressure:
+    /// restore the session if preempted, append the row, and on block
+    /// exhaustion preempt victims outside `exclude` and retry. Each
+    /// retry strictly frees blocks, so the loop terminates; when no
+    /// victim remains the step defers for the caller to requeue.
+    fn stage_with_pressure(
+        &mut self,
+        id: u64,
+        exclude: &[u64],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        let len = self
+            .sessions
+            .get(&id)
+            .map(|e| e.session.len())
+            .ok_or_else(|| Error::Coordinator(format!("unknown decode session {id}")))?;
+        self.check_pool_fits(id, len + 1)?;
+        loop {
+            let entry = self.sessions.get_mut(&id).expect("checked above");
+            let attempt = match entry.session.restore(&mut self.pool) {
+                Ok(()) => entry.session.stage(&mut self.pool, q, k, v),
+                Err(e) => Err(e),
+            };
+            match attempt {
+                Ok(()) => return Ok(()),
+                Err(Error::AdmissionDeferred(msg)) => {
+                    if !self.preempt_victim(exclude) {
+                        return Err(Error::AdmissionDeferred(msg));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
     /// Run one decode step for the request's session, alone in its own
     /// engine — the standalone path waves are differentially compared
-    /// against.
+    /// against. Pool pressure behaves as in waves: victims are
+    /// preempted to make room, and [`Error::AdmissionDeferred`] asks
+    /// the caller to retry later.
     pub fn step(&mut self, req: DecodeStepRequest) -> Result<DecodeStepResponse> {
         let class = self.admit_step(&req)?;
+        let exclude = [req.session];
+        self.stage_with_pressure(req.session, &exclude, &req.q, &req.k, &req.v)?;
         let entry = self.sessions.get_mut(&req.session).expect("admitted");
         let lane = entry.lane;
-        let outcome = entry.session.step(req.q, req.k, req.v)?;
+        let (row, summary) = match entry.session.run_staged(&self.pool, &req.q) {
+            Ok(ok) => ok,
+            Err(e) => {
+                // A failed step must not corrupt the session: unwind
+                // the staged row so a retry sees the pre-step state.
+                entry.session.unstage(&mut self.pool);
+                return Err(e);
+            }
+        };
+        entry.session.commit_row(&mut self.pool, row.clone());
+        let step = (entry.session.len() - 1) as u64;
         self.steps_served += 1;
         Ok(DecodeStepResponse {
             session: req.session,
-            step: outcome.step as u64,
+            step,
             class,
             lane,
             wave_lanes: 1,
-            row: outcome.row,
-            cycles: outcome.summary.cycles,
+            row,
+            cycles: summary.cycles,
         })
     }
 
@@ -217,18 +463,25 @@ impl SessionTable {
     /// per-request results in input order. Requests that fail admission
     /// (unknown session, sticky-class violation, context window, a
     /// duplicate session in the wave, bad shapes) error individually
-    /// without disturbing the rest of the wave.
+    /// without disturbing the rest of the wave; requests the block pool
+    /// cannot currently hold return [`Error::AdmissionDeferred`]
+    /// individually for the caller to requeue. Staged block
+    /// allocations are transactional: a failed wave unwinds every
+    /// session's staged row (and its block, if freshly allocated).
+    /// Requests are borrowed so a deferred one can be requeued by the
+    /// caller without re-cloning its rows.
     pub fn step_wave(
         &mut self,
-        mut reqs: Vec<DecodeStepRequest>,
+        reqs: &[DecodeStepRequest],
     ) -> Vec<Result<DecodeStepResponse>> {
         let mut results: Vec<Option<Result<DecodeStepResponse>>> =
             (0..reqs.len()).map(|_| None).collect();
-        // Stage: validate and move each step's (k, v) into its cache
-        // (the wave owns `reqs`, so staging transfers the rows instead
-        // of cloning them — this runs once per decode step served).
+        // Stage: validate each step and append its (k, v) to the
+        // session's block table under pool pressure. Earlier-staged
+        // wave members are protected from preemption; a session that
+        // cannot get blocks defers individually.
         let mut staged: Vec<(usize, u64, DecodeClass)> = Vec::new();
-        for (i, req) in reqs.iter_mut().enumerate() {
+        for (i, req) in reqs.iter().enumerate() {
             if staged.iter().any(|&(_, id, _)| id == req.session) {
                 results[i] = Some(Err(Error::Coordinator(format!(
                     "session {} appears twice in one wave (iteration-level \
@@ -237,11 +490,11 @@ impl SessionTable {
                 ))));
                 continue;
             }
+            let mut exclude: Vec<u64> = staged.iter().map(|&(_, id, _)| id).collect();
+            exclude.push(req.session);
             let admitted = self.admit_step(req).and_then(|class| {
-                let entry = self.sessions.get_mut(&req.session).expect("admitted");
-                let k = std::mem::take(&mut req.k);
-                let v = std::mem::take(&mut req.v);
-                entry.session.stage(&req.q, k, v).map(|()| class)
+                self.stage_with_pressure(req.session, &exclude, &req.q, &req.k, &req.v)
+                    .map(|()| class)
             });
             match admitted {
                 Ok(class) => staged.push((i, req.session, class)),
@@ -250,22 +503,22 @@ impl SessionTable {
         }
         if !staged.is_empty() {
             // Build one engine with one decode pipeline per staged
-            // session, scoped by its sticky lane.
+            // session, scoped by its sticky lane; each lane's K/V rows
+            // are gathered by walking the session's block table.
             let built = {
-                let steps: Vec<LaneStep<'_>> = staged
-                    .iter()
-                    .map(|&(i, id, _)| {
-                        let entry = self.sessions.get(&id).expect("staged");
-                        LaneStep {
-                            kind: entry.session.kind(),
-                            lane: entry.lane,
-                            q: &reqs[i].q,
-                            keys: entry.session.keys(),
-                            values: entry.session.values(),
-                        }
-                    })
-                    .collect();
-                build_decode_lanes(&steps, DepthPolicy::Inferred)
+                let mut steps: Vec<LaneStepRows<'_>> = Vec::with_capacity(staged.len());
+                for &(i, id, _) in &staged {
+                    let entry = self.sessions.get(&id).expect("staged");
+                    let view = self.pool.view(entry.session.table());
+                    steps.push(LaneStepRows {
+                        kind: entry.session.kind(),
+                        lane: entry.lane,
+                        q: &reqs[i].q,
+                        keys: view.keys,
+                        values: view.values,
+                    });
+                }
+                build_decode_lanes_rows(&steps, DepthPolicy::Inferred)
             };
             let run = built.and_then(|mut pool| {
                 if let Some(mode) = self.cfg.mode {
@@ -278,7 +531,7 @@ impl SessionTable {
                     let wave_lanes = staged.len();
                     for (j, &(i, id, class)) in staged.iter().enumerate() {
                         let entry = self.sessions.get_mut(&id).expect("staged");
-                        entry.session.commit_row(rows[j].clone());
+                        entry.session.commit_row(&mut self.pool, rows[j].clone());
                         let lane = entry.lane;
                         let step = (entry.session.len() - 1) as u64;
                         self.steps_served += 1;
@@ -296,12 +549,13 @@ impl SessionTable {
                     }
                 }
                 Err(e) => {
-                    // Unwind every staged cache: a failed wave must
-                    // leave all sessions exactly as they were.
+                    // Unwind every staged cache row (and any block it
+                    // allocated): a failed wave must leave all sessions
+                    // exactly as they were.
                     let msg = e.to_string();
                     for &(i, id, _) in &staged {
                         if let Some(entry) = self.sessions.get_mut(&id) {
-                            entry.session.unstage();
+                            entry.session.unstage(&mut self.pool);
                         }
                         results[i] = Some(Err(Error::Coordinator(format!(
                             "decode wave failed: {msg}"
@@ -318,11 +572,12 @@ impl SessionTable {
 
     /// Retire a session, returning its output transcript (one row per
     /// decoded token), or `None` if the id is unknown. The session's
-    /// lane is reclaimed for the next admission.
+    /// lane and block references are reclaimed for the next admission
+    /// (shared blocks free once their last referencing session closes).
     pub fn close(&mut self, id: u64) -> Option<Matrix> {
         let entry = self.sessions.remove(&id)?;
         self.lane_owner[entry.lane] = None;
-        Some(entry.session.outputs().clone())
+        Some(entry.session.close(&mut self.pool))
     }
 
     /// Number of open sessions.
@@ -339,6 +594,7 @@ impl SessionTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::decode::{decode_workload, DecodeSession};
     use crate::attention::reference::{assert_close, sdpa_online_f32_masked};
     use crate::attention::workload::{Mask, Workload};
 
@@ -374,6 +630,7 @@ mod tests {
         );
         assert_eq!(table.active(), 0);
         assert_eq!(table.lanes_in_use(), 0, "lane reclaimed on close");
+        assert_eq!(table.pool_used_blocks(), 0, "blocks reclaimed on close");
         assert_eq!(table.steps_served(), w.n as u64);
     }
 
@@ -434,11 +691,17 @@ mod tests {
         .unwrap();
         let a = table.open(2).unwrap();
         let _b = table.open(2).unwrap();
-        assert!(matches!(table.open(2), Err(Error::Coordinator(_))));
+        // Admission at capacity is *deferred* (the typed retry signal),
+        // not hard-refused — the requeue-path bugfix.
+        assert!(matches!(
+            table.open(2),
+            Err(Error::AdmissionDeferred(msg)) if msg.contains("session table full")
+        ));
         // Free a slot and re-admit.
         assert!(table.close(a).is_some());
         let c = table.open(2).unwrap();
-        // Context window: third step must be rejected.
+        // Context window: third step must be rejected (hard — retrying
+        // cannot shrink a session).
         for _ in 0..2 {
             table
                 .step(req(c, vec![0.1, 0.2], vec![0.3, 0.4], vec![0.5, 0.6]))
@@ -462,10 +725,12 @@ mod tests {
             (table.lane_of(a), table.lane_of(b), table.lane_of(c)),
             (Some(0), Some(1), Some(2))
         );
-        // Pool exhausted: admission fails on lanes even though
+        // Pool exhausted: admission defers on lanes even though
         // max_sessions (64) has room.
         let err = table.open(2);
-        assert!(matches!(err, Err(Error::Coordinator(msg)) if msg.contains("no free lane")));
+        assert!(
+            matches!(err, Err(Error::AdmissionDeferred(msg)) if msg.contains("no free lane"))
+        );
         // Eviction-on-close reclaims the lane; reuse is lowest-first.
         table.close(b).unwrap();
         assert_eq!(table.lanes_in_use(), 2);
@@ -480,8 +745,10 @@ mod tests {
     #[test]
     fn wave_transcripts_are_bit_identical_to_solo_sessions() {
         // The continuous-batching core guarantee, at the table level:
-        // stepping sessions in waves yields transcripts bitwise equal
-        // to stepping each session alone.
+        // stepping sessions in waves (over the paged cache) yields
+        // transcripts bitwise equal to stepping each session alone on
+        // the *contiguous* DecodeSession — the paged-vs-contiguous
+        // differential in one assert.
         let lens = [2usize, 5, 3, 4];
         let ws: Vec<Workload> = lens
             .iter()
@@ -490,6 +757,10 @@ mod tests {
             .collect();
         let mut table = SessionTable::new(SessionConfig {
             lanes: 4,
+            kv: KvCacheConfig {
+                block_size: 2,
+                num_blocks: 32,
+            },
             ..SessionConfig::default()
         })
         .unwrap();
@@ -503,7 +774,7 @@ mod tests {
                 .map(|(s, w)| wreq(w, ids[s], t))
                 .collect();
             let expect_lanes = reqs.len();
-            for res in table.step_wave(reqs) {
+            for res in table.step_wave(&reqs) {
                 let resp = res.unwrap();
                 assert_eq!(resp.step, t as u64);
                 assert_eq!(resp.wave_lanes, expect_lanes, "all lanes co-scheduled");
@@ -519,9 +790,10 @@ mod tests {
             assert_eq!(
                 &transcript,
                 solo.outputs(),
-                "session {s}: wave transcript ≡ solo transcript bitwise"
+                "session {s}: paged wave transcript ≡ contiguous solo transcript bitwise"
             );
         }
+        assert_eq!(table.pool_used_blocks(), 0, "all blocks reclaimed");
     }
 
     #[test]
@@ -543,7 +815,7 @@ mod tests {
             wreq(&w, id, 1),
             req(id2, vec![0.0; 4], vec![0.0; 4], vec![0.0; 4]),
         ];
-        let results = table.step_wave(reqs);
+        let results = table.step_wave(&reqs);
         assert!(results[0].is_ok(), "good step survives bad neighbours");
         assert!(
             matches!(&results[1], Err(Error::Coordinator(m)) if m.contains("unknown")),
@@ -560,9 +832,9 @@ mod tests {
         assert_eq!(table.len_of(id), Some(1), "only the good step landed");
         assert_eq!(table.len_of(id2), Some(0));
         // Context window applies to waves too.
-        let r = table.step_wave(vec![wreq(&w, id, 1)]);
+        let r = table.step_wave(&[wreq(&w, id, 1)]);
         assert!(r[0].is_ok());
-        let r = table.step_wave(vec![wreq(&w, id, 2)]);
+        let r = table.step_wave(&[wreq(&w, id, 2)]);
         assert!(
             matches!(&r[0], Err(Error::Coordinator(m)) if m.contains("context window"))
         );
@@ -584,7 +856,7 @@ mod tests {
         // Advance a by two solo steps so the wave sees different lens.
         table.step(wreq(&wa, a, 0)).unwrap();
         table.step(wreq(&wa, a, 1)).unwrap();
-        let results = table.step_wave(vec![wreq(&wa, a, 2), wreq(&wb, b, 0)]);
+        let results = table.step_wave(&[wreq(&wa, a, 2), wreq(&wb, b, 0)]);
         for r in &results {
             assert!(r.is_ok(), "heterogeneous wave must be Ok: {r:?}");
         }
@@ -600,6 +872,13 @@ mod tests {
             SessionConfig { lanes: 0, ..SessionConfig::default() },
             SessionConfig { max_sessions: 0, ..SessionConfig::default() },
             SessionConfig { max_len: 0, ..SessionConfig::default() },
+            SessionConfig {
+                kv: KvCacheConfig {
+                    block_size: 0,
+                    num_blocks: 4,
+                },
+                ..SessionConfig::default()
+            },
         ] {
             assert!(
                 matches!(SessionTable::new(bad), Err(Error::Coordinator(_))),
@@ -617,5 +896,193 @@ mod tests {
         assert!(table.close(99).is_none());
         assert_eq!(table.class_of(99), None);
         assert_eq!(table.lane_of(99), None);
+        assert!(matches!(
+            table.fork(99),
+            Err(Error::Coordinator(msg)) if msg.contains("unknown")
+        ));
+    }
+
+    #[test]
+    fn forked_sessions_share_prefix_blocks_exactly() {
+        // The acceptance shape: two sessions forked from a common M-row
+        // prefix consume M/block_size shared blocks + 2 private tails.
+        let m = 4;
+        let bs = 2;
+        let w = Workload::random(m + 1, 4, 0xF0A1);
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 4,
+            kv: KvCacheConfig {
+                block_size: bs,
+                num_blocks: 16,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let parent = table.open(4).unwrap();
+        for t in 0..m {
+            table.step(wreq(&w, parent, t)).unwrap();
+        }
+        let a = table.fork(parent).unwrap();
+        let b = table.fork(parent).unwrap();
+        assert_eq!(table.len_of(a), Some(m), "fork sees the shared prefix");
+        assert_eq!(table.class_of(a), Some(DecodeClass { d: 4 }));
+        // Retire the parent; the children keep the prefix alive.
+        let parent_transcript = table.close(parent).unwrap();
+        assert_eq!(parent_transcript.len(), m);
+        assert_eq!(
+            table.pool_used_blocks(),
+            m / bs,
+            "fork shares, it does not copy"
+        );
+        assert_eq!(table.pool_shared_blocks(), m / bs);
+        // Each child decodes one token past the prefix → one private
+        // tail block each.
+        let ra = table.step(wreq(&w, a, m)).unwrap();
+        let rb = table.step(wreq(&w, b, m)).unwrap();
+        assert_eq!(ra.step, m as u64, "child steps continue past the prefix");
+        assert_eq!(
+            table.pool_used_blocks(),
+            m / bs + 2,
+            "M/block_size shared blocks + 2 private tails"
+        );
+        assert_eq!(table.pool_shared_blocks(), m / bs);
+        // Both children computed the same continuation row, and it is
+        // bitwise the contiguous chain's row m.
+        let baseline = decode_workload(DecodeKind::MemoryFree, &w).unwrap();
+        assert_eq!(ra.row, baseline[m], "forked row ≡ contiguous chain row");
+        assert_eq!(rb.row, baseline[m]);
+        table.close(a).unwrap();
+        table.close(b).unwrap();
+        assert_eq!(table.pool_used_blocks(), 0, "last close frees the prefix");
+    }
+
+    #[test]
+    fn pool_pressure_preempts_and_transcripts_stay_bit_identical() {
+        // Pool of 4 single-row blocks, two sessions needing 4 + 2 rows:
+        // serving them interleaved forces preemption, and every
+        // transcript must still equal the unpressured contiguous run.
+        let wa = Workload::random(4, 4, 0x9E5501);
+        let wb = Workload::random(2, 4, 0x9E5502);
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 2,
+            kv: KvCacheConfig {
+                block_size: 1,
+                num_blocks: 4,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let a = table.open(4).unwrap();
+        let b = table.open(4).unwrap();
+        for t in 0..3 {
+            table.step(wreq(&wa, a, t)).unwrap();
+        }
+        table.step(wreq(&wb, b, 0)).unwrap(); // pool now full (3 + 1)
+        assert_eq!(table.pool_free_blocks(), 0);
+        // a's 4th row has no block: b (1 exclusive block) is preempted.
+        table.step(wreq(&wa, a, 3)).unwrap();
+        assert_eq!(table.is_preempted(b), Some(true), "b swapped out");
+        assert!(table.preemptions() >= 1);
+        // b's next step restores it (preempting a in turn).
+        table.step(wreq(&wb, b, 1)).unwrap();
+        assert_eq!(table.is_preempted(a), Some(true), "a swapped out");
+        assert_eq!(table.len_of(b), Some(2));
+        let ta = table.close(a).unwrap();
+        let tb = table.close(b).unwrap();
+        assert_eq!(
+            ta,
+            decode_workload(DecodeKind::MemoryFree, &wa).unwrap(),
+            "preempted session a ≡ unpressured chain bitwise"
+        );
+        assert_eq!(
+            tb,
+            decode_workload(DecodeKind::MemoryFree, &wb).unwrap(),
+            "preempted session b ≡ unpressured chain bitwise"
+        );
+        assert_eq!(table.pool_used_blocks(), 0);
+    }
+
+    #[test]
+    fn a_session_larger_than_the_pool_is_a_hard_error() {
+        let w = Workload::random(3, 2, 0xCAFE);
+        let mut table = SessionTable::new(SessionConfig {
+            kv: KvCacheConfig {
+                block_size: 1,
+                num_blocks: 2,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let id = table.open(2).unwrap();
+        table.step(wreq(&w, id, 0)).unwrap();
+        table.step(wreq(&w, id, 1)).unwrap();
+        // Row 3 can never fit a 2-block pool: deferring would retry
+        // forever, so this is a hard Coordinator error.
+        let err = table.step(wreq(&w, id, 2));
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("pool")),
+            "oversized session must hard-fail, not defer"
+        );
+        assert_eq!(table.len_of(id), Some(2), "failed step did not stage");
+    }
+
+    #[test]
+    fn wave_under_pool_pressure_defers_individually_and_recovers() {
+        // Two sessions whose joint demand exceeds the pool, stepped in
+        // waves: each wave completes at least one step (the other
+        // defers), and alternating priority lets both finish with
+        // bit-identical transcripts.
+        let wa = Workload::random(3, 4, 0x9E5503);
+        let wb = Workload::random(3, 4, 0x9E5504);
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: 2,
+            kv: KvCacheConfig {
+                block_size: 1,
+                num_blocks: 3,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let a = table.open(4).unwrap();
+        let b = table.open(4).unwrap();
+        let mut ta = 0usize;
+        let mut tb = 0usize;
+        let mut deferred_first: Option<u64> = None;
+        let mut guard = 0;
+        while ta < wa.n || tb < wb.n {
+            guard += 1;
+            assert!(guard < 50, "pressure waves must make progress");
+            let mut reqs = Vec::new();
+            // Deferred-session-first ordering (what the server does).
+            let order: Vec<(u64, &Workload, &mut usize)> = if deferred_first == Some(b) {
+                vec![(b, &wb, &mut tb), (a, &wa, &mut ta)]
+            } else {
+                vec![(a, &wa, &mut ta), (b, &wb, &mut tb)]
+            };
+            let mut cursors = Vec::new();
+            for (id, w, t) in order {
+                if *t < w.n {
+                    reqs.push(wreq(w, id, *t));
+                    cursors.push((id, t));
+                }
+            }
+            if reqs.is_empty() {
+                break;
+            }
+            let results = table.step_wave(&reqs);
+            deferred_first = None;
+            for (res, (id, t)) in results.into_iter().zip(cursors) {
+                match res {
+                    Ok(_) => *t += 1,
+                    Err(Error::AdmissionDeferred(_)) => deferred_first = Some(id),
+                    Err(e) => panic!("unexpected wave error: {e}"),
+                }
+            }
+        }
+        assert!(table.preemptions() > 0, "pressure must have preempted");
+        let ta = table.close(a).unwrap();
+        let tb = table.close(b).unwrap();
+        assert_eq!(ta, decode_workload(DecodeKind::MemoryFree, &wa).unwrap());
+        assert_eq!(tb, decode_workload(DecodeKind::MemoryFree, &wb).unwrap());
     }
 }

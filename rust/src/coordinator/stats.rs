@@ -89,6 +89,13 @@ pub struct ServingStats {
     // Session lifecycle.
     sessions_opened: u64,
     sessions_closed: u64,
+    // Paged KV-cache pool (gauges mirrored from the session table
+    // after each scheduling iteration, plus requeue counters).
+    pool_capacity: usize,
+    pool_used: usize,
+    pool_shared: usize,
+    preemptions: u64,
+    deferrals: u64,
     /// Set on the first recorded event; throughput denominators start
     /// here, not at construction.
     first_event: Option<Instant>,
@@ -118,6 +125,11 @@ impl ServingStats {
             lane_capacity: 0,
             sessions_opened: 0,
             sessions_closed: 0,
+            pool_capacity: 0,
+            pool_used: 0,
+            pool_shared: 0,
+            preemptions: 0,
+            deferrals: 0,
             first_event: None,
         }
     }
@@ -301,6 +313,61 @@ impl ServingStats {
         self.sessions_closed
     }
 
+    // ---- paged KV cache ---------------------------------------------
+
+    /// Record the block-pool width (for the occupancy ratio).
+    pub fn set_pool_capacity(&mut self, blocks: usize) {
+        self.pool_capacity = blocks;
+    }
+
+    /// Mirror the pool gauges: blocks in use, blocks shared by more
+    /// than one session, and the monotonic preemption counter. Called
+    /// by the serving loop after each scheduling iteration.
+    pub fn set_pool_gauges(&mut self, used: usize, shared: usize, preemptions: u64) {
+        self.pool_used = used;
+        self.pool_shared = shared;
+        self.preemptions = preemptions;
+    }
+
+    /// Record one deferred admission (open, fork, or step requeued by
+    /// the serving loop because a bounded resource was exhausted).
+    pub fn record_deferral(&mut self) {
+        self.touch();
+        self.deferrals += 1;
+    }
+
+    /// Blocks currently allocated from the pool.
+    pub fn pool_used(&self) -> usize {
+        self.pool_used
+    }
+
+    /// Pool occupancy (0.0–1.0), `None` without a known capacity.
+    pub fn pool_occupancy(&self) -> Option<f64> {
+        if self.pool_capacity == 0 {
+            return None;
+        }
+        Some(self.pool_used as f64 / self.pool_capacity as f64)
+    }
+
+    /// Fraction of allocated blocks referenced by more than one session
+    /// (the prefix-sharing win), `None` while nothing is allocated.
+    pub fn shared_block_ratio(&self) -> Option<f64> {
+        if self.pool_used == 0 {
+            return None;
+        }
+        Some(self.pool_shared as f64 / self.pool_used as f64)
+    }
+
+    /// Sessions preempted (swapped out of the pool) so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Admissions deferred and requeued so far.
+    pub fn deferrals(&self) -> u64 {
+        self.deferrals
+    }
+
     /// One-line summary for logs/reports.
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -326,6 +393,16 @@ impl ServingStats {
                 self.lane_occupancy().unwrap_or(0.0),
                 self.sessions_opened,
                 self.sessions_closed,
+            ));
+        }
+        if self.pool_capacity > 0 {
+            s.push_str(&format!(
+                " | kv pool={}/{} blocks shared={:.2} preempts={} deferrals={}",
+                self.pool_used,
+                self.pool_capacity,
+                self.shared_block_ratio().unwrap_or(0.0),
+                self.preemptions,
+                self.deferrals,
             ));
         }
         s
@@ -437,5 +514,25 @@ mod tests {
         let line = s.summary();
         assert!(line.contains("decode steps=2"));
         assert!(line.contains("sessions=2/1"));
+    }
+
+    #[test]
+    fn kv_pool_gauges_and_requeue_counters() {
+        let mut s = ServingStats::new();
+        assert_eq!(s.pool_occupancy(), None, "no capacity → no occupancy");
+        assert_eq!(s.shared_block_ratio(), None);
+        s.set_pool_capacity(16);
+        s.set_pool_gauges(8, 2, 3);
+        s.record_deferral();
+        s.record_deferral();
+        assert_eq!(s.pool_used(), 8);
+        assert_eq!(s.pool_occupancy(), Some(0.5));
+        assert_eq!(s.shared_block_ratio(), Some(0.25));
+        assert_eq!(s.preemptions(), 3);
+        assert_eq!(s.deferrals(), 2);
+        let line = s.summary();
+        assert!(line.contains("kv pool=8/16"), "summary: {line}");
+        assert!(line.contains("preempts=3"));
+        assert!(line.contains("deferrals=2"));
     }
 }

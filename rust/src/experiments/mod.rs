@@ -14,11 +14,13 @@
 //! | [`ablation::run`] | extension: min FIFO depth = N+1+L(exp) latency study |
 //! | [`decode::run`] | extension: decode-step cost/memory vs cache length |
 //! | [`serving::run`] | extension: serving lane-pool throughput vs lane count |
+//! | [`paging::run`] | extension: paged KV cache — prefix sharing + preemption vs pool size |
 
 pub mod ablation;
 pub mod decode;
 pub mod fifo_sweep;
 pub mod numerics;
+pub mod paging;
 pub mod scaling;
 pub mod serving;
 pub mod table1;
@@ -43,5 +45,7 @@ pub fn run_all(n: usize, d: usize) -> Result<()> {
     decode::run(&[4, 16, 64], d)?.table().print();
     println!();
     serving::run(&[1, 2, 4, 8], n.clamp(1, 64), d)?.table().print();
+    println!();
+    paging::run(&[64, 16, 8], 4, 8, 4, d.min(16), 2)?.table().print();
     Ok(())
 }

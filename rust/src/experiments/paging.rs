@@ -1,0 +1,413 @@
+//! Paged KV-cache pool-pressure scaling study.
+//!
+//! Serving workload: one parent session prefills a shared `prefix`,
+//! `sessions − 1` children fork from it (refcounted blocks, zero
+//! copies), and then every session decodes `steps` continuation tokens
+//! through continuous-batching waves. The study sweeps the block-pool
+//! size from ample to scarce and reports, per pool size:
+//!
+//! * **peak occupancy** — blocks in use at the high-water mark over the
+//!   capacity (never exceeds 1.0: the pool is a hard bound, which is
+//!   the point — contiguous caches had no bound at all);
+//! * **shared blocks** — prefix blocks referenced by every fork
+//!   (`prefix / block_size` when sharing works; the contiguous design
+//!   stored this data once *per session*);
+//! * **preemptions / deferrals / waves** — how much swapping and
+//!   requeueing the pressure forced;
+//! * **bit-identical** — whether every transcript still equals the
+//!   unpressured contiguous [`DecodeSession`] chain bit for bit. This
+//!   must hold at every pool size: pressure may cost time, never
+//!   correctness.
+//!
+//! `benches/paging_throughput.rs` is the wall-clock twin emitting
+//! `BENCH_paging.json` for CI.
+
+use crate::attention::decode::{DecodeKind, DecodeSession};
+use crate::attention::workload::Workload;
+use crate::coordinator::{DecodeStepRequest, SessionConfig, SessionTable};
+use crate::report::Table;
+use crate::runtime::kvcache::KvCacheConfig;
+use crate::sim::SchedulerMode;
+use crate::{Error, Result};
+
+/// One pool-size measurement.
+#[derive(Clone, Debug)]
+pub struct PagingPoint {
+    /// Blocks in the pool for this run.
+    pub num_blocks: usize,
+    /// High-water blocks in use across the run.
+    pub peak_used_blocks: usize,
+    /// Shared blocks right after the forks (the prefix-sharing win).
+    pub shared_blocks: usize,
+    /// Sessions swapped out under pressure.
+    pub preemptions: u64,
+    /// Wave steps deferred and retried.
+    pub deferrals: u64,
+    /// Scheduling iterations needed to serve every step.
+    pub waves: u64,
+    /// Every transcript bitwise equal to the unpressured contiguous
+    /// chain.
+    pub bit_identical: bool,
+}
+
+impl PagingPoint {
+    /// Peak occupancy over capacity (0.0–1.0].
+    pub fn peak_occupancy(&self) -> f64 {
+        self.peak_used_blocks as f64 / self.num_blocks as f64
+    }
+}
+
+/// Full pool-pressure study at one serving shape.
+#[derive(Clone, Debug)]
+pub struct PagingResult {
+    /// Concurrent sessions (1 parent + forks).
+    pub sessions: usize,
+    /// Shared prefix tokens decoded by the parent before forking.
+    pub prefix: usize,
+    /// Continuation tokens decoded by every session after the forks.
+    pub steps: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Rows per block.
+    pub block_size: usize,
+    /// Points in the order the pool sizes were given.
+    pub points: Vec<PagingPoint>,
+}
+
+impl PagingResult {
+    /// Look up one point.
+    pub fn point(&self, num_blocks: usize) -> Option<&PagingPoint> {
+        self.points.iter().find(|p| p.num_blocks == num_blocks)
+    }
+
+    /// Render the study table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Paged KV cache vs pool size ({} sessions, prefix={}, steps={}, d={}, block_size={})",
+                self.sessions, self.prefix, self.steps, self.d, self.block_size
+            ),
+            &[
+                "pool blocks",
+                "peak occupancy",
+                "shared blocks",
+                "preemptions",
+                "deferrals",
+                "waves",
+                "bit-identical",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.num_blocks.to_string(),
+                format!("{:.2}", p.peak_occupancy()),
+                p.shared_blocks.to_string(),
+                p.preemptions.to_string(),
+                p.deferrals.to_string(),
+                p.waves.to_string(),
+                if p.bit_identical { "YES".into() } else { "NO".into() },
+            ]);
+        }
+        t
+    }
+}
+
+/// The (q, k, v) row session `s` feeds at step `t`: the first `prefix`
+/// rows come from the shared workload (every session sees the same
+/// prompt), later rows from the session's own continuation workload.
+fn row(
+    shared: &Workload,
+    conts: &[Workload],
+    prefix: usize,
+    s: usize,
+    t: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let w = if t < prefix { shared } else { &conts[s] };
+    (w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+}
+
+/// What one full fork-and-decode episode did (see [`run_episode`]).
+#[derive(Clone, Debug)]
+pub struct EpisodeReport {
+    /// Scheduling iterations needed to serve every step.
+    pub waves: u64,
+    /// Wave steps deferred and retried.
+    pub deferrals: u64,
+    /// High-water blocks in use across the episode.
+    pub peak_used_blocks: usize,
+    /// Shared blocks right after the forks.
+    pub shared_blocks: usize,
+    /// Sessions swapped out under pressure.
+    pub preemptions: u64,
+    /// Per-session transcripts, parent first then the forks in id
+    /// order (the parent's includes the prefix rows; forks carry only
+    /// their continuation).
+    pub transcripts: Vec<Vec<Vec<f32>>>,
+}
+
+impl EpisodeReport {
+    /// Decode steps the episode served (prefix + every continuation).
+    pub fn total_steps(&self) -> usize {
+        self.transcripts.iter().map(Vec::len).sum()
+    }
+}
+
+/// Serve one complete episode on a fresh [`SessionTable`]: a parent
+/// prefills the shared `prefix`, `sessions − 1` children fork from it,
+/// then every session decodes `steps` continuation tokens through
+/// continuous-batching waves with the serving loop's deferred-first
+/// rotation. This is the **single** episode driver — the pool-pressure
+/// study ([`run`]) and the wall-clock bench twin
+/// (`benches/paging_throughput.rs`) both call it, so the two can never
+/// diverge. Workloads are seeded deterministically from the shape.
+pub fn run_episode(
+    mode: Option<SchedulerMode>,
+    sessions: usize,
+    prefix: usize,
+    steps: usize,
+    d: usize,
+    kv: KvCacheConfig,
+) -> Result<EpisodeReport> {
+    if sessions == 0 || steps == 0 || d == 0 || kv.block_size == 0 {
+        return Err(Error::Usage(format!(
+            "paging episode needs sessions/steps/d/block_size ≥ 1 \
+             (got {sessions}/{steps}/{d}/{})",
+            kv.block_size
+        )));
+    }
+    let total = prefix + steps;
+    let min_blocks = total.div_ceil(kv.block_size);
+    if min_blocks > kv.num_blocks {
+        return Err(Error::Usage(format!(
+            "pool of {} blocks cannot fit one session \
+             ({total} rows need {min_blocks} blocks of {})",
+            kv.num_blocks, kv.block_size
+        )));
+    }
+    let shared = Workload::random(total, d, 0x9A9E_0000);
+    let conts: Vec<Workload> = (0..sessions)
+        .map(|s| Workload::random(total, d, 0x9A9E_0100 + s as u64))
+        .collect();
+
+    let mut table = SessionTable::new(SessionConfig {
+        lanes: sessions,
+        max_sessions: sessions,
+        mode,
+        kv,
+        ..SessionConfig::default()
+    })?;
+    // Parent prefills the shared prefix, then the forks share it.
+    let parent = table.open(d)?;
+    for t in 0..prefix {
+        let (q, k, v) = row(&shared, &conts, prefix, 0, t);
+        table.step(DecodeStepRequest {
+            session: parent,
+            q,
+            k,
+            v,
+        })?;
+    }
+    let mut ids = vec![parent];
+    for _ in 1..sessions {
+        ids.push(table.fork(parent)?);
+    }
+    let shared_blocks = table.pool_shared_blocks();
+    let mut peak_used = table.pool_used_blocks();
+
+    // Continuation: one step per session per wave, deferred sessions
+    // first next wave (the serving loop's rotation).
+    let mut cursors = vec![prefix; sessions];
+    let mut deferred: Vec<u64> = Vec::new();
+    let mut waves = 0u64;
+    let mut deferrals = 0u64;
+    while cursors.iter().any(|&c| c < total) {
+        let mut order: Vec<usize> = (0..sessions).collect();
+        order.sort_by_key(|&s| (!deferred.contains(&ids[s]), s));
+        deferred.clear();
+        let mut reqs = Vec::new();
+        let mut members = Vec::new();
+        for &s in &order {
+            if cursors[s] < total {
+                let (q, k, v) = row(&shared, &conts, prefix, s, cursors[s]);
+                reqs.push(DecodeStepRequest {
+                    session: ids[s],
+                    q,
+                    k,
+                    v,
+                });
+                members.push(s);
+            }
+        }
+        let results = table.step_wave(&reqs);
+        waves += 1;
+        peak_used = peak_used.max(table.pool_used_blocks());
+        let mut progressed = false;
+        for (res, s) in results.into_iter().zip(members) {
+            match res {
+                Ok(_) => {
+                    cursors[s] += 1;
+                    progressed = true;
+                }
+                Err(Error::AdmissionDeferred(_)) => {
+                    deferrals += 1;
+                    deferred.push(ids[s]);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !progressed {
+            return Err(Error::Coordinator(format!(
+                "paging episode stalled at pool size {}",
+                kv.num_blocks
+            )));
+        }
+    }
+
+    let transcripts = ids
+        .iter()
+        .map(|&id| table.close(id).expect("session open"))
+        .collect();
+    Ok(EpisodeReport {
+        waves,
+        deferrals,
+        peak_used_blocks: peak_used,
+        shared_blocks,
+        preemptions: table.preemptions(),
+        transcripts,
+    })
+}
+
+/// Run the study over the given pool sizes. Every pool must at least
+/// fit one full session (`prefix + steps` rows) — smaller pools can
+/// never serve the workload and are a usage error.
+pub fn run(
+    pool_blocks: &[usize],
+    sessions: usize,
+    prefix: usize,
+    steps: usize,
+    d: usize,
+    block_size: usize,
+) -> Result<PagingResult> {
+    if sessions == 0 || steps == 0 || d == 0 || block_size == 0 {
+        return Err(Error::Usage(format!(
+            "paging study needs sessions/steps/d/block_size ≥ 1 \
+             (got {sessions}/{steps}/{d}/{block_size})"
+        )));
+    }
+    let total = prefix + steps;
+    let shared = Workload::random(total, d, 0x9A9E_0000);
+    let conts: Vec<Workload> = (0..sessions)
+        .map(|s| Workload::random(total, d, 0x9A9E_0100 + s as u64))
+        .collect();
+
+    // Unpressured contiguous baselines: session s's expected rows are
+    // the chain over its full (prefix + continuation) row sequence.
+    // (The episodes themselves regenerate identical workloads from the
+    // same seeds — see `run_episode`.)
+    let baselines: Vec<Vec<Vec<f32>>> = (0..sessions)
+        .map(|s| {
+            let mut chain = DecodeSession::new(DecodeKind::MemoryFree, d);
+            for t in 0..total {
+                let (q, k, v) = row(&shared, &conts, prefix, s, t);
+                chain.step(q, k, v).map(|_| ()).map_err(|e| {
+                    Error::Coordinator(format!("baseline chain failed: {e}"))
+                })?;
+            }
+            Ok(chain.outputs().clone())
+        })
+        .collect::<Result<_>>()?;
+
+    let mut points = Vec::new();
+    for &num_blocks in pool_blocks {
+        let ep = run_episode(
+            None,
+            sessions,
+            prefix,
+            steps,
+            d,
+            KvCacheConfig {
+                block_size,
+                num_blocks,
+            },
+        )?;
+        // Bit-identity against the unpressured chains (forks own only
+        // their continuation rows).
+        let mut bit_identical = true;
+        for (s, transcript) in ep.transcripts.iter().enumerate() {
+            let expect: &[Vec<f32>] = if s == 0 {
+                &baselines[0]
+            } else {
+                &baselines[s][prefix..]
+            };
+            bit_identical &= transcript.as_slice() == expect;
+        }
+        points.push(PagingPoint {
+            num_blocks,
+            peak_used_blocks: ep.peak_used_blocks,
+            shared_blocks: ep.shared_blocks,
+            preemptions: ep.preemptions,
+            deferrals: ep.deferrals,
+            waves: ep.waves,
+            bit_identical,
+        });
+    }
+    Ok(PagingResult {
+        sessions,
+        prefix,
+        steps,
+        d,
+        block_size,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ample_pool_shares_prefix_without_preempting() {
+        let r = run(&[32], 3, 4, 2, 4, 2).unwrap();
+        let p = r.point(32).unwrap();
+        assert_eq!(p.preemptions, 0, "ample pool needs no preemption");
+        assert_eq!(p.deferrals, 0);
+        assert_eq!(
+            p.shared_blocks, 2,
+            "prefix/block_size = 4/2 blocks shared across forks"
+        );
+        assert!(p.bit_identical, "transcripts match the contiguous chains");
+        assert!(p.peak_occupancy() <= 1.0);
+    }
+
+    #[test]
+    fn scarce_pool_preempts_but_stays_bit_identical() {
+        // 3 sessions × 6 rows at block_size 2 want 5 blocks even with
+        // the prefix shared (2 shared + 3 private tails); a 4-block
+        // pool forces preemption. Correctness must not budge.
+        let r = run(&[4], 3, 4, 2, 4, 2).unwrap();
+        let p = r.point(4).unwrap();
+        assert!(
+            p.preemptions > 0,
+            "a 4-block pool under a 5-block demand must preempt"
+        );
+        assert!(
+            p.bit_identical,
+            "pressure may cost waves, never correctness"
+        );
+        assert!(p.peak_used_blocks <= 4, "occupancy never exceeds capacity");
+    }
+
+    #[test]
+    fn pool_smaller_than_one_session_is_a_usage_error() {
+        let err = run(&[2], 2, 4, 2, 4, 2);
+        assert!(matches!(err, Err(Error::Usage(_))));
+    }
+
+    #[test]
+    fn table_lists_every_pool_size() {
+        let r = run(&[32, 16], 2, 2, 2, 4, 2).unwrap();
+        let text = r.table().render();
+        assert!(text.contains("bit-identical"));
+        assert!(r.point(16).is_some() && r.point(8).is_none());
+    }
+}

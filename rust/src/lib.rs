@@ -82,6 +82,12 @@ pub enum Error {
     Runtime(String),
     /// Coordinator error (queue closed, worker died, ...).
     Coordinator(String),
+    /// Admission was *deferred*, not refused: the request is valid but a
+    /// bounded resource (session slot, pool lane, KV-cache block) is
+    /// currently exhausted. Callers with a queue (the serving loop)
+    /// requeue the work and retry after capacity frees instead of
+    /// surfacing a hard failure.
+    AdmissionDeferred(String),
     /// CLI usage error.
     Usage(String),
     /// I/O error.
@@ -103,6 +109,7 @@ impl std::fmt::Display for Error {
             }
             Error::Runtime(msg) => write!(f, "runtime: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator: {msg}"),
+            Error::AdmissionDeferred(msg) => write!(f, "admission deferred: {msg}"),
             Error::Usage(msg) => write!(f, "usage: {msg}"),
             // Transparent: io errors print as themselves.
             Error::Io(e) => write!(f, "{e}"),

@@ -22,10 +22,11 @@ fn usage() -> String {
         "usage: sdpa-dataflow <simulate|experiments|validate|serve|help> [options]
   simulate    --variant <{variants}>
               --n N --d D [--long-depth K] [--unbounded] [--inferred]
-  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving] [--n N] [--d D]
+  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving|paging] [--n N] [--d D]
   validate    [--artifacts DIR]
   serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]
-              [--sessions S] [--steps T] [--lanes L] [--decode-d D]",
+              [--sessions S] [--steps T] [--lanes L] [--decode-d D]
+              [--prefix P] [--block-size B] [--pool-blocks K]",
         variants = Variant::usage_list()
     )
 }
@@ -141,6 +142,11 @@ fn run_experiments(args: &Args) -> sdpa_dataflow::Result<()> {
         "serving" => experiments::serving::run(&[1, 2, 4, 8], n.clamp(1, 64), d)?
             .table()
             .print(),
+        "paging" => {
+            experiments::paging::run(&[64, 16, 8], 4, 8, 4, d.min(16), 2)?
+                .table()
+                .print()
+        }
         other => {
             return Err(sdpa_dataflow::Error::Usage(format!(
                 "unknown experiment '{other}'"
@@ -210,6 +216,9 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
     let steps: usize = args.get_parsed_or("steps", 8)?;
     let lanes: usize = args.get_parsed_or("lanes", sessions.max(1))?;
     let decode_d: usize = args.get_parsed_or("decode-d", 16)?;
+    let prefix: usize = args.get_parsed_or("prefix", 4)?;
+    let block_size: usize = args.get_parsed_or("block-size", 16)?;
+    let pool_blocks: usize = args.get_parsed_or("pool-blocks", 1024)?;
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch,
@@ -217,6 +226,10 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
         },
         sessions: SessionConfig {
             lanes: lanes.max(1),
+            kv: sdpa_dataflow::coordinator::KvCacheConfig {
+                block_size: block_size.max(1),
+                num_blocks: pool_blocks.max(1),
+            },
             ..SessionConfig::default()
         },
         ..ServerConfig::default()
@@ -257,22 +270,52 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
     }
 
     if sessions > 0 && steps > 0 {
-        // Continuous-batching decode demo: open S sessions on the lane
-        // pool, submit one step per session per round (the steps of a
-        // round share waves), and close each session for its transcript.
+        // Continuous-batching decode demo over the paged KV cache: open
+        // one parent, prefill a shared prefix, fork the remaining
+        // sessions from it (shared blocks, zero copies), then submit
+        // one step per session per round (the steps of a round share
+        // waves) and close each session for its transcript.
         println!(
-            "decoding {steps} tokens x {sessions} sessions (lanes={}, d={decode_d})",
+            "decoding {steps} tokens x {sessions} sessions \
+             (lanes={}, d={decode_d}, prefix={prefix}, pool={pool_blocks}x{block_size})",
             lanes.max(1)
         );
-        let opened: Vec<_> = (0..sessions)
-            .map(|_| handle.open_session(decode_d))
-            .collect::<sdpa_dataflow::Result<Vec<_>>>()?;
+        // The demo opens everything before stepping, so waiting on a
+        // deferred admission would deadlock it — probe with the `try`
+        // variants and fail fast like a capacity error should.
+        let parent = handle.try_open_session(decode_d)?;
+        if prefix > 0 {
+            let shared = Workload::random(prefix, decode_d, 0x5A);
+            for t in 0..prefix {
+                handle.step_call(
+                    parent.session,
+                    shared.q[t].clone(),
+                    shared.k[t].clone(),
+                    shared.v[t].clone(),
+                )?;
+            }
+        }
+        let mut opened = vec![parent];
+        for _ in 1..sessions {
+            // Children share the parent's cached prefix blocks.
+            opened.push(if prefix > 0 {
+                handle.try_fork_session(parent.session)?
+            } else {
+                handle.try_open_session(decode_d)?
+            });
+        }
         let traffic: Vec<Workload> = opened
             .iter()
             .map(|open| Workload::random(steps, decode_d, 0xD0 + open.session * 1_000))
             .collect();
         for open in &opened {
-            println!("  session {} → lane {}", open.session, open.lane);
+            match open.parent {
+                Some(p) => println!(
+                    "  session {} → lane {} (forked from {p})",
+                    open.session, open.lane
+                ),
+                None => println!("  session {} → lane {}", open.session, open.lane),
+            }
         }
         for t in 0..steps {
             let rxs: Vec<_> = opened
@@ -302,7 +345,14 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
         }
         for open in &opened {
             let closed = handle.close_session(open.session)?;
-            assert_eq!(closed.steps as usize, steps, "transcript length");
+            // The parent's transcript carries the shared prefix too;
+            // forks record only their own continuation.
+            let expect = if open.parent.is_none() && open.session == opened[0].session {
+                prefix + steps
+            } else {
+                steps
+            };
+            assert_eq!(closed.steps as usize, expect, "transcript length");
         }
     }
 

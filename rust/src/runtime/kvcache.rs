@@ -1,0 +1,763 @@
+//! Paged KV-cache allocator: fixed-size blocks from a bounded global
+//! pool, per-session block tables, refcounted prefix sharing with
+//! copy-on-write, and swap-out preemption.
+//!
+//! The serving stack used to hold every decode session's K/V cache as
+//! contiguous `Vec<Vec<f32>>` rows, so admission was all-or-nothing and
+//! a prefill shared by S sessions was stored S times. This module is
+//! the standard fix (block paging, as in vLLM's PagedAttention) grown
+//! from the paper's own memory result: the reordered SDPA already needs
+//! only O(1) *intermediate* memory per step, so the cache is the sole
+//! O(len) resident — and a cache addressed through a block table can be
+//! bounded, shared, and preempted without the attention pipeline ever
+//! noticing (the gather walk produces exactly the same row stream).
+//!
+//! * [`BlockPool`] — the bounded global pool. Every block stores up to
+//!   `block_size` (k⃗, v⃗) row pairs plus a refcount; free blocks are
+//!   recycled lowest-id-first so allocation is deterministic.
+//! * [`BlockTable`] — one session's ordered view: block ids whose
+//!   concatenated rows are the session's K/V cache. Tables never touch
+//!   refcounts themselves; every mutation goes through the pool.
+//! * **Prefix sharing** — [`BlockPool::fork`] makes a child table that
+//!   references the parent's blocks (refcount + 1 each, zero copies).
+//!   Blocks with refcount > 1 are immutable; the first append onto a
+//!   shared tail block triggers **copy-on-write**: the appender gets a
+//!   private copy of the tail rows and the shared original keeps
+//!   serving the other owners.
+//! * **Preemption** — [`BlockPool::swap_out`] copies a victim table's
+//!   rows into a [`SwappedKv`] (host-side, outside the bounded pool)
+//!   and releases its blocks; [`BlockPool::swap_in`] re-allocates and
+//!   restores them bit-exactly. Exhaustion surfaces as
+//!   [`Error::AdmissionDeferred`] so callers requeue instead of
+//!   hard-failing.
+//!
+//! Invariants (fuzzed by `tests/paged_conformance.rs`): a block is
+//! either on the free list with refcount 0 or referenced by exactly
+//! `refcount` tables; occupancy never exceeds capacity; releasing the
+//! last reference frees the block (no leak, no double-free).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::{Error, Result};
+
+/// Pool geometry. Both knobs are caller input, validated by
+/// [`BlockPool::new`].
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// K/V row pairs per block (the paging granularity).
+    pub block_size: usize,
+    /// Blocks in the global pool (bounds total cached tokens at
+    /// `block_size * num_blocks`).
+    pub num_blocks: usize,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig {
+            block_size: 16,
+            num_blocks: 1024,
+        }
+    }
+}
+
+/// One fixed-size block: up to `block_size` key rows and the matching
+/// value rows, plus the number of tables referencing it.
+#[derive(Clone, Debug, Default)]
+struct Block {
+    keys: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+    refcount: usize,
+}
+
+/// One session's ordered view of the pool: the block ids whose
+/// concatenated rows form the session's K/V cache.
+///
+/// A table owns pool references, so it must be returned to the pool
+/// ([`BlockPool::release`]) before being dropped; the pool audits this
+/// in tests via refcount accounting.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    blocks: Vec<usize>,
+    len: usize,
+}
+
+impl BlockTable {
+    /// Empty table (no blocks, no rows).
+    pub fn new() -> Self {
+        BlockTable::default()
+    }
+
+    /// Total cached rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no row is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks this table references.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The block ids, in row order.
+    pub fn block_ids(&self) -> &[usize] {
+        &self.blocks
+    }
+
+    /// Physical address of logical row `row` as `(table slot, offset)`
+    /// — the walk the gather source performs.
+    pub fn locate(&self, row: usize, block_size: usize) -> Option<(usize, usize)> {
+        if row >= self.len {
+            return None;
+        }
+        Some((row / block_size, row % block_size))
+    }
+}
+
+/// A preempted session's K/V rows, swapped out of the bounded pool to
+/// plain host memory. Restoring via [`BlockPool::swap_in`] reproduces
+/// the exact row sequence, so transcripts across a preempt/requeue
+/// cycle are bit-identical to an unpressured run.
+#[derive(Clone, Debug)]
+pub struct SwappedKv {
+    /// Key rows, in cache order.
+    pub keys: Vec<Vec<f32>>,
+    /// Value rows, in cache order.
+    pub values: Vec<Vec<f32>>,
+}
+
+impl SwappedKv {
+    /// Rows held.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Whether the swap holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+/// Borrowed gather of a table's rows, in cache order — what a decode
+/// step graph replays. Building the view walks the block table once;
+/// no rows are copied.
+#[derive(Debug)]
+pub struct KvView<'a> {
+    /// Key rows, in cache order.
+    pub keys: Vec<&'a [f32]>,
+    /// Value rows, in cache order.
+    pub values: Vec<&'a [f32]>,
+}
+
+impl KvView<'_> {
+    /// Rows in the view.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+/// The bounded global block pool.
+#[derive(Debug)]
+pub struct BlockPool {
+    cfg: KvCacheConfig,
+    blocks: Vec<Block>,
+    /// Free block ids as a min-heap: allocation takes the lowest id in
+    /// O(log n) (deterministic placement for tests and reports —
+    /// swap-in restores a whole cache block by block, so allocation
+    /// must not be a linear free-list scan).
+    free: BinaryHeap<Reverse<usize>>,
+}
+
+impl BlockPool {
+    /// New pool. Degenerate geometry is an `Err`, not a panic.
+    pub fn new(cfg: KvCacheConfig) -> Result<Self> {
+        if cfg.block_size == 0 || cfg.num_blocks == 0 {
+            return Err(Error::Coordinator(
+                "kv-cache config needs block_size ≥ 1 and num_blocks ≥ 1".into(),
+            ));
+        }
+        Ok(BlockPool {
+            blocks: vec![Block::default(); cfg.num_blocks],
+            free: (0..cfg.num_blocks).map(Reverse).collect(),
+            cfg,
+        })
+    }
+
+    /// Rows per block.
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    /// Total blocks in the pool.
+    pub fn capacity(&self) -> usize {
+        self.cfg.num_blocks
+    }
+
+    /// Blocks currently free.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently allocated (occupancy never exceeds capacity).
+    pub fn used_blocks(&self) -> usize {
+        self.cfg.num_blocks - self.free.len()
+    }
+
+    /// Allocated blocks referenced by more than one table — the
+    /// prefix-sharing win (each such block would otherwise be stored
+    /// once per referencing session).
+    pub fn shared_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.refcount > 1).count()
+    }
+
+    /// Refcount of one block (test/audit hook).
+    pub fn refcount(&self, id: usize) -> usize {
+        self.blocks[id].refcount
+    }
+
+    /// Blocks needed to hold `rows` rows at this pool's block size.
+    pub fn blocks_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.cfg.block_size)
+    }
+
+    /// Take the lowest free block id.
+    fn alloc(&mut self) -> Result<usize> {
+        let Reverse(id) = self.free.pop().ok_or_else(|| {
+            Error::AdmissionDeferred(format!(
+                "kv-cache pool exhausted ({} blocks, all in use)",
+                self.cfg.num_blocks
+            ))
+        })?;
+        debug_assert_eq!(self.blocks[id].refcount, 0, "free block has references");
+        self.blocks[id].keys.clear();
+        self.blocks[id].values.clear();
+        self.blocks[id].refcount = 1;
+        Ok(id)
+    }
+
+    /// Drop one reference to `id`; a block hitting refcount 0 returns
+    /// to the free list.
+    fn unref(&mut self, id: usize) {
+        let b = &mut self.blocks[id];
+        debug_assert!(b.refcount > 0, "unref of a free block (double free)");
+        b.refcount -= 1;
+        if b.refcount == 0 {
+            b.keys.clear();
+            b.values.clear();
+            self.free.push(Reverse(id));
+        }
+    }
+
+    /// Append one `(k⃗, v⃗)` row pair to `table`, allocating or
+    /// copy-on-writing the tail block as needed. On
+    /// [`Error::AdmissionDeferred`] (pool exhausted) the table is left
+    /// exactly as it was — the append is transactional.
+    ///
+    /// Returns `Some(original)` when the append copy-on-wrote a shared
+    /// tail: the id of the shared block the table stopped referencing.
+    /// The append **retains the table's reference on that original**
+    /// (so no interleaved release/preemption can free or recycle it)
+    /// until the caller resolves the step: [`Self::commit_append`]
+    /// drops the retained reference, [`Self::undo_append`] swaps the
+    /// private clone back for the original — restoring the sharing and
+    /// the pool accounting exactly, which is what makes a failed
+    /// wave's unwind truly transactional.
+    pub fn append_row(
+        &mut self,
+        table: &mut BlockTable,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<Option<usize>> {
+        let bs = self.cfg.block_size;
+        // The tail block holds `len % bs` rows when that is non-zero;
+        // at a multiple of bs every block is full and a fresh one is
+        // needed.
+        let tail_has_room = table.len % bs != 0;
+        let mut cow_from = None;
+        if !table.blocks.is_empty() && tail_has_room {
+            let tail = *table.blocks.last().expect("non-empty");
+            if self.blocks[tail].refcount > 1 {
+                // Copy-on-write: the tail is shared (immutable). Give
+                // this table a private copy of the tail rows, then drop
+                // its reference to the shared original. Allocation can
+                // fail, so it happens before any mutation.
+                let fresh = self.alloc()?;
+                let (keys, values) = {
+                    let src = &self.blocks[tail];
+                    (src.keys.clone(), src.values.clone())
+                };
+                self.blocks[fresh].keys = keys;
+                self.blocks[fresh].values = values;
+                // The reference on `tail` is deliberately NOT dropped
+                // here: it is held pending until commit_append /
+                // undo_append, so the original cannot be freed (or its
+                // id recycled) while the staged step is in flight.
+                *table.blocks.last_mut().expect("non-empty") = fresh;
+                self.blocks[fresh].keys.push(k);
+                self.blocks[fresh].values.push(v);
+                cow_from = Some(tail);
+            } else {
+                self.blocks[tail].keys.push(k);
+                self.blocks[tail].values.push(v);
+            }
+        } else {
+            let fresh = self.alloc()?;
+            self.blocks[fresh].keys.push(k);
+            self.blocks[fresh].values.push(v);
+            table.blocks.push(fresh);
+        }
+        table.len += 1;
+        Ok(cow_from)
+    }
+
+    /// Resolve a pending copy-on-write append (see [`Self::append_row`])
+    /// after the step committed: drop the retained reference on the
+    /// replaced shared block. No-op for `None`.
+    pub fn commit_append(&mut self, cow_from: Option<usize>) {
+        if let Some(orig) = cow_from {
+            self.unref(orig);
+        }
+    }
+
+    /// Undo the most recent [`Self::append_row`] on `table` (the
+    /// unstage path of a failed step): pop the staged row and, if the
+    /// append copy-on-wrote a shared tail, swap the private clone back
+    /// for the retained original — the table, the refcounts, and the
+    /// pool occupancy end exactly as they were before the append.
+    pub fn undo_append(&mut self, table: &mut BlockTable, cow_from: Option<usize>) {
+        self.pop_row(table);
+        let Some(orig) = cow_from else {
+            return;
+        };
+        // A CoW only fires on a partially-filled tail, so after the pop
+        // the clone still holds that prefix and is still the tail.
+        let clone = *table.blocks.last().expect("CoW tail survives the pop");
+        debug_assert_eq!(
+            self.blocks[clone].refcount, 1,
+            "CoW clone must be private"
+        );
+        debug_assert!(
+            self.blocks[orig].refcount >= 1,
+            "CoW original was retained by the pending append"
+        );
+        *table.blocks.last_mut().expect("checked above") = orig;
+        // The retained reference transfers back to the table (no
+        // refcount change); only the clone's reference is dropped.
+        self.unref(clone);
+    }
+
+    /// Remove the most recently appended row (the unstage path of a
+    /// failed step). The tail block is private by construction — the
+    /// matching append either found it at refcount 1 or copy-on-wrote
+    /// it — so popping cannot disturb another table.
+    pub fn pop_row(&mut self, table: &mut BlockTable) {
+        let Some(&tail) = table.blocks.last() else {
+            return;
+        };
+        debug_assert_eq!(
+            self.blocks[tail].refcount, 1,
+            "pop_row on a shared tail (stage/unstage must bracket one wave)"
+        );
+        self.blocks[tail].keys.pop();
+        self.blocks[tail].values.pop();
+        table.len -= 1;
+        if self.blocks[tail].keys.is_empty() {
+            table.blocks.pop();
+            self.unref(tail);
+        }
+    }
+
+    /// Fork: a child table sharing every one of `parent`'s blocks
+    /// (refcount + 1 each, no copies, cannot fail). The shared blocks
+    /// stay immutable until one side appends past them (copy-on-write
+    /// on the tail; full blocks are never written again).
+    pub fn fork(&mut self, parent: &BlockTable) -> BlockTable {
+        for &id in &parent.blocks {
+            self.blocks[id].refcount += 1;
+        }
+        parent.clone()
+    }
+
+    /// Return every reference `table` holds; blocks reaching refcount 0
+    /// go back to the free list. The table ends empty.
+    pub fn release(&mut self, table: &mut BlockTable) {
+        for id in std::mem::take(&mut table.blocks) {
+            self.unref(id);
+        }
+        table.len = 0;
+    }
+
+    /// Gather `table`'s rows in cache order — the walk a decode step's
+    /// replay sources follow. Borrows; copies nothing.
+    pub fn view(&self, table: &BlockTable) -> KvView<'_> {
+        let mut keys: Vec<&[f32]> = Vec::with_capacity(table.len);
+        let mut values: Vec<&[f32]> = Vec::with_capacity(table.len);
+        for &id in &table.blocks {
+            let b = &self.blocks[id];
+            for row in &b.keys {
+                keys.push(row.as_slice());
+            }
+            for row in &b.values {
+                values.push(row.as_slice());
+            }
+        }
+        debug_assert_eq!(keys.len(), table.len, "table len vs gathered rows");
+        KvView { keys, values }
+    }
+
+    /// Preempt: copy the table's rows out to host memory and release
+    /// its blocks. Only blocks this table exclusively owned actually
+    /// free (shared prefix blocks keep serving their other owners).
+    pub fn swap_out(&mut self, table: &mut BlockTable) -> SwappedKv {
+        let view = self.view(table);
+        let swapped = SwappedKv {
+            keys: view.keys.iter().map(|r| r.to_vec()).collect(),
+            values: view.values.iter().map(|r| r.to_vec()).collect(),
+        };
+        self.release(table);
+        swapped
+    }
+
+    /// Restore a swapped-out cache into fresh blocks (sharing is not
+    /// re-established — the restored table is fully private). Fails
+    /// with [`Error::AdmissionDeferred`] — leaving `table` empty and
+    /// the swap untouched — when the pool cannot hold it; restores are
+    /// all-or-nothing.
+    pub fn swap_in(&mut self, table: &mut BlockTable, swapped: &SwappedKv) -> Result<()> {
+        debug_assert!(table.is_empty(), "swap_in into a non-empty table");
+        let needed = self.blocks_for(swapped.len());
+        if needed > self.free.len() {
+            return Err(Error::AdmissionDeferred(format!(
+                "kv-cache pool has {} free blocks, restore needs {needed}",
+                self.free.len()
+            )));
+        }
+        for (k, v) in swapped.keys.iter().zip(&swapped.values) {
+            let cow = self
+                .append_row(table, k.clone(), v.clone())
+                .expect("free-block count checked above");
+            debug_assert!(cow.is_none(), "swap_in restores into private blocks");
+        }
+        Ok(())
+    }
+
+    /// Blocks `table` references that no other table does (refcount 1)
+    /// — how many blocks preempting its owner would actually free.
+    pub fn exclusive_blocks(&self, table: &BlockTable) -> usize {
+        table
+            .blocks
+            .iter()
+            .filter(|&&id| self.blocks[id].refcount == 1)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(x: f32, d: usize) -> Vec<f32> {
+        vec![x; d]
+    }
+
+    /// Append `n` committed rows (resolving any copy-on-write the
+    /// append made, like a successful step does).
+    fn fill(pool: &mut BlockPool, table: &mut BlockTable, from: usize, n: usize) {
+        for i in from..from + n {
+            let cow = pool
+                .append_row(table, row(i as f32, 2), row(-(i as f32), 2))
+                .unwrap();
+            pool.commit_append(cow);
+        }
+    }
+
+    #[test]
+    fn append_allocates_blocks_at_block_size_granularity() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut t = BlockTable::new();
+        fill(&mut pool, &mut t, 0, 9);
+        assert_eq!(t.len(), 9);
+        assert_eq!(t.num_blocks(), 3, "9 rows / 4 per block → 3 blocks");
+        assert_eq!(pool.used_blocks(), 3);
+        assert_eq!(t.locate(0, 4), Some((0, 0)));
+        assert_eq!(t.locate(5, 4), Some((1, 1)));
+        assert_eq!(t.locate(8, 4), Some((2, 0)));
+        assert_eq!(t.locate(9, 4), None);
+        let view = pool.view(&t);
+        assert_eq!(view.len(), 9);
+        for (i, k) in view.keys.iter().enumerate() {
+            assert_eq!(k[0], i as f32, "gather preserves row order");
+        }
+        pool.release(&mut t);
+        assert_eq!(pool.used_blocks(), 0, "release frees everything");
+    }
+
+    #[test]
+    fn fork_shares_blocks_and_cow_splits_the_tail() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut parent = BlockTable::new();
+        // 8 rows = exactly 2 full blocks.
+        fill(&mut pool, &mut parent, 0, 8);
+        let mut a = pool.fork(&parent);
+        let mut b = pool.fork(&parent);
+        assert_eq!(pool.used_blocks(), 2, "fork copies nothing");
+        assert_eq!(pool.shared_blocks(), 2);
+        // Each child appends: full tails → fresh private blocks, the
+        // acceptance shape M/bs shared + 2 private tails.
+        fill(&mut pool, &mut a, 100, 1);
+        fill(&mut pool, &mut b, 200, 1);
+        assert_eq!(pool.used_blocks(), 4);
+        assert_eq!(pool.shared_blocks(), 2);
+        assert_eq!(pool.exclusive_blocks(&a), 1);
+        // Views diverge only at the tail.
+        let va = pool.view(&a);
+        let vb = pool.view(&b);
+        assert_eq!(va.keys[7], vb.keys[7], "shared prefix identical");
+        assert_eq!(va.keys[8][0], 100.0);
+        assert_eq!(vb.keys[8][0], 200.0);
+        pool.release(&mut a);
+        pool.release(&mut b);
+        pool.release(&mut parent);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn cow_on_a_partial_shared_tail_keeps_the_original_intact() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut parent = BlockTable::new();
+        fill(&mut pool, &mut parent, 0, 6); // 1 full + 1 half block
+        let mut child = pool.fork(&parent);
+        assert_eq!(pool.used_blocks(), 2);
+        // Child appends into the shared half-full tail → CoW.
+        fill(&mut pool, &mut child, 50, 1);
+        assert_eq!(pool.used_blocks(), 3, "CoW allocated a private tail");
+        assert_eq!(child.len(), 7);
+        assert_eq!(parent.len(), 6, "parent untouched");
+        let vp = pool.view(&parent);
+        assert_eq!(vp.keys[5][0], 5.0, "original tail rows intact");
+        let vc = pool.view(&child);
+        assert_eq!(vc.keys[5][0], 5.0);
+        assert_eq!(vc.keys[6][0], 50.0);
+        // Parent can keep appending its own (now refcount-1) tail.
+        fill(&mut pool, &mut parent, 60, 1);
+        assert_eq!(pool.view(&parent).keys[6][0], 60.0);
+        pool.release(&mut parent);
+        pool.release(&mut child);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn undo_append_reverts_a_cow_tail_split_exactly() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut parent = BlockTable::new();
+        fill(&mut pool, &mut parent, 0, 6); // 1 full + 1 half block
+        let mut child = pool.fork(&parent);
+        let tail = *child.block_ids().last().unwrap();
+        assert_eq!(pool.used_blocks(), 2);
+        assert_eq!(pool.shared_blocks(), 2);
+        // Child stages a row onto the shared half-full tail → CoW with
+        // the original's reference retained.
+        let cow = pool
+            .append_row(&mut child, row(50.0, 2), row(50.0, 2))
+            .unwrap();
+        assert_eq!(cow, Some(tail), "append reports the replaced tail");
+        assert_eq!(pool.used_blocks(), 3, "clone + retained original");
+        // Unwind (failed wave): sharing and occupancy revert exactly.
+        pool.undo_append(&mut child, cow);
+        assert_eq!(child.len(), 6);
+        assert_eq!(child.block_ids().last(), Some(&tail), "original re-linked");
+        assert_eq!(pool.used_blocks(), 2, "clone freed");
+        assert_eq!(pool.shared_blocks(), 2, "sharing restored");
+        assert_eq!(pool.view(&child).keys[5][0], 5.0, "rows intact");
+        // Re-stage and commit this time: the retained reference drops
+        // and the original stays alive for the parent only.
+        let cow = pool
+            .append_row(&mut child, row(51.0, 2), row(51.0, 2))
+            .unwrap();
+        assert_eq!(cow, Some(tail));
+        pool.commit_append(cow);
+        assert_eq!(pool.used_blocks(), 3);
+        assert_eq!(pool.refcount(tail), 1, "retained reference released");
+        pool.release(&mut parent);
+        pool.release(&mut child);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn retained_cow_original_survives_sharer_release() {
+        // The interleaving the retention exists for: while a CoW is
+        // pending, the only other owner releases. The original must
+        // stay allocated (not recycled) until the pending step
+        // resolves, so an undo re-links a live, unchanged block.
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 4,
+        })
+        .unwrap();
+        let mut parent = BlockTable::new();
+        fill(&mut pool, &mut parent, 0, 2); // one half-full block
+        let mut child = pool.fork(&parent);
+        let orig = *child.block_ids().last().unwrap();
+        let cow = pool
+            .append_row(&mut child, row(9.0, 2), row(9.0, 2))
+            .unwrap();
+        assert_eq!(cow, Some(orig));
+        // Parent goes away mid-step (preempt/close elsewhere).
+        pool.release(&mut parent);
+        assert!(
+            pool.refcount(orig) >= 1,
+            "pending append keeps the original alive"
+        );
+        pool.undo_append(&mut child, cow);
+        assert_eq!(child.len(), 2);
+        assert_eq!(pool.view(&child).keys[1][0], 1.0, "original content intact");
+        pool.release(&mut child);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn exhaustion_is_admission_deferred_and_transactional() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 2,
+            num_blocks: 2,
+        })
+        .unwrap();
+        let mut t = BlockTable::new();
+        fill(&mut pool, &mut t, 0, 4);
+        let err = pool.append_row(&mut t, row(9.0, 2), row(9.0, 2));
+        assert!(
+            matches!(err, Err(Error::AdmissionDeferred(_))),
+            "exhaustion is the typed retry error"
+        );
+        assert_eq!(t.len(), 4, "failed append left the table unchanged");
+        assert_eq!(pool.used_blocks(), 2);
+        pool.release(&mut t);
+    }
+
+    #[test]
+    fn swap_out_in_roundtrip_is_bit_exact() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 4,
+        })
+        .unwrap();
+        let mut t = BlockTable::new();
+        fill(&mut pool, &mut t, 0, 7);
+        let before: Vec<Vec<f32>> = pool.view(&t).keys.iter().map(|r| r.to_vec()).collect();
+        let swapped = pool.swap_out(&mut t);
+        assert_eq!(pool.used_blocks(), 0, "victim blocks freed");
+        assert_eq!(swapped.len(), 7);
+        pool.swap_in(&mut t, &swapped).unwrap();
+        assert_eq!(t.len(), 7);
+        let after: Vec<Vec<f32>> = pool.view(&t).keys.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(before, after, "restore is bit-exact");
+        pool.release(&mut t);
+    }
+
+    #[test]
+    fn swap_in_without_space_defers_and_leaves_state() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 2,
+            num_blocks: 2,
+        })
+        .unwrap();
+        let mut hog = BlockTable::new();
+        fill(&mut pool, &mut hog, 0, 3);
+        let mut t = BlockTable::new();
+        let swapped = SwappedKv {
+            keys: vec![row(1.0, 2), row(2.0, 2), row(3.0, 2), row(4.0, 2)],
+            values: vec![row(1.0, 2), row(2.0, 2), row(3.0, 2), row(4.0, 2)],
+        };
+        let err = pool.swap_in(&mut t, &swapped);
+        assert!(matches!(err, Err(Error::AdmissionDeferred(_))));
+        assert!(t.is_empty(), "failed restore leaves the table empty");
+        assert_eq!(pool.used_blocks(), 2, "hog untouched");
+        pool.release(&mut hog);
+    }
+
+    #[test]
+    fn pop_row_frees_emptied_tail_blocks() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 2,
+            num_blocks: 4,
+        })
+        .unwrap();
+        let mut t = BlockTable::new();
+        fill(&mut pool, &mut t, 0, 3);
+        assert_eq!(pool.used_blocks(), 2);
+        pool.pop_row(&mut t);
+        assert_eq!(t.len(), 2);
+        assert_eq!(pool.used_blocks(), 1, "emptied tail block freed");
+        pool.pop_row(&mut t);
+        pool.pop_row(&mut t);
+        assert!(t.is_empty());
+        assert_eq!(pool.used_blocks(), 0);
+        pool.pop_row(&mut t); // no-op on empty
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn degenerate_config_rejected() {
+        for cfg in [
+            KvCacheConfig {
+                block_size: 0,
+                num_blocks: 4,
+            },
+            KvCacheConfig {
+                block_size: 4,
+                num_blocks: 0,
+            },
+        ] {
+            assert!(matches!(
+                BlockPool::new(cfg),
+                Err(Error::Coordinator(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn lowest_free_block_is_reused_first() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 1,
+            num_blocks: 4,
+        })
+        .unwrap();
+        let mut a = BlockTable::new();
+        let mut b = BlockTable::new();
+        fill(&mut pool, &mut a, 0, 2); // blocks 0, 1
+        fill(&mut pool, &mut b, 10, 1); // block 2
+        assert_eq!(a.block_ids(), &[0, 1]);
+        assert_eq!(b.block_ids(), &[2]);
+        pool.release(&mut a);
+        let mut c = BlockTable::new();
+        fill(&mut pool, &mut c, 20, 1);
+        assert_eq!(c.block_ids(), &[0], "freed lowest id reused first");
+        pool.release(&mut b);
+        pool.release(&mut c);
+    }
+}

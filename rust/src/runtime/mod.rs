@@ -15,13 +15,19 @@
 //!   build has no PJRT (`xla` crate), so the executor implements the
 //!   artifact functions natively in-crate and is validated against the
 //!   same `.testvec` goldens a PJRT backend would be.
+//! * [`kvcache`] — the paged KV-cache allocator ([`BlockPool`]):
+//!   fixed-size blocks from a bounded pool, per-session block tables,
+//!   refcounted prefix sharing with copy-on-write, and swap-out
+//!   preemption — the serving stack's cache substrate.
 
 pub mod artifact;
 pub mod executor;
+pub mod kvcache;
 pub mod tensor;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactRegistry, TestVec};
 pub use executor::{Executor, LoadedArtifact};
+pub use kvcache::{BlockPool, BlockTable, KvCacheConfig, KvView, SwappedKv};
 pub use tensor::Tensor;
 
 /// Default artifact directory, overridable with `SDPA_ARTIFACTS`.

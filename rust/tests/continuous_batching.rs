@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession};
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::coordinator::{
-    BatcherConfig, DecodeStepResponse, Server, ServerConfig, SessionConfig,
+    BatcherConfig, DecodeStepResponse, KvCacheConfig, Server, ServerConfig, SessionConfig,
 };
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
 use sdpa_dataflow::runtime::Tensor;
@@ -169,6 +169,111 @@ fn deferred_close_serves_queued_steps_first() {
 }
 
 #[test]
+fn burst_of_opens_beyond_the_lane_pool_all_eventually_complete() {
+    // Regression: admission used to hard-reject at max_sessions /
+    // no-free-lane with no retry path, so a burst of S > lanes opens
+    // stranded the overflow. Deferred admissions now requeue FIFO and
+    // admit as lanes free; every session in the burst must complete.
+    for mode in MODES {
+        let lanes = 2usize;
+        let burst = 5usize;
+        let server = decode_server(lanes, 64, mode);
+        let h = server.handle();
+        let w = Workload::random(2, 4, 0xB0257);
+        // Submit the whole burst before receiving anything.
+        let rxs: Vec<_> = (0..burst).map(|_| h.submit_open(4).unwrap()).collect();
+        let mut completed = 0;
+        for rx in rxs {
+            // Blocks until this open is admitted (the first `lanes`
+            // immediately, the rest as earlier sessions close below).
+            let open = rx.recv().unwrap().expect("deferred open eventually admitted");
+            for t in 0..w.n {
+                let resp = h
+                    .step_call(open.session, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                    .unwrap();
+                assert_eq!(resp.step, t as u64, "{mode:?}: fresh session counter");
+            }
+            let closed = h.close_session(open.session).unwrap();
+            assert_eq!(closed.steps as usize, w.n);
+            assert_eq!(closed.transcript, standalone_transcript(&w, mode));
+            completed += 1;
+        }
+        assert_eq!(completed, burst, "{mode:?}: every burst open completed");
+        h.with_stats(|s| {
+            assert_eq!(s.sessions_opened(), burst as u64);
+            assert_eq!(s.sessions_closed(), burst as u64);
+            assert!(
+                s.deferrals() >= (burst - lanes) as u64,
+                "{mode:?}: overflow opens were deferred, not dropped"
+            );
+        });
+        server.shutdown();
+    }
+}
+
+#[test]
+fn forked_sessions_served_with_shared_prefix_blocks() {
+    // End-to-end fork through the server: parent prefills a prefix,
+    // two forks continue it, transcripts match the contiguous chain,
+    // and the stats show shared blocks while the forks are live.
+    for mode in MODES {
+        let server = Server::start_decode_only(ServerConfig {
+            sessions: SessionConfig {
+                kind: DecodeKind::MemoryFree,
+                lanes: 4,
+                mode: Some(mode),
+                kv: KvCacheConfig {
+                    block_size: 2,
+                    num_blocks: 32,
+                },
+                ..SessionConfig::default()
+            },
+            ..ServerConfig::default()
+        })
+        .expect("decode-only server starts");
+        let h = server.handle();
+        let m = 4usize;
+        let w = Workload::random(m + 2, 4, 0xF0E7);
+        let parent = h.open_session(4).unwrap();
+        assert_eq!(parent.parent, None);
+        for t in 0..m {
+            h.step_call(parent.session, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        let a = h.fork_session(parent.session).unwrap();
+        let b = h.fork_session(parent.session).unwrap();
+        assert_eq!(a.parent, Some(parent.session));
+        assert_eq!(b.parent, Some(parent.session));
+        for t in m..w.n {
+            for open in [&a, &b] {
+                h.step_call(open.session, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                    .unwrap();
+            }
+        }
+        h.with_stats(|s| {
+            assert!(
+                s.shared_block_ratio().unwrap_or(0.0) > 0.0,
+                "{mode:?}: forks must share prefix blocks"
+            );
+            assert!(s.pool_occupancy().unwrap_or(0.0) > 0.0);
+        });
+        let expect = standalone_transcript(&w, mode);
+        for open in [&a, &b] {
+            let closed = h.close_session(open.session).unwrap();
+            assert_eq!(closed.steps as usize, w.n - m);
+            assert_eq!(
+                closed.transcript.as_slice(),
+                &expect[m..],
+                "{mode:?}: forked transcript ≡ contiguous suffix bitwise"
+            );
+        }
+        let closed = h.close_session(parent.session).unwrap();
+        assert_eq!(closed.transcript.as_slice(), &expect[..m]);
+        server.shutdown();
+    }
+}
+
+#[test]
 fn prefill_on_decode_only_server_errors_not_hangs() {
     let server = decode_server(2, 8, SchedulerMode::EventDriven);
     let h = server.handle();
@@ -207,8 +312,9 @@ fn property_random_interleavings_lose_no_request_and_leak_no_lane() {
             let ops = 24 + rng.below(16);
             for _ in 0..ops {
                 match rng.below(10) {
-                    // Open (may legitimately fail when the pool is full).
-                    0 | 1 => match h.open_session(2) {
+                    // Open probe (answers immediately; a full pool is
+                    // the typed admission-deferred error, never a hang).
+                    0 | 1 => match h.try_open_session(2) {
                         Ok(open) => {
                             sessions.insert(
                                 open.session,
@@ -324,7 +430,7 @@ fn property_random_interleavings_lose_no_request_and_leak_no_lane() {
         let server = decode_server(3, 4, mode);
         let h = server.handle();
         let ids: Vec<u64> = (0..3).map(|_| h.open_session(2).unwrap().session).collect();
-        assert!(h.open_session(2).is_err(), "pool full at 3 lanes");
+        assert!(h.try_open_session(2).is_err(), "pool full at 3 lanes");
         for id in &ids {
             h.close_session(*id).unwrap();
         }
