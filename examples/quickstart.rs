@@ -17,6 +17,9 @@ use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64, sdpa_f64_maske
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
 use sdpa_dataflow::cli::Args;
+use sdpa_dataflow::coordinator::fleet::{self, FleetConfig};
+use sdpa_dataflow::coordinator::traffic::{Trace, TrafficConfig};
+use sdpa_dataflow::coordinator::SessionConfig;
 use sdpa_dataflow::report::Table;
 use sdpa_dataflow::runtime::kvcache::{BlockPool, KvCacheConfig};
 
@@ -170,6 +173,43 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if pool.used_blocks() != 0 {
         return Err("closing every session must free every block".into());
     }
+
+    // 6. Fleet serving: generate a seeded, replayable traffic trace
+    //    (bursty arrivals, forks, abandons) and replay it through a
+    //    2-shard fleet — two isolated fabrics behind a least-loaded
+    //    router. Every served transcript is bit-identical to the
+    //    standalone oracle, and the roll-up reports TTFT/inter-token
+    //    percentiles per shard and fleet-wide.
+    let trace = Trace::generate(&TrafficConfig {
+        sessions: 6,
+        d,
+        seed: 42,
+        ..TrafficConfig::default()
+    })
+    .map_err(|e| e.to_string())?;
+    let lanes = trace.sessions.len();
+    let fleet_cfg = FleetConfig {
+        shards: 2,
+        sessions: SessionConfig {
+            lanes,
+            max_sessions: lanes,
+            kv: KvCacheConfig {
+                block_size: 4,
+                num_blocks: trace.max_rows().div_ceil(4).max(1) * lanes + 8,
+            },
+            ..SessionConfig::default()
+        },
+    };
+    let rep = fleet::replay(&trace, fleet_cfg).map_err(|e| e.to_string())?;
+    let oracle = trace
+        .oracle_transcripts(DecodeKind::MemoryFree)
+        .map_err(|e| e.to_string())?;
+    for s in &trace.sessions {
+        if rep.transcripts.get(&s.id) != oracle.get(&s.id) {
+            return Err("fleet transcript must be bit-identical to the oracle".into());
+        }
+    }
+    println!("fleet replay (2 shards): {}", rep.rollup.summary());
 
     println!("quickstart OK: O(1) intermediate memory at full throughput, depths inferred");
     Ok(())

@@ -1,0 +1,164 @@
+//! Fleet replay throughput: one seeded bursty trace driven through
+//! F independent fabric shards, wall-clock per full replay.
+//!
+//! Wall-clock twin of `experiments/traffic.rs`: each measurement
+//! rebuilds the fleet and replays the whole trace (admission, routing,
+//! waves, closes), so `mean_ns` prices the router + session-table path
+//! end to end. The virtual-clock roll-up rides along — aggregate
+//! steps/kilocycle and TTFT/inter-token percentiles per shard count —
+//! which is the deployment-facing scaling figure: more shards → more
+//! concurrent waves → fewer virtual cycles for the same trace. Emits
+//! `BENCH_fleet.json` for CI artifact upload alongside
+//! `BENCH_serving.json` / `BENCH_paging.json`.
+//!
+//! ```bash
+//! cargo bench --bench fleet_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::coordinator::fleet::{replay, FleetConfig};
+use sdpa_dataflow::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
+use sdpa_dataflow::coordinator::{FleetRollup, SessionConfig};
+use sdpa_dataflow::runtime::kvcache::KvCacheConfig;
+
+struct Row {
+    shards: usize,
+    sessions: usize,
+    total_steps: usize,
+    mean_ns: f64,
+    rollup: FleetRollup,
+}
+
+impl Row {
+    /// Decode steps served per wall-clock second of replay.
+    fn steps_per_sec(&self) -> f64 {
+        self.total_steps as f64 / (self.mean_ns / 1e9)
+    }
+
+    fn json(&self) -> String {
+        let agg = self.rollup.aggregate();
+        format!(
+            "{{\"shards\":{},\"sessions\":{},\"total_steps\":{},\
+             \"mean_ns\":{:.1},\"steps_per_sec\":{:.1},\
+             \"virtual_cycles\":{},\"steps_per_kilocycle\":{:.3},\
+             \"ttft_p50\":{},\"ttft_p95\":{},\
+             \"itl_p50\":{},\"itl_p95\":{},\"deferrals\":{}}}",
+            self.shards,
+            self.sessions,
+            self.total_steps,
+            self.mean_ns,
+            self.steps_per_sec(),
+            self.rollup.total_cycles(),
+            agg.steps_per_kilocycle(self.rollup.total_cycles()),
+            agg.ttft().pct(0.50).unwrap_or(0),
+            agg.ttft().pct(0.95).unwrap_or(0),
+            agg.inter_token().pct(0.50).unwrap_or(0),
+            agg.inter_token().pct(0.95).unwrap_or(0),
+            agg.deferrals(),
+        )
+    }
+}
+
+/// Same sizing rule as the experiment driver: every shard alone can
+/// hold the whole trace, so fork-heavy traces measure routing and load
+/// rather than wedging on capacity.
+fn shard_policy(trace: &Trace) -> SessionConfig {
+    let block_size = 4;
+    let lanes = trace.sessions.len();
+    let per_session = trace.max_rows().div_ceil(block_size).max(1);
+    SessionConfig {
+        lanes,
+        max_sessions: lanes,
+        kv: KvCacheConfig {
+            block_size,
+            num_blocks: per_session * lanes + 8,
+        },
+        ..SessionConfig::default()
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let shard_counts: &[usize] = if quick_requested() { &[1, 2] } else { &[1, 2, 4] };
+    let sessions = if quick_requested() { 8 } else { 16 };
+    let d = 8;
+
+    let cfg = TrafficConfig {
+        sessions,
+        d,
+        arrivals: Arrivals::Bursty {
+            rate: 4.0,
+            mean_on: 2.0,
+            mean_off: 4.0,
+        },
+        prompt: LenDist::Uniform { lo: 2, hi: 6 },
+        output: LenDist::Uniform { lo: 2, hi: 8 },
+        fork_fraction: 0.25,
+        abandon_fraction: 0.2,
+        seed: 0xF1EE_7BE5,
+    };
+    let trace = Trace::generate(&cfg).expect("trace generates");
+    let total_steps = trace.total_steps();
+    println!(
+        "trace: {} sessions, {} total steps, last arrival at cycle {}",
+        trace.sessions.len(),
+        total_steps,
+        trace.last_arrival()
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &shards in shard_counts {
+        let fleet_cfg = FleetConfig {
+            shards,
+            sessions: shard_policy(&trace),
+        };
+        let mut last = None;
+        let stats = b.bench(
+            &format!("fleet/replay_shards{shards}_sessions{sessions}"),
+            || {
+                let rep = replay(&trace, fleet_cfg).expect("replay completes");
+                black_box(rep.transcripts.len());
+                last = Some(rep);
+            },
+        );
+        let rep = last.expect("benched at least once");
+        rows.push(Row {
+            shards,
+            sessions,
+            total_steps,
+            mean_ns: stats.mean_ns,
+            rollup: rep.rollup,
+        });
+    }
+
+    // Scaling summary: same trace, growing fleet → fewer virtual
+    // cycles (more concurrent waves), roughly flat wall-clock.
+    println!();
+    let base = &rows[0];
+    for r in &rows {
+        let agg = r.rollup.aggregate();
+        println!(
+            "scaling shards={:<2} {:>8} virtual cycles ({:+.1}% vs 1 shard) \
+             {:>10.1} steps/s  {:.2} steps/kcyc  ttft p50 {} cyc",
+            r.shards,
+            r.rollup.total_cycles(),
+            100.0 * (r.rollup.total_cycles() as f64 / base.rollup.total_cycles() as f64 - 1.0),
+            r.steps_per_sec(),
+            agg.steps_per_kilocycle(r.rollup.total_cycles()),
+            agg.ttft().pct(0.50).unwrap_or(0),
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_fleet.json", &json).expect("write BENCH_fleet.json");
+    println!("\nwrote BENCH_fleet.json ({} rows)", rows.len());
+}

@@ -1,0 +1,680 @@
+//! Multi-fabric fleet sharding: F independent engine instances behind
+//! one load-aware router.
+//!
+//! The paper's unit of scale is one streaming-dataflow pipeline; the
+//! serving layer's unit is one [`SessionTable`] (a lane pool + a paged
+//! KV block pool). A [`Fleet`] replicates that unit F times — each
+//! shard an isolated fabric with its own lanes and blocks, sharing
+//! **nothing** — and routes sessions across them:
+//!
+//! * **Placement** (`open`): least-loaded — shards are tried in
+//!   ascending `(active sessions, used blocks, shard index)` order, so
+//!   placement is deterministic given the trace, and an
+//!   [`Error::AdmissionDeferred`] from one shard falls through to the
+//!   next. Only when every shard defers does the open defer.
+//! * **Affinity** (`fork`): a fork is placed on the shard holding the
+//!   parent's cached prefix — shard-local block sharing is the whole
+//!   point of prefix sharing, and blocks never cross fabrics.
+//! * **Stickiness** (`step_wave`): a session's steps always route to
+//!   the shard that admitted it (global→local id map); per-shard waves
+//!   run conceptually in parallel, so a fleet wave costs the **max**
+//!   of its shard waves, not the sum.
+//!
+//! [`replay`] drives a [`Trace`] through a fleet on a virtual clock
+//! (cycle domain — deterministic latency percentiles per trace, no
+//! wall-clock noise), returning served transcripts for differential
+//! conformance against [`Trace::oracle_transcripts`], the placement
+//! map, and a [`FleetRollup`] of per-shard + aggregate throughput,
+//! TTFT, and inter-token latency.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::request::{DecodeStepRequest, DecodeStepResponse};
+use super::sessions::{SessionConfig, SessionTable};
+use super::stats::FleetRollup;
+use super::traffic::Trace;
+use crate::attention::reference::Matrix;
+use crate::attention::workload::Workload;
+use crate::{Error, Result};
+
+/// Replay iteration backstop: far above any real trace (a wave serves
+/// ≥ 1 step, and deferral chains resolve via preemption), it turns a
+/// mis-sized-fleet livelock into a diagnosable error.
+const REPLAY_ITERATION_LIMIT: u64 = 1_000_000;
+
+/// Fleet policy: F identical shards, each built from the same
+/// [`SessionConfig`] (its own lane pool and KV block pool).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Independent engine instances (≥ 1).
+    pub shards: usize,
+    /// Per-shard session-table policy.
+    pub sessions: SessionConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards: 2,
+            sessions: SessionConfig::default(),
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Route {
+    shard: usize,
+    local: u64,
+}
+
+/// F isolated [`SessionTable`]s behind one router. Session ids handed
+/// out here are **global**; the router rewrites them to the owning
+/// shard's local ids on every call.
+pub struct Fleet {
+    shards: Vec<SessionTable>,
+    route: HashMap<u64, Route>,
+    next_global: u64,
+}
+
+impl Fleet {
+    /// Build a fleet of `cfg.shards` identical shards.
+    pub fn new(cfg: FleetConfig) -> Result<Fleet> {
+        if cfg.shards == 0 {
+            return Err(Error::Coordinator("fleet needs at least one shard".into()));
+        }
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            shards.push(SessionTable::new(cfg.sessions)?);
+        }
+        Ok(Fleet {
+            shards,
+            route: HashMap::new(),
+            next_global: 0,
+        })
+    }
+
+    /// Shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// One shard's table (read-only — gauges and conformance checks).
+    pub fn shard(&self, s: usize) -> &SessionTable {
+        &self.shards[s]
+    }
+
+    /// Open sessions across the whole fleet.
+    pub fn active(&self) -> usize {
+        self.shards.iter().map(SessionTable::active).sum()
+    }
+
+    /// Total steps served across the whole fleet.
+    pub fn steps_served(&self) -> u64 {
+        self.shards.iter().map(SessionTable::steps_served).sum()
+    }
+
+    /// Total preemptions across the whole fleet.
+    pub fn preemptions(&self) -> u64 {
+        self.shards.iter().map(SessionTable::preemptions).sum()
+    }
+
+    /// The shard a global session id lives on.
+    pub fn shard_of(&self, id: u64) -> Option<usize> {
+        self.route.get(&id).map(|r| r.shard)
+    }
+
+    /// Tokens a session has decoded so far.
+    pub fn len_of(&self, id: u64) -> Option<usize> {
+        let r = self.route.get(&id)?;
+        self.shards[r.shard].len_of(r.local)
+    }
+
+    /// Deterministic least-loaded placement order: ascending (active
+    /// sessions, used blocks, shard index).
+    fn placement_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&s| {
+            (
+                self.shards[s].active(),
+                self.shards[s].pool_used_blocks(),
+                s,
+            )
+        });
+        order
+    }
+
+    fn register(&mut self, shard: usize, local: u64) -> u64 {
+        let id = self.next_global;
+        self.next_global += 1;
+        self.route.insert(id, Route { shard, local });
+        id
+    }
+
+    /// Open a fresh session somewhere in the fleet (least-loaded with
+    /// deterministic tie-breaks); returns its **global** id. A shard
+    /// that defers admission falls through to the next; the open only
+    /// defers when every shard deferred.
+    pub fn open(&mut self, d: usize) -> Result<u64> {
+        let mut last_defer = String::new();
+        for s in self.placement_order() {
+            match self.shards[s].open(d) {
+                Ok(local) => return Ok(self.register(s, local)),
+                Err(Error::AdmissionDeferred(msg)) => last_defer = msg,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::AdmissionDeferred(format!(
+            "every shard deferred the open (last: {last_defer})"
+        )))
+    }
+
+    /// Fork a session from `parent`'s cached prefix. Affinity rule:
+    /// the child is placed on the parent's shard — shared KV blocks
+    /// never cross fabrics, so only that shard can serve the prefix at
+    /// zero copies. Defers if that shard is full.
+    pub fn fork(&mut self, parent: u64) -> Result<u64> {
+        let Route { shard, local } = *self.route.get(&parent).ok_or_else(|| {
+            Error::Coordinator(format!("unknown fleet session {parent}"))
+        })?;
+        let child_local = self.shards[shard].fork(local)?;
+        Ok(self.register(shard, child_local))
+    }
+
+    /// One fleet scheduling iteration: partition the requests by
+    /// owning shard (preserving order within each shard), run one wave
+    /// per shard, and stitch the per-request results back in input
+    /// order. Returns the results plus the fleet wave's cycle cost —
+    /// the **max** over shard waves, because shards are independent
+    /// fabrics executing concurrently.
+    pub fn step_wave(
+        &mut self,
+        reqs: &[DecodeStepRequest],
+    ) -> (Vec<Result<DecodeStepResponse>>, u64) {
+        let mut results: Vec<Option<Result<DecodeStepResponse>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, req) in reqs.iter().enumerate() {
+            match self.route.get(&req.session) {
+                Some(r) => per_shard[r.shard].push(i),
+                None => {
+                    results[i] = Some(Err(Error::Coordinator(format!(
+                        "unknown fleet session {}",
+                        req.session
+                    ))));
+                }
+            }
+        }
+        let mut wave_cycles = 0u64;
+        for (s, members) in per_shard.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let local_reqs: Vec<DecodeStepRequest> = members
+                .iter()
+                .map(|&i| reqs[i].with_session(self.route[&reqs[i].session].local))
+                .collect();
+            let shard_results = self.shards[s].step_wave(&local_reqs);
+            for (&i, res) in members.iter().zip(shard_results) {
+                match res {
+                    Ok(mut resp) => {
+                        wave_cycles = wave_cycles.max(resp.cycles);
+                        // Hand the caller back its global id.
+                        resp.session = reqs[i].session;
+                        results[i] = Some(Ok(resp));
+                    }
+                    Err(e) => results[i] = Some(Err(e)),
+                }
+            }
+        }
+        let results = results
+            .into_iter()
+            .map(|r| r.expect("every fleet request resolved"))
+            .collect();
+        (results, wave_cycles)
+    }
+
+    /// Retire a session; returns its shard and transcript, or `None`
+    /// for an unknown id.
+    pub fn close(&mut self, id: u64) -> Option<(usize, Matrix)> {
+        let r = self.route.remove(&id)?;
+        let transcript = self.shards[r.shard].close(r.local)?;
+        Some((r.shard, transcript))
+    }
+}
+
+/// What replaying one [`Trace`] through a fleet produced.
+#[derive(Debug)]
+pub struct Replay {
+    /// Served transcript per trace session id — a fork's holds only
+    /// its own steps (not the inherited prefix); an abandoned
+    /// session's truncates at the abandon point. Must match
+    /// [`Trace::oracle_transcripts`] bit-for-bit.
+    pub transcripts: HashMap<u64, Matrix>,
+    /// Shard each trace session was placed on — the
+    /// placement-determinism witness.
+    pub placements: HashMap<u64, usize>,
+    /// Per-shard + aggregate throughput/latency roll-up, all in the
+    /// replay's virtual-cycle domain.
+    pub rollup: FleetRollup,
+}
+
+/// Per-session replay state.
+struct SessionState {
+    rows: Workload,
+    steps: usize,
+    done: usize,
+    global: Option<u64>,
+    shard: usize,
+    closed: bool,
+    last_done: u64,
+}
+
+/// Drive a trace through a fresh fleet on a virtual clock.
+///
+/// Time advances in fleet waves: each iteration admits every arrival
+/// whose timestamp has passed (retrying deferred admissions in FIFO
+/// order), gathers at most one pending step per admitted session, runs
+/// one fleet wave, and advances the clock by the wave's cycle cost.
+/// Step pacing is closed-loop (a session's next step issues when its
+/// previous completes), so TTFT (arrival → first row) and inter-token
+/// gaps fall out of the clock deterministically.
+///
+/// Two gates keep transcripts bit-identical across shard counts:
+/// a parent at its pinned fork point holds until every trace child of
+/// that prefix is admitted (so no replay lets the parent grow past the
+/// prefix the trace promised the children), and a finished parent's
+/// close waits for the same condition.
+pub fn replay(trace: &Trace, cfg: FleetConfig) -> Result<Replay> {
+    let mut fleet = Fleet::new(cfg)?;
+    let mut rollup = FleetRollup::new(fleet.shard_count());
+    let n = trace.sessions.len();
+
+    let mut st: Vec<SessionState> = trace
+        .sessions
+        .iter()
+        .map(|s| SessionState {
+            rows: s.rows(),
+            steps: s.steps(),
+            done: 0,
+            global: None,
+            shard: 0,
+            closed: false,
+            last_done: 0,
+        })
+        .collect();
+    // children[p] = trace ids forking p (parent fork/close gating).
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for s in &trace.sessions {
+        if let Some(p) = s.parent {
+            children[p as usize].push(s.id as usize);
+        }
+    }
+
+    let mut transcripts: HashMap<u64, Matrix> = HashMap::new();
+    let mut placements: HashMap<u64, usize> = HashMap::new();
+    let mut now: u64 = 0;
+    let mut next_arrival = 0usize;
+    let mut pending: VecDeque<usize> = VecDeque::new();
+    let mut retry_first: Vec<usize> = Vec::new();
+    let mut iterations = 0u64;
+
+    loop {
+        iterations += 1;
+        if iterations > REPLAY_ITERATION_LIMIT {
+            return Err(Error::Coordinator(format!(
+                "trace replay exceeded {REPLAY_ITERATION_LIMIT} iterations \
+                 (suspected livelock — raise per-shard lanes/max_sessions/blocks)"
+            )));
+        }
+
+        // 1. Arrivals whose timestamp has passed join the admission
+        //    queue (trace sessions are already sorted by arrival).
+        while next_arrival < n && trace.sessions[next_arrival].arrival <= now {
+            pending.push_back(next_arrival);
+            next_arrival += 1;
+        }
+
+        // 2. Admissions, FIFO. A fork waits (without blocking the
+        //    queue) until its parent is admitted and has decoded the
+        //    pinned prefix; capacity deferrals requeue.
+        let mut still: VecDeque<usize> = VecDeque::new();
+        while let Some(sid) = pending.pop_front() {
+            let ts = &trace.sessions[sid];
+            let attempt = match ts.parent {
+                None => Some(fleet.open(ts.d)),
+                Some(p) => {
+                    let parent = &st[p as usize];
+                    match parent.global {
+                        Some(g) if parent.done >= ts.fork_at => Some(fleet.fork(g)),
+                        _ => None,
+                    }
+                }
+            };
+            match attempt {
+                None => still.push_back(sid),
+                Some(Ok(g)) => {
+                    let shard = fleet.shard_of(g).expect("just placed");
+                    st[sid].global = Some(g);
+                    st[sid].shard = shard;
+                    placements.insert(sid as u64, shard);
+                    rollup.record_open(shard);
+                }
+                Some(Err(Error::AdmissionDeferred(_))) => {
+                    rollup.record_deferral(None);
+                    still.push_back(sid);
+                }
+                Some(Err(e)) => return Err(e),
+            }
+        }
+        pending = still;
+
+        // 3. Closes: a finished session retires once every child of
+        //    its prefix has been admitted (so shared blocks hand over
+        //    before the parent lets go).
+        for sid in 0..n {
+            let ready = {
+                let s = &st[sid];
+                !s.closed
+                    && s.global.is_some()
+                    && s.done >= s.steps
+                    && children[sid].iter().all(|&c| st[c].global.is_some())
+            };
+            if ready {
+                let g = st[sid].global.expect("checked above");
+                let (shard, transcript) =
+                    fleet.close(g).expect("routed session must close");
+                transcripts.insert(sid as u64, transcript);
+                rollup.record_close(shard);
+                st[sid].closed = true;
+            }
+        }
+
+        // 4. Gather at most one pending step per admitted session.
+        //    Deferred steps from the previous wave go first (the
+        //    starvation guard the serving loop also uses); otherwise
+        //    ascending trace id — deterministic either way.
+        let mut candidates: Vec<usize> = Vec::new();
+        for (sid, s) in st.iter().enumerate() {
+            if s.closed || s.global.is_none() || s.done >= s.steps {
+                continue;
+            }
+            // Fork gate: a parent sitting at its pinned fork point
+            // holds until every trace child of that prefix is
+            // admitted — otherwise a lightly-loaded replay could grow
+            // the parent past the prefix the trace pinned.
+            let gate = trace.sessions[sid].prompt_len;
+            if !children[sid].is_empty()
+                && s.done == gate
+                && children[sid].iter().any(|&c| st[c].global.is_none())
+            {
+                continue;
+            }
+            candidates.push(sid);
+        }
+        candidates.sort_by_key(|sid| (!retry_first.contains(sid), *sid));
+        let reqs: Vec<DecodeStepRequest> = candidates
+            .iter()
+            .map(|&sid| {
+                let s = &st[sid];
+                let t = s.done;
+                DecodeStepRequest {
+                    session: s.global.expect("gathered from admitted"),
+                    q: s.rows.q[t].clone(),
+                    k: s.rows.k[t].clone(),
+                    v: s.rows.v[t].clone(),
+                }
+            })
+            .collect();
+
+        // 5. Nothing runnable: jump to the next arrival, finish, or
+        //    diagnose a stuck replay.
+        if reqs.is_empty() {
+            if next_arrival < n {
+                now = now.max(trace.sessions[next_arrival].arrival);
+                continue;
+            }
+            if st.iter().all(|s| s.closed) {
+                break;
+            }
+            if !pending.is_empty() {
+                return Err(Error::Coordinator(format!(
+                    "trace replay deadlocked at cycle {now}: {} sessions wait on \
+                     admission but no step can run to free capacity (raise \
+                     per-shard lanes/max_sessions for this trace)",
+                    pending.len()
+                )));
+            }
+            // All arrived, none pending, none runnable, some unclosed:
+            // close gating resolves next iteration at the latest, but
+            // guard against a logic regression looping forever.
+            continue;
+        }
+
+        // 6. One fleet wave; the clock advances by its cycle cost
+        //    (min 1 so a fully-deferred wave still moves time).
+        let (results, cycles) = fleet.step_wave(&reqs);
+        now += cycles.max(1);
+        retry_first.clear();
+        for (sid, res) in candidates.into_iter().zip(results) {
+            match res {
+                Ok(_) => {
+                    let arrival = trace.sessions[sid].arrival;
+                    let s = &mut st[sid];
+                    let first = s.done == 0;
+                    let since = if first { arrival } else { s.last_done };
+                    rollup.record_step(s.shard, first, now.saturating_sub(since));
+                    s.done += 1;
+                    s.last_done = now;
+                }
+                Err(Error::AdmissionDeferred(_)) => {
+                    rollup.record_deferral(Some(st[sid].shard));
+                    retry_first.push(sid);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    rollup.set_total_cycles(now);
+    Ok(Replay {
+        transcripts,
+        placements,
+        rollup,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::decode::DecodeKind;
+    use crate::coordinator::traffic::{Arrivals, LenDist, TrafficConfig};
+    use crate::runtime::kvcache::KvCacheConfig;
+
+    fn small_cfg(shards: usize) -> FleetConfig {
+        FleetConfig {
+            shards,
+            sessions: SessionConfig {
+                lanes: 4,
+                max_sessions: 4,
+                kv: KvCacheConfig {
+                    block_size: 4,
+                    num_blocks: 64,
+                },
+                ..SessionConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn open_spreads_least_loaded_with_deterministic_ties() {
+        let mut fleet = Fleet::new(small_cfg(3)).unwrap();
+        // Empty fleet: ties break to ascending shard index.
+        let a = fleet.open(4).unwrap();
+        let b = fleet.open(4).unwrap();
+        let c = fleet.open(4).unwrap();
+        let d = fleet.open(4).unwrap();
+        assert_eq!(fleet.shard_of(a), Some(0));
+        assert_eq!(fleet.shard_of(b), Some(1));
+        assert_eq!(fleet.shard_of(c), Some(2));
+        assert_eq!(fleet.shard_of(d), Some(0), "wraps to the least loaded");
+        assert_eq!(fleet.active(), 4);
+    }
+
+    #[test]
+    fn fork_lands_on_parent_shard_and_shares_blocks() {
+        let mut fleet = Fleet::new(small_cfg(2)).unwrap();
+        let parent = fleet.open(4).unwrap();
+        // Push the parent past one block so the fork has a full block
+        // to share, stepping through the fleet path.
+        let w = Workload::random(6, 4, 0xF0_27);
+        for t in 0..6 {
+            let req = DecodeStepRequest {
+                session: parent,
+                q: w.q[t].clone(),
+                k: w.k[t].clone(),
+                v: w.v[t].clone(),
+            };
+            let (res, cycles) = fleet.step_wave(std::slice::from_ref(&req));
+            assert_eq!(res.len(), 1);
+            let resp = res.into_iter().next().unwrap().unwrap();
+            assert_eq!(resp.session, parent, "global id echoed");
+            assert_eq!(resp.step, t as u64);
+            assert!(cycles > 0);
+        }
+        // Least-loaded would prefer empty shard 1 — affinity must
+        // override and keep the fork beside its prefix on shard 0.
+        let child = fleet.fork(parent).unwrap();
+        assert_eq!(fleet.shard_of(child), fleet.shard_of(parent));
+        let shard = fleet.shard_of(parent).unwrap();
+        assert!(
+            fleet.shard(shard).pool_shared_blocks() > 0,
+            "fork shares the parent's full blocks"
+        );
+        assert_eq!(fleet.len_of(child), Some(6), "child inherits the prefix");
+    }
+
+    #[test]
+    fn step_wave_stitches_results_and_flags_unknown_sessions() {
+        let mut fleet = Fleet::new(small_cfg(2)).unwrap();
+        let a = fleet.open(2).unwrap();
+        let b = fleet.open(2).unwrap();
+        assert_ne!(fleet.shard_of(a), fleet.shard_of(b), "spread across shards");
+        let w = Workload::random(2, 2, 0x51);
+        let reqs = vec![
+            DecodeStepRequest {
+                session: a,
+                q: w.q[0].clone(),
+                k: w.k[0].clone(),
+                v: w.v[0].clone(),
+            },
+            DecodeStepRequest {
+                session: 999,
+                q: w.q[0].clone(),
+                k: w.k[0].clone(),
+                v: w.v[0].clone(),
+            },
+            DecodeStepRequest {
+                session: b,
+                q: w.q[1].clone(),
+                k: w.k[1].clone(),
+                v: w.v[1].clone(),
+            },
+        ];
+        let (results, _) = fleet.step_wave(&reqs);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].as_ref().unwrap().session, a);
+        assert!(
+            matches!(results[1], Err(Error::Coordinator(_))),
+            "unknown id errors individually"
+        );
+        assert_eq!(results[2].as_ref().unwrap().session, b);
+    }
+
+    #[test]
+    fn close_returns_shard_and_transcript() {
+        let mut fleet = Fleet::new(small_cfg(2)).unwrap();
+        let id = fleet.open(3).unwrap();
+        let w = Workload::random(2, 3, 0xC1);
+        for t in 0..2 {
+            let req = DecodeStepRequest {
+                session: id,
+                q: w.q[t].clone(),
+                k: w.k[t].clone(),
+                v: w.v[t].clone(),
+            };
+            let (res, _) = fleet.step_wave(std::slice::from_ref(&req));
+            res.into_iter().next().unwrap().unwrap();
+        }
+        let (shard, transcript) = fleet.close(id).unwrap();
+        assert_eq!(shard, 0);
+        assert_eq!(transcript.len(), 2);
+        assert_eq!(fleet.active(), 0);
+        assert!(fleet.close(id).is_none(), "second close is None");
+    }
+
+    #[test]
+    fn zero_shard_fleet_rejected() {
+        assert!(matches!(
+            Fleet::new(FleetConfig {
+                shards: 0,
+                ..FleetConfig::default()
+            }),
+            Err(Error::Coordinator(_))
+        ));
+    }
+
+    #[test]
+    fn replay_small_trace_matches_oracle_and_is_deterministic() {
+        let trace = Trace::generate(&TrafficConfig {
+            sessions: 8,
+            d: 3,
+            arrivals: Arrivals::Poisson { rate: 2.0 },
+            prompt: LenDist::Uniform { lo: 1, hi: 3 },
+            output: LenDist::Uniform { lo: 2, hi: 4 },
+            fork_fraction: 0.4,
+            abandon_fraction: 0.3,
+            seed: 0xF1EE7,
+        })
+        .unwrap();
+        // Roomy shards: every shard alone fits the whole trace, so a
+        // fork-heavy pattern cannot wedge on parent/child admission.
+        let roomy = FleetConfig {
+            shards: 2,
+            sessions: SessionConfig {
+                lanes: 8,
+                max_sessions: 8,
+                kv: KvCacheConfig {
+                    block_size: 4,
+                    num_blocks: 64,
+                },
+                ..SessionConfig::default()
+            },
+        };
+        let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
+        let a = replay(&trace, roomy).unwrap();
+        let b = replay(&trace, roomy).unwrap();
+        assert_eq!(a.transcripts.len(), 8, "every session closes");
+        for s in &trace.sessions {
+            assert_eq!(
+                a.transcripts[&s.id], oracle[&s.id],
+                "session {} transcript must be bit-identical to the oracle",
+                s.id
+            );
+        }
+        assert_eq!(a.placements, b.placements, "placement is deterministic");
+        assert_eq!(
+            a.rollup.aggregate().steps(),
+            b.rollup.aggregate().steps(),
+            "roll-up is deterministic"
+        );
+        assert_eq!(
+            a.rollup.aggregate().steps() as usize,
+            trace.total_steps(),
+            "every trace step served exactly once"
+        );
+        assert_eq!(a.rollup.total_cycles(), b.rollup.total_cycles());
+        assert!(a.rollup.total_cycles() > 0);
+        let firsts = a.rollup.aggregate().ttft().count();
+        assert_eq!(firsts, 8, "one TTFT sample per session");
+    }
+}

@@ -33,26 +33,45 @@
 //!   with prefill and decode interleaving through one ingress.
 //! * [`stats`] — O(1)-memory latency/throughput accounting (streaming
 //!   sums + bounded reservoirs): prefill percentiles, decode per-step
-//!   latency, steps/sec, wave lane occupancy, session lifecycle.
+//!   latency and TTFT, steps/sec, wave lane occupancy, session
+//!   lifecycle, plus the fleet roll-up types ([`FleetRollup`]).
+//! * [`traffic`] — seeded, replayable workload traces: Poisson and
+//!   bursty ON/OFF arrivals, mixed prompt/output-length distributions,
+//!   fork-heavy shared-prefix sessions and abandon-mid-decode
+//!   behavior, materialized as a deterministic [`Trace`] any driver
+//!   can replay (byte-identical per seed).
+//! * [`fleet`] — multi-fabric sharding: F isolated [`SessionTable`]
+//!   instances (own lanes, own KV blocks) behind a router doing
+//!   deterministic least-loaded placement with session stickiness and
+//!   fork→parent-shard affinity; [`fleet::replay`] drives a trace
+//!   through the fleet on a virtual clock for deterministic
+//!   throughput/latency roll-ups and oracle-conformant transcripts.
 //!
 //! The design mirrors a vLLM-style router at miniature scale: shape
 //! classes play the role of (model, sequence-bucket) routing keys,
 //! decode sessions the role of its sticky sequence → worker pinning,
-//! and waves the role of its iteration-level continuous batching.
+//! waves the role of its iteration-level continuous batching, and the
+//! fleet the role of its multi-replica data-parallel frontend.
 
 pub mod batcher;
+pub mod fleet;
 pub mod request;
 pub mod server;
 pub mod sessions;
 pub mod stats;
+pub mod traffic;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use fleet::{Fleet, FleetConfig, Replay};
 pub use request::{
     AttnRequest, AttnResponse, DecodeClass, DecodeCloseResponse, DecodeOpenResponse,
     DecodeStepRequest, DecodeStepResponse, ShapeClass,
 };
 pub use server::{Server, ServerConfig, ServerHandle};
 pub use sessions::{SessionConfig, SessionTable};
-pub use stats::ServingStats;
+pub use stats::{FleetRollup, PctStats, ServingStats, ShardRollup};
+pub use traffic::{
+    Arrivals, LenDist, Trace, TraceEvent, TraceEventKind, TraceSession, TrafficConfig,
+};
 
 pub use crate::runtime::kvcache::KvCacheConfig;

@@ -117,6 +117,18 @@ impl DecodeStepRequest {
         }
         Ok(DecodeClass { d })
     }
+
+    /// The same step re-addressed to another session id. The fleet
+    /// router uses this to rewrite a global session id to the owning
+    /// shard's local id without touching the rows.
+    pub fn with_session(&self, session: u64) -> DecodeStepRequest {
+        DecodeStepRequest {
+            session,
+            q: self.q.clone(),
+            k: self.k.clone(),
+            v: self.v.clone(),
+        }
+    }
 }
 
 /// Response to one decode step.
@@ -228,6 +240,21 @@ mod tests {
         let c = r.class().unwrap();
         assert_eq!(c, DecodeClass { d: 16 });
         assert_eq!(format!("{c}"), "decode_d16");
+    }
+
+    #[test]
+    fn with_session_rewrites_only_the_id() {
+        let r = DecodeStepRequest {
+            session: 7,
+            q: vec![1.0, 2.0],
+            k: vec![3.0, 4.0],
+            v: vec![5.0, 6.0],
+        };
+        let rewritten = r.with_session(42);
+        assert_eq!(rewritten.session, 42);
+        assert_eq!(rewritten.q, r.q);
+        assert_eq!(rewritten.k, r.k);
+        assert_eq!(rewritten.v, r.v);
     }
 
     #[test]

@@ -230,12 +230,12 @@ impl ServerHandle {
 
     /// Snapshot of the serving statistics summary.
     pub fn stats_summary(&self) -> String {
-        self.stats.lock().unwrap().summary()
+        ServingStats::lock(&self.stats).summary()
     }
 
     /// Run `f` against the stats under the lock.
     pub fn with_stats<T>(&self, f: impl FnOnce(&ServingStats) -> T) -> T {
-        f(&self.stats.lock().unwrap())
+        f(&ServingStats::lock(&self.stats))
     }
 }
 
@@ -275,7 +275,7 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Ingress>();
         let stats = Arc::new(Mutex::new(ServingStats::new()));
         {
-            let mut st = stats.lock().unwrap();
+            let mut st = ServingStats::lock(&stats);
             st.set_lane_capacity(cfg.sessions.lanes);
             st.set_pool_capacity(cfg.sessions.kv.num_blocks);
         }
@@ -384,7 +384,7 @@ impl DecodeState {
                 (self.table.fork(*parent)?, Some(*parent))
             }
         };
-        stats.lock().unwrap().record_session_open();
+        ServingStats::lock(stats).record_session_open();
         Ok(DecodeOpenResponse {
             session: id,
             lane: self.table.lane_of(id).unwrap_or(0),
@@ -415,7 +415,7 @@ impl DecodeState {
 
     /// Mirror the block-pool gauges into the shared stats.
     fn publish_pool_gauges(&self, stats: &Arc<Mutex<ServingStats>>) {
-        let mut st = stats.lock().unwrap();
+        let mut st = ServingStats::lock(stats);
         st.set_pool_gauges(
             self.table.pool_used_blocks(),
             self.table.pool_shared_blocks(),
@@ -430,7 +430,7 @@ impl DecodeState {
     ) -> std::result::Result<DecodeCloseResponse, String> {
         match self.table.close(session) {
             Some(transcript) => {
-                stats.lock().unwrap().record_session_close();
+                ServingStats::lock(stats).record_session_close();
                 Ok(DecodeCloseResponse {
                     session,
                     steps: transcript.len() as u64,
@@ -494,14 +494,23 @@ impl DecodeState {
         let finished = now_us(epoch);
         let mut progressed = false;
         {
-            let mut st = stats.lock().unwrap();
+            let mut st = ServingStats::lock(stats);
             let lanes_used = results.iter().filter(|r| r.is_ok()).count();
             if lanes_used > 0 {
                 st.record_wave(lanes_used);
             }
             for ((_, enq), res) in envelopes.iter().zip(&results) {
                 match res {
-                    Ok(_) => st.record_decode_step(finished.saturating_sub(*enq)),
+                    Ok(resp) => {
+                        let latency = finished.saturating_sub(*enq);
+                        st.record_decode_step(latency);
+                        // Step 0 is the session's first token: its
+                        // latency is the TTFT, tracked as its own
+                        // stream next to the inter-token samples.
+                        if resp.step == 0 {
+                            st.record_ttft(latency);
+                        }
+                    }
                     Err(Error::AdmissionDeferred(_)) => st.record_deferral(),
                     Err(_) => st.record_decode_error(),
                 }
@@ -532,7 +541,7 @@ impl DecodeState {
     fn fail_remaining(&mut self, stats: &Arc<Mutex<ServingStats>>) {
         for (_, queue) in self.pending.drain() {
             for (_, reply, _) in queue {
-                stats.lock().unwrap().record_decode_error();
+                ServingStats::lock(stats).record_decode_error();
                 let _ = reply.send(Err(
                     "server shut down before the step could be admitted".into(),
                 ));
@@ -733,7 +742,7 @@ fn admit_or_requeue(
             let _ = adm.into_reply().send(Ok(resp));
         }
         Err(Error::AdmissionDeferred(_)) if wait => {
-            stats.lock().unwrap().record_deferral();
+            ServingStats::lock(stats).record_deferral();
             decode.pending_admissions.push_back(adm);
         }
         Err(e) => {
@@ -751,7 +760,7 @@ fn enqueue(
     stats: &Arc<Mutex<ServingStats>>,
 ) {
     if registry.is_none() {
-        stats.lock().unwrap().record_error();
+        ServingStats::lock(stats).record_error();
         let _ = req.reply.send(AttnResponse {
             id: req.id,
             result: Err("prefill serving disabled: decode-only server (no artifact registry)".into()),
@@ -767,7 +776,7 @@ fn enqueue(
             }
         }
         Err(e) => {
-            stats.lock().unwrap().record_error();
+            ServingStats::lock(stats).record_error();
             let _ = req.reply.send(AttnResponse {
                 id: req.id,
                 result: Err(e.to_string()),
@@ -796,7 +805,7 @@ fn execute_batch(
     let finished = now_us(epoch);
     match result {
         Ok(outputs) => {
-            let mut st = stats.lock().unwrap();
+            let mut st = ServingStats::lock(stats);
             for ((req, enq), out) in batch.requests.into_iter().zip(outputs) {
                 let latency = finished.saturating_sub(enq);
                 st.record(latency, k);
@@ -810,7 +819,7 @@ fn execute_batch(
         }
         Err(e) => {
             let msg = e.to_string();
-            let mut st = stats.lock().unwrap();
+            let mut st = ServingStats::lock(stats);
             for (req, enq) in batch.requests {
                 st.record_error();
                 let _ = req.reply.send(AttnResponse {

@@ -251,6 +251,17 @@ impl SessionTable {
         self.lane_owner.iter().filter(|o| o.is_some()).count()
     }
 
+    /// Lanes currently free — the admission headroom the fleet router's
+    /// least-loaded placement reads.
+    pub fn free_lanes(&self) -> usize {
+        self.cfg.lanes - self.lanes_in_use()
+    }
+
+    /// Maximum concurrently open sessions (config accessor).
+    pub fn max_sessions(&self) -> usize {
+        self.cfg.max_sessions
+    }
+
     /// Total blocks in the shared KV-cache pool.
     pub fn pool_capacity(&self) -> usize {
         self.pool.capacity()

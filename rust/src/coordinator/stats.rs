@@ -13,6 +13,7 @@
 //! construction: precompile and idle time before the first request used
 //! to be silently charged against req/s.
 
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::prng::SplitMix64;
@@ -82,6 +83,12 @@ pub struct ServingStats {
     decode_errors: u64,
     decode_latency_sum_us: u128,
     decode_latency: Reservoir,
+    // First tokens (TTFT — queue-to-first-row, tracked separately from
+    // the steady-state inter-token latency above because the two answer
+    // different SLO questions).
+    first_tokens: u64,
+    ttft_sum_us: u128,
+    ttft: Reservoir,
     // Waves (one per scheduling iteration that ran ≥ 1 lane).
     waves: u64,
     wave_lane_sum: u128,
@@ -108,6 +115,18 @@ impl Default for ServingStats {
 }
 
 impl ServingStats {
+    /// Lock a shared stats mutex, recovering from poisoning. Every
+    /// field here is a plain counter or a reservoir — no invariant
+    /// spans multiple fields mid-update — so stats from a thread that
+    /// panicked while holding the guard are still valid to read and
+    /// extend. Before this helper, one panicked observer wedged every
+    /// later `lock().unwrap()` on the serving path permanently.
+    pub fn lock(shared: &Mutex<ServingStats>) -> MutexGuard<'_, ServingStats> {
+        shared
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Empty accumulator.
     pub fn new() -> Self {
         ServingStats {
@@ -120,6 +139,9 @@ impl ServingStats {
             decode_errors: 0,
             decode_latency_sum_us: 0,
             decode_latency: Reservoir::new(0x5EED_0002),
+            first_tokens: 0,
+            ttft_sum_us: 0,
+            ttft: Reservoir::new(0x5EED_0003),
             waves: 0,
             wave_lane_sum: 0,
             lane_capacity: 0,
@@ -229,6 +251,34 @@ impl ServingStats {
     pub fn record_decode_error(&mut self) {
         self.touch();
         self.decode_errors += 1;
+    }
+
+    /// Record one time-to-first-token (a session's step 0 completing).
+    /// Call alongside `record_decode_step` — TTFT is a separate stream,
+    /// not a replacement for the step's inter-token sample.
+    pub fn record_ttft(&mut self, latency_us: u64) {
+        self.touch();
+        self.first_tokens += 1;
+        self.ttft_sum_us += latency_us as u128;
+        self.ttft.push(latency_us);
+    }
+
+    /// First tokens recorded so far.
+    pub fn first_tokens(&self) -> u64 {
+        self.first_tokens
+    }
+
+    /// TTFT percentile in µs.
+    pub fn ttft_pct(&self, pct: f64) -> Option<u64> {
+        self.ttft.pct(pct)
+    }
+
+    /// Mean TTFT in µs (exact).
+    pub fn ttft_mean(&self) -> Option<f64> {
+        if self.first_tokens == 0 {
+            return None;
+        }
+        Some(self.ttft_sum_us as f64 / self.first_tokens as f64)
     }
 
     /// Record one executed wave and how many lanes it co-scheduled.
@@ -382,11 +432,12 @@ impl ServingStats {
         );
         if self.decode_steps > 0 || self.sessions_opened > 0 {
             s.push_str(&format!(
-                " | decode steps={} errors={} p50={}us steps/s={:.1} \
+                " | decode steps={} errors={} p50={}us ttft_p50={}us steps/s={:.1} \
                  waves={} mean_lanes={:.2} occupancy={:.2} sessions={}/{}",
                 self.decode_steps,
                 self.decode_errors,
                 self.decode_latency_pct(0.50).unwrap_or(0),
+                self.ttft_pct(0.50).unwrap_or(0),
                 self.decode_steps_per_sec(),
                 self.waves,
                 self.mean_wave_lanes().unwrap_or(0.0),
@@ -403,6 +454,255 @@ impl ServingStats {
                 self.shared_block_ratio().unwrap_or(0.0),
                 self.preemptions,
                 self.deferrals,
+            ));
+        }
+        s
+    }
+}
+
+/// Bounded percentile/mean accumulator over one `u64` stream — the
+/// public face of the reservoir for callers (the fleet roll-up) that
+/// track latency families [`ServingStats`] does not own. Same O(1)
+/// memory contract: a fixed reservoir for percentiles, a streaming sum
+/// for the exact mean.
+#[derive(Debug)]
+pub struct PctStats {
+    reservoir: Reservoir,
+    sum: u128,
+    count: u64,
+}
+
+impl PctStats {
+    /// Empty accumulator; the seed fixes the reservoir's replacement
+    /// stream so identical pushes yield identical percentiles.
+    pub fn new(seed: u64) -> Self {
+        PctStats {
+            reservoir: Reservoir::new(seed),
+            sum: 0,
+            count: 0,
+        }
+    }
+
+    /// Record one sample.
+    pub fn push(&mut self, v: u64) {
+        self.reservoir.push(v);
+        self.sum += v as u128;
+        self.count += 1;
+    }
+
+    /// Samples recorded (not the bounded count held).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Percentile (0.0–1.0) over the held sample; `None` if empty.
+    pub fn pct(&self, pct: f64) -> Option<u64> {
+        self.reservoir.pct(pct)
+    }
+
+    /// Exact streaming mean; `None` if empty.
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(self.sum as f64 / self.count as f64)
+    }
+}
+
+/// One shard's replay roll-up (also used for the fleet aggregate):
+/// decode-step and lifecycle counters plus TTFT and inter-token
+/// latency percentiles, all in the replay's virtual-cycle domain so
+/// the numbers are deterministic per trace.
+#[derive(Debug)]
+pub struct ShardRollup {
+    steps: u64,
+    sessions_opened: u64,
+    sessions_closed: u64,
+    deferrals: u64,
+    ttft: PctStats,
+    inter_token: PctStats,
+}
+
+impl ShardRollup {
+    /// Empty roll-up; `seed` fixes the reservoir streams.
+    pub fn new(seed: u64) -> Self {
+        ShardRollup {
+            steps: 0,
+            sessions_opened: 0,
+            sessions_closed: 0,
+            deferrals: 0,
+            ttft: PctStats::new(seed ^ 0x7717),
+            inter_token: PctStats::new(seed ^ 0x17E2),
+        }
+    }
+
+    /// Record one completed decode step. `first` routes the latency to
+    /// the TTFT stream (arrival → first row) instead of the inter-token
+    /// stream (gap between consecutive rows).
+    pub fn record_step(&mut self, first: bool, latency_cycles: u64) {
+        self.steps += 1;
+        if first {
+            self.ttft.push(latency_cycles);
+        } else {
+            self.inter_token.push(latency_cycles);
+        }
+    }
+
+    /// Record a session placed on this shard.
+    pub fn record_open(&mut self) {
+        self.sessions_opened += 1;
+    }
+
+    /// Record a session retired from this shard.
+    pub fn record_close(&mut self) {
+        self.sessions_closed += 1;
+    }
+
+    /// Record a deferred admission or step (requeued by the replay).
+    pub fn record_deferral(&mut self) {
+        self.deferrals += 1;
+    }
+
+    /// Decode steps completed.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Sessions placed here.
+    pub fn sessions_opened(&self) -> u64 {
+        self.sessions_opened
+    }
+
+    /// Sessions retired here.
+    pub fn sessions_closed(&self) -> u64 {
+        self.sessions_closed
+    }
+
+    /// Deferrals recorded here.
+    pub fn deferrals(&self) -> u64 {
+        self.deferrals
+    }
+
+    /// TTFT stream (virtual cycles).
+    pub fn ttft(&self) -> &PctStats {
+        &self.ttft
+    }
+
+    /// Inter-token latency stream (virtual cycles).
+    pub fn inter_token(&self) -> &PctStats {
+        &self.inter_token
+    }
+
+    /// Aggregate decode throughput over a replay that spanned
+    /// `total_cycles` virtual cycles.
+    pub fn steps_per_kilocycle(&self, total_cycles: u64) -> f64 {
+        if total_cycles == 0 {
+            return 0.0;
+        }
+        self.steps as f64 * 1000.0 / total_cycles as f64
+    }
+}
+
+/// Fleet-level roll-up: one [`ShardRollup`] per shard plus the
+/// aggregate, and the replay's total virtual-cycle span. Every record
+/// lands in both the owning shard and the aggregate, so per-shard rows
+/// always sum to the fleet row (modulo reservoir sampling on the
+/// percentiles).
+#[derive(Debug)]
+pub struct FleetRollup {
+    shards: Vec<ShardRollup>,
+    aggregate: ShardRollup,
+    total_cycles: u64,
+}
+
+impl FleetRollup {
+    /// Empty roll-up for `shards` shards (≥ 1).
+    pub fn new(shards: usize) -> Self {
+        FleetRollup {
+            shards: (0..shards)
+                .map(|s| ShardRollup::new(0x5EED_F100 + s as u64))
+                .collect(),
+            aggregate: ShardRollup::new(0x5EED_F0FF),
+            total_cycles: 0,
+        }
+    }
+
+    /// Shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// One shard's roll-up.
+    pub fn shard(&self, s: usize) -> &ShardRollup {
+        &self.shards[s]
+    }
+
+    /// The fleet-wide aggregate.
+    pub fn aggregate(&self) -> &ShardRollup {
+        &self.aggregate
+    }
+
+    /// Record one completed decode step on `shard`.
+    pub fn record_step(&mut self, shard: usize, first: bool, latency_cycles: u64) {
+        self.shards[shard].record_step(first, latency_cycles);
+        self.aggregate.record_step(first, latency_cycles);
+    }
+
+    /// Record a session placed on `shard`.
+    pub fn record_open(&mut self, shard: usize) {
+        self.shards[shard].record_open();
+        self.aggregate.record_open();
+    }
+
+    /// Record a session retired from `shard`.
+    pub fn record_close(&mut self, shard: usize) {
+        self.shards[shard].record_close();
+        self.aggregate.record_close();
+    }
+
+    /// Record a deferral — `Some(shard)` for a step the shard's pool
+    /// pushed back, `None` for an open every shard deferred (charged to
+    /// the aggregate only).
+    pub fn record_deferral(&mut self, shard: Option<usize>) {
+        if let Some(s) = shard {
+            self.shards[s].record_deferral();
+        }
+        self.aggregate.record_deferral();
+    }
+
+    /// Set the replay's total virtual-cycle span (the throughput
+    /// denominator).
+    pub fn set_total_cycles(&mut self, cycles: u64) {
+        self.total_cycles = cycles;
+    }
+
+    /// The replay's total virtual-cycle span.
+    pub fn total_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// One-line summary for logs/reports.
+    pub fn summary(&self) -> String {
+        let agg = &self.aggregate;
+        let mut s = format!(
+            "fleet[{}]: steps={} over {} cycles ({:.2} steps/kcyc) \
+             ttft_p50={}cyc itl_p50={}cyc sessions={}/{} deferrals={}",
+            self.shards.len(),
+            agg.steps(),
+            self.total_cycles,
+            agg.steps_per_kilocycle(self.total_cycles),
+            agg.ttft().pct(0.50).unwrap_or(0),
+            agg.inter_token().pct(0.50).unwrap_or(0),
+            agg.sessions_opened(),
+            agg.sessions_closed(),
+            agg.deferrals(),
+        );
+        for (i, sh) in self.shards.iter().enumerate() {
+            s.push_str(&format!(
+                " | s{i}: steps={} sessions={} ({:.2} steps/kcyc)",
+                sh.steps(),
+                sh.sessions_opened(),
+                sh.steps_per_kilocycle(self.total_cycles),
             ));
         }
         s
@@ -514,6 +814,91 @@ mod tests {
         let line = s.summary();
         assert!(line.contains("decode steps=2"));
         assert!(line.contains("sessions=2/1"));
+    }
+
+    #[test]
+    fn lock_recovers_from_poisoning() {
+        // Regression: a panic while holding the stats guard used to
+        // poison the mutex, turning every later `lock().unwrap()` into
+        // a cascade panic and wedging the server's stats path for good.
+        use std::sync::{Arc, Mutex};
+        let shared = Arc::new(Mutex::new(ServingStats::new()));
+        let poisoner = Arc::clone(&shared);
+        let _ = std::thread::spawn(move || {
+            let mut st = poisoner.lock().unwrap();
+            st.record(1, 1);
+            panic!("deliberate panic while holding the stats guard");
+        })
+        .join();
+        assert!(shared.is_poisoned(), "the panic must have poisoned the lock");
+        let mut st = ServingStats::lock(&shared);
+        assert_eq!(st.completed(), 1, "pre-panic data survives recovery");
+        st.record(2, 1);
+        assert_eq!(st.completed(), 2, "recovered guard still records");
+    }
+
+    #[test]
+    fn ttft_tracked_separately_from_inter_token() {
+        let mut s = ServingStats::new();
+        s.record_ttft(900);
+        s.record_decode_step(900);
+        s.record_decode_step(100);
+        s.record_decode_step(100);
+        assert_eq!(s.first_tokens(), 1);
+        assert_eq!(s.ttft_pct(0.5), Some(900));
+        assert_eq!(s.ttft_mean(), Some(900.0));
+        // The decode stream keeps all three samples; TTFT only the first.
+        assert_eq!(s.decode_steps(), 3);
+        assert!(s.summary().contains("ttft_p50=900us"), "{}", s.summary());
+        let empty = ServingStats::new();
+        assert_eq!(empty.ttft_pct(0.5), None);
+        assert_eq!(empty.ttft_mean(), None);
+    }
+
+    #[test]
+    fn pct_stats_bounded_with_exact_mean() {
+        let mut p = PctStats::new(7);
+        assert_eq!(p.pct(0.5), None);
+        assert_eq!(p.mean(), None);
+        for v in 0..10_000u64 {
+            p.push(v);
+        }
+        assert_eq!(p.count(), 10_000);
+        assert!((p.mean().unwrap() - 4999.5).abs() < 1e-9, "streaming mean is exact");
+        let p50 = p.pct(0.5).unwrap();
+        assert!((3000..=7000).contains(&p50), "sampled p50 = {p50}");
+    }
+
+    #[test]
+    fn fleet_rollup_aggregates_across_shards() {
+        let mut f = FleetRollup::new(2);
+        f.record_open(0);
+        f.record_open(1);
+        f.record_step(0, true, 500);
+        f.record_step(0, false, 50);
+        f.record_step(1, true, 700);
+        f.record_deferral(Some(1));
+        f.record_deferral(None);
+        f.record_close(0);
+        f.set_total_cycles(1000);
+        assert_eq!(f.shard_count(), 2);
+        assert_eq!(f.shard(0).steps(), 2);
+        assert_eq!(f.shard(1).steps(), 1);
+        assert_eq!(f.aggregate().steps(), 3);
+        assert_eq!(f.aggregate().sessions_opened(), 2);
+        assert_eq!(f.aggregate().sessions_closed(), 1);
+        assert_eq!(f.shard(1).deferrals(), 1);
+        assert_eq!(f.shard(0).deferrals(), 0);
+        assert_eq!(f.aggregate().deferrals(), 2, "fleet-wide deferrals roll up");
+        // TTFT and inter-token streams stay separate.
+        assert_eq!(f.aggregate().ttft().count(), 2);
+        assert_eq!(f.aggregate().inter_token().count(), 1);
+        assert_eq!(f.shard(0).ttft().pct(0.5), Some(500));
+        assert!((f.aggregate().steps_per_kilocycle(1000) - 3.0).abs() < 1e-9);
+        assert_eq!(f.shard(0).steps_per_kilocycle(0), 0.0, "no span → no rate");
+        let line = f.summary();
+        assert!(line.contains("fleet[2]"), "{line}");
+        assert!(line.contains("s1: steps=1"), "{line}");
     }
 
     #[test]

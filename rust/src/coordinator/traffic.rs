@@ -1,0 +1,702 @@
+//! Trace-driven traffic generation for the fleet-scale serving story.
+//!
+//! Every bench before this layer was closed-loop against one engine:
+//! it could characterize a pipeline, not a deployment. This module
+//! supplies the open-loop side — seeded, replayable **workload
+//! traces** in the replay's virtual-cycle time domain:
+//!
+//! * Arrival processes: memoryless Poisson and bursty ON/OFF
+//!   (exponentially-distributed ON/OFF dwell times modulating a
+//!   Poisson arrival stream — the canonical interactive-traffic
+//!   burst model).
+//! * Mixed prompt/output-length distributions ([`LenDist`]).
+//! * Fork-heavy shared-prefix sessions: a configurable fraction of
+//!   arrivals fork an earlier session's prompt instead of opening
+//!   fresh, with the fork point **pinned in the trace** (the parent's
+//!   prompt length) so every replay — any shard count, any scheduler
+//!   mode — shares exactly the same prefix and transcripts stay
+//!   bit-identical.
+//! * Abandon-mid-decode behavior: a fraction of sessions stop after a
+//!   pinned number of output tokens (the prompt always completes),
+//!   modeling clients that navigate away.
+//!
+//! A [`Trace`] is pure data: deterministic per seed (byte-identical
+//! via [`Trace::encode`] — the contract `tests/fleet_conformance.rs`
+//! asserts), independent of any engine, and replayable by any driver.
+//! [`super::fleet::replay`] drives one through a multi-shard fleet;
+//! [`Trace::oracle_transcripts`] computes the ground-truth transcript
+//! per session on a standalone [`DecodeSession`] for differential
+//! conformance.
+
+use std::collections::HashMap;
+
+use crate::attention::decode::{DecodeKind, DecodeSession};
+use crate::attention::reference::Matrix;
+use crate::attention::workload::Workload;
+use crate::prng::SplitMix64;
+use crate::{Error, Result};
+
+/// Hard cap on any sampled token length: keeps a heavy geometric tail
+/// from generating a session that dwarfs the rest of the trace.
+const MAX_SAMPLED_LEN: usize = 1024;
+
+/// Session arrival process, in the replay's virtual-cycle time domain.
+/// Rates are in sessions per **kilocycle**; dwell times in kilocycles.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Memoryless arrivals at `rate` sessions per kilocycle.
+    Poisson {
+        /// Mean arrival rate (sessions per kilocycle, > 0).
+        rate: f64,
+    },
+    /// ON/OFF burst-modulated Poisson: arrivals flow at `rate` during
+    /// exponentially-distributed ON windows (mean `mean_on`
+    /// kilocycles) and pause through OFF windows (mean `mean_off`
+    /// kilocycles).
+    Bursty {
+        /// Arrival rate during ON windows (sessions per kilocycle).
+        rate: f64,
+        /// Mean ON-window length (kilocycles, > 0).
+        mean_on: f64,
+        /// Mean OFF-window length (kilocycles, > 0).
+        mean_off: f64,
+    },
+}
+
+impl Arrivals {
+    /// Stable name for reports and the trace encoding.
+    pub fn name(&self) -> String {
+        match *self {
+            Arrivals::Poisson { rate } => format!("poisson(rate={rate})"),
+            Arrivals::Bursty {
+                rate,
+                mean_on,
+                mean_off,
+            } => format!("bursty(rate={rate},on={mean_on},off={mean_off})"),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let ok = match *self {
+            Arrivals::Poisson { rate } => rate > 0.0,
+            Arrivals::Bursty {
+                rate,
+                mean_on,
+                mean_off,
+            } => rate > 0.0 && mean_on > 0.0 && mean_off > 0.0,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(Error::Usage(format!(
+                "arrival process needs positive rate/dwell parameters (got {})",
+                self.name()
+            )))
+        }
+    }
+}
+
+/// Token-length distribution; every sample is clamped to
+/// `[1, MAX_SAMPLED_LEN]`.
+#[derive(Clone, Copy, Debug)]
+pub enum LenDist {
+    /// Every session draws exactly this length.
+    Fixed(usize),
+    /// Uniform over `[lo, hi]` (inclusive).
+    Uniform {
+        /// Smallest length (≥ 1).
+        lo: usize,
+        /// Largest length (≥ lo).
+        hi: usize,
+    },
+    /// Heavy-ish tail: `1 + floor(Exp)` with the exponential's mean
+    /// chosen so the sample mean lands near `mean` (≥ 1).
+    Geometric {
+        /// Target mean length.
+        mean: f64,
+    },
+}
+
+impl LenDist {
+    /// Draw one length.
+    pub fn sample(&self, rng: &mut SplitMix64) -> usize {
+        let raw = match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform { lo, hi } => {
+                let lo = lo.max(1);
+                let hi = hi.max(lo);
+                lo + rng.below((hi - lo + 1) as u64) as usize
+            }
+            LenDist::Geometric { mean } => {
+                // Mean of 1 + floor(Exp(1/m)) is ~1 + m - 1/2; shift m
+                // so the target mean is hit to within the discretization.
+                let m = (mean - 0.5).max(1e-9);
+                1 + rng.exponential(1.0 / m).floor() as usize
+            }
+        };
+        raw.clamp(1, MAX_SAMPLED_LEN)
+    }
+
+    /// Stable name for reports and the trace encoding.
+    pub fn name(&self) -> String {
+        match *self {
+            LenDist::Fixed(n) => format!("fixed({n})"),
+            LenDist::Uniform { lo, hi } => format!("uniform({lo},{hi})"),
+            LenDist::Geometric { mean } => format!("geometric({mean})"),
+        }
+    }
+}
+
+/// Traffic-model knobs; [`Trace::generate`] turns one into a
+/// deterministic [`Trace`].
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Sessions in the trace (≥ 1).
+    pub sessions: usize,
+    /// Head dimension every session decodes under (≥ 1).
+    pub d: usize,
+    /// Arrival process.
+    pub arrivals: Arrivals,
+    /// Prompt-length distribution (fresh sessions only; forks inherit
+    /// the parent's cached prompt instead).
+    pub prompt: LenDist,
+    /// Output-length distribution (tokens decoded after the prompt).
+    pub output: LenDist,
+    /// Fraction of sessions that fork an earlier fresh session's
+    /// shared prompt instead of opening fresh (0.0–1.0).
+    pub fork_fraction: f64,
+    /// Fraction of sessions that abandon mid-decode (0.0–1.0).
+    pub abandon_fraction: f64,
+    /// Master seed: fixes arrivals, lengths, fork targets, abandon
+    /// points, and every session's Q/K/V rows.
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            sessions: 16,
+            d: 4,
+            arrivals: Arrivals::Bursty {
+                rate: 4.0,
+                mean_on: 2.0,
+                mean_off: 6.0,
+            },
+            prompt: LenDist::Uniform { lo: 2, hi: 6 },
+            output: LenDist::Uniform { lo: 2, hi: 8 },
+            fork_fraction: 0.25,
+            abandon_fraction: 0.15,
+            seed: 0x7AFF_1C,
+        }
+    }
+}
+
+/// One session in a trace — pure data, schedule-free. Ids are dense
+/// `0..sessions` in arrival order; a fork's parent always has a
+/// smaller id (and therefore an earlier-or-equal arrival).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceSession {
+    /// Dense trace id (== index into `Trace::sessions`).
+    pub id: u64,
+    /// Arrival timestamp (virtual cycles).
+    pub arrival: u64,
+    /// `Some(parent)` when this session forks `parent`'s prompt.
+    pub parent: Option<u64>,
+    /// Cached rows inherited at the fork point — pinned to the
+    /// parent's prompt length so replays at any shard count capture
+    /// the identical prefix. 0 for fresh sessions.
+    pub fork_at: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Prompt tokens this session feeds itself (0 for forks — their
+    /// prompt is the inherited prefix).
+    pub prompt_len: usize,
+    /// Output tokens requested after the prompt (≥ 1).
+    pub output_len: usize,
+    /// `Some(k)`: the client abandons after `k` output tokens
+    /// (1 ≤ k < output_len); the prompt always completes.
+    pub abandon_after: Option<usize>,
+    /// Per-session row seed (derives the session's own Q/K/V rows).
+    pub seed: u64,
+}
+
+impl TraceSession {
+    /// Decode steps this session actually drives (its own rows only,
+    /// excluding any inherited fork prefix; abandoning truncates the
+    /// output phase).
+    pub fn steps(&self) -> usize {
+        match self.abandon_after {
+            Some(k) => self.prompt_len + k,
+            None => self.prompt_len + self.output_len,
+        }
+    }
+
+    /// Total cached rows when the session retires, including the
+    /// inherited prefix — what pool sizing must accommodate.
+    pub fn total_rows(&self) -> usize {
+        self.fork_at + self.steps()
+    }
+
+    /// The session's own Q/K/V rows, derived from its seed — the same
+    /// rows whether replayed through a fleet or the standalone oracle.
+    pub fn rows(&self) -> Workload {
+        Workload::random(self.steps().max(1), self.d, self.seed)
+    }
+}
+
+/// What happens at one trace timestamp.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// A fresh session arrives: open for `d`, then drive `steps`
+    /// decode steps (closed-loop pacing: a session's next step issues
+    /// when its previous one completes).
+    Open {
+        /// Head dimension.
+        d: usize,
+        /// Steps the session will drive.
+        steps: usize,
+    },
+    /// A fork arrives: share `parent`'s first `at_len` cached rows,
+    /// then drive `steps` own decode steps.
+    Fork {
+        /// Trace id of the session being forked.
+        parent: u64,
+        /// Cached rows shared at the fork point.
+        at_len: usize,
+        /// Steps the child will drive after the fork.
+        steps: usize,
+    },
+    /// The client abandons after `after` output tokens — a marker
+    /// carried with the session (step-indexed, since step pacing is
+    /// closed-loop rather than timestamped).
+    Abandon {
+        /// Output tokens served before the abandon.
+        after: usize,
+    },
+}
+
+/// One timestamped trace event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual-cycle timestamp.
+    pub ts: u64,
+    /// The session the event belongs to.
+    pub session: u64,
+    /// What happens.
+    pub kind: TraceEventKind,
+}
+
+/// A deterministic, replayable workload trace: timestamped sessions in
+/// arrival order. Same config (seed included) → byte-identical trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Trace {
+    /// The generating seed (echoed for reports).
+    pub seed: u64,
+    /// Head dimension shared by every session.
+    pub d: usize,
+    /// Sessions ascending by arrival timestamp (ties keep id order).
+    pub sessions: Vec<TraceSession>,
+}
+
+impl Trace {
+    /// Materialize a trace from a traffic model. Deterministic: the
+    /// whole trace is a pure function of `cfg`.
+    pub fn generate(cfg: &TrafficConfig) -> Result<Trace> {
+        if cfg.sessions == 0 || cfg.d == 0 {
+            return Err(Error::Usage(format!(
+                "traffic config needs sessions ≥ 1 and d ≥ 1 (got {} and {})",
+                cfg.sessions, cfg.d
+            )));
+        }
+        if !(0.0..=1.0).contains(&cfg.fork_fraction)
+            || !(0.0..=1.0).contains(&cfg.abandon_fraction)
+        {
+            return Err(Error::Usage(format!(
+                "fork/abandon fractions must lie in [0, 1] (got {} and {})",
+                cfg.fork_fraction, cfg.abandon_fraction
+            )));
+        }
+        cfg.arrivals.validate()?;
+        let mut rng = SplitMix64::new(cfg.seed);
+
+        // Arrival timestamps: exponential gaps, skipping OFF windows
+        // for the bursty process (arrivals only land inside ON spans).
+        let (rate, burst) = match cfg.arrivals {
+            Arrivals::Poisson { rate } => (rate, None),
+            Arrivals::Bursty {
+                rate,
+                mean_on,
+                mean_off,
+            } => (rate, Some((mean_on, mean_off))),
+        };
+        let mut t = 0.0f64; // cycles
+        let mut on_left = match burst {
+            Some((mean_on, _)) => rng.exponential(1.0 / mean_on) * 1000.0,
+            None => f64::INFINITY,
+        };
+        let mut arrivals = Vec::with_capacity(cfg.sessions);
+        for _ in 0..cfg.sessions {
+            loop {
+                let gap = rng.exponential(rate) * 1000.0;
+                if gap <= on_left {
+                    t += gap;
+                    on_left -= gap;
+                    break;
+                }
+                // Burn the rest of the ON window, skip one OFF window,
+                // start a fresh ON window.
+                let (mean_on, mean_off) = burst.expect("finite window implies bursty");
+                t += on_left;
+                t += rng.exponential(1.0 / mean_off) * 1000.0;
+                on_left = rng.exponential(1.0 / mean_on) * 1000.0;
+            }
+            arrivals.push(t.round() as u64);
+        }
+
+        // Sessions: fork targets are earlier *fresh* sessions (no fork
+        // chains — a chain would need its whole ancestry resident),
+        // with the fork point pinned to the parent's prompt length.
+        let mut sessions: Vec<TraceSession> = Vec::with_capacity(cfg.sessions);
+        let mut fork_targets: Vec<u64> = Vec::new();
+        for (i, &arrival) in arrivals.iter().enumerate() {
+            let id = i as u64;
+            let forks = !fork_targets.is_empty() && rng.uniform() < cfg.fork_fraction;
+            let (parent, fork_at, prompt_len) = if forks {
+                let p = *rng.choose(&fork_targets);
+                (Some(p), sessions[p as usize].prompt_len, 0)
+            } else {
+                (None, 0, cfg.prompt.sample(&mut rng))
+            };
+            let output_len = cfg.output.sample(&mut rng);
+            let abandon_after = if output_len >= 2 && rng.uniform() < cfg.abandon_fraction {
+                // Mid-decode: at least one output token served, at
+                // least one never decoded.
+                Some(1 + rng.below((output_len - 1) as u64) as usize)
+            } else {
+                None
+            };
+            if parent.is_none() {
+                fork_targets.push(id);
+            }
+            sessions.push(TraceSession {
+                id,
+                arrival,
+                parent,
+                fork_at,
+                d: cfg.d,
+                prompt_len,
+                output_len,
+                abandon_after,
+                seed: rng.next_u64(),
+            });
+        }
+        Ok(Trace {
+            seed: cfg.seed,
+            d: cfg.d,
+            sessions,
+        })
+    }
+
+    /// The trace as timestamped events (open/fork arrivals plus
+    /// abandon markers), ascending in time.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for s in &self.sessions {
+            let kind = match s.parent {
+                Some(parent) => TraceEventKind::Fork {
+                    parent,
+                    at_len: s.fork_at,
+                    steps: s.steps(),
+                },
+                None => TraceEventKind::Open {
+                    d: s.d,
+                    steps: s.steps(),
+                },
+            };
+            out.push(TraceEvent {
+                ts: s.arrival,
+                session: s.id,
+                kind,
+            });
+            if let Some(after) = s.abandon_after {
+                out.push(TraceEvent {
+                    ts: s.arrival,
+                    session: s.id,
+                    kind: TraceEventKind::Abandon { after },
+                });
+            }
+        }
+        out
+    }
+
+    /// Canonical text encoding — the byte-determinism contract (`same
+    /// seed → byte-identical trace`) is asserted on exactly these
+    /// bytes.
+    pub fn encode(&self) -> String {
+        let mut s = format!(
+            "trace v1 seed={:#018x} d={} sessions={}\n",
+            self.seed,
+            self.d,
+            self.sessions.len()
+        );
+        for ts in &self.sessions {
+            let parent = match ts.parent {
+                Some(p) => p.to_string(),
+                None => "-".to_string(),
+            };
+            let abandon = match ts.abandon_after {
+                Some(k) => k.to_string(),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "s{} t={} parent={} fork_at={} prompt={} out={} abandon={} seed={:#018x}\n",
+                ts.id, ts.arrival, parent, ts.fork_at, ts.prompt_len, ts.output_len,
+                abandon, ts.seed
+            ));
+        }
+        s
+    }
+
+    /// Total decode steps the trace will drive.
+    pub fn total_steps(&self) -> usize {
+        self.sessions.iter().map(TraceSession::steps).sum()
+    }
+
+    /// The largest single-session cache (rows, inherited prefix
+    /// included) — what per-shard pool sizing must fit.
+    pub fn max_rows(&self) -> usize {
+        self.sessions
+            .iter()
+            .map(TraceSession::total_rows)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Last arrival timestamp (virtual cycles).
+    pub fn last_arrival(&self) -> u64 {
+        self.sessions.iter().map(|s| s.arrival).max().unwrap_or(0)
+    }
+
+    /// Ground-truth transcript per session on a standalone
+    /// [`DecodeSession`] — the oracle the fleet's served transcripts
+    /// must match bit-for-bit. A fork's oracle replays the parent's
+    /// pinned prefix first, then the child's own rows; the returned
+    /// transcript holds only the child's own steps (matching what the
+    /// fleet serves it). Abandoned sessions truncate at the abandon
+    /// point.
+    pub fn oracle_transcripts(&self, kind: DecodeKind) -> Result<HashMap<u64, Matrix>> {
+        let mut out = HashMap::new();
+        for s in &self.sessions {
+            let mut session = DecodeSession::new(kind, self.d);
+            if let Some(p) = s.parent {
+                let parent = &self.sessions[p as usize];
+                let prefix = parent.rows();
+                for t in 0..s.fork_at {
+                    session.step(
+                        prefix.q[t].clone(),
+                        prefix.k[t].clone(),
+                        prefix.v[t].clone(),
+                    )?;
+                }
+            }
+            let own = s.rows();
+            for t in 0..s.steps() {
+                session.step(own.q[t].clone(), own.k[t].clone(), own.v[t].clone())?;
+            }
+            let transcript = session.outputs()[s.fork_at..].to_vec();
+            out.insert(s.id, transcript);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_yields_byte_identical_traces() {
+        let cfg = TrafficConfig::default();
+        let a = Trace::generate(&cfg).unwrap();
+        let b = Trace::generate(&cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.encode(), b.encode());
+        let mut other = cfg.clone();
+        other.seed ^= 1;
+        let c = Trace::generate(&other).unwrap();
+        assert_ne!(a.encode(), c.encode(), "seed must matter");
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_fork_invariants_hold() {
+        let cfg = TrafficConfig {
+            sessions: 64,
+            fork_fraction: 0.5,
+            abandon_fraction: 0.5,
+            ..TrafficConfig::default()
+        };
+        let trace = Trace::generate(&cfg).unwrap();
+        assert_eq!(trace.sessions.len(), 64);
+        let mut forks = 0;
+        let mut abandons = 0;
+        for (i, s) in trace.sessions.iter().enumerate() {
+            assert_eq!(s.id, i as u64, "dense ids in arrival order");
+            if i > 0 {
+                assert!(
+                    s.arrival >= trace.sessions[i - 1].arrival,
+                    "arrivals ascend"
+                );
+            }
+            if let Some(p) = s.parent {
+                forks += 1;
+                assert!(p < s.id, "parents arrive first");
+                let parent = &trace.sessions[p as usize];
+                assert!(parent.parent.is_none(), "no fork chains");
+                assert_eq!(s.fork_at, parent.prompt_len, "fork point pinned");
+                assert!(s.fork_at <= parent.steps(), "prefix within parent's run");
+                assert_eq!(s.prompt_len, 0, "forks inherit their prompt");
+            } else {
+                assert!(s.prompt_len >= 1);
+                assert_eq!(s.fork_at, 0);
+            }
+            assert!(s.output_len >= 1);
+            if let Some(k) = s.abandon_after {
+                abandons += 1;
+                assert!(k >= 1 && k < s.output_len, "abandon is mid-decode");
+            }
+            assert!(s.steps() >= 1);
+            assert_eq!(s.rows().n, s.steps());
+        }
+        assert!(forks > 5, "fork-heavy config produced {forks} forks");
+        assert!(abandons > 5, "abandon config produced {abandons} abandons");
+    }
+
+    #[test]
+    fn bursty_traces_cluster_more_than_poisson() {
+        // Same mean spacing inside ON windows, but the OFF windows
+        // stretch the bursty trace's span: its max gap should dwarf
+        // the Poisson one's for the same per-window rate.
+        let base = TrafficConfig {
+            sessions: 48,
+            arrivals: Arrivals::Poisson { rate: 4.0 },
+            ..TrafficConfig::default()
+        };
+        let poisson = Trace::generate(&base).unwrap();
+        let bursty = Trace::generate(&TrafficConfig {
+            arrivals: Arrivals::Bursty {
+                rate: 4.0,
+                mean_on: 1.0,
+                mean_off: 40.0,
+            },
+            ..base
+        })
+        .unwrap();
+        let max_gap = |tr: &Trace| {
+            tr.sessions
+                .windows(2)
+                .map(|w| w[1].arrival - w[0].arrival)
+                .max()
+                .unwrap()
+        };
+        assert!(
+            max_gap(&bursty) > 2 * max_gap(&poisson),
+            "bursty max gap {} vs poisson {}",
+            max_gap(&bursty),
+            max_gap(&poisson)
+        );
+    }
+
+    #[test]
+    fn events_cover_every_session_and_abandon() {
+        let trace = Trace::generate(&TrafficConfig {
+            sessions: 24,
+            abandon_fraction: 1.0,
+            ..TrafficConfig::default()
+        })
+        .unwrap();
+        let events = trace.events();
+        let opens = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceEventKind::Open { .. } | TraceEventKind::Fork { .. }))
+            .count();
+        assert_eq!(opens, 24, "one arrival event per session");
+        let abandons = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceEventKind::Abandon { .. }))
+            .count();
+        let expected = trace
+            .sessions
+            .iter()
+            .filter(|s| s.abandon_after.is_some())
+            .count();
+        assert_eq!(abandons, expected);
+        assert!(expected > 0, "abandon_fraction=1 with output_len ≥ 2 somewhere");
+    }
+
+    #[test]
+    fn len_dist_samples_stay_in_range() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..2_000 {
+            assert_eq!(LenDist::Fixed(5).sample(&mut rng), 5);
+            let u = LenDist::Uniform { lo: 3, hi: 9 }.sample(&mut rng);
+            assert!((3..=9).contains(&u));
+            let g = LenDist::Geometric { mean: 6.0 }.sample(&mut rng);
+            assert!((1..=MAX_SAMPLED_LEN).contains(&g));
+        }
+        // Geometric mean lands near the target.
+        let mut rng = SplitMix64::new(12);
+        let n = 20_000;
+        let sum: usize = (0..n)
+            .map(|_| LenDist::Geometric { mean: 6.0 }.sample(&mut rng))
+            .sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 6.0).abs() < 0.3, "geometric mean {mean}");
+    }
+
+    #[test]
+    fn oracle_transcripts_cover_fork_prefix_and_abandon() {
+        let trace = Trace::generate(&TrafficConfig {
+            sessions: 10,
+            fork_fraction: 0.6,
+            abandon_fraction: 0.5,
+            ..TrafficConfig::default()
+        })
+        .unwrap();
+        let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
+        assert_eq!(oracle.len(), 10);
+        for s in &trace.sessions {
+            let tr = &oracle[&s.id];
+            assert_eq!(
+                tr.len(),
+                s.steps(),
+                "transcript holds the session's own steps only"
+            );
+            assert!(tr.iter().all(|row| row.len() == trace.d));
+        }
+    }
+
+    #[test]
+    fn degenerate_configs_are_usage_errors() {
+        let bad_sessions = TrafficConfig {
+            sessions: 0,
+            ..TrafficConfig::default()
+        };
+        assert!(matches!(
+            Trace::generate(&bad_sessions),
+            Err(Error::Usage(_))
+        ));
+        let bad_fraction = TrafficConfig {
+            fork_fraction: 1.5,
+            ..TrafficConfig::default()
+        };
+        assert!(matches!(
+            Trace::generate(&bad_fraction),
+            Err(Error::Usage(_))
+        ));
+        let bad_rate = TrafficConfig {
+            arrivals: Arrivals::Poisson { rate: 0.0 },
+            ..TrafficConfig::default()
+        };
+        assert!(matches!(Trace::generate(&bad_rate), Err(Error::Usage(_))));
+    }
+}

@@ -15,6 +15,7 @@
 //! | [`decode::run`] | extension: decode-step cost/memory vs cache length |
 //! | [`serving::run`] | extension: serving lane-pool throughput vs lane count |
 //! | [`paging::run`] | extension: paged KV cache — prefix sharing + preemption vs pool size |
+//! | [`traffic::run`] | extension: trace-driven fleet replay — throughput/TTFT/ITL vs offered load and shard count |
 
 pub mod ablation;
 pub mod decode;
@@ -24,6 +25,7 @@ pub mod paging;
 pub mod scaling;
 pub mod serving;
 pub mod table1;
+pub mod traffic;
 
 use crate::Result;
 
@@ -47,5 +49,7 @@ pub fn run_all(n: usize, d: usize) -> Result<()> {
     serving::run(&[1, 2, 4, 8], n.clamp(1, 64), d)?.table().print();
     println!();
     paging::run(&[64, 16, 8], 4, 8, 4, d.min(16), 2)?.table().print();
+    println!();
+    traffic::run(&[2.0], &[1, 2], 8, d.min(8), 0x7A11)?.table().print();
     Ok(())
 }

@@ -1,0 +1,274 @@
+//! Trace-driven fleet study: offered load × shard count → aggregate
+//! and per-shard throughput with TTFT / inter-token latency
+//! percentiles, plus a built-in conformance check.
+//!
+//! This is the open-loop counterpart of [`super::serving`]: instead of
+//! saturating a lane pool with a closed wave, it generates a seeded
+//! bursty [`Trace`] per offered load (sessions per kilocycle during ON
+//! windows), replays it through fleets of F ∈ shard_counts independent
+//! fabrics on a virtual clock, and reports how the deployment-level
+//! metrics move. Every replay's served transcripts are differentially
+//! compared against the standalone [`DecodeSession`] oracle
+//! ([`Trace::oracle_transcripts`]) — the `bit_identical` column is the
+//! acceptance flag, and `tests/fleet_conformance.rs` asserts the same
+//! property across scheduler modes. `benches/fleet_throughput.rs` is
+//! the wall-clock twin emitting `BENCH_fleet.json` for CI.
+//!
+//! [`DecodeSession`]: crate::attention::decode::DecodeSession
+
+use crate::attention::decode::DecodeKind;
+use crate::coordinator::fleet::{replay, FleetConfig};
+use crate::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
+use crate::coordinator::SessionConfig;
+use crate::report::Table;
+use crate::runtime::kvcache::KvCacheConfig;
+use crate::{Error, Result};
+
+/// One (offered load, shard count, scope) measurement — `shard: None`
+/// is the fleet aggregate, `Some(s)` one shard's share.
+#[derive(Clone, Debug)]
+pub struct TrafficPoint {
+    /// Offered load: arrival rate during ON windows (sessions per
+    /// kilocycle).
+    pub load: f64,
+    /// Fleet width the trace was replayed against.
+    pub shards: usize,
+    /// `None` = fleet aggregate row, `Some(s)` = shard `s`'s row.
+    pub shard: Option<usize>,
+    /// Decode steps served in this scope.
+    pub steps: u64,
+    /// Steps per 1000 virtual cycles over the replay's span.
+    pub steps_per_kilocycle: f64,
+    /// Median time-to-first-token (virtual cycles).
+    pub ttft_p50: u64,
+    /// p95 time-to-first-token (virtual cycles).
+    pub ttft_p95: u64,
+    /// Median inter-token gap (virtual cycles).
+    pub itl_p50: u64,
+    /// p95 inter-token gap (virtual cycles).
+    pub itl_p95: u64,
+    /// Deferred admissions/steps charged to this scope.
+    pub deferrals: u64,
+    /// Aggregate rows only: every served transcript matched the
+    /// standalone oracle bit-for-bit. (Per-shard rows echo their
+    /// fleet's flag.)
+    pub bit_identical: bool,
+}
+
+/// Full offered-load × shard-count study.
+#[derive(Clone, Debug)]
+pub struct TrafficResult {
+    /// Sessions per trace.
+    pub sessions: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Rows grouped by (load, shards): the aggregate row first, then
+    /// one row per shard.
+    pub points: Vec<TrafficPoint>,
+}
+
+impl TrafficResult {
+    /// Look up the fleet-aggregate point for one (load, shards) cell.
+    pub fn aggregate(&self, load: f64, shards: usize) -> Option<&TrafficPoint> {
+        self.points
+            .iter()
+            .find(|p| p.load == load && p.shards == shards && p.shard.is_none())
+    }
+
+    /// Render the study table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Trace-driven fleet replay ({} sessions/trace, d={}, bursty arrivals)",
+                self.sessions, self.d
+            ),
+            &[
+                "load (sess/kcyc)",
+                "shards",
+                "scope",
+                "steps",
+                "steps/kcyc",
+                "ttft p50/p95 (cyc)",
+                "itl p50/p95 (cyc)",
+                "deferrals",
+                "oracle-exact",
+            ],
+        );
+        for p in &self.points {
+            let scope = match p.shard {
+                None => "fleet".to_string(),
+                Some(s) => format!("shard {s}"),
+            };
+            t.row(&[
+                format!("{:.1}", p.load),
+                p.shards.to_string(),
+                scope,
+                p.steps.to_string(),
+                format!("{:.2}", p.steps_per_kilocycle),
+                format!("{}/{}", p.ttft_p50, p.ttft_p95),
+                format!("{}/{}", p.itl_p50, p.itl_p95),
+                p.deferrals.to_string(),
+                if p.bit_identical { "yes" } else { "NO" }.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Per-shard policy sized so the study measures routing and load, not
+/// resource starvation: every shard alone can hold the whole trace
+/// (lanes and blocks), so fork-heavy traces can never wedge on a
+/// parent gated behind an unadmittable child. Pool-pressure behavior
+/// is covered separately by `tests/fleet_conformance.rs`.
+fn shard_policy(trace: &Trace) -> SessionConfig {
+    let block_size = 4;
+    let lanes = trace.sessions.len();
+    let per_session = trace.max_rows().div_ceil(block_size).max(1);
+    SessionConfig {
+        lanes,
+        max_sessions: lanes,
+        kv: KvCacheConfig {
+            block_size,
+            num_blocks: per_session * lanes + 8,
+        },
+        ..SessionConfig::default()
+    }
+}
+
+/// Run the study: one seeded bursty trace per offered load, replayed
+/// against each shard count. Every element of `loads` must be > 0 and
+/// of `shard_counts` ≥ 1.
+pub fn run(
+    loads: &[f64],
+    shard_counts: &[usize],
+    sessions: usize,
+    d: usize,
+    seed: u64,
+) -> Result<TrafficResult> {
+    if sessions == 0 || d == 0 {
+        return Err(Error::Usage(format!(
+            "traffic study needs sessions ≥ 1 and d ≥ 1 (got {sessions} and {d})"
+        )));
+    }
+    if loads.is_empty() || shard_counts.is_empty() {
+        return Err(Error::Usage(
+            "traffic study needs at least one load and one shard count".into(),
+        ));
+    }
+    if let Some(bad) = loads.iter().find(|&&l| l <= 0.0) {
+        return Err(Error::Usage(format!("offered load must be > 0 (got {bad})")));
+    }
+    if shard_counts.contains(&0) {
+        return Err(Error::Usage("shard count must be ≥ 1".into()));
+    }
+    let mut points = Vec::new();
+    for &load in loads {
+        let cfg = TrafficConfig {
+            sessions,
+            d,
+            arrivals: Arrivals::Bursty {
+                rate: load,
+                mean_on: 2.0,
+                mean_off: 4.0,
+            },
+            prompt: LenDist::Uniform { lo: 2, hi: 6 },
+            output: LenDist::Uniform { lo: 2, hi: 8 },
+            fork_fraction: 0.25,
+            abandon_fraction: 0.2,
+            seed: seed ^ load.to_bits(),
+        };
+        let trace = Trace::generate(&cfg)?;
+        let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree)?;
+        for &shards in shard_counts {
+            let fleet_cfg = FleetConfig {
+                shards,
+                sessions: shard_policy(&trace),
+            };
+            let rep = replay(&trace, fleet_cfg)?;
+            let bit_identical = trace
+                .sessions
+                .iter()
+                .all(|s| rep.transcripts.get(&s.id) == oracle.get(&s.id));
+            let total_cycles = rep.rollup.total_cycles();
+            let mut push_scope = |shard: Option<usize>| {
+                let r = match shard {
+                    None => rep.rollup.aggregate(),
+                    Some(s) => rep.rollup.shard(s),
+                };
+                points.push(TrafficPoint {
+                    load,
+                    shards,
+                    shard,
+                    steps: r.steps(),
+                    steps_per_kilocycle: r.steps_per_kilocycle(total_cycles),
+                    ttft_p50: r.ttft().pct(0.50).unwrap_or(0),
+                    ttft_p95: r.ttft().pct(0.95).unwrap_or(0),
+                    itl_p50: r.inter_token().pct(0.50).unwrap_or(0),
+                    itl_p95: r.inter_token().pct(0.95).unwrap_or(0),
+                    deferrals: r.deferrals(),
+                    bit_identical,
+                });
+            };
+            push_scope(None);
+            for s in 0..shards {
+                push_scope(Some(s));
+            }
+        }
+    }
+    Ok(TrafficResult {
+        sessions,
+        d,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn study_reports_every_scope_and_matches_oracle() {
+        let r = run(&[2.0], &[1, 2], 8, 3, 0x7A11).unwrap();
+        // Per (load, F) cell: 1 aggregate row + F shard rows.
+        assert_eq!(r.points.len(), (1 + 1) + (1 + 2));
+        for f in [1, 2] {
+            let agg = r.aggregate(2.0, f).unwrap();
+            assert!(agg.bit_identical, "F={f} transcripts must match the oracle");
+            assert!(agg.steps > 0);
+            // Shard rows sum to the aggregate.
+            let shard_steps: u64 = r
+                .points
+                .iter()
+                .filter(|p| p.shards == f && p.shard.is_some())
+                .map(|p| p.steps)
+                .sum();
+            assert_eq!(shard_steps, agg.steps);
+        }
+        let text = r.table().render();
+        assert!(text.contains("fleet"), "{text}");
+        assert!(text.contains("shard 1"), "{text}");
+        assert!(text.contains("yes"), "{text}");
+    }
+
+    #[test]
+    fn same_seed_same_numbers() {
+        let a = run(&[1.5], &[2], 6, 2, 9).unwrap();
+        let b = run(&[1.5], &[2], 6, 2, 9).unwrap();
+        let key = |r: &TrafficResult| {
+            r.points
+                .iter()
+                .map(|p| (p.steps, p.ttft_p50, p.itl_p50, p.deferrals))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b), "virtual-clock stats are deterministic");
+    }
+
+    #[test]
+    fn degenerate_args_rejected() {
+        assert!(matches!(run(&[], &[1], 4, 2, 0), Err(Error::Usage(_))));
+        assert!(matches!(run(&[1.0], &[], 4, 2, 0), Err(Error::Usage(_))));
+        assert!(matches!(run(&[0.0], &[1], 4, 2, 0), Err(Error::Usage(_))));
+        assert!(matches!(run(&[1.0], &[0], 4, 2, 0), Err(Error::Usage(_))));
+        assert!(matches!(run(&[1.0], &[1], 0, 2, 0), Err(Error::Usage(_))));
+    }
+}

@@ -441,3 +441,43 @@ fn property_random_interleavings_lose_no_request_and_leak_no_lane() {
         server.shutdown();
     }
 }
+
+#[test]
+fn poisoned_stats_mutex_does_not_take_down_the_server() {
+    // Regression for the `stats.lock().unwrap()` fragility: a client
+    // panicking inside `with_stats` poisons the shared mutex, and
+    // before the `ServingStats::lock` recovery helper every later
+    // observer — including the worker thread's own wave accounting —
+    // would have panicked in turn. Stats are monotone counters, so
+    // recovery is sound; the server must keep serving and counting.
+    let server = decode_server(2, 16, SchedulerMode::Dense);
+    let h = server.handle();
+    let id = h.open_session(2).unwrap().session;
+    let step = |h: &sdpa_dataflow::coordinator::ServerHandle| {
+        h.step_call(id, vec![1.0, 0.0], vec![0.5, 0.5], vec![1.0, 2.0])
+            .unwrap()
+    };
+    let before = step(&h);
+    let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        h.with_stats(|_| panic!("client panics while holding the stats lock"))
+    }));
+    assert!(poison.is_err(), "the probe panic must propagate to us");
+    // Every stats surface still works after the poisoning…
+    let summary = h.stats_summary();
+    assert!(summary.contains("decode"), "got: {summary}");
+    h.with_stats(|s| assert!(s.decode_steps() >= 1));
+    // …and so does the serving path, whose worker records into the
+    // same mutex on every wave.
+    let after = step(&h);
+    assert_eq!(after.step, before.step + 1, "server keeps serving");
+    h.with_stats(|s| {
+        assert!(
+            s.decode_steps() >= 2,
+            "post-poison waves still counted: {}",
+            s.decode_steps()
+        );
+        assert_eq!(s.first_tokens(), 1, "TTFT recorded once per session");
+    });
+    h.close_session(id).unwrap();
+    server.shutdown();
+}

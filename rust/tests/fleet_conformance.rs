@@ -1,0 +1,229 @@
+//! Fleet-vs-standalone differential conformance suite.
+//!
+//! The acceptance bar for the traffic/fleet subsystem: replaying a
+//! seeded trace through F independent fabric shards must be *invisible*
+//! to the numbers. Every served transcript — including fork-heavy
+//! shared-prefix sessions and clients that abandon mid-decode — must be
+//! **bit-identical** to the standalone contiguous [`DecodeSession`]
+//! oracle ([`Trace::oracle_transcripts`]), for F ∈ {1, 2, 4} and under
+//! both scheduler modes pinned explicitly (so the CI `SDPA_SCHED`
+//! matrix cannot mask a mode-dependent divergence: each pinned fleet
+//! run is compared against the env-default oracle on both legs).
+//!
+//! On top of the transcript checks: trace generation is byte-identical
+//! per seed, router placements are deterministic and mode/width-stable,
+//! fork children always land on their parent's shard, and a
+//! pool-pressure variant (pool far smaller than the trace's working
+//! set, so preemption/deferral fires) still matches the oracle bitwise.
+//!
+//! [`DecodeSession`]: sdpa_dataflow::attention::decode::DecodeSession
+
+use sdpa_dataflow::attention::decode::DecodeKind;
+use sdpa_dataflow::coordinator::fleet::{replay, FleetConfig};
+use sdpa_dataflow::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
+use sdpa_dataflow::coordinator::{KvCacheConfig, SessionConfig};
+use sdpa_dataflow::sim::SchedulerMode;
+
+const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
+
+/// A fork-heavy trace with abandons — the hard case the issue calls
+/// out. Asserted below to actually contain both behaviors so the suite
+/// can't silently degenerate into fresh-sessions-only.
+fn hard_trace() -> Trace {
+    Trace::generate(&TrafficConfig {
+        sessions: 12,
+        d: 3,
+        arrivals: Arrivals::Bursty {
+            rate: 3.0,
+            mean_on: 2.0,
+            mean_off: 4.0,
+        },
+        prompt: LenDist::Uniform { lo: 2, hi: 6 },
+        output: LenDist::Uniform { lo: 2, hi: 8 },
+        fork_fraction: 0.4,
+        abandon_fraction: 0.3,
+        seed: 0xF1EE_7C0F,
+    })
+    .expect("trace generates")
+}
+
+/// Roomy per-shard policy: every shard alone can hold the whole trace,
+/// so fork gating can never wedge on capacity and the suite measures
+/// routing correctness, not starvation.
+fn roomy(trace: &Trace, mode: SchedulerMode) -> SessionConfig {
+    let block_size = 4;
+    let lanes = trace.sessions.len();
+    let per_session = trace.max_rows().div_ceil(block_size).max(1);
+    SessionConfig {
+        lanes,
+        max_sessions: lanes,
+        mode: Some(mode),
+        kv: KvCacheConfig {
+            block_size,
+            num_blocks: per_session * lanes + 8,
+        },
+        ..SessionConfig::default()
+    }
+}
+
+#[test]
+fn trace_generation_is_byte_identical_per_seed() {
+    let cfg = TrafficConfig::default();
+    let a = Trace::generate(&cfg).unwrap();
+    let b = Trace::generate(&cfg).unwrap();
+    assert_eq!(a, b, "same config → structurally identical trace");
+    assert_eq!(a.encode(), b.encode(), "same config → byte-identical encoding");
+    let c = Trace::generate(&TrafficConfig {
+        seed: cfg.seed ^ 1,
+        ..cfg
+    })
+    .unwrap();
+    assert_ne!(a.encode(), c.encode(), "seed must reach the encoding");
+}
+
+#[test]
+fn fleet_replay_matches_oracle_for_every_width_and_mode() {
+    let trace = hard_trace();
+    assert!(
+        trace.sessions.iter().any(|s| s.parent.is_some()),
+        "hard trace must contain forks"
+    );
+    assert!(
+        trace.sessions.iter().any(|s| s.abandon_after.is_some()),
+        "hard trace must contain abandons"
+    );
+    let oracle = trace
+        .oracle_transcripts(DecodeKind::MemoryFree)
+        .expect("oracle runs");
+    for mode in MODES {
+        for shards in [1usize, 2, 4] {
+            let rep = replay(
+                &trace,
+                FleetConfig {
+                    shards,
+                    sessions: roomy(&trace, mode),
+                },
+            )
+            .expect("replay completes");
+            for s in &trace.sessions {
+                assert_eq!(
+                    rep.transcripts.get(&s.id),
+                    oracle.get(&s.id),
+                    "{mode:?} F={shards} session {}: fleet transcript must equal \
+                     the standalone oracle bit-for-bit",
+                    s.id
+                );
+                // Abandons truncate: the served transcript is exactly
+                // the session's own steps, no more.
+                assert_eq!(
+                    rep.transcripts.get(&s.id).map(Vec::len),
+                    Some(s.steps()),
+                    "{mode:?} F={shards} session {}: transcript length",
+                    s.id
+                );
+            }
+            let agg = rep.rollup.aggregate();
+            assert_eq!(
+                agg.steps(),
+                trace.total_steps() as u64,
+                "{mode:?} F={shards}: every trace step served exactly once"
+            );
+            assert_eq!(
+                agg.ttft().count(),
+                trace.sessions.len() as u64,
+                "{mode:?} F={shards}: one first token per session"
+            );
+        }
+    }
+}
+
+#[test]
+fn placements_are_deterministic_and_forks_follow_their_parents() {
+    let trace = hard_trace();
+    for shards in [2usize, 4] {
+        let cfg = FleetConfig {
+            shards,
+            sessions: roomy(&trace, SchedulerMode::Dense),
+        };
+        let a = replay(&trace, cfg).unwrap();
+        let b = replay(&trace, cfg).unwrap();
+        assert_eq!(
+            a.placements, b.placements,
+            "F={shards}: identical trace → identical placements"
+        );
+        // Session affinity: a fork shares its parent's KV blocks, so
+        // the router must keep it beside the prefix.
+        for s in trace.sessions.iter().filter(|s| s.parent.is_some()) {
+            let parent = s.parent.unwrap();
+            assert_eq!(
+                a.placements.get(&s.id),
+                a.placements.get(&parent),
+                "F={shards}: fork {} must land on parent {}'s shard",
+                s.id,
+                parent
+            );
+        }
+        // The pinned scheduler mode steers cycle counts, never routing.
+        let e = replay(
+            &trace,
+            FleetConfig {
+                shards,
+                sessions: roomy(&trace, SchedulerMode::EventDriven),
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            a.placements, e.placements,
+            "F={shards}: placements are scheduler-mode invariant"
+        );
+    }
+}
+
+#[test]
+fn pool_pressure_replay_still_matches_the_oracle() {
+    // Fork-free trace (no admission gates → structurally livelock-free)
+    // over a pool that cannot hold the working set: 6 sessions of up to
+    // max_rows rows each against max_rows + 4 single-row blocks, so
+    // preemption and step deferral fire constantly. Transcripts must
+    // still be bit-identical to the unpressured oracle.
+    let trace = Trace::generate(&TrafficConfig {
+        sessions: 6,
+        d: 3,
+        arrivals: Arrivals::Poisson { rate: 4.0 },
+        prompt: LenDist::Uniform { lo: 4, hi: 8 },
+        output: LenDist::Uniform { lo: 4, hi: 8 },
+        fork_fraction: 0.0,
+        abandon_fraction: 0.25,
+        seed: 0x9E55_0FEE,
+    })
+    .unwrap();
+    let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
+    for mode in MODES {
+        for shards in [1usize, 2] {
+            let cfg = FleetConfig {
+                shards,
+                sessions: SessionConfig {
+                    lanes: trace.sessions.len(),
+                    max_sessions: trace.sessions.len(),
+                    mode: Some(mode),
+                    kv: KvCacheConfig {
+                        block_size: 1,
+                        num_blocks: trace.max_rows() + 4,
+                    },
+                    ..SessionConfig::default()
+                },
+            };
+            let rep = replay(&trace, cfg).expect("pressured replay completes");
+            for s in &trace.sessions {
+                assert_eq!(
+                    rep.transcripts.get(&s.id),
+                    oracle.get(&s.id),
+                    "{mode:?} F={shards} session {}: preemption/deferral must be \
+                     invisible to the transcript",
+                    s.id
+                );
+            }
+            assert_eq!(rep.rollup.aggregate().steps(), trace.total_steps() as u64);
+        }
+    }
+}
