@@ -13,6 +13,7 @@
 //! ```
 
 use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession, PagedDecodeSession};
+use sdpa_dataflow::attention::multihead::{build_decode_lanes, LaneStep};
 use sdpa_dataflow::attention::reference::{max_abs_diff, sdpa_f64, sdpa_f64_masked};
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
@@ -210,6 +211,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     }
     println!("fleet replay (2 shards): {}", rep.rollup.summary());
+
+    // 7. Threaded waves: every decode lane compiles to its own
+    //    connected component, so the engine can tick lanes on parallel
+    //    workers (`Engine::set_threads`, or the `SDPA_THREADS` env var
+    //    for the default) — with bit-identical results at every count.
+    let wave_lanes = 8;
+    let lane_ws: Vec<Workload> = (0..wave_lanes)
+        .map(|l| Workload::random(4, d, 100 + l as u64))
+        .collect();
+    let lane_steps: Vec<LaneStep<'_>> = lane_ws
+        .iter()
+        .enumerate()
+        .map(|(l, w)| LaneStep {
+            kind: DecodeKind::MemoryFree,
+            lane: l,
+            q: &w.q[w.n - 1],
+            keys: &w.k,
+            values: &w.v,
+        })
+        .collect();
+    let mut run_wave = |threads: usize| {
+        let mut pool =
+            build_decode_lanes(&lane_steps, DepthPolicy::Inferred).map_err(|e| e.to_string())?;
+        pool.engine.set_threads(threads);
+        pool.run().map_err(|e| e.to_string())
+    };
+    let (rows_1t, sum_1t) = run_wave(1)?;
+    let (rows_4t, sum_4t) = run_wave(4)?;
+    if rows_1t != rows_4t || sum_1t.cycles != sum_4t.cycles {
+        return Err("threaded wave must be bit-identical to the single-threaded run".into());
+    }
+    println!(
+        "threaded wave: {wave_lanes} lanes, 1-thread vs 4-thread runs bit-identical ({} cycles)",
+        sum_1t.cycles
+    );
 
     println!("quickstart OK: O(1) intermediate memory at full throughput, depths inferred");
     Ok(())

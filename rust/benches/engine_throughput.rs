@@ -2,9 +2,13 @@
 //!
 //! Measures wall-clock per full simulation and derived simulated
 //! cycles/second for the naive and reordered attention variants at
-//! N ∈ {64, 256, 1024} (quick mode: {64, 256}) under both scheduler
-//! modes, and emits the results as `BENCH_engine.json` for CI
-//! artifact upload.
+//! N ∈ {64, 256, 1024} (quick mode: {64, 256}), plus single decode
+//! steps at cache length N ∈ {1024, 4096, 16384} (quick: {1024}) —
+//! the O(N)-work shape that reaches large N without the prefill
+//! variants' O(N²) element traffic. Emits `BENCH_engine.json` for CI
+//! artifact upload; rows carry the worker-thread count plus
+//! ticks/sec and wall-clock-per-simulated-cycle so the bench
+//! trajectory records scheduler *and* threading speedups.
 //!
 //! ```bash
 //! cargo bench --bench engine_throughput [-- --quick]
@@ -12,7 +16,8 @@
 
 use std::hint::black_box;
 
-use sdpa_dataflow::attention::{workload::Workload, FifoPlan, Variant};
+use sdpa_dataflow::attention::decode::{self, DecodeKind};
+use sdpa_dataflow::attention::{cycle_budget, workload::Workload, DepthPolicy, FifoPlan, Variant};
 use sdpa_dataflow::bench::{quick_requested, Bencher};
 use sdpa_dataflow::sim::{RunSummary, SchedulerMode};
 
@@ -20,6 +25,7 @@ struct Row {
     variant: &'static str,
     n: usize,
     mode: SchedulerMode,
+    threads: usize,
     mean_ns: f64,
     summary: RunSummary,
 }
@@ -29,18 +35,35 @@ impl Row {
         self.summary.cycles as f64 / (self.mean_ns / 1e9)
     }
 
+    /// Node ticks actually executed per wall-clock second — the
+    /// scheduler-throughput figure ISSUE benches track alongside
+    /// simulated cycles.
+    fn ticks_per_sec(&self) -> f64 {
+        self.summary.sched.node_ticks_executed as f64 / (self.mean_ns / 1e9)
+    }
+
+    /// Wall-clock nanoseconds per simulated cycle.
+    fn ns_per_sim_cycle(&self) -> f64 {
+        self.mean_ns / self.summary.cycles.max(1) as f64
+    }
+
     fn json(&self) -> String {
         format!(
-            "{{\"variant\":\"{}\",\"n\":{},\"mode\":\"{:?}\",\"mean_ns\":{:.1},\
-             \"cycles\":{},\"sim_cycles_per_sec\":{:.1},\"ticks_executed\":{},\
-             \"ticks_skipped\":{},\"tick_ratio\":{:.4},\"cycles_jumped\":{}}}",
+            "{{\"variant\":\"{}\",\"n\":{},\"mode\":\"{:?}\",\"threads\":{},\
+             \"mean_ns\":{:.1},\"cycles\":{},\"sim_cycles_per_sec\":{:.1},\
+             \"ns_per_sim_cycle\":{:.3},\"ticks_executed\":{},\
+             \"ticks_per_sec\":{:.1},\"ticks_skipped\":{},\
+             \"tick_ratio\":{:.4},\"cycles_jumped\":{}}}",
             self.variant,
             self.n,
             self.mode,
+            self.threads,
             self.mean_ns,
             self.summary.cycles,
             self.sim_cycles_per_sec(),
+            self.ns_per_sim_cycle(),
             self.summary.sched.node_ticks_executed,
+            self.ticks_per_sec(),
             self.summary.sched.node_ticks_skipped,
             self.summary.sched.tick_ratio(),
             self.summary.sched.cycles_jumped,
@@ -59,6 +82,15 @@ fn main() {
     } else {
         &[64, 256, 1024]
     };
+    let decode_sizes: &[usize] = if quick_requested() {
+        &[1024]
+    } else {
+        &[1024, 4096, 16384]
+    };
+    // Prefill/decode graphs are one connected component, so these rows
+    // measure the single-worker engine; the threads column keeps the
+    // JSON schema aligned with BENCH_serving's threaded wave rows.
+    let threads = 1;
 
     let mut rows: Vec<Row> = Vec::new();
     for variant in [Variant::Naive, Variant::Reordered] {
@@ -68,6 +100,7 @@ fn main() {
             for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
                 let mut built = variant.build(&w, &FifoPlan::paper(n)).unwrap();
                 built.engine.set_scheduler_mode(mode);
+                built.engine.set_threads(threads);
                 let mut last: Option<RunSummary> = None;
                 let stats = b.bench(
                     &format!("engine/{}_n{}_{:?}", variant.name(), n, mode),
@@ -82,10 +115,40 @@ fn main() {
                     variant: variant.name(),
                     n,
                     mode,
+                    threads,
                     mean_ns: stats.mean_ns,
                     summary: last.expect("benched at least once"),
                 });
             }
+        }
+    }
+
+    // Large-N decode steps: O(N) streamed work per run, so cache
+    // lengths the prefill variants cannot reach stay benchable.
+    for &n in decode_sizes {
+        let d = 16;
+        let w = Workload::random(n, d, 0xE47);
+        for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+            let kind = DecodeKind::MemoryFree;
+            let mut built =
+                decode::build_step(kind, &w.q[n - 1], &w.k, &w.v, DepthPolicy::Inferred).unwrap();
+            built.engine.set_scheduler_mode(mode);
+            built.engine.set_threads(threads);
+            let mut last: Option<RunSummary> = None;
+            let stats = b.bench(&format!("engine/decode_n{n}_{mode:?}"), || {
+                built.engine.reset();
+                let s = built.engine.run_outcome(cycle_budget(n));
+                black_box(s.cycles);
+                last = Some(s);
+            });
+            rows.push(Row {
+                variant: "decode_memfree",
+                n,
+                mode,
+                threads,
+                mean_ns: stats.mean_ns,
+                summary: last.expect("benched at least once"),
+            });
         }
     }
 
@@ -94,7 +157,7 @@ fn main() {
     for pair in rows.chunks(2) {
         let [dense, event] = pair else { continue };
         println!(
-            "speedup {:<10} N={:<5} wall {:.2}x  ticks {:.2}x  ({} vs {} ticks)",
+            "speedup {:<14} N={:<5} wall {:.2}x  ticks {:.2}x  ({} vs {} ticks)",
             dense.variant,
             dense.n,
             dense.mean_ns / event.mean_ns,

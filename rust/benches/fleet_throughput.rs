@@ -7,7 +7,10 @@
 //! end to end. The virtual-clock roll-up rides along — aggregate
 //! steps/kilocycle and TTFT/inter-token percentiles per shard count —
 //! which is the deployment-facing scaling figure: more shards → more
-//! concurrent waves → fewer virtual cycles for the same trace. Emits
+//! concurrent waves → fewer virtual cycles for the same trace. A
+//! worker-thread sweep rides along (`SessionConfig::threads` via
+//! `FleetConfig::sessions`): every simulated figure is bit-identical
+//! across thread counts, only wall-clock moves. Emits
 //! `BENCH_fleet.json` for CI artifact upload alongside
 //! `BENCH_serving.json` / `BENCH_paging.json`.
 //!
@@ -26,6 +29,7 @@ use sdpa_dataflow::runtime::kvcache::KvCacheConfig;
 struct Row {
     shards: usize,
     sessions: usize,
+    threads: usize,
     total_steps: usize,
     mean_ns: f64,
     rollup: FleetRollup,
@@ -40,13 +44,14 @@ impl Row {
     fn json(&self) -> String {
         let agg = self.rollup.aggregate();
         format!(
-            "{{\"shards\":{},\"sessions\":{},\"total_steps\":{},\
+            "{{\"shards\":{},\"sessions\":{},\"threads\":{},\"total_steps\":{},\
              \"mean_ns\":{:.1},\"steps_per_sec\":{:.1},\
              \"virtual_cycles\":{},\"steps_per_kilocycle\":{:.3},\
              \"ttft_p50\":{},\"ttft_p95\":{},\
              \"itl_p50\":{},\"itl_p95\":{},\"deferrals\":{}}}",
             self.shards,
             self.sessions,
+            self.threads,
             self.total_steps,
             self.mean_ns,
             self.steps_per_sec(),
@@ -64,13 +69,14 @@ impl Row {
 /// Same sizing rule as the experiment driver: every shard alone can
 /// hold the whole trace, so fork-heavy traces measure routing and load
 /// rather than wedging on capacity.
-fn shard_policy(trace: &Trace) -> SessionConfig {
+fn shard_policy(trace: &Trace, threads: usize) -> SessionConfig {
     let block_size = 4;
     let lanes = trace.sessions.len();
     let per_session = trace.max_rows().div_ceil(block_size).max(1);
     SessionConfig {
         lanes,
         max_sessions: lanes,
+        threads: Some(threads),
         kv: KvCacheConfig {
             block_size,
             num_blocks: per_session * lanes + 8,
@@ -112,43 +118,68 @@ fn main() {
         trace.last_arrival()
     );
 
+    let thread_counts: &[usize] = if quick_requested() { &[1, 2] } else { &[1, 2, 4] };
+
     let mut rows: Vec<Row> = Vec::new();
     for &shards in shard_counts {
-        let fleet_cfg = FleetConfig {
-            shards,
-            sessions: shard_policy(&trace),
-        };
-        let mut last = None;
-        let stats = b.bench(
-            &format!("fleet/replay_shards{shards}_sessions{sessions}"),
-            || {
-                let rep = replay(&trace, fleet_cfg).expect("replay completes");
-                black_box(rep.transcripts.len());
-                last = Some(rep);
-            },
-        );
-        let rep = last.expect("benched at least once");
-        rows.push(Row {
-            shards,
-            sessions,
-            total_steps,
-            mean_ns: stats.mean_ns,
-            rollup: rep.rollup,
-        });
+        for &threads in thread_counts {
+            let fleet_cfg = FleetConfig {
+                shards,
+                sessions: shard_policy(&trace, threads),
+            };
+            let mut last = None;
+            let stats = b.bench(
+                &format!("fleet/replay_shards{shards}_sessions{sessions}_t{threads}"),
+                || {
+                    let rep = replay(&trace, fleet_cfg).expect("replay completes");
+                    black_box(rep.transcripts.len());
+                    last = Some(rep);
+                },
+            );
+            let rep = last.expect("benched at least once");
+            rows.push(Row {
+                shards,
+                sessions,
+                threads,
+                total_steps,
+                mean_ns: stats.mean_ns,
+                rollup: rep.rollup,
+            });
+        }
+    }
+
+    // Determinism check doubling as documentation: the virtual-clock
+    // roll-up is identical no matter how many workers ran each wave.
+    for w in rows.chunks(thread_counts.len()) {
+        for r in &w[1..] {
+            assert_eq!(
+                w[0].rollup.total_cycles(),
+                r.rollup.total_cycles(),
+                "virtual cycles must not depend on thread count"
+            );
+        }
     }
 
     // Scaling summary: same trace, growing fleet → fewer virtual
-    // cycles (more concurrent waves), roughly flat wall-clock.
+    // cycles (more concurrent waves), roughly flat wall-clock; more
+    // worker threads → same virtual cycles, less wall-clock.
     println!();
     let base = &rows[0];
     for r in &rows {
         let agg = r.rollup.aggregate();
+        let solo = rows
+            .iter()
+            .find(|s| s.shards == r.shards && s.threads == thread_counts[0])
+            .expect("measured");
         println!(
-            "scaling shards={:<2} {:>8} virtual cycles ({:+.1}% vs 1 shard) \
-             {:>10.1} steps/s  {:.2} steps/kcyc  ttft p50 {} cyc",
+            "scaling shards={:<2} t={} {:>8} virtual cycles ({:+.1}% vs 1 shard) \
+             wall {:.2}x vs t={}  {:>10.1} steps/s  {:.2} steps/kcyc  ttft p50 {} cyc",
             r.shards,
+            r.threads,
             r.rollup.total_cycles(),
             100.0 * (r.rollup.total_cycles() as f64 / base.rollup.total_cycles() as f64 - 1.0),
+            solo.mean_ns / r.mean_ns,
+            thread_counts[0],
             r.steps_per_sec(),
             agg.steps_per_kilocycle(r.rollup.total_cycles()),
             agg.ttft().pct(0.50).unwrap_or(0),

@@ -1,14 +1,19 @@
 //! Serving lane-pool throughput: aggregate decode steps/sec vs lane
-//! count, at fixed per-step (wave) latency.
+//! count and worker-thread count, at fixed per-step (wave) latency.
 //!
 //! Wall-clock twin of `experiments/serving.rs`: for each lane count it
 //! builds one continuous-batching wave — `L` memory-free decode steps,
 //! one lane scope each, sharing one engine — and measures engine reset +
-//! full run. Emits `BENCH_serving.json` for CI artifact upload alongside
+//! full run, for every worker-thread count in the sweep. Emits
+//! `BENCH_serving.json` for CI artifact upload alongside
 //! `BENCH_engine.json` / `BENCH_decode.json`. The spatial-independence
 //! claim shows up twice: simulated `wave_cycles` stays ≈ flat as lanes
 //! grow (fixed per-step latency), while `steps_per_kilocycle` — the
 //! hardware-facing aggregate-throughput figure — scales ≈ linearly.
+//! The threading claim rides on the same rows: each lane compiles to
+//! its own connected component, so `wave_cycles` (and every other
+//! simulated figure) is bit-identical across thread counts while
+//! `ns_per_sim_cycle` drops with more workers.
 //!
 //! ```bash
 //! cargo bench --bench serving_throughput [-- --quick]
@@ -27,6 +32,7 @@ struct Row {
     lanes: usize,
     len: usize,
     mode: SchedulerMode,
+    threads: usize,
     mean_ns: f64,
     summary: RunSummary,
 }
@@ -43,6 +49,12 @@ impl Row {
         self.lanes as f64 * 1000.0 / self.summary.cycles as f64
     }
 
+    /// Wall-clock nanoseconds per simulated cycle — the figure the
+    /// threads sweep is expected to shrink.
+    fn ns_per_sim_cycle(&self) -> f64 {
+        self.mean_ns / self.summary.cycles.max(1) as f64
+    }
+
     fn json(&self) -> String {
         let peak_elems = self
             .summary
@@ -52,17 +64,19 @@ impl Row {
             .max()
             .unwrap_or(0);
         format!(
-            "{{\"lanes\":{},\"len\":{},\"mode\":\"{:?}\",\"mean_ns\":{:.1},\
-             \"wave_cycles\":{},\"steps_per_sec\":{:.1},\
-             \"steps_per_kilocycle\":{:.3},\"peak_elems\":{},\
-             \"ticks_executed\":{},\"ticks_skipped\":{}}}",
+            "{{\"lanes\":{},\"len\":{},\"mode\":\"{:?}\",\"threads\":{},\
+             \"mean_ns\":{:.1},\"wave_cycles\":{},\"steps_per_sec\":{:.1},\
+             \"steps_per_kilocycle\":{:.3},\"ns_per_sim_cycle\":{:.3},\
+             \"peak_elems\":{},\"ticks_executed\":{},\"ticks_skipped\":{}}}",
             self.lanes,
             self.len,
             self.mode,
+            self.threads,
             self.mean_ns,
             self.summary.cycles,
             self.steps_per_sec(),
             self.steps_per_kilocycle(),
+            self.ns_per_sim_cycle(),
             peak_elems,
             self.summary.sched.node_ticks_executed,
             self.summary.sched.node_ticks_skipped,
@@ -77,10 +91,11 @@ fn main() {
         Bencher::default()
     };
     let lane_counts: &[usize] = if quick_requested() {
-        &[1, 4]
+        &[1, 8]
     } else {
-        &[1, 2, 4, 8]
+        &[1, 8, 64, 256]
     };
+    let thread_counts: &[usize] = if quick_requested() { &[1, 2] } else { &[1, 2, 4] };
     let len = if quick_requested() { 32 } else { 64 };
     let d = 16;
 
@@ -103,46 +118,73 @@ fn main() {
                 .collect();
             let mut pool = build_decode_lanes(&steps, DepthPolicy::Inferred).unwrap();
             pool.engine.set_scheduler_mode(mode);
-            let mut last: Option<RunSummary> = None;
-            let stats = b.bench(
-                &format!("serving/wave_lanes{lanes}_len{len}_{mode:?}"),
-                || {
-                    pool.engine.reset();
-                    let (rows, summary) = pool.run().expect("wave completes");
-                    black_box(rows.len());
-                    last = Some(summary);
-                },
-            );
-            rows.push(Row {
-                lanes,
-                len,
-                mode,
-                mean_ns: stats.mean_ns,
-                summary: last.expect("benched at least once"),
-            });
+            for &threads in thread_counts {
+                pool.engine.set_threads(threads);
+                let mut last: Option<RunSummary> = None;
+                let stats = b.bench(
+                    &format!("serving/wave_lanes{lanes}_len{len}_{mode:?}_t{threads}"),
+                    || {
+                        pool.engine.reset();
+                        let (rows, summary) = pool.run().expect("wave completes");
+                        black_box(rows.len());
+                        last = Some(summary);
+                    },
+                );
+                rows.push(Row {
+                    lanes,
+                    len,
+                    mode,
+                    threads,
+                    mean_ns: stats.mean_ns,
+                    summary: last.expect("benched at least once"),
+                });
+            }
         }
     }
 
-    // Scaling summary per mode: fixed per-step latency, growing
-    // aggregate throughput.
+    // Determinism check doubling as documentation: the simulated wave
+    // is identical no matter how many workers ran it.
+    for w in rows.chunks(thread_counts.len()) {
+        for r in &w[1..] {
+            assert_eq!(
+                w[0].summary.cycles, r.summary.cycles,
+                "wave cycles must not depend on thread count"
+            );
+        }
+    }
+
+    // Scaling summary per mode at the base thread count: fixed
+    // per-step latency, growing aggregate throughput.
     println!();
     for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
-        let of = |lanes: usize| {
+        let of = |lanes: usize, threads: usize| {
             rows.iter()
-                .find(|r| r.mode == mode && r.lanes == lanes)
+                .find(|r| r.mode == mode && r.lanes == lanes && r.threads == threads)
                 .expect("measured")
         };
-        let base = of(lane_counts[0]);
+        let base = of(lane_counts[0], thread_counts[0]);
         for &lanes in lane_counts {
-            let r = of(lanes);
+            let r = of(lanes, thread_counts[0]);
             println!(
-                "scaling {mode:?} lanes={lanes:<2} wave {:>6} cycles ({:+.1}% vs {} lane) \
+                "scaling {mode:?} lanes={lanes:<3} wave {:>6} cycles ({:+.1}% vs {} lane) \
                  {:>10.1} steps/s  {:.2} steps/kcyc",
                 r.summary.cycles,
                 100.0 * (r.summary.cycles as f64 / base.summary.cycles as f64 - 1.0),
                 base.lanes,
                 r.steps_per_sec(),
                 r.steps_per_kilocycle(),
+            );
+        }
+        // Thread speedup at the widest wave — the acceptance figure.
+        let widest = *lane_counts.last().unwrap();
+        let solo = of(widest, thread_counts[0]);
+        for &threads in thread_counts {
+            let r = of(widest, threads);
+            println!(
+                "threads {mode:?} lanes={widest:<3} t={threads}  wall {:.2}x  \
+                 {:.1} ns/sim-cycle",
+                solo.mean_ns / r.mean_ns,
+                r.ns_per_sim_cycle(),
             );
         }
     }

@@ -312,6 +312,7 @@ pub struct DecodeSession {
     d: usize,
     policy: DepthPolicy,
     mode: Option<SchedulerMode>,
+    threads: Option<usize>,
     keys: Vec<Vec<f32>>,
     values: Vec<Vec<f32>>,
     outputs: Matrix,
@@ -331,6 +332,7 @@ impl DecodeSession {
             d,
             policy,
             mode: None,
+            threads: None,
             keys: Vec::new(),
             values: Vec::new(),
             outputs: Vec::new(),
@@ -341,6 +343,13 @@ impl DecodeSession {
     /// the default is the engine's own default, i.e. `SDPA_SCHED`).
     pub fn set_scheduler_mode(&mut self, mode: SchedulerMode) {
         self.mode = Some(mode);
+    }
+
+    /// Pin the worker-thread count on every step engine (the default is
+    /// the engine's own default, i.e. `SDPA_THREADS`). Results are
+    /// bit-identical for every value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = Some(threads);
     }
 
     /// The step mapping this session uses.
@@ -416,6 +425,9 @@ impl DecodeSession {
                 if let Some(mode) = self.mode {
                     built.engine.set_scheduler_mode(mode);
                 }
+                if let Some(th) = self.threads {
+                    built.engine.set_threads(th);
+                }
                 built.run()
             });
         let (rows, summary) = match result {
@@ -464,6 +476,7 @@ pub struct PagedDecodeSession {
     d: usize,
     policy: DepthPolicy,
     mode: Option<SchedulerMode>,
+    threads: Option<usize>,
     table: BlockTable,
     /// `Some` while preempted (cache swapped out of the pool). The
     /// table is empty exactly when this is `Some` (or the session has
@@ -491,6 +504,7 @@ impl PagedDecodeSession {
             d,
             policy,
             mode: None,
+            threads: None,
             table: BlockTable::new(),
             swapped: None,
             staged_cow: None,
@@ -502,6 +516,13 @@ impl PagedDecodeSession {
     /// the default is the engine's own default, i.e. `SDPA_SCHED`).
     pub fn set_scheduler_mode(&mut self, mode: SchedulerMode) {
         self.mode = Some(mode);
+    }
+
+    /// Pin the worker-thread count on every step engine (the default is
+    /// the engine's own default, i.e. `SDPA_THREADS`). Results are
+    /// bit-identical for every value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = Some(threads);
     }
 
     /// The step mapping this session uses.
@@ -539,8 +560,9 @@ impl PagedDecodeSession {
 
     /// Fork: a child session sharing every cached block (no copies;
     /// refcounted, CoW on first divergent append). The child inherits
-    /// kind, head dimension, depth policy, and scheduler mode, and
-    /// starts with an empty transcript. The parent must be resident.
+    /// kind, head dimension, depth policy, scheduler mode, and thread
+    /// count, and starts with an empty transcript. The parent must be
+    /// resident.
     pub fn fork(&self, pool: &mut BlockPool) -> Result<PagedDecodeSession> {
         if self.is_preempted() {
             return Err(Error::Coordinator(
@@ -552,6 +574,7 @@ impl PagedDecodeSession {
             d: self.d,
             policy: self.policy,
             mode: self.mode,
+            threads: self.threads,
             table: pool.fork(&self.table),
             swapped: None,
             staged_cow: None,
@@ -654,6 +677,9 @@ impl PagedDecodeSession {
         .and_then(|mut built| {
             if let Some(mode) = self.mode {
                 built.engine.set_scheduler_mode(mode);
+            }
+            if let Some(th) = self.threads {
+                built.engine.set_threads(th);
             }
             built.run()
         });

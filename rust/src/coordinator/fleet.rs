@@ -48,7 +48,9 @@ const REPLAY_ITERATION_LIMIT: u64 = 1_000_000;
 pub struct FleetConfig {
     /// Independent engine instances (≥ 1).
     pub shards: usize,
-    /// Per-shard session-table policy.
+    /// Per-shard session-table policy. `sessions.threads` rides along:
+    /// each shard's wave engines inherit it, so one knob sets the
+    /// worker-thread count fleet-wide (bit-identical for every value).
     pub sessions: SessionConfig,
 }
 

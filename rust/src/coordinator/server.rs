@@ -1,8 +1,10 @@
 //! The serving loop: a worker thread owning the executor, the dynamic
 //! prefill batcher, and the decode lane pool.
 //!
-//! Architecture (single worker — one executor saturates the cores, and
-//! the simulator engines are deliberately single-threaded):
+//! Architecture (single worker owns all serving state; the simulator
+//! engine itself may fan decode-wave components out to worker threads —
+//! see `SessionConfig::threads` / `SDPA_THREADS` — with bit-identical
+//! results for every thread count):
 //!
 //! ```text
 //! clients ── mpsc ──► worker thread, each scheduling iteration:

@@ -73,6 +73,11 @@ pub struct SessionConfig {
     /// Scheduler mode pinned onto every step/wave engine (`None` = the
     /// engine default, i.e. `SDPA_SCHED`). Differential tests pin both.
     pub mode: Option<SchedulerMode>,
+    /// Worker-thread count pinned onto every step/wave engine (`None` =
+    /// the engine default, i.e. `SDPA_THREADS`). A decode wave compiles
+    /// one connected component per lane, so this is the wave's
+    /// parallelism knob; results are bit-identical for every value.
+    pub threads: Option<usize>,
     /// Paged KV-cache geometry: every session's K/V rows come from one
     /// shared pool of `kv.num_blocks` blocks of `kv.block_size` rows.
     pub kv: KvCacheConfig,
@@ -86,6 +91,7 @@ impl Default for SessionConfig {
             max_sessions: 64,
             max_len: 4096,
             mode: None,
+            threads: None,
             kv: KvCacheConfig::default(),
         }
     }
@@ -169,6 +175,9 @@ impl SessionTable {
         let mut session = PagedDecodeSession::new(self.cfg.kind, d);
         if let Some(mode) = self.cfg.mode {
             session.set_scheduler_mode(mode);
+        }
+        if let Some(th) = self.cfg.threads {
+            session.set_threads(th);
         }
         self.lane_owner[lane] = Some(id);
         self.sessions.insert(
@@ -534,6 +543,11 @@ impl SessionTable {
             let run = built.and_then(|mut pool| {
                 if let Some(mode) = self.cfg.mode {
                     pool.engine.set_scheduler_mode(mode);
+                }
+                if let Some(th) = self.cfg.threads {
+                    // One component per lane: the wave's lane-level
+                    // parallelism, bit-identical for every value.
+                    pool.engine.set_threads(th);
                 }
                 pool.run()
             });

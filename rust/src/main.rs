@@ -26,7 +26,15 @@ fn usage() -> String {
   validate    [--artifacts DIR]
   serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]
               [--sessions S] [--steps T] [--lanes L] [--decode-d D]
-              [--prefix P] [--block-size B] [--pool-blocks K]",
+              [--prefix P] [--block-size B] [--pool-blocks K]
+
+environment:
+  SDPA_SCHED    default scheduler for new engines: dense | event
+                (unrecognised values fall back to event)
+  SDPA_THREADS  worker threads ticking graph components in parallel
+                (positive integer; anything else falls back to 1).
+                Results are bit-identical for every thread count —
+                threads only change wall-clock time.",
         variants = Variant::usage_list()
     )
 }

@@ -18,6 +18,11 @@
 //! * an element pushed at cycle *t* becomes visible to the consumer at
 //!   cycle *t+1* (one-cycle channel hop, like a pipeline register);
 //! * space freed by a pop at cycle *t* becomes usable at *t+1*;
+//!
+//! A channel is plain owned data (hence `Send`): the compile stage
+//! renumbers channels component-major, so at run time each channel is
+//! confined to the single worker thread ticking its connected component
+//! — no locks or atomics are needed on the data path.
 //! * results are independent of the order nodes are ticked in.
 
 use std::collections::VecDeque;

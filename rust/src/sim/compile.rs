@@ -25,11 +25,12 @@
 //! capacities; only implicitly created (port API) channels are sized by
 //! the selected [`DepthPolicy`].
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
-use super::channel::{Capacity, Channel};
-use super::engine::Engine;
+use super::channel::{Capacity, Channel, ChannelId};
+use super::engine::{Component, Engine};
 use super::graph::{GraphBuilder, NodeKind};
+use super::node::Node;
 use crate::{Error, Result};
 
 /// FIFO depth configuration for one build: one knob for the ordinary
@@ -349,7 +350,120 @@ pub(crate) fn compile(b: GraphBuilder, policy: DepthPolicy) -> Result<Engine> {
         })
         .collect();
 
-    Ok(Engine::new(channels, channel_names, nodes, adjacency, depths))
+    // ---- 6. connected-component partitioning + renumbering ----------
+    // The engine ticks each weakly connected component independently
+    // (possibly on its own worker thread), so the compile stage
+    // renumbers nodes and channels *component-major*: every component
+    // owns one contiguous node range and one contiguous channel range.
+    // The renumbering is stable — components are ordered by their
+    // lowest original node index and the original relative order is
+    // kept within each — so graphs built scope-by-scope (lane pools,
+    // multi-head) come out with the identity permutation.
+    let (comp_of_node, ncomp) = connected_components(nn, &adjacency);
+    let comp_of_chan: Vec<usize> = adjacency.iter().map(|&(p, _)| comp_of_node[p]).collect();
+
+    let mut node_order: Vec<usize> = (0..nn).collect();
+    node_order.sort_by_key(|&i| comp_of_node[i]);
+    let mut chan_order: Vec<usize> = (0..nc).collect();
+    chan_order.sort_by_key(|&i| comp_of_chan[i]);
+
+    let mut node_new = vec![0usize; nn];
+    for (new, &old) in node_order.iter().enumerate() {
+        node_new[old] = new;
+    }
+    let mut chan_new = vec![ChannelId(0); nc];
+    for (new, &old) in chan_order.iter().enumerate() {
+        chan_new[old] = ChannelId(new);
+    }
+
+    let mut nodes: Vec<Box<dyn Node>> = {
+        let mut slots: Vec<Option<Box<dyn Node>>> = nodes.into_iter().map(Some).collect();
+        node_order
+            .iter()
+            .map(|&i| slots[i].take().expect("node permutation is a bijection"))
+            .collect()
+    };
+    for n in &mut nodes {
+        n.retarget(&chan_new);
+    }
+    let channels: Vec<Channel> = {
+        let mut slots: Vec<Option<Channel>> = channels.into_iter().map(Some).collect();
+        chan_order
+            .iter()
+            .map(|&i| slots[i].take().expect("channel permutation is a bijection"))
+            .collect()
+    };
+    let depths: Vec<ChannelDepth> = chan_order.iter().map(|&i| depths[i].clone()).collect();
+    let adjacency: Vec<(usize, usize)> = chan_order
+        .iter()
+        .map(|&i| (node_new[adjacency[i].0], node_new[adjacency[i].1]))
+        .collect();
+    let channel_names: HashMap<String, ChannelId> = channel_names
+        .into_iter()
+        .map(|(name, id)| (name, chan_new[id.0]))
+        .collect();
+
+    let mut node_counts = vec![0usize; ncomp];
+    for &c in &comp_of_node {
+        node_counts[c] += 1;
+    }
+    let mut chan_counts = vec![0usize; ncomp];
+    for &c in &comp_of_chan {
+        chan_counts[c] += 1;
+    }
+    let mut components = Vec::with_capacity(ncomp);
+    let (mut ns, mut cs) = (0usize, 0usize);
+    for k in 0..ncomp {
+        components.push(Component {
+            nodes: ns..ns + node_counts[k],
+            chans: cs..cs + chan_counts[k],
+        });
+        ns += node_counts[k];
+        cs += chan_counts[k];
+    }
+
+    Ok(Engine::new(
+        channels,
+        channel_names,
+        nodes,
+        adjacency,
+        depths,
+        components,
+    ))
+}
+
+/// Weakly connected components over the node set: every channel unions
+/// its producer with its consumer. Returns `(component id per node,
+/// component count)`; ids are dense and ordered by each component's
+/// lowest node index.
+fn connected_components(nn: usize, adjacency: &[(usize, usize)]) -> (Vec<usize>, usize) {
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]]; // path halving
+            x = parent[x];
+        }
+        x
+    }
+    let mut parent: Vec<usize> = (0..nn).collect();
+    for &(p, c) in adjacency {
+        let (rp, rc) = (find(&mut parent, p), find(&mut parent, c));
+        if rp != rc {
+            // Root at the smaller index so every root is its set's
+            // minimum — that makes component ids follow node order.
+            parent[rp.max(rc)] = rp.min(rc);
+        }
+    }
+    let mut comp = vec![usize::MAX; nn];
+    let mut ncomp = 0;
+    for i in 0..nn {
+        let r = find(&mut parent, i);
+        if comp[r] == usize::MAX {
+            comp[r] = ncomp;
+            ncomp += 1;
+        }
+        comp[i] = comp[r];
+    }
+    (comp, ncomp)
 }
 
 #[cfg(test)]

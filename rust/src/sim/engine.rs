@@ -58,9 +58,37 @@
 //! every channel empty; **deadlock** when they are empty but work
 //! remains; **budget exhaustion** when the next cycle to execute (or
 //! jump target) would reach `max_cycles`.
+//!
+//! ## Component execution & parallel waves
+//!
+//! The compile stage partitions every graph into weakly connected
+//! components and renumbers nodes and channels *component-major*, so
+//! each component owns one contiguous slice of the flat node and
+//! channel vectors. Components share no channels, so the engine runs
+//! the selected scheduler **per component** — always, regardless of
+//! thread count — and merges the per-component results in component-ID
+//! order:
+//!
+//! * global stop cycle = the latest per-component detection cycle
+//!   (quiescence/deadlock) or the budget bound;
+//! * outcome precedence `BudgetExceeded > Deadlock > Completed`,
+//!   exactly matching what a monolithic run would have concluded;
+//! * fullness spans of components that went quiet early are extended to
+//!   the global stop cycle, reproducing the monolithic per-cycle
+//!   `full_cycles` counter bit-for-bit.
+//!
+//! With more than one worker thread ([`Engine::set_threads`] /
+//! `SDPA_THREADS`), components are dealt round-robin to scoped threads
+//! and their results are placed back by component index. Because the
+//! per-component computation is identical no matter which worker runs
+//! it and the merge is ordered by component ID, every transcript,
+//! statistic, and FIFO-depth report is bit-identical for every thread
+//! count — the property suite in `tests/scheduler_parity.rs` enforces
+//! this across `SDPA_THREADS ∈ {1, 2, 4, 8}`.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::ops::Range;
 
 use super::channel::{Capacity, Channel, ChannelId, ChannelStats};
 use super::compile::ChannelDepth;
@@ -100,6 +128,38 @@ impl SchedulerMode {
             .and_then(|s| SchedulerMode::parse(&s))
             .unwrap_or_default()
     }
+}
+
+/// Parse a worker-thread count: a positive integer. `"0"` and
+/// non-numeric strings are rejected (`None`) rather than guessed at.
+pub fn parse_threads(s: &str) -> Option<usize> {
+    s.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Default worker-thread count for newly built engines: the
+/// `SDPA_THREADS` environment variable when set to a positive integer —
+/// the CI test matrix runs the whole suite under several thread counts
+/// this way — otherwise 1. Unrecognised values fall back to 1,
+/// mirroring how a typo'd `SDPA_SCHED` falls back to the default
+/// scheduler: results are bit-identical for every thread count, so a
+/// typo can only cost parallelism, never change semantics.
+pub fn threads_from_env() -> usize {
+    std::env::var("SDPA_THREADS")
+        .ok()
+        .and_then(|s| parse_threads(&s))
+        .unwrap_or(1)
+}
+
+/// One weakly connected component of a compiled graph: a contiguous
+/// range of the flat node vector and a contiguous range of the flat
+/// channel vector (the compile stage renumbers component-major).
+/// Components share no channels, so each can tick independently.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct Component {
+    /// Node indices owned by this component.
+    pub(crate) nodes: Range<usize>,
+    /// Channel indices owned by this component.
+    pub(crate) chans: Range<usize>,
 }
 
 /// Scheduler work counters for one run: how many node ticks actually
@@ -208,8 +268,13 @@ pub struct Engine {
     adjacency: Vec<(usize, usize)>,
     /// Compile-time depth report (see [`ChannelDepth`]).
     depths: Vec<ChannelDepth>,
+    /// Weakly connected components, each owning contiguous node/channel
+    /// ranges (compile-time renumbering). Execution is per-component.
+    components: Vec<Component>,
     cycle: u64,
     mode: SchedulerMode,
+    /// Worker threads for component execution (see [`Engine::set_threads`]).
+    threads: usize,
 }
 
 impl Engine {
@@ -219,6 +284,7 @@ impl Engine {
         nodes: Vec<Box<dyn Node>>,
         adjacency: Vec<(usize, usize)>,
         depths: Vec<ChannelDepth>,
+        components: Vec<Component>,
     ) -> Self {
         Engine {
             channels,
@@ -226,8 +292,10 @@ impl Engine {
             nodes,
             adjacency,
             depths,
+            components,
             cycle: 0,
             mode: SchedulerMode::default_from_env(),
+            threads: threads_from_env(),
         }
     }
 
@@ -241,6 +309,27 @@ impl Engine {
     /// The currently selected scheduling strategy.
     pub fn scheduler_mode(&self) -> SchedulerMode {
         self.mode
+    }
+
+    /// Set the number of worker threads used to tick connected
+    /// components concurrently (clamped to at least 1; counts above the
+    /// component count leave workers idle). Results are bit-identical
+    /// for every value: execution is always per-component and effects
+    /// merge in component-ID order, so the thread count only chooses
+    /// *which worker* runs a component, never what it computes.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    /// The configured worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of weakly connected components in the compiled graph —
+    /// the available wave-level parallelism.
+    pub fn component_count(&self) -> usize {
+        self.components.len()
     }
 
     /// The compile-time depth report: per channel, the depth the
@@ -339,266 +428,154 @@ impl Engine {
     }
 
     /// Run, reporting deadlock/budget exhaustion in the summary instead
-    /// of as an error. Dispatches on the selected [`SchedulerMode`].
+    /// of as an error.
+    ///
+    /// Execution is always **per connected component** (see the module
+    /// docs): each component runs the selected [`SchedulerMode`] over
+    /// its own contiguous node/channel slice — on worker threads when
+    /// [`Engine::set_threads`] is above 1 — and the per-component
+    /// results are merged in component-ID order, so the outcome is
+    /// bit-identical for every thread count.
     pub fn run_outcome(&mut self, max_cycles: u64) -> RunSummary {
-        match self.mode {
-            SchedulerMode::Dense => self.run_dense(max_cycles),
-            SchedulerMode::EventDriven => self.run_event(max_cycles),
-        }
-    }
-
-    /// The original dense two-phase loop: every node ticks, every
-    /// channel commits, every cycle. Kept as the executable
-    /// specification the event-driven scheduler is tested against.
-    fn run_dense(&mut self, max_cycles: u64) -> RunSummary {
-        let mut ticks_executed = 0u64;
-        let mut last_progress = self.cycle;
-        while self.cycle < max_cycles {
-            let mut any_fired = false;
-            let mut waiting_on_time = false;
-            for node in &mut self.nodes {
-                let mut ctx = PortCtx::new(&mut self.channels, self.cycle);
-                let rep = node.tick(&mut ctx);
-                any_fired |= rep.fired;
-                waiting_on_time |= rep.next_ready.is_some();
-            }
-            ticks_executed += self.nodes.len() as u64;
-            let mut any_commit = false;
-            for c in &mut self.channels {
-                any_commit |= c.commit();
-            }
-            if any_fired || any_commit {
-                last_progress = self.cycle;
-            }
-            if !any_fired && !any_commit && !waiting_on_time {
-                // Nothing happened and nothing is scheduled: the graph is
-                // either done or wedged — decide which.
-                let done = self.nodes.iter().all(|n| n.flushed())
-                    && self.channels.iter().all(Channel::is_empty);
-                let outcome = if done {
-                    RunOutcome::Completed
-                } else {
-                    RunOutcome::Deadlock {
-                        detail: self.describe_blockage(),
-                    }
-                };
-                let sched = SchedStats {
-                    mode: SchedulerMode::Dense,
-                    node_ticks_executed: ticks_executed,
-                    ..SchedStats::default()
-                };
-                return self.summarise(last_progress + 1, outcome, sched);
-            }
-            self.cycle += 1;
-        }
-        let sched = SchedStats {
-            mode: SchedulerMode::Dense,
-            node_ticks_executed: ticks_executed,
-            ..SchedStats::default()
-        };
-        self.summarise(self.cycle, RunOutcome::BudgetExceeded, sched)
-    }
-
-    /// Wake-on-commit scheduler with timer heap and cycle-jump. See the
-    /// module docs for the invariants; cycle-exact vs. [`Self::run_dense`].
-    fn run_event(&mut self, max_cycles: u64) -> RunSummary {
-        let nn = self.nodes.len();
         let start = self.cycle;
+        let mode = self.mode;
         if start >= max_cycles {
-            // Matches the dense loop never entering its while body.
+            // Matches the monolithic loops never entering their bodies.
             let sched = SchedStats {
-                mode: SchedulerMode::EventDriven,
+                mode,
                 ..SchedStats::default()
             };
             return self.summarise(start, RunOutcome::BudgetExceeded, sched);
         }
-
-        let mut t = start;
-        let mut last_progress = start;
-        let mut ticks_executed = 0u64;
-        let mut cycles_jumped = 0u64;
-
-        // Ready set for cycle `t`, wake set being built for the next
-        // executed cycle, and the dedupe map telling which cycle each
-        // node is already queued for.
-        let mut ready: Vec<usize> = (0..nn).collect();
-        let mut pending: Vec<usize> = Vec::new();
-        let mut scheduled_for: Vec<u64> = vec![start; nn];
-        // Timer heap of (wake_cycle, node) plus a per-node dedupe of the
-        // last posted wake cycle (stale entries wake harmlessly).
-        let mut timers: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
-        let mut timer_armed: Vec<u64> = vec![u64::MAX; nn];
-        // Per-channel waiter flags: the consumer is blocked on data /
-        // the producer is blocked on space (one producer + one consumer
-        // per channel, so single flags suffice).
-        let mut data_wait = vec![false; self.channels.len()];
-        let mut space_wait = vec![false; self.channels.len()];
-        // Lazy fullness spans: cycle since which each channel has been
-        // full, credited to `full_cycles` when fullness changes or at
-        // termination — exactly matching the dense per-cycle counter.
-        let mut full_since: Vec<Option<u64>> = self
-            .channels
-            .iter()
-            .map(|c| c.is_full().then_some(start))
-            .collect();
-        let mut dirty: Vec<ChannelId> = Vec::new();
-        let mut trace = TickTrace::default();
-
-        loop {
-            // ---- tick phase (cycle t) -------------------------------
-            let mut any_fired = false;
-            for ni in ready.drain(..) {
-                trace.clear();
-                let rep = {
-                    let mut ctx = PortCtx::traced(&mut self.channels, t, &mut trace);
-                    self.nodes[ni].tick(&mut ctx)
-                };
-                ticks_executed += 1;
-                if rep.fired {
-                    // II = 1: a node that fired may fire again next cycle.
-                    any_fired = true;
-                    if scheduled_for[ni] != t + 1 {
-                        scheduled_for[ni] = t + 1;
-                        pending.push(ni);
-                    }
-                } else {
-                    // No progress: the recorded observations become the
-                    // node's wake set.
-                    for &c in &trace.needs_data {
-                        data_wait[c.0] = true;
-                    }
-                    for &c in &trace.needs_space {
-                        space_wait[c.0] = true;
-                    }
-                }
-                if let Some(r) = rep.next_ready {
-                    if timer_armed[ni] != r {
-                        timer_armed[ni] = r;
-                        timers.push(Reverse((r, ni)));
-                    }
-                }
-                dirty.append(&mut trace.touched);
-            }
-
-            // ---- commit phase (dirty channels only) -----------------
-            let mut any_commit = false;
-            for id in dirty.drain(..) {
-                let i = id.0;
-                let had_push = self.channels[i].staged_push_count() > 0;
-                let had_pop = self.channels[i].staged_pop_count() > 0;
-                any_commit |= self.channels[i].commit_untimed();
-                if self.channels[i].is_full() {
-                    full_since[i].get_or_insert(t);
-                } else if let Some(s) = full_since[i].take() {
-                    self.channels[i].add_full_cycles(t - s);
-                }
-                // Wake-on-commit: new data wakes a waiting consumer,
-                // freed space wakes a waiting producer — at t + 1, when
-                // two-phase commit makes the change visible.
-                if had_push && data_wait[i] {
-                    data_wait[i] = false;
-                    let consumer = self.adjacency[i].1;
-                    if scheduled_for[consumer] != t + 1 {
-                        scheduled_for[consumer] = t + 1;
-                        pending.push(consumer);
-                    }
-                }
-                if had_pop && space_wait[i] {
-                    space_wait[i] = false;
-                    let producer = self.adjacency[i].0;
-                    if scheduled_for[producer] != t + 1 {
-                        scheduled_for[producer] = t + 1;
-                        pending.push(producer);
-                    }
-                }
-            }
-            if any_fired || any_commit {
-                last_progress = t;
-            }
-
-            // ---- advance: next cycle, timer jump, or terminate ------
-            let t_next = if !pending.is_empty() {
-                t + 1
-            } else if let Some(&Reverse((tc, _))) = timers.peek() {
-                tc // tc > t: merged entries are always past the cursor
-            } else {
-                // No wake-ups anywhere: quiescent or deadlocked. Dense
-                // detects at the first *quiet* cycle — if this cycle
-                // still made progress (e.g. a drain-commit that woke
-                // nobody), that is one cycle later — and its per-cycle
-                // fullness counter runs through detection.
-                let detect = if any_fired || any_commit { t + 1 } else { t };
-                if detect >= max_cycles {
-                    // Dense runs out of budget before reaching the quiet
-                    // detection cycle; fall through to the budget path.
-                    detect
-                } else {
-                    self.cycle = detect;
-                    for (i, c) in self.channels.iter_mut().enumerate() {
-                        if let Some(s) = full_since[i].take() {
-                            c.add_full_cycles(detect - s + 1);
-                        }
-                    }
-                    let sched = SchedStats {
-                        mode: SchedulerMode::EventDriven,
-                        node_ticks_executed: ticks_executed,
-                        node_ticks_skipped: (nn as u64 * (detect - start + 1))
-                            .saturating_sub(ticks_executed),
-                        cycles_jumped,
-                    };
-                    let done = self.nodes.iter().all(|n| n.flushed())
-                        && self.channels.iter().all(Channel::is_empty);
-                    let outcome = if done {
-                        RunOutcome::Completed
-                    } else {
-                        RunOutcome::Deadlock {
-                            detail: self.describe_blockage(),
-                        }
-                    };
-                    return self.summarise(last_progress + 1, outcome, sched);
-                }
+        if self.components.is_empty() {
+            // An empty graph quiesces on its first cycle.
+            let sched = SchedStats {
+                mode,
+                ..SchedStats::default()
             };
+            return self.summarise(start + 1, RunOutcome::Completed, sched);
+        }
+        let runs = self.run_components(start, max_cycles);
+        self.merge_runs(start, max_cycles, &runs)
+    }
 
-            if t_next >= max_cycles {
-                // The dense loop would have kept committing through
-                // max_cycles - 1; settle fullness spans to that point.
-                self.cycle = max_cycles;
-                let settle = max_cycles - 1;
-                for (i, c) in self.channels.iter_mut().enumerate() {
-                    if let Some(s) = full_since[i].take() {
-                        c.add_full_cycles(settle - s + 1);
+    /// Carve per-component mutable views out of the flat vectors and run
+    /// every component to its own stop point, on `self.threads` workers.
+    fn run_components(&mut self, start: u64, max_cycles: u64) -> Vec<CompRun> {
+        let mode = self.mode;
+        // Successive split_at_mut over the component-major vectors: each
+        // view owns exactly its component's slice.
+        let mut views: Vec<CompView<'_>> = Vec::with_capacity(self.components.len());
+        let mut nodes_rest: &mut [Box<dyn Node>] = &mut self.nodes;
+        let mut chans_rest: &mut [Channel] = &mut self.channels;
+        let (mut node_off, mut chan_off) = (0usize, 0usize);
+        for comp in &self.components {
+            let (n_head, n_tail) = nodes_rest.split_at_mut(comp.nodes.end - node_off);
+            let (c_head, c_tail) = chans_rest.split_at_mut(comp.chans.end - chan_off);
+            views.push(CompView {
+                nodes: n_head,
+                chans: c_head,
+                adj: &self.adjacency[comp.chans.clone()],
+                node_base: comp.nodes.start,
+                chan_base: comp.chans.start,
+            });
+            node_off = comp.nodes.end;
+            chan_off = comp.chans.end;
+            nodes_rest = n_tail;
+            chans_rest = c_tail;
+        }
+
+        let threads = self.threads.min(views.len()).max(1);
+        if threads == 1 {
+            return views
+                .iter_mut()
+                .map(|v| run_component(mode, v, start, max_cycles))
+                .collect();
+        }
+        // Deal components round-robin to scoped workers; results land
+        // back by component index, so OS scheduling order cannot leak
+        // into anything downstream.
+        let mut buckets: Vec<Vec<(usize, CompView<'_>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, v) in views.into_iter().enumerate() {
+            buckets[i % threads].push((i, v));
+        }
+        let mut results: Vec<Option<CompRun>> =
+            (0..self.components.len()).map(|_| None).collect();
+        let per_worker: Vec<Vec<(usize, CompRun)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|mut bucket| {
+                    scope.spawn(move || {
+                        bucket
+                            .iter_mut()
+                            .map(|(i, v)| (*i, run_component(mode, v, start, max_cycles)))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("component worker panicked"))
+                .collect()
+        });
+        for chunk in per_worker {
+            for (i, r) in chunk {
+                results[i] = Some(r);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every component ran"))
+            .collect()
+    }
+
+    /// Merge per-component runs into the engine-level summary — in
+    /// component-ID order, reproducing exactly what a monolithic run
+    /// over the whole graph would have reported.
+    fn merge_runs(&mut self, start: u64, max_cycles: u64, runs: &[CompRun]) -> RunSummary {
+        let mut sched = SchedStats {
+            mode: self.mode,
+            ..SchedStats::default()
+        };
+        for r in runs {
+            sched.node_ticks_executed += r.ticks_executed;
+            sched.node_ticks_skipped += r.ticks_skipped;
+            sched.cycles_jumped += r.cycles_jumped;
+        }
+        let any_budget = runs.iter().any(|r| r.outcome == CompOutcome::Budget);
+        // Fullness target: the monolithic loop keeps committing every
+        // channel every cycle through the *global* stop, so components
+        // that went quiet early have their still-full channels' spans
+        // extended to it.
+        let (cycles, stop) = if any_budget {
+            (max_cycles, max_cycles - 1)
+        } else {
+            let stop = runs.iter().map(|r| r.stop).max().unwrap_or(start);
+            let last = runs.iter().map(|r| r.last_progress).max().unwrap_or(start);
+            (last + 1, stop)
+        };
+        for (comp, r) in self.components.iter().zip(runs) {
+            if r.stop < stop {
+                let extra = stop - r.stop;
+                for c in &mut self.channels[comp.chans.clone()] {
+                    if c.is_full() {
+                        c.add_full_cycles(extra);
                     }
                 }
-                let sched = SchedStats {
-                    mode: SchedulerMode::EventDriven,
-                    node_ticks_executed: ticks_executed,
-                    node_ticks_skipped: (nn as u64 * (max_cycles - start))
-                        .saturating_sub(ticks_executed),
-                    cycles_jumped,
-                };
-                return self.summarise(max_cycles, RunOutcome::BudgetExceeded, sched);
             }
-
-            // Merge timers due at or before the next executed cycle.
-            while let Some(&Reverse((tc, ni))) = timers.peek() {
-                if tc > t_next {
-                    break;
-                }
-                timers.pop();
-                if timer_armed[ni] == tc {
-                    timer_armed[ni] = u64::MAX;
-                }
-                if scheduled_for[ni] != t_next {
-                    scheduled_for[ni] = t_next;
-                    pending.push(ni);
-                }
-            }
-            if t_next > t + 1 {
-                cycles_jumped += t_next - t - 1;
-            }
-            t = t_next;
-            std::mem::swap(&mut ready, &mut pending);
         }
+        self.cycle = if any_budget { max_cycles } else { stop };
+        let outcome = if any_budget {
+            RunOutcome::BudgetExceeded
+        } else if runs.iter().any(|r| r.outcome == CompOutcome::Deadlocked) {
+            RunOutcome::Deadlock {
+                detail: self.describe_blockage(),
+            }
+        } else {
+            RunOutcome::Completed
+        };
+        self.summarise(cycles, outcome, sched)
     }
 
     /// Describe every blocked node and full channel — the deadlock
@@ -662,6 +639,303 @@ impl Engine {
                 .collect(),
             sched,
         }
+    }
+}
+
+/// Mutable view of one component's slice of the engine. `nodes` and
+/// `chans` are the component's contiguous ranges of the flat vectors;
+/// `adj` is its slice of the per-channel `(producer, consumer)` table
+/// and still holds *global* node indices (subtract `node_base`).
+/// Everything inside is owned data behind `Send` bounds, so a view can
+/// move onto a worker thread.
+struct CompView<'a> {
+    nodes: &'a mut [Box<dyn Node>],
+    chans: &'a mut [Channel],
+    adj: &'a [(usize, usize)],
+    node_base: usize,
+    chan_base: usize,
+}
+
+/// Per-component terminal state, merged into the engine-level
+/// [`RunOutcome`] with precedence `Budget > Deadlocked > Completed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CompOutcome {
+    Completed,
+    Deadlocked,
+    Budget,
+}
+
+/// Result of running one component to its own stop point.
+struct CompRun {
+    outcome: CompOutcome,
+    /// Last cycle at which the component fired or committed.
+    last_progress: u64,
+    /// Cycle through which the component's fullness accounting ran: its
+    /// quiet detection cycle (quiesce/deadlock) or `max_cycles - 1`
+    /// (budget). The merge extends still-full channels from here to the
+    /// global stop.
+    stop: u64,
+    ticks_executed: u64,
+    ticks_skipped: u64,
+    cycles_jumped: u64,
+}
+
+fn run_component(
+    mode: SchedulerMode,
+    v: &mut CompView<'_>,
+    start: u64,
+    max_cycles: u64,
+) -> CompRun {
+    match mode {
+        SchedulerMode::Dense => run_comp_dense(v, start, max_cycles),
+        SchedulerMode::EventDriven => run_comp_event(v, start, max_cycles),
+    }
+}
+
+/// The dense two-phase loop over one component: every node ticks, every
+/// channel commits, every cycle. The executable specification the
+/// event-driven runner is differentially tested against.
+fn run_comp_dense(v: &mut CompView<'_>, start: u64, max_cycles: u64) -> CompRun {
+    let mut ticks_executed = 0u64;
+    let mut last_progress = start;
+    let mut t = start;
+    while t < max_cycles {
+        let mut any_fired = false;
+        let mut waiting_on_time = false;
+        for node in v.nodes.iter_mut() {
+            let mut ctx = PortCtx::sliced(v.chans, t, v.chan_base);
+            let rep = node.tick(&mut ctx);
+            any_fired |= rep.fired;
+            waiting_on_time |= rep.next_ready.is_some();
+        }
+        ticks_executed += v.nodes.len() as u64;
+        let mut any_commit = false;
+        for c in v.chans.iter_mut() {
+            any_commit |= c.commit();
+        }
+        if any_fired || any_commit {
+            last_progress = t;
+        }
+        if !any_fired && !any_commit && !waiting_on_time {
+            // Nothing happened and nothing is scheduled: the component
+            // is either done or wedged — decide which. The per-cycle
+            // fullness counter has run through this detection cycle.
+            let done =
+                v.nodes.iter().all(|n| n.flushed()) && v.chans.iter().all(Channel::is_empty);
+            return CompRun {
+                outcome: if done {
+                    CompOutcome::Completed
+                } else {
+                    CompOutcome::Deadlocked
+                },
+                last_progress,
+                stop: t,
+                ticks_executed,
+                ticks_skipped: 0,
+                cycles_jumped: 0,
+            };
+        }
+        t += 1;
+    }
+    CompRun {
+        outcome: CompOutcome::Budget,
+        last_progress,
+        stop: max_cycles - 1,
+        ticks_executed,
+        ticks_skipped: 0,
+        cycles_jumped: 0,
+    }
+}
+
+/// Wake-on-commit scheduler with timer heap and cycle-jump over one
+/// component. See the module docs for the invariants; cycle-exact vs.
+/// [`run_comp_dense`]. Node and channel indices are component-local;
+/// [`ChannelId`]s observed through the traced [`PortCtx`] stay global
+/// and are mapped with `chan_base`.
+fn run_comp_event(v: &mut CompView<'_>, start: u64, max_cycles: u64) -> CompRun {
+    let nn = v.nodes.len();
+    let nc = v.chans.len();
+    let mut t = start;
+    let mut last_progress = start;
+    let mut ticks_executed = 0u64;
+    let mut cycles_jumped = 0u64;
+
+    // Ready set for cycle `t`, wake set being built for the next
+    // executed cycle, and the dedupe map telling which cycle each
+    // node is already queued for.
+    let mut ready: Vec<usize> = (0..nn).collect();
+    let mut pending: Vec<usize> = Vec::new();
+    let mut scheduled_for: Vec<u64> = vec![start; nn];
+    // Timer heap of (wake_cycle, node) plus a per-node dedupe of the
+    // last posted wake cycle (stale entries wake harmlessly).
+    let mut timers: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut timer_armed: Vec<u64> = vec![u64::MAX; nn];
+    // Per-channel waiter flags: the consumer is blocked on data /
+    // the producer is blocked on space (one producer + one consumer
+    // per channel, so single flags suffice).
+    let mut data_wait = vec![false; nc];
+    let mut space_wait = vec![false; nc];
+    // Lazy fullness spans: cycle since which each channel has been
+    // full, credited to `full_cycles` when fullness changes or at
+    // termination — exactly matching the dense per-cycle counter.
+    let mut full_since: Vec<Option<u64>> = v
+        .chans
+        .iter()
+        .map(|c| c.is_full().then_some(start))
+        .collect();
+    let mut dirty: Vec<ChannelId> = Vec::new();
+    let mut trace = TickTrace::default();
+
+    loop {
+        // ---- tick phase (cycle t) -------------------------------
+        let mut any_fired = false;
+        for ni in ready.drain(..) {
+            trace.clear();
+            let rep = {
+                let mut ctx = PortCtx::traced(v.chans, t, v.chan_base, &mut trace);
+                v.nodes[ni].tick(&mut ctx)
+            };
+            ticks_executed += 1;
+            if rep.fired {
+                // II = 1: a node that fired may fire again next cycle.
+                any_fired = true;
+                if scheduled_for[ni] != t + 1 {
+                    scheduled_for[ni] = t + 1;
+                    pending.push(ni);
+                }
+            } else {
+                // No progress: the recorded observations become the
+                // node's wake set.
+                for &c in &trace.needs_data {
+                    data_wait[c.0 - v.chan_base] = true;
+                }
+                for &c in &trace.needs_space {
+                    space_wait[c.0 - v.chan_base] = true;
+                }
+            }
+            if let Some(r) = rep.next_ready {
+                if timer_armed[ni] != r {
+                    timer_armed[ni] = r;
+                    timers.push(Reverse((r, ni)));
+                }
+            }
+            dirty.append(&mut trace.touched);
+        }
+
+        // ---- commit phase (dirty channels only) -----------------
+        let mut any_commit = false;
+        for id in dirty.drain(..) {
+            let i = id.0 - v.chan_base;
+            let had_push = v.chans[i].staged_push_count() > 0;
+            let had_pop = v.chans[i].staged_pop_count() > 0;
+            any_commit |= v.chans[i].commit_untimed();
+            if v.chans[i].is_full() {
+                full_since[i].get_or_insert(t);
+            } else if let Some(s) = full_since[i].take() {
+                v.chans[i].add_full_cycles(t - s);
+            }
+            // Wake-on-commit: new data wakes a waiting consumer,
+            // freed space wakes a waiting producer — at t + 1, when
+            // two-phase commit makes the change visible.
+            if had_push && data_wait[i] {
+                data_wait[i] = false;
+                let consumer = v.adj[i].1 - v.node_base;
+                if scheduled_for[consumer] != t + 1 {
+                    scheduled_for[consumer] = t + 1;
+                    pending.push(consumer);
+                }
+            }
+            if had_pop && space_wait[i] {
+                space_wait[i] = false;
+                let producer = v.adj[i].0 - v.node_base;
+                if scheduled_for[producer] != t + 1 {
+                    scheduled_for[producer] = t + 1;
+                    pending.push(producer);
+                }
+            }
+        }
+        if any_fired || any_commit {
+            last_progress = t;
+        }
+
+        // ---- advance: next cycle, timer jump, or terminate ------
+        let t_next = if !pending.is_empty() {
+            t + 1
+        } else if let Some(&Reverse((tc, _))) = timers.peek() {
+            tc // tc > t: merged entries are always past the cursor
+        } else {
+            // No wake-ups anywhere: quiescent or deadlocked. Dense
+            // detects at the first *quiet* cycle — if this cycle
+            // still made progress (e.g. a drain-commit that woke
+            // nobody), that is one cycle later — and its per-cycle
+            // fullness counter runs through detection.
+            let detect = if any_fired || any_commit { t + 1 } else { t };
+            if detect >= max_cycles {
+                // Dense runs out of budget before reaching the quiet
+                // detection cycle; fall through to the budget path.
+                detect
+            } else {
+                for (i, c) in v.chans.iter_mut().enumerate() {
+                    if let Some(s) = full_since[i].take() {
+                        c.add_full_cycles(detect - s + 1);
+                    }
+                }
+                let done =
+                    v.nodes.iter().all(|n| n.flushed()) && v.chans.iter().all(Channel::is_empty);
+                return CompRun {
+                    outcome: if done {
+                        CompOutcome::Completed
+                    } else {
+                        CompOutcome::Deadlocked
+                    },
+                    last_progress,
+                    stop: detect,
+                    ticks_executed,
+                    ticks_skipped: (nn as u64 * (detect - start + 1))
+                        .saturating_sub(ticks_executed),
+                    cycles_jumped,
+                };
+            }
+        };
+
+        if t_next >= max_cycles {
+            // The dense loop would have kept committing through
+            // max_cycles - 1; settle fullness spans to that point.
+            let settle = max_cycles - 1;
+            for (i, c) in v.chans.iter_mut().enumerate() {
+                if let Some(s) = full_since[i].take() {
+                    c.add_full_cycles(settle - s + 1);
+                }
+            }
+            return CompRun {
+                outcome: CompOutcome::Budget,
+                last_progress,
+                stop: settle,
+                ticks_executed,
+                ticks_skipped: (nn as u64 * (max_cycles - start)).saturating_sub(ticks_executed),
+                cycles_jumped,
+            };
+        }
+
+        // Merge timers due at or before the next executed cycle.
+        while let Some(&Reverse((tc, ni))) = timers.peek() {
+            if tc > t_next {
+                break;
+            }
+            timers.pop();
+            if timer_armed[ni] == tc {
+                timer_armed[ni] = u64::MAX;
+            }
+            if scheduled_for[ni] != t_next {
+                scheduled_for[ni] = t_next;
+                pending.push(ni);
+            }
+        }
+        if t_next > t + 1 {
+            cycles_jumped += t_next - t - 1;
+        }
+        t = t_next;
+        std::mem::swap(&mut ready, &mut pending);
     }
 }
 
@@ -940,6 +1214,155 @@ mod tests {
         let e_ref: &Engine = &e; // shared probe, no &mut needed
         let detail = e_ref.describe_blockage();
         assert!(detail.contains("bypass"));
+    }
+
+    // ---- components & threads ---------------------------------------
+
+    /// Two disjoint pipelines (different lengths) plus the diamond — a
+    /// three-component graph exercising staggered completion.
+    fn three_components(diamond_depth: usize) -> Engine {
+        let mut g = GraphBuilder::new();
+        let a1 = g.short_fifo("a1").unwrap();
+        let b1 = g.short_fifo("b1").unwrap();
+        g.source_gen("src1", a1, 40, |i| Elem::Scalar(i as f32)).unwrap();
+        g.map("inc1", a1, b1, |x| Elem::Scalar(x.scalar() + 1.0)).unwrap();
+        g.sink("sink1", b1, Some(40)).unwrap();
+
+        let a2 = g.short_fifo("a2").unwrap();
+        let b2 = g.short_fifo("b2").unwrap();
+        g.source_gen("src2", a2, 200, |i| Elem::Scalar(i as f32)).unwrap();
+        g.map_latency("slow2", a2, b2, 37, |x| x.clone()).unwrap();
+        g.sink("sink2", b2, Some(200)).unwrap();
+
+        let a = g.short_fifo("a").unwrap();
+        let t1 = g.short_fifo("to_reduce").unwrap();
+        let t2 = g.channel("bypass", Capacity::Bounded(diamond_depth)).unwrap();
+        let r = g.short_fifo("sum").unwrap();
+        let rep = g.short_fifo("sum_rep").unwrap();
+        let z = g.short_fifo("z").unwrap();
+        g.source_gen("src", a, 8, |i| Elem::Scalar(1.0 + i as f32)).unwrap();
+        g.broadcast("bc", a, &[t1, t2]).unwrap();
+        g.reduce("sum8", t1, r, 8, 0.0, |x, y| x + y).unwrap();
+        g.repeat("rep8", r, rep, 8).unwrap();
+        g.zip("div", &[t2, rep], z, |xs| {
+            Elem::Scalar(xs[0].scalar() / xs[1].scalar())
+        })
+        .unwrap();
+        g.sink("sink", z, Some(8)).unwrap();
+        g.build().unwrap()
+    }
+
+    fn assert_same_sched(a: &RunSummary, b: &RunSummary, label: &str) {
+        assert_eq!(a.sched, b.sched, "{label}: sched stats");
+    }
+
+    #[test]
+    fn parse_threads_rejects_typos_and_zero() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 8 "), Some(8));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("four"), None);
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("-2"), None);
+    }
+
+    #[test]
+    fn set_threads_clamps_to_one() {
+        let (mut e, _) = pipeline(1);
+        e.set_threads(0);
+        assert_eq!(e.threads(), 1);
+        e.set_threads(6);
+        assert_eq!(e.threads(), 6);
+    }
+
+    #[test]
+    fn component_count_reflects_partitioning() {
+        let (e, _) = pipeline(1);
+        assert_eq!(e.component_count(), 1);
+        assert_eq!(three_components(10).component_count(), 3);
+    }
+
+    #[test]
+    fn thread_count_is_unobservable_in_results() {
+        for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+            let mut base = three_components(10);
+            base.set_scheduler_mode(mode);
+            base.set_threads(1);
+            let s1 = base.run_outcome(100_000);
+            for threads in [2, 4, 8] {
+                let mut e = three_components(10);
+                e.set_scheduler_mode(mode);
+                e.set_threads(threads);
+                let s = e.run_outcome(100_000);
+                let label = format!("{mode:?} threads={threads}");
+                assert_same_run(&s1, &s, &label);
+                assert_same_sched(&s1, &s, &label);
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_is_unobservable_under_deadlock_and_budget() {
+        for (deadlock, budget) in [(true, 100_000u64), (false, 50)] {
+            let depth = if deadlock { 2 } else { 10 };
+            let mut base = three_components(depth);
+            base.set_threads(1);
+            let s1 = base.run_outcome(budget);
+            for threads in [2, 8] {
+                let mut e = three_components(depth);
+                e.set_threads(threads);
+                let s = e.run_outcome(budget);
+                let label = format!("depth={depth} budget={budget} threads={threads}");
+                assert_same_run(&s1, &s, &label);
+                assert_same_sched(&s1, &s, &label);
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_components_agree_with_solo_runs() {
+        // The merged multi-component summary must contain exactly the
+        // fires each pipeline shows when compiled alone, and the global
+        // cycle count must be the max over components.
+        let mut both = three_components(10);
+        both.set_threads(4);
+        let s = both.run_outcome(100_000);
+        assert_eq!(s.outcome, RunOutcome::Completed);
+        let (mut solo, _) = pipeline(100);
+        let s_solo = solo.run_outcome(100_000);
+        let fires_of = |s: &RunSummary, n: &str| {
+            s.node_fires.iter().find(|(m, _)| m == n).map(|(_, f)| *f)
+        };
+        assert_eq!(fires_of(&s, "sink1"), Some(40));
+        assert_eq!(fires_of(&s, "sink2"), Some(200));
+        assert_eq!(fires_of(&s, "sink"), Some(8));
+        // The 200-element latency-37 pipeline dominates the run.
+        assert!(s.cycles > s_solo.cycles, "multi-component run is longer");
+    }
+
+    #[test]
+    fn dense_and_event_agree_on_multi_component_graph() {
+        let mut d = three_components(10);
+        d.set_scheduler_mode(SchedulerMode::Dense);
+        d.set_threads(3);
+        let sd = d.run_outcome(100_000);
+        let mut e = three_components(10);
+        e.set_scheduler_mode(SchedulerMode::EventDriven);
+        e.set_threads(3);
+        let se = e.run_outcome(100_000);
+        assert_same_run(&sd, &se, "three_components");
+        assert!(se.sched.node_ticks_executed <= sd.sched.node_ticks_executed);
+    }
+
+    #[test]
+    fn reset_and_rerun_stable_across_thread_counts() {
+        let mut e = three_components(10);
+        e.set_threads(4);
+        let s1 = e.run_outcome(100_000);
+        e.reset();
+        e.set_threads(1);
+        let s2 = e.run_outcome(100_000);
+        assert_same_run(&s1, &s2, "rerun threads 4 -> 1");
     }
 
     #[test]

@@ -247,7 +247,7 @@ impl GraphBuilder {
         name: &str,
         input: ChannelId,
         output: ChannelId,
-        f: impl FnMut(&Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem) -> Elem + Send + 'static,
     ) -> Result<NodeId> {
         self.map_latency(name, input, output, 1, f)
     }
@@ -259,7 +259,7 @@ impl GraphBuilder {
         input: ChannelId,
         output: ChannelId,
         latency: u64,
-        f: impl FnMut(&Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem) -> Elem + Send + 'static,
     ) -> Result<NodeId> {
         self.add_node_kind(
             NodeKind::Map { latency },
@@ -277,7 +277,7 @@ impl GraphBuilder {
         output: ChannelId,
         n: usize,
         init: f32,
-        f: impl FnMut(f32, f32) -> f32 + 'static,
+        f: impl FnMut(f32, f32) -> f32 + Send + 'static,
     ) -> Result<NodeId> {
         self.add_node_kind(
             NodeKind::Reduce { n },
@@ -320,7 +320,7 @@ impl GraphBuilder {
         output: ChannelId,
         n: usize,
         init: Vec<f32>,
-        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
+        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + Send + 'static,
     ) -> Result<NodeId> {
         self.add_node_kind(
             NodeKind::Reduce { n },
@@ -355,8 +355,8 @@ impl GraphBuilder {
         output: ChannelId,
         n: usize,
         init: Elem,
-        updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
-        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        updt: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
     ) -> Result<NodeId> {
         self.add_node_kind(
             NodeKind::Scan,
@@ -387,7 +387,7 @@ impl GraphBuilder {
         name: &str,
         inputs: &[ChannelId],
         output: ChannelId,
-        f: impl FnMut(&[Elem]) -> Elem + 'static,
+        f: impl FnMut(&[Elem]) -> Elem + Send + 'static,
     ) -> Result<NodeId> {
         self.add_node_kind(
             NodeKind::Zip,
@@ -418,7 +418,7 @@ impl GraphBuilder {
         name: &str,
         output: ChannelId,
         len: u64,
-        f: impl FnMut(u64) -> Elem + 'static,
+        f: impl FnMut(u64) -> Elem + Send + 'static,
     ) -> Result<NodeId> {
         self.add_node_kind(
             NodeKind::Source,
@@ -523,7 +523,7 @@ impl Scope<'_> {
         &mut self,
         name: &str,
         len: u64,
-        f: impl FnMut(u64) -> Elem + 'static,
+        f: impl FnMut(u64) -> Elem + Send + 'static,
     ) -> Result<Port> {
         let (out, port) = self.fresh(name)?;
         let qname = self.qualify(name);
@@ -536,7 +536,7 @@ impl Scope<'_> {
         &mut self,
         name: &str,
         input: Port,
-        f: impl FnMut(&Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem) -> Elem + Send + 'static,
     ) -> Result<Port> {
         self.map_latency(name, input, 1, f)
     }
@@ -547,7 +547,7 @@ impl Scope<'_> {
         name: &str,
         input: Port,
         latency: u64,
-        f: impl FnMut(&Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem) -> Elem + Send + 'static,
     ) -> Result<Port> {
         let input = self.claim(&input, name)?;
         let (out, port) = self.fresh(name)?;
@@ -563,7 +563,7 @@ impl Scope<'_> {
         input: Port,
         n: usize,
         init: f32,
-        f: impl FnMut(f32, f32) -> f32 + 'static,
+        f: impl FnMut(f32, f32) -> f32 + Send + 'static,
     ) -> Result<Port> {
         let input = self.claim(&input, name)?;
         let (out, port) = self.fresh(name)?;
@@ -588,7 +588,7 @@ impl Scope<'_> {
         input: Port,
         n: usize,
         init: Vec<f32>,
-        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
+        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + Send + 'static,
     ) -> Result<Port> {
         let input = self.claim(&input, name)?;
         let (out, port) = self.fresh(name)?;
@@ -613,8 +613,8 @@ impl Scope<'_> {
         input: Port,
         n: usize,
         init: Elem,
-        updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
-        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        updt: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
     ) -> Result<Port> {
         let input = self.claim(&input, name)?;
         let (out, port) = self.fresh(name)?;
@@ -653,7 +653,7 @@ impl Scope<'_> {
         &mut self,
         name: &str,
         inputs: impl IntoIterator<Item = Port>,
-        f: impl FnMut(&[Elem]) -> Elem + 'static,
+        f: impl FnMut(&[Elem]) -> Elem + Send + 'static,
     ) -> Result<Port> {
         let mut ins = Vec::new();
         for p in inputs {

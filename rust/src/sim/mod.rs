@@ -20,7 +20,11 @@
 //!   cycle-exact schedulers are provided ([`SchedulerMode`]): the dense
 //!   reference loop (every node, every cycle) and the default
 //!   event-driven scheduler (wake-on-commit + timer heap + cycle-jump),
-//!   which skips nodes that cannot fire and jumps idle spans.
+//!   which skips nodes that cannot fire and jumps idle spans. The
+//!   compile stage partitions every graph into connected components and
+//!   the engine ticks each component independently — on worker threads
+//!   when `SDPA_THREADS` / [`Engine::set_threads`] is above 1 — with
+//!   bit-identical results for every thread count.
 //!
 //! ## Building graphs: ports, scopes, compile
 //!
@@ -57,7 +61,9 @@ pub mod nodes;
 pub use channel::{Capacity, ChannelId, ChannelStats};
 pub use compile::{ChannelDepth, DepthPolicy, FifoPlan};
 pub use elem::Elem;
-pub use engine::{Engine, RunOutcome, RunSummary, SchedStats, SchedulerMode};
+pub use engine::{
+    parse_threads, threads_from_env, Engine, RunOutcome, RunSummary, SchedStats, SchedulerMode,
+};
 pub use graph::{GraphBuilder, NodeId, Port, Scope};
 pub use metrics::{GraphMetrics, OccupancyClass};
 pub use node::{ChanView, Node, PortCtx};

@@ -68,34 +68,57 @@ impl TickTrace {
 }
 
 /// Per-cycle view of the channel array handed to each node.
+///
+/// After compile-time component renumbering, each worker thread runs one
+/// connected component over a contiguous channel slice; `base` is the
+/// slice's first global [`ChannelId`], so ids index as `id.0 - base`.
+/// The whole-array constructors keep `base = 0`.
 pub struct PortCtx<'a> {
     channels: &'a mut [Channel],
     /// Current cycle number.
     pub cycle: u64,
+    /// Global id of `channels[0]` (component slices; 0 for full arrays).
+    base: usize,
     trace: Option<&'a mut TickTrace>,
 }
 
 impl<'a> PortCtx<'a> {
-    /// Wrap the engine's channel array for one node's tick (untraced —
-    /// the dense scheduler and unit tests).
+    /// Wrap the engine's full channel array for one node's tick
+    /// (untraced — the dense scheduler and unit tests).
     pub fn new(channels: &'a mut [Channel], cycle: u64) -> Self {
         PortCtx {
             channels,
             cycle,
+            base: 0,
+            trace: None,
+        }
+    }
+
+    /// Untraced view of a component's channel slice whose first channel
+    /// has global id `base` (the dense per-component runner).
+    pub(crate) fn sliced(channels: &'a mut [Channel], cycle: u64, base: usize) -> Self {
+        PortCtx {
+            channels,
+            cycle,
+            base,
             trace: None,
         }
     }
 
     /// Traced variant: blocked-on observations and first-staged-op
     /// channels are recorded into `trace` (the event-driven scheduler).
+    /// Takes a component slice offset like [`Self::sliced`]; recorded
+    /// [`ChannelId`]s stay global.
     pub(crate) fn traced(
         channels: &'a mut [Channel],
         cycle: u64,
+        base: usize,
         trace: &'a mut TickTrace,
     ) -> Self {
         PortCtx {
             channels,
             cycle,
+            base,
             trace: Some(trace),
         }
     }
@@ -104,7 +127,7 @@ impl<'a> PortCtx<'a> {
     /// records a data need on `id`.
     #[inline]
     pub fn available(&mut self, id: ChannelId) -> usize {
-        let n = self.channels[id.0].available();
+        let n = self.channels[id.0 - self.base].available();
         if n == 0 {
             if let Some(t) = self.trace.as_deref_mut() {
                 t.needs_data.push(id);
@@ -117,7 +140,7 @@ impl<'a> PortCtx<'a> {
     /// observing `false` records a space need on `id`.
     #[inline]
     pub fn can_push(&mut self, id: ChannelId) -> bool {
-        let ok = self.channels[id.0].can_push();
+        let ok = self.channels[id.0 - self.base].can_push();
         if !ok {
             if let Some(t) = self.trace.as_deref_mut() {
                 t.needs_space.push(id);
@@ -129,7 +152,7 @@ impl<'a> PortCtx<'a> {
     #[inline]
     fn note_touched(&mut self, id: ChannelId) {
         if let Some(t) = self.trace.as_deref_mut() {
-            if !self.channels[id.0].has_staged() {
+            if !self.channels[id.0 - self.base].has_staged() {
                 t.touched.push(id);
             }
         }
@@ -139,20 +162,20 @@ impl<'a> PortCtx<'a> {
     #[inline]
     pub fn pop(&mut self, id: ChannelId) -> Elem {
         self.note_touched(id);
-        self.channels[id.0].stage_pop()
+        self.channels[id.0 - self.base].stage_pop()
     }
 
     /// Stage a push into `id` (caller must have checked space).
     #[inline]
     pub fn push(&mut self, id: ChannelId, e: Elem) {
         self.note_touched(id);
-        self.channels[id.0].stage_push(e)
+        self.channels[id.0 - self.base].stage_push(e)
     }
 
     /// Peek without popping.
     #[inline]
     pub fn peek(&self, id: ChannelId, k: usize) -> Option<&Elem> {
-        self.channels[id.0].peek(k)
+        self.channels[id.0 - self.base].peek(k)
     }
 }
 
@@ -216,7 +239,12 @@ impl TickReport {
 }
 
 /// A hardware unit in the abstract machine.
-pub trait Node {
+///
+/// `Send` is a supertrait: the compile stage partitions every graph into
+/// connected components and the engine may tick each component on a
+/// separate worker thread, so nodes (including their captured closures)
+/// must be movable across threads.
+pub trait Node: Send {
     /// Diagnostic name (unique within a graph; the builder enforces it).
     fn name(&self) -> &str;
 
@@ -241,6 +269,12 @@ pub trait Node {
 
     /// Reset dynamic state for a re-run (capacity sweeps reuse graphs).
     fn reset(&mut self);
+
+    /// Rewrite every captured [`ChannelId`] through `map` (indexed by the
+    /// old id). The compile stage renumbers channels component-major so
+    /// that each connected component owns a contiguous id range; nodes
+    /// must follow their channels to the new numbering.
+    fn retarget(&mut self, map: &[ChannelId]);
 }
 
 /// A delay line modelling one output port's pipeline registers.
@@ -328,6 +362,12 @@ impl OutPipe {
     /// Clear in-flight state (for graph re-runs).
     pub fn reset(&mut self) {
         self.slots.clear();
+    }
+
+    /// Follow the destination channel through a compile-time renumbering
+    /// (see [`Node::retarget`]).
+    pub fn retarget(&mut self, map: &[ChannelId]) {
+        self.channel = map[self.channel.0];
     }
 
     /// Diagnostic description when blocked.
@@ -461,7 +501,7 @@ mod tests {
         chans[1].commit(); // out is now full
         let mut trace = TickTrace::default();
         {
-            let mut ctx = PortCtx::traced(&mut chans, 0, &mut trace);
+            let mut ctx = PortCtx::traced(&mut chans, 0, 0, &mut trace);
             assert_eq!(ctx.available(ChannelId(0)), 0);
             assert!(!ctx.can_push(ChannelId(1)));
         }
@@ -471,7 +511,7 @@ mod tests {
 
         trace.clear();
         {
-            let mut ctx = PortCtx::traced(&mut chans, 1, &mut trace);
+            let mut ctx = PortCtx::traced(&mut chans, 1, 0, &mut trace);
             // First staged op on a channel is recorded; later staged ops
             // on the now-dirty channel are not re-recorded.
             ctx.push(ChannelId(0), Elem::Scalar(1.0));
@@ -479,6 +519,28 @@ mod tests {
             let _ = ctx.pop(ChannelId(1));
         }
         assert_eq!(trace.touched, vec![ChannelId(0), ChannelId(1)]);
+    }
+
+    #[test]
+    fn sliced_ctx_indexes_relative_to_base() {
+        // A component slice whose first channel has global id 7: global
+        // ids keep working against the local slice.
+        let mut chans = harness(4);
+        {
+            let mut ctx = PortCtx::sliced(&mut chans, 0, 7);
+            assert_eq!(ctx.available(ChannelId(7)), 0);
+            ctx.push(ChannelId(7), Elem::Scalar(1.0));
+        }
+        chans[0].commit();
+        assert_eq!(chans[0].len(), 1);
+    }
+
+    #[test]
+    fn outpipe_retargets_through_renumbering() {
+        let mut pipe = OutPipe::new(ChannelId(0), 1);
+        let map = [ChannelId(5), ChannelId(3)];
+        pipe.retarget(&map);
+        assert_eq!(pipe.channel, ChannelId(5));
     }
 
     #[test]

@@ -88,6 +88,13 @@ impl Node for Broadcast {
         }
         self.fires = 0;
     }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.input = map[self.input.0];
+        for p in &mut self.pipes {
+            p.retarget(map);
+        }
+    }
 }
 
 #[cfg(test)]

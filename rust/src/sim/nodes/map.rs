@@ -12,7 +12,7 @@ pub struct Map {
     name: String,
     input: ChannelId,
     pipe: OutPipe,
-    f: Box<dyn FnMut(&Elem) -> Elem>,
+    f: Box<dyn FnMut(&Elem) -> Elem + Send>,
     fires: u64,
 }
 
@@ -22,7 +22,7 @@ impl Map {
         name: impl Into<String>,
         input: ChannelId,
         output: ChannelId,
-        f: impl FnMut(&Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem) -> Elem + Send + 'static,
     ) -> Self {
         Self::with_latency(name, input, output, 1, f)
     }
@@ -33,7 +33,7 @@ impl Map {
         input: ChannelId,
         output: ChannelId,
         latency: u64,
-        f: impl FnMut(&Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem) -> Elem + Send + 'static,
     ) -> Self {
         Map {
             name: name.into(),
@@ -86,6 +86,11 @@ impl Node for Map {
     fn reset(&mut self) {
         self.pipe.reset();
         self.fires = 0;
+    }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.input = map[self.input.0];
+        self.pipe.retarget(map);
     }
 }
 

@@ -19,7 +19,7 @@ struct ReduceCore {
     init: Elem,
     acc: Elem,
     count: usize,
-    f: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+    f: Box<dyn FnMut(&Elem, &Elem) -> Elem + Send>,
     fires: u64,
 }
 
@@ -31,7 +31,7 @@ impl ReduceCore {
         latency: u64,
         n: usize,
         init: Elem,
-        f: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+        f: Box<dyn FnMut(&Elem, &Elem) -> Elem + Send>,
     ) -> Self {
         assert!(n >= 1, "Reduce group size must be >= 1");
         ReduceCore {
@@ -97,6 +97,11 @@ impl ReduceCore {
         self.fires = 0;
         self.pipe.reset();
     }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.input = map[self.input.0];
+        self.pipe.retarget(map);
+    }
 }
 
 /// Scalar reduction: `Reduce (n) (init) (f)`.
@@ -112,7 +117,7 @@ impl Reduce {
         output: ChannelId,
         n: usize,
         init: f32,
-        f: impl FnMut(f32, f32) -> f32 + 'static,
+        f: impl FnMut(f32, f32) -> f32 + Send + 'static,
     ) -> Self {
         let mut f = f;
         Reduce {
@@ -135,7 +140,7 @@ impl Reduce {
         output: ChannelId,
         n: usize,
         init: Elem,
-        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
     ) -> Self {
         Reduce {
             core: ReduceCore::new(name.into(), input, output, 1, n, init, Box::new(f)),
@@ -162,6 +167,9 @@ impl Node for Reduce {
     fn reset(&mut self) {
         self.core.reset()
     }
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.core.retarget(map)
+    }
 }
 
 /// Memory-element reduction: `MemReduce (n) (init: Mem[T]) (f)`.
@@ -181,7 +189,7 @@ impl MemReduce {
         output: ChannelId,
         n: usize,
         init: Vec<f32>,
-        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + 'static,
+        f: impl FnMut(&[f32], &Elem) -> Vec<f32> + Send + 'static,
     ) -> Self {
         let name = name.into();
         let mut f = f;
@@ -227,6 +235,9 @@ impl Node for MemReduce {
     }
     fn reset(&mut self) {
         self.core.reset()
+    }
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.core.retarget(map)
     }
 }
 

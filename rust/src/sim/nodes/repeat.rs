@@ -87,6 +87,11 @@ impl Node for Repeat {
         self.fires = 0;
         self.pipe.reset();
     }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.input = map[self.input.0];
+        self.pipe.retarget(map);
+    }
 }
 
 #[cfg(test)]

@@ -27,8 +27,8 @@ pub struct Scan {
     init: Elem,
     state: Elem,
     count: usize,
-    updt: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
-    f: Box<dyn FnMut(&Elem, &Elem) -> Elem>,
+    updt: Box<dyn FnMut(&Elem, &Elem) -> Elem + Send>,
+    f: Box<dyn FnMut(&Elem, &Elem) -> Elem + Send>,
     fires: u64,
 }
 
@@ -40,8 +40,8 @@ impl Scan {
         output: ChannelId,
         n: usize,
         init: Elem,
-        updt: impl FnMut(&Elem, &Elem) -> Elem + 'static,
-        f: impl FnMut(&Elem, &Elem) -> Elem + 'static,
+        updt: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
+        f: impl FnMut(&Elem, &Elem) -> Elem + Send + 'static,
     ) -> Self {
         assert!(n >= 1, "Scan group size must be >= 1");
         Scan {
@@ -110,6 +110,11 @@ impl Node for Scan {
         self.count = 0;
         self.fires = 0;
         self.pipe.reset();
+    }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.input = map[self.input.0];
+        self.pipe.retarget(map);
     }
 }
 

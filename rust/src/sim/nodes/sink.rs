@@ -1,7 +1,6 @@
 //! `Sink` — stream consumers (DRAM writers) with arrival-time capture.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::sim::channel::ChannelId;
 use crate::sim::elem::Elem;
@@ -10,42 +9,51 @@ use crate::sim::node::{ChanView, Node, PortCtx, TickReport};
 /// Shared handle to a sink's captured output.
 ///
 /// The engine owns nodes as `Box<dyn Node>`, so results are exported
-/// through this handle (single-threaded engine → `Rc<RefCell>`).
+/// through this handle. Connected components may tick on separate worker
+/// threads, so the handle is `Send + Sync` (`Arc<Mutex>`); each sink is
+/// owned by exactly one component, so the lock is uncontended in
+/// practice.
 #[derive(Clone, Default)]
 pub struct SinkHandle {
-    inner: Rc<RefCell<Vec<(u64, Elem)>>>,
+    inner: Arc<Mutex<Vec<(u64, Elem)>>>,
 }
 
 impl SinkHandle {
+    /// Lock the captured output, recovering from a poisoned mutex (a
+    /// worker that panicked mid-push leaves the Vec intact enough for
+    /// diagnostics).
+    fn lock(&self) -> MutexGuard<'_, Vec<(u64, Elem)>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Number of elements received so far.
     pub fn len(&self) -> usize {
-        self.inner.borrow().len()
+        self.lock().len()
     }
 
     /// Whether nothing has been received.
     pub fn is_empty(&self) -> bool {
-        self.inner.borrow().is_empty()
+        self.lock().is_empty()
     }
 
     /// Copy out the received elements (without arrival cycles).
     pub fn elems(&self) -> Vec<Elem> {
-        self.inner.borrow().iter().map(|(_, e)| e.clone()).collect()
+        self.lock().iter().map(|(_, e)| e.clone()).collect()
     }
 
     /// Copy out `(arrival_cycle, element)` pairs.
     pub fn timed(&self) -> Vec<(u64, Elem)> {
-        self.inner.borrow().clone()
+        self.lock().clone()
     }
 
     /// Received scalars, panicking on non-scalar elements.
     pub fn scalars(&self) -> Vec<f32> {
-        self.inner.borrow().iter().map(|(_, e)| e.scalar()).collect()
+        self.lock().iter().map(|(_, e)| e.scalar()).collect()
     }
 
     /// Received vectors flattened row-major (for matrix outputs).
     pub fn rows(&self) -> Vec<Vec<f32>> {
-        self.inner
-            .borrow()
+        self.lock()
             .iter()
             .map(|(_, e)| e.as_vector().to_vec())
             .collect()
@@ -53,13 +61,13 @@ impl SinkHandle {
 
     /// Arrival cycle of the last element (None if empty).
     pub fn last_arrival(&self) -> Option<u64> {
-        self.inner.borrow().last().map(|(t, _)| *t)
+        self.lock().last().map(|(t, _)| *t)
     }
 
     /// Steady-state inter-arrival gap statistics `(min, max)` over the
     /// last `window` arrivals — a full-throughput pipeline shows gap 1.
     pub fn arrival_gaps(&self, window: usize) -> Option<(u64, u64)> {
-        let data = self.inner.borrow();
+        let data = self.lock();
         if data.len() < 2 {
             return None;
         }
@@ -75,11 +83,11 @@ impl SinkHandle {
     }
 
     fn push(&self, cycle: u64, e: Elem) {
-        self.inner.borrow_mut().push((cycle, e));
+        self.lock().push((cycle, e));
     }
 
     fn clear(&self) {
-        self.inner.borrow_mut().clear();
+        self.lock().clear();
     }
 }
 
@@ -152,6 +160,10 @@ impl Node for Sink {
     fn reset(&mut self) {
         self.handle.clear();
         self.fires = 0;
+    }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.input = map[self.input.0];
     }
 }
 

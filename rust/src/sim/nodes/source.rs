@@ -20,7 +20,7 @@ pub struct Source {
     pipe: OutPipe,
     len: u64,
     next: u64,
-    gen: Box<dyn FnMut(u64) -> Elem>,
+    gen: Box<dyn FnMut(u64) -> Elem + Send>,
     fires: u64,
 }
 
@@ -43,7 +43,7 @@ impl Source {
         name: impl Into<String>,
         output: ChannelId,
         len: u64,
-        f: impl FnMut(u64) -> Elem + 'static,
+        f: impl FnMut(u64) -> Elem + Send + 'static,
     ) -> Self {
         Source {
             name: name.into(),
@@ -107,6 +107,10 @@ impl Node for Source {
         self.next = 0;
         self.fires = 0;
         self.pipe.reset();
+    }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        self.pipe.retarget(map);
     }
 }
 

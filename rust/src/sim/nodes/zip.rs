@@ -16,7 +16,7 @@ pub struct Zip {
     name: String,
     inputs: Vec<ChannelId>,
     pipe: OutPipe,
-    f: Box<dyn FnMut(&[Elem]) -> Elem>,
+    f: Box<dyn FnMut(&[Elem]) -> Elem + Send>,
     /// Spill buffer for arity > 4 (rare).
     overflow: Vec<Elem>,
     fires: u64,
@@ -28,7 +28,7 @@ impl Zip {
         name: impl Into<String>,
         inputs: &[ChannelId],
         output: ChannelId,
-        f: impl FnMut(&[Elem]) -> Elem + 'static,
+        f: impl FnMut(&[Elem]) -> Elem + Send + 'static,
     ) -> Self {
         assert!(inputs.len() >= 2, "Zip needs at least two inputs");
         Zip {
@@ -111,6 +111,13 @@ impl Node for Zip {
     fn reset(&mut self) {
         self.pipe.reset();
         self.fires = 0;
+    }
+
+    fn retarget(&mut self, map: &[ChannelId]) {
+        for c in &mut self.inputs {
+            *c = map[c.0];
+        }
+        self.pipe.retarget(map);
     }
 }
 

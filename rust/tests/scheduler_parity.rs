@@ -11,11 +11,24 @@
 //! (prefill, causal, decode) plus multihead at N ∈ {4, 16, 64}, masked
 //! ragged streams, decode-step graphs across cache lengths, and tiny
 //! budgets for the budget-exceeded path.
+//!
+//! On top of the dense/event axis, every shape is also checked for
+//! **thread-count invariance**: the full run summary (cycles, outcome,
+//! fires, channel stats, depth report, scheduler counters) must be
+//! bit-identical for `SDPA_THREADS`-style worker counts {1, 2, 4, 8}
+//! under both scheduler modes — including multi-component graphs with
+//! mixed per-component outcomes, continuous-batching decode waves
+//! (`SessionTable::step_wave`), and whole-fleet trace replays. Tests
+//! pin the count via `Engine::set_threads`/`SessionConfig::threads`
+//! rather than the env var (which is process-global).
 
 use sdpa_dataflow::attention::decode::{self, DecodeKind};
 use sdpa_dataflow::attention::multihead::build_memfree_heads;
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::attention::{causal, cycle_budget, DepthPolicy, FifoPlan, Mask, Variant};
+use sdpa_dataflow::coordinator::fleet::{replay, FleetConfig};
+use sdpa_dataflow::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
+use sdpa_dataflow::coordinator::{DecodeStepRequest, KvCacheConfig, SessionConfig, SessionTable};
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
 use sdpa_dataflow::sim::{
     Capacity, Elem, Engine, GraphBuilder, RunOutcome, RunSummary, SchedulerMode,
@@ -72,40 +85,48 @@ struct LinearSpec {
     stages: Vec<(u64, Capacity)>, // (latency, output capacity)
 }
 
-fn build_linear(s: &LinearSpec) -> Engine {
-    let mut g = GraphBuilder::new();
-    let first = g.channel("c0", s.first_cap).unwrap();
+fn add_linear(g: &mut GraphBuilder, pfx: &str, s: &LinearSpec) {
+    let first = g.channel(format!("{pfx}c0"), s.first_cap).unwrap();
     if let Some(wd) = s.vector_width {
-        g.source_gen("src", first, s.len, move |i| {
+        g.source_gen(&format!("{pfx}src"), first, s.len, move |i| {
             Elem::vector(&vec![i as f32; wd])
         })
         .unwrap();
     } else {
-        g.source_gen("src", first, s.len, |i| Elem::Scalar(i as f32))
+        g.source_gen(&format!("{pfx}src"), first, s.len, |i| Elem::Scalar(i as f32))
             .unwrap();
     }
     let mut prev = first;
     for (k, (lat, cap)) in s.stages.iter().enumerate() {
-        let next = g.channel(format!("c{}", k + 1), *cap).unwrap();
-        g.map_latency(&format!("m{k}"), prev, next, *lat, |x| x.clone())
+        let next = g.channel(format!("{pfx}c{}", k + 1), *cap).unwrap();
+        g.map_latency(&format!("{pfx}m{k}"), prev, next, *lat, |x| x.clone())
             .unwrap();
         prev = next;
     }
-    g.sink("sink", prev, Some(s.len)).unwrap();
+    g.sink(&format!("{pfx}sink"), prev, Some(s.len)).unwrap();
+}
+
+fn build_linear(s: &LinearSpec) -> Engine {
+    let mut g = GraphBuilder::new();
+    add_linear(&mut g, "", s);
     g.build().unwrap()
+}
+
+fn random_linear_spec(rng: &mut SplitMix64) -> LinearSpec {
+    LinearSpec {
+        len: rng.below(41),
+        vector_width: (rng.below(4) == 0).then(|| 1 + rng.below(4) as usize),
+        first_cap: random_cap(rng),
+        stages: (0..1 + rng.below(4))
+            .map(|_| (1 + rng.below(5), random_cap(rng)))
+            .collect(),
+    }
 }
 
 #[test]
 fn property_linear_pipelines_are_scheduler_invariant() {
     for_each_case(0x11EA5, 24, |case, rng| {
-        let spec = LinearSpec {
-            len: rng.below(41),
-            vector_width: (rng.below(4) == 0).then(|| 1 + rng.below(4) as usize),
-            first_cap: random_cap(rng),
-            stages: (0..1 + rng.below(4))
-                .map(|_| (1 + rng.below(5), random_cap(rng)))
-                .collect(),
-        };
+        let spec = random_linear_spec(rng);
         let budget = random_budget(rng);
         let (sd, se) = run_both(|| build_linear(&spec), budget);
         assert_parity(&sd, &se, &format!("linear case {case} (budget {budget})"));
@@ -121,27 +142,44 @@ struct DiamondSpec {
     delay: u64,
 }
 
-fn build_diamond(s: &DiamondSpec) -> Engine {
-    let mut g = GraphBuilder::new();
-    let a = g.short_fifo("a").unwrap();
-    let b1 = g.short_fifo("to_sum").unwrap();
-    let b2 = g.channel("bypass", s.bypass).unwrap();
-    let r = g.short_fifo("sum").unwrap();
-    let rd = g.short_fifo("sum_delayed").unwrap();
-    let rep = g.short_fifo("rep").unwrap();
-    let z = g.short_fifo("z").unwrap();
-    g.source_gen("src", a, s.len, |i| Elem::Scalar(1.0 + i as f32))
+fn add_diamond(g: &mut GraphBuilder, pfx: &str, s: &DiamondSpec) {
+    let a = g.short_fifo(format!("{pfx}a")).unwrap();
+    let b1 = g.short_fifo(format!("{pfx}to_sum")).unwrap();
+    let b2 = g.channel(format!("{pfx}bypass"), s.bypass).unwrap();
+    let r = g.short_fifo(format!("{pfx}sum")).unwrap();
+    let rd = g.short_fifo(format!("{pfx}sum_delayed")).unwrap();
+    let rep = g.short_fifo(format!("{pfx}rep")).unwrap();
+    let z = g.short_fifo(format!("{pfx}z")).unwrap();
+    g.source_gen(&format!("{pfx}src"), a, s.len, |i| Elem::Scalar(1.0 + i as f32))
         .unwrap();
-    g.broadcast("bc", a, &[b1, b2]).unwrap();
-    g.reduce("sum", b1, r, s.n, 0.0, |x, y| x + y).unwrap();
-    g.map_latency("delay", r, rd, s.delay, |x| x.clone()).unwrap();
-    g.repeat("rep", rd, rep, s.n).unwrap();
-    g.zip("div", &[b2, rep], z, |xs| {
+    g.broadcast(&format!("{pfx}bc"), a, &[b1, b2]).unwrap();
+    g.reduce(&format!("{pfx}sum"), b1, r, s.n, 0.0, |x, y| x + y)
+        .unwrap();
+    g.map_latency(&format!("{pfx}delay"), r, rd, s.delay, |x| x.clone())
+        .unwrap();
+    g.repeat(&format!("{pfx}rep"), rd, rep, s.n).unwrap();
+    g.zip(&format!("{pfx}div"), &[b2, rep], z, |xs| {
         Elem::Scalar(xs[0].scalar() / xs[1].scalar())
     })
     .unwrap();
-    g.sink("sink", z, None).unwrap();
+    g.sink(&format!("{pfx}sink"), z, None).unwrap();
+}
+
+fn build_diamond(s: &DiamondSpec) -> Engine {
+    let mut g = GraphBuilder::new();
+    add_diamond(&mut g, "", s);
     g.build().unwrap()
+}
+
+fn random_diamond_spec(rng: &mut SplitMix64) -> DiamondSpec {
+    let n = 2 + rng.below(7) as usize;
+    DiamondSpec {
+        len: rng.below(41),
+        n,
+        // Often shallower than the reduction window → deadlock.
+        bypass: Capacity::Bounded(2 + rng.below(n as u64 + 4) as usize),
+        delay: 1 + rng.below(4),
+    }
 }
 
 #[test]
@@ -169,14 +207,7 @@ fn property_diamonds_are_scheduler_invariant_including_deadlock() {
     assert_eq!(se.outcome, RunOutcome::Completed);
 
     for_each_case(0xD1A, 24, |case, rng| {
-        let n = 2 + rng.below(7) as usize;
-        let spec = DiamondSpec {
-            len: rng.below(41),
-            n,
-            // Often shallower than the reduction window → deadlock.
-            bypass: Capacity::Bounded(2 + rng.below(n as u64 + 4) as usize),
-            delay: 1 + rng.below(4),
-        };
+        let spec = random_diamond_spec(rng);
         let budget = random_budget(rng);
         let (sd, se) = run_both(|| build_diamond(&spec), budget);
         assert_parity(&sd, &se, &format!("diamond case {case} (budget {budget})"));
@@ -431,5 +462,234 @@ fn decode_chains_agree_across_modes() {
         assert_eq!(a.row, b.row, "step {t} rows");
         assert_eq!(a.summary.cycles, b.summary.cycles, "step {t} cycles");
         assert_eq!(a.summary.node_fires, b.summary.node_fires, "step {t} fires");
+    }
+}
+
+// ---- thread-count invariance (SDPA_THREADS) ------------------------
+//
+// Worker threads may only change *which* thread ticks a component,
+// never what any component computes or how results merge — so every
+// run summary below must be bit-identical to the single-threaded one,
+// under both scheduler modes. Thread counts are pinned via
+// `set_threads` (the env var is process-global and tests run
+// concurrently).
+
+const THREAD_SWEEP: [usize; 3] = [2, 4, 8];
+
+fn assert_same_run(want: &RunSummary, got: &RunSummary, label: &str) {
+    assert_eq!(want.cycles, got.cycles, "{label}: cycles");
+    assert_eq!(want.outcome, got.outcome, "{label}: outcome");
+    assert_eq!(want.node_fires, got.node_fires, "{label}: node fires");
+    assert_eq!(want.channel_stats, got.channel_stats, "{label}: channel stats");
+    assert_eq!(want.depths, got.depths, "{label}: depth report");
+    assert_eq!(want.sched, got.sched, "{label}: sched stats");
+}
+
+fn assert_thread_invariant(mut mk: impl FnMut() -> Engine, budget: u64, label: &str) {
+    for mode in [SchedulerMode::Dense, SchedulerMode::EventDriven] {
+        let mut base = mk();
+        base.set_scheduler_mode(mode);
+        base.set_threads(1);
+        let want = base.run_outcome(budget);
+        for threads in THREAD_SWEEP {
+            let mut e = mk();
+            e.set_scheduler_mode(mode);
+            e.set_threads(threads);
+            let got = e.run_outcome(budget);
+            assert_same_run(&want, &got, &format!("{label} [{mode:?}, {threads} threads]"));
+        }
+    }
+}
+
+enum SubSpec {
+    Linear(LinearSpec),
+    Diamond(DiamondSpec),
+}
+
+/// Several independent subgraphs in one builder — one weakly connected
+/// component each, so the engine has real parallelism to distribute.
+fn build_multi(specs: &[SubSpec]) -> Engine {
+    let mut g = GraphBuilder::new();
+    for (i, s) in specs.iter().enumerate() {
+        let pfx = format!("g{i}_");
+        match s {
+            SubSpec::Linear(l) => add_linear(&mut g, &pfx, l),
+            SubSpec::Diamond(d) => add_diamond(&mut g, &pfx, d),
+        }
+    }
+    g.build().unwrap()
+}
+
+#[test]
+fn multi_component_mixed_outcomes_thread_invariant() {
+    // One pipeline that completes, one diamond that completes, one
+    // wedged diamond that deadlocks: the merge must report the deadlock
+    // (with the single-threaded detail string) while keeping the
+    // completed components' stats — at every thread count.
+    let specs = vec![
+        SubSpec::Linear(LinearSpec {
+            len: 40,
+            vector_width: None,
+            first_cap: Capacity::Bounded(2),
+            stages: vec![(3, Capacity::Bounded(2)), (1, Capacity::Unbounded)],
+        }),
+        SubSpec::Diamond(DiamondSpec {
+            len: 16,
+            n: 4,
+            bypass: Capacity::Bounded(8),
+            delay: 1,
+        }),
+        SubSpec::Diamond(DiamondSpec {
+            len: 40,
+            n: 8,
+            bypass: Capacity::Bounded(2),
+            delay: 1,
+        }),
+    ];
+    let (sd, se) = run_both(|| build_multi(&specs), 50_000);
+    assert_parity(&sd, &se, "multi mixed outcomes");
+    assert!(matches!(se.outcome, RunOutcome::Deadlock { .. }));
+    assert_thread_invariant(|| build_multi(&specs), 50_000, "multi mixed outcomes");
+    // Budget exhaustion must win over the deadlock at every count too.
+    assert_thread_invariant(|| build_multi(&specs), 25, "multi mixed outcomes (budget)");
+}
+
+#[test]
+fn property_multi_component_graphs_scheduler_and_thread_invariant() {
+    for_each_case(0x3C0A7, 10, |case, rng| {
+        let k = 1 + rng.below(3) as usize;
+        let specs: Vec<SubSpec> = (0..k)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    SubSpec::Linear(random_linear_spec(rng))
+                } else {
+                    SubSpec::Diamond(random_diamond_spec(rng))
+                }
+            })
+            .collect();
+        let budget = random_budget(rng);
+        let label = format!("multi case {case} (budget {budget})");
+        let (sd, se) = run_both(|| build_multi(&specs), budget);
+        assert_parity(&sd, &se, &label);
+        assert_thread_invariant(|| build_multi(&specs), budget, &label);
+    });
+}
+
+#[test]
+fn attention_variants_thread_invariant() {
+    let n = 16;
+    let w = Workload::random(n, 4, 0x7A1);
+    for variant in Variant::ALL {
+        assert_thread_invariant(
+            || variant.build(&w, &FifoPlan::paper(n)).unwrap().engine,
+            cycle_budget(n),
+            &format!("{variant} N={n}"),
+        );
+    }
+}
+
+#[test]
+fn multihead_thread_invariant_one_component_per_head() {
+    let n = 16;
+    let ws: Vec<Workload> = (0..4u64).map(|h| Workload::random(n, 4, 0x7EAD + h)).collect();
+    let eng = build_memfree_heads(&ws, &FifoPlan::paper(n)).unwrap().engine;
+    assert_eq!(eng.component_count(), ws.len(), "one component per head");
+    assert_thread_invariant(
+        || build_memfree_heads(&ws, &FifoPlan::paper(n)).unwrap().engine,
+        cycle_budget(n),
+        "multihead 4 heads N=16",
+    );
+}
+
+#[test]
+fn step_wave_transcripts_thread_invariant() {
+    // Continuous-batching waves compile one component per lane; the
+    // full served transcript (rows, step counters, wave cycles) must be
+    // byte-identical across `SessionConfig::threads`.
+    let d = 3;
+    let steps = 8;
+    let sessions = 4;
+    let ws: Vec<Workload> = (0..sessions as u64)
+        .map(|s| Workload::random(steps, d, 0x3A7E + s))
+        .collect();
+    let run_with = |threads: usize| {
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: sessions,
+            max_sessions: sessions,
+            max_len: 64,
+            threads: Some(threads),
+            kv: KvCacheConfig {
+                block_size: 4,
+                num_blocks: 64,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let ids: Vec<u64> = (0..sessions).map(|_| table.open(d).unwrap()).collect();
+        let mut transcript = Vec::new();
+        for t in 0..steps {
+            let reqs: Vec<DecodeStepRequest> = ids
+                .iter()
+                .zip(&ws)
+                .map(|(&id, w)| DecodeStepRequest {
+                    session: id,
+                    q: w.q[t].clone(),
+                    k: w.k[t].clone(),
+                    v: w.v[t].clone(),
+                })
+                .collect();
+            for resp in table.step_wave(&reqs) {
+                let resp = resp.unwrap();
+                transcript.push((resp.session, resp.step, resp.cycles, resp.row));
+            }
+        }
+        transcript
+    };
+    let base = run_with(1);
+    for threads in THREAD_SWEEP {
+        assert_eq!(base, run_with(threads), "wave transcripts, {threads} threads");
+    }
+}
+
+#[test]
+fn fleet_replay_thread_invariant() {
+    // Whole-fleet replay (sharding, forks, abandons, preemption) with
+    // the thread knob riding along `FleetConfig::sessions`.
+    let trace = Trace::generate(&TrafficConfig {
+        sessions: 8,
+        d: 3,
+        arrivals: Arrivals::Poisson { rate: 2.0 },
+        prompt: LenDist::Uniform { lo: 2, hi: 5 },
+        output: LenDist::Uniform { lo: 2, hi: 6 },
+        fork_fraction: 0.25,
+        abandon_fraction: 0.25,
+        seed: 0x7EAD_F1EE,
+    })
+    .unwrap();
+    let run_with = |threads: usize| {
+        let sessions = SessionConfig {
+            lanes: trace.sessions.len(),
+            max_sessions: trace.sessions.len(),
+            max_len: 64,
+            threads: Some(threads),
+            kv: KvCacheConfig {
+                block_size: 4,
+                num_blocks: 16 * trace.sessions.len(),
+            },
+            ..SessionConfig::default()
+        };
+        replay(&trace, FleetConfig { shards: 2, sessions }).unwrap()
+    };
+    let base = run_with(1);
+    for threads in THREAD_SWEEP {
+        let rep = run_with(threads);
+        assert_eq!(
+            base.transcripts, rep.transcripts,
+            "fleet transcripts, {threads} threads"
+        );
+        assert_eq!(
+            base.placements, rep.placements,
+            "fleet placements, {threads} threads"
+        );
     }
 }
