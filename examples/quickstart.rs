@@ -122,7 +122,46 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         return Err("decode numeric check failed".into());
     }
 
-    // 5. Paged serving: fork two sessions from one shared prefix. The
+    // 5. Sliding-window decode: the same session API with a window W
+    //    attends only the last W cached rows. The paged variant keeps
+    //    the cache in a ring of ⌈W/block_size⌉ blocks — older rows are
+    //    evicted in place, so the pool gauge stays flat however long
+    //    the session runs — and every row is bit-identical to the
+    //    contiguous windowed chain.
+    let window = 3usize;
+    let wsteps = n.min(12);
+    let mut contiguous = DecodeSession::new_windowed(DecodeKind::MemoryFree, d, window);
+    let mut wpool = BlockPool::new(KvCacheConfig {
+        block_size: 2,
+        num_blocks: 4,
+    })
+    .map_err(|e| e.to_string())?;
+    let mut ring = PagedDecodeSession::new_windowed(DecodeKind::MemoryFree, d, window);
+    for t in 0..wsteps {
+        let a = contiguous
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .map_err(|e| e.to_string())?;
+        let b = ring
+            .step(&mut wpool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .map_err(|e| e.to_string())?;
+        if a.row != b.row {
+            return Err("windowed paged step must match the contiguous windowed chain".into());
+        }
+        if ring.table().num_blocks() > window.div_ceil(2) {
+            return Err("the ring must never exceed ⌈W/block_size⌉ blocks".into());
+        }
+    }
+    println!(
+        "windowed decode: W={window}, {wsteps} steps in a {}-block ring, {} rows evicted",
+        window.div_ceil(2),
+        wpool.evictions()
+    );
+    ring.close(&mut wpool);
+    if wpool.used_blocks() != 0 {
+        return Err("closing the windowed session must free its ring".into());
+    }
+
+    // 6. Paged serving: fork two sessions from one shared prefix. The
     //    prefix K/V blocks are refcounted, not copied — both forks read
     //    the same pool blocks and diverge copy-on-write — and each
     //    fork's output rows are bit-identical to the contiguous
@@ -175,7 +214,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         return Err("closing every session must free every block".into());
     }
 
-    // 6. Fleet serving: generate a seeded, replayable traffic trace
+    // 7. Fleet serving: generate a seeded, replayable traffic trace
     //    (bursty arrivals, forks, abandons) and replay it through a
     //    2-shard fleet — two isolated fabrics behind a least-loaded
     //    router. Every served transcript is bit-identical to the
@@ -212,7 +251,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("fleet replay (2 shards): {}", rep.rollup.summary());
 
-    // 7. Threaded waves: every decode lane compiles to its own
+    // 8. Threaded waves: every decode lane compiles to its own
     //    connected component, so the engine can tick lanes on parallel
     //    workers (`Engine::set_threads`, or the `SDPA_THREADS` env var
     //    for the default) — with bit-identical results at every count.

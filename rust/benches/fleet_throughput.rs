@@ -107,6 +107,7 @@ fn main() {
         output: LenDist::Uniform { lo: 2, hi: 8 },
         fork_fraction: 0.25,
         abandon_fraction: 0.2,
+        window: None,
         seed: 0xF1EE_7BE5,
     };
     let trace = Trace::generate(&cfg).expect("trace generates");

@@ -1,0 +1,143 @@
+//! Sliding-window decode throughput: wall-clock per full serving run
+//! as the window shrinks from "∞" (the unwindowed baseline) down.
+//!
+//! Wall-clock twin of `experiments/window.rs`: each measurement calls
+//! the same `run_point` driver — open the sessions, decode every step
+//! through continuous-batching waves, close for transcripts — so
+//! `mean_ns` prices the ring-eviction path end to end against the
+//! growing-cache baseline. The simulated figures ride along (peak pool
+//! occupancy, eviction count, bit-identity vs the contiguous windowed
+//! chain) and are asserted here: eviction may never change outputs,
+//! and every row past the ring must evict exactly once. Emits
+//! `BENCH_window.json` for CI artifact upload alongside
+//! `BENCH_paging.json` / `BENCH_fleet.json`.
+//!
+//! ```bash
+//! cargo bench --bench window_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::experiments::window::{run_point, WindowPoint};
+
+struct Row {
+    window: Option<usize>,
+    sessions: usize,
+    steps: usize,
+    mean_ns: f64,
+    point: WindowPoint,
+}
+
+impl Row {
+    /// Decode steps served per wall-clock second of one full run.
+    fn steps_per_sec(&self) -> f64 {
+        (self.sessions * self.steps) as f64 / (self.mean_ns / 1e9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"window\":{},\"sessions\":{},\"steps\":{},\
+             \"mean_ns\":{:.1},\"steps_per_sec\":{:.1},\
+             \"ring_blocks\":{},\"peak_used_blocks\":{},\
+             \"evictions\":{},\"deferrals\":{},\"bit_identical\":{}}}",
+            match self.window {
+                None => "null".to_string(),
+                Some(w) => w.to_string(),
+            },
+            self.sessions,
+            self.steps,
+            self.mean_ns,
+            self.steps_per_sec(),
+            self.point.ring_blocks,
+            self.point.peak_used_blocks,
+            self.point.evictions,
+            self.point.deferrals,
+            self.point.bit_identical,
+        )
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let (sessions, steps) = if quick_requested() { (4, 16) } else { (8, 48) };
+    let windows: &[Option<usize>] = if quick_requested() {
+        &[None, Some(8), Some(4)]
+    } else {
+        &[None, Some(16), Some(8), Some(4)]
+    };
+    let d = 8;
+    let block_size = 2;
+    // Same sizing rule as the experiment driver: the pool just fits the
+    // unwindowed baseline, so the windowed runs show the headroom.
+    let pool_blocks = sessions * steps.div_ceil(block_size) + 2;
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &window in windows {
+        let label = match window {
+            None => "inf".to_string(),
+            Some(w) => w.to_string(),
+        };
+        let mut last = None;
+        let stats = b.bench(
+            &format!("window/decode_w{label}_s{sessions}x{steps}"),
+            || {
+                let p = run_point(window, sessions, steps, d, block_size, pool_blocks)
+                    .expect("run completes");
+                black_box(p.peak_used_blocks);
+                last = Some(p);
+            },
+        );
+        let point = last.expect("benched at least once");
+        // Correctness rides along with every timing: eviction may cost
+        // cache rows, never outputs — and the ring evicts exactly one
+        // row per step past its capacity.
+        assert!(point.bit_identical, "eviction must never change outputs");
+        match window {
+            Some(w) => {
+                let ring_rows = w.div_ceil(block_size) * block_size;
+                assert_eq!(
+                    point.evictions,
+                    (sessions * (steps - ring_rows)) as u64,
+                    "every row past the ring evicts exactly once"
+                );
+            }
+            None => assert_eq!(point.evictions, 0, "no ring without a window"),
+        }
+        rows.push(Row {
+            window,
+            sessions,
+            steps,
+            mean_ns: stats.mean_ns,
+            point,
+        });
+    }
+
+    // Occupancy summary: the baseline fills the pool, rings stay flat.
+    println!();
+    for r in &rows {
+        let label = match r.window {
+            None => "inf".to_string(),
+            Some(w) => w.to_string(),
+        };
+        println!(
+            "window {label:>4}  ring {:>2} blk/session  peak {:>3}/{pool_blocks} blocks  \
+             {:>5} evictions  {:>10.1} steps/s",
+            r.point.ring_blocks,
+            r.point.peak_used_blocks,
+            r.point.evictions,
+            r.steps_per_sec(),
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_window.json", &json).expect("write BENCH_window.json");
+    println!("\nwrote BENCH_window.json ({} rows)", rows.len());
+}

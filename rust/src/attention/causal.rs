@@ -11,9 +11,14 @@
 //! arithmetic: `exp(−∞) = 0` drops the position from every row sum and
 //! contraction, `max(m, −∞) = m` leaves the row max alone, and the
 //! memory-free running scans reduce to exact identity updates
-//! (`Δ = 1`, `e = 0`). Because key 0 is visible to every row (a
-//! [`Mask`] invariant), the running max is seeded before any masked
-//! position arrives and no NaN can form.
+//! (`Δ = 1`, `e = 0`). The prefix masks (causal, ragged) keep key 0
+//! visible to every row, so the running max is seeded before any
+//! masked position arrives; [`Mask::Window`] masks the *front* of a
+//! row, so the memory-free scan carries an explicit unseeded guard
+//! (`Δ = e = 0` while the running max is still −∞ — see
+//! [`super::memfree`]) and the buffering variants are safe as-is
+//! (their row max is taken over the whole row, and the diagonal is
+//! always visible).
 //!
 //! ## The causal depth bound
 //!
@@ -24,14 +29,16 @@
 //! (`causal_inference_matches_unmasked_bound` asserts this.)
 //!
 //! The causal *savings* appear only under a **compressed** mapping that
-//! streams just the visible prefix: a row with ℓ visible keys then has
+//! streams just the visible span: a row with ℓ visible keys then has
 //! a Reduce window of ℓ, and the reconvergence analysis yields a bypass
 //! depth of ℓ+2 ([`long_fifo_bound`]) instead of N+2. The decode-step
 //! graphs of [`super::decode`] are exactly this mapping (one row, ℓ =
-//! cache length) and the compile stage re-derives the bound per step —
-//! asserted in `decode`'s tests. The memory-free recurrence needs no
-//! bypass either way: its bound is 2, independent of ℓ and N, which is
-//! why causal decode inherits the paper's O(1)-memory headline intact.
+//! cache length — or `min(len, W)` for a windowed session, which is
+//! how a sliding window also compresses the decode-step FIFO bound)
+//! and the compile stage re-derives the bound per step — asserted in
+//! `decode`'s tests. The memory-free recurrence needs no bypass either
+//! way: its bound is 2, independent of ℓ and N, which is why causal
+//! decode inherits the paper's O(1)-memory headline intact.
 
 use super::workload::{Mask, Workload};
 use super::{memfree, naive, reordered, scaled, BuiltAttention, DepthPolicy, Variant};
@@ -89,7 +96,7 @@ mod tests {
     #[test]
     fn every_base_variant_matches_the_masked_references() {
         let w = Workload::random(12, 6, 0xCA05);
-        for mask in [Mask::Causal, Mask::ragged(5)] {
+        for mask in [Mask::Causal, Mask::ragged(5), Mask::window(4)] {
             let gold = sdpa_f64_masked(&w, &mask);
             for base in Variant::PAPER {
                 let mut built = build_masked(base, &w, &mask, DepthPolicy::Inferred).unwrap();
@@ -129,24 +136,32 @@ mod tests {
         // The documented claim: in-stream masking leaves every long-FIFO
         // bound untouched — masked slots still occupy stream slots.
         let w = Workload::random(16, 4, 0xCA06);
-        for base in [Variant::Naive, Variant::Scaled, Variant::Reordered] {
-            let built = build_causal(base, &w, DepthPolicy::Inferred).unwrap();
-            for name in base.long_fifos() {
-                let rec = built
-                    .engine
-                    .depth_report()
-                    .iter()
-                    .find(|c| c.name == *name)
-                    .unwrap();
-                assert!(rec.is_long, "{base}: {name}");
-                assert_eq!(rec.inferred, w.n + 2, "{base}: {name}");
+        for mask in [Mask::Causal, Mask::window(4)] {
+            for base in [Variant::Naive, Variant::Scaled, Variant::Reordered] {
+                let built = build_masked(base, &w, &mask, DepthPolicy::Inferred).unwrap();
+                for name in base.long_fifos() {
+                    let rec = built
+                        .engine
+                        .depth_report()
+                        .iter()
+                        .find(|c| c.name == *name)
+                        .unwrap();
+                    assert!(rec.is_long, "{base} {}: {name}", mask.name());
+                    assert_eq!(rec.inferred, w.n + 2, "{base} {}: {name}", mask.name());
+                }
             }
-        }
-        // The masked memory-free graph stays all-short.
-        let built = build_causal(Variant::MemoryFree, &w, DepthPolicy::Inferred).unwrap();
-        for c in built.engine.depth_report() {
-            assert!(!c.is_long, "channel '{}'", c.name);
-            assert_eq!(c.capacity, Capacity::Bounded(2), "channel '{}'", c.name);
+            // The masked memory-free graph stays all-short.
+            let built = build_masked(Variant::MemoryFree, &w, &mask, DepthPolicy::Inferred).unwrap();
+            for c in built.engine.depth_report() {
+                assert!(!c.is_long, "{}: channel '{}'", mask.name(), c.name);
+                assert_eq!(
+                    c.capacity,
+                    Capacity::Bounded(2),
+                    "{}: channel '{}'",
+                    mask.name(),
+                    c.name
+                );
+            }
         }
     }
 

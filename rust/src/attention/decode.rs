@@ -37,11 +37,24 @@
 //! [`build_step_rows_into`], so paged transcripts are **bit-identical**
 //! to contiguous ones — `tests/paged_conformance.rs` enforces this
 //! differentially, including across fork and preempt/requeue cycles.
+//!
+//! **Sliding-window decode** ([`DecodeSession::new_windowed`],
+//! [`PagedDecodeSession::new_windowed`]) caps what a step attends: at
+//! logical length `len` the step streams only the last `min(len, W)`
+//! cached rows — the compressed mapping of `Mask::Window`, with no
+//! in-graph masking and the step's FIFO bound shrunk to
+//! `min(len, W) + 2` (buffered) / 2 (memory-free). The paged variant
+//! additionally caps the *footprint*: its block table is a ring that
+//! evicts rows older than the window in place (see
+//! [`crate::runtime::kvcache`]), so a windowed session holds at most
+//! ⌈W/block_size⌉ blocks however long it runs. Both variants and a
+//! per-step truncated oracle are proven bitwise-identical in
+//! `tests/windowed_conformance.rs`.
 
 use super::reference::Matrix;
 use super::workload::{dot, Workload};
 use super::{BuiltAttention, DepthPolicy};
-use crate::runtime::kvcache::{BlockPool, BlockTable, SwappedKv};
+use crate::runtime::kvcache::{AppendUndo, BlockPool, BlockTable, SwappedKv};
 use crate::sim::nodes::SinkHandle;
 use crate::sim::{Elem, GraphBuilder, RunSummary, SchedulerMode, Scope};
 use crate::{Error, Result};
@@ -313,6 +326,7 @@ pub struct DecodeSession {
     policy: DepthPolicy,
     mode: Option<SchedulerMode>,
     threads: Option<usize>,
+    window: Option<usize>,
     keys: Vec<Vec<f32>>,
     values: Vec<Vec<f32>>,
     outputs: Matrix,
@@ -324,6 +338,16 @@ impl DecodeSession {
         Self::with_policy(kind, d, DepthPolicy::Inferred)
     }
 
+    /// New sliding-window session: each step attends only the last `w`
+    /// cached rows (the contiguous twin of a windowed paged session;
+    /// the cache itself still grows — only the paged variant evicts).
+    pub fn new_windowed(kind: DecodeKind, d: usize, w: usize) -> Self {
+        assert!(w >= 1, "window needs a width of at least 1");
+        let mut s = Self::new(kind, d);
+        s.window = Some(w);
+        s
+    }
+
     /// New session under an explicit depth policy.
     pub fn with_policy(kind: DecodeKind, d: usize, policy: DepthPolicy) -> Self {
         assert!(d >= 1, "head dimension must be at least 1");
@@ -333,6 +357,7 @@ impl DecodeSession {
             policy,
             mode: None,
             threads: None,
+            window: None,
             keys: Vec::new(),
             values: Vec::new(),
             outputs: Vec::new(),
@@ -355,6 +380,20 @@ impl DecodeSession {
     /// The step mapping this session uses.
     pub fn kind(&self) -> DecodeKind {
         self.kind
+    }
+
+    /// Sliding-window width, if any.
+    pub fn window(&self) -> Option<usize> {
+        self.window
+    }
+
+    /// Rows the next step graph will stream: the whole cache, capped
+    /// at the window.
+    fn visible(&self) -> usize {
+        match self.window {
+            Some(w) => self.keys.len().min(w),
+            None => self.keys.len(),
+        }
     }
 
     /// Tokens decoded so far (== cached K/V rows == output rows).
@@ -420,16 +459,25 @@ impl DecodeSession {
     /// against it, return the output row and the step's run summary.
     pub fn step(&mut self, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Result<DecodeStepOutcome> {
         self.stage(&q, k, v)?;
-        let result = build_step(self.kind, &q, &self.keys, &self.values, self.policy)
-            .and_then(|mut built| {
-                if let Some(mode) = self.mode {
-                    built.engine.set_scheduler_mode(mode);
-                }
-                if let Some(th) = self.threads {
-                    built.engine.set_threads(th);
-                }
-                built.run()
-            });
+        // A windowed session streams only the last min(len, W) rows —
+        // the same span a windowed paged gather produces.
+        let start = self.keys.len() - self.visible();
+        let result = build_step(
+            self.kind,
+            &q,
+            &self.keys[start..],
+            &self.values[start..],
+            self.policy,
+        )
+        .and_then(|mut built| {
+            if let Some(mode) = self.mode {
+                built.engine.set_scheduler_mode(mode);
+            }
+            if let Some(th) = self.threads {
+                built.engine.set_threads(th);
+            }
+            built.run()
+        });
         let (rows, summary) = match result {
             Ok(ok) => ok,
             Err(e) => {
@@ -482,11 +530,10 @@ pub struct PagedDecodeSession {
     /// table is empty exactly when this is `Some` (or the session has
     /// decoded nothing).
     swapped: Option<SwappedKv>,
-    /// Pending copy-on-write of the currently staged step: the shared
-    /// tail block the stage replaced (reference retained by the pool
-    /// until the step commits or unwinds — see
-    /// [`BlockPool::append_row`]).
-    staged_cow: Option<usize>,
+    /// Undo token of the currently staged step (any pending
+    /// copy-on-write reference or evicted row rides in it until the
+    /// step commits or unwinds — see [`BlockPool::append_row`]).
+    staged: Option<AppendUndo>,
     outputs: Matrix,
 }
 
@@ -494,6 +541,16 @@ impl PagedDecodeSession {
     /// New paged session for head dimension `d`, inferred FIFO depths.
     pub fn new(kind: DecodeKind, d: usize) -> Self {
         Self::with_policy(kind, d, DepthPolicy::Inferred)
+    }
+
+    /// New sliding-window paged session: each step attends only the
+    /// last `w` cached rows, and the block table is a ring that evicts
+    /// older rows in place — the session never holds more than
+    /// ⌈w/block_size⌉ blocks, however long it runs.
+    pub fn new_windowed(kind: DecodeKind, d: usize, w: usize) -> Self {
+        let mut s = Self::new(kind, d);
+        s.table = BlockTable::windowed(w);
+        s
     }
 
     /// New paged session under an explicit depth policy.
@@ -507,7 +564,7 @@ impl PagedDecodeSession {
             threads: None,
             table: BlockTable::new(),
             swapped: None,
-            staged_cow: None,
+            staged: None,
             outputs: Vec::new(),
         }
     }
@@ -530,10 +587,16 @@ impl PagedDecodeSession {
         self.kind
     }
 
-    /// Tokens decoded so far (cached rows, resident or swapped out).
+    /// Sliding-window width, if any.
+    pub fn window(&self) -> Option<usize> {
+        self.table.window()
+    }
+
+    /// Tokens decoded so far (the logical transcript length — for a
+    /// windowed session this keeps growing past the resident rows).
     pub fn len(&self) -> usize {
         match &self.swapped {
-            Some(s) => s.len(),
+            Some(s) => s.len,
             None => self.table.len(),
         }
     }
@@ -577,7 +640,7 @@ impl PagedDecodeSession {
             threads: self.threads,
             table: pool.fork(&self.table),
             swapped: None,
-            staged_cow: None,
+            staged: None,
             outputs: Vec::new(),
         })
     }
@@ -587,7 +650,7 @@ impl PagedDecodeSession {
     /// already preempted or empty.
     pub fn preempt(&mut self, pool: &mut BlockPool) {
         debug_assert!(
-            self.staged_cow.is_none(),
+            self.staged.is_none(),
             "preempting a session with a step staged (waves exclude staged members)"
         );
         if self.swapped.is_some() || self.table.is_empty() {
@@ -639,24 +702,29 @@ impl PagedDecodeSession {
             }
         }
         debug_assert!(
-            self.staged_cow.is_none(),
+            self.staged.is_none(),
             "stage without resolving the previous staged step"
         );
-        self.staged_cow = pool.append_row(&mut self.table, k.to_vec(), v.to_vec())?;
+        self.staged = Some(pool.append_row(&mut self.table, k.to_vec(), v.to_vec())?);
         Ok(())
     }
 
     /// Undo the most recent [`Self::stage`] (a failed step must not
-    /// corrupt the session) — including reverting a copy-on-write tail
-    /// split, so block accounting and sharing end exactly as they were.
+    /// corrupt the session) — including reverting a copy-on-write
+    /// split or a ring eviction, so block accounting, sharing, and
+    /// content end exactly as they were.
     pub(crate) fn unstage(&mut self, pool: &mut BlockPool) {
-        pool.undo_append(&mut self.table, self.staged_cow.take());
+        if let Some(undo) = self.staged.take() {
+            pool.undo_append(&mut self.table, undo);
+        }
     }
 
     /// Record the staged step's output row, completing the step (and
-    /// resolving a pending copy-on-write, if the stage made one).
+    /// resolving any pending copy-on-write or eviction the stage made).
     pub(crate) fn commit_row(&mut self, pool: &mut BlockPool, row: Vec<f32>) {
-        pool.commit_append(self.staged_cow.take());
+        if let Some(undo) = self.staged.take() {
+            pool.commit_append(undo);
+        }
         self.outputs.push(row);
     }
 
@@ -721,7 +789,9 @@ impl PagedDecodeSession {
     /// Retire the session: release every block reference (resolving any
     /// pending copy-on-write first) and return the transcript.
     pub fn close(mut self, pool: &mut BlockPool) -> Matrix {
-        pool.commit_append(self.staged_cow.take());
+        if let Some(undo) = self.staged.take() {
+            pool.commit_append(undo);
+        }
         pool.release(&mut self.table);
         self.outputs
     }
@@ -1055,6 +1125,130 @@ mod tests {
         assert_eq!(s.len(), 2, "deferred step left the cache unchanged");
         assert_eq!(s.outputs().len(), 2, "no phantom output row");
         s.close(&mut pool);
+    }
+
+    #[test]
+    fn windowed_session_matches_the_windowed_references() {
+        let w = Workload::random(12, 4, 0xDEC6);
+        let mask = Mask::window(5);
+        let mut s = DecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, 5);
+        assert_eq!(s.window(), Some(5));
+        for t in 0..w.n {
+            let out = s
+                .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            assert_eq!(out.step, t, "step index is the logical position");
+        }
+        // Same f32 operations in the same span order as the oracle.
+        assert_close(
+            s.outputs(),
+            &sdpa_online_f32_masked(&w, &mask),
+            1e-6,
+            "windowed chain vs online window reference",
+        );
+        assert_close(
+            s.outputs(),
+            &sdpa_f64_masked(&w, &mask),
+            1e-4,
+            "windowed chain vs f64 window reference",
+        );
+    }
+
+    #[test]
+    fn windowed_paged_and_contiguous_sessions_are_bit_identical() {
+        let w = Workload::random(16, 4, 0xDEC7);
+        for kind in DecodeKind::ALL {
+            let mut pool = small_pool(2, 8);
+            let mut paged = PagedDecodeSession::new_windowed(kind, w.d, 3);
+            let mut contiguous = DecodeSession::new_windowed(kind, w.d, 3);
+            assert_eq!(paged.window(), Some(3));
+            for t in 0..w.n {
+                paged
+                    .step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                    .unwrap();
+                contiguous
+                    .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                    .unwrap();
+                assert!(
+                    paged.table().num_blocks() <= 2,
+                    "{kind}: windowed footprint capped at ⌈3/2⌉ blocks"
+                );
+            }
+            assert_eq!(
+                paged.outputs(),
+                contiguous.outputs(),
+                "{kind}: windowed paged ≡ windowed contiguous bitwise"
+            );
+            paged.close(&mut pool);
+            assert_eq!(pool.used_blocks(), 0);
+        }
+    }
+
+    #[test]
+    fn windowed_step_bound_is_min_len_window_plus_2() {
+        // A windowed step streams min(len, W) rows, so the buffered
+        // bypass bound compresses to min(len, W) + 2 and stays flat
+        // once the window fills — the FIFO-depth face of O(W) serving.
+        let w = Workload::random(12, 4, 0xDEC8);
+        let win = 4;
+        let mut s = DecodeSession::new_windowed(DecodeKind::Buffered, w.d, win);
+        for t in 0..w.n {
+            let out = s
+                .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            let long_max = out
+                .summary
+                .depths
+                .iter()
+                .filter(|c| c.is_long)
+                .map(|c| c.inferred)
+                .max();
+            let expect = step_long_fifo_bound(DecodeKind::Buffered, (t + 1).min(win));
+            assert_eq!(long_max, Some(expect), "step {t}");
+        }
+        // The memory-free mapping needs no bypass at any window.
+        let mut s = DecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, win);
+        for t in 0..w.n {
+            let out = s
+                .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            for c in &out.summary.depths {
+                assert!(!c.is_long, "step {t}: '{}'", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_paged_session_survives_preempt_restore_bit_exactly() {
+        // Preempt a windowed session after its ring has wrapped; the
+        // restored ring must continue exactly like an unpreempted twin.
+        let w = Workload::random(14, 4, 0xDEC9);
+        let mut pool = small_pool(2, 16);
+        let mut a = PagedDecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, 3);
+        let mut b = PagedDecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, 3);
+        for t in 0..10 {
+            a.step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            b.step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        a.preempt(&mut pool);
+        assert!(a.is_preempted());
+        assert_eq!(a.len(), 10, "logical len visible while swapped out");
+        for t in 10..w.n {
+            a.step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+            b.step(&mut pool, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        assert_eq!(
+            a.outputs(),
+            b.outputs(),
+            "preempt/restore of a wrapped ring must not perturb a bit"
+        );
+        a.close(&mut pool);
+        b.close(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
     }
 
     #[test]

@@ -47,10 +47,10 @@ pub fn build_causal(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
 }
 
 /// Figure-3(c) graph with an arbitrary in-stream [`Mask`] (causal,
-/// ragged). The mask rides a stateless source zipped into the score
-/// front-end — not a counting `Map`, whose captured counter would
-/// survive [`Engine::reset`](crate::sim::Engine::reset) and corrupt
-/// replays (the decode replay property test guards this).
+/// ragged, sliding-window). The mask rides a stateless source zipped
+/// into the score front-end — not a counting `Map`, whose captured
+/// counter would survive [`Engine::reset`](crate::sim::Engine::reset)
+/// and corrupt replays (the decode replay property test guards this).
 pub fn build_masked_with_policy(
     w: &Workload,
     mask: &Mask,
@@ -95,8 +95,17 @@ fn build_into_masked(sc: &mut Scope<'_>, w: &Workload, mask: &Mask) -> Result<Si
         },
         |st, x| {
             let (m_old, m_new) = st.pair();
-            // First element of a row: m_old = −∞ ⇒ Δ = 0 (nothing to
-            // rescale yet); e = e^{s−m} as usual.
+            if m_new == f32::NEG_INFINITY {
+                // Unseeded: every score so far this row was masked
+                // (−∞), which only a non-prefix mask — Window — can
+                // produce. −∞ − −∞ would be NaN; the correct update is
+                // the exact identity Δ = e = 0, keeping r and l⃗ at 0
+                // until the first visible score arrives (every mask
+                // keeps the diagonal visible, so one always does).
+                return Elem::Pair(0.0, 0.0);
+            }
+            // First visible element of a row: m_old = −∞ ⇒ Δ = 0
+            // (nothing to rescale yet); e = e^{s−m} as usual.
             let delta = (m_old - m_new).exp();
             let e = (x.scalar() - m_new).exp();
             Elem::Pair(delta, e)

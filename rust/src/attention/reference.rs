@@ -12,11 +12,15 @@
 //!   of the dataflow mapping.
 //!
 //! Each has a `_masked` twin taking a [`Mask`]: row `i` folds only its
-//! visible key prefix `0..mask.row_visible(i)`, in stream order — so
-//! the masked online reference executes the *same f32 operation
-//! sequence* as a decode-step chain and as the masked graphs' visible
-//! positions (masked stream slots reduce to exact identity updates:
-//! `Δ = 1`, `e = 0`).
+//! visible key span `mask.row_span(i, n)`, in stream order — so the
+//! masked online reference executes the *same f32 operation sequence*
+//! as a decode-step chain and as the masked graphs' visible positions
+//! (masked stream slots reduce to exact identity updates: `Δ = 1`,
+//! `e = 0` once the running max is seeded, and `Δ = e = 0` before — see
+//! the unseeded guard in [`super::memfree`]). For the prefix masks the
+//! span starts at key 0; for [`Mask::Window`] it starts at `i + 1 − w`,
+//! which is also exactly the truncated row a windowed decode step
+//! streams.
 
 use super::workload::{Mask, Workload};
 
@@ -123,13 +127,13 @@ pub fn sdpa_f64_causal(w: &Workload) -> Matrix {
     sdpa_f64_masked(w, &Mask::Causal)
 }
 
-/// f64 masked attention: row i folds its visible key prefix only.
+/// f64 masked attention: row i folds its visible key span only.
 pub fn sdpa_f64_masked(w: &Workload, mask: &Mask) -> Matrix {
     let scale = w.scale() as f64;
     let mut out = Vec::with_capacity(w.n);
     for i in 0..w.n {
-        let vis = mask.row_visible(i, w.n);
-        let s: Vec<f64> = (0..vis)
+        let (start, end) = mask.row_span(i, w.n);
+        let s: Vec<f64> = (start..end)
             .map(|j| {
                 w.q[i]
                     .iter()
@@ -143,7 +147,7 @@ pub fn sdpa_f64_masked(w: &Workload, mask: &Mask) -> Matrix {
         let e: Vec<f64> = s.iter().map(|x| (x - m).exp()).collect();
         let sigma: f64 = e.iter().sum();
         let mut row = vec![0.0f64; w.d];
-        for (j, ej) in e.iter().enumerate() {
+        for (ej, j) in e.iter().zip(start..end) {
             let p = ej / sigma;
             for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
                 *acc += p * *vv as f64;
@@ -154,16 +158,16 @@ pub fn sdpa_f64_masked(w: &Workload, mask: &Mask) -> Matrix {
     out
 }
 
-/// f32 unscaled-softmax attention over the visible prefix — what the
+/// f32 unscaled-softmax attention over the visible span — what the
 /// masked Figure-2 graph computes (masked slots contribute e = 0).
 pub fn sdpa_f32_unscaled_masked(w: &Workload, mask: &Mask) -> Matrix {
     let mut out = Vec::with_capacity(w.n);
     for i in 0..w.n {
-        let vis = mask.row_visible(i, w.n);
-        let e: Vec<f32> = (0..vis).map(|j| w.score(i, j).exp()).collect();
+        let (start, end) = mask.row_span(i, w.n);
+        let e: Vec<f32> = (start..end).map(|j| w.score(i, j).exp()).collect();
         let sigma: f32 = e.iter().sum();
         let mut row = vec![0.0f32; w.d];
-        for (j, ej) in e.iter().enumerate() {
+        for (ej, j) in e.iter().zip(start..end) {
             let p = ej / sigma;
             for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
                 *acc += p * vv;
@@ -174,20 +178,20 @@ pub fn sdpa_f32_unscaled_masked(w: &Workload, mask: &Mask) -> Matrix {
     out
 }
 
-/// f32 max-subtracted-softmax attention over the visible prefix — what
+/// f32 max-subtracted-softmax attention over the visible span — what
 /// the masked Figure-3(a)/(b) graphs compute (the row max over the full
-/// stream equals the max over the visible prefix, since masked scores
+/// stream equals the max over the visible span, since masked scores
 /// enter as −∞).
 pub fn sdpa_f32_scaled_masked(w: &Workload, mask: &Mask) -> Matrix {
     let mut out = Vec::with_capacity(w.n);
     for i in 0..w.n {
-        let vis = mask.row_visible(i, w.n);
-        let s: Vec<f32> = (0..vis).map(|j| w.score(i, j)).collect();
+        let (start, end) = mask.row_span(i, w.n);
+        let s: Vec<f32> = (start..end).map(|j| w.score(i, j)).collect();
         let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let e: Vec<f32> = s.iter().map(|x| (x - m).exp()).collect();
         let sigma: f32 = e.iter().sum();
         let mut row = vec![0.0f32; w.d];
-        for (j, ej) in e.iter().enumerate() {
+        for (ej, j) in e.iter().zip(start..end) {
             let p = ej / sigma;
             for (acc, vv) in row.iter_mut().zip(&w.v[j]) {
                 *acc += p * vv;
@@ -198,19 +202,19 @@ pub fn sdpa_f32_scaled_masked(w: &Workload, mask: &Mask) -> Matrix {
     out
 }
 
-/// The memory-free recurrence over the visible prefix — the incremental
+/// The memory-free recurrence over the visible span — the incremental
 /// decode oracle. Step `t` of an autoregressive decode session executes
-/// exactly this row-`t` loop (same f32 operations, same order), so a
-/// decode-step chain must agree with this reference essentially
-/// bit-for-bit.
+/// exactly this row-`t` loop (same f32 operations, same order; a
+/// windowed session streams exactly the span's rows), so a decode-step
+/// chain must agree with this reference essentially bit-for-bit.
 pub fn sdpa_online_f32_masked(w: &Workload, mask: &Mask) -> Matrix {
     let mut out = Vec::with_capacity(w.n);
     for i in 0..w.n {
-        let vis = mask.row_visible(i, w.n);
+        let (start, end) = mask.row_span(i, w.n);
         let mut m = f32::NEG_INFINITY;
         let mut r = 0.0f32;
         let mut l = vec![0.0f32; w.d];
-        for j in 0..vis {
+        for j in start..end {
             let s = w.score(i, j);
             let m_new = m.max(s);
             let delta = (m - m_new).exp();
@@ -333,9 +337,43 @@ mod tests {
     }
 
     #[test]
+    fn windowed_reference_matches_truncated_full_attention() {
+        // Row i under Window(w) is full attention of q_i over exactly
+        // keys/values [i+1−w, i] — the truncation oracle.
+        let w = Workload::random(10, 4, 0x31AB);
+        let win = 3usize;
+        let masked = sdpa_f64_masked(&w, &Mask::window(win));
+        for i in 0..w.n {
+            let start = (i + 1).saturating_sub(win);
+            let mut wt = Workload {
+                n: i + 1 - start,
+                d: w.d,
+                q: vec![w.q[i].clone(); i + 1 - start],
+                k: w.k[start..=i].to_vec(),
+                v: w.v[start..=i].to_vec(),
+            };
+            wt.q.truncate(wt.n);
+            let expect = sdpa_f64(&wt);
+            for (a, b) in masked[i].iter().zip(&expect[0]) {
+                assert!((a - b).abs() < 1e-6, "row {i}");
+            }
+        }
+        // Wide windows reduce to plain causal.
+        assert_eq!(
+            sdpa_f64_masked(&w, &Mask::window(w.n)),
+            sdpa_f64_masked(&w, &Mask::Causal),
+            "window(N) ≡ causal"
+        );
+        assert_eq!(
+            sdpa_online_f32_masked(&w, &Mask::window(w.n)),
+            sdpa_online_f32_masked(&w, &Mask::Causal)
+        );
+    }
+
+    #[test]
     fn masked_references_agree_with_f64_oracle() {
         let w = Workload::random(12, 6, 77);
-        for mask in [Mask::Causal, Mask::ragged(5), Mask::Full] {
+        for mask in [Mask::Causal, Mask::ragged(5), Mask::Full, Mask::window(4)] {
             let gold = sdpa_f64_masked(&w, &mask);
             assert_close(
                 &sdpa_f32_scaled_masked(&w, &mask),

@@ -6,19 +6,24 @@
 //! (reproducible across runs, required for `Engine::reset` replays).
 //!
 //! [`Mask`] describes which score positions are visible — full
-//! (prefill), causal (autoregressive), or ragged-causal (a padded
-//! sequence whose valid length is shorter than `N`). All masks are
-//! *prefix* masks: row `i` sees keys `0..row_visible(i)`, and key 0 is
-//! visible to every row — the invariant the running-max scan of the
-//! memory-free graphs (and softmax itself) requires.
+//! (prefill), causal (autoregressive), ragged-causal (a padded
+//! sequence whose valid length is shorter than `N`), or sliding-window
+//! causal ([`Mask::Window`]: row `i` sees only its last `w` keys). The
+//! visible set of every mask is one contiguous span per row,
+//! [`Mask::row_span`]. The prefix masks (everything but `Window`) start
+//! that span at key 0, so the memory-free running-max scan is seeded
+//! before any masked position arrives; a window mask starts the span at
+//! `i + 1 − w`, which is why the scan carries an explicit unseeded
+//! guard (see [`super::memfree`]). Every mask keeps the diagonal
+//! visible, so no row's softmax is over an empty set.
 
 use crate::prng::SplitMix64;
 
 /// Which `(query row, key)` score positions are visible.
 ///
-/// Every mask keeps key 0 visible to every row (softmax over an empty
-/// set is undefined, and the memory-free running-max scan seeds its
-/// state from the first visible score).
+/// Every mask keeps the diagonal visible to every row (softmax over an
+/// empty set is undefined), and every row's visible set is one
+/// contiguous span ([`Mask::row_span`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Mask {
     /// Every row attends every key — the paper's prefill setting.
@@ -33,6 +38,15 @@ pub enum Mask {
         /// Valid sequence length (≥ 1).
         len: usize,
     },
+    /// Sliding-window causal attention: row `i` attends only its last
+    /// `w` keys, `max(0, i + 1 − w) ≤ j ≤ i`. The only non-prefix mask
+    /// (key 0 is invisible once `i ≥ w`), and the attention semantic
+    /// that makes a decode session's KV footprint O(w) — see
+    /// `runtime::kvcache`'s windowed block eviction.
+    Window {
+        /// Window width in keys (≥ 1; `w = 1` means diagonal-only).
+        w: usize,
+    },
 }
 
 impl Mask {
@@ -40,6 +54,12 @@ impl Mask {
     pub fn ragged(len: usize) -> Mask {
         assert!(len >= 1, "ragged mask needs a valid length of at least 1");
         Mask::Ragged { len }
+    }
+
+    /// Sliding-window causal mask of width `w` (must be ≥ 1).
+    pub fn window(w: usize) -> Mask {
+        assert!(w >= 1, "window mask needs a width of at least 1");
+        Mask::Window { w }
     }
 
     /// Whether score `(i, j)` is visible.
@@ -55,16 +75,33 @@ impl Mask {
                     j < len
                 }
             }
+            Mask::Window { w } => j <= i && j + w > i,
         }
     }
 
-    /// Number of visible keys in row `i` of an `n`-key sequence. Masks
-    /// are prefix masks, so the visible set is exactly `0..row_visible`.
+    /// The visible span of row `i` in an `n`-key sequence, as a
+    /// half-open `(start, end)` key range. Prefix masks start at 0; the
+    /// window mask starts at `i + 1 − w`. The masked references (and
+    /// the windowed decode mapping) iterate exactly this span, in
+    /// stream order.
+    pub fn row_span(&self, i: usize, n: usize) -> (usize, usize) {
+        match *self {
+            Mask::Window { w } => (((i + 1).saturating_sub(w)).min(n), (i + 1).min(n)),
+            _ => (0, self.row_visible(i, n)),
+        }
+    }
+
+    /// Number of visible keys in row `i` of an `n`-key sequence
+    /// (`row_span` length).
     pub fn row_visible(&self, i: usize, n: usize) -> usize {
         match *self {
             Mask::Full => n,
             Mask::Causal => (i + 1).min(n),
             Mask::Ragged { len } => (i + 1).min(len).min(n),
+            Mask::Window { .. } => {
+                let (start, end) = self.row_span(i, n);
+                end - start
+            }
         }
     }
 
@@ -74,6 +111,7 @@ impl Mask {
             Mask::Full => "full".into(),
             Mask::Causal => "causal".into(),
             Mask::Ragged { len } => format!("ragged({len})"),
+            Mask::Window { w } => format!("window({w})"),
         }
     }
 }
@@ -239,11 +277,51 @@ mod tests {
     }
 
     #[test]
-    fn every_mask_keeps_key_zero_visible() {
-        for m in [Mask::Full, Mask::Causal, Mask::ragged(1), Mask::ragged(5)] {
+    fn every_mask_keeps_the_diagonal_visible() {
+        for m in [
+            Mask::Full,
+            Mask::Causal,
+            Mask::ragged(1),
+            Mask::ragged(5),
+            Mask::window(1),
+            Mask::window(4),
+        ] {
             for i in 0..10 {
-                assert!(m.visible(i, 0), "{} row {i}", m.name());
+                let diag = if let Mask::Ragged { len } = m {
+                    i.min(len - 1)
+                } else {
+                    i
+                };
+                assert!(m.visible(i, diag), "{} row {i}", m.name());
                 assert!(m.row_visible(i, 10) >= 1, "{} row {i}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn window_mask_slides_and_caps_row_visibility() {
+        let m = Mask::window(3);
+        // Early rows: plain causal (window not yet full).
+        assert!(m.visible(1, 0) && m.visible(1, 1) && !m.visible(1, 2));
+        assert_eq!(m.row_span(1, 8), (0, 2));
+        // Steady state: exactly the last 3 keys.
+        assert!(!m.visible(5, 2) && m.visible(5, 3) && m.visible(5, 5));
+        assert!(!m.visible(5, 6), "future keys stay masked");
+        assert_eq!(m.row_span(5, 8), (3, 6));
+        assert_eq!(m.row_visible(5, 8), 3);
+        // w = 1 is diagonal-only.
+        let d = Mask::window(1);
+        assert!(d.visible(4, 4) && !d.visible(4, 3) && !d.visible(4, 5));
+        assert_eq!(d.row_span(4, 8), (4, 5));
+    }
+
+    #[test]
+    fn prefix_masks_span_from_key_zero() {
+        for m in [Mask::Full, Mask::Causal, Mask::ragged(3)] {
+            for i in 0..6 {
+                let (start, end) = m.row_span(i, 6);
+                assert_eq!(start, 0, "{} row {i}", m.name());
+                assert_eq!(end, m.row_visible(i, 6), "{} row {i}", m.name());
             }
         }
     }
@@ -252,5 +330,11 @@ mod tests {
     #[should_panic(expected = "at least 1")]
     fn ragged_mask_rejects_zero() {
         Mask::ragged(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn window_mask_rejects_zero() {
+        Mask::window(0);
     }
 }

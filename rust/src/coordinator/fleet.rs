@@ -120,6 +120,11 @@ impl Fleet {
         self.shards.iter().map(SessionTable::preemptions).sum()
     }
 
+    /// Total sliding-window ring evictions across the whole fleet.
+    pub fn evictions(&self) -> u64 {
+        self.shards.iter().map(SessionTable::pool_evictions).sum()
+    }
+
     /// The shard a global session id lives on.
     pub fn shard_of(&self, id: u64) -> Option<usize> {
         self.route.get(&id).map(|r| r.shard)
@@ -167,6 +172,26 @@ impl Fleet {
         }
         Err(Error::AdmissionDeferred(format!(
             "every shard deferred the open (last: {last_defer})"
+        )))
+    }
+
+    /// Open a **sliding-window** session somewhere in the fleet (same
+    /// least-loaded placement and deferral fall-through as
+    /// [`Self::open`]): every step attends only the last `window`
+    /// cached rows, and the owning shard's pool recycles blocks that
+    /// slide wholly out of the window, so the session is exempt from
+    /// `max_len` — see [`SessionTable::open_windowed`].
+    pub fn open_windowed(&mut self, d: usize, window: usize) -> Result<u64> {
+        let mut last_defer = String::new();
+        for s in self.placement_order() {
+            match self.shards[s].open_windowed(d, window) {
+                Ok(local) => return Ok(self.register(s, local)),
+                Err(Error::AdmissionDeferred(msg)) => last_defer = msg,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::AdmissionDeferred(format!(
+            "every shard deferred the windowed open (last: {last_defer})"
         )))
     }
 
@@ -343,7 +368,12 @@ pub fn replay(trace: &Trace, cfg: FleetConfig) -> Result<Replay> {
         while let Some(sid) = pending.pop_front() {
             let ts = &trace.sessions[sid];
             let attempt = match ts.parent {
-                None => Some(fleet.open(ts.d)),
+                // A windowed trace session opens windowed; forks
+                // inherit the parent's window through the shard table.
+                None => Some(match ts.window {
+                    Some(w) => fleet.open_windowed(ts.d, w),
+                    None => fleet.open(ts.d),
+                }),
                 Some(p) => {
                     let parent = &st[p as usize];
                     match parent.global {
@@ -556,6 +586,34 @@ mod tests {
     }
 
     #[test]
+    fn windowed_open_places_and_keeps_the_ring_bounded() {
+        // Window 3 on block_size-4 shards: the ring is a single block,
+        // so a 12-step session never holds more than one block and the
+        // pool recycles the slot in place from step 4 on.
+        let mut fleet = Fleet::new(small_cfg(2)).unwrap();
+        let id = fleet.open_windowed(4, 3).unwrap();
+        let shard = fleet.shard_of(id).unwrap();
+        let w = Workload::random(12, 4, 0xF1_28);
+        for t in 0..12 {
+            let req = DecodeStepRequest {
+                session: id,
+                q: w.q[t].clone(),
+                k: w.k[t].clone(),
+                v: w.v[t].clone(),
+            };
+            let (res, _) = fleet.step_wave(std::slice::from_ref(&req));
+            res.into_iter().next().unwrap().unwrap();
+            assert!(
+                fleet.shard(shard).pool_used_blocks() <= 1,
+                "step {t}: the ring is capped at ⌈3/4⌉ = 1 block"
+            );
+        }
+        assert!(fleet.evictions() > 0, "the ring recycled rows");
+        let (_, transcript) = fleet.close(id).unwrap();
+        assert_eq!(transcript.len(), 12, "every step landed despite eviction");
+    }
+
+    #[test]
     fn step_wave_stitches_results_and_flags_unknown_sessions() {
         let mut fleet = Fleet::new(small_cfg(2)).unwrap();
         let a = fleet.open(2).unwrap();
@@ -635,6 +693,7 @@ mod tests {
             output: LenDist::Uniform { lo: 2, hi: 4 },
             fork_fraction: 0.4,
             abandon_fraction: 0.3,
+            window: None,
             seed: 0xF1EE7,
         })
         .unwrap();

@@ -13,7 +13,9 @@
 //! * [`sessions`] — decode-session management: sticky session→lane
 //!   placement over a fixed-width lane pool (admission, eviction-on-
 //!   close, lowest-lane reclamation), per-session step counters, the
-//!   context window, and **wave execution** —
+//!   context limit for unwindowed sessions (sliding-window sessions
+//!   are exempt — their pools ring-evict instead), and **wave
+//!   execution** —
 //!   [`SessionTable::step_wave`] runs one pending step per session
 //!   spatially in a single engine, one lane scope per session, backed
 //!   by paged

@@ -77,7 +77,7 @@ type Reply<T> = mpsc::Sender<std::result::Result<T, String>>;
 /// until capacity frees; `wait: false` answers immediately either way.
 enum Ingress {
     Req(AttnRequest),
-    Open { d: usize, wait: bool, reply: Reply<DecodeOpenResponse> },
+    Open { d: usize, window: Option<usize>, wait: bool, reply: Reply<DecodeOpenResponse> },
     Fork { parent: u64, wait: bool, reply: Reply<DecodeOpenResponse> },
     Step { req: DecodeStepRequest, reply: Reply<DecodeStepResponse> },
     Close { session: u64, reply: Reply<DecodeCloseResponse> },
@@ -124,7 +124,7 @@ impl ServerHandle {
         d: usize,
     ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, wait: true, reply })?;
+        self.send(Ingress::Open { d, window: None, wait: true, reply })?;
         Ok(rx)
     }
 
@@ -148,7 +148,46 @@ impl ServerHandle {
     /// waiting (capacity probes, load shedding).
     pub fn try_open_session(&self, d: usize) -> Result<DecodeOpenResponse> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, wait: false, reply })?;
+        self.send(Ingress::Open { d, window: None, wait: false, reply })?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Submit a **sliding-window** decode-session open: the session
+    /// attends only the last `window` cached rows, recycles KV blocks
+    /// that slide wholly out of the window, and is exempt from
+    /// `max_len` (see [`SessionTable::open_windowed`]). Replies once
+    /// admitted, like [`Self::submit_open`].
+    pub fn submit_open_windowed(
+        &self,
+        d: usize,
+        window: usize,
+    ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Open { d, window: Some(window), wait: true, reply })?;
+        Ok(rx)
+    }
+
+    /// Open a sliding-window decode session, blocking until it is
+    /// admitted (same waiting caveat as [`Self::open_session`]).
+    pub fn open_windowed_session(&self, d: usize, window: usize) -> Result<DecodeOpenResponse> {
+        let rx = self.submit_open_windowed(d, window)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Try to open a sliding-window session *now*: a full table or
+    /// lane pool answers immediately with the admission-deferred error
+    /// instead of waiting.
+    pub fn try_open_windowed_session(
+        &self,
+        d: usize,
+        window: usize,
+    ) -> Result<DecodeOpenResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Open { d, window: Some(window), wait: false, reply })?;
         rx.recv()
             .map_err(|_| Error::Coordinator("server dropped reply".into()))?
             .map_err(Error::Coordinator)
@@ -330,7 +369,7 @@ type QueuedStep = (DecodeStepRequest, Reply<DecodeStepResponse>, u64);
 
 /// One admission (open or fork) waiting for capacity to free.
 enum PendingAdmission {
-    Open { d: usize, reply: Reply<DecodeOpenResponse> },
+    Open { d: usize, window: Option<usize>, reply: Reply<DecodeOpenResponse> },
     Fork { parent: u64, reply: Reply<DecodeOpenResponse> },
 }
 
@@ -381,7 +420,10 @@ impl DecodeState {
         stats: &Arc<Mutex<ServingStats>>,
     ) -> Result<DecodeOpenResponse> {
         let (id, parent) = match adm {
-            PendingAdmission::Open { d, .. } => (self.table.open(*d)?, None),
+            PendingAdmission::Open { d, window: None, .. } => (self.table.open(*d)?, None),
+            PendingAdmission::Open { d, window: Some(w), .. } => {
+                (self.table.open_windowed(*d, *w)?, None)
+            }
             PendingAdmission::Fork { parent, .. } => {
                 (self.table.fork(*parent)?, Some(*parent))
             }
@@ -694,8 +736,8 @@ fn handle_ingress(
             enqueue(req, batcher, epoch, registry, executor, stats);
             false
         }
-        Ingress::Open { d, wait, reply } => {
-            let adm = PendingAdmission::Open { d, reply };
+        Ingress::Open { d, window, wait, reply } => {
+            let adm = PendingAdmission::Open { d, window, reply };
             admit_or_requeue(decode, adm, wait, stats);
             false
         }

@@ -34,8 +34,19 @@
 //! [`Error::AdmissionDeferred`] — the typed signal that the request is
 //! valid and should be retried once capacity frees. The serving loop
 //! requeues deferred work; only genuine errors (unknown session,
-//! sticky-class violation, context window, a session too large for the
-//! whole pool) hard-fail.
+//! sticky-class violation, an unwindowed session stepping past
+//! `max_len`, a session too large for the whole pool) hard-fail.
+//!
+//! **Sliding windows.** `open_windowed(d, w)` admits a session whose
+//! attention is the sliding window of
+//! [`Mask::Window`](crate::attention::workload::Mask::Window): each
+//! step attends only the last `w` cached rows, and the paged table
+//! recycles blocks whose rows slide wholly out of the window (ring
+//! eviction in [`crate::runtime::kvcache`]). The window is an
+//! **attention semantic**, not an admission limit: a windowed session
+//! decodes indefinitely — `max_len` does not apply — while holding at
+//! most `⌈w / block_size⌉` blocks, so arbitrarily long sessions stay
+//! admissible against a finite pool.
 //!
 //! **Preemption.** When a step cannot get a block, the table swaps out
 //! a victim session (the resident one with the most exclusively-owned
@@ -68,7 +79,10 @@ pub struct SessionConfig {
     pub lanes: usize,
     /// Maximum concurrently open sessions (admission control).
     pub max_sessions: usize,
-    /// Maximum tokens per session (the context window).
+    /// Maximum tokens an *unwindowed* session may decode. Sessions
+    /// opened with [`SessionTable::open_windowed`] are exempt: their
+    /// window bounds what a step *attends* (enforced by ring
+    /// eviction), not how long the session may run.
     pub max_len: usize,
     /// Scheduler mode pinned onto every step/wave engine (`None` = the
     /// engine default, i.e. `SDPA_SCHED`). Differential tests pin both.
@@ -164,6 +178,26 @@ impl SessionTable {
     /// pinned to the lowest free lane (closed sessions' lanes are
     /// reclaimed).
     pub fn open(&mut self, d: usize) -> Result<u64> {
+        self.open_with(d, None)
+    }
+
+    /// Open a **sliding-window** session for head dimension `d`: every
+    /// step attends only the last `window` cached rows, and the paged
+    /// table recycles blocks that slide wholly out of the window, so
+    /// the session never holds more than `⌈window / block_size⌉`
+    /// blocks and `max_len` does not apply (the window is an attention
+    /// semantic, not an admission limit). Admission control and lane
+    /// placement match [`Self::open`].
+    pub fn open_windowed(&mut self, d: usize, window: usize) -> Result<u64> {
+        if window == 0 {
+            return Err(Error::Coordinator(
+                "a sliding-window session needs a window ≥ 1".into(),
+            ));
+        }
+        self.open_with(d, Some(window))
+    }
+
+    fn open_with(&mut self, d: usize, window: Option<usize>) -> Result<u64> {
         if d == 0 {
             return Err(Error::Coordinator(
                 "decode session needs a head dimension ≥ 1".into(),
@@ -172,7 +206,10 @@ impl SessionTable {
         let lane = self.admit_slot()?;
         let id = self.next_id;
         self.next_id += 1;
-        let mut session = PagedDecodeSession::new(self.cfg.kind, d);
+        let mut session = match window {
+            Some(w) => PagedDecodeSession::new_windowed(self.cfg.kind, d, w),
+            None => PagedDecodeSession::new(self.cfg.kind, d),
+        };
         if let Some(mode) = self.cfg.mode {
             session.set_scheduler_mode(mode);
         }
@@ -302,6 +339,18 @@ impl SessionTable {
         self.preemptions
     }
 
+    /// Rows recycled by sliding-window ring eviction so far, across
+    /// every session on the shared pool — monotonic counter.
+    pub fn pool_evictions(&self) -> u64 {
+        self.pool.evictions()
+    }
+
+    /// The sliding window a session was opened with (`Some(None)` for
+    /// a full-context session, `None` for an unknown id).
+    pub fn window_of(&self, id: u64) -> Option<Option<usize>> {
+        self.sessions.get(&id).map(|e| e.session.window())
+    }
+
     /// Validate one step request against the table and its session;
     /// returns the session's class.
     fn admit_step(&self, req: &DecodeStepRequest) -> Result<DecodeClass> {
@@ -315,7 +364,10 @@ impl SessionTable {
                 req.session, entry.class, class
             )));
         }
-        if entry.session.len() >= self.cfg.max_len {
+        // A sliding-window session is exempt from `max_len`: its
+        // window caps what a step attends (and what the ring holds),
+        // not how long the session may run.
+        if entry.session.window().is_none() && entry.session.len() >= self.cfg.max_len {
             return Err(Error::Coordinator(format!(
                 "session {} exceeded the context window ({} tokens)",
                 req.session, self.cfg.max_len
@@ -369,9 +421,12 @@ impl SessionTable {
 
     /// Hard cap: a cache of `rows` rows that cannot fit the pool even
     /// alone can never be served — that is a configuration error, not a
-    /// deferral (deferring it would livelock the retry loop).
+    /// deferral (deferring it would livelock the retry loop). A
+    /// windowed session only ever needs its ring
+    /// (`⌈window / block_size⌉` blocks), whatever its logical length.
     fn check_pool_fits(&self, id: u64, rows: usize) -> Result<()> {
-        let needed = self.pool.blocks_for(rows);
+        let window = self.sessions.get(&id).and_then(|e| e.session.window());
+        let needed = self.pool.blocks_for_windowed(rows, window);
         if needed > self.pool.capacity() {
             return Err(Error::Coordinator(format!(
                 "session {id} needs {needed} blocks for {rows} rows; the kv-cache \
@@ -481,8 +536,9 @@ impl SessionTable {
     /// step per session, all staged steps executed spatially in **one
     /// engine** (one lane scope per session, sticky lane indices), with
     /// per-request results in input order. Requests that fail admission
-    /// (unknown session, sticky-class violation, context window, a
-    /// duplicate session in the wave, bad shapes) error individually
+    /// (unknown session, sticky-class violation, context window on an
+    /// unwindowed session, a duplicate session in the wave, bad
+    /// shapes) error individually
     /// without disturbing the rest of the wave; requests the block pool
     /// cannot currently hold return [`Error::AdmissionDeferred`]
     /// individually for the caller to requeue. Staged block
@@ -734,6 +790,48 @@ mod tests {
         }
         let err = table.step(req(c, vec![0.1, 0.2], vec![0.3, 0.4], vec![0.5, 0.6]));
         assert!(matches!(err, Err(Error::Coordinator(msg)) if msg.contains("context window")));
+    }
+
+    #[test]
+    fn windowed_sessions_outlive_max_len_in_a_bounded_ring() {
+        // A window-3 session decodes 4× the table's `max_len` while its
+        // ring never exceeds ⌈3/2⌉ = 2 blocks, and the transcript stays
+        // bit-identical to the contiguous windowed chain.
+        let n = 32;
+        let w = Workload::random(n, 4, 0x317D0);
+        let mut table = SessionTable::new(SessionConfig {
+            max_len: 8,
+            kv: KvCacheConfig {
+                block_size: 2,
+                num_blocks: 4,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let id = table.open_windowed(4, 3).unwrap();
+        assert_eq!(table.window_of(id), Some(Some(3)));
+        for t in 0..n {
+            let resp = table.step(wreq(&w, id, t)).unwrap();
+            assert_eq!(resp.step, t as u64, "max_len must not apply");
+            assert!(
+                table.blocks_of(id).unwrap() <= 2,
+                "step {t}: the ring holds at most ⌈W/block_size⌉ blocks"
+            );
+        }
+        assert!(table.pool_evictions() > 0, "the ring recycled rows");
+        let transcript = table.close(id).unwrap();
+        let mut solo = DecodeSession::new_windowed(DecodeKind::MemoryFree, 4, 3);
+        for t in 0..n {
+            solo.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        assert_eq!(
+            &transcript,
+            solo.outputs(),
+            "windowed paged transcript ≡ contiguous windowed chain bitwise"
+        );
+        assert_eq!(table.pool_used_blocks(), 0, "ring blocks reclaimed");
+        assert!(table.open_windowed(4, 0).is_err(), "window 0 rejected");
     }
 
     #[test]

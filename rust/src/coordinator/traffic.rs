@@ -19,6 +19,10 @@
 //! * Abandon-mid-decode behavior: a fraction of sessions stop after a
 //!   pinned number of output tokens (the prompt always completes),
 //!   modeling clients that navigate away.
+//! * Sliding-window sessions: an optional trace-wide window `W` makes
+//!   every session (forks included — they inherit it) attend only its
+//!   last `W` cached rows, exercising ring eviction through the whole
+//!   fleet path.
 //!
 //! A [`Trace`] is pure data: deterministic per seed (byte-identical
 //! via [`Trace::encode`] — the contract `tests/fleet_conformance.rs`
@@ -167,6 +171,9 @@ pub struct TrafficConfig {
     pub fork_fraction: f64,
     /// Fraction of sessions that abandon mid-decode (0.0–1.0).
     pub abandon_fraction: f64,
+    /// `Some(w)`: every session decodes under a sliding window of `w`
+    /// rows (forks inherit it); `None`: full-context sessions.
+    pub window: Option<usize>,
     /// Master seed: fixes arrivals, lengths, fork targets, abandon
     /// points, and every session's Q/K/V rows.
     pub seed: u64,
@@ -186,6 +193,7 @@ impl Default for TrafficConfig {
             output: LenDist::Uniform { lo: 2, hi: 8 },
             fork_fraction: 0.25,
             abandon_fraction: 0.15,
+            window: None,
             seed: 0x7AFF_1C,
         }
     }
@@ -216,6 +224,10 @@ pub struct TraceSession {
     /// `Some(k)`: the client abandons after `k` output tokens
     /// (1 ≤ k < output_len); the prompt always completes.
     pub abandon_after: Option<usize>,
+    /// `Some(w)`: the session attends only its last `w` cached rows (a
+    /// sliding window; forks inherit the parent's). `None`: full
+    /// context.
+    pub window: Option<usize>,
     /// Per-session row seed (derives the session's own Q/K/V rows).
     pub seed: u64,
 }
@@ -316,6 +328,11 @@ impl Trace {
                 cfg.fork_fraction, cfg.abandon_fraction
             )));
         }
+        if cfg.window == Some(0) {
+            return Err(Error::Usage(
+                "traffic window must be ≥ 1 when set".into(),
+            ));
+        }
         cfg.arrivals.validate()?;
         let mut rng = SplitMix64::new(cfg.seed);
 
@@ -378,6 +395,13 @@ impl Trace {
             if parent.is_none() {
                 fork_targets.push(id);
             }
+            // Forks inherit the parent's window (the shard-table fork
+            // clones the windowed block table, so the trace pins the
+            // same semantics the replay will execute).
+            let window = match parent {
+                Some(p) => sessions[p as usize].window,
+                None => cfg.window,
+            };
             sessions.push(TraceSession {
                 id,
                 arrival,
@@ -387,6 +411,7 @@ impl Trace {
                 prompt_len,
                 output_len,
                 abandon_after,
+                window,
                 seed: rng.next_u64(),
             });
         }
@@ -448,10 +473,15 @@ impl Trace {
                 Some(k) => k.to_string(),
                 None => "-".to_string(),
             };
+            let win = match ts.window {
+                Some(w) => w.to_string(),
+                None => "-".to_string(),
+            };
             s.push_str(&format!(
-                "s{} t={} parent={} fork_at={} prompt={} out={} abandon={} seed={:#018x}\n",
+                "s{} t={} parent={} fork_at={} prompt={} out={} abandon={} win={} \
+                 seed={:#018x}\n",
                 ts.id, ts.arrival, parent, ts.fork_at, ts.prompt_len, ts.output_len,
-                abandon, ts.seed
+                abandon, win, ts.seed
             ));
         }
         s
@@ -483,11 +513,16 @@ impl Trace {
     /// pinned prefix first, then the child's own rows; the returned
     /// transcript holds only the child's own steps (matching what the
     /// fleet serves it). Abandoned sessions truncate at the abandon
-    /// point.
+    /// point. A windowed session's oracle is a windowed
+    /// [`DecodeSession`], so the fleet's ring-evicting paged path is
+    /// compared against the contiguous sliding-window chain.
     pub fn oracle_transcripts(&self, kind: DecodeKind) -> Result<HashMap<u64, Matrix>> {
         let mut out = HashMap::new();
         for s in &self.sessions {
-            let mut session = DecodeSession::new(kind, self.d);
+            let mut session = match s.window {
+                Some(w) => DecodeSession::new_windowed(kind, self.d, w),
+                None => DecodeSession::new(kind, self.d),
+            };
             if let Some(p) = s.parent {
                 let parent = &self.sessions[p as usize];
                 let prefix = parent.rows();
@@ -673,6 +708,36 @@ mod tests {
             );
             assert!(tr.iter().all(|row| row.len() == trace.d));
         }
+    }
+
+    #[test]
+    fn windowed_traces_pin_and_inherit_the_window() {
+        let cfg = TrafficConfig {
+            sessions: 12,
+            fork_fraction: 0.5,
+            window: Some(3),
+            ..TrafficConfig::default()
+        };
+        let trace = Trace::generate(&cfg).unwrap();
+        assert!(
+            trace.sessions.iter().all(|s| s.window == Some(3)),
+            "every session (forks included) carries the trace window"
+        );
+        assert!(trace.encode().contains(" win=3 "), "window encoded");
+        assert_eq!(
+            trace.encode(),
+            Trace::generate(&cfg).unwrap().encode(),
+            "window token joins the byte-determinism contract"
+        );
+        let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
+        for s in &trace.sessions {
+            assert_eq!(oracle[&s.id].len(), s.steps());
+        }
+        let bad = TrafficConfig {
+            window: Some(0),
+            ..TrafficConfig::default()
+        };
+        assert!(matches!(Trace::generate(&bad), Err(Error::Usage(_))));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! | [`serving::run`] | extension: serving lane-pool throughput vs lane count |
 //! | [`paging::run`] | extension: paged KV cache — prefix sharing + preemption vs pool size |
 //! | [`traffic::run`] | extension: trace-driven fleet replay — throughput/TTFT/ITL vs offered load and shard count |
+//! | [`window::run`] | extension: sliding-window eviction — pool occupancy/evictions vs window size |
 
 pub mod ablation;
 pub mod decode;
@@ -26,6 +27,7 @@ pub mod scaling;
 pub mod serving;
 pub mod table1;
 pub mod traffic;
+pub mod window;
 
 use crate::Result;
 
@@ -51,5 +53,7 @@ pub fn run_all(n: usize, d: usize) -> Result<()> {
     paging::run(&[64, 16, 8], 4, 8, 4, d.min(16), 2)?.table().print();
     println!();
     traffic::run(&[2.0], &[1, 2], 8, d.min(8), 0x7A11)?.table().print();
+    println!();
+    window::run(&[8, 4, 2], 3, 12, d.min(8), 2)?.table().print();
     Ok(())
 }

@@ -175,6 +175,7 @@ pub fn run(
             output: LenDist::Uniform { lo: 2, hi: 8 },
             fork_fraction: 0.25,
             abandon_fraction: 0.2,
+            window: None,
             seed: seed ^ load.to_bits(),
         };
         let trace = Trace::generate(&cfg)?;

@@ -1,0 +1,336 @@
+//! Sliding-window eviction study: pool pressure vs window size.
+//!
+//! Serving workload: `sessions` independent sessions each decode
+//! `steps` tokens through continuous-batching waves on one shared
+//! block pool sized so the *unwindowed* baseline just fits. The study
+//! runs that baseline first (window "∞"), then the same workload under
+//! each sliding window W, and reports per row:
+//!
+//! * **blocks/session** — the per-session block ceiling,
+//!   `min(⌈steps/bs⌉, ⌈W/bs⌉)`: unwindowed caches grow with the
+//!   sequence, windowed rings are flat;
+//! * **peak occupancy** — high-water pool blocks over capacity. The
+//!   baseline approaches 1.0; windowed rows stay near
+//!   `sessions · ⌈W/bs⌉ / pool`;
+//! * **evictions** — rows recycled by ring eviction (0 for the
+//!   baseline, `sessions · (steps − ring rows)` once W ≪ steps);
+//! * **deferrals** — wave steps deferred and retried. Windowing trades
+//!   pool pressure for eviction, so these stay 0 here;
+//! * **bit-identical** — every transcript equals the contiguous
+//!   windowed [`DecodeSession`] chain bit for bit. Eviction may drop
+//!   *cache* rows, never change what a step computes.
+//!
+//! `benches/window_throughput.rs` is the wall-clock twin emitting
+//! `BENCH_window.json` for CI; `tests/windowed_conformance.rs` asserts
+//! the same flat-ring and bit-identity properties differentially.
+
+use crate::attention::decode::{DecodeKind, DecodeSession};
+use crate::attention::workload::Workload;
+use crate::coordinator::{DecodeStepRequest, SessionConfig, SessionTable};
+use crate::report::Table;
+use crate::runtime::kvcache::KvCacheConfig;
+use crate::{Error, Result};
+
+/// One window-size measurement. `window: None` is the unwindowed
+/// baseline row.
+#[derive(Clone, Debug)]
+pub struct WindowPoint {
+    /// Sliding window for this run (`None` = unwindowed baseline).
+    pub window: Option<usize>,
+    /// Per-session block ceiling: `min(⌈steps/bs⌉, ⌈W/bs⌉)`.
+    pub ring_blocks: usize,
+    /// High-water blocks in use across the run.
+    pub peak_used_blocks: usize,
+    /// Rows recycled by ring eviction across the run.
+    pub evictions: u64,
+    /// Wave steps deferred and retried.
+    pub deferrals: u64,
+    /// Every transcript bitwise equal to the contiguous (windowed)
+    /// chain.
+    pub bit_identical: bool,
+}
+
+/// Full window-size sweep at one serving shape.
+#[derive(Clone, Debug)]
+pub struct WindowResult {
+    /// Concurrent sessions.
+    pub sessions: usize,
+    /// Tokens decoded per session.
+    pub steps: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Rows per block.
+    pub block_size: usize,
+    /// Shared pool capacity (blocks) every run used.
+    pub pool_blocks: usize,
+    /// Baseline row first, then one row per window in the given order.
+    pub points: Vec<WindowPoint>,
+}
+
+impl WindowResult {
+    /// Look up one point (`None` = the baseline row).
+    pub fn point(&self, window: Option<usize>) -> Option<&WindowPoint> {
+        self.points.iter().find(|p| p.window == window)
+    }
+
+    /// Peak occupancy over capacity for one point (0.0–1.0].
+    pub fn peak_occupancy(&self, p: &WindowPoint) -> f64 {
+        p.peak_used_blocks as f64 / self.pool_blocks as f64
+    }
+
+    /// Render the study table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Sliding-window eviction vs window size \
+                 ({} sessions, steps={}, d={}, pool={}x{})",
+                self.sessions, self.steps, self.d, self.pool_blocks, self.block_size
+            ),
+            &[
+                "window",
+                "blocks/session",
+                "peak occupancy",
+                "evictions",
+                "deferrals",
+                "bit-identical",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                match p.window {
+                    None => "∞".into(),
+                    Some(w) => w.to_string(),
+                },
+                p.ring_blocks.to_string(),
+                format!("{:.2}", self.peak_occupancy(p)),
+                p.evictions.to_string(),
+                p.deferrals.to_string(),
+                if p.bit_identical { "YES".into() } else { "NO".into() },
+            ]);
+        }
+        t
+    }
+}
+
+/// Serve one full run — `sessions` sessions, `steps` waves — on a
+/// fresh [`SessionTable`], all sessions sharing one pool, with the
+/// serving loop's deferred-first rotation. This is the **single** run
+/// driver: the study ([`run`]) and the wall-clock bench twin
+/// (`benches/window_throughput.rs`) both call it, so the two can never
+/// diverge. Workloads are seeded deterministically from the shape.
+pub fn run_point(
+    window: Option<usize>,
+    sessions: usize,
+    steps: usize,
+    d: usize,
+    block_size: usize,
+    pool_blocks: usize,
+) -> Result<WindowPoint> {
+    if sessions == 0 || steps == 0 || d == 0 || block_size == 0 {
+        return Err(Error::Usage(format!(
+            "window study needs sessions/steps/d/block_size ≥ 1 \
+             (got {sessions}/{steps}/{d}/{block_size})"
+        )));
+    }
+    if window == Some(0) {
+        return Err(Error::Usage("window size must be ≥ 1".into()));
+    }
+    let ws: Vec<Workload> = (0..sessions)
+        .map(|s| Workload::random(steps, d, 0x57D0_0000 + s as u64))
+        .collect();
+    let mut table = SessionTable::new(SessionConfig {
+        lanes: sessions,
+        max_sessions: sessions,
+        max_len: steps,
+        kv: KvCacheConfig {
+            block_size,
+            num_blocks: pool_blocks,
+        },
+        ..SessionConfig::default()
+    })?;
+    let ids = (0..sessions)
+        .map(|_| match window {
+            Some(w) => table.open_windowed(d, w),
+            None => table.open(d),
+        })
+        .collect::<Result<Vec<u64>>>()?;
+
+    // One step per session per wave, deferred sessions first next wave
+    // (the serving loop's rotation).
+    let mut cursors = vec![0usize; sessions];
+    let mut deferred: Vec<u64> = Vec::new();
+    let mut peak_used = 0usize;
+    let mut deferrals = 0u64;
+    while cursors.iter().any(|&c| c < steps) {
+        let mut order: Vec<usize> = (0..sessions).collect();
+        order.sort_by_key(|&s| (!deferred.contains(&ids[s]), s));
+        deferred.clear();
+        let mut reqs = Vec::new();
+        let mut members = Vec::new();
+        for &s in &order {
+            if cursors[s] < steps {
+                let t = cursors[s];
+                reqs.push(DecodeStepRequest {
+                    session: ids[s],
+                    q: ws[s].q[t].clone(),
+                    k: ws[s].k[t].clone(),
+                    v: ws[s].v[t].clone(),
+                });
+                members.push(s);
+            }
+        }
+        let results = table.step_wave(&reqs);
+        peak_used = peak_used.max(table.pool_used_blocks());
+        let mut progressed = false;
+        for (res, s) in results.into_iter().zip(members) {
+            match res {
+                Ok(_) => {
+                    cursors[s] += 1;
+                    progressed = true;
+                }
+                Err(Error::AdmissionDeferred(_)) => {
+                    deferrals += 1;
+                    deferred.push(ids[s]);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if !progressed {
+            return Err(Error::Coordinator(format!(
+                "window study stalled at window {window:?}"
+            )));
+        }
+    }
+    let evictions = table.pool_evictions();
+
+    // Bit-identity against the contiguous (windowed) chains.
+    let mut bit_identical = true;
+    for (s, &id) in ids.iter().enumerate() {
+        let transcript = table.close(id).expect("session open");
+        let mut chain = match window {
+            Some(w) => DecodeSession::new_windowed(DecodeKind::MemoryFree, d, w),
+            None => DecodeSession::new(DecodeKind::MemoryFree, d),
+        };
+        for t in 0..steps {
+            chain.step(ws[s].q[t].clone(), ws[s].k[t].clone(), ws[s].v[t].clone())?;
+        }
+        bit_identical &= transcript == *chain.outputs();
+    }
+
+    let ring_blocks = match window {
+        Some(w) => steps.div_ceil(block_size).min(w.div_ceil(block_size)),
+        None => steps.div_ceil(block_size),
+    };
+    Ok(WindowPoint {
+        window,
+        ring_blocks,
+        peak_used_blocks: peak_used,
+        evictions,
+        deferrals,
+        bit_identical,
+    })
+}
+
+/// Run the sweep: the unwindowed baseline first, then every window in
+/// `windows`, all against one pool sized so the baseline just fits
+/// (`sessions · ⌈steps/block_size⌉ + 2` blocks). Every window must be
+/// ≥ 1.
+pub fn run(
+    windows: &[usize],
+    sessions: usize,
+    steps: usize,
+    d: usize,
+    block_size: usize,
+) -> Result<WindowResult> {
+    if sessions == 0 || steps == 0 || d == 0 || block_size == 0 {
+        return Err(Error::Usage(format!(
+            "window study needs sessions/steps/d/block_size ≥ 1 \
+             (got {sessions}/{steps}/{d}/{block_size})"
+        )));
+    }
+    if windows.is_empty() {
+        return Err(Error::Usage(
+            "window study needs at least one window size".into(),
+        ));
+    }
+    if windows.contains(&0) {
+        return Err(Error::Usage("window size must be ≥ 1".into()));
+    }
+    let pool_blocks = sessions * steps.div_ceil(block_size) + 2;
+    let mut points = Vec::new();
+    for window in std::iter::once(None).chain(windows.iter().map(|&w| Some(w))) {
+        points.push(run_point(window, sessions, steps, d, block_size, pool_blocks)?);
+    }
+    Ok(WindowResult {
+        sessions,
+        steps,
+        d,
+        block_size,
+        pool_blocks,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windowed_rows_stay_flat_while_the_baseline_fills_the_pool() {
+        let r = run(&[4, 2], 3, 12, 4, 2).unwrap();
+        // pool = 3 · ⌈12/2⌉ + 2 = 20 blocks.
+        assert_eq!(r.pool_blocks, 20);
+        let base = r.point(None).unwrap();
+        assert_eq!(base.ring_blocks, 6, "baseline grows with the sequence");
+        assert_eq!(base.peak_used_blocks, 18, "baseline fills its demand");
+        assert_eq!(base.evictions, 0, "no ring without a window");
+        assert!(base.bit_identical);
+        for w in [4usize, 2] {
+            let p = r.point(Some(w)).unwrap();
+            assert_eq!(p.ring_blocks, w.div_ceil(2), "ring is ⌈W/bs⌉ blocks");
+            assert!(
+                p.peak_used_blocks <= 3 * p.ring_blocks,
+                "W={w}: occupancy capped at sessions · ring"
+            );
+            // Ring rows = ⌈W/bs⌉ · bs; each session evicts the rest.
+            let ring_rows = w.div_ceil(2) * 2;
+            assert_eq!(p.evictions, (3 * (12 - ring_rows)) as u64, "W={w}");
+            assert_eq!(p.deferrals, 0, "eviction replaces pool pressure");
+            assert!(p.bit_identical, "W={w}: eviction never changes outputs");
+        }
+    }
+
+    #[test]
+    fn same_shape_same_numbers() {
+        let key = |r: &WindowResult| {
+            r.points
+                .iter()
+                .map(|p| (p.window, p.peak_used_blocks, p.evictions, p.deferrals))
+                .collect::<Vec<_>>()
+        };
+        let a = run(&[3], 2, 8, 3, 2).unwrap();
+        let b = run(&[3], 2, 8, 3, 2).unwrap();
+        assert_eq!(key(&a), key(&b), "the sweep is deterministic");
+    }
+
+    #[test]
+    fn table_labels_the_baseline_and_every_window() {
+        let r = run(&[5], 2, 6, 3, 2).unwrap();
+        let text = r.table().render();
+        assert!(text.contains("∞"), "{text}");
+        assert!(text.contains("bit-identical"), "{text}");
+        assert!(r.point(Some(5)).is_some() && r.point(Some(7)).is_none());
+    }
+
+    #[test]
+    fn degenerate_args_rejected() {
+        assert!(matches!(run(&[], 2, 4, 2, 2), Err(Error::Usage(_))));
+        assert!(matches!(run(&[0], 2, 4, 2, 2), Err(Error::Usage(_))));
+        assert!(matches!(run(&[2], 0, 4, 2, 2), Err(Error::Usage(_))));
+        assert!(matches!(run(&[2], 2, 0, 2, 2), Err(Error::Usage(_))));
+        assert!(matches!(
+            run_point(Some(0), 2, 4, 2, 2, 8),
+            Err(Error::Usage(_))
+        ));
+    }
+}

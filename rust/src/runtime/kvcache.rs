@@ -30,11 +30,25 @@
 //!   restores them bit-exactly. Exhaustion surfaces as
 //!   [`Error::AdmissionDeferred`] so callers requeue instead of
 //!   hard-failing.
+//! * **Sliding-window eviction** — a table opened with
+//!   [`BlockTable::windowed`] serves `Mask::Window`-style attention
+//!   (each step sees only the last `W` rows), so rows older than the
+//!   window are dead weight. The table becomes a **ring** over
+//!   `B = ⌈W/block_size⌉` blocks: logical row `r` lives at slot
+//!   `r % (B·block_size)`, appends past the ring capacity *overwrite*
+//!   the oldest resident row in place (each overwrite is one eviction,
+//!   counted on the pool), and `len` keeps growing without bound while
+//!   occupancy stays ≤ B blocks forever. An overwrite landing on a
+//!   fork-shared block copies the whole block first (the ring
+//!   copy-on-write), so sharers keep serving the original; every
+//!   append variant is transactional via [`AppendUndo`].
 //!
-//! Invariants (fuzzed by `tests/paged_conformance.rs`): a block is
-//! either on the free list with refcount 0 or referenced by exactly
-//! `refcount` tables; occupancy never exceeds capacity; releasing the
-//! last reference frees the block (no leak, no double-free).
+//! Invariants (fuzzed by `tests/paged_conformance.rs` and
+//! `tests/windowed_conformance.rs`): a block is either on the free
+//! list with refcount 0 or referenced by exactly `refcount` tables;
+//! occupancy never exceeds capacity; a windowed table never holds more
+//! than ⌈W/block_size⌉ blocks; releasing the last reference frees the
+//! block (no leak, no double-free).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -76,19 +90,45 @@ struct Block {
 /// A table owns pool references, so it must be returned to the pool
 /// ([`BlockPool::release`]) before being dropped; the pool audits this
 /// in tests via refcount accounting.
+///
+/// A **windowed** table ([`BlockTable::windowed`]) additionally caps
+/// its footprint: once `len` reaches the ring capacity
+/// `C = ⌈W/block_size⌉ · block_size`, logical row `r` lives at slot
+/// `r % C` and appends overwrite the oldest resident row. `len` stays
+/// the *logical* transcript length (it grows without bound); only the
+/// last `min(len, C)` rows are resident and only the last
+/// `min(len, W)` are attention-visible.
 #[derive(Clone, Debug, Default)]
 pub struct BlockTable {
     blocks: Vec<usize>,
     len: usize,
+    window: Option<usize>,
 }
 
 impl BlockTable {
-    /// Empty table (no blocks, no rows).
+    /// Empty table (no blocks, no rows, unbounded).
     pub fn new() -> Self {
         BlockTable::default()
     }
 
-    /// Total cached rows.
+    /// Empty sliding-window table: appends past the ring capacity
+    /// evict the oldest row, so the table never holds more than
+    /// ⌈w/block_size⌉ blocks. `w` must be ≥ 1.
+    pub fn windowed(w: usize) -> Self {
+        assert!(w >= 1, "window needs a width of at least 1");
+        BlockTable {
+            window: Some(w),
+            ..BlockTable::default()
+        }
+    }
+
+    /// Sliding-window width, if any.
+    pub fn window(&self) -> Option<usize> {
+        self.window
+    }
+
+    /// Total *logical* rows ever appended (for a windowed table this
+    /// exceeds the resident rows once the ring wraps).
     pub fn len(&self) -> usize {
         self.len
     }
@@ -103,18 +143,55 @@ impl BlockTable {
         self.blocks.len()
     }
 
-    /// The block ids, in row order.
+    /// The block ids, in row order (slot order for a wrapped ring).
     pub fn block_ids(&self) -> &[usize] {
         &self.blocks
     }
 
+    /// Ring capacity in blocks (⌈W/block_size⌉), `None` when unbounded.
+    pub fn ring_blocks(&self, block_size: usize) -> Option<usize> {
+        self.window.map(|w| w.div_ceil(block_size))
+    }
+
+    /// Ring capacity in row slots, `None` when unbounded.
+    pub fn ring_rows(&self, block_size: usize) -> Option<usize> {
+        self.ring_blocks(block_size).map(|b| b * block_size)
+    }
+
+    /// Rows currently resident: `len` for an unbounded table, at most
+    /// the ring capacity for a windowed one.
+    pub fn resident_rows(&self, block_size: usize) -> usize {
+        match self.ring_rows(block_size) {
+            Some(c) => self.len.min(c),
+            None => self.len,
+        }
+    }
+
+    /// Rows the attention step may see: `len`, capped at the window.
+    pub fn visible_rows(&self) -> usize {
+        match self.window {
+            Some(w) => self.len.min(w),
+            None => self.len,
+        }
+    }
+
     /// Physical address of logical row `row` as `(table slot, offset)`
-    /// — the walk the gather source performs.
+    /// — the walk the gather source performs. `None` for rows not yet
+    /// appended or already evicted from a windowed ring.
     pub fn locate(&self, row: usize, block_size: usize) -> Option<(usize, usize)> {
         if row >= self.len {
             return None;
         }
-        Some((row / block_size, row % block_size))
+        match self.ring_rows(block_size) {
+            Some(c) => {
+                if row + c < self.len {
+                    return None; // evicted (overwritten by row + c)
+                }
+                let s = row % c;
+                Some((s / block_size, s % block_size))
+            }
+            None => Some((row / block_size, row % block_size)),
+        }
     }
 }
 
@@ -124,15 +201,20 @@ impl BlockTable {
 /// cycle are bit-identical to an unpressured run.
 #[derive(Clone, Debug)]
 pub struct SwappedKv {
-    /// Key rows, in cache order.
+    /// Resident key rows, in logical order (oldest resident first).
     pub keys: Vec<Vec<f32>>,
-    /// Value rows, in cache order.
+    /// Resident value rows, in logical order.
     pub values: Vec<Vec<f32>>,
+    /// Logical cache length at swap time. Equals `rows()` for an
+    /// unbounded table; exceeds it once a windowed ring has evicted
+    /// early rows ([`BlockPool::swap_in`] uses it to restore the exact
+    /// ring alignment and step count).
+    pub len: usize,
 }
 
 impl SwappedKv {
-    /// Rows held.
-    pub fn len(&self) -> usize {
+    /// Resident rows held by the swap.
+    pub fn rows(&self) -> usize {
         self.keys.len()
     }
 
@@ -165,6 +247,66 @@ impl KvView<'_> {
     }
 }
 
+/// What one [`BlockPool::append_row`] did, and everything needed to
+/// take it back. A staged decode step holds this token until the step
+/// resolves: [`BlockPool::commit_append`] finalises it,
+/// [`BlockPool::undo_append`] reverts the table, the refcounts, and
+/// the pool occupancy to exactly the pre-append state.
+#[derive(Clone, Debug)]
+pub enum AppendUndo {
+    /// Plain append into a private (or fresh) tail block.
+    Push,
+    /// The append copy-on-wrote a shared tail: the table now links a
+    /// private clone and **retains its reference on the original** (so
+    /// no interleaved release/preemption can free or recycle it) until
+    /// the step resolves — commit drops the retained reference, undo
+    /// swaps the original back in.
+    Cow {
+        /// The shared block the table stopped referencing.
+        orig: usize,
+    },
+    /// Ring overwrite: a windowed table past its ring capacity evicted
+    /// the oldest resident row in place. The evicted row rides along
+    /// so an undo can put it back.
+    Overwrite {
+        /// The overwritten key row.
+        prev_k: Vec<f32>,
+        /// The overwritten value row.
+        prev_v: Vec<f32>,
+    },
+    /// Ring overwrite onto a fork-shared block: the whole block was
+    /// copied first (sharers keep the original, which still holds the
+    /// evicted row), then the clone's slot overwritten. As with
+    /// [`AppendUndo::Cow`], the original's reference is retained until
+    /// the step resolves.
+    CowOverwrite {
+        /// The shared block the table stopped referencing.
+        orig: usize,
+        /// Index of the replaced block within the table.
+        index: usize,
+    },
+}
+
+impl AppendUndo {
+    /// The shared block a copy-on-write retained, if this append made
+    /// one (test/audit hook).
+    pub fn cow_origin(&self) -> Option<usize> {
+        match self {
+            AppendUndo::Cow { orig } | AppendUndo::CowOverwrite { orig, .. } => Some(*orig),
+            _ => None,
+        }
+    }
+
+    /// Whether committing this append evicts a row from a windowed
+    /// ring.
+    pub fn evicts(&self) -> bool {
+        matches!(
+            self,
+            AppendUndo::Overwrite { .. } | AppendUndo::CowOverwrite { .. }
+        )
+    }
+}
+
 /// The bounded global block pool.
 #[derive(Debug)]
 pub struct BlockPool {
@@ -175,6 +317,9 @@ pub struct BlockPool {
     /// swap-in restores a whole cache block by block, so allocation
     /// must not be a linear free-list scan).
     free: BinaryHeap<Reverse<usize>>,
+    /// Committed sliding-window evictions (ring overwrites) since the
+    /// pool was created.
+    evictions: u64,
 }
 
 impl BlockPool {
@@ -189,6 +334,7 @@ impl BlockPool {
             blocks: vec![Block::default(); cfg.num_blocks],
             free: (0..cfg.num_blocks).map(Reverse).collect(),
             cfg,
+            evictions: 0,
         })
     }
 
@@ -229,6 +375,23 @@ impl BlockPool {
         rows.div_ceil(self.cfg.block_size)
     }
 
+    /// Blocks a table with sliding window `window` needs at `rows`
+    /// logical rows: the plain count, capped at the ring capacity
+    /// ⌈W/block_size⌉ — a windowed session's footprint is O(W) no
+    /// matter how long it runs.
+    pub fn blocks_for_windowed(&self, rows: usize, window: Option<usize>) -> usize {
+        match window {
+            Some(w) => self.blocks_for(rows).min(w.div_ceil(self.cfg.block_size)),
+            None => self.blocks_for(rows),
+        }
+    }
+
+    /// Committed sliding-window evictions (ring overwrites) since the
+    /// pool was created.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
     /// Take the lowest free block id.
     fn alloc(&mut self) -> Result<usize> {
         let Reverse(id) = self.free.pop().ok_or_else(|| {
@@ -258,31 +421,74 @@ impl BlockPool {
     }
 
     /// Append one `(k⃗, v⃗)` row pair to `table`, allocating or
-    /// copy-on-writing the tail block as needed. On
+    /// copy-on-writing the target block as needed. On
     /// [`Error::AdmissionDeferred`] (pool exhausted) the table is left
     /// exactly as it was — the append is transactional.
     ///
-    /// Returns `Some(original)` when the append copy-on-wrote a shared
-    /// tail: the id of the shared block the table stopped referencing.
-    /// The append **retains the table's reference on that original**
-    /// (so no interleaved release/preemption can free or recycle it)
-    /// until the caller resolves the step: [`Self::commit_append`]
-    /// drops the retained reference, [`Self::undo_append`] swaps the
-    /// private clone back for the original — restoring the sharing and
-    /// the pool accounting exactly, which is what makes a failed
-    /// wave's unwind truly transactional.
+    /// An unbounded table appends to its tail block (fresh allocation
+    /// at block-size granularity, copy-on-write when the tail is
+    /// fork-shared). A windowed table whose ring is full instead
+    /// *overwrites* the slot `len % C` — evicting the oldest resident
+    /// row in place, again with a whole-block copy-on-write when that
+    /// slot's block is shared.
+    ///
+    /// The returned [`AppendUndo`] must be resolved by exactly one of
+    /// [`Self::commit_append`] (the step landed; drops any retained
+    /// CoW reference and counts any eviction) or [`Self::undo_append`]
+    /// (failed wave; reverts table, refcounts, and occupancy exactly).
+    /// Both CoW variants **retain the table's reference on the
+    /// replaced original** until then, so no interleaved
+    /// release/preemption can free or recycle it mid-step.
     pub fn append_row(
         &mut self,
         table: &mut BlockTable,
         k: Vec<f32>,
         v: Vec<f32>,
-    ) -> Result<Option<usize>> {
+    ) -> Result<AppendUndo> {
         let bs = self.cfg.block_size;
-        // The tail block holds `len % bs` rows when that is non-zero;
+        // Ring phase: a windowed table whose ring is full overwrites
+        // the oldest resident row's slot instead of growing.
+        if let Some(c) = table.ring_rows(bs) {
+            if table.len >= c {
+                debug_assert_eq!(table.blocks.len() * bs, c, "full ring");
+                let s = table.len % c;
+                let (bi, off) = (s / bs, s % bs);
+                let id = table.blocks[bi];
+                let undo = if self.blocks[id].refcount > 1 {
+                    // The slot's block is fork-shared (immutable): copy
+                    // the whole block, overwrite the copy's slot, and
+                    // retain the reference on the original (it still
+                    // holds the evicted row — an undo re-links it).
+                    // Allocation can fail, so it happens first.
+                    let fresh = self.alloc()?;
+                    let (keys, values) = {
+                        let src = &self.blocks[id];
+                        (src.keys.clone(), src.values.clone())
+                    };
+                    self.blocks[fresh].keys = keys;
+                    self.blocks[fresh].values = values;
+                    table.blocks[bi] = fresh;
+                    self.blocks[fresh].keys[off] = k;
+                    self.blocks[fresh].values[off] = v;
+                    AppendUndo::CowOverwrite {
+                        orig: id,
+                        index: bi,
+                    }
+                } else {
+                    let prev_k = std::mem::replace(&mut self.blocks[id].keys[off], k);
+                    let prev_v = std::mem::replace(&mut self.blocks[id].values[off], v);
+                    AppendUndo::Overwrite { prev_k, prev_v }
+                };
+                table.len += 1;
+                return Ok(undo);
+            }
+        }
+        // Sequential phase (unbounded table, or a ring still filling):
+        // the tail block holds `len % bs` rows when that is non-zero;
         // at a multiple of bs every block is full and a fresh one is
         // needed.
         let tail_has_room = table.len % bs != 0;
-        let mut cow_from = None;
+        let mut undo = AppendUndo::Push;
         if !table.blocks.is_empty() && tail_has_room {
             let tail = *table.blocks.last().expect("non-empty");
             if self.blocks[tail].refcount > 1 {
@@ -304,7 +510,7 @@ impl BlockPool {
                 *table.blocks.last_mut().expect("non-empty") = fresh;
                 self.blocks[fresh].keys.push(k);
                 self.blocks[fresh].values.push(v);
-                cow_from = Some(tail);
+                undo = AppendUndo::Cow { orig: tail };
             } else {
                 self.blocks[tail].keys.push(k);
                 self.blocks[tail].values.push(v);
@@ -316,53 +522,88 @@ impl BlockPool {
             table.blocks.push(fresh);
         }
         table.len += 1;
-        Ok(cow_from)
+        Ok(undo)
     }
 
-    /// Resolve a pending copy-on-write append (see [`Self::append_row`])
-    /// after the step committed: drop the retained reference on the
-    /// replaced shared block. No-op for `None`.
-    pub fn commit_append(&mut self, cow_from: Option<usize>) {
-        if let Some(orig) = cow_from {
+    /// Resolve a pending [`Self::append_row`] after the step committed:
+    /// drop any retained reference on a replaced shared block and count
+    /// any ring eviction.
+    pub fn commit_append(&mut self, undo: AppendUndo) {
+        if undo.evicts() {
+            self.evictions += 1;
+        }
+        if let Some(orig) = undo.cow_origin() {
             self.unref(orig);
         }
     }
 
     /// Undo the most recent [`Self::append_row`] on `table` (the
-    /// unstage path of a failed step): pop the staged row and, if the
-    /// append copy-on-wrote a shared tail, swap the private clone back
-    /// for the retained original — the table, the refcounts, and the
-    /// pool occupancy end exactly as they were before the append.
-    pub fn undo_append(&mut self, table: &mut BlockTable, cow_from: Option<usize>) {
-        self.pop_row(table);
-        let Some(orig) = cow_from else {
-            return;
-        };
-        // A CoW only fires on a partially-filled tail, so after the pop
-        // the clone still holds that prefix and is still the tail.
-        let clone = *table.blocks.last().expect("CoW tail survives the pop");
-        debug_assert_eq!(
-            self.blocks[clone].refcount, 1,
-            "CoW clone must be private"
-        );
-        debug_assert!(
-            self.blocks[orig].refcount >= 1,
-            "CoW original was retained by the pending append"
-        );
-        *table.blocks.last_mut().expect("checked above") = orig;
-        // The retained reference transfers back to the table (no
-        // refcount change); only the clone's reference is dropped.
-        self.unref(clone);
+    /// unstage path of a failed step): pop or un-overwrite the staged
+    /// row and, if the append copy-on-wrote a shared block, swap the
+    /// private clone back for the retained original — the table, the
+    /// refcounts, and the pool occupancy end exactly as they were
+    /// before the append.
+    pub fn undo_append(&mut self, table: &mut BlockTable, undo: AppendUndo) {
+        match undo {
+            AppendUndo::Push => self.pop_row(table),
+            AppendUndo::Cow { orig } => {
+                self.pop_row(table);
+                // A tail CoW only fires on a partially-filled tail, so
+                // after the pop the clone still holds that prefix and
+                // is still the tail.
+                let clone = *table.blocks.last().expect("CoW tail survives the pop");
+                debug_assert_eq!(self.blocks[clone].refcount, 1, "CoW clone must be private");
+                debug_assert!(
+                    self.blocks[orig].refcount >= 1,
+                    "CoW original was retained by the pending append"
+                );
+                *table.blocks.last_mut().expect("checked above") = orig;
+                // The retained reference transfers back to the table
+                // (no refcount change); only the clone's reference is
+                // dropped.
+                self.unref(clone);
+            }
+            AppendUndo::Overwrite { prev_k, prev_v } => {
+                table.len -= 1;
+                let bs = self.cfg.block_size;
+                let c = table.ring_rows(bs).expect("overwrite implies a ring");
+                let s = table.len % c;
+                let id = table.blocks[s / bs];
+                debug_assert_eq!(self.blocks[id].refcount, 1, "overwrite target is private");
+                self.blocks[id].keys[s % bs] = prev_k;
+                self.blocks[id].values[s % bs] = prev_v;
+            }
+            AppendUndo::CowOverwrite { orig, index } => {
+                // The original block was never touched — it still holds
+                // the evicted row — so re-linking it restores content,
+                // sharing, and occupancy in one move.
+                table.len -= 1;
+                let clone = table.blocks[index];
+                debug_assert_eq!(self.blocks[clone].refcount, 1, "CoW clone must be private");
+                debug_assert!(
+                    self.blocks[orig].refcount >= 1,
+                    "CoW original was retained by the pending append"
+                );
+                table.blocks[index] = orig;
+                self.unref(clone);
+            }
+        }
     }
 
     /// Remove the most recently appended row (the unstage path of a
-    /// failed step). The tail block is private by construction — the
-    /// matching append either found it at refcount 1 or copy-on-wrote
-    /// it — so popping cannot disturb another table.
+    /// failed sequential-phase step). The tail block is private by
+    /// construction — the matching append either found it at refcount 1
+    /// or copy-on-wrote it — so popping cannot disturb another table.
+    /// Ring overwrites are undone through [`Self::undo_append`], never
+    /// popped.
     pub fn pop_row(&mut self, table: &mut BlockTable) {
         let Some(&tail) = table.blocks.last() else {
             return;
         };
+        debug_assert!(
+            !matches!(table.ring_rows(self.cfg.block_size), Some(c) if table.len > c),
+            "pop_row on a wrapped ring (use undo_append)"
+        );
         debug_assert_eq!(
             self.blocks[tail].refcount, 1,
             "pop_row on a shared tail (stage/unstage must bracket one wave)"
@@ -396,56 +637,125 @@ impl BlockPool {
         table.len = 0;
     }
 
-    /// Gather `table`'s rows in cache order — the walk a decode step's
-    /// replay sources follow. Borrows; copies nothing.
+    /// Gather the rows a decode step may attend, in logical order —
+    /// the walk the step's replay sources follow. For an unbounded
+    /// table this is every cached row; for a windowed table it is the
+    /// last `min(len, W)` rows (the sliding window), read out of the
+    /// ring in logical order regardless of slot rotation. Borrows;
+    /// copies nothing.
     pub fn view(&self, table: &BlockTable) -> KvView<'_> {
-        let mut keys: Vec<&[f32]> = Vec::with_capacity(table.len);
-        let mut values: Vec<&[f32]> = Vec::with_capacity(table.len);
-        for &id in &table.blocks {
-            let b = &self.blocks[id];
-            for row in &b.keys {
-                keys.push(row.as_slice());
+        match table.window {
+            None => {
+                let mut keys: Vec<&[f32]> = Vec::with_capacity(table.len);
+                let mut values: Vec<&[f32]> = Vec::with_capacity(table.len);
+                for &id in &table.blocks {
+                    let b = &self.blocks[id];
+                    for row in &b.keys {
+                        keys.push(row.as_slice());
+                    }
+                    for row in &b.values {
+                        values.push(row.as_slice());
+                    }
+                }
+                debug_assert_eq!(keys.len(), table.len, "table len vs gathered rows");
+                KvView { keys, values }
             }
-            for row in &b.values {
-                values.push(row.as_slice());
+            Some(_) => {
+                let bs = self.cfg.block_size;
+                let vis = table.visible_rows();
+                let mut keys: Vec<&[f32]> = Vec::with_capacity(vis);
+                let mut values: Vec<&[f32]> = Vec::with_capacity(vis);
+                for row in table.len - vis..table.len {
+                    let (bi, off) = table.locate(row, bs).expect("visible rows are resident");
+                    let b = &self.blocks[table.blocks[bi]];
+                    keys.push(b.keys[off].as_slice());
+                    values.push(b.values[off].as_slice());
+                }
+                KvView { keys, values }
             }
         }
-        debug_assert_eq!(keys.len(), table.len, "table len vs gathered rows");
-        KvView { keys, values }
     }
 
-    /// Preempt: copy the table's rows out to host memory and release
-    /// its blocks. Only blocks this table exclusively owned actually
-    /// free (shared prefix blocks keep serving their other owners).
+    /// Preempt: copy the table's resident rows out to host memory (in
+    /// logical order) and release its blocks. Only blocks this table
+    /// exclusively owned actually free (shared prefix blocks keep
+    /// serving their other owners).
     pub fn swap_out(&mut self, table: &mut BlockTable) -> SwappedKv {
-        let view = self.view(table);
+        let bs = self.cfg.block_size;
+        let resident = table.resident_rows(bs);
+        let mut keys = Vec::with_capacity(resident);
+        let mut values = Vec::with_capacity(resident);
+        for row in table.len - resident..table.len {
+            let (bi, off) = table.locate(row, bs).expect("resident rows locate");
+            let b = &self.blocks[table.blocks[bi]];
+            keys.push(b.keys[off].clone());
+            values.push(b.values[off].clone());
+        }
         let swapped = SwappedKv {
-            keys: view.keys.iter().map(|r| r.to_vec()).collect(),
-            values: view.values.iter().map(|r| r.to_vec()).collect(),
+            keys,
+            values,
+            len: table.len,
         };
         self.release(table);
         swapped
     }
 
     /// Restore a swapped-out cache into fresh blocks (sharing is not
-    /// re-established — the restored table is fully private). Fails
-    /// with [`Error::AdmissionDeferred`] — leaving `table` empty and
-    /// the swap untouched — when the pool cannot hold it; restores are
-    /// all-or-nothing.
+    /// re-established — the restored table is fully private). A
+    /// wrapped windowed ring is rebuilt at its exact slot alignment
+    /// (logical row `r` back at slot `r % C`) with `len` restored, so
+    /// post-restore overwrites land precisely where they would have
+    /// without the preemption. Fails with [`Error::AdmissionDeferred`]
+    /// — leaving `table` empty and the swap untouched — when the pool
+    /// cannot hold it; restores are all-or-nothing.
     pub fn swap_in(&mut self, table: &mut BlockTable, swapped: &SwappedKv) -> Result<()> {
         debug_assert!(table.is_empty(), "swap_in into a non-empty table");
-        let needed = self.blocks_for(swapped.len());
-        if needed > self.free.len() {
-            return Err(Error::AdmissionDeferred(format!(
-                "kv-cache pool has {} free blocks, restore needs {needed}",
-                self.free.len()
-            )));
-        }
-        for (k, v) in swapped.keys.iter().zip(&swapped.values) {
-            let cow = self
-                .append_row(table, k.clone(), v.clone())
-                .expect("free-block count checked above");
-            debug_assert!(cow.is_none(), "swap_in restores into private blocks");
+        let bs = self.cfg.block_size;
+        match table.ring_rows(bs) {
+            Some(c) if swapped.len >= c => {
+                // Wrapped ring: every block is full; slot s holds the
+                // unique resident row with r ≡ s (mod C).
+                let b_cap = c / bs;
+                debug_assert_eq!(swapped.rows(), c, "a wrapped ring swaps exactly C rows");
+                if b_cap > self.free.len() {
+                    return Err(Error::AdmissionDeferred(format!(
+                        "kv-cache pool has {} free blocks, restore needs {b_cap}",
+                        self.free.len()
+                    )));
+                }
+                for _ in 0..b_cap {
+                    let id = self.alloc().expect("free-block count checked above");
+                    self.blocks[id].keys = vec![Vec::new(); bs];
+                    self.blocks[id].values = vec![Vec::new(); bs];
+                    table.blocks.push(id);
+                }
+                for (i, (k, v)) in swapped.keys.iter().zip(&swapped.values).enumerate() {
+                    let s = (swapped.len - c + i) % c;
+                    let id = table.blocks[s / bs];
+                    self.blocks[id].keys[s % bs] = k.clone();
+                    self.blocks[id].values[s % bs] = v.clone();
+                }
+                table.len = swapped.len;
+            }
+            _ => {
+                let needed = self.blocks_for(swapped.rows());
+                if needed > self.free.len() {
+                    return Err(Error::AdmissionDeferred(format!(
+                        "kv-cache pool has {} free blocks, restore needs {needed}",
+                        self.free.len()
+                    )));
+                }
+                for (k, v) in swapped.keys.iter().zip(&swapped.values) {
+                    let undo = self
+                        .append_row(table, k.clone(), v.clone())
+                        .expect("free-block count checked above");
+                    debug_assert!(
+                        matches!(undo, AppendUndo::Push),
+                        "swap_in restores into private blocks"
+                    );
+                }
+                debug_assert_eq!(table.len, swapped.len, "sequential restore recovers len");
+            }
         }
         Ok(())
     }
@@ -469,14 +779,14 @@ mod tests {
         vec![x; d]
     }
 
-    /// Append `n` committed rows (resolving any copy-on-write the
-    /// append made, like a successful step does).
+    /// Append `n` committed rows (resolving any copy-on-write or
+    /// eviction the append made, like a successful step does).
     fn fill(pool: &mut BlockPool, table: &mut BlockTable, from: usize, n: usize) {
         for i in from..from + n {
-            let cow = pool
+            let undo = pool
                 .append_row(table, row(i as f32, 2), row(-(i as f32), 2))
                 .unwrap();
-            pool.commit_append(cow);
+            pool.commit_append(undo);
         }
     }
 
@@ -582,13 +892,17 @@ mod tests {
         assert_eq!(pool.shared_blocks(), 2);
         // Child stages a row onto the shared half-full tail → CoW with
         // the original's reference retained.
-        let cow = pool
+        let undo = pool
             .append_row(&mut child, row(50.0, 2), row(50.0, 2))
             .unwrap();
-        assert_eq!(cow, Some(tail), "append reports the replaced tail");
+        assert_eq!(
+            undo.cow_origin(),
+            Some(tail),
+            "append reports the replaced tail"
+        );
         assert_eq!(pool.used_blocks(), 3, "clone + retained original");
         // Unwind (failed wave): sharing and occupancy revert exactly.
-        pool.undo_append(&mut child, cow);
+        pool.undo_append(&mut child, undo);
         assert_eq!(child.len(), 6);
         assert_eq!(child.block_ids().last(), Some(&tail), "original re-linked");
         assert_eq!(pool.used_blocks(), 2, "clone freed");
@@ -596,11 +910,11 @@ mod tests {
         assert_eq!(pool.view(&child).keys[5][0], 5.0, "rows intact");
         // Re-stage and commit this time: the retained reference drops
         // and the original stays alive for the parent only.
-        let cow = pool
+        let undo = pool
             .append_row(&mut child, row(51.0, 2), row(51.0, 2))
             .unwrap();
-        assert_eq!(cow, Some(tail));
-        pool.commit_append(cow);
+        assert_eq!(undo.cow_origin(), Some(tail));
+        pool.commit_append(undo);
         assert_eq!(pool.used_blocks(), 3);
         assert_eq!(pool.refcount(tail), 1, "retained reference released");
         pool.release(&mut parent);
@@ -623,17 +937,17 @@ mod tests {
         fill(&mut pool, &mut parent, 0, 2); // one half-full block
         let mut child = pool.fork(&parent);
         let orig = *child.block_ids().last().unwrap();
-        let cow = pool
+        let undo = pool
             .append_row(&mut child, row(9.0, 2), row(9.0, 2))
             .unwrap();
-        assert_eq!(cow, Some(orig));
+        assert_eq!(undo.cow_origin(), Some(orig));
         // Parent goes away mid-step (preempt/close elsewhere).
         pool.release(&mut parent);
         assert!(
             pool.refcount(orig) >= 1,
             "pending append keeps the original alive"
         );
-        pool.undo_append(&mut child, cow);
+        pool.undo_append(&mut child, undo);
         assert_eq!(child.len(), 2);
         assert_eq!(pool.view(&child).keys[1][0], 1.0, "original content intact");
         pool.release(&mut child);
@@ -671,7 +985,8 @@ mod tests {
         let before: Vec<Vec<f32>> = pool.view(&t).keys.iter().map(|r| r.to_vec()).collect();
         let swapped = pool.swap_out(&mut t);
         assert_eq!(pool.used_blocks(), 0, "victim blocks freed");
-        assert_eq!(swapped.len(), 7);
+        assert_eq!(swapped.rows(), 7);
+        assert_eq!(swapped.len, 7);
         pool.swap_in(&mut t, &swapped).unwrap();
         assert_eq!(t.len(), 7);
         let after: Vec<Vec<f32>> = pool.view(&t).keys.iter().map(|r| r.to_vec()).collect();
@@ -692,6 +1007,7 @@ mod tests {
         let swapped = SwappedKv {
             keys: vec![row(1.0, 2), row(2.0, 2), row(3.0, 2), row(4.0, 2)],
             values: vec![row(1.0, 2), row(2.0, 2), row(3.0, 2), row(4.0, 2)],
+            len: 4,
         };
         let err = pool.swap_in(&mut t, &swapped);
         assert!(matches!(err, Err(Error::AdmissionDeferred(_))));
@@ -759,5 +1075,151 @@ mod tests {
         assert_eq!(c.block_ids(), &[0], "freed lowest id reused first");
         pool.release(&mut b);
         pool.release(&mut c);
+    }
+
+    #[test]
+    fn windowed_ring_caps_blocks_and_evicts_oldest() {
+        // W = 6, bs = 4 → B = 2 blocks, ring capacity C = 8 rows.
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut t = BlockTable::windowed(6);
+        fill(&mut pool, &mut t, 0, 20);
+        assert_eq!(t.len(), 20, "len is the logical transcript length");
+        assert_eq!(t.num_blocks(), 2, "footprint capped at ⌈W/bs⌉");
+        assert_eq!(pool.used_blocks(), 2);
+        assert_eq!(t.visible_rows(), 6);
+        assert_eq!(t.resident_rows(4), 8);
+        // Appends 8..19 each overwrote one resident row.
+        assert_eq!(pool.evictions(), 12);
+        // The view is the last W rows, in logical order.
+        let view = pool.view(&t);
+        assert_eq!(view.len(), 6);
+        for (i, k) in view.keys.iter().enumerate() {
+            assert_eq!(k[0], (14 + i) as f32, "window holds rows 14..20");
+        }
+        // Evicted rows un-locate; resident ones keep their ring slot.
+        assert_eq!(t.locate(11, 4), None, "row 11 was overwritten by row 19");
+        assert_eq!(t.locate(12, 4), Some((1, 0)), "slot 12 % 8 = 4 → block 1");
+        assert_eq!(t.locate(19, 4), Some((0, 3)), "slot 19 % 8 = 3 → block 0");
+        pool.release(&mut t);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn ring_overwrite_undo_restores_the_evicted_row() {
+        // W = 4, bs = 2 → C = 4; the 5th append overwrites row 0.
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 2,
+            num_blocks: 4,
+        })
+        .unwrap();
+        let mut t = BlockTable::windowed(4);
+        fill(&mut pool, &mut t, 0, 4);
+        let undo = pool.append_row(&mut t, row(9.0, 2), row(9.0, 2)).unwrap();
+        assert!(undo.evicts());
+        assert!(undo.cow_origin().is_none(), "private ring: no CoW");
+        assert_eq!(t.len(), 5);
+        assert_eq!(pool.used_blocks(), 2, "overwrite allocates nothing");
+        // Unwind: the evicted row comes back bit-exactly.
+        pool.undo_append(&mut t, undo);
+        assert_eq!(t.len(), 4);
+        assert_eq!(pool.evictions(), 0, "undone overwrite is not an eviction");
+        let view = pool.view(&t);
+        for (i, k) in view.keys.iter().enumerate() {
+            assert_eq!(k[0], i as f32, "original rows restored");
+        }
+        pool.release(&mut t);
+    }
+
+    #[test]
+    fn ring_cow_overwrite_keeps_fork_sharers_intact() {
+        // Parent and child share a full ring; the child's overwrite
+        // must copy the block, not clobber the parent's row.
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 2,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut parent = BlockTable::windowed(4);
+        fill(&mut pool, &mut parent, 0, 4); // full ring: blocks 0, 1
+        let mut child = pool.fork(&parent);
+        let orig = child.block_ids()[0];
+        assert_eq!(pool.shared_blocks(), 2);
+        // Child's 5th row lands on slot 0 → shared block 0 → CoW.
+        let undo = pool
+            .append_row(&mut child, row(9.0, 2), row(9.0, 2))
+            .unwrap();
+        assert!(undo.evicts());
+        assert_eq!(undo.cow_origin(), Some(orig));
+        assert_eq!(pool.used_blocks(), 3, "clone + retained original");
+        // Unwind: sharing, occupancy, and content all revert.
+        pool.undo_append(&mut child, undo);
+        assert_eq!(child.len(), 4);
+        assert_eq!(child.block_ids()[0], orig, "original re-linked");
+        assert_eq!(pool.used_blocks(), 2);
+        assert_eq!(pool.shared_blocks(), 2);
+        // Re-stage and commit: the child diverges, the parent doesn't.
+        let undo = pool
+            .append_row(&mut child, row(9.0, 2), row(9.0, 2))
+            .unwrap();
+        pool.commit_append(undo);
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(pool.refcount(orig), 1, "retained reference released");
+        let vp = pool.view(&parent);
+        let heads = |v: &KvView<'_>| v.keys.iter().map(|k| k[0]).collect::<Vec<_>>();
+        assert_eq!(heads(&vp), [0.0, 1.0, 2.0, 3.0]);
+        let vc = pool.view(&child);
+        assert_eq!(heads(&vc), [1.0, 2.0, 3.0, 9.0]);
+        pool.release(&mut parent);
+        pool.release(&mut child);
+        assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn windowed_swap_roundtrip_preserves_ring_alignment() {
+        // A preempted ring must restore at the exact slot rotation so
+        // later appends overwrite the same slots they would have
+        // without the preemption: compare against a never-preempted
+        // twin fed the identical rows.
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 2,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut t = BlockTable::windowed(3); // B = 2, C = 4
+        let mut twin = BlockTable::windowed(3);
+        fill(&mut pool, &mut t, 0, 11);
+        fill(&mut pool, &mut twin, 0, 11);
+        let swapped = pool.swap_out(&mut t);
+        assert_eq!(swapped.rows(), 4, "only resident rows swap");
+        assert_eq!(swapped.len, 11, "logical length rides along");
+        assert!(t.is_empty());
+        pool.swap_in(&mut t, &swapped).unwrap();
+        assert_eq!(t.len(), 11);
+        assert_eq!(t.num_blocks(), 2);
+        fill(&mut pool, &mut t, 11, 3);
+        fill(&mut pool, &mut twin, 11, 3);
+        let (vt, vw) = (pool.view(&t), pool.view(&twin));
+        assert_eq!(vt.keys, vw.keys, "restored ring tracks the twin");
+        assert_eq!(vt.values, vw.values);
+        pool.release(&mut t);
+        pool.release(&mut twin);
+    }
+
+    #[test]
+    fn windowed_blocks_for_is_capped_at_the_ring() {
+        let pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        assert_eq!(pool.blocks_for_windowed(3, None), 1);
+        assert_eq!(pool.blocks_for_windowed(100, None), 25);
+        assert_eq!(pool.blocks_for_windowed(3, Some(6)), 1, "below the cap");
+        assert_eq!(pool.blocks_for_windowed(100, Some(6)), 2, "⌈6/4⌉ caps it");
+        assert_eq!(pool.blocks_for_windowed(1_000_000, Some(16)), 4);
     }
 }

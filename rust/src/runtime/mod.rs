@@ -27,7 +27,7 @@ pub mod tensor;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactRegistry, TestVec};
 pub use executor::{Executor, LoadedArtifact};
-pub use kvcache::{BlockPool, BlockTable, KvCacheConfig, KvView, SwappedKv};
+pub use kvcache::{AppendUndo, BlockPool, BlockTable, KvCacheConfig, KvView, SwappedKv};
 pub use tensor::Tensor;
 
 /// Default artifact directory, overridable with `SDPA_ARTIFACTS`.

@@ -21,6 +21,15 @@
 //!    N+2+L generalisation under injected divergent-path latency —
 //!    without any hand-annotated depths.
 //!
+//! The analysis is purely structural — it sees stream *shapes*, never
+//! values — so in-stream masking (causal, ragged, sliding-window) does
+//! not change any inferred bound: masked positions still occupy one
+//! stream slot per cycle and the N+2 bypass depth is identical to the
+//! unmasked graph. Window-compressed mappings (a decode step streaming
+//! only its `min(len, W)` visible rows) shrink the bound the same way
+//! any shorter stream does: the inference re-derives `visible + 2`
+//! from the smaller Reduce window, with no mask-specific code here.
+//!
 //! Channels declared through the channel-first API keep their explicit
 //! capacities; only implicitly created (port API) channels are sized by
 //! the selected [`DepthPolicy`].

@@ -15,13 +15,18 @@
 //! fork children always land on their parent's shard, and a
 //! pool-pressure variant (pool far smaller than the trace's working
 //! set, so preemption/deferral fires) still matches the oracle bitwise.
+//! Sliding-window sessions get the same treatment: a fork-heavy
+//! windowed trace replays bit-identical to the *windowed* oracle, and a
+//! long windowed decode (3× `max_len`) keeps every shard's pool gauge
+//! flat at the ring size while evictions accumulate.
 //!
 //! [`DecodeSession`]: sdpa_dataflow::attention::decode::DecodeSession
 
 use sdpa_dataflow::attention::decode::DecodeKind;
-use sdpa_dataflow::coordinator::fleet::{replay, FleetConfig};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::coordinator::fleet::{replay, Fleet, FleetConfig};
 use sdpa_dataflow::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
-use sdpa_dataflow::coordinator::{KvCacheConfig, SessionConfig};
+use sdpa_dataflow::coordinator::{DecodeStepRequest, KvCacheConfig, SessionConfig};
 use sdpa_dataflow::sim::SchedulerMode;
 
 const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
@@ -42,6 +47,28 @@ fn hard_trace() -> Trace {
         output: LenDist::Uniform { lo: 2, hi: 8 },
         fork_fraction: 0.4,
         abandon_fraction: 0.3,
+        window: None,
+        seed: 0xF1EE_7C0F,
+    })
+    .expect("trace generates")
+}
+
+/// The same fork-heavy shape, but every session (forks included)
+/// attends a 4-row sliding window — the ring-eviction fleet case.
+fn windowed_trace() -> Trace {
+    Trace::generate(&TrafficConfig {
+        sessions: 12,
+        d: 3,
+        arrivals: Arrivals::Bursty {
+            rate: 3.0,
+            mean_on: 2.0,
+            mean_off: 4.0,
+        },
+        prompt: LenDist::Uniform { lo: 2, hi: 6 },
+        output: LenDist::Uniform { lo: 2, hi: 8 },
+        fork_fraction: 0.4,
+        abandon_fraction: 0.3,
+        window: Some(4),
         seed: 0xF1EE_7C0F,
     })
     .expect("trace generates")
@@ -138,6 +165,103 @@ fn fleet_replay_matches_oracle_for_every_width_and_mode() {
 }
 
 #[test]
+fn windowed_fleet_replay_matches_the_windowed_oracle() {
+    // Satellite of the sliding-window PR: a fork-heavy windowed trace
+    // replayed across F ∈ {1, 2} shards must be bit-identical to the
+    // standalone *windowed* contiguous oracle — ring eviction, CoW
+    // overwrites in forks, and shard routing all invisible bitwise.
+    let trace = windowed_trace();
+    assert!(
+        trace.sessions.iter().any(|s| s.parent.is_some()),
+        "windowed trace must contain forks"
+    );
+    assert!(
+        trace.sessions.iter().all(|s| s.window == Some(4)),
+        "every session carries the trace window"
+    );
+    let oracle = trace
+        .oracle_transcripts(DecodeKind::MemoryFree)
+        .expect("windowed oracle runs");
+    for mode in MODES {
+        for shards in [1usize, 2] {
+            let rep = replay(
+                &trace,
+                FleetConfig {
+                    shards,
+                    sessions: roomy(&trace, mode),
+                },
+            )
+            .expect("windowed replay completes");
+            for s in &trace.sessions {
+                assert_eq!(
+                    rep.transcripts.get(&s.id),
+                    oracle.get(&s.id),
+                    "{mode:?} F={shards} session {}: windowed fleet transcript \
+                     must equal the windowed oracle bit-for-bit",
+                    s.id
+                );
+            }
+            assert_eq!(
+                rep.rollup.aggregate().steps(),
+                trace.total_steps() as u64,
+                "{mode:?} F={shards}: every windowed step served exactly once"
+            );
+        }
+    }
+}
+
+#[test]
+fn windowed_fleet_long_decode_keeps_shard_gauges_flat() {
+    // Two window-4 sessions decode 24 steps each — three times the
+    // per-shard `max_len` and far past the ring — through a two-shard
+    // fleet. Ring eviction must hold every shard's pool gauge at
+    // ⌈4/2⌉ = 2 blocks per resident session instead of growing with
+    // the decode length.
+    let mut fleet = Fleet::new(FleetConfig {
+        shards: 2,
+        sessions: SessionConfig {
+            lanes: 2,
+            max_sessions: 2,
+            max_len: 8,
+            kv: KvCacheConfig {
+                block_size: 2,
+                num_blocks: 4,
+            },
+            ..SessionConfig::default()
+        },
+    })
+    .unwrap();
+    let a = fleet.open_windowed(3, 4).unwrap();
+    let b = fleet.open_windowed(3, 4).unwrap();
+    assert_ne!(fleet.shard_of(a), fleet.shard_of(b), "spread across shards");
+    let wa = Workload::random(24, 3, 0x57EA_D1);
+    let wb = Workload::random(24, 3, 0x57EA_D2);
+    for t in 0..24 {
+        for (id, w) in [(a, &wa), (b, &wb)] {
+            let req = DecodeStepRequest {
+                session: id,
+                q: w.q[t].clone(),
+                k: w.k[t].clone(),
+                v: w.v[t].clone(),
+            };
+            let (res, _) = fleet.step_wave(std::slice::from_ref(&req));
+            res.into_iter().next().unwrap().unwrap();
+        }
+        for s in 0..fleet.shard_count() {
+            assert!(
+                fleet.shard(s).pool_used_blocks() <= 2,
+                "step {t}: shard {s} gauge must stay flat at the ring size"
+            );
+        }
+    }
+    assert!(fleet.evictions() > 0, "long decode must have recycled rows");
+    assert_eq!(fleet.len_of(a), Some(24), "max_len must not apply");
+    let (_, ta) = fleet.close(a).unwrap();
+    let (_, tb) = fleet.close(b).unwrap();
+    assert_eq!((ta.len(), tb.len()), (24, 24));
+}
+
+#[test]
 fn placements_are_deterministic_and_forks_follow_their_parents() {
     let trace = hard_trace();
     for shards in [2usize, 4] {
@@ -194,6 +318,7 @@ fn pool_pressure_replay_still_matches_the_oracle() {
         output: LenDist::Uniform { lo: 4, hi: 8 },
         fork_fraction: 0.0,
         abandon_fraction: 0.25,
+        window: None,
         seed: 0x9E55_0FEE,
     })
     .unwrap();

@@ -15,7 +15,12 @@
 //! close interleavings against a mirror model: no block leaks, no
 //! double-free, refcounts hit zero exactly at close, occupancy never
 //! exceeds capacity, and every gather returns exactly the rows the
-//! model predicts (the copy-on-write correctness witness).
+//! model predicts (the copy-on-write correctness witness). Half the
+//! fuzzed tables carry a sliding window, so ring evictions — including
+//! evictions landing on a block still shared with a fork, which must
+//! whole-block-CoW with exact refcounts — interleave with every other
+//! op, and windowed occupancy stays ≤ ⌈W/block_size⌉ throughout.
+//! (`tests/windowed_conformance.rs` fuzzes the all-windowed case.)
 
 use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession, PagedDecodeSession};
 use sdpa_dataflow::attention::reference::{assert_close, sdpa_f64_masked, sdpa_online_f32_masked};
@@ -361,15 +366,26 @@ fn audit(pool: &BlockPool, tables: &[ModelTable]) {
         );
     }
     // Every resident table gathers exactly the rows the model predicts
-    // — the copy-on-write correctness witness.
+    // — for a windowed table the last min(len, W), in eviction order —
+    // the copy-on-write correctness witness.
     for (i, t) in tables.iter().enumerate() {
         if t.swapped.is_some() {
             assert!(t.table.is_empty(), "table {i}: swapped but not empty");
             continue;
         }
+        if let Some(w) = t.table.window() {
+            assert!(
+                t.table.num_blocks() <= w.div_ceil(pool.block_size()),
+                "table {i}: windowed ring exceeded ⌈W/block_size⌉ blocks"
+            );
+        }
+        let vis = match t.table.window() {
+            Some(w) => t.rows.len().min(w),
+            None => t.rows.len(),
+        };
         let view = pool.view(&t.table);
-        assert_eq!(view.len(), t.rows.len(), "table {i}: row count");
-        for (j, (k, v)) in t.rows.iter().enumerate() {
+        assert_eq!(view.len(), vis, "table {i}: visible row count");
+        for (j, (k, v)) in t.rows[t.rows.len() - vis..].iter().enumerate() {
             assert_eq!(view.keys[j], k.as_slice(), "table {i} key row {j}");
             assert_eq!(view.values[j], v.as_slice(), "table {i} value row {j}");
         }
@@ -386,10 +402,20 @@ fn allocator_property_random_interleavings_leak_nothing() {
         let ops = 48 + rng.below(32);
         for _ in 0..ops {
             match rng.below(12) {
-                // New empty table.
+                // New empty table — half of them sliding-window rings
+                // (W = 3 over size-2 blocks: ring wraps at 4 rows), so
+                // evictions interleave with every other op.
                 0 | 1 => {
                     if tables.len() < 6 {
-                        tables.push(ModelTable::default());
+                        let table = if rng.below(2) == 0 {
+                            BlockTable::windowed(3)
+                        } else {
+                            BlockTable::new()
+                        };
+                        tables.push(ModelTable {
+                            table,
+                            ..ModelTable::default()
+                        });
                     }
                 }
                 // Fork a random resident table (cannot fail, copies

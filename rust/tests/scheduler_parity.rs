@@ -9,8 +9,8 @@
 //! including undersized-bypass deadlocks), imbalanced independent
 //! joins, scan/repeat/reduce chains, all nine attention variants
 //! (prefill, causal, decode) plus multihead at N ∈ {4, 16, 64}, masked
-//! ragged streams, decode-step graphs across cache lengths, and tiny
-//! budgets for the budget-exceeded path.
+//! ragged and sliding-window streams, decode-step graphs across cache
+//! lengths, and tiny budgets for the budget-exceeded path.
 //!
 //! On top of the dense/event axis, every shape is also checked for
 //! **thread-count invariance**: the full run summary (cycles, outcome,
@@ -18,7 +18,9 @@
 //! bit-identical for `SDPA_THREADS`-style worker counts {1, 2, 4, 8}
 //! under both scheduler modes — including multi-component graphs with
 //! mixed per-component outcomes, continuous-batching decode waves
-//! (`SessionTable::step_wave`), and whole-fleet trace replays. Tests
+//! (`SessionTable::step_wave`) — including sliding-window waves whose
+//! paged rings evict a block on every step — windowed prefill graphs,
+//! and whole-fleet trace replays. Tests
 //! pin the count via `Engine::set_threads`/`SessionConfig::threads`
 //! rather than the env var (which is process-global).
 
@@ -381,10 +383,10 @@ fn property_masked_ragged_streams_cycle_exact() {
         let n = 2 + rng.below(14) as usize;
         let d = 1 + rng.below(6) as usize;
         let base = *rng.choose(&Variant::PAPER);
-        let mask = if rng.below(2) == 0 {
-            Mask::Causal
-        } else {
-            Mask::ragged(1 + rng.below(n as u64) as usize)
+        let mask = match rng.below(3) {
+            0 => Mask::Causal,
+            1 => Mask::ragged(1 + rng.below(n as u64) as usize),
+            _ => Mask::window(1 + rng.below(n as u64) as usize),
         };
         let w = Workload::random(n, d, rng.next_u64());
         let budget = random_budget(rng);
@@ -589,6 +591,27 @@ fn attention_variants_thread_invariant() {
 }
 
 #[test]
+fn windowed_prefill_thread_invariant() {
+    // Sliding-window masks stream long −∞/zero runs on *both* sides of
+    // the diagonal; the compiled graph must stay bit-identical across
+    // worker counts for every paper variant.
+    let n = 16;
+    let win = 5;
+    let w = Workload::random(n, 4, 0x77D0);
+    for base in Variant::PAPER {
+        assert_thread_invariant(
+            || {
+                causal::build_masked(base, &w, &Mask::window(win), DepthPolicy::Paper(n))
+                    .unwrap()
+                    .engine
+            },
+            cycle_budget(n),
+            &format!("windowed prefill {base} N={n} W={win}"),
+        );
+    }
+}
+
+#[test]
 fn multihead_thread_invariant_one_component_per_head() {
     let n = 16;
     let ws: Vec<Workload> = (0..4u64).map(|h| Workload::random(n, 4, 0x7EAD + h)).collect();
@@ -652,6 +675,63 @@ fn step_wave_transcripts_thread_invariant() {
 }
 
 #[test]
+fn windowed_step_wave_transcripts_thread_invariant() {
+    // Sliding-window waves add ring eviction to the wave path: past the
+    // window every step overwrites the oldest cache row in place. The
+    // served transcript must stay byte-identical across worker counts
+    // while that churn is happening, and the run must sail past
+    // `max_len` (windowed sessions are exempt from the context limit).
+    let d = 3;
+    let steps = 12;
+    let win = 4;
+    let sessions = 2;
+    let ws: Vec<Workload> = (0..sessions as u64)
+        .map(|s| Workload::random(steps, d, 0x77D1 + s))
+        .collect();
+    let run_with = |threads: usize| {
+        let mut table = SessionTable::new(SessionConfig {
+            lanes: sessions,
+            max_sessions: sessions,
+            max_len: 8,
+            threads: Some(threads),
+            kv: KvCacheConfig {
+                block_size: 2,
+                num_blocks: 8,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let ids: Vec<u64> = (0..sessions)
+            .map(|_| table.open_windowed(d, win).unwrap())
+            .collect();
+        let mut transcript = Vec::new();
+        for t in 0..steps {
+            let reqs: Vec<DecodeStepRequest> = ids
+                .iter()
+                .zip(&ws)
+                .map(|(&id, w)| DecodeStepRequest {
+                    session: id,
+                    q: w.q[t].clone(),
+                    k: w.k[t].clone(),
+                    v: w.v[t].clone(),
+                })
+                .collect();
+            for resp in table.step_wave(&reqs) {
+                let resp = resp.unwrap();
+                transcript.push((resp.session, resp.step, resp.cycles, resp.row));
+            }
+        }
+        assert!(table.pool_evictions() > 0, "rings must have wrapped");
+        transcript
+    };
+    let base = run_with(1);
+    for threads in THREAD_SWEEP {
+        let got = run_with(threads);
+        assert_eq!(base, got, "windowed wave transcripts, {threads} threads");
+    }
+}
+
+#[test]
 fn fleet_replay_thread_invariant() {
     // Whole-fleet replay (sharding, forks, abandons, preemption) with
     // the thread knob riding along `FleetConfig::sessions`.
@@ -663,6 +743,7 @@ fn fleet_replay_thread_invariant() {
         output: LenDist::Uniform { lo: 2, hi: 6 },
         fork_fraction: 0.25,
         abandon_fraction: 0.25,
+        window: None,
         seed: 0x7EAD_F1EE,
     })
     .unwrap();

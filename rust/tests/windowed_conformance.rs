@@ -1,0 +1,482 @@
+//! Three-way windowed conformance suite.
+//!
+//! Sliding-window attention must be *invisible* to the numbers no
+//! matter which layer implements it. Three independent implementations
+//! of a window-W decode chain are compared **bitwise**:
+//!
+//! 1. **Windowed paged** — [`PagedDecodeSession::new_windowed`]: the
+//!    block table is a ring that evicts rows older than the window in
+//!    place, so the session holds at most ⌈W/block_size⌉ blocks.
+//! 2. **Windowed contiguous** — [`DecodeSession::new_windowed`]: the
+//!    cache grows but each step slices the last `min(len, W)` rows.
+//! 3. **Truncated sequential oracle** — a fresh one-shot step graph
+//!    per token, built directly from the workload's row span
+//!    `max(0, t+1−W) .. t+1` with no session state anywhere.
+//!
+//! The grid covers N ∈ {1, 4, 16, 64} × W ∈ {4, 16, 64} × d ∈ {4, 16}
+//! under both `SDPA_SCHED` scheduler modes (pinned explicitly), and all
+//! three agree with the masked-prefill references. On top: the
+//! acceptance long-horizon run (a session decoding 32× its window
+//! through a pool far smaller than the logical transcript, occupancy
+//! exactly ring-capped at every step), window-aware FIFO-bound
+//! assertions (in-stream window masking keeps the N+2 prefill bound;
+//! the compressed decode step shrinks to min(len, W) + 2), and a
+//! seeded allocator fuzz interleaving ring evictions with forks,
+//! preemptions, and failed-wave undos against a mirror model.
+
+use sdpa_dataflow::attention::causal::build_masked;
+use sdpa_dataflow::attention::decode::{
+    build_step, step_long_fifo_bound, DecodeKind, DecodeSession, PagedDecodeSession,
+};
+use sdpa_dataflow::attention::reference::{assert_close, sdpa_f64_masked, sdpa_online_f32_masked};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
+use sdpa_dataflow::prng::{for_each_case, SplitMix64};
+use sdpa_dataflow::runtime::kvcache::{BlockPool, BlockTable, KvCacheConfig, SwappedKv};
+use sdpa_dataflow::sim::SchedulerMode;
+use sdpa_dataflow::Error;
+
+const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
+
+fn pool(block_size: usize, num_blocks: usize) -> BlockPool {
+    BlockPool::new(KvCacheConfig {
+        block_size,
+        num_blocks,
+    })
+    .unwrap()
+}
+
+/// Implementation 1: the windowed paged chain (block size 4). The pool
+/// is sized barely above the ring, and the ring cap is asserted at
+/// every step — a windowed session's footprint must never depend on
+/// how long it has run.
+fn windowed_paged(
+    kind: DecodeKind,
+    w: &Workload,
+    win: usize,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let bs = 4;
+    let cap = win.div_ceil(bs);
+    let mut p = pool(bs, cap + 2);
+    let mut s = PagedDecodeSession::new_windowed(kind, w.d, win);
+    s.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        s.step(&mut p, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        assert!(
+            s.table().num_blocks() <= cap,
+            "step {t}: W={win} ring exceeded ⌈W/{bs}⌉ = {cap} blocks"
+        );
+    }
+    let out = s.close(&mut p);
+    assert_eq!(p.used_blocks(), 0, "windowed close must free every block");
+    out
+}
+
+/// Implementation 2: the windowed contiguous chain.
+fn windowed_contiguous(
+    kind: DecodeKind,
+    w: &Workload,
+    win: usize,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let mut s = DecodeSession::new_windowed(kind, w.d, win);
+    s.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+    }
+    s.outputs().clone()
+}
+
+/// Implementation 3: the truncated sequential oracle — step `t` builds
+/// a fresh compressed graph over exactly the workload rows a window-W
+/// session may attend (`max(0, t+1−W) .. t+1`), with no session state
+/// anywhere. Any drift in the sessions' span bookkeeping (ring slots,
+/// slice starts, eviction order) diverges from this bitwise.
+fn truncated_oracle(
+    kind: DecodeKind,
+    w: &Workload,
+    win: usize,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(w.n);
+    for t in 0..w.n {
+        let start = (t + 1).saturating_sub(win);
+        let mut built = build_step(
+            kind,
+            &w.q[t],
+            &w.k[start..=t],
+            &w.v[start..=t],
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        built.engine.set_scheduler_mode(mode);
+        let (rows, _) = built.run().unwrap();
+        out.push(rows.into_iter().next().expect("one output row"));
+    }
+    out
+}
+
+#[test]
+fn windowed_grid_three_way_bitwise_agreement() {
+    for n in [1usize, 4, 16, 64] {
+        for win in [4usize, 16, 64] {
+            for d in [4usize, 16] {
+                let w = Workload::random(n, d, (n * 10_000 + win * 100 + d) as u64);
+                let mask = Mask::window(win);
+                let online = sdpa_online_f32_masked(&w, &mask);
+                let gold = sdpa_f64_masked(&w, &mask);
+                for mode in MODES {
+                    let label = format!("N={n} W={win} d={d} {mode:?}");
+                    let paged_out = windowed_paged(DecodeKind::MemoryFree, &w, win, mode);
+                    let contiguous_out =
+                        windowed_contiguous(DecodeKind::MemoryFree, &w, win, mode);
+                    let oracle_out = truncated_oracle(DecodeKind::MemoryFree, &w, win, mode);
+                    assert_eq!(
+                        paged_out, contiguous_out,
+                        "{label}: windowed paged must equal windowed contiguous bitwise"
+                    );
+                    assert_eq!(
+                        contiguous_out, oracle_out,
+                        "{label}: windowed contiguous must equal the truncated oracle bitwise"
+                    );
+                    // And all three agree with the masked-prefill
+                    // oracles: the step-matched online f32 chain
+                    // tightly, the f64 accuracy oracle loosely.
+                    assert_close(
+                        &paged_out,
+                        &online,
+                        1e-6,
+                        &format!("windowed vs online, {label}"),
+                    );
+                    assert_close(&paged_out, &gold, 1e-4, &format!("windowed vs f64, {label}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn buffered_windowed_chain_joins_the_agreement() {
+    // The O(len) contrast mapping windows identically.
+    for n in [1usize, 4, 16] {
+        let w = Workload::random(n, 4, 0xB1F2 + n as u64);
+        for mode in MODES {
+            let contiguous_out = windowed_contiguous(DecodeKind::Buffered, &w, 3, mode);
+            assert_eq!(
+                windowed_paged(DecodeKind::Buffered, &w, 3, mode),
+                contiguous_out,
+                "buffered N={n} {mode:?}: paged ≡ contiguous"
+            );
+            assert_eq!(
+                contiguous_out,
+                truncated_oracle(DecodeKind::Buffered, &w, 3, mode),
+                "buffered N={n} {mode:?}: contiguous ≡ truncated oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn long_horizon_session_runs_32_windows_in_a_flat_ring() {
+    // The acceptance run: a window-4 session decoding 32× its window
+    // (128 logical rows) through a 3-block pool — a transcript over
+    // 20× the pool's row capacity. Occupancy must sit exactly at the
+    // ring-capped demand after *every* step (flat from the 2nd block
+    // on), every append past the ring must count one eviction, and the
+    // transcript must still equal the windowed contiguous chain
+    // bitwise.
+    let win = 4;
+    let bs = 2;
+    let cap = win.div_ceil(bs);
+    let steps = 32 * win;
+    let w = Workload::random(steps, 4, 0x10_6707);
+    let mut p = pool(bs, 3);
+    let mut paged = PagedDecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, win);
+    let mut contiguous = DecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, win);
+    for t in 0..steps {
+        paged
+            .step(&mut p, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        contiguous
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        assert_eq!(
+            p.used_blocks(),
+            p.blocks_for_windowed(t + 1, Some(win)),
+            "step {t}: occupancy must be exactly the ring-capped demand"
+        );
+        assert!(
+            paged.table().num_blocks() <= cap,
+            "step {t}: ring exceeded ⌈{win}/{bs}⌉ blocks"
+        );
+    }
+    assert_eq!(paged.len(), steps, "logical length is the full horizon");
+    let ring_rows = cap * bs;
+    assert_eq!(
+        p.evictions(),
+        (steps - ring_rows) as u64,
+        "every append past the ring evicted exactly one row"
+    );
+    assert_eq!(
+        paged.outputs(),
+        contiguous.outputs(),
+        "128-step ring transcript ≡ windowed contiguous bitwise"
+    );
+    paged.close(&mut p);
+    assert_eq!(p.used_blocks(), 0, "no block leaked after 32 windows");
+}
+
+#[test]
+fn windowed_fifo_bounds_prefill_keeps_n_plus_2_and_steps_compress() {
+    // Prefill: in-stream window masking changes no FIFO bound — masked
+    // slots still occupy stream slots, so the buffering variants keep
+    // the paper's N+2 bypass and the memory-free graph stays all-short.
+    let w = Workload::random(8, 4, 0xF1F0);
+    let mask = Mask::window(3);
+    for base in [Variant::Naive, Variant::Scaled, Variant::Reordered] {
+        let built = build_masked(base, &w, &mask, DepthPolicy::Inferred).unwrap();
+        for name in base.long_fifos() {
+            let rec = built
+                .engine
+                .depth_report()
+                .iter()
+                .find(|c| c.name == *name)
+                .unwrap();
+            assert!(rec.is_long, "{base}: {name}");
+            assert_eq!(
+                rec.inferred,
+                w.n + 2,
+                "{base}: in-stream window masking must keep the N+2 bound"
+            );
+        }
+    }
+    let built = build_masked(Variant::MemoryFree, &w, &mask, DepthPolicy::Inferred).unwrap();
+    for c in built.engine.depth_report() {
+        assert!(!c.is_long, "memfree windowed prefill channel '{}'", c.name);
+    }
+    // Decode: the compressed mapping *does* shrink — a windowed
+    // buffered step's bypass is min(len, W) + 2 and flattens once the
+    // window fills; the memory-free step needs no bypass at any length.
+    let win = 3;
+    let mut s = DecodeSession::new_windowed(DecodeKind::Buffered, w.d, win);
+    for t in 0..w.n {
+        let out = s
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        let long_max = out
+            .summary
+            .depths
+            .iter()
+            .filter(|c| c.is_long)
+            .map(|c| c.inferred)
+            .max();
+        let expect = step_long_fifo_bound(DecodeKind::Buffered, (t + 1).min(win));
+        assert_eq!(long_max, Some(expect), "buffered windowed step {t}");
+    }
+    let mut s = DecodeSession::new_windowed(DecodeKind::MemoryFree, w.d, win);
+    for t in 0..w.n {
+        let out = s
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        for c in &out.summary.depths {
+            assert!(!c.is_long, "memfree windowed step {t}: '{}'", c.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Windowed allocator property test
+// ---------------------------------------------------------------------
+
+/// Mirror model of one windowed table: every *logical* row ever
+/// committed (the ring only keeps the tail resident), plus swap state.
+#[derive(Default)]
+struct ModelTable {
+    table: BlockTable,
+    rows: Vec<(Vec<f32>, Vec<f32>)>,
+    swapped: Option<SwappedKv>,
+}
+
+/// Check every pool invariant against the mirror model: exact
+/// refcounts (no leak, no double-free — including an evicted block
+/// still shared by a fork), ring-capped occupancy per table, and
+/// gathers returning exactly the last `min(len, W)` mirror rows.
+fn audit(win: usize, bs: usize, pool: &BlockPool, tables: &[ModelTable]) {
+    assert!(pool.used_blocks() <= pool.capacity());
+    assert_eq!(pool.used_blocks() + pool.free_blocks(), pool.capacity());
+    let mut referenced: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    for t in tables {
+        for &id in t.table.block_ids() {
+            *referenced.entry(id).or_insert(0) += 1;
+        }
+    }
+    assert_eq!(
+        referenced.len(),
+        pool.used_blocks(),
+        "used blocks ≠ blocks referenced by live tables (leak or double-free)"
+    );
+    for (&id, &count) in &referenced {
+        assert_eq!(
+            pool.refcount(id),
+            count,
+            "block {id}: refcount diverged from live references"
+        );
+    }
+    for (i, t) in tables.iter().enumerate() {
+        if t.swapped.is_some() {
+            assert!(t.table.is_empty(), "table {i}: swapped but not empty");
+            continue;
+        }
+        assert!(
+            t.table.num_blocks() <= win.div_ceil(bs),
+            "table {i}: ring exceeded ⌈W/block_size⌉ blocks"
+        );
+        assert_eq!(t.table.len(), t.rows.len(), "table {i}: logical length");
+        // The gather is exactly the mirror's last min(len, W) rows —
+        // the eviction-order correctness witness.
+        let vis = t.rows.len().min(win);
+        let view = pool.view(&t.table);
+        assert_eq!(view.len(), vis, "table {i}: visible row count");
+        for (j, (k, v)) in t.rows[t.rows.len() - vis..].iter().enumerate() {
+            assert_eq!(view.keys[j], k.as_slice(), "table {i} key row {j}");
+            assert_eq!(view.values[j], v.as_slice(), "table {i} value row {j}");
+        }
+    }
+}
+
+#[test]
+fn windowed_allocator_fuzz_evictions_vs_forks_leak_nothing() {
+    // The paged_conformance allocator fuzz with the ring in play:
+    // window-3 tables over size-2 blocks (ring = 2 blocks, 4 slots),
+    // random open/fork/append/preempt/restore/close interleavings.
+    // Appends past the ring overwrite in place — hitting a fork-shared
+    // block they must whole-block-CoW (the audit proves the sharer
+    // still gathers its original rows and every refcount is exact) —
+    // and the failed-wave bracket must revert evictions bit-exactly.
+    for_each_case(0xE71C7, 8, |_case, rng: &mut SplitMix64| {
+        let d = 2;
+        let win = 3;
+        let bs = 2;
+        let ring_rows = win.div_ceil(bs) * bs;
+        let mut pool = pool(bs, 8);
+        let mut tables: Vec<ModelTable> = Vec::new();
+        let mut expected_evictions = pool.evictions();
+        let row = |rng: &mut SplitMix64| (rng.normal_vec(d), rng.normal_vec(d));
+        let ops = 48 + rng.below(32);
+        for _ in 0..ops {
+            match rng.below(12) {
+                // New empty windowed table.
+                0 | 1 => {
+                    if tables.len() < 6 {
+                        tables.push(ModelTable {
+                            table: BlockTable::windowed(win),
+                            ..ModelTable::default()
+                        });
+                    }
+                }
+                // Fork a random resident table (inherits the window).
+                2 | 3 => {
+                    let resident: Vec<usize> = (0..tables.len())
+                        .filter(|&i| tables[i].swapped.is_none())
+                        .collect();
+                    if !resident.is_empty() && tables.len() < 6 {
+                        let src = *rng.choose(&resident);
+                        let forked = ModelTable {
+                            table: pool.fork(&tables[src].table),
+                            rows: tables[src].rows.clone(),
+                            swapped: None,
+                        };
+                        assert_eq!(forked.table.window(), Some(win), "fork inherits");
+                        tables.push(forked);
+                    }
+                }
+                // Append, resolved like a real step: committed (counts
+                // any eviction) or unstaged right back (which must
+                // restore the evicted row and any ring CoW exactly).
+                4..=7 => {
+                    let resident: Vec<usize> = (0..tables.len())
+                        .filter(|&i| tables[i].swapped.is_none())
+                        .collect();
+                    if !resident.is_empty() {
+                        let i = *rng.choose(&resident);
+                        let (k, v) = row(rng);
+                        let wraps = tables[i].rows.len() >= ring_rows;
+                        match pool.append_row(&mut tables[i].table, k.clone(), v.clone()) {
+                            Ok(undo) => {
+                                assert_eq!(
+                                    undo.evicts(),
+                                    wraps,
+                                    "append evicts iff the ring is full"
+                                );
+                                if rng.below(4) == 0 {
+                                    pool.undo_append(&mut tables[i].table, undo);
+                                } else {
+                                    if undo.evicts() {
+                                        expected_evictions += 1;
+                                    }
+                                    pool.commit_append(undo);
+                                    tables[i].rows.push((k, v));
+                                }
+                            }
+                            Err(Error::AdmissionDeferred(_)) => {
+                                // Full pool mid-CoW: transactional no-op.
+                            }
+                            Err(e) => panic!("append failed hard: {e}"),
+                        }
+                    }
+                }
+                // Preempt (swap out) a random resident table.
+                8 => {
+                    let resident: Vec<usize> = (0..tables.len())
+                        .filter(|&i| tables[i].swapped.is_none() && !tables[i].table.is_empty())
+                        .collect();
+                    if !resident.is_empty() {
+                        let i = *rng.choose(&resident);
+                        tables[i].swapped = Some(pool.swap_out(&mut tables[i].table));
+                    }
+                }
+                // Restore (swap in) a random swapped table at its exact
+                // ring alignment.
+                9 => {
+                    let swapped: Vec<usize> = (0..tables.len())
+                        .filter(|&i| tables[i].swapped.is_some())
+                        .collect();
+                    if !swapped.is_empty() {
+                        let i = *rng.choose(&swapped);
+                        let s = tables[i].swapped.take().expect("selected as swapped");
+                        match pool.swap_in(&mut tables[i].table, &s) {
+                            Ok(()) => {}
+                            Err(Error::AdmissionDeferred(_)) => {
+                                tables[i].swapped = Some(s);
+                            }
+                            Err(e) => panic!("swap_in failed hard: {e}"),
+                        }
+                    }
+                }
+                // Close a random table: refcounts must hit zero for
+                // exclusively-owned blocks exactly now.
+                _ => {
+                    if !tables.is_empty() {
+                        let i = rng.below(tables.len() as u64) as usize;
+                        let mut t = tables.swap_remove(i);
+                        pool.release(&mut t.table);
+                    }
+                }
+            }
+            assert_eq!(
+                pool.evictions(),
+                expected_evictions,
+                "only committed ring overwrites count as evictions"
+            );
+            audit(win, bs, &pool, &tables);
+        }
+        for mut t in tables.drain(..) {
+            pool.release(&mut t.table);
+        }
+        assert_eq!(pool.used_blocks(), 0, "no block leaked at shutdown");
+        assert_eq!(pool.free_blocks(), pool.capacity());
+    });
+}
