@@ -239,6 +239,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             },
             ..SessionConfig::default()
         },
+        ..FleetConfig::default()
     };
     let rep = fleet::replay(&trace, fleet_cfg).map_err(|e| e.to_string())?;
     let oracle = trace

@@ -47,6 +47,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             batcher: BatcherConfig {
                 max_batch: batch,
                 max_wait_us: wait_us,
+                ..BatcherConfig::default()
             },
             ..ServerConfig::default()
         },

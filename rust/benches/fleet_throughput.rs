@@ -109,6 +109,7 @@ fn main() {
         abandon_fraction: 0.2,
         window: None,
         seed: 0xF1EE_7BE5,
+        ..TrafficConfig::default()
     };
     let trace = Trace::generate(&cfg).expect("trace generates");
     let total_steps = trace.total_steps();
@@ -127,6 +128,7 @@ fn main() {
             let fleet_cfg = FleetConfig {
                 shards,
                 sessions: shard_policy(&trace, threads),
+                ..FleetConfig::default()
             };
             let mut last = None;
             let stats = b.bench(

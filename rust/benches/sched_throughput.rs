@@ -1,0 +1,248 @@
+//! Scheduler perf-smoke: flush vs token-budgeted planning, wall-clock
+//! and virtual-cycle, on one seeded bursty trace with long prompts.
+//!
+//! The budgeted planner's chunked prefill ingests `prefill_chunk`
+//! prompt rows per wave where the flush policy ingests one, so a
+//! long-prompt trace amortizes per-wave overhead and reaches the first
+//! output token in far fewer waves. This bench is the regression guard
+//! for that claim (the tier-1 experiment test only sanity-bounds it):
+//!
+//! * TTFT p99 under `SchedPolicy::Budgeted` must not exceed flush —
+//!   chunking may only help the tail, never hurt it;
+//! * ITL p50 must stay within noise (≤ 2× flush) — chunking moves
+//!   prompt latency, it must not tax steady-state decode;
+//! * budgeted transcripts stay bit-identical to flush (scheduling is
+//!   invisible to the numbers), and the virtual-cycle roll-up is
+//!   deterministic across repeat replays.
+//!
+//! Emits `BENCH_sched.json` — per-policy TTFT/ITL percentiles
+//! (aggregate and per priority class) plus steps/kilocycle — for CI
+//! artifact upload alongside `BENCH_fleet.json`.
+//!
+//! ```bash
+//! cargo bench --bench sched_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::coordinator::fleet::{replay, FleetConfig};
+use sdpa_dataflow::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
+use sdpa_dataflow::coordinator::{
+    FleetRollup, Priority, SchedPolicy, SchedulerConfig, SessionConfig,
+};
+use sdpa_dataflow::runtime::kvcache::KvCacheConfig;
+
+struct Row {
+    policy: &'static str,
+    shards: usize,
+    total_steps: usize,
+    mean_ns: f64,
+    rollup: FleetRollup,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        let agg = self.rollup.aggregate();
+        format!(
+            "{{\"policy\":\"{}\",\"shards\":{},\"total_steps\":{},\
+             \"mean_ns\":{:.1},\"virtual_cycles\":{},\
+             \"steps_per_kilocycle\":{:.3},\
+             \"ttft_p50\":{},\"ttft_p95\":{},\"ttft_p99\":{},\
+             \"itl_p50\":{},\"itl_p95\":{},\
+             \"ttft_p99_interactive\":{},\"ttft_p99_standard\":{},\
+             \"ttft_p99_bulk\":{},\"itl_p50_interactive\":{},\
+             \"itl_p50_bulk\":{},\"deferrals\":{}}}",
+            self.policy,
+            self.shards,
+            self.total_steps,
+            self.mean_ns,
+            self.rollup.total_cycles(),
+            agg.steps_per_kilocycle(self.rollup.total_cycles()),
+            agg.ttft().pct(0.50).unwrap_or(0),
+            agg.ttft().pct(0.95).unwrap_or(0),
+            agg.ttft().pct(0.99).unwrap_or(0),
+            agg.inter_token().pct(0.50).unwrap_or(0),
+            agg.inter_token().pct(0.95).unwrap_or(0),
+            agg.ttft_for(Priority::Interactive).pct(0.99).unwrap_or(0),
+            agg.ttft_for(Priority::Standard).pct(0.99).unwrap_or(0),
+            agg.ttft_for(Priority::Bulk).pct(0.99).unwrap_or(0),
+            agg.inter_token_for(Priority::Interactive).pct(0.50).unwrap_or(0),
+            agg.inter_token_for(Priority::Bulk).pct(0.50).unwrap_or(0),
+            agg.deferrals(),
+        )
+    }
+}
+
+/// Every shard alone can hold the whole trace (the fleet bench's
+/// sizing rule), so the two policies differ only in wave planning.
+fn shard_policy(trace: &Trace) -> SessionConfig {
+    let block_size = 4;
+    let lanes = trace.sessions.len();
+    let per_session = trace.max_rows().div_ceil(block_size).max(1);
+    SessionConfig {
+        lanes,
+        max_sessions: lanes,
+        kv: KvCacheConfig {
+            block_size,
+            num_blocks: per_session * lanes + 8,
+        },
+        ..SessionConfig::default()
+    }
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let sessions = if quick_requested() { 8 } else { 12 };
+    let shard_counts: &[usize] = if quick_requested() { &[1] } else { &[1, 2] };
+
+    // Long prompts are the scenario chunked prefill exists for: flush
+    // ingests them one row per wave, budgeted `prefill_chunk` rows.
+    let trace = Trace::generate(&TrafficConfig {
+        sessions,
+        d: 8,
+        arrivals: Arrivals::Bursty {
+            rate: 4.0,
+            mean_on: 2.0,
+            mean_off: 4.0,
+        },
+        prompt: LenDist::Uniform { lo: 12, hi: 16 },
+        output: LenDist::Uniform { lo: 4, hi: 8 },
+        fork_fraction: 0.0,
+        abandon_fraction: 0.0,
+        interactive_fraction: 0.3,
+        bulk_fraction: 0.3,
+        window: None,
+        seed: 0x5C4E_DBE5,
+    })
+    .expect("trace generates");
+    let total_steps = trace.total_steps();
+    println!(
+        "trace: {} sessions, {} total steps (prompts 12–16 rows), last arrival at cycle {}",
+        trace.sessions.len(),
+        total_steps,
+        trace.last_arrival()
+    );
+
+    // Generous budgets: the only planned difference vs flush is
+    // multi-row (chunk-8) prompt ingestion, so the TTFT delta isolates
+    // chunking itself rather than budget-induced queueing.
+    let budgeted = SchedPolicy::Budgeted(SchedulerConfig {
+        max_batch_prefill_tokens: 256,
+        max_batch_total_tokens: 4096,
+        prefill_chunk: 8,
+        ..SchedulerConfig::default()
+    });
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &shards in shard_counts {
+        for policy in [SchedPolicy::Flush, budgeted] {
+            let fleet_cfg = FleetConfig {
+                shards,
+                sessions: shard_policy(&trace),
+                policy,
+            };
+            let mut last = None;
+            let stats = b.bench(
+                &format!("sched/replay_{}_shards{shards}", policy.name()),
+                || {
+                    let rep = replay(&trace, fleet_cfg).expect("replay completes");
+                    black_box(rep.transcripts.len());
+                    last = Some(rep);
+                },
+            );
+            let rep = last.expect("benched at least once");
+            // Determinism: a repeat replay reproduces the virtual-clock
+            // roll-up and placements exactly.
+            let again = replay(&trace, fleet_cfg).expect("replay completes");
+            assert_eq!(
+                rep.rollup.total_cycles(),
+                again.rollup.total_cycles(),
+                "virtual cycles must be deterministic"
+            );
+            assert_eq!(rep.placements, again.placements, "placement determinism");
+            rows.push(Row {
+                policy: policy.name(),
+                shards,
+                total_steps,
+                mean_ns: stats.mean_ns,
+                rollup: rep.rollup,
+            });
+        }
+    }
+
+    // Correctness ride-along: policy changes scheduling, not numbers.
+    for &shards in shard_counts {
+        let flush = replay(
+            &trace,
+            FleetConfig {
+                shards,
+                sessions: shard_policy(&trace),
+                policy: SchedPolicy::Flush,
+            },
+        )
+        .expect("flush replay");
+        let budg = replay(
+            &trace,
+            FleetConfig {
+                shards,
+                sessions: shard_policy(&trace),
+                policy: budgeted,
+            },
+        )
+        .expect("budgeted replay");
+        for (id, t) in &flush.transcripts {
+            assert_eq!(
+                budg.transcripts.get(id),
+                Some(t),
+                "shards={shards}: budgeted transcript {id} ≡ flush"
+            );
+        }
+    }
+
+    // The regression guard (virtual-cycle domain, so noise-free):
+    // chunked prefill must never regress the TTFT tail, and must leave
+    // median inter-token latency within noise.
+    println!();
+    for &shards in shard_counts {
+        let find = |name: &str| {
+            rows.iter().find(|r| r.shards == shards && r.policy == name).expect("measured")
+        };
+        let flush = find("flush");
+        let budg = find("budgeted");
+        let f_agg = flush.rollup.aggregate();
+        let b_agg = budg.rollup.aggregate();
+        let f_ttft = f_agg.ttft().pct(0.99).unwrap_or(0);
+        let b_ttft = b_agg.ttft().pct(0.99).unwrap_or(0);
+        let f_itl = f_agg.inter_token().pct(0.50).unwrap_or(0);
+        let b_itl = b_agg.inter_token().pct(0.50).unwrap_or(0);
+        println!(
+            "guard shards={shards}: ttft p99 {f_ttft} → {b_ttft} cyc \
+             ({:+.1}%), itl p50 {f_itl} → {b_itl} cyc",
+            if f_ttft > 0 {
+                100.0 * (b_ttft as f64 / f_ttft as f64 - 1.0)
+            } else {
+                0.0
+            }
+        );
+        assert!(
+            b_ttft <= f_ttft,
+            "shards={shards}: budgeted TTFT p99 regressed vs flush ({b_ttft} > {f_ttft} cycles)"
+        );
+        assert!(
+            b_itl <= f_itl.saturating_mul(2).max(8),
+            "shards={shards}: budgeted ITL p50 left the noise band ({b_itl} vs {f_itl} cycles)"
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_sched.json", &json).expect("write BENCH_sched.json");
+    println!("\nwrote BENCH_sched.json ({} rows)", rows.len());
+}

@@ -57,6 +57,7 @@ fn main() {
                 batcher: BatcherConfig {
                     max_batch,
                     max_wait_us: 1_000,
+                    ..BatcherConfig::default()
                 },
                 ..ServerConfig::default()
             },

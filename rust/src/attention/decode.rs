@@ -307,6 +307,278 @@ pub fn build_last_row(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttentio
     build_step(DecodeKind::MemoryFree, &w.q[w.n - 1], &w.k, &w.v, policy)
 }
 
+// ---------------------------------------------------------------------
+// Resumable prefill chunks
+// ---------------------------------------------------------------------
+
+/// The online-softmax running state `(m, r, ℓ⃗)` of one partially
+/// scanned attention row — exactly the state the memory-free mapping's
+/// three `Scan`s carry element to element (Eq. 4–5), lifted out of the
+/// graph so a prefill row can stop after any key and resume in a later
+/// wave.
+///
+/// Bit-exactness across the split is structural: the scans are *pure*
+/// f32 recurrences, so seeding a fresh segment's scan inits with the
+/// carry reproduces exactly the state sequence the unsplit scan would
+/// have traversed — the same "reorder the arithmetic, change nothing
+/// numerically" move the paper applies to the row reductions, applied
+/// here across waves. [`SoftmaxCarry::fresh`] is the ordinary inits
+/// `(−∞, 0, 0⃗)`, so an unsplit row is the degenerate one-segment case.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SoftmaxCarry {
+    /// Running maximum `m` over the scanned scores.
+    pub m: f32,
+    /// Running rescaled exponential sum `r`.
+    pub r: f32,
+    /// Running rescaled output accumulator `ℓ⃗` (head dimension wide).
+    pub acc: Vec<f32>,
+}
+
+impl SoftmaxCarry {
+    /// The state before any key: `(−∞, 0, 0⃗)` — identical to the scan
+    /// inits of the unsplit memory-free step.
+    pub fn fresh(d: usize) -> Self {
+        SoftmaxCarry {
+            m: f32::NEG_INFINITY,
+            r: 0.0,
+            acc: vec![0.0; d],
+        }
+    }
+
+    /// Whether no key has been folded in yet.
+    pub fn is_fresh(&self) -> bool {
+        self.m == f32::NEG_INFINITY && self.r == 0.0 && self.acc.iter().all(|&x| x == 0.0)
+    }
+
+    /// Flatten into the `[m, r, ℓ_0 … ℓ_{d−1}]` row a non-final chunk
+    /// segment sinks (the carry-state wire format between waves).
+    pub fn pack(&self) -> Vec<f32> {
+        let mut row = Vec::with_capacity(2 + self.acc.len());
+        row.push(self.m);
+        row.push(self.r);
+        row.extend_from_slice(&self.acc);
+        row
+    }
+
+    /// Parse a packed `[m, r, ℓ…]` carry row (the inverse of
+    /// [`Self::pack`]).
+    pub fn unpack(row: &[f32]) -> Result<SoftmaxCarry> {
+        if row.len() < 3 {
+            return Err(Error::Coordinator(format!(
+                "carry row has {} values, need at least 3 (m, r, ℓ⃗)",
+                row.len()
+            )));
+        }
+        Ok(SoftmaxCarry {
+            m: row[0],
+            r: row[1],
+            acc: row[2..].to_vec(),
+        })
+    }
+}
+
+/// Build one resumable chunk segment of a memory-free attention row:
+/// query `q` against the key span `keys`/`values` (a contiguous slice
+/// of the row's visible cache, in cache order), resuming from `carry`.
+///
+/// * `finalize = true` — this segment reaches the row's last visible
+///   key: the graph is the ordinary memory-free step pipeline with its
+///   scan inits seeded from the carry, and the sink emits the finished
+///   output row `o⃗ = ℓ⃗ / r` (width `d`). With a fresh carry and the
+///   full key span this is *exactly* [`build_step_rows_into`]'s
+///   memory-free graph.
+/// * `finalize = false` — the row stops mid-scan: the running-max scan
+///   emits `(Δ, e, m)` triples so the final `m` can be sampled beside
+///   `r` and `ℓ⃗`, and the sink emits the packed carry row
+///   `[m, r, ℓ_0 … ℓ_{d−1}]` (width `d + 2`) for the next wave to
+///   resume from. Δ and e are computed by the same expressions either
+///   way, so the downstream recurrences see bit-identical values.
+///
+/// Every FIFO stays depth 2 — a chunk segment keeps the paper's O(1)
+/// intermediate memory however long the row or short the segment.
+pub fn build_chunk_segment_into(
+    sc: &mut Scope<'_>,
+    q: &[f32],
+    keys: &[&[f32]],
+    values: &[&[f32]],
+    carry: &SoftmaxCarry,
+    finalize: bool,
+) -> Result<SinkHandle> {
+    let len = keys.len();
+    let d = q.len();
+    if len == 0 {
+        return Err(Error::Graph(
+            "chunk segment needs at least one cached K/V row".into(),
+        ));
+    }
+    if d == 0 {
+        return Err(Error::Graph("chunk segment: query row is empty".into()));
+    }
+    if values.len() != len {
+        return Err(Error::Graph(format!(
+            "chunk segment: {} keys but {} values",
+            len,
+            values.len()
+        )));
+    }
+    if let Some(row) = keys.iter().chain(values.iter()).find(|r| r.len() != d) {
+        return Err(Error::Graph(format!(
+            "chunk segment: cached row has dim {}, query has {}",
+            row.len(),
+            d
+        )));
+    }
+    if carry.acc.len() != d {
+        return Err(Error::Graph(format!(
+            "chunk segment: carry accumulator has dim {}, query has {}",
+            carry.acc.len(),
+            d
+        )));
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let q_rows = sc.source_vec("src_q", vec![Elem::vector(q)])?;
+    let q_rep = sc.repeat("rep_q", q_rows, len)?;
+    let k: Vec<Elem> = keys.iter().map(|r| Elem::vector(r)).collect();
+    let k_cols = sc.source_gen("src_k", len as u64, move |j| k[j as usize].clone())?;
+    let s = sc.zip("qk_dot", [q_rep, k_cols], move |xs| {
+        Elem::Scalar(dot(xs[0].as_vector(), xs[1].as_vector()) * scale)
+    })?;
+    let v: Vec<Elem> = values.iter().map(|r| Elem::vector(r)).collect();
+    let seed_max = Elem::Pair(carry.m, carry.m);
+
+    if finalize {
+        // The memory-free step pipeline, inits seeded from the carry.
+        let de = sc.scan(
+            "run_max",
+            s,
+            len,
+            seed_max,
+            |st, x| {
+                let (_, m_old) = st.pair();
+                let m_new = m_old.max(x.scalar());
+                Elem::Pair(m_old, m_new)
+            },
+            |st, x| {
+                let (m_old, m_new) = st.pair();
+                let delta = (m_old - m_new).exp();
+                let e = (x.scalar() - m_new).exp();
+                Elem::Pair(delta, e)
+            },
+        )?;
+        let [de_r, de_l] = sc.broadcast("bc_de", de, ["de_r", "de_l"])?;
+        let r_run = sc.scan(
+            "run_sum",
+            de_r,
+            len,
+            Elem::Scalar(carry.r),
+            |st, x| {
+                let (delta, e) = x.pair();
+                Elem::Scalar(st.scalar() * delta + e)
+            },
+            |st, _| st.clone(),
+        )?;
+        let r = sc.last_of("last_r", r_run, len)?;
+        let v_cols = sc.source_gen("src_v", len as u64, move |j| v[j as usize].clone())?;
+        let dev = sc.zip("zip_v", [de_l, v_cols], |xs| {
+            Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
+        })?;
+        let l_run = sc.scan(
+            "run_out",
+            dev,
+            len,
+            Elem::from(carry.acc.clone()),
+            |st, x| {
+                let (delta, e) = x.as_tuple()[0].pair();
+                let vv = x.as_tuple()[1].as_vector();
+                Elem::from(
+                    st.as_vector()
+                        .iter()
+                        .zip(vv)
+                        .map(|(acc, v)| acc * delta + e * v)
+                        .collect::<Vec<_>>(),
+                )
+            },
+            |st, _| st.clone(),
+        )?;
+        let l = sc.last_of("last_l", l_run, len)?;
+        let o = sc.zip("div", [l, r], |xs| {
+            let r = xs[1].scalar();
+            Elem::from(xs[0].as_vector().iter().map(|x| x / r).collect::<Vec<_>>())
+        })?;
+        sc.sink("sink_o", o, Some(1))
+    } else {
+        // Mid-row stop: the running-max scan emits (Δ, e, m) so the
+        // final m can ride to the carry sink beside r and ℓ⃗. Δ and e
+        // are the same expressions as above — the r/ℓ⃗ recurrences see
+        // bit-identical operands, only the container differs.
+        let dem = sc.scan(
+            "run_max",
+            s,
+            len,
+            seed_max,
+            |st, x| {
+                let (_, m_old) = st.pair();
+                let m_new = m_old.max(x.scalar());
+                Elem::Pair(m_old, m_new)
+            },
+            |st, x| {
+                let (m_old, m_new) = st.pair();
+                let delta = (m_old - m_new).exp();
+                let e = (x.scalar() - m_new).exp();
+                Elem::from(vec![delta, e, m_new])
+            },
+        )?;
+        let [de_r, de_l, de_m] = sc.broadcast("bc_de", dem, ["de_r", "de_l", "de_m"])?;
+        let r_run = sc.scan(
+            "run_sum",
+            de_r,
+            len,
+            Elem::Scalar(carry.r),
+            |st, x| {
+                let t = x.as_vector();
+                Elem::Scalar(st.scalar() * t[0] + t[1])
+            },
+            |st, _| st.clone(),
+        )?;
+        let r = sc.last_of("last_r", r_run, len)?;
+        let m_run = sc.map("m_of", de_m, |x| Elem::Scalar(x.as_vector()[2]))?;
+        let m = sc.last_of("last_m", m_run, len)?;
+        let v_cols = sc.source_gen("src_v", len as u64, move |j| v[j as usize].clone())?;
+        let dev = sc.zip("zip_v", [de_l, v_cols], |xs| {
+            Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
+        })?;
+        let l_run = sc.scan(
+            "run_out",
+            dev,
+            len,
+            Elem::from(carry.acc.clone()),
+            |st, x| {
+                let t = x.as_tuple()[0].as_vector();
+                let vv = x.as_tuple()[1].as_vector();
+                Elem::from(
+                    st.as_vector()
+                        .iter()
+                        .zip(vv)
+                        .map(|(acc, v)| acc * t[0] + t[1] * v)
+                        .collect::<Vec<_>>(),
+                )
+            },
+            |st, _| st.clone(),
+        )?;
+        let l = sc.last_of("last_l", l_run, len)?;
+        let packed = sc.zip("pack_carry", [m, r, l], |xs| {
+            let acc = xs[2].as_vector();
+            let mut row = Vec::with_capacity(2 + acc.len());
+            row.push(xs[0].scalar());
+            row.push(xs[1].scalar());
+            row.extend_from_slice(acc);
+            Elem::from(row)
+        })?;
+        sc.sink("sink_c", packed, Some(1))
+    }
+}
+
 /// One completed decode step.
 #[derive(Clone, Debug)]
 pub struct DecodeStepOutcome {
@@ -725,6 +997,41 @@ impl PagedDecodeSession {
         if let Some(undo) = self.staged.take() {
             pool.commit_append(undo);
         }
+        self.outputs.push(row);
+    }
+
+    /// Append one prompt row's `(k, v)` during chunked prefill. Unlike
+    /// [`Self::stage`], the undo token is handed to the caller: one
+    /// wave may append several prompt rows to one session, so the wave
+    /// (not the session) owns the transaction. Shapes are validated by
+    /// the session table at prompt admission.
+    pub(crate) fn append_prefill_row(
+        &mut self,
+        pool: &mut BlockPool,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<AppendUndo> {
+        debug_assert!(
+            self.staged.is_none(),
+            "prefill appends never overlap a staged decode step"
+        );
+        if self.is_preempted() {
+            return Err(Error::Coordinator(
+                "cannot prefill a preempted session (restore it first)".into(),
+            ));
+        }
+        pool.append_row(&mut self.table, k, v)
+    }
+
+    /// Revert one [`Self::append_prefill_row`] of a failed wave. Undos
+    /// must be applied most-recent-first per session.
+    pub(crate) fn undo_prefill_append(&mut self, pool: &mut BlockPool, undo: AppendUndo) {
+        pool.undo_append(&mut self.table, undo);
+    }
+
+    /// Record one finished prefill row's output (the wave commits the
+    /// matching appends itself, via the undo tokens it holds).
+    pub(crate) fn push_output_row(&mut self, row: Vec<f32>) {
         self.outputs.push(row);
     }
 
@@ -1249,6 +1556,155 @@ mod tests {
         a.close(&mut pool);
         b.close(&mut pool);
         assert_eq!(pool.used_blocks(), 0);
+    }
+
+    fn run_segment(
+        q: &[f32],
+        keys: &[&[f32]],
+        values: &[&[f32]],
+        carry: &SoftmaxCarry,
+        finalize: bool,
+    ) -> Vec<f32> {
+        let mut g = crate::sim::GraphBuilder::new();
+        let mut sc = g.root();
+        let h = build_chunk_segment_into(&mut sc, q, keys, values, carry, finalize).unwrap();
+        let mut engine = g.compile(DepthPolicy::Inferred).unwrap();
+        engine
+            .run(super::super::cycle_budget(keys.len()))
+            .unwrap();
+        let mut rows = h.rows();
+        assert_eq!(rows.len(), 1, "a chunk segment emits exactly one row");
+        rows.pop().unwrap()
+    }
+
+    #[test]
+    fn chunked_segments_reproduce_the_unsplit_step_bitwise() {
+        // The heart of chunked prefill: splitting a row's key scan at
+        // any point and carrying (m, r, ℓ⃗) across the split must give
+        // the bitwise-identical output row to the unsplit step.
+        let w = Workload::random(10, 4, 0xC41C);
+        let mut solo = build_step(
+            DecodeKind::MemoryFree,
+            &w.q[9],
+            &w.k,
+            &w.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        let (solo_rows, _) = solo.run().unwrap();
+        let keys: Vec<&[f32]> = w.k.iter().map(Vec::as_slice).collect();
+        let values: Vec<&[f32]> = w.v.iter().map(Vec::as_slice).collect();
+        for split in [1usize, 3, 4, 9] {
+            let packed = run_segment(
+                &w.q[9],
+                &keys[..split],
+                &values[..split],
+                &SoftmaxCarry::fresh(w.d),
+                false,
+            );
+            assert_eq!(packed.len(), w.d + 2, "carry row is [m, r, ℓ⃗]");
+            let carry = SoftmaxCarry::unpack(&packed).unwrap();
+            let row = run_segment(&w.q[9], &keys[split..], &values[split..], &carry, true);
+            assert_eq!(row, solo_rows[0], "split at {split} must not move a bit");
+        }
+        // Three-way split through a carry chain.
+        let c1 = SoftmaxCarry::unpack(&run_segment(
+            &w.q[9],
+            &keys[..2],
+            &values[..2],
+            &SoftmaxCarry::fresh(w.d),
+            false,
+        ))
+        .unwrap();
+        let c2 = SoftmaxCarry::unpack(&run_segment(&w.q[9], &keys[2..7], &values[2..7], &c1, false))
+            .unwrap();
+        let row = run_segment(&w.q[9], &keys[7..], &values[7..], &c2, true);
+        assert_eq!(row, solo_rows[0], "three-segment chain must not move a bit");
+    }
+
+    #[test]
+    fn fresh_full_span_segment_is_the_ordinary_step() {
+        // finalize + fresh carry + full key span builds the memory-free
+        // step graph: bitwise the same row.
+        let w = Workload::random(7, 4, 0xC41D);
+        let keys: Vec<&[f32]> = w.k.iter().map(Vec::as_slice).collect();
+        let values: Vec<&[f32]> = w.v.iter().map(Vec::as_slice).collect();
+        let row = run_segment(&w.q[6], &keys, &values, &SoftmaxCarry::fresh(w.d), true);
+        let mut solo = build_step(
+            DecodeKind::MemoryFree,
+            &w.q[6],
+            &w.k,
+            &w.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        let (solo_rows, _) = solo.run().unwrap();
+        assert_eq!(row, solo_rows[0]);
+    }
+
+    #[test]
+    fn carry_pack_unpack_roundtrips() {
+        let c = SoftmaxCarry {
+            m: 1.25,
+            r: 0.5,
+            acc: vec![0.1, -0.2, 0.3],
+        };
+        assert_eq!(SoftmaxCarry::unpack(&c.pack()).unwrap(), c);
+        assert!(SoftmaxCarry::fresh(3).is_fresh());
+        assert!(!c.is_fresh());
+        assert!(SoftmaxCarry::unpack(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn chunk_segment_rejects_bad_shapes() {
+        let q = [1.0f32, 2.0];
+        let k: Vec<&[f32]> = vec![&[1.0, 2.0]];
+        let v: Vec<&[f32]> = vec![&[1.0, 2.0]];
+        let mut g = crate::sim::GraphBuilder::new();
+        let mut sc = g.root();
+        // Empty span.
+        assert!(
+            build_chunk_segment_into(&mut sc, &q, &[], &[], &SoftmaxCarry::fresh(2), true).is_err()
+        );
+        // Carry of the wrong width.
+        assert!(build_chunk_segment_into(&mut sc, &q, &k, &v, &SoftmaxCarry::fresh(3), true)
+            .is_err());
+        // Ragged values.
+        let bad_v: Vec<&[f32]> = vec![&[1.0]];
+        assert!(
+            build_chunk_segment_into(&mut sc, &q, &k, &bad_v, &SoftmaxCarry::fresh(2), false)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn chunk_segments_keep_o1_memory() {
+        // The paper's O(1)-per-pipeline claim survives chunking: every
+        // FIFO of a mid-row segment peaks at ≤ 2 elements.
+        let w = Workload::random(32, 4, 0xC41E);
+        let keys: Vec<&[f32]> = w.k.iter().map(Vec::as_slice).collect();
+        let values: Vec<&[f32]> = w.v.iter().map(Vec::as_slice).collect();
+        let mut g = crate::sim::GraphBuilder::new();
+        let mut sc = g.root();
+        let h = build_chunk_segment_into(
+            &mut sc,
+            &w.q[31],
+            &keys[..20],
+            &values[..20],
+            &SoftmaxCarry::fresh(w.d),
+            false,
+        )
+        .unwrap();
+        let mut engine = g.compile(DepthPolicy::Inferred).unwrap();
+        let summary = engine.run(super::super::cycle_budget(20)).unwrap();
+        assert_eq!(h.rows().len(), 1);
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "chunk channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
     }
 
     #[test]

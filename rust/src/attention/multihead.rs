@@ -27,7 +27,7 @@
 //! linearly in lanes but stays O(1) in sequence length — the paper's
 //! claim, per pipeline.
 
-use super::decode::{build_step_rows_into, DecodeKind};
+use super::decode::{build_chunk_segment_into, build_step_rows_into, DecodeKind, SoftmaxCarry};
 use super::reference::Matrix;
 use super::workload::Workload;
 use super::{cycle_budget, memfree, DepthPolicy, FifoPlan};
@@ -251,6 +251,153 @@ pub fn build_decode_lanes_rows(
         engine: g.compile(policy)?,
         lanes,
         lens: steps.iter().map(|s| s.keys.len()).collect(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Mixed decode + chunked-prefill waves
+// ---------------------------------------------------------------------
+
+/// One prefill chunk segment of a wave: query row `q` resuming its key
+/// scan at `carry` over the gathered span `keys`/`values`. Scoped
+/// `lane{lane}p{seg}`, so several segments of one session coexist with
+/// each other (consecutive prompt rows in one wave) and never collide
+/// with a decode step's `lane{lane}` scope.
+pub struct LaneChunkRows<'a> {
+    /// Which decode-step mapping the owning session runs. Segments that
+    /// resume or stop mid-row require [`DecodeKind::MemoryFree`] (only
+    /// the online-softmax recurrence has a carryable state); a
+    /// fresh-carry finalizing segment is an ordinary whole-row step and
+    /// works for either kind.
+    pub kind: DecodeKind,
+    /// The lane index the owning session is pinned to.
+    pub lane: usize,
+    /// Segment index within this wave (scope disambiguator).
+    pub seg: usize,
+    /// The prompt row's query.
+    pub q: &'a [f32],
+    /// The key span this segment streams, in cache order.
+    pub keys: Vec<&'a [f32]>,
+    /// The value span this segment streams.
+    pub values: Vec<&'a [f32]>,
+    /// Online-softmax state entering the segment.
+    pub carry: SoftmaxCarry,
+    /// Whether this segment reaches the row's last visible key (sink
+    /// emits the output row) or stops mid-row (sink emits the packed
+    /// carry).
+    pub finalize: bool,
+}
+
+/// One unit of work in a mixed wave: a session's decode step or one
+/// prefill chunk segment.
+pub enum LaneWork<'a> {
+    /// An ordinary decode step (scope `lane{i}`).
+    Step(LaneStepRows<'a>),
+    /// A prefill chunk segment (scope `lane{i}p{j}`).
+    Chunk(LaneChunkRows<'a>),
+}
+
+/// A built mixed wave: one engine, one independent pipeline per work
+/// item. Decode-step sinks emit the step's output row; chunk sinks emit
+/// either the finished prompt row (`finalize`) or the packed
+/// `[m, r, ℓ⃗]` carry.
+pub struct BuiltMixedWave {
+    /// The shared engine.
+    pub engine: Engine,
+    /// Per-work-item output sinks, in the order the work was given.
+    pub sinks: Vec<SinkHandle>,
+    /// Per-work-item streamed lengths (cache len for steps, key-span
+    /// len for chunks) — the wave's cycle budget tracks the longest.
+    pub lens: Vec<usize>,
+}
+
+impl BuiltMixedWave {
+    /// Longest streamed span in the wave — bounds the wave's cycles.
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Run the wave to completion: one row per work item (output row or
+    /// packed carry), plus the shared run summary.
+    pub fn run(&mut self) -> Result<(Vec<Vec<f32>>, RunSummary)> {
+        let summary = self.engine.run(cycle_budget(self.max_len()))?;
+        let mut rows = Vec::with_capacity(self.sinks.len());
+        for (i, sink) in self.sinks.iter().enumerate() {
+            let mut out = sink.rows();
+            if out.len() != 1 {
+                return Err(Error::Coordinator(format!(
+                    "wave item {i}: expected one row, got {}",
+                    out.len()
+                )));
+            }
+            rows.push(out.pop().expect("checked length 1"));
+        }
+        Ok((rows, summary))
+    }
+}
+
+/// Build one engine carrying every work item of a mixed wave as its own
+/// spatial pipeline — the generalisation of [`build_decode_lanes_rows`]
+/// the budgeted scheduler runs: chunked prefill segments piggyback on
+/// the decode wave, costing cycles like one more lane instead of one
+/// more wave.
+pub fn build_mixed_wave(work: &[LaneWork<'_>], policy: DepthPolicy) -> Result<BuiltMixedWave> {
+    if work.is_empty() {
+        return Err(Error::Graph("mixed wave needs at least one work item".into()));
+    }
+    let mut g = GraphBuilder::new();
+    let mut sinks = Vec::with_capacity(work.len());
+    let mut lens = Vec::with_capacity(work.len());
+    for item in work {
+        match item {
+            LaneWork::Step(step) => {
+                let mut scope = g.scope(format!("lane{}", step.lane));
+                sinks.push(build_step_rows_into(
+                    &mut scope,
+                    step.kind,
+                    step.q,
+                    &step.keys,
+                    &step.values,
+                )?);
+                lens.push(step.keys.len());
+            }
+            LaneWork::Chunk(chunk) => {
+                let mut scope = g.scope(format!("lane{}p{}", chunk.lane, chunk.seg));
+                if chunk.carry.is_fresh() && chunk.finalize {
+                    // A whole fresh row is an ordinary step graph (and
+                    // the only chunk shape the buffered mapping has).
+                    sinks.push(build_step_rows_into(
+                        &mut scope,
+                        chunk.kind,
+                        chunk.q,
+                        &chunk.keys,
+                        &chunk.values,
+                    )?);
+                } else {
+                    if chunk.kind != DecodeKind::MemoryFree {
+                        return Err(Error::Graph(format!(
+                            "lane {}: only the memory-free mapping supports mid-row chunk \
+                             segments ({} has no carryable softmax state)",
+                            chunk.lane, chunk.kind
+                        )));
+                    }
+                    sinks.push(build_chunk_segment_into(
+                        &mut scope,
+                        chunk.q,
+                        &chunk.keys,
+                        &chunk.values,
+                        &chunk.carry,
+                        chunk.finalize,
+                    )?);
+                }
+                lens.push(chunk.keys.len());
+            }
+        }
+    }
+    Ok(BuiltMixedWave {
+        engine: g.compile(policy)?,
+        sinks,
+        lens,
     })
 }
 
@@ -522,5 +669,120 @@ mod tests {
             build_decode_lanes(&dup, DepthPolicy::Inferred),
             Err(Error::Graph(msg)) if msg.contains("duplicate")
         ));
+    }
+
+    #[test]
+    fn mixed_wave_runs_steps_and_chunks_bit_identically_to_solo() {
+        // One decode step and two prompt rows of another session share
+        // a wave; every sink must emit exactly what the same work
+        // computes alone.
+        let dec = Workload::random(6, 4, 0xD0);
+        let pre = Workload::random(5, 4, 0xD1);
+        let dec_keys: Vec<&[f32]> = dec.k.iter().map(Vec::as_slice).collect();
+        let dec_vals: Vec<&[f32]> = dec.v.iter().map(Vec::as_slice).collect();
+        let pre_keys: Vec<&[f32]> = pre.k.iter().map(Vec::as_slice).collect();
+        let pre_vals: Vec<&[f32]> = pre.v.iter().map(Vec::as_slice).collect();
+        let work = vec![
+            LaneWork::Step(LaneStepRows {
+                kind: DecodeKind::MemoryFree,
+                lane: 0,
+                q: &dec.q[5],
+                keys: dec_keys.clone(),
+                values: dec_vals.clone(),
+            }),
+            // Prompt row 2 of the prefill session, whole (fresh, final).
+            LaneWork::Chunk(LaneChunkRows {
+                kind: DecodeKind::MemoryFree,
+                lane: 1,
+                seg: 0,
+                q: &pre.q[2],
+                keys: pre_keys[..3].to_vec(),
+                values: pre_vals[..3].to_vec(),
+                carry: SoftmaxCarry::fresh(4),
+                finalize: true,
+            }),
+            // Prompt row 4, first two keys only (partial, carry out).
+            LaneWork::Chunk(LaneChunkRows {
+                kind: DecodeKind::MemoryFree,
+                lane: 1,
+                seg: 1,
+                q: &pre.q[4],
+                keys: pre_keys[..2].to_vec(),
+                values: pre_vals[..2].to_vec(),
+                carry: SoftmaxCarry::fresh(4),
+                finalize: false,
+            }),
+        ];
+        let mut wave = build_mixed_wave(&work, DepthPolicy::Inferred).unwrap();
+        let names = wave.engine.channel_names();
+        assert!(names.iter().any(|n| n.starts_with("lane0/")));
+        assert!(names.iter().any(|n| n.starts_with("lane1p0/")));
+        assert!(names.iter().any(|n| n.starts_with("lane1p1/")));
+        let (rows, _) = wave.run().unwrap();
+        assert_eq!(rows.len(), 3);
+
+        let mut solo_step = build_step(
+            DecodeKind::MemoryFree,
+            &dec.q[5],
+            &dec.k,
+            &dec.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        let (solo_rows, _) = solo_step.run().unwrap();
+        assert_eq!(rows[0], solo_rows[0], "decode lane ≡ solo step bitwise");
+
+        let mut solo_pre = build_step(
+            DecodeKind::MemoryFree,
+            &pre.q[2],
+            &pre.k[..3],
+            &pre.v[..3],
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        let (solo_pre_rows, _) = solo_pre.run().unwrap();
+        assert_eq!(rows[1], solo_pre_rows[0], "whole-row chunk ≡ solo step");
+
+        // The partial segment's carry resumes to the unsplit row 4.
+        let carry = SoftmaxCarry::unpack(&rows[2]).unwrap();
+        let resume = vec![LaneWork::Chunk(LaneChunkRows {
+            kind: DecodeKind::MemoryFree,
+            lane: 3,
+            seg: 0,
+            q: &pre.q[4],
+            keys: pre_keys[2..].to_vec(),
+            values: pre_vals[2..].to_vec(),
+            carry,
+            finalize: true,
+        })];
+        let mut wave2 = build_mixed_wave(&resume, DepthPolicy::Inferred).unwrap();
+        let (rows2, _) = wave2.run().unwrap();
+        let mut solo_full = build_step(
+            DecodeKind::MemoryFree,
+            &pre.q[4],
+            &pre.k,
+            &pre.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        let (solo_full_rows, _) = solo_full.run().unwrap();
+        assert_eq!(rows2[0], solo_full_rows[0], "resumed chunk ≡ unsplit row");
+
+        // Mid-row chunks demand the memory-free mapping.
+        let bad = vec![LaneWork::Chunk(LaneChunkRows {
+            kind: DecodeKind::Buffered,
+            lane: 0,
+            seg: 0,
+            q: &pre.q[4],
+            keys: pre_keys[..2].to_vec(),
+            values: pre_vals[..2].to_vec(),
+            carry: SoftmaxCarry::fresh(4),
+            finalize: false,
+        })];
+        assert!(matches!(
+            build_mixed_wave(&bad, DepthPolicy::Inferred),
+            Err(Error::Graph(msg)) if msg.contains("memory-free")
+        ));
+        assert!(build_mixed_wave(&[], DepthPolicy::Inferred).is_err());
     }
 }

@@ -22,6 +22,11 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Flush a class when its oldest request is this old (µs).
     pub max_wait_us: u64,
+    /// Token budget per flushed batch: a class of sequence length `n`
+    /// flushes at most `max_batch_tokens / n` requests at a time (never
+    /// below one), so long-sequence batches cannot monopolize the
+    /// executor. `usize::MAX` (the default) disables the cap.
+    pub max_batch_tokens: usize,
 }
 
 impl Default for BatcherConfig {
@@ -29,7 +34,17 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 8,
             max_wait_us: 2_000,
+            max_batch_tokens: usize::MAX,
         }
+    }
+}
+
+impl BatcherConfig {
+    /// The effective per-batch request cap for a shape class: the
+    /// request cap and the token budget, whichever binds first.
+    pub fn effective_max(&self, class: ShapeClass) -> usize {
+        let by_tokens = (self.max_batch_tokens / class.n.max(1)).max(1);
+        self.max_batch.min(by_tokens)
     }
 }
 
@@ -72,10 +87,11 @@ impl DynamicBatcher {
     /// Enqueue a request at time `now_us`. Returns a batch if the
     /// request's class just reached `max_batch`.
     pub fn push(&mut self, req: AttnRequest, class: ShapeClass, now_us: u64) -> Option<Batch> {
+        let limit = self.cfg.effective_max(class);
         let q = self.queues.entry(class).or_default();
         q.push_back((req, now_us));
-        if q.len() >= self.cfg.max_batch {
-            return self.take(class, self.cfg.max_batch);
+        if q.len() >= limit {
+            return self.take(class, limit);
         }
         None
     }
@@ -93,7 +109,7 @@ impl DynamicBatcher {
             .collect();
         expired
             .into_iter()
-            .filter_map(|c| self.take(c, self.cfg.max_batch))
+            .filter_map(|c| self.take(c, self.cfg.effective_max(c)))
             .collect()
     }
 
@@ -102,7 +118,7 @@ impl DynamicBatcher {
         let classes: Vec<ShapeClass> = self.queues.keys().copied().collect();
         let mut out = Vec::new();
         for c in classes {
-            while let Some(b) = self.take(c, self.cfg.max_batch) {
+            while let Some(b) = self.take(c, self.cfg.effective_max(c)) {
                 out.push(b);
             }
         }
@@ -168,6 +184,7 @@ mod tests {
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 3,
             max_wait_us: 1_000_000,
+            ..BatcherConfig::default()
         });
         let mut rxs = Vec::new();
         for id in 0..2 {
@@ -188,6 +205,7 @@ mod tests {
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 8,
             max_wait_us: 100,
+            ..BatcherConfig::default()
         });
         let (r, c, _rx) = req(0, 64, 64);
         b.push(r, c, 1_000);
@@ -202,6 +220,7 @@ mod tests {
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 2,
             max_wait_us: 1_000_000,
+            ..BatcherConfig::default()
         });
         let (r0, c0, _rx0) = req(0, 64, 64);
         let (r1, c1, _rx1) = req(1, 128, 64);
@@ -219,6 +238,7 @@ mod tests {
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 4,
             max_wait_us: 1_000_000,
+            ..BatcherConfig::default()
         });
         let mut rxs = Vec::new();
         for id in 0..10 {
@@ -244,6 +264,35 @@ mod tests {
         assert_eq!(b.oldest_enqueue_us(), Some(300));
     }
 
+    #[test]
+    fn token_budget_caps_long_sequence_batches() {
+        // 128 tokens per batch: n=64 flushes at 2 requests even though
+        // max_batch allows 8, n=32 at 4, and the floor keeps a single
+        // over-budget request flowing.
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait_us: 1_000_000,
+            max_batch_tokens: 128,
+        };
+        assert_eq!(cfg.effective_max(ShapeClass { n: 64, d: 16 }), 2);
+        assert_eq!(cfg.effective_max(ShapeClass { n: 32, d: 16 }), 4);
+        assert_eq!(
+            cfg.effective_max(ShapeClass { n: 4096, d: 16 }),
+            1,
+            "an over-budget class still makes progress"
+        );
+        let mut b = DynamicBatcher::new(cfg);
+        let mut rxs = Vec::new();
+        let (r, c, rx) = req(0, 64, 16);
+        rxs.push(rx);
+        assert!(b.push(r, c, 0).is_none());
+        let (r, c, rx) = req(1, 64, 16);
+        rxs.push(rx);
+        let batch = b.push(r, c, 0).expect("second n=64 request flushes");
+        assert_eq!(batch.len(), 2, "token budget binds before max_batch");
+        assert_eq!(b.pending(), 0);
+    }
+
     /// Property: across random interleavings of pushes and polls, no
     /// request is lost or duplicated, batches never exceed max_batch,
     /// batches are shape-homogeneous, and per-class FIFO order holds.
@@ -254,6 +303,7 @@ mod tests {
             let mut b = DynamicBatcher::new(BatcherConfig {
                 max_batch,
                 max_wait_us: 50,
+                ..BatcherConfig::default()
             });
             let classes = [(32usize, 16usize), (64, 16), (64, 64)];
             let total = 30 + rng.below(50);

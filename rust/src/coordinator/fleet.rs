@@ -27,10 +27,11 @@
 //! map, and a [`FleetRollup`] of per-shard + aggregate throughput,
 //! TTFT, and inter-token latency.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use super::request::{DecodeStepRequest, DecodeStepResponse};
-use super::sessions::{SessionConfig, SessionTable};
+use super::sched::{plan_wave, CandidateKind, PlanAction, Priority, SchedPolicy, WaveCandidate};
+use super::sessions::{PrefillPrompt, SessionConfig, SessionTable, WaveOutcome, WaveRequest};
 use super::stats::FleetRollup;
 use super::traffic::Trace;
 use crate::attention::reference::Matrix;
@@ -52,6 +53,10 @@ pub struct FleetConfig {
     /// each shard's wave engines inherit it, so one knob sets the
     /// worker-thread count fleet-wide (bit-identical for every value).
     pub sessions: SessionConfig,
+    /// Wave-planning policy each shard replays under. Budgets apply
+    /// **per shard** — every fabric plans its own wave against its own
+    /// token budgets, mirroring per-replica router budgets.
+    pub policy: SchedPolicy,
 }
 
 impl Default for FleetConfig {
@@ -59,6 +64,7 @@ impl Default for FleetConfig {
         FleetConfig {
             shards: 2,
             sessions: SessionConfig::default(),
+            policy: SchedPolicy::default(),
         }
     }
 }
@@ -162,9 +168,33 @@ impl Fleet {
     /// that defers admission falls through to the next; the open only
     /// defers when every shard deferred.
     pub fn open(&mut self, d: usize) -> Result<u64> {
+        self.open_with(d, None, Priority::default(), None)
+    }
+
+    /// Open a **sliding-window** session somewhere in the fleet (same
+    /// least-loaded placement and deferral fall-through as
+    /// [`Self::open`]): every step attends only the last `window`
+    /// cached rows, and the owning shard's pool recycles blocks that
+    /// slide wholly out of the window, so the session is exempt from
+    /// `max_len` — see [`SessionTable::open_windowed`].
+    pub fn open_windowed(&mut self, d: usize, window: usize) -> Result<u64> {
+        self.open_with(d, Some(window), Priority::default(), None)
+    }
+
+    /// Full-spec open: optional sliding window, [`Priority`] class, and
+    /// an optional prompt the owning shard ingests via planner-granted
+    /// chunked prefill ([`SessionTable::wave`]). Placement and deferral
+    /// fall-through are the same as [`Self::open`].
+    pub fn open_with(
+        &mut self,
+        d: usize,
+        window: Option<usize>,
+        priority: Priority,
+        prompt: Option<PrefillPrompt>,
+    ) -> Result<u64> {
         let mut last_defer = String::new();
         for s in self.placement_order() {
-            match self.shards[s].open(d) {
+            match self.shards[s].open_with_spec(d, window, priority, prompt.clone()) {
                 Ok(local) => return Ok(self.register(s, local)),
                 Err(Error::AdmissionDeferred(msg)) => last_defer = msg,
                 Err(e) => return Err(e),
@@ -175,24 +205,18 @@ impl Fleet {
         )))
     }
 
-    /// Open a **sliding-window** session somewhere in the fleet (same
-    /// least-loaded placement and deferral fall-through as
-    /// [`Self::open`]): every step attends only the last `window`
-    /// cached rows, and the owning shard's pool recycles blocks that
-    /// slide wholly out of the window, so the session is exempt from
-    /// `max_len` — see [`SessionTable::open_windowed`].
-    pub fn open_windowed(&mut self, d: usize, window: usize) -> Result<u64> {
-        let mut last_defer = String::new();
-        for s in self.placement_order() {
-            match self.shards[s].open_windowed(d, window) {
-                Ok(local) => return Ok(self.register(s, local)),
-                Err(Error::AdmissionDeferred(msg)) => last_defer = msg,
-                Err(e) => return Err(e),
-            }
-        }
-        Err(Error::AdmissionDeferred(format!(
-            "every shard deferred the windowed open (last: {last_defer})"
-        )))
+    /// Prompt rows a session has yet to ingest (see
+    /// [`SessionTable::prefill_remaining`]).
+    pub fn prefill_remaining(&self, id: u64) -> Option<usize> {
+        let r = self.route.get(&id)?;
+        self.shards[r.shard].prefill_remaining(r.local)
+    }
+
+    /// Pending-prefill shape for wave planning (see
+    /// [`SessionTable::prefill_state`]).
+    pub fn prefill_state(&self, id: u64) -> Option<(usize, usize, usize, bool)> {
+        let r = self.route.get(&id)?;
+        self.shards[r.shard].prefill_state(r.local)
     }
 
     /// Fork a session from `parent`'s cached prefix. Affinity rule:
@@ -260,6 +284,72 @@ impl Fleet {
         (results, wave_cycles)
     }
 
+    /// One **mixed** fleet scheduling iteration: like
+    /// [`Self::step_wave`], but requests are planner grants — decode
+    /// steps beside chunked-prefill segments — routed to each owning
+    /// shard's [`SessionTable::wave`]. Results come back in input
+    /// order with global ids restored; the cycle cost is the max over
+    /// shard waves.
+    pub fn wave(&mut self, reqs: &[WaveRequest]) -> (Vec<Result<WaveOutcome>>, u64) {
+        let mut results: Vec<Option<Result<WaveOutcome>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, req) in reqs.iter().enumerate() {
+            match self.route.get(&req.session()) {
+                Some(r) => per_shard[r.shard].push(i),
+                None => {
+                    results[i] = Some(Err(Error::Coordinator(format!(
+                        "unknown fleet session {}",
+                        req.session()
+                    ))));
+                }
+            }
+        }
+        let mut wave_cycles = 0u64;
+        for (s, members) in per_shard.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let local_reqs: Vec<WaveRequest> = members
+                .iter()
+                .map(|&i| {
+                    let local = self.route[&reqs[i].session()].local;
+                    match &reqs[i] {
+                        WaveRequest::Step(req) => WaveRequest::Step(req.with_session(local)),
+                        WaveRequest::Prefill {
+                            max_rows, max_keys, ..
+                        } => WaveRequest::Prefill {
+                            session: local,
+                            max_rows: *max_rows,
+                            max_keys: *max_keys,
+                        },
+                    }
+                })
+                .collect();
+            let shard_results = self.shards[s].wave(&local_reqs);
+            for (&i, res) in members.iter().zip(shard_results) {
+                results[i] = Some(match res {
+                    Ok(WaveOutcome::Step(mut resp)) => {
+                        wave_cycles = wave_cycles.max(resp.cycles);
+                        resp.session = reqs[i].session();
+                        Ok(WaveOutcome::Step(resp))
+                    }
+                    Ok(WaveOutcome::Prefill(mut prog)) => {
+                        wave_cycles = wave_cycles.max(prog.cycles);
+                        prog.session = reqs[i].session();
+                        Ok(WaveOutcome::Prefill(prog))
+                    }
+                    Err(e) => Err(e),
+                });
+            }
+        }
+        let results = results
+            .into_iter()
+            .map(|r| r.expect("every fleet request resolved"))
+            .collect();
+        (results, wave_cycles)
+    }
+
     /// Retire a session; returns its shard and transcript, or `None`
     /// for an unknown id.
     pub fn close(&mut self, id: u64) -> Option<(usize, Matrix)> {
@@ -311,7 +401,27 @@ struct SessionState {
 /// that prefix is admitted (so no replay lets the parent grow past the
 /// prefix the trace promised the children), and a finished parent's
 /// close waits for the same condition.
+///
+/// `cfg.policy` selects the wave planner. Under [`SchedPolicy::Flush`]
+/// every session's prompt rows replay as ordinary decode steps (the
+/// legacy path and the differential oracle). Under
+/// [`SchedPolicy::Budgeted`] fresh sessions carry their prompt into
+/// admission and each shard plans token-budgeted waves that mix
+/// chunked-prefill segments with decode steps — transcripts stay
+/// bit-identical to the flush path and the standalone oracle either
+/// way. TTFT in both paths is arrival → the first **output** row (the
+/// row at index `prompt_len`); prompt rows land in the inter-token
+/// stream.
 pub fn replay(trace: &Trace, cfg: FleetConfig) -> Result<Replay> {
+    match cfg.policy {
+        SchedPolicy::Flush => replay_flush(trace, cfg),
+        SchedPolicy::Budgeted(_) => replay_budgeted(trace, cfg),
+    }
+}
+
+/// The legacy flush replay: one pending step per admitted session,
+/// every wave (prompt rows included).
+fn replay_flush(trace: &Trace, cfg: FleetConfig) -> Result<Replay> {
     let mut fleet = Fleet::new(cfg)?;
     let mut rollup = FleetRollup::new(fleet.shard_count());
     let n = trace.sessions.len();
@@ -490,13 +600,304 @@ pub fn replay(trace: &Trace, cfg: FleetConfig) -> Result<Replay> {
         for (sid, res) in candidates.into_iter().zip(results) {
             match res {
                 Ok(_) => {
-                    let arrival = trace.sessions[sid].arrival;
+                    let ts = &trace.sessions[sid];
                     let s = &mut st[sid];
-                    let first = s.done == 0;
-                    let since = if first { arrival } else { s.last_done };
-                    rollup.record_step(s.shard, first, now.saturating_sub(since));
+                    // TTFT is arrival → first *output* row; the prompt
+                    // rows before it are inter-token samples (their
+                    // first one also counts from arrival).
+                    let first = s.done == ts.prompt_len;
+                    let since = if first || s.done == 0 {
+                        ts.arrival
+                    } else {
+                        s.last_done
+                    };
+                    rollup.record_step_for(s.shard, ts.priority, first, now.saturating_sub(since));
                     s.done += 1;
                     s.last_done = now;
+                }
+                Err(Error::AdmissionDeferred(_)) => {
+                    rollup.record_deferral(Some(st[sid].shard));
+                    retry_first.push(sid);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    rollup.set_total_cycles(now);
+    Ok(Replay {
+        transcripts,
+        placements,
+        rollup,
+    })
+}
+
+/// The budgeted replay: fresh sessions are admitted **with** their
+/// prompt, each shard plans its own token-budgeted wave
+/// ([`plan_wave`]) over prefill and decode candidates, and grants run
+/// through [`Fleet::wave`]. Session `done` counts prompt rows ingested
+/// plus decode steps, so the fork/close gates read identically to the
+/// flush path (a fork's pinned prefix is exactly the parent's prompt).
+fn replay_budgeted(trace: &Trace, cfg: FleetConfig) -> Result<Replay> {
+    let mut fleet = Fleet::new(cfg)?;
+    let mut rollup = FleetRollup::new(fleet.shard_count());
+    let n = trace.sessions.len();
+
+    let mut st: Vec<SessionState> = trace
+        .sessions
+        .iter()
+        .map(|s| SessionState {
+            rows: s.rows(),
+            steps: s.steps(),
+            done: 0,
+            global: None,
+            shard: 0,
+            closed: false,
+            last_done: 0,
+        })
+        .collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for s in &trace.sessions {
+        if let Some(p) = s.parent {
+            children[p as usize].push(s.id as usize);
+        }
+    }
+
+    let mut transcripts: HashMap<u64, Matrix> = HashMap::new();
+    let mut placements: HashMap<u64, usize> = HashMap::new();
+    let mut now: u64 = 0;
+    let mut next_arrival = 0usize;
+    let mut pending: VecDeque<usize> = VecDeque::new();
+    let mut retry_first: Vec<usize> = Vec::new();
+    let mut ages: HashMap<usize, u64> = HashMap::new();
+    let mut iterations = 0u64;
+
+    loop {
+        iterations += 1;
+        if iterations > REPLAY_ITERATION_LIMIT {
+            return Err(Error::Coordinator(format!(
+                "trace replay exceeded {REPLAY_ITERATION_LIMIT} iterations \
+                 (suspected livelock — raise per-shard lanes/max_sessions/blocks)"
+            )));
+        }
+
+        while next_arrival < n && trace.sessions[next_arrival].arrival <= now {
+            pending.push_back(next_arrival);
+            next_arrival += 1;
+        }
+
+        // Admissions, FIFO: a fresh session carries its prompt in (the
+        // shard ingests it via planner-granted chunks); a fork waits
+        // until its parent is admitted and holds the pinned prefix —
+        // `done ≥ fork_at` implies the parent's prefill completed,
+        // since prompt rows count into `done` first.
+        let mut still: VecDeque<usize> = VecDeque::new();
+        while let Some(sid) = pending.pop_front() {
+            let ts = &trace.sessions[sid];
+            let attempt = match ts.parent {
+                None => {
+                    let prompt = (ts.prompt_len > 0).then(|| {
+                        let rows = &st[sid].rows;
+                        PrefillPrompt {
+                            q: rows.q[..ts.prompt_len].to_vec(),
+                            k: rows.k[..ts.prompt_len].to_vec(),
+                            v: rows.v[..ts.prompt_len].to_vec(),
+                        }
+                    });
+                    Some(fleet.open_with(ts.d, ts.window, ts.priority, prompt))
+                }
+                Some(p) => {
+                    let parent = &st[p as usize];
+                    match parent.global {
+                        Some(g) if parent.done >= ts.fork_at => Some(fleet.fork(g)),
+                        _ => None,
+                    }
+                }
+            };
+            match attempt {
+                None => still.push_back(sid),
+                Some(Ok(g)) => {
+                    let shard = fleet.shard_of(g).expect("just placed");
+                    st[sid].global = Some(g);
+                    st[sid].shard = shard;
+                    placements.insert(sid as u64, shard);
+                    rollup.record_open(shard);
+                }
+                Some(Err(Error::AdmissionDeferred(_))) => {
+                    rollup.record_deferral(None);
+                    still.push_back(sid);
+                }
+                Some(Err(e)) => return Err(e),
+            }
+        }
+        pending = still;
+
+        // Closes: identical gating to the flush path.
+        for sid in 0..n {
+            let ready = {
+                let s = &st[sid];
+                !s.closed
+                    && s.global.is_some()
+                    && s.done >= s.steps
+                    && children[sid].iter().all(|&c| st[c].global.is_some())
+            };
+            if ready {
+                let g = st[sid].global.expect("checked above");
+                let (shard, transcript) =
+                    fleet.close(g).expect("routed session must close");
+                transcripts.insert(sid as u64, transcript);
+                rollup.record_close(shard);
+                st[sid].closed = true;
+            }
+        }
+
+        // Wave candidates, grouped by owning shard: a session mid-
+        // prompt is a prefill candidate; otherwise its next decode
+        // step is, behind the same fork-hold gate as the flush path.
+        let mut per_shard: Vec<(Vec<usize>, Vec<WaveCandidate>)> =
+            vec![(Vec::new(), Vec::new()); fleet.shard_count()];
+        for sid in 0..n {
+            let s = &st[sid];
+            if s.closed || s.global.is_none() || s.done >= s.steps {
+                continue;
+            }
+            let g = s.global.expect("admitted");
+            let kind = match fleet.prefill_state(g) {
+                Some((rows_total, next_row, keys_done, splittable)) => CandidateKind::Prefill {
+                    rows_total,
+                    next_row,
+                    keys_done,
+                    splittable,
+                },
+                None => {
+                    let gate = trace.sessions[sid].prompt_len;
+                    if !children[sid].is_empty()
+                        && s.done == gate
+                        && children[sid].iter().any(|&c| st[c].global.is_none())
+                    {
+                        continue;
+                    }
+                    CandidateKind::Decode {
+                        keys_cost: fleet.len_of(g).unwrap_or(0) + 1,
+                    }
+                }
+            };
+            let (sids, cands) = &mut per_shard[s.shard];
+            sids.push(sid);
+            cands.push(WaveCandidate {
+                session: g,
+                kind,
+                priority: trace.sessions[sid].priority,
+                age: ages.get(&sid).copied().unwrap_or(0),
+            });
+        }
+
+        // Per-shard plans under the shard's own budgets; deferred
+        // sessions rotate first within their shard, budget-skipped
+        // candidates age one wave.
+        let mut reqs: Vec<WaveRequest> = Vec::new();
+        let mut req_sids: Vec<usize> = Vec::new();
+        for (sids, cands) in per_shard.iter_mut() {
+            if cands.is_empty() {
+                continue;
+            }
+            let mut order: Vec<usize> = (0..cands.len()).collect();
+            order.sort_by_key(|&j| (!retry_first.contains(&sids[j]), sids[j]));
+            let sorted_sids: Vec<usize> = order.iter().map(|&j| sids[j]).collect();
+            let sorted: Vec<WaveCandidate> = order.iter().map(|&j| cands[j]).collect();
+            let plan = plan_wave(&cfg.policy, &sorted);
+            let planned: HashSet<u64> = plan.iter().map(|p| p.session).collect();
+            for (j, c) in sorted.iter().enumerate() {
+                if !planned.contains(&c.session) {
+                    *ages.entry(sorted_sids[j]).or_insert(0) += 1;
+                }
+            }
+            for item in &plan {
+                let j = sorted
+                    .iter()
+                    .position(|c| c.session == item.session)
+                    .expect("planned from candidates");
+                let sid = sorted_sids[j];
+                match item.action {
+                    PlanAction::Step => {
+                        let s = &st[sid];
+                        let t = s.done;
+                        reqs.push(WaveRequest::Step(DecodeStepRequest {
+                            session: item.session,
+                            q: s.rows.q[t].clone(),
+                            k: s.rows.k[t].clone(),
+                            v: s.rows.v[t].clone(),
+                        }));
+                    }
+                    PlanAction::Prefill { max_rows, max_keys } => {
+                        reqs.push(WaveRequest::Prefill {
+                            session: item.session,
+                            max_rows,
+                            max_keys,
+                        });
+                    }
+                }
+                req_sids.push(sid);
+            }
+        }
+
+        // Nothing runnable: jump to the next arrival, finish, or
+        // diagnose a stuck replay — mirroring the flush path.
+        if reqs.is_empty() {
+            if next_arrival < n {
+                now = now.max(trace.sessions[next_arrival].arrival);
+                continue;
+            }
+            if st.iter().all(|s| s.closed) {
+                break;
+            }
+            if !pending.is_empty() {
+                return Err(Error::Coordinator(format!(
+                    "trace replay deadlocked at cycle {now}: {} sessions wait on \
+                     admission but no step can run to free capacity (raise \
+                     per-shard lanes/max_sessions for this trace)",
+                    pending.len()
+                )));
+            }
+            continue;
+        }
+
+        let (results, cycles) = fleet.wave(&reqs);
+        now += cycles.max(1);
+        retry_first.clear();
+        for (sid, res) in req_sids.into_iter().zip(results) {
+            let ts = &trace.sessions[sid];
+            match res {
+                Ok(WaveOutcome::Step(_)) => {
+                    let s = &mut st[sid];
+                    let first = s.done == ts.prompt_len;
+                    let since = if first || s.done == 0 {
+                        ts.arrival
+                    } else {
+                        s.last_done
+                    };
+                    rollup.record_step_for(s.shard, ts.priority, first, now.saturating_sub(since));
+                    s.done += 1;
+                    s.last_done = now;
+                    ages.remove(&sid);
+                }
+                Ok(WaveOutcome::Prefill(prog)) => {
+                    // Rows the grant finalized this wave enter the
+                    // roll-up as inter-token samples (the first from
+                    // arrival); a mid-row partial carries no new row.
+                    let s = &mut st[sid];
+                    while s.done < prog.rows_done {
+                        let since = if s.done == 0 { ts.arrival } else { s.last_done };
+                        rollup.record_step_for(
+                            s.shard,
+                            ts.priority,
+                            false,
+                            now.saturating_sub(since),
+                        );
+                        s.done += 1;
+                        s.last_done = now;
+                    }
+                    ages.remove(&sid);
                 }
                 Err(Error::AdmissionDeferred(_)) => {
                     rollup.record_deferral(Some(st[sid].shard));
@@ -534,6 +935,7 @@ mod tests {
                 },
                 ..SessionConfig::default()
             },
+            ..FleetConfig::default()
         }
     }
 
@@ -695,6 +1097,7 @@ mod tests {
             abandon_fraction: 0.3,
             window: None,
             seed: 0xF1EE7,
+            ..TrafficConfig::default()
         })
         .unwrap();
         // Roomy shards: every shard alone fits the whole trace, so a
@@ -710,6 +1113,7 @@ mod tests {
                 },
                 ..SessionConfig::default()
             },
+            ..FleetConfig::default()
         };
         let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
         let a = replay(&trace, roomy).unwrap();
@@ -737,5 +1141,73 @@ mod tests {
         assert!(a.rollup.total_cycles() > 0);
         let firsts = a.rollup.aggregate().ttft().count();
         assert_eq!(firsts, 8, "one TTFT sample per session");
+    }
+
+    #[test]
+    fn budgeted_replay_matches_oracle_and_flush_transcripts() {
+        use crate::coordinator::sched::SchedulerConfig;
+        let trace = Trace::generate(&TrafficConfig {
+            sessions: 8,
+            d: 3,
+            arrivals: Arrivals::Poisson { rate: 2.0 },
+            prompt: LenDist::Uniform { lo: 2, hi: 6 },
+            output: LenDist::Uniform { lo: 2, hi: 4 },
+            fork_fraction: 0.4,
+            abandon_fraction: 0.3,
+            interactive_fraction: 0.3,
+            bulk_fraction: 0.3,
+            window: None,
+            seed: 0xB0D6E7,
+            ..TrafficConfig::default()
+        })
+        .unwrap();
+        let roomy = |policy| FleetConfig {
+            shards: 2,
+            sessions: SessionConfig {
+                lanes: 8,
+                max_sessions: 8,
+                kv: KvCacheConfig {
+                    block_size: 4,
+                    num_blocks: 64,
+                },
+                ..SessionConfig::default()
+            },
+            policy,
+        };
+        let budgeted = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_prefill_tokens: 4,
+            max_batch_total_tokens: 48,
+            prefill_chunk: 2,
+            ..SchedulerConfig::default()
+        });
+        let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
+        let flush = replay(&trace, roomy(SchedPolicy::Flush)).unwrap();
+        let a = replay(&trace, roomy(budgeted)).unwrap();
+        let b = replay(&trace, roomy(budgeted)).unwrap();
+        assert_eq!(a.transcripts.len(), 8, "every session closes");
+        for s in &trace.sessions {
+            assert_eq!(
+                a.transcripts[&s.id], oracle[&s.id],
+                "budgeted session {} must be bit-identical to the oracle",
+                s.id
+            );
+            assert_eq!(
+                a.transcripts[&s.id], flush.transcripts[&s.id],
+                "budgeted and flush transcripts agree for session {}",
+                s.id
+            );
+        }
+        assert_eq!(a.placements, b.placements, "placement is deterministic");
+        assert_eq!(a.rollup.total_cycles(), b.rollup.total_cycles());
+        assert_eq!(
+            a.rollup.aggregate().steps() as usize,
+            trace.total_steps(),
+            "prompt rows and decode steps all enter the roll-up"
+        );
+        assert_eq!(
+            a.rollup.aggregate().ttft().count(),
+            8,
+            "one TTFT sample (first output row) per session"
+        );
     }
 }

@@ -24,15 +24,27 @@
 //!   [`BlockPool`](crate::runtime::kvcache::BlockPool): sessions can
 //!   fork from a shared prefix (refcounted blocks, copy-on-write
 //!   tails), pool exhaustion preempts victims (swap-out, bit-exact
-//!   swap-in), and full tables/pools *defer* admission
-//!   ([`crate::Error::AdmissionDeferred`]) for the server to requeue
-//!   instead of hard-failing.
+//!   swap-in; lower [`Priority`] classes first), and full tables/pools
+//!   *defer* admission ([`crate::Error::AdmissionDeferred`]) for the
+//!   server to requeue instead of hard-failing.
+//!   [`SessionTable::wave`] additionally mixes **chunked prefill**
+//!   into decode waves: prompt rows ingest in planner-granted
+//!   segments that carry online-softmax state across waves,
+//!   bit-identical to stepping the prompt through a solo chain.
+//! * [`sched`] — the token-budget, SLO-aware wave planner: per-wave
+//!   prefill/total token budgets, a waiting/served admission ratio,
+//!   [`Priority`] classes with per-class deadlines, and starvation-free
+//!   aging ([`plan_wave`]). The legacy flush policy (every candidate,
+//!   every wave) remains the default and the differential oracle.
 //! * [`server`] — a worker thread owning the executor: drains the
 //!   ingress queue; prefill batches route to the smallest artifact that
-//!   fits (padding as needed) while each scheduling iteration gathers
-//!   one pending decode step from every active session and runs them as
-//!   a wave across the lane pool — iteration-level continuous batching,
-//!   with prefill and decode interleaving through one ingress.
+//!   fits (padding as needed) while each scheduling iteration plans a
+//!   wave over the active sessions — under [`SchedPolicy::Flush`] one
+//!   pending decode step from every session, under
+//!   [`SchedPolicy::Budgeted`] the planner's token-budgeted,
+//!   priority/deadline-ordered selection with chunked prefill riding
+//!   beside decode — iteration-level continuous batching, with prefill
+//!   and decode interleaving through one ingress.
 //! * [`stats`] — O(1)-memory latency/throughput accounting (streaming
 //!   sums + bounded reservoirs): prefill percentiles, decode per-step
 //!   latency and TTFT, steps/sec, wave lane occupancy, session
@@ -58,6 +70,7 @@
 pub mod batcher;
 pub mod fleet;
 pub mod request;
+pub mod sched;
 pub mod server;
 pub mod sessions;
 pub mod stats;
@@ -69,8 +82,14 @@ pub use request::{
     AttnRequest, AttnResponse, DecodeClass, DecodeCloseResponse, DecodeOpenResponse,
     DecodeStepRequest, DecodeStepResponse, ShapeClass,
 };
+pub use sched::{
+    plan_wave, CandidateKind, PlanAction, PlanItem, Priority, SchedPolicy, SchedulerConfig,
+    WaveCandidate,
+};
 pub use server::{Server, ServerConfig, ServerHandle};
-pub use sessions::{SessionConfig, SessionTable};
+pub use sessions::{
+    PrefillProgress, PrefillPrompt, SessionConfig, SessionTable, WaveOutcome, WaveRequest,
+};
 pub use stats::{FleetRollup, PctStats, ServingStats, ShardRollup};
 pub use traffic::{
     Arrivals, LenDist, Trace, TraceEvent, TraceEventKind, TraceSession, TrafficConfig,

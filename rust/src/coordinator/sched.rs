@@ -1,0 +1,608 @@
+//! Token-budget, SLO-aware wave planning.
+//!
+//! The serving loop used to be flush-everything: every scheduling
+//! iteration took one pending decode step from every active session and
+//! ran the whole set as one wave, and a session's prompt could only
+//! enter the cache one row per wave. This module is the planner that
+//! replaces that — the TGI-router shape named in ROADMAP.md:
+//!
+//! * **`max_batch_total_tokens`** caps the keys streamed per wave (a
+//!   decode step at cache length L costs L+1 keys; a prefill row t
+//!   costs t+1, or just its granted span when the row splits). This is
+//!   the wave's simulated-area budget: every key is one element through
+//!   a lane's pipeline.
+//! * **`max_batch_prefill_tokens`** caps prompt rows ingested per wave,
+//!   bounding how much of a wave new prompts can claim.
+//! * **`waiting_served_ratio`** trades new-request TTFT against
+//!   running-session ITL: when waiting prefill sessions outnumber
+//!   running decoders by the ratio, the prefill group plans first.
+//! * **Priority / deadline classes** ([`Priority`]) order candidates
+//!   within a group, and **starvation-free aging** guarantees no
+//!   candidate waits more than its deadline bound: once a candidate's
+//!   age reaches `min(aging_waves, priority.deadline_waves())` it is
+//!   force-planned ahead of everything, budgets notwithstanding.
+//!
+//! [`plan_wave`] is pure — candidates in, plan out, no clocks and no
+//! state — so every scheduling decision is deterministic and unit
+//! testable, and the serving loop, the fleet replay, and the benches
+//! all share one planner.
+
+use std::cmp::Reverse;
+
+/// Per-request service class: who goes first when a wave cannot take
+/// everyone, and how long a request may age before it is force-planned.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-critical (chat turn): first in line, 2-wave deadline.
+    Interactive,
+    /// The default class: 8-wave deadline.
+    #[default]
+    Standard,
+    /// Throughput work (batch scoring): last in line, 32-wave deadline.
+    Bulk,
+}
+
+impl Priority {
+    /// Every class, best-first.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Bulk];
+
+    /// Sort rank, lower first.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Bulk => 2,
+        }
+    }
+
+    /// Stable lowercase name (reports, trace encoding, CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Bulk => "bulk",
+        }
+    }
+
+    /// Parse a class name (inverse of [`Self::name`]).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Some(Priority::Interactive),
+            "standard" => Some(Priority::Standard),
+            "bulk" => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+
+    /// The class's deadline, in waves: how long a pending request may
+    /// go unplanned before aging forces it into the next wave.
+    pub fn deadline_waves(self) -> u64 {
+        match self {
+            Priority::Interactive => 2,
+            Priority::Standard => 8,
+            Priority::Bulk => 32,
+        }
+    }
+
+    /// Class from `rank()` (array-indexed per-class stats).
+    pub fn from_rank(rank: usize) -> Priority {
+        Priority::ALL[rank]
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Budget knobs of the budgeted planner (the TGI router shape).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// Max prompt rows ingested per wave, across all sessions.
+    pub max_batch_prefill_tokens: usize,
+    /// Max keys streamed per wave, across decode steps and prefill
+    /// segments (a step at cache length L costs L+1 keys).
+    pub max_batch_total_tokens: usize,
+    /// When `waiting ≥ ratio · running`, the prefill group plans ahead
+    /// of the decode group (new-request TTFT over running-session ITL).
+    pub waiting_served_ratio: f32,
+    /// Max prompt rows one session ingests per wave (its chunk size).
+    pub prefill_chunk: usize,
+    /// Hard starvation bound: a candidate aged this many waves is
+    /// force-planned regardless of budgets (per-class deadlines can
+    /// only tighten this, never loosen it).
+    pub aging_waves: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch_prefill_tokens: 8,
+            max_batch_total_tokens: 64,
+            waiting_served_ratio: 1.2,
+            prefill_chunk: 4,
+            aging_waves: 8,
+        }
+    }
+}
+
+/// Which scheduler the serving loop runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum SchedPolicy {
+    /// The pre-budget behavior: every candidate is planned every wave,
+    /// prompts enter one whole row per wave. The baseline the perf
+    /// regression guard measures against.
+    #[default]
+    Flush,
+    /// Token-budget, SLO-aware planning with chunked prefill.
+    Budgeted(SchedulerConfig),
+}
+
+impl SchedPolicy {
+    /// Stable lowercase name (reports, bench JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Flush => "flush",
+            SchedPolicy::Budgeted(_) => "budgeted",
+        }
+    }
+}
+
+/// What a candidate wants from the next wave.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CandidateKind {
+    /// One pending decode step; `keys_cost` = cache length + 1.
+    Decode {
+        /// Keys the step will stream.
+        keys_cost: usize,
+    },
+    /// An in-flight prompt: rows `next_row..rows_total` remain, with
+    /// `keys_done` keys of row `next_row` already scanned into the
+    /// session's carry.
+    Prefill {
+        /// Total prompt rows.
+        rows_total: usize,
+        /// Rows fully ingested so far.
+        next_row: usize,
+        /// Keys of row `next_row` already scanned (0 = row not started).
+        keys_done: usize,
+        /// Whether rows may stop mid-scan (memory-free, unwindowed
+        /// sessions). Non-splittable rows are granted whole or not at
+        /// all.
+        splittable: bool,
+    },
+}
+
+/// One session's bid for the next wave.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WaveCandidate {
+    /// Session id.
+    pub session: u64,
+    /// What the session wants to run.
+    pub kind: CandidateKind,
+    /// Service class.
+    pub priority: Priority,
+    /// Waves this candidate has gone without progress.
+    pub age: u64,
+}
+
+impl WaveCandidate {
+    fn is_prefill(&self) -> bool {
+        matches!(self.kind, CandidateKind::Prefill { .. })
+    }
+
+    /// The wave count at which this candidate is force-planned.
+    fn deadline(&self, cfg: &SchedulerConfig) -> u64 {
+        cfg.aging_waves.min(self.priority.deadline_waves())
+    }
+}
+
+/// What the planner granted one session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanAction {
+    /// Run the session's pending decode step.
+    Step,
+    /// Advance the session's prefill by at most `max_rows` rows /
+    /// `max_keys` keys (the table stages the actual segments).
+    Prefill {
+        /// Row grant (continuations count as one row).
+        max_rows: usize,
+        /// Key grant across the granted rows.
+        max_keys: usize,
+    },
+}
+
+/// One planned wave entry. The plan's order is the staging order, so
+/// earlier entries claim pool blocks first under pressure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanItem {
+    /// Session id.
+    pub session: u64,
+    /// Granted action.
+    pub action: PlanAction,
+}
+
+/// Plan the next wave. Pure and deterministic: the same candidates and
+/// policy always yield the same plan.
+///
+/// Guarantees:
+/// * With any candidates at all, at least one is planned (budgets can
+///   throttle, never stall).
+/// * A candidate whose age reaches its deadline bound is planned this
+///   wave, before every unforced candidate.
+/// * Under [`SchedPolicy::Flush`], every candidate is planned, prompts
+///   one whole row each — the pre-budget behavior.
+pub fn plan_wave(policy: &SchedPolicy, candidates: &[WaveCandidate]) -> Vec<PlanItem> {
+    let cfg = match policy {
+        SchedPolicy::Flush => {
+            return candidates
+                .iter()
+                .filter_map(|c| {
+                    let action = match c.kind {
+                        CandidateKind::Decode { .. } => PlanAction::Step,
+                        CandidateKind::Prefill {
+                            rows_total,
+                            next_row,
+                            ..
+                        } => {
+                            if next_row >= rows_total {
+                                return None;
+                            }
+                            PlanAction::Prefill {
+                                max_rows: 1,
+                                max_keys: usize::MAX,
+                            }
+                        }
+                    };
+                    Some(PlanItem {
+                        session: c.session,
+                        action,
+                    })
+                })
+                .collect();
+        }
+        SchedPolicy::Budgeted(cfg) => cfg,
+    };
+
+    // Forced first (deadline reached), oldest first; then the two
+    // groups, prefill ahead of decode when the waiting/served ratio
+    // says so, each group best-class-first, oldest-first within class.
+    let waiting = candidates.iter().filter(|c| c.is_prefill()).count();
+    let running = candidates.len() - waiting;
+    let prefill_first =
+        running == 0 || waiting as f32 >= cfg.waiting_served_ratio * running as f32;
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    order.sort_by_key(|&i| {
+        let c = &candidates[i];
+        let forced = c.age >= c.deadline(cfg);
+        let group = match (c.is_prefill(), prefill_first) {
+            (true, true) | (false, false) => 0u8,
+            _ => 1,
+        };
+        (!forced, group, c.priority.rank(), Reverse(c.age), c.session)
+    });
+
+    let mut total_left = cfg.max_batch_total_tokens;
+    let mut prefill_left = cfg.max_batch_prefill_tokens;
+    let mut plan = Vec::new();
+    for i in order {
+        let c = &candidates[i];
+        // Forced candidates and the wave's first grant ignore budget
+        // exhaustion: a wave always makes progress.
+        let force = c.age >= c.deadline(cfg) || plan.is_empty();
+        match c.kind {
+            CandidateKind::Decode { keys_cost } => {
+                if force || keys_cost <= total_left {
+                    plan.push(PlanItem {
+                        session: c.session,
+                        action: PlanAction::Step,
+                    });
+                    total_left = total_left.saturating_sub(keys_cost);
+                }
+            }
+            CandidateKind::Prefill {
+                rows_total,
+                next_row,
+                keys_done,
+                splittable,
+            } => {
+                let mut rows = 0usize;
+                let mut keys = 0usize;
+                let mut t = next_row;
+                let mut kd = keys_done;
+                while t < rows_total && rows < cfg.prefill_chunk {
+                    let first = rows == 0;
+                    if !first || !force {
+                        if rows >= prefill_left {
+                            break;
+                        }
+                    }
+                    let rem = (t + 1) - kd;
+                    let key_room = total_left.saturating_sub(keys);
+                    if rem <= key_room {
+                        rows += 1;
+                        keys += rem;
+                        t += 1;
+                        kd = 0;
+                    } else if splittable && key_room > 0 {
+                        // Partial tail segment: take what the budget
+                        // still holds and stop mid-row.
+                        rows += 1;
+                        keys += key_room;
+                        break;
+                    } else if first && force {
+                        // Guaranteed progress: one whole row even when
+                        // over budget (non-splittable rows cannot stop
+                        // mid-scan).
+                        rows += 1;
+                        keys += rem;
+                        break;
+                    } else {
+                        break;
+                    }
+                }
+                if rows > 0 {
+                    plan.push(PlanItem {
+                        session: c.session,
+                        action: PlanAction::Prefill {
+                            max_rows: rows,
+                            max_keys: keys,
+                        },
+                    });
+                    prefill_left = prefill_left.saturating_sub(rows);
+                    total_left = total_left.saturating_sub(keys);
+                }
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode(session: u64, len: usize) -> WaveCandidate {
+        WaveCandidate {
+            session,
+            kind: CandidateKind::Decode {
+                keys_cost: len + 1,
+            },
+            priority: Priority::Standard,
+            age: 0,
+        }
+    }
+
+    fn prefill(session: u64, rows_total: usize) -> WaveCandidate {
+        WaveCandidate {
+            session,
+            kind: CandidateKind::Prefill {
+                rows_total,
+                next_row: 0,
+                keys_done: 0,
+                splittable: true,
+            },
+            priority: Priority::Standard,
+            age: 0,
+        }
+    }
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig::default()
+    }
+
+    #[test]
+    fn flush_plans_every_candidate_one_row_prompts() {
+        let cands = [decode(1, 5), prefill(2, 6), decode(3, 2)];
+        let plan = plan_wave(&SchedPolicy::Flush, &cands);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan[0].action, PlanAction::Step);
+        assert_eq!(
+            plan[1].action,
+            PlanAction::Prefill {
+                max_rows: 1,
+                max_keys: usize::MAX
+            }
+        );
+        assert_eq!(plan[2].action, PlanAction::Step);
+    }
+
+    #[test]
+    fn total_token_budget_throttles_decode() {
+        // Three steps of 11 keys each under a 24-key budget: two fit.
+        let cands = [decode(1, 10), decode(2, 10), decode(3, 10)];
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_total_tokens: 24,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &cands);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].session, 1);
+        assert_eq!(plan[1].session, 2);
+    }
+
+    #[test]
+    fn zero_budgets_still_plan_one_candidate() {
+        let cands = [decode(7, 100), prefill(9, 50)];
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &cands);
+        assert_eq!(plan.len(), 1, "a wave always makes progress");
+    }
+
+    #[test]
+    fn waiting_served_ratio_boosts_prefill_ahead_of_decode() {
+        // 2 waiting vs 1 running: ratio 1.2 → 2 ≥ 1.2·1 → prefill first.
+        let cands = [decode(1, 3), prefill(2, 2), prefill(3, 2)];
+        let policy = SchedPolicy::Budgeted(cfg());
+        let plan = plan_wave(&policy, &cands);
+        assert!(matches!(plan[0].action, PlanAction::Prefill { .. }));
+        assert!(matches!(plan[1].action, PlanAction::Prefill { .. }));
+        assert_eq!(plan[2].action, PlanAction::Step);
+
+        // 1 waiting vs 2 running: 1 < 1.2·2 → decode first.
+        let cands = [prefill(1, 2), decode(2, 3), decode(3, 3)];
+        let plan = plan_wave(&policy, &cands);
+        assert_eq!(plan[0].action, PlanAction::Step);
+        assert_eq!(plan[1].action, PlanAction::Step);
+        assert!(matches!(plan[2].action, PlanAction::Prefill { .. }));
+    }
+
+    #[test]
+    fn priorities_order_within_a_group() {
+        let mut a = decode(1, 3);
+        a.priority = Priority::Bulk;
+        let mut b = decode(2, 3);
+        b.priority = Priority::Interactive;
+        let c = decode(3, 3);
+        let plan = plan_wave(&SchedPolicy::Budgeted(cfg()), &[a, b, c]);
+        assert_eq!(
+            plan.iter().map(|p| p.session).collect::<Vec<_>>(),
+            vec![2, 3, 1],
+            "interactive, standard, bulk"
+        );
+    }
+
+    #[test]
+    fn aged_candidate_is_forced_ahead_despite_budget_and_class() {
+        let mut starved = decode(9, 50);
+        starved.priority = Priority::Bulk;
+        starved.age = 32; // at the bulk deadline
+        let fresh = decode(1, 3);
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_total_tokens: 4,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &[fresh, starved]);
+        assert_eq!(plan[0].session, 9, "deadline-aged bulk step jumps the queue");
+    }
+
+    #[test]
+    fn interactive_deadline_is_tighter_than_aging_waves() {
+        let mut urgent = prefill(5, 4);
+        urgent.priority = Priority::Interactive;
+        urgent.age = 2; // interactive deadline, well under aging_waves=8
+        let fresh = decode(1, 2);
+        let plan = plan_wave(&SchedPolicy::Budgeted(cfg()), &[fresh, urgent]);
+        assert_eq!(plan[0].session, 5);
+    }
+
+    #[test]
+    fn prefill_grant_respects_chunk_and_splits_the_tail_row() {
+        // A fresh 10-row prompt under chunk 4 and a 6-key total budget:
+        // rows 0 (1 key), 1 (2), 2 (3 → only 3 left) — row 2 fits
+        // exactly; grant is 3 rows / 6 keys.
+        let cand = prefill(4, 10);
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_total_tokens: 6,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &[cand]);
+        assert_eq!(
+            plan[0].action,
+            PlanAction::Prefill {
+                max_rows: 3,
+                max_keys: 6
+            }
+        );
+
+        // A 5-key budget splits row 2 after 2 of its 3 keys.
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_total_tokens: 5,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &[cand]);
+        assert_eq!(
+            plan[0].action,
+            PlanAction::Prefill {
+                max_rows: 3,
+                max_keys: 5
+            }
+        );
+
+        // Non-splittable rows are granted whole or not at all.
+        let mut ns = cand;
+        ns.kind = CandidateKind::Prefill {
+            rows_total: 10,
+            next_row: 0,
+            keys_done: 0,
+            splittable: false,
+        };
+        let plan = plan_wave(&policy, &[ns]);
+        assert_eq!(
+            plan[0].action,
+            PlanAction::Prefill {
+                max_rows: 2,
+                max_keys: 3
+            },
+            "rows 0+1 fit whole; row 2 would split, so it waits"
+        );
+    }
+
+    #[test]
+    fn mid_row_continuation_costs_only_the_remaining_keys() {
+        // Row 7 of 8 with 5 of its 8 keys done: continuation costs 3.
+        let cand = WaveCandidate {
+            session: 2,
+            kind: CandidateKind::Prefill {
+                rows_total: 8,
+                next_row: 7,
+                keys_done: 5,
+                splittable: true,
+            },
+            priority: Priority::Standard,
+            age: 0,
+        };
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_total_tokens: 3,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &[cand]);
+        assert_eq!(
+            plan[0].action,
+            PlanAction::Prefill {
+                max_rows: 1,
+                max_keys: 3
+            }
+        );
+    }
+
+    #[test]
+    fn prefill_token_budget_caps_rows_across_sessions() {
+        let cands = [prefill(1, 4), prefill(2, 4), prefill(3, 4)];
+        let policy = SchedPolicy::Budgeted(SchedulerConfig {
+            max_batch_prefill_tokens: 5,
+            max_batch_total_tokens: 1000,
+            ..cfg()
+        });
+        let plan = plan_wave(&policy, &cands);
+        let rows: usize = plan
+            .iter()
+            .map(|p| match p.action {
+                PlanAction::Prefill { max_rows, .. } => max_rows,
+                PlanAction::Step => 0,
+            })
+            .sum();
+        assert_eq!(rows, 5, "4 + 1 rows under the 5-row prefill budget");
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_name_stable() {
+        let cands = [decode(3, 4), prefill(1, 6), decode(2, 9)];
+        let policy = SchedPolicy::Budgeted(cfg());
+        assert_eq!(plan_wave(&policy, &cands), plan_wave(&policy, &cands));
+        assert_eq!(SchedPolicy::Flush.name(), "flush");
+        assert_eq!(policy.name(), "budgeted");
+        assert_eq!(Priority::parse("BULK"), Some(Priority::Bulk));
+        assert_eq!(Priority::parse("nope"), None);
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+            assert_eq!(Priority::from_rank(p.rank() as usize), p);
+        }
+        assert!(Priority::Interactive.deadline_waves() < Priority::Bulk.deadline_waves());
+    }
+}

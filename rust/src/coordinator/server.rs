@@ -23,13 +23,19 @@
 //!
 //! Decode serving is **iteration-level continuous batching** over the
 //! [`SessionTable`]'s lane pool: sessions join and leave between waves
-//! (open/close), and every wave runs one pending step from each session
-//! that has one — spatially, in a single engine, one lane per session
-//! (see [`SessionTable::step_wave`]). Prefill batches and decode waves
-//! interleave through the same ingress, so a decode-heavy server still
-//! flushes prefill on time and vice versa.
+//! (open/close), and each scheduling iteration plans a wave with
+//! [`plan_wave`] — under [`SchedPolicy::Flush`] (the default) every
+//! session with a pending step runs, plus one whole prompt row per
+//! still-ingesting session; under [`SchedPolicy::Budgeted`] the planner
+//! applies per-wave prefill/total token budgets, priority classes with
+//! per-class deadlines, a waiting/served admission ratio, and
+//! starvation-free aging, and prompts ingest in **chunked prefill**
+//! segments that ride beside decode steps in the same engine (see
+//! [`SessionTable::wave`]). Prefill batches and decode waves interleave
+//! through the same ingress, so a decode-heavy server still flushes
+//! prefill on time and vice versa.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -40,7 +46,8 @@ use super::request::{
     AttnRequest, AttnResponse, DecodeCloseResponse, DecodeOpenResponse, DecodeStepRequest,
     DecodeStepResponse, ShapeClass,
 };
-use super::sessions::{SessionConfig, SessionTable};
+use super::sched::{plan_wave, CandidateKind, PlanAction, Priority, SchedPolicy, WaveCandidate};
+use super::sessions::{PrefillPrompt, SessionConfig, SessionTable, WaveOutcome, WaveRequest};
 use super::stats::ServingStats;
 use crate::runtime::{ArtifactRegistry, Executor, Tensor};
 use crate::{Error, Result};
@@ -56,6 +63,10 @@ pub struct ServerConfig {
     pub precompile: bool,
     /// Decode lane-pool / session policy.
     pub sessions: SessionConfig,
+    /// Wave scheduling policy: [`SchedPolicy::Flush`] (default, the
+    /// legacy run-everything iteration) or [`SchedPolicy::Budgeted`]
+    /// (token budgets, priority deadlines, chunked prefill).
+    pub sched: SchedPolicy,
 }
 
 impl Default for ServerConfig {
@@ -64,6 +75,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             precompile: true,
             sessions: SessionConfig::default(),
+            sched: SchedPolicy::default(),
         }
     }
 }
@@ -77,7 +89,14 @@ type Reply<T> = mpsc::Sender<std::result::Result<T, String>>;
 /// until capacity frees; `wait: false` answers immediately either way.
 enum Ingress {
     Req(AttnRequest),
-    Open { d: usize, window: Option<usize>, wait: bool, reply: Reply<DecodeOpenResponse> },
+    Open {
+        d: usize,
+        window: Option<usize>,
+        priority: Priority,
+        prompt: Option<PrefillPrompt>,
+        wait: bool,
+        reply: Reply<DecodeOpenResponse>,
+    },
     Fork { parent: u64, wait: bool, reply: Reply<DecodeOpenResponse> },
     Step { req: DecodeStepRequest, reply: Reply<DecodeStepResponse> },
     Close { session: u64, reply: Reply<DecodeCloseResponse> },
@@ -124,7 +143,14 @@ impl ServerHandle {
         d: usize,
     ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, window: None, wait: true, reply })?;
+        self.send(Ingress::Open {
+            d,
+            window: None,
+            priority: Priority::default(),
+            prompt: None,
+            wait: true,
+            reply,
+        })?;
         Ok(rx)
     }
 
@@ -148,7 +174,14 @@ impl ServerHandle {
     /// waiting (capacity probes, load shedding).
     pub fn try_open_session(&self, d: usize) -> Result<DecodeOpenResponse> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, window: None, wait: false, reply })?;
+        self.send(Ingress::Open {
+            d,
+            window: None,
+            priority: Priority::default(),
+            prompt: None,
+            wait: false,
+            reply,
+        })?;
         rx.recv()
             .map_err(|_| Error::Coordinator("server dropped reply".into()))?
             .map_err(Error::Coordinator)
@@ -165,7 +198,14 @@ impl ServerHandle {
         window: usize,
     ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, window: Some(window), wait: true, reply })?;
+        self.send(Ingress::Open {
+            d,
+            window: Some(window),
+            priority: Priority::default(),
+            prompt: None,
+            wait: true,
+            reply,
+        })?;
         Ok(rx)
     }
 
@@ -187,7 +227,55 @@ impl ServerHandle {
         window: usize,
     ) -> Result<DecodeOpenResponse> {
         let (reply, rx) = mpsc::channel();
-        self.send(Ingress::Open { d, window: Some(window), wait: false, reply })?;
+        self.send(Ingress::Open {
+            d,
+            window: Some(window),
+            priority: Priority::default(),
+            prompt: None,
+            wait: false,
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("server dropped reply".into()))?
+            .map_err(Error::Coordinator)
+    }
+
+    /// Submit a fully-specified decode-session open: optional sliding
+    /// window, [`Priority`] class, and an optional prompt the server
+    /// ingests via scheduler-planned (chunked, under
+    /// [`SchedPolicy::Budgeted`]) prefill waves. The reply arrives at
+    /// **admission**; queued decode steps then execute once the prompt
+    /// has fully ingested.
+    pub fn submit_open_with(
+        &self,
+        d: usize,
+        window: Option<usize>,
+        priority: Priority,
+        prompt: Option<PrefillPrompt>,
+    ) -> Result<mpsc::Receiver<std::result::Result<DecodeOpenResponse, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Ingress::Open {
+            d,
+            window,
+            priority,
+            prompt,
+            wait: true,
+            reply,
+        })?;
+        Ok(rx)
+    }
+
+    /// Open a fully-specified decode session (window / priority /
+    /// prompt), blocking until it is admitted (same waiting caveat as
+    /// [`Self::open_session`]).
+    pub fn open_session_with(
+        &self,
+        d: usize,
+        window: Option<usize>,
+        priority: Priority,
+        prompt: Option<PrefillPrompt>,
+    ) -> Result<DecodeOpenResponse> {
+        let rx = self.submit_open_with(d, window, priority, prompt)?;
         rx.recv()
             .map_err(|_| Error::Coordinator("server dropped reply".into()))?
             .map_err(Error::Coordinator)
@@ -369,7 +457,13 @@ type QueuedStep = (DecodeStepRequest, Reply<DecodeStepResponse>, u64);
 
 /// One admission (open or fork) waiting for capacity to free.
 enum PendingAdmission {
-    Open { d: usize, window: Option<usize>, reply: Reply<DecodeOpenResponse> },
+    Open {
+        d: usize,
+        window: Option<usize>,
+        priority: Priority,
+        prompt: Option<PrefillPrompt>,
+        reply: Reply<DecodeOpenResponse>,
+    },
     Fork { parent: u64, reply: Reply<DecodeOpenResponse> },
 }
 
@@ -388,6 +482,7 @@ impl PendingAdmission {
 /// the session table or lane pool is full.
 struct DecodeState {
     table: SessionTable,
+    sched: SchedPolicy,
     pending: HashMap<u64, VecDeque<QueuedStep>>,
     deferred_closes: Vec<(u64, Reply<DecodeCloseResponse>)>,
     /// FIFO of deferred opens/forks, retried each iteration.
@@ -396,21 +491,41 @@ struct DecodeState {
     /// in the next one, so pool pressure rotates instead of starving
     /// the same session every iteration.
     retry_first: Vec<u64>,
+    /// Sessions still ingesting an open-time prompt (prefill
+    /// candidates for the planner until the prompt completes).
+    prefilling: Vec<u64>,
+    /// Waves each candidate has waited without being planned (the
+    /// planner's starvation-free aging input).
+    ages: HashMap<u64, u64>,
+    /// Sessions whose first decode step has not completed yet — its
+    /// completion records the TTFT. A prompted session's first step
+    /// index is the prompt length, so "step 0" is not the signal.
+    ttft_due: HashSet<u64>,
 }
 
 impl DecodeState {
-    fn new(table: SessionTable) -> Self {
+    fn new(table: SessionTable, sched: SchedPolicy) -> Self {
         DecodeState {
             table,
+            sched,
             pending: HashMap::new(),
             deferred_closes: Vec::new(),
             pending_admissions: VecDeque::new(),
             retry_first: Vec::new(),
+            prefilling: Vec::new(),
+            ages: HashMap::new(),
+            ttft_due: HashSet::new(),
         }
     }
 
     fn steps_pending(&self) -> bool {
         self.pending.values().any(|q| !q.is_empty())
+    }
+
+    /// Whether the next iteration has wave work: queued steps or an
+    /// in-flight prompt ingestion.
+    fn work_pending(&self) -> bool {
+        self.steps_pending() || !self.prefilling.is_empty()
     }
 
     /// Admit one open/fork, mapping the result to the reply type.
@@ -420,9 +535,23 @@ impl DecodeState {
         stats: &Arc<Mutex<ServingStats>>,
     ) -> Result<DecodeOpenResponse> {
         let (id, parent) = match adm {
-            PendingAdmission::Open { d, window: None, .. } => (self.table.open(*d)?, None),
-            PendingAdmission::Open { d, window: Some(w), .. } => {
-                (self.table.open_windowed(*d, *w)?, None)
+            PendingAdmission::Open {
+                d,
+                window,
+                priority,
+                prompt,
+                ..
+            } => {
+                // The prompt is cloned per attempt so a deferred
+                // admission can retry without consuming it.
+                let id = self
+                    .table
+                    .open_with_spec(*d, *window, *priority, prompt.clone())?;
+                if prompt.as_ref().is_some_and(|p| !p.is_empty()) {
+                    self.prefilling.push(id);
+                }
+                self.ttft_due.insert(id);
+                (id, None)
             }
             PendingAdmission::Fork { parent, .. } => {
                 (self.table.fork(*parent)?, Some(*parent))
@@ -503,38 +632,110 @@ impl DecodeState {
         }
     }
 
-    /// Run one scheduling iteration: gather at most one pending step per
-    /// session, execute them as a spatial wave, reply per session.
-    /// Steps the block pool deferred are requeued at the front of their
-    /// session's queue (and that session stages first next wave) instead
-    /// of erroring. Returns whether any request was finally answered —
-    /// the drain loop's progress signal.
+    /// Run one scheduling iteration: gather wave candidates (the
+    /// head-of-queue step of every prompt-complete session, plus every
+    /// session still ingesting its prompt), let [`plan_wave`] grant a
+    /// selection under the configured policy, execute the grants as one
+    /// mixed wave, and reply per step. Steps the block pool deferred
+    /// are requeued at the front of their session's queue (and that
+    /// session stages first next wave) instead of erroring. Returns
+    /// whether anything progressed — the drain loop's signal.
     fn run_wave(&mut self, epoch: Instant, stats: &Arc<Mutex<ServingStats>>) -> bool {
+        // Prompts that finished (or whose session closed) leave the
+        // prefill candidate set.
+        let table = &self.table;
+        self.prefilling.retain(|id| table.prefill_state(*id).is_some());
+        let retry_first = std::mem::take(&mut self.retry_first);
+        // Decode candidates: ascending ids, but sessions deferred last
+        // wave go first so pool pressure rotates rather than starving
+        // one session. A session mid-prefill contributes its prompt,
+        // not its queued steps (they wait for the prompt). Unknown
+        // sessions stay candidates so their steps error out normally.
         let mut ids: Vec<u64> = self
             .pending
             .iter()
-            .filter(|(_, q)| !q.is_empty())
+            .filter(|(id, q)| {
+                !q.is_empty() && table.prefill_remaining(**id).map_or(true, |rem| rem == 0)
+            })
             .map(|(&id, _)| id)
             .collect();
-        if ids.is_empty() {
+        ids.sort_unstable_by_key(|id| (!retry_first.contains(id), *id));
+        let mut candidates: Vec<WaveCandidate> = Vec::with_capacity(ids.len());
+        for &id in &ids {
+            candidates.push(WaveCandidate {
+                session: id,
+                kind: CandidateKind::Decode {
+                    keys_cost: self.table.len_of(id).unwrap_or(0) + 1,
+                },
+                priority: self.table.priority_of(id).unwrap_or_default(),
+                age: self.ages.get(&id).copied().unwrap_or(0),
+            });
+        }
+        let mut pf_ids = self.prefilling.clone();
+        pf_ids.sort_unstable_by_key(|id| (!retry_first.contains(id), *id));
+        for id in pf_ids {
+            if let Some((rows_total, next_row, keys_done, splittable)) =
+                self.table.prefill_state(id)
+            {
+                candidates.push(WaveCandidate {
+                    session: id,
+                    kind: CandidateKind::Prefill {
+                        rows_total,
+                        next_row,
+                        keys_done,
+                        splittable,
+                    },
+                    priority: self.table.priority_of(id).unwrap_or_default(),
+                    age: self.ages.get(&id).copied().unwrap_or(0),
+                });
+            }
+        }
+        if candidates.is_empty() {
             return false;
         }
-        // Ascending ids, but sessions deferred last wave go first so
-        // pool pressure rotates rather than starving one session.
-        let retry_first = std::mem::take(&mut self.retry_first);
-        ids.sort_unstable_by_key(|id| (!retry_first.contains(id), *id));
-        let mut reqs = Vec::with_capacity(ids.len());
-        let mut envelopes = Vec::with_capacity(ids.len());
-        for id in ids {
-            let queue = self.pending.get_mut(&id).expect("listed as pending");
-            let (req, reply, enq) = queue.pop_front().expect("non-empty");
-            reqs.push(req);
-            envelopes.push((reply, enq));
+        let plan = plan_wave(&self.sched, &candidates);
+        {
+            let mut st = ServingStats::lock(stats);
+            if let Some(max_age) = candidates.iter().map(|c| c.age).max() {
+                st.note_queue_age(max_age);
+            }
+        }
+        // Budget-skipped candidates age one wave (aging feeds the
+        // planner's starvation deadline).
+        let planned: HashSet<u64> = plan.iter().map(|p| p.session).collect();
+        for c in &candidates {
+            if !planned.contains(&c.session) {
+                *self.ages.entry(c.session).or_insert(0) += 1;
+            }
         }
         // The wave borrows the requests: staging copies each row into
         // the block pool once (the pool must own its rows), and a
         // deferred request requeues below without any further copy.
-        let results = self.table.step_wave(&reqs);
+        let mut reqs: Vec<WaveRequest> = Vec::with_capacity(plan.len());
+        let mut envelopes: Vec<Option<(Reply<DecodeStepResponse>, u64)>> =
+            Vec::with_capacity(plan.len());
+        for item in &plan {
+            match item.action {
+                PlanAction::Step => {
+                    let queue = self
+                        .pending
+                        .get_mut(&item.session)
+                        .expect("planned from pending");
+                    let (req, reply, enq) = queue.pop_front().expect("non-empty");
+                    reqs.push(WaveRequest::Step(req));
+                    envelopes.push(Some((reply, enq)));
+                }
+                PlanAction::Prefill { max_rows, max_keys } => {
+                    reqs.push(WaveRequest::Prefill {
+                        session: item.session,
+                        max_rows,
+                        max_keys,
+                    });
+                    envelopes.push(None);
+                }
+            }
+        }
+        let results = self.table.wave(&reqs);
         let finished = now_us(epoch);
         let mut progressed = false;
         {
@@ -543,40 +744,76 @@ impl DecodeState {
             if lanes_used > 0 {
                 st.record_wave(lanes_used);
             }
-            for ((_, enq), res) in envelopes.iter().zip(&results) {
+            for (env, res) in envelopes.iter().zip(&results) {
                 match res {
-                    Ok(resp) => {
-                        let latency = finished.saturating_sub(*enq);
-                        st.record_decode_step(latency);
-                        // Step 0 is the session's first token: its
-                        // latency is the TTFT, tracked as its own
-                        // stream next to the inter-token samples.
-                        if resp.step == 0 {
-                            st.record_ttft(latency);
+                    Ok(WaveOutcome::Step(resp)) => {
+                        let enq = env.as_ref().map(|(_, enq)| *enq).unwrap_or(finished);
+                        let latency = finished.saturating_sub(enq);
+                        let prio = self.table.priority_of(resp.session).unwrap_or_default();
+                        st.record_decode_step_for(prio, latency);
+                        // The session's first completed step is its
+                        // first token: that latency is the TTFT,
+                        // tracked per priority class next to the
+                        // inter-token samples.
+                        if self.ttft_due.remove(&resp.session) {
+                            st.record_ttft_for(prio, latency);
                         }
                     }
+                    Ok(WaveOutcome::Prefill(_)) => {}
                     Err(Error::AdmissionDeferred(_)) => st.record_deferral(),
                     Err(_) => st.record_decode_error(),
                 }
             }
         }
-        for ((req, (reply, enq)), res) in reqs.into_iter().zip(envelopes).zip(results) {
-            match res {
-                Err(Error::AdmissionDeferred(_)) => {
-                    let session = req.session;
-                    self.pending
-                        .entry(session)
-                        .or_default()
-                        .push_front((req, reply, enq));
-                    self.retry_first.push(session);
+        for ((wreq, env), res) in reqs.into_iter().zip(envelopes).zip(results) {
+            match wreq {
+                WaveRequest::Step(req) => {
+                    let (reply, enq) = env.expect("step requests carry an envelope");
+                    match res {
+                        Err(Error::AdmissionDeferred(_)) => {
+                            let session = req.session;
+                            self.pending
+                                .entry(session)
+                                .or_default()
+                                .push_front((req, reply, enq));
+                            self.retry_first.push(session);
+                        }
+                        res => {
+                            progressed = true;
+                            self.ages.remove(&req.session);
+                            let mapped = res
+                                .map(|o| match o {
+                                    WaveOutcome::Step(r) => r,
+                                    WaveOutcome::Prefill(_) => {
+                                        unreachable!("step grant yields a step outcome")
+                                    }
+                                })
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(mapped);
+                        }
+                    }
                 }
-                res => {
-                    progressed = true;
-                    let _ = reply.send(res.map_err(|e| e.to_string()));
-                }
+                WaveRequest::Prefill { session, .. } => match res {
+                    Ok(WaveOutcome::Prefill(_)) => {
+                        progressed = true;
+                        self.ages.remove(&session);
+                    }
+                    Err(Error::AdmissionDeferred(_)) => self.retry_first.push(session),
+                    // A hard prefill failure has no reply slot (the
+                    // open already answered); it was counted as a
+                    // decode error above and retries next wave.
+                    Err(_) => {}
+                    Ok(WaveOutcome::Step(_)) => {
+                        unreachable!("prefill grant yields prefill progress")
+                    }
+                },
             }
         }
         self.pending.retain(|_, q| !q.is_empty());
+        let pending = &self.pending;
+        let prefilling = &self.prefilling;
+        self.ages
+            .retain(|id, _| pending.contains_key(id) || prefilling.contains(id));
         progressed
     }
 
@@ -629,7 +866,7 @@ fn worker_loop(
         }
     }
     let mut batcher = DynamicBatcher::new(cfg.batcher);
-    let mut decode = DecodeState::new(table);
+    let mut decode = DecodeState::new(table, cfg.sched);
     let max_wait = Duration::from_micros(cfg.batcher.max_wait_us.max(1));
     let mut wave_progressed = true;
 
@@ -639,7 +876,7 @@ fn worker_loop(
         // finalized nothing (every queued step deferred on pool
         // capacity): then back off briefly instead of busy-spinning on
         // deferrals that need a close/step elsewhere to unblock.
-        let timeout = if decode.steps_pending() {
+        let timeout = if decode.work_pending() {
             if wave_progressed {
                 Duration::ZERO
             } else {
@@ -710,7 +947,7 @@ fn worker_loop(
         for batch in batcher.poll(now_us(epoch)) {
             execute_batch(batch, &registry, &mut executor, epoch, &stats);
         }
-        wave_progressed = decode.run_wave(epoch, &stats) || !decode.steps_pending();
+        wave_progressed = decode.run_wave(epoch, &stats) || !decode.work_pending();
         decode.flush_ready_closes(&stats);
         // Closes and completed waves may have freed lanes/blocks: admit
         // deferred opens/forks, then refresh the pool gauges.
@@ -736,8 +973,8 @@ fn handle_ingress(
             enqueue(req, batcher, epoch, registry, executor, stats);
             false
         }
-        Ingress::Open { d, window, wait, reply } => {
-            let adm = PendingAdmission::Open { d, window, reply };
+        Ingress::Open { d, window, priority, prompt, wait, reply } => {
+            let adm = PendingAdmission::Open { d, window, priority, prompt, reply };
             admit_or_requeue(decode, adm, wait, stats);
             false
         }

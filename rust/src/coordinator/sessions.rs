@@ -49,23 +49,45 @@
 //! admissible against a finite pool.
 //!
 //! **Preemption.** When a step cannot get a block, the table swaps out
-//! a victim session (the resident one with the most exclusively-owned
-//! blocks; ties to the lowest id; when every candidate's blocks are
-//! shared, the one holding the most references — dropping refcounts so
-//! the next retry finds exclusive blocks) and retries. Victims restore
-//! bit-exactly on their next step, so a preempt/requeue cycle cannot
-//! perturb any transcript — the conformance suite's acceptance
-//! property. Sessions already staged in the current wave are never
-//! victims (their rows are wired into the running engine).
+//! a victim session (lowest [`Priority`] class first; within a class
+//! the resident one with the most exclusively-owned blocks, ties to the
+//! lowest id; when every candidate's blocks are shared, the one holding
+//! the most references — dropping refcounts so the next retry finds
+//! exclusive blocks) and retries. Victims restore bit-exactly on their
+//! next step, so a preempt/requeue cycle cannot perturb any transcript
+//! — the conformance suite's acceptance property. Sessions already
+//! staged in the current wave are never victims (their rows are wired
+//! into the running engine).
+//!
+//! **Chunked prefill & mixed waves** ([`SessionTable::wave`]). A
+//! session opened with a prompt ([`SessionTable::open_with_spec`])
+//! ingests it across waves in planner-granted chunks: whole prompt
+//! rows, or — on the memory-free mapping with no window — *partial*
+//! rows whose online-softmax state ([`SoftmaxCarry`]) carries between
+//! waves, piggybacking beside ordinary decode steps in the same engine
+//! ([`build_mixed_wave`]). A chunk of R rows runs as R spatial
+//! sub-pipelines in one wave, so a P-row prompt reaches its first
+//! decode token in ⌈P/chunk⌉ waves instead of P — the TTFT win the
+//! budgeted scheduler buys — while every grant stays transactional
+//! like a decode wave and the finished transcript stays bit-identical
+//! to the unchunked session (`tests/sched_conformance.rs`). Decode
+//! steps and forks on a mid-prefill session are hard errors (the
+//! serving loop queues them until the prompt completes); windowed
+//! prompts ingest one whole row per wave, because their ring evicts in
+//! place and a later row's append could overwrite rows an earlier
+//! row's gather still needs.
 
 use std::collections::HashMap;
 
 use super::request::{DecodeClass, DecodeStepRequest, DecodeStepResponse};
-use crate::attention::decode::{DecodeKind, PagedDecodeSession};
-use crate::attention::multihead::{build_decode_lanes_rows, LaneStepRows};
+use super::sched::Priority;
+use crate::attention::decode::{DecodeKind, PagedDecodeSession, SoftmaxCarry};
+use crate::attention::multihead::{
+    build_decode_lanes_rows, build_mixed_wave, LaneChunkRows, LaneStepRows, LaneWork,
+};
 use crate::attention::reference::Matrix;
 use crate::attention::DepthPolicy;
-use crate::runtime::kvcache::{BlockPool, KvCacheConfig};
+use crate::runtime::kvcache::{AppendUndo, BlockPool, KvCacheConfig};
 use crate::sim::SchedulerMode;
 use crate::{Error, Result};
 
@@ -114,7 +136,143 @@ impl Default for SessionConfig {
 struct Entry {
     class: DecodeClass,
     lane: usize,
+    priority: Priority,
+    /// The prompt still being ingested, if any. While this is `Some`,
+    /// decode steps and forks are refused.
+    prefill: Option<PendingPrefill>,
     session: PagedDecodeSession,
+}
+
+/// An admitted prompt still being ingested. The cache invariant is
+/// `session.len() == next_row + (keys_done > 0) as usize`: a row's
+/// `(k, v)` is appended when its first segment stages, so a mid-row
+/// split leaves exactly one cached row ahead of the finished outputs.
+struct PendingPrefill {
+    /// Per-row query rows of the prompt.
+    q: Vec<Vec<f32>>,
+    /// Per-row key rows.
+    k: Vec<Vec<f32>>,
+    /// Per-row value rows.
+    v: Vec<Vec<f32>>,
+    /// Prompt rows fully ingested (one output row pushed per row).
+    next_row: usize,
+    /// Keys of row `next_row` already folded into `carry`.
+    keys_done: usize,
+    /// Online-softmax state of the partially scanned row.
+    carry: SoftmaxCarry,
+}
+
+/// A prompt to ingest at open time: per-row q/k/v, all of the
+/// session's head dimension. Row `t`'s output attends rows `0..=t`, so
+/// a fully ingested prompt's outputs are bit-identical to stepping the
+/// same rows through a decode session one by one.
+#[derive(Clone, Debug, Default)]
+pub struct PrefillPrompt {
+    /// Query rows, one per prompt token.
+    pub q: Vec<Vec<f32>>,
+    /// Key rows.
+    pub k: Vec<Vec<f32>>,
+    /// Value rows.
+    pub v: Vec<Vec<f32>>,
+}
+
+impl PrefillPrompt {
+    /// Prompt length in rows.
+    pub fn len(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Whether the prompt has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty()
+    }
+}
+
+/// One planned chunk segment of a staged prefill grant.
+#[derive(Clone, Copy, Debug)]
+struct SegPlan {
+    /// Prompt row index.
+    row: usize,
+    /// Keys of the row already scanned before this segment.
+    kd: usize,
+    /// Keys this segment scans.
+    take: usize,
+    /// Whether the segment reaches the row's last visible key (it then
+    /// emits the output row instead of a packed carry).
+    finalize: bool,
+}
+
+/// One wave member staged and awaiting the engine run.
+enum StagedItem {
+    Step {
+        i: usize,
+        id: u64,
+        class: DecodeClass,
+    },
+    Prefill {
+        i: usize,
+        id: u64,
+        rows_total: usize,
+        segs: Vec<SegPlan>,
+        undos: Vec<AppendUndo>,
+    },
+}
+
+/// One request in a mixed scheduling wave: a pending decode step or a
+/// planner-granted slice of a session's prompt ingestion.
+#[derive(Clone, Debug)]
+pub enum WaveRequest {
+    /// Run the session's next decode step.
+    Step(DecodeStepRequest),
+    /// Advance the session's pending prefill by at most `max_rows`
+    /// prompt rows / `max_keys` keys (a [`super::sched::plan_wave`]
+    /// grant; the table stages the actual segments).
+    Prefill {
+        /// Session id.
+        session: u64,
+        /// Row grant (a mid-row continuation counts as one row).
+        max_rows: usize,
+        /// Key grant across the granted rows.
+        max_keys: usize,
+    },
+}
+
+impl WaveRequest {
+    /// The session the request targets.
+    pub fn session(&self) -> u64 {
+        match self {
+            WaveRequest::Step(req) => req.session,
+            WaveRequest::Prefill { session, .. } => *session,
+        }
+    }
+}
+
+/// How far a prefill grant got in one wave.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrefillProgress {
+    /// Session id.
+    pub session: u64,
+    /// Prompt rows fully ingested after this wave.
+    pub rows_done: usize,
+    /// Total prompt rows.
+    pub rows_total: usize,
+    /// Whether the prompt is now fully ingested (decode may begin).
+    pub done: bool,
+    /// The session's sticky lane.
+    pub lane: usize,
+    /// Sessions co-scheduled in the wave.
+    pub wave_lanes: usize,
+    /// Engine cycles the wave took.
+    pub cycles: u64,
+}
+
+/// One wave request's result.
+#[derive(Clone, Debug)]
+pub enum WaveOutcome {
+    /// A decode step's response.
+    Step(DecodeStepResponse),
+    /// A prefill grant's progress.
+    Prefill(PrefillProgress),
 }
 
 /// The decode-session coordinator core.
@@ -178,7 +336,7 @@ impl SessionTable {
     /// pinned to the lowest free lane (closed sessions' lanes are
     /// reclaimed).
     pub fn open(&mut self, d: usize) -> Result<u64> {
-        self.open_with(d, None)
+        self.open_with_spec(d, None, Priority::default(), None)
     }
 
     /// Open a **sliding-window** session for head dimension `d`: every
@@ -189,19 +347,58 @@ impl SessionTable {
     /// semantic, not an admission limit). Admission control and lane
     /// placement match [`Self::open`].
     pub fn open_windowed(&mut self, d: usize, window: usize) -> Result<u64> {
-        if window == 0 {
-            return Err(Error::Coordinator(
-                "a sliding-window session needs a window ≥ 1".into(),
-            ));
-        }
-        self.open_with(d, Some(window))
+        self.open_with_spec(d, Some(window), Priority::default(), None)
     }
 
-    fn open_with(&mut self, d: usize, window: Option<usize>) -> Result<u64> {
+    /// Open a session with the full spec: head dimension, optional
+    /// sliding window, [`Priority`] class, and an optional prompt to
+    /// ingest via chunked prefill. A prompted session cannot decode (or
+    /// fork) until its prompt is fully ingested by [`Self::wave`]
+    /// grants; an empty prompt is the same as none. Prompt shapes are
+    /// validated here, once: ragged row counts, rows of the wrong
+    /// dimension, and unwindowed prompts longer than `max_len` are hard
+    /// errors.
+    pub fn open_with_spec(
+        &mut self,
+        d: usize,
+        window: Option<usize>,
+        priority: Priority,
+        prompt: Option<PrefillPrompt>,
+    ) -> Result<u64> {
         if d == 0 {
             return Err(Error::Coordinator(
                 "decode session needs a head dimension ≥ 1".into(),
             ));
+        }
+        if window == Some(0) {
+            return Err(Error::Coordinator(
+                "a sliding-window session needs a window ≥ 1".into(),
+            ));
+        }
+        if let Some(p) = &prompt {
+            if p.q.len() != p.k.len() || p.k.len() != p.v.len() {
+                return Err(Error::Coordinator(format!(
+                    "prompt rows are ragged: {} q, {} k, {} v rows",
+                    p.q.len(),
+                    p.k.len(),
+                    p.v.len()
+                )));
+            }
+            for (what, rows) in [("q", &p.q), ("k", &p.k), ("v", &p.v)] {
+                if let Some(row) = rows.iter().find(|r| r.len() != d) {
+                    return Err(Error::Coordinator(format!(
+                        "prompt {what} row has dim {}, session expects {d}",
+                        row.len()
+                    )));
+                }
+            }
+            if window.is_none() && p.len() > self.cfg.max_len {
+                return Err(Error::Coordinator(format!(
+                    "prompt of {} rows exceeds the context window ({} tokens)",
+                    p.len(),
+                    self.cfg.max_len
+                )));
+            }
         }
         let lane = self.admit_slot()?;
         let id = self.next_id;
@@ -222,6 +419,15 @@ impl SessionTable {
             Entry {
                 class: DecodeClass { d },
                 lane,
+                priority,
+                prefill: prompt.filter(|p| !p.is_empty()).map(|p| PendingPrefill {
+                    carry: SoftmaxCarry::fresh(d),
+                    next_row: 0,
+                    keys_done: 0,
+                    q: p.q,
+                    k: p.k,
+                    v: p.v,
+                }),
                 session,
             },
         );
@@ -235,17 +441,29 @@ impl SessionTable {
     /// [`Self::open`]; an unknown parent is a hard error, a full table
     /// or pool defers.
     pub fn fork(&mut self, parent: u64) -> Result<u64> {
-        if !self.sessions.contains_key(&parent) {
-            return Err(Error::Coordinator(format!(
-                "unknown decode session {parent}"
-            )));
+        match self.sessions.get(&parent) {
+            None => {
+                return Err(Error::Coordinator(format!(
+                    "unknown decode session {parent}"
+                )))
+            }
+            Some(entry) if entry.prefill.is_some() => {
+                return Err(Error::Coordinator(format!(
+                    "session {parent} is still prefilling its prompt; fork after it completes"
+                )))
+            }
+            Some(_) => {}
         }
         let lane = self.admit_slot()?;
         // A preempted parent must be resident to share its blocks.
         self.ensure_resident(parent, &[parent])?;
-        let (class, child) = {
+        let (class, priority, child) = {
             let entry = self.sessions.get(&parent).expect("checked above");
-            (entry.class, entry.session.fork(&mut self.pool)?)
+            (
+                entry.class,
+                entry.priority,
+                entry.session.fork(&mut self.pool)?,
+            )
         };
         let id = self.next_id;
         self.next_id += 1;
@@ -255,6 +473,8 @@ impl SessionTable {
             Entry {
                 class,
                 lane,
+                priority,
+                prefill: None,
                 session: child,
             },
         );
@@ -351,6 +571,38 @@ impl SessionTable {
         self.sessions.get(&id).map(|e| e.session.window())
     }
 
+    /// The [`Priority`] class a session was opened with.
+    pub fn priority_of(&self, id: u64) -> Option<Priority> {
+        self.sessions.get(&id).map(|e| e.priority)
+    }
+
+    /// Prompt rows a session has yet to ingest (`Some(0)` once prefill
+    /// completed or the session never had a prompt).
+    pub fn prefill_remaining(&self, id: u64) -> Option<usize> {
+        self.sessions.get(&id).map(|e| {
+            e.prefill
+                .as_ref()
+                .map(|pf| pf.k.len() - pf.next_row)
+                .unwrap_or(0)
+        })
+    }
+
+    /// Pending-prefill shape for wave planning: `(rows_total, next_row,
+    /// keys_done, splittable)`. `None` when the id is unknown or the
+    /// prompt is fully ingested. `splittable` means rows may stop
+    /// mid-scan and resume by carry — the memory-free mapping with no
+    /// sliding window.
+    pub fn prefill_state(&self, id: u64) -> Option<(usize, usize, usize, bool)> {
+        let entry = self.sessions.get(&id)?;
+        let pf = entry.prefill.as_ref()?;
+        Some((
+            pf.k.len(),
+            pf.next_row,
+            pf.keys_done,
+            entry.session.kind() == DecodeKind::MemoryFree && entry.session.window().is_none(),
+        ))
+    }
+
     /// Validate one step request against the table and its session;
     /// returns the session's class.
     fn admit_step(&self, req: &DecodeStepRequest) -> Result<DecodeClass> {
@@ -362,6 +614,12 @@ impl SessionTable {
             return Err(Error::Coordinator(format!(
                 "sticky routing violation: session {} was opened for {}, step is {}",
                 req.session, entry.class, class
+            )));
+        }
+        if entry.prefill.is_some() {
+            return Err(Error::Coordinator(format!(
+                "session {} is still prefilling its prompt; decode steps must wait",
+                req.session
             )));
         }
         // A sliding-window session is exempt from `max_len`: its
@@ -387,9 +645,11 @@ impl SessionTable {
     /// decreases the total reference count, so the retry loops
     /// terminate. Returns whether anything was preempted.
     fn preempt_victim(&mut self, exclude: &[u64]) -> bool {
-        // (exclusive blocks, total block refs, id) per candidate.
-        let mut best_exclusive: Option<(usize, u64)> = None;
-        let mut best_any: Option<(usize, u64)> = None;
+        // (priority rank, exclusive blocks, total block refs, id) per
+        // candidate: lower service classes (higher rank) are preferred
+        // victims; within a class the block metrics decide as before.
+        let mut best_exclusive: Option<(u8, usize, u64)> = None;
+        let mut best_any: Option<(u8, usize, u64)> = None;
         for (&id, entry) in &self.sessions {
             if exclude.contains(&id) || entry.session.is_preempted() {
                 continue;
@@ -398,19 +658,23 @@ impl SessionTable {
             if held == 0 {
                 continue;
             }
+            let rank = entry.priority.rank();
             let freed = self.pool.exclusive_blocks(entry.session.table());
-            let better = |best: Option<(usize, u64)>, score: usize| match best {
+            let better = |best: Option<(u8, usize, u64)>, score: usize| match best {
                 None => true,
-                Some((bs, bid)) => score > bs || (score == bs && id < bid),
+                Some((br, bs, bid)) => {
+                    rank > br
+                        || (rank == br && (score > bs || (score == bs && id < bid)))
+                }
             };
             if freed > 0 && better(best_exclusive, freed) {
-                best_exclusive = Some((freed, id));
+                best_exclusive = Some((rank, freed, id));
             }
             if better(best_any, held) {
-                best_any = Some((held, id));
+                best_any = Some((rank, held, id));
             }
         }
-        let Some((_, victim)) = best_exclusive.or(best_any) else {
+        let Some((_, _, victim)) = best_exclusive.or(best_any) else {
             return false;
         };
         let entry = self.sessions.get_mut(&victim).expect("selected above");
@@ -641,6 +905,396 @@ impl SessionTable {
                         results[i] = Some(Err(Error::Coordinator(format!(
                             "decode wave failed: {msg}"
                         ))));
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every wave request resolved"))
+            .collect()
+    }
+
+    /// Append one prompt row under pool pressure (restore + preempt +
+    /// retry, as [`Self::stage_with_pressure`] does for decode steps),
+    /// returning the transactional undo token the wave resolves.
+    fn append_prefill_with_pressure(
+        &mut self,
+        id: u64,
+        exclude: &[u64],
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<AppendUndo> {
+        let len = self
+            .sessions
+            .get(&id)
+            .map(|e| e.session.len())
+            .ok_or_else(|| Error::Coordinator(format!("unknown decode session {id}")))?;
+        self.check_pool_fits(id, len + 1)?;
+        loop {
+            let entry = self.sessions.get_mut(&id).expect("checked above");
+            let attempt = match entry.session.restore(&mut self.pool) {
+                Ok(()) => entry
+                    .session
+                    .append_prefill_row(&mut self.pool, k.clone(), v.clone()),
+                Err(e) => Err(e),
+            };
+            match attempt {
+                Ok(undo) => return Ok(undo),
+                Err(Error::AdmissionDeferred(msg)) => {
+                    if !self.preempt_victim(exclude) {
+                        return Err(Error::AdmissionDeferred(msg));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Stage one prefill grant: append the granted prompt rows under
+    /// pool pressure (victims outside `exclude` may be preempted) and
+    /// lay out the chunk segments the wave will run. The appends are
+    /// transactional — the returned undos are committed or reverted
+    /// with the wave. A grant the pool can only partially hold stages
+    /// what fits; one that cannot stage anything defers.
+    fn stage_prefill(
+        &mut self,
+        id: u64,
+        exclude: &[u64],
+        max_rows: usize,
+        max_keys: usize,
+    ) -> Result<(usize, Vec<SegPlan>, Vec<AppendUndo>)> {
+        let (rows_total, mut next_row, mut kd, splittable, windowed) = {
+            let entry = self
+                .sessions
+                .get(&id)
+                .ok_or_else(|| Error::Coordinator(format!("unknown decode session {id}")))?;
+            let pf = entry.prefill.as_ref().ok_or_else(|| {
+                Error::Coordinator(format!("session {id} has no pending prefill"))
+            })?;
+            (
+                pf.k.len(),
+                pf.next_row,
+                pf.keys_done,
+                entry.session.kind() == DecodeKind::MemoryFree
+                    && entry.session.window().is_none(),
+                entry.session.window().is_some(),
+            )
+        };
+        // A windowed ring evicts in place, so a second row staged in
+        // the same wave could overwrite rows the first row's gather
+        // still needs: windowed prompts ingest one whole row per wave.
+        let max_rows = if windowed { max_rows.min(1) } else { max_rows };
+        let mut segs: Vec<SegPlan> = Vec::new();
+        let mut undos: Vec<AppendUndo> = Vec::new();
+        let mut keys_left = max_keys;
+        while next_row < rows_total && segs.len() < max_rows {
+            let first = segs.is_empty();
+            let rem = (next_row + 1) - kd;
+            let take = if keys_left >= rem {
+                rem
+            } else if splittable && keys_left > 0 {
+                keys_left
+            } else if first {
+                // Progress guarantee: a planner min-grant can round
+                // below one whole row; the first segment runs anyway —
+                // whole for a non-splittable row, one key otherwise.
+                if splittable {
+                    1
+                } else {
+                    rem
+                }
+            } else {
+                break;
+            };
+            if kd == 0 {
+                // First segment of the row: its (k, v) enters the cache.
+                let (k, v) = {
+                    let entry = self.sessions.get(&id).expect("checked above");
+                    let pf = entry.prefill.as_ref().expect("checked above");
+                    (pf.k[next_row].clone(), pf.v[next_row].clone())
+                };
+                match self.append_prefill_with_pressure(id, exclude, k, v) {
+                    Ok(undo) => undos.push(undo),
+                    Err(Error::AdmissionDeferred(msg)) => {
+                        if segs.is_empty() {
+                            return Err(Error::AdmissionDeferred(msg));
+                        }
+                        // Keep the rows that did fit; the rest waits.
+                        return Ok((rows_total, segs, undos));
+                    }
+                    Err(e) => {
+                        // Hard failure: unwind this grant's appends.
+                        let entry = self.sessions.get_mut(&id).expect("checked above");
+                        for undo in undos.into_iter().rev() {
+                            entry.session.undo_prefill_append(&mut self.pool, undo);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            let finalize = kd + take == next_row + 1;
+            segs.push(SegPlan {
+                row: next_row,
+                kd,
+                take,
+                finalize,
+            });
+            keys_left = keys_left.saturating_sub(take);
+            if finalize {
+                next_row += 1;
+                kd = 0;
+            } else {
+                // A mid-row stop ends the grant (the carry resumes it).
+                break;
+            }
+        }
+        Ok((rows_total, segs, undos))
+    }
+
+    /// Run one **mixed** scheduling wave: decode steps and
+    /// chunked-prefill grants staged together — transactionally, like
+    /// [`Self::step_wave`] — and executed spatially in one engine
+    /// (step lanes exactly as in a decode wave; prefill segments as
+    /// seeded-scan chunk pipelines beside them, see
+    /// [`build_mixed_wave`]). Per-request results arrive in input
+    /// order: bad requests error individually, pool exhaustion defers
+    /// individually (a partially satisfiable grant stages what fits),
+    /// and a failed engine run unwinds every staged row and append.
+    /// Prefill cursors and carries advance only on success, so a failed
+    /// wave leaves every session bit-exactly as it was.
+    pub fn wave(&mut self, reqs: &[WaveRequest]) -> Vec<Result<WaveOutcome>> {
+        let mut results: Vec<Option<Result<WaveOutcome>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        let mut staged: Vec<StagedItem> = Vec::new();
+        let mut staged_ids: Vec<u64> = Vec::new();
+        for (i, wr) in reqs.iter().enumerate() {
+            let id = wr.session();
+            if staged_ids.contains(&id) {
+                results[i] = Some(Err(Error::Coordinator(format!(
+                    "session {id} appears twice in one wave (iteration-level \
+                     batching runs one grant per session)"
+                ))));
+                continue;
+            }
+            let mut exclude = staged_ids.clone();
+            exclude.push(id);
+            match wr {
+                WaveRequest::Step(req) => {
+                    let admitted = self.admit_step(req).and_then(|class| {
+                        self.stage_with_pressure(id, &exclude, &req.q, &req.k, &req.v)
+                            .map(|()| class)
+                    });
+                    match admitted {
+                        Ok(class) => {
+                            staged_ids.push(id);
+                            staged.push(StagedItem::Step { i, id, class });
+                        }
+                        Err(e) => results[i] = Some(Err(e)),
+                    }
+                }
+                WaveRequest::Prefill {
+                    max_rows, max_keys, ..
+                } => match self.stage_prefill(id, &exclude, *max_rows, *max_keys) {
+                    Ok((rows_total, segs, undos)) if !segs.is_empty() => {
+                        staged_ids.push(id);
+                        staged.push(StagedItem::Prefill {
+                            i,
+                            id,
+                            rows_total,
+                            segs,
+                            undos,
+                        });
+                    }
+                    Ok(_) => {
+                        results[i] = Some(Err(Error::Coordinator(format!(
+                            "empty prefill grant for session {id}"
+                        ))));
+                    }
+                    Err(e) => results[i] = Some(Err(e)),
+                },
+            }
+        }
+        if !staged.is_empty() {
+            // Build one engine: decode steps in their lane scopes,
+            // prefill segments as chunk pipelines beside them. Key
+            // spans come from prefix gathers so a row staged for a
+            // later segment never leaks into an earlier row's view.
+            let built = {
+                let mut work: Vec<LaneWork<'_>> = Vec::new();
+                for item in &staged {
+                    match item {
+                        StagedItem::Step { i, id, .. } => {
+                            let entry = self.sessions.get(id).expect("staged");
+                            let view = self.pool.view(entry.session.table());
+                            let WaveRequest::Step(req) = &reqs[*i] else {
+                                unreachable!("step item indexes a step request")
+                            };
+                            work.push(LaneWork::Step(LaneStepRows {
+                                kind: entry.session.kind(),
+                                lane: entry.lane,
+                                q: &req.q,
+                                keys: view.keys,
+                                values: view.values,
+                            }));
+                        }
+                        StagedItem::Prefill { id, segs, .. } => {
+                            let entry = self.sessions.get(id).expect("staged");
+                            let pf = entry.prefill.as_ref().expect("staged prefill");
+                            for (j, seg) in segs.iter().enumerate() {
+                                let (keys, values) = if entry.session.window().is_some() {
+                                    // One whole row per wave: the ring
+                                    // gather is exactly a decode step's.
+                                    let view = self.pool.view(entry.session.table());
+                                    (view.keys, view.values)
+                                } else {
+                                    let view = self
+                                        .pool
+                                        .view_prefix(entry.session.table(), seg.row + 1);
+                                    (
+                                        view.keys[seg.kd..seg.kd + seg.take].to_vec(),
+                                        view.values[seg.kd..seg.kd + seg.take].to_vec(),
+                                    )
+                                };
+                                let carry = if seg.kd == 0 {
+                                    SoftmaxCarry::fresh(entry.class.d)
+                                } else {
+                                    pf.carry.clone()
+                                };
+                                work.push(LaneWork::Chunk(LaneChunkRows {
+                                    kind: entry.session.kind(),
+                                    lane: entry.lane,
+                                    seg: j,
+                                    q: &pf.q[seg.row],
+                                    keys,
+                                    values,
+                                    carry,
+                                    finalize: seg.finalize,
+                                }));
+                            }
+                        }
+                    }
+                }
+                build_mixed_wave(&work, DepthPolicy::Inferred)
+            };
+            let run = built.and_then(|mut wave| {
+                if let Some(mode) = self.cfg.mode {
+                    wave.engine.set_scheduler_mode(mode);
+                }
+                if let Some(th) = self.cfg.threads {
+                    wave.engine.set_threads(th);
+                }
+                wave.run()
+            });
+            match run {
+                Ok((mut rows, summary)) => {
+                    let wave_lanes = staged.len();
+                    let mut cursor = 0usize;
+                    for item in staged {
+                        match item {
+                            StagedItem::Step { i, id, class } => {
+                                let row = std::mem::take(&mut rows[cursor]);
+                                cursor += 1;
+                                let entry = self.sessions.get_mut(&id).expect("staged");
+                                entry.session.commit_row(&mut self.pool, row.clone());
+                                let lane = entry.lane;
+                                let step = (entry.session.len() - 1) as u64;
+                                self.steps_served += 1;
+                                results[i] = Some(Ok(WaveOutcome::Step(DecodeStepResponse {
+                                    session: id,
+                                    step,
+                                    class,
+                                    lane,
+                                    wave_lanes,
+                                    row,
+                                    cycles: summary.cycles,
+                                })));
+                            }
+                            StagedItem::Prefill {
+                                i,
+                                id,
+                                rows_total,
+                                segs,
+                                undos,
+                            } => {
+                                let seg_rows: Vec<Vec<f32>> = rows
+                                    [cursor..cursor + segs.len()]
+                                    .iter_mut()
+                                    .map(std::mem::take)
+                                    .collect();
+                                cursor += segs.len();
+                                for undo in undos {
+                                    self.pool.commit_append(undo);
+                                }
+                                let entry = self.sessions.get_mut(&id).expect("staged");
+                                let d = entry.class.d;
+                                for (seg, row) in segs.iter().zip(seg_rows) {
+                                    let pf =
+                                        entry.prefill.as_mut().expect("staged prefill");
+                                    if seg.finalize {
+                                        pf.next_row = seg.row + 1;
+                                        pf.keys_done = 0;
+                                        pf.carry = SoftmaxCarry::fresh(d);
+                                        entry.session.push_output_row(row);
+                                        self.steps_served += 1;
+                                    } else {
+                                        pf.keys_done = seg.kd + seg.take;
+                                        pf.carry = SoftmaxCarry::unpack(&row)
+                                            .expect("carry rows hold m, r and ℓ⃗");
+                                    }
+                                }
+                                let rows_done = entry
+                                    .prefill
+                                    .as_ref()
+                                    .map(|pf| pf.next_row)
+                                    .unwrap_or(rows_total);
+                                let done = rows_done >= rows_total;
+                                if done {
+                                    entry.prefill = None;
+                                }
+                                let lane = entry.lane;
+                                results[i] =
+                                    Some(Ok(WaveOutcome::Prefill(PrefillProgress {
+                                        session: id,
+                                        rows_done,
+                                        rows_total,
+                                        done,
+                                        lane,
+                                        wave_lanes,
+                                        cycles: summary.cycles,
+                                    })));
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Unwind everything in reverse staging order: no
+                    // prefill cursor moved yet, so reverting rows and
+                    // appends restores the exact pre-wave state.
+                    let msg = e.to_string();
+                    for item in staged.into_iter().rev() {
+                        match item {
+                            StagedItem::Step { i, id, .. } => {
+                                if let Some(entry) = self.sessions.get_mut(&id) {
+                                    entry.session.unstage(&mut self.pool);
+                                }
+                                results[i] = Some(Err(Error::Coordinator(format!(
+                                    "decode wave failed: {msg}"
+                                ))));
+                            }
+                            StagedItem::Prefill { i, id, undos, .. } => {
+                                if let Some(entry) = self.sessions.get_mut(&id) {
+                                    for undo in undos.into_iter().rev() {
+                                        entry
+                                            .session
+                                            .undo_prefill_append(&mut self.pool, undo);
+                                    }
+                                }
+                                results[i] = Some(Err(Error::Coordinator(format!(
+                                    "decode wave failed: {msg}"
+                                ))));
+                            }
+                        }
                     }
                 }
             }
@@ -1207,5 +1861,260 @@ mod tests {
         let tb = table.close(b).unwrap();
         assert_eq!(ta, decode_workload(DecodeKind::MemoryFree, &wa).unwrap());
         assert_eq!(tb, decode_workload(DecodeKind::MemoryFree, &wb).unwrap());
+    }
+
+    fn prompt_of(w: &Workload, rows: usize) -> PrefillPrompt {
+        PrefillPrompt {
+            q: w.q[..rows].to_vec(),
+            k: w.k[..rows].to_vec(),
+            v: w.v[..rows].to_vec(),
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_transcripts_match_the_solo_chain_bitwise() {
+        // A 5-row prompt ingested in chunks of ≤ 2 rows / ≤ 3 keys —
+        // forcing mid-row splits with carry resume — then 3 decode
+        // steps. The transcript must equal the unchunked oracle chain
+        // to the bit.
+        let w = Workload::random(8, 4, 0xC0DE);
+        let mut table = SessionTable::new(SessionConfig {
+            kind: DecodeKind::MemoryFree,
+            kv: KvCacheConfig {
+                block_size: 2,
+                num_blocks: 32,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let id = table
+            .open_with_spec(4, None, Priority::Interactive, Some(prompt_of(&w, 5)))
+            .unwrap();
+        assert_eq!(table.priority_of(id), Some(Priority::Interactive));
+        assert_eq!(table.prefill_remaining(id), Some(5));
+        // Decode steps and forks must wait for the prompt.
+        let err = table.step(wreq(&w, id, 5));
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("prefill")),
+            "decode before prefill completes must be rejected"
+        );
+        let err = table.fork(id);
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("prefill")),
+            "fork before prefill completes must be rejected"
+        );
+        let mut waves = 0;
+        while table.prefill_remaining(id) != Some(0) {
+            waves += 1;
+            assert!(waves < 20, "prefill must make progress every wave");
+            let res = table.wave(&[WaveRequest::Prefill {
+                session: id,
+                max_rows: 2,
+                max_keys: 3,
+            }]);
+            let Ok(WaveOutcome::Prefill(p)) = &res[0] else {
+                panic!("prefill grant failed: {:?}", res[0]);
+            };
+            assert_eq!(p.session, id);
+            assert_eq!(p.rows_total, 5);
+        }
+        assert!(waves > 2, "3-key grants cannot swallow 5 rows in 2 waves");
+        assert_eq!(table.prefill_remaining(id), Some(0));
+        assert_eq!(table.len_of(id), Some(5), "all 5 prompt rows cached");
+        for t in 5..w.n {
+            table.step(wreq(&w, id, t)).unwrap();
+        }
+        let transcript = table.close(id).unwrap();
+        assert_eq!(
+            transcript,
+            decode_workload(DecodeKind::MemoryFree, &w).unwrap(),
+            "chunked prefill + decode must be bit-identical to the solo chain"
+        );
+    }
+
+    #[test]
+    fn mixed_waves_run_decode_beside_chunked_prefill() {
+        // One session decodes while another ingests its prompt in the
+        // same waves; both transcripts must match their solo oracles.
+        let wd = Workload::random(4, 4, 0x30A1);
+        let wp = Workload::random(6, 4, 0x30A2);
+        let mut table = SessionTable::new(SessionConfig::default()).unwrap();
+        let a = table.open(4).unwrap();
+        table.step(wreq(&wd, a, 0)).unwrap();
+        let b = table
+            .open_with_spec(4, None, Priority::Bulk, Some(prompt_of(&wp, 6)))
+            .unwrap();
+        for t in 1..wd.n {
+            let res = table.wave(&[
+                WaveRequest::Step(wreq(&wd, a, t)),
+                WaveRequest::Prefill {
+                    session: b,
+                    max_rows: 2,
+                    max_keys: 4,
+                },
+            ]);
+            assert!(
+                matches!(&res[0], Ok(WaveOutcome::Step(_))),
+                "{:?}",
+                res[0]
+            );
+            assert!(
+                matches!(&res[1], Ok(WaveOutcome::Prefill(_))),
+                "{:?}",
+                res[1]
+            );
+        }
+        let mut guard = 0;
+        while table.prefill_remaining(b) != Some(0) {
+            guard += 1;
+            assert!(guard < 20, "prefill drain stalled");
+            let res = table.wave(&[WaveRequest::Prefill {
+                session: b,
+                max_rows: 2,
+                max_keys: 4,
+            }]);
+            assert!(res[0].is_ok(), "{:?}", res[0]);
+        }
+        let ta = table.close(a).unwrap();
+        let tb = table.close(b).unwrap();
+        assert_eq!(ta, decode_workload(DecodeKind::MemoryFree, &wd).unwrap());
+        assert_eq!(tb, decode_workload(DecodeKind::MemoryFree, &wp).unwrap());
+    }
+
+    #[test]
+    fn windowed_prompts_ingest_one_row_per_wave_bitwise() {
+        // A ring evicts in place, so windowed prompts are
+        // non-splittable and capped at one row per wave regardless of
+        // the grant — and still land bit-identical to the contiguous
+        // windowed chain.
+        let n = 7;
+        let w = Workload::random(n, 4, 0x317D1);
+        let mut table = SessionTable::new(SessionConfig {
+            kind: DecodeKind::MemoryFree,
+            kv: KvCacheConfig {
+                block_size: 2,
+                num_blocks: 8,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let id = table
+            .open_with_spec(4, Some(3), Priority::Standard, Some(prompt_of(&w, n)))
+            .unwrap();
+        let mut waves = 0;
+        while let Some((total, next, kd, splittable)) = table.prefill_state(id) {
+            assert!(!splittable, "windowed rows never split");
+            assert_eq!(kd, 0, "windowed prefill has no mid-row carry");
+            let res = table.wave(&[WaveRequest::Prefill {
+                session: id,
+                max_rows: 4,
+                max_keys: 100,
+            }]);
+            let Ok(WaveOutcome::Prefill(p)) = &res[0] else {
+                panic!("windowed grant failed: {:?}", res[0]);
+            };
+            assert_eq!(p.rows_done, next + 1, "exactly one row per wave");
+            assert_eq!(p.rows_total, total);
+            waves += 1;
+            assert!(waves <= n, "too many waves");
+        }
+        assert_eq!(waves, n, "one wave per prompt row");
+        let transcript = table.close(id).unwrap();
+        let mut solo = DecodeSession::new_windowed(DecodeKind::MemoryFree, 4, 3);
+        for t in 0..n {
+            solo.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .unwrap();
+        }
+        assert_eq!(
+            transcript,
+            *solo.outputs(),
+            "windowed chunked prefill vs solo windowed chain"
+        );
+    }
+
+    #[test]
+    fn preemption_prefers_lower_priority_victims() {
+        // Pool pressure must evict the Bulk resident before the
+        // Interactive one, whatever their block counts say.
+        let wa = Workload::random(2, 4, 0x9B01);
+        let wb = Workload::random(2, 4, 0x9B02);
+        let wc = Workload::random(1, 4, 0x9B03);
+        let mut table = SessionTable::new(SessionConfig {
+            kind: DecodeKind::MemoryFree,
+            lanes: 3,
+            kv: KvCacheConfig {
+                block_size: 1,
+                num_blocks: 4,
+            },
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let hi = table
+            .open_with_spec(4, None, Priority::Interactive, None)
+            .unwrap();
+        let lo = table
+            .open_with_spec(4, None, Priority::Bulk, None)
+            .unwrap();
+        for t in 0..2 {
+            table.step(wreq(&wa, hi, t)).unwrap();
+            table.step(wreq(&wb, lo, t)).unwrap();
+        }
+        assert_eq!(table.pool_used_blocks(), 4, "pool is full");
+        let nw = table.open(4).unwrap();
+        table.step(wreq(&wc, nw, 0)).unwrap();
+        assert_eq!(
+            table.is_preempted(lo),
+            Some(true),
+            "the Bulk session is the preferred victim"
+        );
+        assert_eq!(
+            table.is_preempted(hi),
+            Some(false),
+            "the Interactive session stays resident"
+        );
+        let tb = table.close(lo).unwrap();
+        assert_eq!(tb, decode_workload(DecodeKind::MemoryFree, &wb).unwrap());
+    }
+
+    #[test]
+    fn prompt_validation_rejects_ragged_and_oversized_prompts() {
+        let w = Workload::random(5, 4, 0xBAD5);
+        let mut table = SessionTable::new(SessionConfig {
+            kind: DecodeKind::MemoryFree,
+            max_len: 4,
+            ..SessionConfig::default()
+        })
+        .unwrap();
+        let mut ragged = prompt_of(&w, 3);
+        ragged.k.pop();
+        let err = table.open_with_spec(4, None, Priority::Standard, Some(ragged));
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("ragged")),
+            "ragged prompts must be rejected"
+        );
+        let mut short = prompt_of(&w, 2);
+        short.q[1] = vec![0.0; 3];
+        let err = table.open_with_spec(4, None, Priority::Standard, Some(short));
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("dim")),
+            "wrong-width prompt rows must be rejected"
+        );
+        let err = table.open_with_spec(4, None, Priority::Standard, Some(prompt_of(&w, 5)));
+        assert!(
+            matches!(err, Err(Error::Coordinator(msg)) if msg.contains("context window")),
+            "a 5-row unwindowed prompt exceeds max_len = 4"
+        );
+        // The same prompt fits a windowed session (the ring bounds
+        // residency, not the prompt length).
+        let id = table
+            .open_with_spec(4, Some(2), Priority::Standard, Some(prompt_of(&w, 5)))
+            .unwrap();
+        assert_eq!(table.prefill_remaining(id), Some(5));
+        // An empty prompt is the same as no prompt at all.
+        let plain = table
+            .open_with_spec(4, None, Priority::Standard, Some(PrefillPrompt::default()))
+            .unwrap();
+        assert_eq!(table.prefill_state(plain), None);
+        assert_eq!(table.prefill_remaining(plain), Some(0));
     }
 }

@@ -16,6 +16,7 @@
 use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
+use super::sched::Priority;
 use crate::prng::SplitMix64;
 
 /// Fixed reservoir size per latency stream. 1024 samples hold
@@ -89,6 +90,14 @@ pub struct ServingStats {
     first_tokens: u64,
     ttft_sum_us: u128,
     ttft: Reservoir,
+    // Per-priority-class splits of the two decode SLO streams (indexed
+    // by `Priority::rank()`); the unsplit streams above stay the
+    // all-class aggregates.
+    ttft_class: Vec<PctStats>,
+    itl_class: Vec<PctStats>,
+    // Scheduler starvation gauge: the oldest queue age (in waves) any
+    // candidate reached before being planned.
+    max_queue_age_waves: u64,
     // Waves (one per scheduling iteration that ran ≥ 1 lane).
     waves: u64,
     wave_lane_sum: u128,
@@ -142,6 +151,13 @@ impl ServingStats {
             first_tokens: 0,
             ttft_sum_us: 0,
             ttft: Reservoir::new(0x5EED_0003),
+            ttft_class: (0..Priority::ALL.len())
+                .map(|i| PctStats::new(0x5EED_0100 + i as u64))
+                .collect(),
+            itl_class: (0..Priority::ALL.len())
+                .map(|i| PctStats::new(0x5EED_0200 + i as u64))
+                .collect(),
+            max_queue_age_waves: 0,
             waves: 0,
             wave_lane_sum: 0,
             lane_capacity: 0,
@@ -261,6 +277,48 @@ impl ServingStats {
         self.first_tokens += 1;
         self.ttft_sum_us += latency_us as u128;
         self.ttft.push(latency_us);
+    }
+
+    /// Record one completed decode step under a [`Priority`] class: the
+    /// all-class stream gets the sample as before, plus the class's own
+    /// inter-token split.
+    pub fn record_decode_step_for(&mut self, priority: Priority, latency_us: u64) {
+        self.record_decode_step(latency_us);
+        self.itl_class[priority.rank() as usize].push(latency_us);
+    }
+
+    /// Record one TTFT under a [`Priority`] class (all-class stream plus
+    /// the class split).
+    pub fn record_ttft_for(&mut self, priority: Priority, latency_us: u64) {
+        self.record_ttft(latency_us);
+        self.ttft_class[priority.rank() as usize].push(latency_us);
+    }
+
+    /// A priority class's TTFT percentile in µs; `None` without data.
+    pub fn ttft_pct_for(&self, priority: Priority, pct: f64) -> Option<u64> {
+        self.ttft_class[priority.rank() as usize].pct(pct)
+    }
+
+    /// A priority class's inter-token latency percentile in µs.
+    pub fn decode_latency_pct_for(&self, priority: Priority, pct: f64) -> Option<u64> {
+        self.itl_class[priority.rank() as usize].pct(pct)
+    }
+
+    /// First tokens recorded for a priority class.
+    pub fn first_tokens_for(&self, priority: Priority) -> u64 {
+        self.ttft_class[priority.rank() as usize].count()
+    }
+
+    /// Raise the starvation gauge: the oldest age (in scheduling waves)
+    /// any queued candidate reached before the planner served it.
+    pub fn note_queue_age(&mut self, age_waves: u64) {
+        self.max_queue_age_waves = self.max_queue_age_waves.max(age_waves);
+    }
+
+    /// The oldest queue age (waves) seen so far — bounded by the
+    /// scheduler's aging deadline when the planner is starvation-free.
+    pub fn max_queue_age_waves(&self) -> u64 {
+        self.max_queue_age_waves
     }
 
     /// First tokens recorded so far.
@@ -445,6 +503,20 @@ impl ServingStats {
                 self.sessions_opened,
                 self.sessions_closed,
             ));
+            for p in Priority::ALL {
+                let c = &self.ttft_class[p.rank() as usize];
+                if c.count() > 0 {
+                    s.push_str(&format!(
+                        " {}: ttft_p50={}us itl_p50={}us",
+                        p.name(),
+                        c.pct(0.50).unwrap_or(0),
+                        self.decode_latency_pct_for(p, 0.50).unwrap_or(0),
+                    ));
+                }
+            }
+            if self.max_queue_age_waves > 0 {
+                s.push_str(&format!(" max_queue_age={}w", self.max_queue_age_waves));
+            }
         }
         if self.pool_capacity > 0 {
             s.push_str(&format!(
@@ -521,6 +593,10 @@ pub struct ShardRollup {
     deferrals: u64,
     ttft: PctStats,
     inter_token: PctStats,
+    /// Per-priority-class splits of the two streams above, indexed by
+    /// `Priority::rank()`.
+    ttft_class: Vec<PctStats>,
+    itl_class: Vec<PctStats>,
 }
 
 impl ShardRollup {
@@ -533,6 +609,12 @@ impl ShardRollup {
             deferrals: 0,
             ttft: PctStats::new(seed ^ 0x7717),
             inter_token: PctStats::new(seed ^ 0x17E2),
+            ttft_class: (0..Priority::ALL.len())
+                .map(|i| PctStats::new(seed ^ (0x7717_0100 + i as u64)))
+                .collect(),
+            itl_class: (0..Priority::ALL.len())
+                .map(|i| PctStats::new(seed ^ (0x17E2_0100 + i as u64)))
+                .collect(),
         }
     }
 
@@ -540,12 +622,31 @@ impl ShardRollup {
     /// the TTFT stream (arrival → first row) instead of the inter-token
     /// stream (gap between consecutive rows).
     pub fn record_step(&mut self, first: bool, latency_cycles: u64) {
+        self.record_step_for(Priority::Standard, first, latency_cycles);
+    }
+
+    /// Record one completed decode step under a [`Priority`] class:
+    /// the all-class streams get the sample, plus the class's split.
+    pub fn record_step_for(&mut self, priority: Priority, first: bool, latency_cycles: u64) {
         self.steps += 1;
+        let rank = priority.rank() as usize;
         if first {
             self.ttft.push(latency_cycles);
+            self.ttft_class[rank].push(latency_cycles);
         } else {
             self.inter_token.push(latency_cycles);
+            self.itl_class[rank].push(latency_cycles);
         }
+    }
+
+    /// A priority class's TTFT stream.
+    pub fn ttft_for(&self, priority: Priority) -> &PctStats {
+        &self.ttft_class[priority.rank() as usize]
+    }
+
+    /// A priority class's inter-token stream.
+    pub fn inter_token_for(&self, priority: Priority) -> &PctStats {
+        &self.itl_class[priority.rank() as usize]
     }
 
     /// Record a session placed on this shard.
@@ -644,8 +745,20 @@ impl FleetRollup {
 
     /// Record one completed decode step on `shard`.
     pub fn record_step(&mut self, shard: usize, first: bool, latency_cycles: u64) {
-        self.shards[shard].record_step(first, latency_cycles);
-        self.aggregate.record_step(first, latency_cycles);
+        self.record_step_for(shard, Priority::Standard, first, latency_cycles);
+    }
+
+    /// Record one completed decode step on `shard` under a priority
+    /// class (the shard and the aggregate both take the class split).
+    pub fn record_step_for(
+        &mut self,
+        shard: usize,
+        priority: Priority,
+        first: bool,
+        latency_cycles: u64,
+    ) {
+        self.shards[shard].record_step_for(priority, first, latency_cycles);
+        self.aggregate.record_step_for(priority, first, latency_cycles);
     }
 
     /// Record a session placed on `shard`.
@@ -899,6 +1012,45 @@ mod tests {
         let line = f.summary();
         assert!(line.contains("fleet[2]"), "{line}");
         assert!(line.contains("s1: steps=1"), "{line}");
+    }
+
+    #[test]
+    fn per_class_slo_splits_and_queue_age_gauge() {
+        let mut s = ServingStats::new();
+        s.record_ttft_for(Priority::Interactive, 100);
+        s.record_ttft_for(Priority::Bulk, 900);
+        s.record_decode_step_for(Priority::Interactive, 10);
+        s.record_decode_step_for(Priority::Bulk, 90);
+        // Class splits stay separate; the all-class streams see both.
+        assert_eq!(s.first_tokens(), 2);
+        assert_eq!(s.decode_steps(), 2);
+        assert_eq!(s.ttft_pct_for(Priority::Interactive, 0.5), Some(100));
+        assert_eq!(s.ttft_pct_for(Priority::Bulk, 0.5), Some(900));
+        assert_eq!(s.ttft_pct_for(Priority::Standard, 0.5), None);
+        assert_eq!(s.first_tokens_for(Priority::Interactive), 1);
+        assert_eq!(s.decode_latency_pct_for(Priority::Bulk, 0.5), Some(90));
+        s.note_queue_age(3);
+        s.note_queue_age(1);
+        assert_eq!(s.max_queue_age_waves(), 3, "gauge keeps the max");
+        let line = s.summary();
+        assert!(line.contains("interactive: ttft_p50=100us"), "{line}");
+        assert!(line.contains("max_queue_age=3w"), "{line}");
+
+        // Roll-ups: the legacy class-less recorder delegates to
+        // Standard, so old call sites keep their numbers.
+        let mut f = FleetRollup::new(1);
+        f.record_step(0, true, 500);
+        f.record_step_for(0, Priority::Interactive, true, 50);
+        assert_eq!(f.aggregate().ttft().count(), 2);
+        assert_eq!(
+            f.aggregate().ttft_for(Priority::Standard).pct(0.5),
+            Some(500)
+        );
+        assert_eq!(
+            f.shard(0).ttft_for(Priority::Interactive).pct(0.5),
+            Some(50)
+        );
+        assert_eq!(f.aggregate().inter_token_for(Priority::Bulk).count(), 0);
     }
 
     #[test]

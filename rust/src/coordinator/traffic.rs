@@ -19,6 +19,13 @@
 //! * Abandon-mid-decode behavior: a fraction of sessions stop after a
 //!   pinned number of output tokens (the prompt always completes),
 //!   modeling clients that navigate away.
+//! * SLO [`Priority`] classes: configurable interactive/bulk fractions
+//!   tag fresh sessions (forks inherit the parent's class), so the
+//!   budgeted planner's per-class deadlines and the per-class
+//!   TTFT/ITL roll-ups have a workload to discriminate. With both
+//!   fractions zero (the default) every session is `Standard` and the
+//!   generator draws **no** extra randomness — legacy seeds stay
+//!   byte-identical.
 //! * Sliding-window sessions: an optional trace-wide window `W` makes
 //!   every session (forks included — they inherit it) attend only its
 //!   last `W` cached rows, exercising ring eviction through the whole
@@ -34,6 +41,7 @@
 
 use std::collections::HashMap;
 
+use super::sched::Priority;
 use crate::attention::decode::{DecodeKind, DecodeSession};
 use crate::attention::reference::Matrix;
 use crate::attention::workload::Workload;
@@ -171,6 +179,13 @@ pub struct TrafficConfig {
     pub fork_fraction: f64,
     /// Fraction of sessions that abandon mid-decode (0.0–1.0).
     pub abandon_fraction: f64,
+    /// Fraction of fresh sessions tagged [`Priority::Interactive`]
+    /// (0.0–1.0; forks inherit the parent's class).
+    pub interactive_fraction: f64,
+    /// Fraction of fresh sessions tagged [`Priority::Bulk`] (0.0–1.0;
+    /// `interactive_fraction + bulk_fraction` ≤ 1, the remainder is
+    /// [`Priority::Standard`]).
+    pub bulk_fraction: f64,
     /// `Some(w)`: every session decodes under a sliding window of `w`
     /// rows (forks inherit it); `None`: full-context sessions.
     pub window: Option<usize>,
@@ -193,6 +208,8 @@ impl Default for TrafficConfig {
             output: LenDist::Uniform { lo: 2, hi: 8 },
             fork_fraction: 0.25,
             abandon_fraction: 0.15,
+            interactive_fraction: 0.0,
+            bulk_fraction: 0.0,
             window: None,
             seed: 0x7AFF_1C,
         }
@@ -228,6 +245,9 @@ pub struct TraceSession {
     /// sliding window; forks inherit the parent's). `None`: full
     /// context.
     pub window: Option<usize>,
+    /// SLO class the session decodes under (forks inherit the
+    /// parent's).
+    pub priority: Priority,
     /// Per-session row seed (derives the session's own Q/K/V rows).
     pub seed: u64,
 }
@@ -328,6 +348,15 @@ impl Trace {
                 cfg.fork_fraction, cfg.abandon_fraction
             )));
         }
+        if !(0.0..=1.0).contains(&cfg.interactive_fraction)
+            || !(0.0..=1.0).contains(&cfg.bulk_fraction)
+            || cfg.interactive_fraction + cfg.bulk_fraction > 1.0
+        {
+            return Err(Error::Usage(format!(
+                "priority fractions must lie in [0, 1] and sum to ≤ 1 (got {} and {})",
+                cfg.interactive_fraction, cfg.bulk_fraction
+            )));
+        }
         if cfg.window == Some(0) {
             return Err(Error::Usage(
                 "traffic window must be ≥ 1 when set".into(),
@@ -402,6 +431,25 @@ impl Trace {
                 Some(p) => sessions[p as usize].window,
                 None => cfg.window,
             };
+            // Forks inherit the parent's class; fresh sessions draw one
+            // only when a mix is configured, so an all-Standard config
+            // (the default) consumes no extra randomness and legacy
+            // seeds stay byte-identical.
+            let mix = cfg.interactive_fraction + cfg.bulk_fraction;
+            let priority = match parent {
+                Some(p) => sessions[p as usize].priority,
+                None if mix > 0.0 => {
+                    let u = rng.uniform();
+                    if u < cfg.interactive_fraction {
+                        Priority::Interactive
+                    } else if u < mix {
+                        Priority::Bulk
+                    } else {
+                        Priority::Standard
+                    }
+                }
+                None => Priority::Standard,
+            };
             sessions.push(TraceSession {
                 id,
                 arrival,
@@ -412,6 +460,7 @@ impl Trace {
                 output_len,
                 abandon_after,
                 window,
+                priority,
                 seed: rng.next_u64(),
             });
         }
@@ -479,9 +528,9 @@ impl Trace {
             };
             s.push_str(&format!(
                 "s{} t={} parent={} fork_at={} prompt={} out={} abandon={} win={} \
-                 seed={:#018x}\n",
+                 prio={} seed={:#018x}\n",
                 ts.id, ts.arrival, parent, ts.fork_at, ts.prompt_len, ts.output_len,
-                abandon, win, ts.seed
+                abandon, win, ts.priority, ts.seed
             ));
         }
         s
@@ -735,6 +784,50 @@ mod tests {
         }
         let bad = TrafficConfig {
             window: Some(0),
+            ..TrafficConfig::default()
+        };
+        assert!(matches!(Trace::generate(&bad), Err(Error::Usage(_))));
+    }
+
+    #[test]
+    fn priority_mix_tags_fresh_sessions_and_forks_inherit() {
+        let cfg = TrafficConfig {
+            sessions: 64,
+            fork_fraction: 0.5,
+            interactive_fraction: 0.3,
+            bulk_fraction: 0.3,
+            ..TrafficConfig::default()
+        };
+        let trace = Trace::generate(&cfg).unwrap();
+        let mut seen = [0usize; 3];
+        for s in &trace.sessions {
+            seen[s.priority.rank() as usize] += 1;
+            if let Some(p) = s.parent {
+                assert_eq!(
+                    s.priority, trace.sessions[p as usize].priority,
+                    "forks inherit the parent's class"
+                );
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c > 0),
+            "a 30/40/30 mix over 64 sessions hits every class (got {seen:?})"
+        );
+        assert!(trace.encode().contains(" prio=interactive "), "class encoded");
+        assert_eq!(
+            trace.encode(),
+            Trace::generate(&cfg).unwrap().encode(),
+            "priority draws join the byte-determinism contract"
+        );
+        // The default mix draws nothing: every session is Standard.
+        let legacy = Trace::generate(&TrafficConfig::default()).unwrap();
+        assert!(legacy
+            .sessions
+            .iter()
+            .all(|s| s.priority == Priority::Standard));
+        let bad = TrafficConfig {
+            interactive_fraction: 0.8,
+            bulk_fraction: 0.5,
             ..TrafficConfig::default()
         };
         assert!(matches!(Trace::generate(&bad), Err(Error::Usage(_))));

@@ -1,0 +1,62 @@
+//! Shared environment-knob parsing: one typo-safe fallback path for
+//! every `SDPA_*` variable.
+//!
+//! `SDPA_SCHED` and `SDPA_THREADS` used to carry two hand-rolled copies
+//! of the same shape — read the variable, try a strict parse, fall back
+//! to a default on anything unrecognised — and the copies could drift
+//! (a typo'd knob must *never* change semantics, only cost
+//! performance; see the CI test matrix, which sets both). This module
+//! is the single implementation both go through.
+
+/// Read environment variable `var` and run `parse` over its value;
+/// return `default` when the variable is unset **or** the parse
+/// rejects it. The parse function is strict (returns `None` for
+/// anything it does not recognise), so typos degrade to the default
+/// instead of being guessed at.
+pub fn parse_or<T>(var: &str, parse: impl Fn(&str) -> Option<T>, default: T) -> T {
+    std::env::var(var)
+        .ok()
+        .and_then(|s| parse(&s))
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test owns a uniquely named variable: `cargo test` runs tests
+    // in parallel and the process environment is shared.
+
+    #[test]
+    fn unset_variable_yields_the_default() {
+        assert_eq!(parse_or("SDPA_ENVKNOB_TEST_UNSET", |s| s.parse::<u32>().ok(), 7), 7);
+    }
+
+    #[test]
+    fn recognised_value_parses() {
+        std::env::set_var("SDPA_ENVKNOB_TEST_OK", "42");
+        assert_eq!(parse_or("SDPA_ENVKNOB_TEST_OK", |s| s.parse::<u32>().ok(), 7), 42);
+        std::env::remove_var("SDPA_ENVKNOB_TEST_OK");
+    }
+
+    #[test]
+    fn typo_falls_back_to_the_default_not_a_guess() {
+        std::env::set_var("SDPA_ENVKNOB_TEST_TYPO", "fourty-two");
+        assert_eq!(parse_or("SDPA_ENVKNOB_TEST_TYPO", |s| s.parse::<u32>().ok(), 7), 7);
+        std::env::remove_var("SDPA_ENVKNOB_TEST_TYPO");
+    }
+
+    #[test]
+    fn parse_sees_the_raw_value_including_whitespace() {
+        std::env::set_var("SDPA_ENVKNOB_TEST_RAW", " 8 ");
+        // A strict parser that refuses whitespace rejects — the
+        // trimming policy belongs to the per-knob parser, not here.
+        assert_eq!(parse_or("SDPA_ENVKNOB_TEST_RAW", |s| s.parse::<u32>().ok(), 1), 1);
+        // A trimming parser accepts the same value.
+        assert_eq!(
+            parse_or("SDPA_ENVKNOB_TEST_RAW", |s| s.trim().parse::<u32>().ok(), 1),
+            8
+        );
+        std::env::remove_var("SDPA_ENVKNOB_TEST_RAW");
+    }
+}

@@ -7,25 +7,33 @@
 //! bursty [`Trace`] per offered load (sessions per kilocycle during ON
 //! windows), replays it through fleets of F ∈ shard_counts independent
 //! fabrics on a virtual clock, and reports how the deployment-level
-//! metrics move. Every replay's served transcripts are differentially
-//! compared against the standalone [`DecodeSession`] oracle
-//! ([`Trace::oracle_transcripts`]) — the `bit_identical` column is the
-//! acceptance flag, and `tests/fleet_conformance.rs` asserts the same
-//! property across scheduler modes. `benches/fleet_throughput.rs` is
-//! the wall-clock twin emitting `BENCH_fleet.json` for CI.
+//! metrics move. Every (load, shards) cell replays twice — once under
+//! the legacy [`SchedPolicy::Flush`] planner and once under a
+//! token-budgeted [`SchedPolicy::Budgeted`] planner with chunked
+//! prefill — so the table shows what budgeting buys (TTFT tail) and
+//! costs (ITL) side by side. Every replay's served transcripts are
+//! differentially compared against the standalone [`DecodeSession`]
+//! oracle ([`Trace::oracle_transcripts`]) — the `bit_identical` column
+//! is the acceptance flag, and `tests/fleet_conformance.rs` asserts
+//! the same property across scheduler modes.
+//! `benches/fleet_throughput.rs` is the wall-clock twin emitting
+//! `BENCH_fleet.json` for CI; `benches/sched_throughput.rs` emits the
+//! flush-vs-budgeted `BENCH_sched.json` with its TTFT regression
+//! guard.
 //!
 //! [`DecodeSession`]: crate::attention::decode::DecodeSession
 
 use crate::attention::decode::DecodeKind;
 use crate::coordinator::fleet::{replay, FleetConfig};
+use crate::coordinator::sched::{SchedPolicy, SchedulerConfig};
 use crate::coordinator::traffic::{Arrivals, LenDist, Trace, TrafficConfig};
 use crate::coordinator::SessionConfig;
 use crate::report::Table;
 use crate::runtime::kvcache::KvCacheConfig;
 use crate::{Error, Result};
 
-/// One (offered load, shard count, scope) measurement — `shard: None`
-/// is the fleet aggregate, `Some(s)` one shard's share.
+/// One (offered load, shard count, policy, scope) measurement —
+/// `shard: None` is the fleet aggregate, `Some(s)` one shard's share.
 #[derive(Clone, Debug)]
 pub struct TrafficPoint {
     /// Offered load: arrival rate during ON windows (sessions per
@@ -35,6 +43,9 @@ pub struct TrafficPoint {
     pub shards: usize,
     /// `None` = fleet aggregate row, `Some(s)` = shard `s`'s row.
     pub shard: Option<usize>,
+    /// Wave-planning policy the replay ran under (`"flush"` or
+    /// `"budgeted"`).
+    pub sched: &'static str,
     /// Decode steps served in this scope.
     pub steps: u64,
     /// Steps per 1000 virtual cycles over the replay's span.
@@ -43,6 +54,9 @@ pub struct TrafficPoint {
     pub ttft_p50: u64,
     /// p95 time-to-first-token (virtual cycles).
     pub ttft_p95: u64,
+    /// p99 time-to-first-token (virtual cycles) — the budgeted
+    /// planner's headline metric.
+    pub ttft_p99: u64,
     /// Median inter-token gap (virtual cycles).
     pub itl_p50: u64,
     /// p95 inter-token gap (virtual cycles).
@@ -68,11 +82,12 @@ pub struct TrafficResult {
 }
 
 impl TrafficResult {
-    /// Look up the fleet-aggregate point for one (load, shards) cell.
-    pub fn aggregate(&self, load: f64, shards: usize) -> Option<&TrafficPoint> {
-        self.points
-            .iter()
-            .find(|p| p.load == load && p.shards == shards && p.shard.is_none())
+    /// Look up the fleet-aggregate point for one (load, shards,
+    /// policy) cell.
+    pub fn aggregate(&self, load: f64, shards: usize, sched: &str) -> Option<&TrafficPoint> {
+        self.points.iter().find(|p| {
+            p.load == load && p.shards == shards && p.sched == sched && p.shard.is_none()
+        })
     }
 
     /// Render the study table.
@@ -85,10 +100,11 @@ impl TrafficResult {
             &[
                 "load (sess/kcyc)",
                 "shards",
+                "sched",
                 "scope",
                 "steps",
                 "steps/kcyc",
-                "ttft p50/p95 (cyc)",
+                "ttft p50/p95/p99 (cyc)",
                 "itl p50/p95 (cyc)",
                 "deferrals",
                 "oracle-exact",
@@ -102,10 +118,11 @@ impl TrafficResult {
             t.row(&[
                 format!("{:.1}", p.load),
                 p.shards.to_string(),
+                p.sched.to_string(),
                 scope,
                 p.steps.to_string(),
                 format!("{:.2}", p.steps_per_kilocycle),
-                format!("{}/{}", p.ttft_p50, p.ttft_p95),
+                format!("{}/{}/{}", p.ttft_p50, p.ttft_p95, p.ttft_p99),
                 format!("{}/{}", p.itl_p50, p.itl_p95),
                 p.deferrals.to_string(),
                 if p.bit_identical { "yes" } else { "NO" }.to_string(),
@@ -135,9 +152,23 @@ fn shard_policy(trace: &Trace) -> SessionConfig {
     }
 }
 
-/// Run the study: one seeded bursty trace per offered load, replayed
-/// against each shard count. Every element of `loads` must be > 0 and
-/// of `shard_counts` ≥ 1.
+/// The budgeted policy the study compares against flush: chunked
+/// prefill (4 rows per session per wave) under budgets generous enough
+/// that the roomy shard policy never starves — the table then isolates
+/// the chunking/priority effect rather than budget throttling.
+fn budgeted_policy() -> SchedPolicy {
+    SchedPolicy::Budgeted(SchedulerConfig {
+        max_batch_prefill_tokens: 64,
+        max_batch_total_tokens: 4096,
+        prefill_chunk: 4,
+        ..SchedulerConfig::default()
+    })
+}
+
+/// Run the study: one seeded bursty trace per offered load (a quarter
+/// each interactive/bulk, the rest standard), replayed against each
+/// shard count under both wave planners. Every element of `loads` must
+/// be > 0 and of `shard_counts` ≥ 1.
 pub fn run(
     loads: &[f64],
     shard_counts: &[usize],
@@ -171,48 +202,55 @@ pub fn run(
                 mean_on: 2.0,
                 mean_off: 4.0,
             },
-            prompt: LenDist::Uniform { lo: 2, hi: 6 },
+            prompt: LenDist::Uniform { lo: 4, hi: 10 },
             output: LenDist::Uniform { lo: 2, hi: 8 },
             fork_fraction: 0.25,
             abandon_fraction: 0.2,
+            interactive_fraction: 0.25,
+            bulk_fraction: 0.25,
             window: None,
             seed: seed ^ load.to_bits(),
         };
         let trace = Trace::generate(&cfg)?;
         let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree)?;
         for &shards in shard_counts {
-            let fleet_cfg = FleetConfig {
-                shards,
-                sessions: shard_policy(&trace),
-            };
-            let rep = replay(&trace, fleet_cfg)?;
-            let bit_identical = trace
-                .sessions
-                .iter()
-                .all(|s| rep.transcripts.get(&s.id) == oracle.get(&s.id));
-            let total_cycles = rep.rollup.total_cycles();
-            let mut push_scope = |shard: Option<usize>| {
-                let r = match shard {
-                    None => rep.rollup.aggregate(),
-                    Some(s) => rep.rollup.shard(s),
-                };
-                points.push(TrafficPoint {
-                    load,
+            for policy in [SchedPolicy::Flush, budgeted_policy()] {
+                let fleet_cfg = FleetConfig {
                     shards,
-                    shard,
-                    steps: r.steps(),
-                    steps_per_kilocycle: r.steps_per_kilocycle(total_cycles),
-                    ttft_p50: r.ttft().pct(0.50).unwrap_or(0),
-                    ttft_p95: r.ttft().pct(0.95).unwrap_or(0),
-                    itl_p50: r.inter_token().pct(0.50).unwrap_or(0),
-                    itl_p95: r.inter_token().pct(0.95).unwrap_or(0),
-                    deferrals: r.deferrals(),
-                    bit_identical,
-                });
-            };
-            push_scope(None);
-            for s in 0..shards {
-                push_scope(Some(s));
+                    sessions: shard_policy(&trace),
+                    policy,
+                };
+                let rep = replay(&trace, fleet_cfg)?;
+                let bit_identical = trace
+                    .sessions
+                    .iter()
+                    .all(|s| rep.transcripts.get(&s.id) == oracle.get(&s.id));
+                let total_cycles = rep.rollup.total_cycles();
+                let mut push_scope = |shard: Option<usize>| {
+                    let r = match shard {
+                        None => rep.rollup.aggregate(),
+                        Some(s) => rep.rollup.shard(s),
+                    };
+                    points.push(TrafficPoint {
+                        load,
+                        shards,
+                        shard,
+                        sched: policy.name(),
+                        steps: r.steps(),
+                        steps_per_kilocycle: r.steps_per_kilocycle(total_cycles),
+                        ttft_p50: r.ttft().pct(0.50).unwrap_or(0),
+                        ttft_p95: r.ttft().pct(0.95).unwrap_or(0),
+                        ttft_p99: r.ttft().pct(0.99).unwrap_or(0),
+                        itl_p50: r.inter_token().pct(0.50).unwrap_or(0),
+                        itl_p95: r.inter_token().pct(0.95).unwrap_or(0),
+                        deferrals: r.deferrals(),
+                        bit_identical,
+                    });
+                };
+                push_scope(None);
+                for s in 0..shards {
+                    push_scope(Some(s));
+                }
             }
         }
     }
@@ -230,25 +268,63 @@ mod tests {
     #[test]
     fn study_reports_every_scope_and_matches_oracle() {
         let r = run(&[2.0], &[1, 2], 8, 3, 0x7A11).unwrap();
-        // Per (load, F) cell: 1 aggregate row + F shard rows.
-        assert_eq!(r.points.len(), (1 + 1) + (1 + 2));
+        // Per (load, F) cell: 2 policies × (1 aggregate row + F shard
+        // rows).
+        assert_eq!(r.points.len(), 2 * ((1 + 1) + (1 + 2)));
         for f in [1, 2] {
-            let agg = r.aggregate(2.0, f).unwrap();
-            assert!(agg.bit_identical, "F={f} transcripts must match the oracle");
-            assert!(agg.steps > 0);
-            // Shard rows sum to the aggregate.
-            let shard_steps: u64 = r
-                .points
-                .iter()
-                .filter(|p| p.shards == f && p.shard.is_some())
-                .map(|p| p.steps)
-                .sum();
-            assert_eq!(shard_steps, agg.steps);
+            for sched in ["flush", "budgeted"] {
+                let agg = r.aggregate(2.0, f, sched).unwrap();
+                assert!(
+                    agg.bit_identical,
+                    "F={f} {sched} transcripts must match the oracle"
+                );
+                assert!(agg.steps > 0);
+                // Shard rows sum to the aggregate.
+                let shard_steps: u64 = r
+                    .points
+                    .iter()
+                    .filter(|p| p.shards == f && p.sched == sched && p.shard.is_some())
+                    .map(|p| p.steps)
+                    .sum();
+                assert_eq!(shard_steps, agg.steps);
+            }
+            // Both planners serve the identical trace, so their step
+            // totals agree exactly.
+            assert_eq!(
+                r.aggregate(2.0, f, "flush").unwrap().steps,
+                r.aggregate(2.0, f, "budgeted").unwrap().steps
+            );
         }
         let text = r.table().render();
         assert!(text.contains("fleet"), "{text}");
         assert!(text.contains("shard 1"), "{text}");
+        assert!(text.contains("budgeted"), "{text}");
         assert!(text.contains("yes"), "{text}");
+    }
+
+    #[test]
+    fn budgeted_prefill_keeps_ttft_tail_and_itl_sane() {
+        // Bursty arrivals with 4–10-row prompts: chunked prefill (4
+        // rows/wave) must not blow up either headline metric relative
+        // to flush — the strict improvement claim lives in
+        // `benches/sched_throughput.rs` where the scenario is tuned
+        // for it; this guard keeps the experiment itself honest.
+        let r = run(&[4.0], &[1], 8, 3, 0x7A12).unwrap();
+        let flush = r.aggregate(4.0, 1, "flush").unwrap();
+        let budgeted = r.aggregate(4.0, 1, "budgeted").unwrap();
+        assert!(flush.bit_identical && budgeted.bit_identical);
+        assert!(
+            budgeted.ttft_p99 <= flush.ttft_p99.saturating_mul(2).max(8),
+            "budgeted ttft p99 {} vs flush {}",
+            budgeted.ttft_p99,
+            flush.ttft_p99
+        );
+        assert!(
+            budgeted.itl_p50 <= flush.itl_p50.saturating_mul(4).max(8),
+            "budgeted itl p50 {} vs flush {}",
+            budgeted.itl_p50,
+            flush.itl_p50
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod attention;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod envknob;
 pub mod experiments;
 pub mod prng;
 pub mod report;

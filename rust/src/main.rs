@@ -6,11 +6,14 @@
 //! sdpa-dataflow validate    [--artifacts DIR]       # run every artifact vs its golden file
 //! sdpa-dataflow serve       [--requests K] [--batch B] [--wait-us U]  # prefill batching demo
 //!                           [--sessions S] [--steps T] [--lanes L]    # + continuous-batching decode
+//!                           [--sched flush|budgeted] [...]            # wave scheduler knobs
 //! ```
 
 use sdpa_dataflow::attention::{FifoPlan, Variant};
 use sdpa_dataflow::cli::Args;
-use sdpa_dataflow::coordinator::{BatcherConfig, Server, ServerConfig, SessionConfig};
+use sdpa_dataflow::coordinator::{
+    BatcherConfig, SchedPolicy, SchedulerConfig, Server, ServerConfig, SessionConfig,
+};
 use sdpa_dataflow::runtime::{default_artifact_dir, ArtifactRegistry, Executor, Tensor};
 use sdpa_dataflow::{attention::workload::Workload, experiments, report};
 
@@ -24,9 +27,23 @@ fn usage() -> String {
               --n N --d D [--long-depth K] [--unbounded] [--inferred]
   experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving|paging|traffic|window] [--n N] [--d D]
   validate    [--artifacts DIR]
-  serve       [--requests K] [--batch B] [--wait-us U] [--artifacts DIR]
-              [--sessions S] [--steps T] [--lanes L] [--decode-d D]
-              [--prefix P] [--block-size B] [--pool-blocks K]
+  serve       [--requests K] [--batch B] [--wait-us U] [--batch-tokens T]
+              [--artifacts DIR] [--sessions S] [--steps T] [--lanes L]
+              [--decode-d D] [--prefix P] [--block-size B] [--pool-blocks K]
+              [--sched flush|budgeted] [--prefill-tokens N] [--total-tokens N]
+              [--waiting-served-ratio R] [--chunk C] [--aging-waves W]
+
+scheduler knobs (serve):
+  --sched                 wave scheduler: flush (legacy: every runnable
+                          session steps every wave) or budgeted (token-
+                          budget planner with chunked prefill + aging)
+  --prefill-tokens        prefill-token budget per wave      (budgeted)
+  --total-tokens          total-token budget per wave        (budgeted)
+  --waiting-served-ratio  queue-pressure threshold that lets waiting
+                          prefills preempt decode budget     (budgeted)
+  --chunk                 prefill chunk rows per wave        (budgeted)
+  --aging-waves           waves before a starved candidate is forced
+                          into the plan regardless of budget (budgeted)
 
 environment:
   SDPA_SCHED    default scheduler for new engines: dense | event
@@ -237,11 +254,37 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
     let prefix: usize = args.get_parsed_or("prefix", 4)?;
     let block_size: usize = args.get_parsed_or("block-size", 16)?;
     let pool_blocks: usize = args.get_parsed_or("pool-blocks", 1024)?;
+    let max_batch_tokens: usize = args.get_parsed_or("batch-tokens", usize::MAX)?;
+    let sched = match args.get_or("sched", "flush") {
+        "flush" => SchedPolicy::Flush,
+        "budgeted" => {
+            let base = SchedulerConfig::default();
+            let prefill = args.get_parsed_or("prefill-tokens", base.max_batch_prefill_tokens)?;
+            let total = args.get_parsed_or("total-tokens", base.max_batch_total_tokens)?;
+            let ratio = args.get_parsed_or("waiting-served-ratio", base.waiting_served_ratio)?;
+            let chunk = args.get_parsed_or("chunk", base.prefill_chunk)?;
+            let aging = args.get_parsed_or("aging-waves", base.aging_waves)?;
+            SchedPolicy::Budgeted(SchedulerConfig {
+                max_batch_prefill_tokens: prefill,
+                max_batch_total_tokens: total,
+                waiting_served_ratio: ratio,
+                prefill_chunk: chunk,
+                aging_waves: aging,
+            })
+        }
+        other => {
+            return Err(sdpa_dataflow::Error::Usage(format!(
+                "unknown scheduler '{other}' (expected flush|budgeted)"
+            )))
+        }
+    };
     let cfg = ServerConfig {
         batcher: BatcherConfig {
             max_batch,
             max_wait_us,
+            max_batch_tokens,
         },
+        sched,
         sessions: SessionConfig {
             lanes: lanes.max(1),
             kv: sdpa_dataflow::coordinator::KvCacheConfig {
@@ -295,8 +338,10 @@ fn serve(args: &Args) -> sdpa_dataflow::Result<()> {
         // waves) and close each session for its transcript.
         println!(
             "decoding {steps} tokens x {sessions} sessions \
-             (lanes={}, d={decode_d}, prefix={prefix}, pool={pool_blocks}x{block_size})",
-            lanes.max(1)
+             (lanes={}, d={decode_d}, prefix={prefix}, pool={pool_blocks}x{block_size}, \
+             sched={})",
+            lanes.max(1),
+            sched.name()
         );
         // The demo opens everything before stepping, so waiting on a
         // deferred admission would deadlock it — probe with the `try`

@@ -676,6 +676,34 @@ impl BlockPool {
         }
     }
 
+    /// Gather only the first `rows` rows of an *unbounded* table, in
+    /// logical order — the key span a mid-prompt chunked-prefill
+    /// segment replays (prompt row `t` attends rows `0..=t`, which may
+    /// be fewer than the rows already staged for later segments of the
+    /// same wave). Windowed tables never split rows (their ring can
+    /// evict mid-wave), so they have no prefix view.
+    pub fn view_prefix(&self, table: &BlockTable, rows: usize) -> KvView<'_> {
+        assert!(
+            table.window.is_none(),
+            "prefix views are for unbounded tables only"
+        );
+        let rows = rows.min(table.len);
+        let mut keys: Vec<&[f32]> = Vec::with_capacity(rows);
+        let mut values: Vec<&[f32]> = Vec::with_capacity(rows);
+        'outer: for &id in &table.blocks {
+            let b = &self.blocks[id];
+            for (k, v) in b.keys.iter().zip(&b.values) {
+                if keys.len() == rows {
+                    break 'outer;
+                }
+                keys.push(k.as_slice());
+                values.push(v.as_slice());
+            }
+        }
+        debug_assert_eq!(keys.len(), rows, "prefix rows gathered");
+        KvView { keys, values }
+    }
+
     /// Preempt: copy the table's resident rows out to host memory (in
     /// logical order) and release its blocks. Only blocks this table
     /// exclusively owned actually free (shared prefix blocks keep
@@ -1035,6 +1063,29 @@ mod tests {
         assert_eq!(pool.used_blocks(), 0);
         pool.pop_row(&mut t); // no-op on empty
         assert_eq!(pool.used_blocks(), 0);
+    }
+
+    #[test]
+    fn view_prefix_gathers_only_the_leading_rows() {
+        let mut pool = BlockPool::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: 8,
+        })
+        .unwrap();
+        let mut t = BlockTable::new();
+        fill(&mut pool, &mut t, 0, 9); // spans 3 blocks
+        for rows in [0, 1, 4, 5, 9, 12] {
+            let v = pool.view_prefix(&t, rows);
+            assert_eq!(v.len(), rows.min(9));
+            for (i, k) in v.keys.iter().enumerate() {
+                assert_eq!(k[0], i as f32, "prefix preserves row order");
+            }
+        }
+        let full = pool.view(&t);
+        let pre = pool.view_prefix(&t, 9);
+        assert_eq!(full.keys, pre.keys, "full prefix equals the view");
+        assert_eq!(full.values, pre.values);
+        pool.release(&mut t);
     }
 
     #[test]

@@ -123,10 +123,7 @@ impl SchedulerMode {
     /// otherwise the built-in default. Tests that *compare* schedulers
     /// set modes explicitly and are unaffected.
     pub fn default_from_env() -> SchedulerMode {
-        std::env::var("SDPA_SCHED")
-            .ok()
-            .and_then(|s| SchedulerMode::parse(&s))
-            .unwrap_or_default()
+        crate::envknob::parse_or("SDPA_SCHED", SchedulerMode::parse, SchedulerMode::default())
     }
 }
 
@@ -144,10 +141,7 @@ pub fn parse_threads(s: &str) -> Option<usize> {
 /// scheduler: results are bit-identical for every thread count, so a
 /// typo can only cost parallelism, never change semantics.
 pub fn threads_from_env() -> usize {
-    std::env::var("SDPA_THREADS")
-        .ok()
-        .and_then(|s| parse_threads(&s))
-        .unwrap_or(1)
+    crate::envknob::parse_or("SDPA_THREADS", parse_threads, 1)
 }
 
 /// One weakly connected component of a compiled graph: a contiguous

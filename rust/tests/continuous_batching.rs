@@ -24,7 +24,8 @@ use std::collections::BTreeMap;
 use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession};
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::coordinator::{
-    BatcherConfig, DecodeStepResponse, KvCacheConfig, Server, ServerConfig, SessionConfig,
+    BatcherConfig, DecodeStepResponse, KvCacheConfig, PrefillPrompt, Priority, SchedPolicy,
+    SchedulerConfig, Server, ServerConfig, SessionConfig,
 };
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
 use sdpa_dataflow::runtime::Tensor;
@@ -37,6 +38,7 @@ fn decode_server(lanes: usize, max_len: usize, mode: SchedulerMode) -> Server {
         batcher: BatcherConfig {
             max_batch: 4,
             max_wait_us: 200,
+            ..BatcherConfig::default()
         },
         sessions: SessionConfig {
             kind: DecodeKind::MemoryFree,
@@ -439,6 +441,122 @@ fn property_random_interleavings_lose_no_request_and_leak_no_lane() {
         lanes_seen.sort_unstable();
         assert_eq!(lanes_seen, vec![0, 1, 2], "no lane leaked after close");
         server.shutdown();
+    }
+}
+
+#[test]
+fn property_bursty_budgeted_load_never_exceeds_the_aging_bound() {
+    // Starvation-freedom at the server level: under tight token budgets
+    // with mixed priority classes and bursty submission, no queued
+    // candidate (decode step or pending prefill chunk) may wait longer
+    // than the planner's aging bound — `min(aging_waves,
+    // deadline_waves(class))` waves — before being force-planned. The
+    // server tracks the max observed candidate age in
+    // `ServingStats::max_queue_age_waves`, so the bound is checked
+    // against what the worker actually saw, not a model of it.
+    let classes = [Priority::Interactive, Priority::Standard, Priority::Bulk];
+    for mode in MODES {
+        let mut saw_queuing = false;
+        for_each_case(0xA61B ^ mode as u64, 3, |_case, rng: &mut SplitMix64| {
+            let sched = SchedulerConfig {
+                // Tight budgets: 6 growing sessions + chunked prompts
+                // cannot all fit one wave, so candidates queue and age.
+                max_batch_prefill_tokens: 4,
+                max_batch_total_tokens: 12,
+                prefill_chunk: 2,
+                aging_waves: 4,
+                ..SchedulerConfig::default()
+            };
+            let server = Server::start_decode_only(ServerConfig {
+                sessions: SessionConfig {
+                    kind: DecodeKind::MemoryFree,
+                    lanes: 6,
+                    max_len: 128,
+                    mode: Some(mode),
+                    ..SessionConfig::default()
+                },
+                sched: SchedPolicy::Budgeted(sched),
+                ..ServerConfig::default()
+            })
+            .expect("decode-only server starts");
+            let h = server.handle();
+            // Even sessions carry a 5-row prompt so chunked prefill
+            // competes with decode for the same wave budget.
+            let opened: Vec<_> = (0..6usize)
+                .map(|i| {
+                    let prompt = (i % 2 == 0).then(|| {
+                        let w = Workload::random(5, 2, 0xA61B + i as u64);
+                        PrefillPrompt {
+                            q: w.q.clone(),
+                            k: w.k.clone(),
+                            v: w.v.clone(),
+                        }
+                    });
+                    let prio = classes[i % classes.len()];
+                    (
+                        h.open_session_with(2, None, prio, prompt.clone()).unwrap(),
+                        prompt.map_or(0, |p| p.len() as u64),
+                    )
+                })
+                .collect();
+            // Bursts: queue a pile of steps across random sessions
+            // before draining a single reply, so the planner faces real
+            // queue pressure every wave.
+            let mut submitted: BTreeMap<u64, u64> = BTreeMap::new();
+            let row = |seed: u64| {
+                vec![
+                    SplitMix64::new(seed).normal_f32(),
+                    SplitMix64::new(seed ^ 1).normal_f32(),
+                ]
+            };
+            for _burst in 0..3 {
+                let mut rxs = Vec::new();
+                for _ in 0..(8 + rng.below(8)) {
+                    let (open, _) = rng.choose(&opened);
+                    *submitted.entry(open.session).or_default() += 1;
+                    rxs.push(
+                        h.submit_step(
+                            open.session,
+                            row(rng.next_u64()),
+                            row(rng.next_u64()),
+                            row(rng.next_u64()),
+                        )
+                        .unwrap(),
+                    );
+                }
+                for rx in rxs {
+                    rx.recv()
+                        .expect("every step gets a reply")
+                        .expect("step succeeds under budgeted scheduling");
+                }
+            }
+            // No request lost: a prompted session's transcript carries
+            // its prompt rows plus every decode step.
+            for (open, prompt_len) in &opened {
+                let closed = h.close_session(open.session).unwrap();
+                let steps = submitted.get(&open.session).copied().unwrap_or(0);
+                assert_eq!(
+                    closed.steps,
+                    prompt_len + steps,
+                    "{mode:?}: transcript = prompt rows + decode steps"
+                );
+            }
+            h.with_stats(|s| {
+                assert_eq!(s.decode_errors(), 0, "{mode:?}: no step failed");
+                assert!(
+                    s.max_queue_age_waves() <= sched.aging_waves,
+                    "{mode:?}: candidate aged {} waves past the {}-wave bound",
+                    s.max_queue_age_waves(),
+                    sched.aging_waves
+                );
+                saw_queuing |= s.max_queue_age_waves() >= 1;
+            });
+            server.shutdown();
+        });
+        assert!(
+            saw_queuing,
+            "{mode:?}: the budgets never queued anything — the property was vacuous"
+        );
     }
 }
 

@@ -49,6 +49,7 @@ fn hard_trace() -> Trace {
         abandon_fraction: 0.3,
         window: None,
         seed: 0xF1EE_7C0F,
+        ..TrafficConfig::default()
     })
     .expect("trace generates")
 }
@@ -70,6 +71,7 @@ fn windowed_trace() -> Trace {
         abandon_fraction: 0.3,
         window: Some(4),
         seed: 0xF1EE_7C0F,
+        ..TrafficConfig::default()
     })
     .expect("trace generates")
 }
@@ -129,6 +131,7 @@ fn fleet_replay_matches_oracle_for_every_width_and_mode() {
                 FleetConfig {
                     shards,
                     sessions: roomy(&trace, mode),
+                    ..FleetConfig::default()
                 },
             )
             .expect("replay completes");
@@ -189,6 +192,7 @@ fn windowed_fleet_replay_matches_the_windowed_oracle() {
                 FleetConfig {
                     shards,
                     sessions: roomy(&trace, mode),
+                    ..FleetConfig::default()
                 },
             )
             .expect("windowed replay completes");
@@ -229,6 +233,7 @@ fn windowed_fleet_long_decode_keeps_shard_gauges_flat() {
             },
             ..SessionConfig::default()
         },
+        ..FleetConfig::default()
     })
     .unwrap();
     let a = fleet.open_windowed(3, 4).unwrap();
@@ -268,6 +273,7 @@ fn placements_are_deterministic_and_forks_follow_their_parents() {
         let cfg = FleetConfig {
             shards,
             sessions: roomy(&trace, SchedulerMode::Dense),
+            ..FleetConfig::default()
         };
         let a = replay(&trace, cfg).unwrap();
         let b = replay(&trace, cfg).unwrap();
@@ -293,6 +299,7 @@ fn placements_are_deterministic_and_forks_follow_their_parents() {
             FleetConfig {
                 shards,
                 sessions: roomy(&trace, SchedulerMode::EventDriven),
+                ..FleetConfig::default()
             },
         )
         .unwrap();
@@ -320,6 +327,7 @@ fn pool_pressure_replay_still_matches_the_oracle() {
         abandon_fraction: 0.25,
         window: None,
         seed: 0x9E55_0FEE,
+        ..TrafficConfig::default()
     })
     .unwrap();
     let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
@@ -337,6 +345,7 @@ fn pool_pressure_replay_still_matches_the_oracle() {
                     },
                     ..SessionConfig::default()
                 },
+                ..FleetConfig::default()
             };
             let rep = replay(&trace, cfg).expect("pressured replay completes");
             for s in &trace.sessions {

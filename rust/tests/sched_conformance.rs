@@ -1,0 +1,279 @@
+//! Scheduler conformance: chunked prefill is bit-exact.
+//!
+//! The budgeted planner splits prompt ingestion into resumable chunks —
+//! row grants, and mid-row *key* grants carried across waves through
+//! the packed online-softmax state (`m`, `r`, `ℓ⃗`). Chunking is a
+//! scheduling decision, so it must be invisible to the numbers:
+//!
+//! * **Table level** — a session prefilled under any chunking (1-row
+//!   grants, key grants that split single rows, windowed sessions, a
+//!   concurrent decode session sharing every wave) closes with a
+//!   transcript bitwise equal to the unchunked oracle: a standalone
+//!   [`DecodeSession`] stepped row by row.
+//! * **Replay level** — a fleet replay under [`SchedPolicy::Budgeted`]
+//!   reproduces the flush replay and the trace oracle exactly, for
+//!   every shard.
+//!
+//! Everything runs under both `SDPA_SCHED` modes and worker-thread
+//! counts {1, 4}, pinned explicitly via [`SessionConfig`] so the CI
+//! matrix cannot mask a scheduler- or thread-dependent divergence.
+
+use sdpa_dataflow::attention::decode::{DecodeKind, DecodeSession};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::coordinator::fleet::{replay, FleetConfig};
+use sdpa_dataflow::coordinator::{
+    DecodeStepRequest, KvCacheConfig, PrefillPrompt, Priority, SchedPolicy, SchedulerConfig,
+    SessionConfig, SessionTable, Trace, TrafficConfig, WaveOutcome, WaveRequest,
+};
+use sdpa_dataflow::sim::SchedulerMode;
+
+const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
+const THREADS: [usize; 2] = [1, 4];
+
+fn table(mode: SchedulerMode, threads: usize) -> SessionTable {
+    SessionTable::new(SessionConfig {
+        kind: DecodeKind::MemoryFree,
+        lanes: 4,
+        max_len: 64,
+        mode: Some(mode),
+        threads: Some(threads),
+        kv: KvCacheConfig {
+            block_size: 2,
+            num_blocks: 64,
+        },
+        ..SessionConfig::default()
+    })
+    .expect("session table")
+}
+
+fn prompt_of(w: &Workload) -> PrefillPrompt {
+    PrefillPrompt {
+        q: w.q.clone(),
+        k: w.k.clone(),
+        v: w.v.clone(),
+    }
+}
+
+/// The unchunked oracle: one standalone session stepped row by row
+/// (prompt rows and decode rows alike), under the same pinned mode.
+fn oracle(
+    d: usize,
+    window: Option<usize>,
+    mode: SchedulerMode,
+    rows: &[&Workload],
+) -> Vec<Vec<f32>> {
+    let mut s = match window {
+        Some(w) => DecodeSession::new_windowed(DecodeKind::MemoryFree, d, w),
+        None => DecodeSession::new(DecodeKind::MemoryFree, d),
+    };
+    s.set_scheduler_mode(mode);
+    for w in rows {
+        for t in 0..w.n {
+            s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+                .expect("oracle step");
+        }
+    }
+    s.outputs().clone()
+}
+
+#[test]
+fn chunked_prefill_transcripts_match_the_unchunked_oracle() {
+    // (row grant, key grant) shapes: single-row grants with a 2-key
+    // budget (later prompt rows attend up to 6 keys, so every one of
+    // them splits mid-row and resumes from the carry), a mixed grant,
+    // and a roomy grant that ingests whole rows per wave.
+    let grants = [(1usize, 2usize), (2, 3), (3, usize::MAX)];
+    let d = 3usize;
+    let prompt_a = Workload::random(6, d, 0x5C4E_D0);
+    let prompt_w = Workload::random(5, d, 0x5C4E_D1);
+    let decode_rows = Workload::random(8, d, 0x5C4E_D2);
+    let tail = Workload::random(2, d, 0x5C4E_D3);
+    for mode in MODES {
+        let want_a = oracle(d, None, mode, &[&prompt_a, &tail]);
+        let want_w = oracle(d, Some(3), mode, &[&prompt_w, &tail]);
+        let want_dec = oracle(d, None, mode, &[&decode_rows]);
+        for threads in THREADS {
+            for &(max_rows, max_keys) in &grants {
+                let ctx = format!("{mode:?} threads={threads} grant=({max_rows},{max_keys})");
+                let mut tbl = table(mode, threads);
+                let a = tbl
+                    .open_with_spec(d, None, Priority::Standard, Some(prompt_of(&prompt_a)))
+                    .unwrap();
+                let w = tbl
+                    .open_with_spec(d, Some(3), Priority::Interactive, Some(prompt_of(&prompt_w)))
+                    .unwrap();
+                let dec = tbl.open_with_spec(d, None, Priority::Bulk, None).unwrap();
+
+                // Drive waves until both prompts are ingested. Every
+                // wave co-schedules a decode step on the third session,
+                // so chunked prefill and decode share engine waves the
+                // whole way — exactly the budgeted steady state.
+                let mut dec_t = 0usize;
+                let mut waves = 0usize;
+                while tbl.prefill_remaining(a).unwrap() > 0
+                    || tbl.prefill_remaining(w).unwrap() > 0
+                {
+                    waves += 1;
+                    assert!(waves < 300, "{ctx}: prefill must make progress");
+                    let mut reqs = Vec::new();
+                    for id in [a, w] {
+                        if tbl.prefill_remaining(id).unwrap() > 0 {
+                            reqs.push(WaveRequest::Prefill {
+                                session: id,
+                                max_rows,
+                                max_keys,
+                            });
+                        }
+                    }
+                    if dec_t < decode_rows.n {
+                        reqs.push(WaveRequest::Step(DecodeStepRequest {
+                            session: dec,
+                            q: decode_rows.q[dec_t].clone(),
+                            k: decode_rows.k[dec_t].clone(),
+                            v: decode_rows.v[dec_t].clone(),
+                        }));
+                        dec_t += 1;
+                    }
+                    for (req, out) in reqs.iter().zip(tbl.wave(&reqs)) {
+                        match out.unwrap_or_else(|e| panic!("{ctx}: wave failed: {e}")) {
+                            WaveOutcome::Prefill(prog) => {
+                                assert_eq!(prog.session, req.session(), "{ctx}");
+                                assert!(prog.rows_done <= prog.rows_total, "{ctx}");
+                                assert_eq!(
+                                    prog.done,
+                                    tbl.prefill_remaining(prog.session) == Some(0),
+                                    "{ctx}: done flag ≡ remaining == 0"
+                                );
+                            }
+                            WaveOutcome::Step(resp) => {
+                                assert_eq!(resp.session, dec, "{ctx}");
+                            }
+                        }
+                    }
+                }
+                assert_eq!(tbl.prefill_state(a), None, "{ctx}: carry state retired");
+                assert_eq!(tbl.prefill_state(w), None, "{ctx}: carry state retired");
+
+                // Prompts done: decode tails on the prompted sessions
+                // and drain the plain session's remaining rows.
+                let mut t_tail = 0usize;
+                while t_tail < tail.n || dec_t < decode_rows.n {
+                    let mut reqs = Vec::new();
+                    if t_tail < tail.n {
+                        for id in [a, w] {
+                            reqs.push(WaveRequest::Step(DecodeStepRequest {
+                                session: id,
+                                q: tail.q[t_tail].clone(),
+                                k: tail.k[t_tail].clone(),
+                                v: tail.v[t_tail].clone(),
+                            }));
+                        }
+                        t_tail += 1;
+                    }
+                    if dec_t < decode_rows.n {
+                        reqs.push(WaveRequest::Step(DecodeStepRequest {
+                            session: dec,
+                            q: decode_rows.q[dec_t].clone(),
+                            k: decode_rows.k[dec_t].clone(),
+                            v: decode_rows.v[dec_t].clone(),
+                        }));
+                        dec_t += 1;
+                    }
+                    for out in tbl.wave(&reqs) {
+                        out.unwrap_or_else(|e| panic!("{ctx}: tail wave failed: {e}"));
+                    }
+                }
+
+                // Transcripts ≡ the unchunked oracle, bit for bit —
+                // prompt rows (however they were chunked) and decode
+                // rows alike.
+                assert_eq!(tbl.close(a).unwrap(), want_a, "{ctx}: prompted transcript ≡ oracle");
+                assert_eq!(
+                    tbl.close(w).unwrap(),
+                    want_w,
+                    "{ctx}: windowed prompted transcript ≡ oracle"
+                );
+                assert_eq!(
+                    tbl.close(dec).unwrap(),
+                    want_dec,
+                    "{ctx}: co-scheduled decode transcript ≡ oracle"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn budgeted_replay_is_bit_identical_across_modes_and_thread_counts() {
+    // A bursty mixed trace — forks, abandons, all three priority
+    // classes — replayed under flush and under tight budgets (chunk 2,
+    // 4 prefill tokens per wave, 32 total), for every scheduler mode ×
+    // thread-count cell. Every cell must reproduce the trace oracle's
+    // transcripts exactly: budgets and chunking reorder *when* work
+    // runs, never *what* it computes.
+    let trace = Trace::generate(&TrafficConfig {
+        sessions: 10,
+        d: 3,
+        fork_fraction: 0.3,
+        abandon_fraction: 0.2,
+        interactive_fraction: 0.3,
+        bulk_fraction: 0.3,
+        seed: 0x5C4E_DF,
+        ..TrafficConfig::default()
+    })
+    .unwrap();
+    let oracle = trace.oracle_transcripts(DecodeKind::MemoryFree).unwrap();
+    let budgeted = SchedPolicy::Budgeted(SchedulerConfig {
+        max_batch_prefill_tokens: 4,
+        max_batch_total_tokens: 32,
+        prefill_chunk: 2,
+        ..SchedulerConfig::default()
+    });
+    for mode in MODES {
+        for policy in [SchedPolicy::Flush, budgeted] {
+            // (placements, total virtual cycles) per thread count —
+            // threads parallelize the engines, so both must be
+            // bit-identical across the whole THREADS axis.
+            let mut witness = Vec::new();
+            for threads in THREADS {
+                let ctx = format!("{mode:?} threads={threads} policy={}", policy.name());
+                let r = replay(
+                    &trace,
+                    FleetConfig {
+                        shards: 2,
+                        sessions: SessionConfig {
+                            kind: DecodeKind::MemoryFree,
+                            lanes: 8,
+                            mode: Some(mode),
+                            threads: Some(threads),
+                            ..SessionConfig::default()
+                        },
+                        policy,
+                    },
+                )
+                .unwrap();
+                assert_eq!(r.transcripts.len(), oracle.len(), "{ctx}: every session served");
+                for (id, want) in &oracle {
+                    assert_eq!(
+                        r.transcripts.get(id),
+                        Some(want),
+                        "{ctx}: session {id} transcript ≡ trace oracle"
+                    );
+                }
+                assert_eq!(
+                    r.rollup.aggregate().steps() as usize,
+                    trace.total_steps(),
+                    "{ctx}: step accounting"
+                );
+                witness.push((r.placements, r.rollup.total_cycles()));
+            }
+            assert_eq!(
+                witness[0],
+                witness[1],
+                "{mode:?} policy={}: placements and virtual cycles are \
+                 thread-count-invariant",
+                policy.name()
+            );
+        }
+    }
+}

@@ -745,6 +745,7 @@ fn fleet_replay_thread_invariant() {
         abandon_fraction: 0.25,
         window: None,
         seed: 0x7EAD_F1EE,
+        ..TrafficConfig::default()
     })
     .unwrap();
     let run_with = |threads: usize| {
@@ -759,7 +760,15 @@ fn fleet_replay_thread_invariant() {
             },
             ..SessionConfig::default()
         };
-        replay(&trace, FleetConfig { shards: 2, sessions }).unwrap()
+        replay(
+            &trace,
+            FleetConfig {
+                shards: 2,
+                sessions,
+                ..FleetConfig::default()
+            },
+        )
+        .unwrap()
     };
     let base = run_with(1);
     for threads in THREAD_SWEEP {

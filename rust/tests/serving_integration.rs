@@ -25,6 +25,7 @@ fn server_or_skip(test: &str, max_batch: usize, max_wait_us: u64) -> Option<Serv
                 batcher: BatcherConfig {
                     max_batch,
                     max_wait_us,
+                    ..BatcherConfig::default()
                 },
                 ..ServerConfig::default()
             },
