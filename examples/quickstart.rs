@@ -287,6 +287,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         sum_1t.cycles
     );
 
+    // 9. FLASH-D: the division-free tenth variant. The softmax division
+    //    is hidden inside the exponential recurrence — one running
+    //    log-sum-exp scan emits already-normalized weights and the
+    //    output is an exact EMA — so the graph has *no divider node*,
+    //    fewer nodes than any division-bearing variant, and still every
+    //    FIFO at depth 2. (`experiments codesign` quantifies the
+    //    savings vs the reordered graph across N.)
+    let mut flashd = Variant::FlashD
+        .build_with_policy(&w, DepthPolicy::Inferred)
+        .map_err(|e| e.to_string())?;
+    if flashd.engine.depth_report().iter().any(|c| c.is_long) {
+        return Err("FLASH-D must have no long FIFO".into());
+    }
+    let fd_nodes = flashd.engine.node_count();
+    let (fd_out, fd_summary) = flashd.run().map_err(|e| e.to_string())?;
+    if fd_summary.node_fires.iter().any(|(name, _)| name == "div") {
+        return Err("FLASH-D must not fire a divider node".into());
+    }
+    let fd_err = max_abs_diff(&fd_out, &sdpa_f64(&w));
+    println!(
+        "FLASH-D: {fd_nodes} nodes, no divider, {} cycles, max |Δ| vs f64: {fd_err:.3e}",
+        fd_summary.cycles
+    );
+    if fd_err >= 1e-4 {
+        return Err("FLASH-D numeric check failed".into());
+    }
+
     println!("quickstart OK: O(1) intermediate memory at full throughput, depths inferred");
     Ok(())
 }

@@ -1,0 +1,165 @@
+//! FLASH-D prefill throughput: wall-clock per full N×d prefill run for
+//! the division-free graph against the two variants it competes with —
+//! reordered (the paper's throughput winner among the division-bearing
+//! graphs) and memory-free (the O(1) baseline FLASH-D descends from).
+//!
+//! Wall-clock twin of `experiments/codesign.rs`: every measurement
+//! builds the graph under inferred depths and simulates it end to end,
+//! so `mean_ns` prices compile + simulate for one head. The codesign
+//! figures ride along (node count, total FIFO slots, simulated cycles,
+//! max |Δ| vs the f64 oracle) and the headline claims are asserted on
+//! every run: FLASH-D must stay strictly smaller than reordered in
+//! both nodes and FIFO slots, and inside the 1e-4 oracle envelope.
+//! Emits `BENCH_flashd.json` for CI artifact upload alongside the
+//! other bench JSONs.
+//!
+//! ```bash
+//! cargo bench --bench flashd_throughput [-- --quick]
+//! ```
+
+use std::hint::black_box;
+
+use sdpa_dataflow::attention::reference::max_abs_diff;
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{DepthPolicy, Variant};
+use sdpa_dataflow::bench::{quick_requested, Bencher};
+use sdpa_dataflow::sim::Capacity;
+
+struct Row {
+    variant: Variant,
+    n: usize,
+    d: usize,
+    mean_ns: f64,
+    cycles: u64,
+    nodes: usize,
+    fifo_slots: usize,
+    max_err: f32,
+}
+
+impl Row {
+    /// Score rows streamed per wall-clock second of one full prefill.
+    fn rows_per_sec(&self) -> f64 {
+        self.n as f64 / (self.mean_ns / 1e9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"variant\":\"{}\",\"n\":{},\"d\":{},\"mean_ns\":{:.1},\
+             \"rows_per_sec\":{:.1},\"cycles\":{},\"nodes\":{},\
+             \"fifo_slots\":{},\"max_err\":{:e}}}",
+            self.variant.name(),
+            self.n,
+            self.d,
+            self.mean_ns,
+            self.rows_per_sec(),
+            self.cycles,
+            self.nodes,
+            self.fifo_slots,
+            self.max_err,
+        )
+    }
+}
+
+/// One full measurement: build under inferred depths, simulate, and
+/// return (cycles, nodes, fifo_slots, max |Δ| vs f64).
+fn run_once(variant: Variant, w: &Workload) -> (u64, usize, usize, f32) {
+    let mut built = variant
+        .build_with_policy(w, DepthPolicy::Inferred)
+        .expect("build succeeds");
+    let nodes = built.engine.node_count();
+    let fifo_slots = built
+        .engine
+        .depth_report()
+        .iter()
+        .map(|c| match c.capacity {
+            Capacity::Bounded(k) => k,
+            Capacity::Unbounded => 0,
+        })
+        .sum();
+    let (out, summary) = built.run().expect("run completes");
+    let err = max_abs_diff(&out, &variant.oracle_f64(w));
+    (summary.cycles, nodes, fifo_slots, err)
+}
+
+fn main() {
+    let b = if quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let ns: &[usize] = if quick_requested() {
+        &[64, 256]
+    } else {
+        &[64, 256, 1024]
+    };
+    let d = 8;
+    let variants = [Variant::Reordered, Variant::MemoryFree, Variant::FlashD];
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &n in ns {
+        let w = Workload::random(n, d, 0xF1A5 + n as u64);
+        for variant in variants {
+            let mut last = None;
+            let stats = b.bench(&format!("flashd/{}_n{n}", variant.name()), || {
+                let m = run_once(variant, &w);
+                black_box(m.0);
+                last = Some(m);
+            });
+            let (cycles, nodes, fifo_slots, max_err) = last.expect("benched at least once");
+            // Correctness rides along with every timing.
+            assert!(
+                max_err < 1e-4,
+                "{variant} N={n}: max |Δ| {max_err:e} vs f64 oracle"
+            );
+            rows.push(Row {
+                variant,
+                n,
+                d,
+                mean_ns: stats.mean_ns,
+                cycles,
+                nodes,
+                fifo_slots,
+                max_err,
+            });
+        }
+        // The codesign headline, asserted at every measured N: hiding
+        // the division removes nodes and buffering, never adds them.
+        let get = |v: Variant| rows.iter().find(|r| r.variant == v && r.n == n).unwrap();
+        let (fd, re) = (get(Variant::FlashD), get(Variant::Reordered));
+        assert!(
+            fd.nodes < re.nodes,
+            "N={n}: flashd {} nodes vs reordered {}",
+            fd.nodes,
+            re.nodes
+        );
+        assert!(
+            fd.fifo_slots < re.fifo_slots,
+            "N={n}: flashd {} FIFO slots vs reordered {}",
+            fd.fifo_slots,
+            re.fifo_slots
+        );
+    }
+
+    // Per-head summary: area proxies next to throughput.
+    println!();
+    for r in &rows {
+        println!(
+            "{:>9} N={:>4}  {:>3} nodes  {:>5} FIFO slots  {:>7} cycles  \
+             {:>12.1} rows/s  max|Δ| {:.1e}",
+            r.variant.name(),
+            r.n,
+            r.nodes,
+            r.fifo_slots,
+            r.cycles,
+            r.rows_per_sec(),
+            r.max_err,
+        );
+    }
+
+    let json = format!(
+        "[\n  {}\n]\n",
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n  ")
+    );
+    std::fs::write("BENCH_flashd.json", &json).expect("write BENCH_flashd.json");
+    println!("\nwrote BENCH_flashd.json ({} rows)", rows.len());
+}

@@ -41,13 +41,13 @@
 //! decode inherits the paper's O(1)-memory headline intact.
 
 use super::workload::{Mask, Workload};
-use super::{memfree, naive, reordered, scaled, BuiltAttention, DepthPolicy, Variant};
+use super::{flashd, memfree, naive, reordered, scaled, BuiltAttention, DepthPolicy, Variant};
 use crate::{Error, Result};
 
-/// Build a masked prefill graph for one of the paper's four base
-/// variants. `base` must be an unmasked prefill variant
-/// ([`Variant::PAPER`]); causal/decode members are themselves built on
-/// top of this dispatch and are rejected here.
+/// Build a masked prefill graph for a base prefill variant — one of
+/// the paper's four ([`Variant::PAPER`]) or the division-free
+/// [`Variant::FlashD`] extension. Causal/decode members are themselves
+/// built on top of this dispatch and are rejected here.
 pub fn build_masked(
     base: Variant,
     w: &Workload,
@@ -59,9 +59,10 @@ pub fn build_masked(
         Variant::Scaled => scaled::build_masked_with_policy(w, mask, policy),
         Variant::Reordered => reordered::build_masked_with_policy(w, mask, policy),
         Variant::MemoryFree => memfree::build_masked_with_policy(w, mask, policy),
+        Variant::FlashD => flashd::build_masked_with_policy(w, mask, policy),
         other => Err(Error::Graph(format!(
             "build_masked takes a base prefill variant (one of \
-             naive|scaled|reordered|memfree), got '{other}'"
+             naive|scaled|reordered|memfree|flashd), got '{other}'"
         ))),
     }
 }
@@ -80,7 +81,7 @@ pub fn build_causal(base: Variant, w: &Workload, policy: DepthPolicy) -> Result<
 pub fn long_fifo_bound(base: Variant, visible: usize) -> usize {
     assert!(visible >= 1, "a row attends at least one key");
     match base.base() {
-        Variant::MemoryFree => 2,
+        Variant::MemoryFree | Variant::FlashD => 2,
         _ => visible + 2,
     }
 }
@@ -172,6 +173,7 @@ mod tests {
             assert_eq!(long_fifo_bound(Variant::CausalScaled, len), len + 2);
             assert_eq!(long_fifo_bound(Variant::MemoryFree, len), 2);
             assert_eq!(long_fifo_bound(Variant::Decode, len), 2);
+            assert_eq!(long_fifo_bound(Variant::FlashD, len), 2);
         }
     }
 

@@ -3,7 +3,7 @@
 //! Token-by-token serving is the compressed causal mapping of
 //! [`super::causal`]: at step `t` the new query row `q_t` streams
 //! against the `t+1` cached K/V rows — only the visible prefix, no
-//! masked bubbles. Two step mappings are provided:
+//! masked bubbles. Three step mappings are provided:
 //!
 //! * [`DecodeKind::MemoryFree`] — the paper's reordered online-softmax
 //!   recurrence. The `(m, ℓ⃗, r)` state rides element-wise `Scan`s along
@@ -16,6 +16,11 @@
 //!   ([`step_long_fifo_bound`], the causal-aware bound the compile
 //!   stage re-derives per step). Kept as the O(len) contrast the
 //!   scaling study measures.
+//! * [`DecodeKind::FlashD`] — the FLASH-D hidden-division mapping (see
+//!   [`super::flashd`]): a running log-sum-exp scan emits
+//!   already-normalized weights and the output rides an exact EMA, so
+//!   the step has **no divider node at all**, every FIFO is depth 2,
+//!   and memory stays O(1) per step.
 //!
 //! [`DecodeSession`] chains steps: it owns the growing K/V cache and
 //! replays it into a fresh step graph per token (the simulator's
@@ -68,17 +73,25 @@ pub enum DecodeKind {
     /// Figure-3(c) style: running max/sum scans — every FIFO depth 2,
     /// O(1) memory per step.
     MemoryFree,
+    /// FLASH-D style: hidden-division log-sum-exp scan plus output EMA
+    /// — every FIFO depth 2, O(1) memory per step, no divider node.
+    FlashD,
 }
 
 impl DecodeKind {
-    /// Both mappings, buffered (contrast) first.
-    pub const ALL: [DecodeKind; 2] = [DecodeKind::Buffered, DecodeKind::MemoryFree];
+    /// Every mapping, buffered (contrast) first.
+    pub const ALL: [DecodeKind; 3] = [
+        DecodeKind::Buffered,
+        DecodeKind::MemoryFree,
+        DecodeKind::FlashD,
+    ];
 
     /// Stable lowercase name (reports, bench JSON).
     pub fn name(self) -> &'static str {
         match self {
             DecodeKind::Buffered => "buffered",
             DecodeKind::MemoryFree => "memfree",
+            DecodeKind::FlashD => "flashd",
         }
     }
 }
@@ -96,7 +109,7 @@ impl std::fmt::Display for DecodeKind {
 pub fn step_long_fifo_bound(kind: DecodeKind, len: usize) -> usize {
     match kind {
         DecodeKind::Buffered => len + 2,
-        DecodeKind::MemoryFree => 2,
+        DecodeKind::MemoryFree | DecodeKind::FlashD => 2,
     }
 }
 
@@ -293,6 +306,44 @@ pub fn build_step_rows_into(
             let o = sc.mem_reduce("pv_acc", pv, len, vec![0.0; d], |acc, x| {
                 acc.iter().zip(x.as_vector()).map(|(a, b)| a + b).collect()
             })?;
+            sc.sink("sink_o", o, Some(1))
+        }
+        DecodeKind::FlashD => {
+            // FLASH-D: the running log-sum-exp emits already-normalized
+            // weights, the output is an exact EMA — no divider node.
+            // Same fold helpers as the prefill graph and the sequential
+            // reference, so all three execute identical f32 sequences.
+            let wgt = sc.scan(
+                "run_lse",
+                s,
+                len,
+                Elem::Scalar(f32::NEG_INFINITY),
+                |st, x| Elem::Scalar(super::flashd::lse_fold(st.scalar(), x.scalar())),
+                |st, x| Elem::Scalar(super::flashd::hidden_weight(x.scalar(), st.scalar())),
+            )?;
+            let v_cols = sc.source_gen("src_v", len as u64, move |j| v[j as usize].clone())?;
+            let wv = sc.zip("zip_wv", [wgt, v_cols], |xs| {
+                Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
+            })?;
+            let o_run = sc.scan(
+                "run_ema",
+                wv,
+                len,
+                Elem::from(vec![0.0f32; d]),
+                |st, x| {
+                    let wgt = x.as_tuple()[0].scalar();
+                    let vv = x.as_tuple()[1].as_vector();
+                    Elem::from(
+                        st.as_vector()
+                            .iter()
+                            .zip(vv)
+                            .map(|(o, v)| o + wgt * (v - o))
+                            .collect::<Vec<_>>(),
+                    )
+                },
+                |st, _| st.clone(),
+            )?;
+            let o = sc.last_of("last_o", o_run, len)?;
             sc.sink("sink_o", o, Some(1))
         }
     }
@@ -1118,7 +1169,9 @@ pub fn decode_workload(kind: DecodeKind, w: &Workload) -> Result<Matrix> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::reference::{assert_close, sdpa_f64_masked, sdpa_online_f32_masked};
+    use super::super::reference::{
+        assert_close, sdpa_f64_masked, sdpa_flashd_f32_masked, sdpa_online_f32_masked,
+    };
     use super::super::workload::Mask;
     use super::super::{FifoPlan, Variant};
     use super::*;
@@ -1153,6 +1206,59 @@ mod tests {
             1e-4,
             "buffered decode chain vs f64 causal",
         );
+    }
+
+    #[test]
+    fn flashd_chain_matches_the_hidden_division_causal_reference_tightly() {
+        let w = Workload::random(12, 8, 0xDEC6);
+        let chain = decode_workload(DecodeKind::FlashD, &w).unwrap();
+        // The step graph folds scores through the same lse_fold /
+        // hidden_weight helpers as the sequential reference, in the
+        // same order — agreement is effectively structural.
+        assert_close(
+            &chain,
+            &sdpa_flashd_f32_masked(&w, &Mask::Causal),
+            1e-6,
+            "flashd decode chain vs hidden-division causal",
+        );
+        assert_close(
+            &chain,
+            &sdpa_f64_masked(&w, &Mask::Causal),
+            1e-4,
+            "flashd decode chain vs f64 causal",
+        );
+    }
+
+    #[test]
+    fn flashd_step_has_no_divider_and_all_depth_2_fifos() {
+        let w = Workload::random(16, 4, 0xDEC7);
+        for len in [1usize, 4, 16] {
+            let p = w.prefix(len);
+            let mut built = build_step(
+                DecodeKind::FlashD,
+                &p.q[len - 1],
+                &p.k,
+                &p.v,
+                DepthPolicy::Inferred,
+            )
+            .unwrap();
+            for c in built.engine.depth_report() {
+                assert!(!c.is_long, "flashd len={len}: '{}'", c.name);
+                assert_eq!(c.capacity, Capacity::Bounded(2), "len={len}: '{}'", c.name);
+            }
+            let (_, summary) = built.run().unwrap();
+            assert!(
+                summary.node_fires.iter().all(|(name, _)| name != "div"),
+                "flashd len={len}: a divider node fired"
+            );
+            for (name, st) in &summary.channel_stats {
+                assert!(
+                    st.peak_occupancy_elems <= 2,
+                    "flashd len={len}: channel '{name}' peaked at {}",
+                    st.peak_occupancy_elems
+                );
+            }
+        }
     }
 
     #[test]

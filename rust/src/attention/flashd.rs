@@ -1,0 +1,350 @@
+//! FLASH-D — the memory-free recurrence with the softmax division
+//! hidden inside the exponential (PAPERS.md: "FLASH-D: FlashAttention
+//! with Hidden Softmax Division").
+//!
+//! Figure 3(c) still ends in a divider: `o⃗_i = l⃗_iN / r_iN` (Eq. 6).
+//! FLASH-D removes it by carrying a running **log-sum-exp** `t` instead
+//! of the `(m, r)` pair and emitting *already-normalized* weights:
+//!
+//! ```text
+//! t_j = max(t_{j-1}, s_j) + ln(1 + e^{−|t_{j-1} − s_j|})   (log-sum-exp)
+//! w_j = e^{s_j − t_j}                                      (hidden division)
+//! o⃗_j = o⃗_{j-1} + w_j · (v⃗_j − o⃗_{j-1})                    (exact EMA)
+//! ```
+//!
+//! By induction `o⃗_j = Σ_{k≤j} e^{s_k} v⃗_k / Σ_{k≤j} e^{s_k}` — the
+//! softmax-weighted output is normalized at *every* step, so the row's
+//! last EMA state **is** the answer and the graph has **no divider node
+//! at all** (only max, abs, exp, ln_1p, add, mul). The dataflow maps
+//! onto two element-wise scans:
+//!
+//! ```text
+//! s ─ Scan(t running lse → w) ─┐
+//!                              Zip(w, v⃗) → Scan(o⃗ ← o⃗ + w(v⃗−o⃗)) ─ last-of-N → o⃗_i
+//! v⃗_j ─────────────────────────┘
+//! ```
+//!
+//! That is *fewer* nodes than even the memory-free graph (no broadcast,
+//! no separate denominator scan, no last-of-r, no divide zip) — the
+//! codesign study ([`crate::experiments::codesign`]) quantifies the
+//! node/FIFO-slot/cycle savings vs the reordered variant. Every path is
+//! element-wise, so all FIFOs stay at depth 2 and intermediate memory
+//! is O(1), same as [`super::memfree`].
+//!
+//! Masked streams fall out of IEEE arithmetic plus two guards:
+//!
+//! * `s = −∞` (masked slot, `t` seeded): `max(t, s) = t`,
+//!   `e^{−|t−s|} = e^{−∞} = 0`, `ln_1p(0) = 0` ⇒ `t` unchanged; the
+//!   weight guard emits `w = 0` ⇒ `o⃗` unchanged — an exact identity
+//!   update, so in-stream masking perturbs nothing.
+//! * `t = s = −∞` (unseeded: every score so far masked, which only a
+//!   front-masking [`Mask::Window`] produces): `max` is −∞ and the
+//!   recurrence would form `−∞ + ln_1p(…)` on the next visible score;
+//!   the lse guard pins `t = −∞` until a visible score `s` arrives,
+//!   which then yields `t = s` exactly and `w = e^0 = 1` ⇒ `o⃗ = v⃗` —
+//!   the correct first-element state.
+
+use super::workload::{Mask, Workload};
+use super::{score_frontend_masked, v_source, BuiltAttention, DepthPolicy, FifoPlan};
+use crate::sim::nodes::SinkHandle;
+use crate::sim::{Elem, GraphBuilder, Scope};
+use crate::Result;
+
+/// One FLASH-D log-sum-exp update: fold score `s` into the running
+/// lse `t`. Shared verbatim by the prefill scan, the decode-step scan
+/// ([`super::decode`]), and the sequential reference
+/// ([`super::reference::sdpa_flashd_f32_masked`]) so all three execute
+/// the same f32 operations in the same order.
+#[inline]
+pub(crate) fn lse_fold(t: f32, s: f32) -> f32 {
+    let m = t.max(s);
+    if m == f32::NEG_INFINITY {
+        // Unseeded and masked: stay unseeded (−∞ + ln_1p(…) = NaN).
+        f32::NEG_INFINITY
+    } else {
+        m + (-(t - s).abs()).exp().ln_1p()
+    }
+}
+
+/// The hidden-division weight `w = e^{s − t_new}` (0 for a masked slot
+/// — `e^{−∞ − −∞}` would be NaN, and a masked score must contribute
+/// nothing).
+#[inline]
+pub(crate) fn hidden_weight(s: f32, t_new: f32) -> f32 {
+    if s == f32::NEG_INFINITY {
+        0.0
+    } else {
+        (s - t_new).exp()
+    }
+}
+
+/// Build the FLASH-D graph. No long FIFOs exist, so `plan.long` is
+/// unused; the configuration is every FIFO at depth 2.
+pub fn build(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_with_policy(w, DepthPolicy::Explicit(*plan))
+}
+
+/// FLASH-D graph under a depth policy (`Inferred` sizes every FIFO at
+/// 2 — the same compile-time O(1)-memory proof as the memory-free
+/// graph, over a strictly smaller node count).
+pub fn build_with_policy(w: &Workload, policy: DepthPolicy) -> Result<BuiltAttention> {
+    build_masked_with_policy(w, &Mask::Full, policy)
+}
+
+/// Causal FLASH-D: scores with j > i are masked to −∞ in the stream;
+/// the lse/weight guards turn masked slots into exact identity updates.
+pub fn build_causal(w: &Workload, plan: &FifoPlan) -> Result<BuiltAttention> {
+    build_masked_with_policy(w, &Mask::Causal, DepthPolicy::Explicit(*plan))
+}
+
+/// FLASH-D with an arbitrary in-stream [`Mask`] (causal, ragged,
+/// sliding-window). The mask rides the same stateless source as every
+/// other masked graph, so `Engine::reset` replays are bit-identical.
+pub fn build_masked_with_policy(
+    w: &Workload,
+    mask: &Mask,
+    policy: DepthPolicy,
+) -> Result<BuiltAttention> {
+    let mut g = GraphBuilder::new();
+    let mut sc = g.root();
+    let out = build_into_masked(&mut sc, w, mask)?;
+    Ok(BuiltAttention {
+        engine: g.compile(policy)?,
+        out,
+        n: w.n,
+        d: w.d,
+    })
+}
+
+/// Build one FLASH-D pipeline into an existing scope — the composition
+/// point for multi-head graphs. Returns the head's output sink.
+pub fn build_into(sc: &mut Scope<'_>, w: &Workload) -> Result<SinkHandle> {
+    build_into_masked(sc, w, &Mask::Full)
+}
+
+fn build_into_masked(sc: &mut Scope<'_>, w: &Workload, mask: &Mask) -> Result<SinkHandle> {
+    let n = w.n;
+    let d = w.d;
+
+    let s = score_frontend_masked(sc, w, mask)?;
+
+    // Running log-sum-exp scan. State = t; output = the normalized
+    // weight w = e^{s − t_new} — the division, hidden in the exponent.
+    let wgt = sc.scan(
+        "run_lse",
+        s,
+        n,
+        Elem::Scalar(f32::NEG_INFINITY),
+        |st, x| Elem::Scalar(lse_fold(st.scalar(), x.scalar())),
+        |st, x| Elem::Scalar(hidden_weight(x.scalar(), st.scalar())),
+    )?;
+
+    // Exact EMA: o⃗ ← o⃗ + w·(v⃗ − o⃗), normalized at every step — the
+    // row's last state is the finished output row, no divide needed.
+    let v_cols = v_source(sc, w)?;
+    let wv = sc.zip("zip_wv", [wgt, v_cols], |xs| {
+        Elem::tuple(vec![xs[0].clone(), xs[1].clone()])
+    })?;
+    let o_run = sc.scan(
+        "run_ema",
+        wv,
+        n,
+        Elem::from(vec![0.0f32; d]),
+        |st, x| {
+            let wgt = x.as_tuple()[0].scalar();
+            let v = x.as_tuple()[1].as_vector();
+            Elem::from(
+                st.as_vector()
+                    .iter()
+                    .zip(v)
+                    .map(|(o, vv)| o + wgt * (vv - o))
+                    .collect::<Vec<_>>(),
+            )
+        },
+        |st, _| st.clone(),
+    )?;
+    let o = sc.last_of("last_o", o_run, n)?;
+    sc.sink("sink_o", o, Some(n as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::{
+        assert_close, sdpa_f64, sdpa_f64_masked, sdpa_flashd_f32, sdpa_flashd_f32_masked,
+    };
+    use super::super::FifoPlan;
+    use super::*;
+    use crate::sim::metrics::is_full_throughput;
+    use crate::sim::Capacity;
+
+    #[test]
+    fn matches_reference_numerics() {
+        let w = Workload::random(12, 8, 0xF1A5);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_close(&got, &sdpa_flashd_f32(&w), 1e-6, "flashd vs sequential ref");
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "flashd vs f64 ref");
+    }
+
+    #[test]
+    fn survives_adversarial_magnitudes() {
+        // w = e^{s − t} ≤ 1 always and o⃗ is a convex combination at
+        // every step — nothing can overflow.
+        let w = Workload::large_magnitude(8, 4, 0xF1A6, 200.0);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert!(got.iter().flatten().all(|x| x.is_finite()));
+        assert_close(&got, &sdpa_f64(&w), 1e-4, "flashd adversarial");
+    }
+
+    #[test]
+    fn no_division_node_exists() {
+        // The headline: the divider is gone from the pipeline, not
+        // merely relocated. No node in the graph is a divide.
+        let w = Workload::random(8, 4, 0xF1A7);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        for (name, _) in &summary.node_fires {
+            assert_ne!(name, "div", "FLASH-D must not contain a divider node");
+        }
+    }
+
+    #[test]
+    fn all_short_fifos_achieve_full_throughput() {
+        let w = Workload::random(16, 4, 0xF1A8);
+        let mut finite = build(&w, &FifoPlan::with_long_depth(2)).unwrap();
+        let (_, s_finite) = finite.run().unwrap();
+        let mut base = build(&w, &FifoPlan::unbounded()).unwrap();
+        let (_, s_base) = base.run().unwrap();
+        assert!(
+            is_full_throughput(&s_finite, &s_base),
+            "finite {} vs baseline {}",
+            s_finite.cycles,
+            s_base.cycles
+        );
+    }
+
+    #[test]
+    fn inference_finds_no_long_fifo() {
+        let w = Workload::random(24, 4, 0xF1A9);
+        let built = build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "channel '{}' flagged long", c.name);
+            assert_eq!(c.capacity, Capacity::Bounded(2), "channel '{}'", c.name);
+        }
+    }
+
+    #[test]
+    fn strictly_fewer_nodes_than_memfree_and_reordered() {
+        // FLASH-D removes not just the divider but the broadcast, the
+        // denominator scan, and its last-of — the codesign claim,
+        // asserted here at the graph level and study-wide in
+        // `experiments::codesign`.
+        let w = Workload::random(8, 4, 0xF1AA);
+        let flashd = build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        let memfree = super::super::memfree::build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        let reordered =
+            super::super::reordered::build_with_policy(&w, DepthPolicy::Inferred).unwrap();
+        assert!(flashd.engine.node_count() < memfree.engine.node_count());
+        assert!(flashd.engine.node_count() < reordered.engine.node_count());
+    }
+
+    #[test]
+    fn peak_occupancy_is_constant() {
+        let w = Workload::random(24, 4, 0xF1AB);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (_, summary) = built.run().unwrap();
+        for (name, stats) in &summary.channel_stats {
+            assert!(
+                stats.peak_occupancy_elems <= 2,
+                "channel '{name}' peaked at {} elements — not O(1)",
+                stats.peak_occupancy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn causal_matches_causal_reference() {
+        let w = Workload::random(16, 8, 0xF1AC);
+        let mut built = build_causal(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (got, summary) = built.run().unwrap();
+        assert_close(
+            &got,
+            &sdpa_flashd_f32_masked(&w, &Mask::Causal),
+            1e-6,
+            "causal flashd vs sequential ref",
+        );
+        assert_close(
+            &got,
+            &sdpa_f64_masked(&w, &Mask::Causal),
+            1e-4,
+            "causal flashd vs f64",
+        );
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "causal: channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn window_mask_exercises_the_unseeded_guard() {
+        // Window masks blank the *front* of a row: the lse guard must
+        // hold t = −∞ across the leading masked run, then seed t = s
+        // exactly (w = 1, o⃗ = v⃗) at the first visible score.
+        let w = Workload::random(10, 4, 0xF1AD);
+        let mask = Mask::window(3);
+        let mut built = build_masked_with_policy(&w, &mask, DepthPolicy::Inferred).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert!(got.iter().flatten().all(|x| x.is_finite()), "no NaN leaked");
+        assert_close(
+            &got,
+            &sdpa_flashd_f32_masked(&w, &mask),
+            1e-6,
+            "windowed flashd vs sequential ref",
+        );
+        assert_close(
+            &got,
+            &sdpa_f64_masked(&w, &mask),
+            1e-4,
+            "windowed flashd vs f64",
+        );
+    }
+
+    #[test]
+    fn ragged_mask_matches_masked_reference() {
+        let w = Workload::random(10, 4, 0xF1AE);
+        let mask = Mask::ragged(6);
+        let mut built = build_masked_with_policy(&w, &mask, DepthPolicy::Inferred).unwrap();
+        let (got, _) = built.run().unwrap();
+        assert_close(
+            &got,
+            &sdpa_flashd_f32_masked(&w, &mask),
+            1e-6,
+            "ragged flashd vs masked ref",
+        );
+    }
+
+    #[test]
+    fn causal_reset_replay_is_bit_identical() {
+        let w = Workload::random(8, 4, 0xF1AF);
+        let mut built = build_causal(&w, &FifoPlan::paper(w.n)).unwrap();
+        let (first, s1) = built.run().unwrap();
+        built.engine.reset();
+        let (second, s2) = built.run().unwrap();
+        assert_eq!(first, second, "replay must reproduce outputs bitwise");
+        assert_eq!(s1.cycles, s2.cycles);
+        assert_eq!(s1.node_fires, s2.node_fires);
+    }
+
+    #[test]
+    fn output_rows_arrive_every_n_cycles() {
+        let w = Workload::random(16, 4, 0xF1B0);
+        let mut built = build(&w, &FifoPlan::paper(w.n)).unwrap();
+        built.run().unwrap();
+        let gaps = built.out.arrival_gaps(8).unwrap();
+        assert_eq!(gaps, (w.n as u64, w.n as u64));
+    }
+}

@@ -9,6 +9,7 @@
 //! | [`Variant::MemoryFree`] | Fig. 3(c) | none | O(1) |
 //! | [`Variant::CausalNaive`] … [`Variant::CausalMemoryFree`] | same + causal mask | same as base | same as base |
 //! | [`Variant::Decode`] | decode step (1×N) | none | O(1) per step |
+//! | [`Variant::FlashD`] | FLASH-D (division-free) | none | O(1), no divider node |
 //!
 //! Every prefill graph streams Q rows against resident K/V operands,
 //! produces one output row per N cycles at steady state (II = 1 per
@@ -34,6 +35,7 @@
 
 pub mod causal;
 pub mod decode;
+pub mod flashd;
 pub mod memfree;
 pub mod multihead;
 pub mod naive;
@@ -75,11 +77,18 @@ pub enum Variant {
     /// last query row streamed against the full K/V cache through the
     /// memory-free recurrence. Sessions chain these — see [`decode`].
     Decode,
+    /// FLASH-D (PAPERS.md): the memory-free recurrence with the softmax
+    /// division hidden inside the exponential — a running log-sum-exp
+    /// emits already-normalized weights `w = e^{s−t}` and the output is
+    /// an exact EMA `o⃗ ← o⃗ + w·(v⃗ − o⃗)`. No divider node anywhere in
+    /// the graph; see [`flashd`].
+    FlashD,
 }
 
 impl Variant {
-    /// All variants, paper order first, then the causal/decode family.
-    pub const ALL: [Variant; 9] = [
+    /// All variants: paper order first, then the causal/decode family,
+    /// then the division-free FLASH-D extension.
+    pub const ALL: [Variant; 10] = [
         Variant::Naive,
         Variant::Scaled,
         Variant::Reordered,
@@ -89,6 +98,7 @@ impl Variant {
         Variant::CausalReordered,
         Variant::CausalMemoryFree,
         Variant::Decode,
+        Variant::FlashD,
     ];
 
     /// The paper's four prefill variants (Figures 2, 3a–c) — the set
@@ -112,6 +122,7 @@ impl Variant {
             Variant::CausalReordered => "causal-reordered",
             Variant::CausalMemoryFree => "causal-memfree",
             Variant::Decode => "decode",
+            Variant::FlashD => "flashd",
         }
     }
 
@@ -127,6 +138,7 @@ impl Variant {
             Variant::CausalReordered => "Fig. 3(b) + causal",
             Variant::CausalMemoryFree => "Fig. 3(c) + causal",
             Variant::Decode => "decode step (1×N)",
+            Variant::FlashD => "FLASH-D (division-free)",
         }
     }
 
@@ -177,7 +189,10 @@ impl Variant {
             Variant::Naive | Variant::CausalNaive => &["e_bypass"],
             Variant::Scaled | Variant::CausalScaled => &["s_bypass", "e_bypass"],
             Variant::Reordered | Variant::CausalReordered => &["s_bypass"],
-            Variant::MemoryFree | Variant::CausalMemoryFree | Variant::Decode => &[],
+            Variant::MemoryFree
+            | Variant::CausalMemoryFree
+            | Variant::Decode
+            | Variant::FlashD => &[],
         }
     }
 
@@ -230,6 +245,7 @@ impl Variant {
                 causal::build_masked(self.base(), w, &Mask::Causal, policy)
             }
             Variant::Decode => decode::build_last_row(w, policy),
+            Variant::FlashD => flashd::build_with_policy(w, policy),
         }
     }
 
@@ -248,6 +264,7 @@ impl Variant {
             Variant::Decode => vec![reference::sdpa_online_f32_masked(w, &Mask::Causal)
                 .pop()
                 .expect("workloads have n ≥ 1")],
+            Variant::FlashD => reference::sdpa_flashd_f32(w),
         }
     }
 
@@ -257,9 +274,11 @@ impl Variant {
     /// decode step) — what end-to-end numeric tests compare against.
     pub fn oracle_f64(self, w: &Workload) -> Matrix {
         match self {
-            Variant::Naive | Variant::Scaled | Variant::Reordered | Variant::MemoryFree => {
-                reference::sdpa_f64(w)
-            }
+            Variant::Naive
+            | Variant::Scaled
+            | Variant::Reordered
+            | Variant::MemoryFree
+            | Variant::FlashD => reference::sdpa_f64(w),
             Variant::CausalNaive
             | Variant::CausalScaled
             | Variant::CausalReordered

@@ -230,6 +230,42 @@ pub fn sdpa_online_f32_masked(w: &Workload, mask: &Mask) -> Matrix {
     out
 }
 
+/// The FLASH-D hidden-division recurrence, run sequentially: running
+/// log-sum-exp `t ← max(t,s) + ln_1p(e^{−|t−s|})`, normalized weight
+/// `w = e^{s−t}`, output EMA `o⃗ ← o⃗ + w·(v⃗ − o⃗)` — no division
+/// anywhere, the output is normalized at every step. Validates the
+/// algorithm itself independent of the dataflow mapping (the
+/// structure-matched oracle for [`super::flashd`]).
+pub fn sdpa_flashd_f32(w: &Workload) -> Matrix {
+    sdpa_flashd_f32_masked(w, &Mask::Full)
+}
+
+/// [`sdpa_flashd_f32`] over the visible span — the FLASH-D decode
+/// oracle. Step `t` of a FLASH-D decode session executes exactly this
+/// row-`t` loop (the shared [`super::flashd::lse_fold`] /
+/// `hidden_weight` helpers: same f32 operations, same order), so a
+/// FLASH-D decode-step chain must agree with this reference essentially
+/// bit-for-bit.
+pub fn sdpa_flashd_f32_masked(w: &Workload, mask: &Mask) -> Matrix {
+    let mut out = Vec::with_capacity(w.n);
+    for i in 0..w.n {
+        let (start, end) = mask.row_span(i, w.n);
+        let mut t = f32::NEG_INFINITY;
+        let mut o = vec![0.0f32; w.d];
+        for j in start..end {
+            let s = w.score(i, j);
+            let t_new = super::flashd::lse_fold(t, s);
+            let wgt = super::flashd::hidden_weight(s, t_new);
+            for (acc, vv) in o.iter_mut().zip(&w.v[j]) {
+                *acc += wgt * (vv - *acc);
+            }
+            t = t_new;
+        }
+        out.push(o);
+    }
+    out
+}
+
 /// Max absolute element-wise difference between two matrices.
 pub fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
     assert_eq!(a.len(), b.len(), "row count mismatch");
@@ -327,6 +363,48 @@ mod tests {
         for (a, b) in causal[7].iter().zip(&full[7]) {
             assert!((a - b).abs() < 1e-6, "last row equals full attention");
         }
+    }
+
+    #[test]
+    fn flashd_recurrence_agrees_with_the_oracles_on_every_mask() {
+        let w = Workload::random(12, 6, 88);
+        for mask in [Mask::Full, Mask::Causal, Mask::ragged(5), Mask::window(4)] {
+            let gold = sdpa_f64_masked(&w, &mask);
+            assert_close(
+                &sdpa_flashd_f32_masked(&w, &mask),
+                &gold,
+                3e-5,
+                &format!("flashd masked {}", mask.name()),
+            );
+        }
+        assert_eq!(sdpa_flashd_f32_masked(&w, &Mask::Full), sdpa_flashd_f32(&w));
+    }
+
+    #[test]
+    fn flashd_is_normalized_at_every_prefix() {
+        // The hidden-division property: the EMA state is a convex
+        // combination of the V rows folded so far, at *every* step —
+        // which is why no final divide exists. Check via prefixes: the
+        // masked recurrence over ragged(len) rows equals full-span
+        // flashd of the truncated workload on the valid rows.
+        let w = Workload::random(8, 4, 89);
+        for len in [1usize, 3, 8] {
+            let ragged = sdpa_flashd_f32_masked(&w, &Mask::ragged(len));
+            let trunc = sdpa_flashd_f32_masked(&w.prefix(len), &Mask::Causal);
+            for i in 0..len {
+                assert_eq!(ragged[i], trunc[i], "len={len} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn flashd_survives_adversarial_magnitudes() {
+        // w ≤ 1 and the EMA is bounded by V's envelope: no overflow on
+        // the inputs that blow up the unscaled naive softmax.
+        let w = Workload::large_magnitude(8, 4, 90, 200.0);
+        let out = sdpa_flashd_f32(&w);
+        assert!(out.iter().flatten().all(|x| x.is_finite()));
+        assert_close(&out, &sdpa_f64(&w), 1e-4, "flashd adversarial");
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Codesign study: what does hiding the softmax division buy in
+//! fabric terms?
+//!
+//! FLASH-D (see [`crate::attention::flashd`]) removes the divider from
+//! the dataflow and folds the max/sum bookkeeping into a single
+//! log-sum-exp scan. This driver quantifies everything the simulator
+//! can see about that trade against the paper's reordered variant, per
+//! attention head, across sequence lengths:
+//!
+//! * **nodes** — functional units in the compiled graph
+//!   ([`Engine::node_count`](crate::sim::Engine::node_count)), the
+//!   area proxy;
+//! * **FIFO slots** — the sum of every inferred channel capacity, the
+//!   on-fabric buffering the mapping needs
+//!   (reordered pays an `s_bypass` of N+2, FLASH-D is depth-2
+//!   everywhere, so its total is *constant* in N);
+//! * **long FIFOs** — how many channels the depth inference classified
+//!   as reconvergence buffers;
+//! * **cycles** — completion time of one head under the default
+//!   scheduler (both variants stream N² scores, so this checks the
+//!   smaller graph gives nothing back);
+//! * **max |Δ|** — accumulation error vs the f64 oracle (the EMA
+//!   output form renormalizes every step, so error stays comparable).
+//!
+//! The headline the tests pin down: **strictly fewer nodes and FIFO
+//! slots than the reordered variant at every N**, equal-length
+//! streaming schedule, same error order.
+
+use crate::attention::reference::max_abs_diff;
+use crate::attention::workload::Workload;
+use crate::attention::{DepthPolicy, Variant};
+use crate::report::Table;
+use crate::sim::Capacity;
+use crate::Result;
+
+/// One (variant, N) codesign measurement.
+#[derive(Clone, Debug)]
+pub struct CodesignPoint {
+    /// Sequence length.
+    pub n: usize,
+    /// Functional units in the compiled head.
+    pub nodes: usize,
+    /// Total bounded FIFO capacity (slots) across every channel.
+    pub fifo_slots: usize,
+    /// Channels the depth inference classified as long.
+    pub long_fifos: usize,
+    /// Completion cycles for one head.
+    pub cycles: u64,
+    /// max |Δ| vs the f64 oracle.
+    pub max_err: f32,
+}
+
+/// Full codesign study: one point series per measured variant.
+#[derive(Clone, Debug)]
+pub struct CodesignResult {
+    /// Head dimension all points share.
+    pub d: usize,
+    /// Per-variant series, in measurement order.
+    pub series: Vec<(Variant, Vec<CodesignPoint>)>,
+}
+
+impl CodesignResult {
+    /// Look up one measurement.
+    pub fn point(&self, variant: Variant, n: usize) -> Option<&CodesignPoint> {
+        self.series
+            .iter()
+            .find(|(v, _)| *v == variant)
+            .and_then(|(_, pts)| pts.iter().find(|p| p.n == n))
+    }
+
+    /// Render the per-head codesign table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("Codesign per head (d={}): FLASH-D vs reordered", self.d),
+            &["variant", "N", "nodes", "fifo slots", "long fifos", "cycles", "max |Δ|"],
+        );
+        for (variant, pts) in &self.series {
+            for p in pts {
+                t.row(&[
+                    variant.name().into(),
+                    p.n.to_string(),
+                    p.nodes.to_string(),
+                    p.fifo_slots.to_string(),
+                    p.long_fifos.to_string(),
+                    p.cycles.to_string(),
+                    format!("{:.2e}", p.max_err),
+                ]);
+            }
+        }
+        t
+    }
+}
+
+/// Measure the reordered and FLASH-D prefill heads at each `n` with
+/// inferred FIFO depths, and return the per-variant series.
+pub fn run(ns: &[usize], d: usize) -> Result<CodesignResult> {
+    let mut series = Vec::new();
+    for variant in [Variant::Reordered, Variant::FlashD] {
+        let mut pts = Vec::with_capacity(ns.len());
+        for &n in ns {
+            let w = Workload::random(n, d, 0xC0DE);
+            let gold = variant.oracle_f64(&w);
+            let mut built = variant.build_with_policy(&w, DepthPolicy::Inferred)?;
+            let nodes = built.engine.node_count();
+            let mut fifo_slots = 0usize;
+            let mut long_fifos = 0usize;
+            for c in built.engine.depth_report() {
+                if let Capacity::Bounded(k) = c.capacity {
+                    fifo_slots += k;
+                }
+                if c.is_long {
+                    long_fifos += 1;
+                }
+            }
+            let (got, summary) = built.run()?;
+            pts.push(CodesignPoint {
+                n,
+                nodes,
+                fifo_slots,
+                long_fifos,
+                cycles: summary.cycles,
+                max_err: max_abs_diff(&got, &gold),
+            });
+        }
+        series.push((variant, pts));
+    }
+    Ok(CodesignResult {
+        d,
+        series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flashd_is_strictly_smaller_than_reordered_at_every_n() {
+        let r = run(&[16, 64], 4).unwrap();
+        for n in [16usize, 64] {
+            let re = r.point(Variant::Reordered, n).unwrap();
+            let fd = r.point(Variant::FlashD, n).unwrap();
+            assert!(
+                fd.nodes < re.nodes,
+                "n={n}: flashd {} nodes vs reordered {}",
+                fd.nodes,
+                re.nodes
+            );
+            assert!(
+                fd.fifo_slots < re.fifo_slots,
+                "n={n}: flashd {} slots vs reordered {}",
+                fd.fifo_slots,
+                re.fifo_slots
+            );
+        }
+    }
+
+    #[test]
+    fn flashd_buffering_is_constant_and_reordered_grows_with_n() {
+        let r = run(&[16, 64], 4).unwrap();
+        let fd16 = r.point(Variant::FlashD, 16).unwrap();
+        let fd64 = r.point(Variant::FlashD, 64).unwrap();
+        assert_eq!(fd16.long_fifos, 0);
+        assert_eq!(fd64.long_fifos, 0);
+        assert_eq!(
+            fd16.fifo_slots, fd64.fifo_slots,
+            "depth-2-everywhere ⇒ slots independent of N"
+        );
+        let re16 = r.point(Variant::Reordered, 16).unwrap();
+        let re64 = r.point(Variant::Reordered, 64).unwrap();
+        assert!(re16.long_fifos >= 1, "reordered carries s_bypass");
+        assert!(
+            re64.fifo_slots > re16.fifo_slots,
+            "the bypass grows with N"
+        );
+    }
+
+    #[test]
+    fn both_variants_stay_within_oracle_bounds() {
+        let r = run(&[16, 64], 4).unwrap();
+        for (v, pts) in &r.series {
+            for p in pts {
+                assert!(p.max_err < 1e-4, "{v} n={}: {}", p.n, p.max_err);
+                assert!(p.cycles > 0, "{v} n={}: no cycles recorded", p.n);
+            }
+        }
+    }
+
+    #[test]
+    fn table_lists_both_series() {
+        let r = run(&[16], 4).unwrap();
+        let rendered = r.table().render();
+        assert!(rendered.contains("flashd"));
+        assert!(rendered.contains("reordered"));
+    }
+}

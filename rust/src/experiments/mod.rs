@@ -17,8 +17,10 @@
 //! | [`paging::run`] | extension: paged KV cache — prefix sharing + preemption vs pool size |
 //! | [`traffic::run`] | extension: trace-driven fleet replay — throughput/TTFT/ITL vs offered load and shard count |
 //! | [`window::run`] | extension: sliding-window eviction — pool occupancy/evictions vs window size |
+//! | [`codesign::run`] | extension: FLASH-D vs reordered — nodes / FIFO slots / cycles / error per head |
 
 pub mod ablation;
+pub mod codesign;
 pub mod decode;
 pub mod fifo_sweep;
 pub mod numerics;
@@ -55,5 +57,7 @@ pub fn run_all(n: usize, d: usize) -> Result<()> {
     traffic::run(&[2.0], &[1, 2], 8, d.min(8), 0x7A11)?.table().print();
     println!();
     window::run(&[8, 4, 2], 3, 12, d.min(8), 2)?.table().print();
+    println!();
+    codesign::run(&[16, 64], d.min(8))?.table().print();
     Ok(())
 }

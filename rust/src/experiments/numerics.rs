@@ -107,6 +107,7 @@ mod tests {
             Variant::CausalReordered,
             Variant::CausalMemoryFree,
             Variant::Decode,
+            Variant::FlashD,
         ] {
             let err = r.err(v, "adversarial").unwrap();
             assert!(err.is_finite() && err < 1e-3, "{v}: {err}");

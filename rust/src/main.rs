@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! sdpa-dataflow simulate    --variant memfree --n 64 --d 32 [--long-depth K] [--unbounded]
-//! sdpa-dataflow experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving|paging|traffic|window] [--n N] [--d D]
+//! sdpa-dataflow experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving|paging|traffic|window|codesign] [--n N] [--d D]
 //! sdpa-dataflow validate    [--artifacts DIR]       # run every artifact vs its golden file
 //! sdpa-dataflow serve       [--requests K] [--batch B] [--wait-us U]  # prefill batching demo
 //!                           [--sessions S] [--steps T] [--lanes L]    # + continuous-batching decode
@@ -25,7 +25,7 @@ fn usage() -> String {
         "usage: sdpa-dataflow <simulate|experiments|validate|serve|help> [options]
   simulate    --variant <{variants}>
               --n N --d D [--long-depth K] [--unbounded] [--inferred]
-  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving|paging|traffic|window] [--n N] [--d D]
+  experiments [all|table1|fig2|fig3a|fig3b|fig3c|scaling|numerics|ablation|decode|serving|paging|traffic|window|codesign] [--n N] [--d D]
   validate    [--artifacts DIR]
   serve       [--requests K] [--batch B] [--wait-us U] [--batch-tokens T]
               [--artifacts DIR] [--sessions S] [--steps T] [--lanes L]
@@ -179,6 +179,11 @@ fn run_experiments(args: &Args) -> sdpa_dataflow::Result<()> {
         }
         "window" => {
             experiments::window::run(&[16, 8, 4, 2], 4, 24, d.min(8), 2)?
+                .table()
+                .print()
+        }
+        "codesign" => {
+            experiments::codesign::run(&[64, 256, 1024, 4096], d.min(16))?
                 .table()
                 .print()
         }

@@ -326,6 +326,12 @@ impl Engine {
         self.components.len()
     }
 
+    /// Number of nodes (functional units) in the compiled graph — the
+    /// codesign study's per-head area proxy.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
     /// The compile-time depth report: per channel, the depth the
     /// latency-balance analysis derived and the capacity configured *at
     /// compile time*. Capacities reconfigured later (sweeps) show up in

@@ -24,30 +24,10 @@ use sdpa_dataflow::attention::reference::{
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::attention::{causal, DepthPolicy, Mask, Variant};
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
-use sdpa_dataflow::sim::{Capacity, RunOutcome, SchedulerMode};
+use sdpa_dataflow::sim::Capacity;
 
-const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
-
-/// Run a full decode session over `w` under an explicit scheduler mode.
-fn chain(kind: DecodeKind, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
-    let mut session = DecodeSession::new(kind, w.d);
-    session.set_scheduler_mode(mode);
-    for t in 0..w.n {
-        session
-            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
-            .unwrap();
-    }
-    session.outputs().clone()
-}
-
-/// Run the masked memory-free prefill graph under a scheduler mode.
-fn masked_prefill(base: Variant, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
-    let mut built = causal::build_masked(base, w, &Mask::Causal, DepthPolicy::Inferred).unwrap();
-    built.engine.set_scheduler_mode(mode);
-    let (out, summary) = built.run().unwrap();
-    assert_eq!(summary.outcome, RunOutcome::Completed);
-    out
-}
+mod common;
+use common::{chain, masked_prefill, MODES};
 
 #[test]
 fn decode_chain_equals_causal_prefill_equals_reference_over_the_grid() {
@@ -68,7 +48,7 @@ fn decode_chain_equals_causal_prefill_equals_reference_over_the_grid() {
                     "{label}: chain drifted from the step-for-step oracle"
                 );
                 // Decode chain vs the masked streaming prefill graph.
-                let prefill = masked_prefill(Variant::MemoryFree, &w, mode);
+                let prefill = masked_prefill(Variant::MemoryFree, &w, &Mask::Causal, mode);
                 assert_close(&chain_out, &prefill, 1e-5, &format!("chain vs prefill, {label}"));
                 // Both vs the f64 accuracy oracle.
                 assert_close(&chain_out, &gold, 1e-4, &format!("chain vs f64, {label}"));
@@ -144,7 +124,7 @@ fn masked_prefill_variants_agree_pairwise_on_the_grid() {
         let gold = sdpa_f64_masked(&w, &Mask::Causal);
         for base in Variant::PAPER {
             for mode in MODES {
-                let out = masked_prefill(base, &w, mode);
+                let out = masked_prefill(base, &w, &Mask::Causal, mode);
                 assert_close(
                     &out,
                     &gold,

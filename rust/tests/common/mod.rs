@@ -1,0 +1,148 @@
+//! Shared helpers for the differential-conformance suites.
+//!
+//! Every suite compares the same few implementations against each
+//! other — contiguous decode chains, paged chains, windowed chains,
+//! masked prefill graphs, and per-step truncated oracles — under an
+//! explicitly pinned scheduler mode. These builders were once
+//! copy-pasted per suite; they live here so a new `DecodeKind` or
+//! `Variant` (FLASH-D being the tenth) extends every suite from one
+//! place.
+
+// Each integration-test binary compiles its own copy of this module,
+// so any one binary uses only a subset of the helpers.
+#![allow(dead_code)]
+
+use sdpa_dataflow::attention::causal;
+use sdpa_dataflow::attention::decode::{build_step, DecodeKind, DecodeSession, PagedDecodeSession};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
+use sdpa_dataflow::runtime::kvcache::{BlockPool, KvCacheConfig};
+use sdpa_dataflow::sim::{RunOutcome, SchedulerMode};
+
+/// Both scheduler modes, pinned explicitly so the CI matrix cannot
+/// mask a mode-dependent divergence.
+pub const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
+
+/// A bounded block pool for paged-session tests.
+pub fn pool(block_size: usize, num_blocks: usize) -> BlockPool {
+    BlockPool::new(KvCacheConfig {
+        block_size,
+        num_blocks,
+    })
+    .unwrap()
+}
+
+/// Run a full contiguous decode session over `w` under an explicit
+/// scheduler mode — the baseline every paged transcript is compared
+/// against bitwise.
+pub fn chain(kind: DecodeKind, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
+    let mut session = DecodeSession::new(kind, w.d);
+    session.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        session
+            .step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+    }
+    session.outputs().clone()
+}
+
+/// Run a masked streaming prefill graph under a scheduler mode.
+pub fn masked_prefill(
+    base: Variant,
+    w: &Workload,
+    mask: &Mask,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let mut built = causal::build_masked(base, w, mask, DepthPolicy::Inferred).unwrap();
+    built.engine.set_scheduler_mode(mode);
+    let (out, summary) = built.run().unwrap();
+    assert_eq!(summary.outcome, RunOutcome::Completed);
+    out
+}
+
+/// Paged chain over `w` (block size 4, so multi-block tables appear
+/// from N = 5 on) under an explicit scheduler mode.
+pub fn paged(kind: DecodeKind, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
+    let mut p = pool(4, 2 * w.n.div_ceil(4).max(1));
+    let mut s = PagedDecodeSession::new(kind, w.d);
+    s.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        s.step(&mut p, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+    }
+    let out = s.close(&mut p);
+    assert_eq!(p.used_blocks(), 0, "chain close must free every block");
+    out
+}
+
+/// Windowed paged chain (block size 4). The pool is sized barely above
+/// the ring, and the ring cap is asserted at every step — a windowed
+/// session's footprint must never depend on how long it has run.
+pub fn windowed_paged(
+    kind: DecodeKind,
+    w: &Workload,
+    win: usize,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let bs = 4;
+    let cap = win.div_ceil(bs);
+    let mut p = pool(bs, cap + 2);
+    let mut s = PagedDecodeSession::new_windowed(kind, w.d, win);
+    s.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        s.step(&mut p, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+        assert!(
+            s.table().num_blocks() <= cap,
+            "step {t}: W={win} ring exceeded ⌈W/{bs}⌉ = {cap} blocks"
+        );
+    }
+    let out = s.close(&mut p);
+    assert_eq!(p.used_blocks(), 0, "windowed close must free every block");
+    out
+}
+
+/// Windowed contiguous chain.
+pub fn windowed_contiguous(
+    kind: DecodeKind,
+    w: &Workload,
+    win: usize,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let mut s = DecodeSession::new_windowed(kind, w.d, win);
+    s.set_scheduler_mode(mode);
+    for t in 0..w.n {
+        s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+    }
+    s.outputs().clone()
+}
+
+/// Truncated sequential oracle — step `t` builds a fresh compressed
+/// graph over exactly the workload rows a window-W session may attend
+/// (`max(0, t+1−W) .. t+1`), with no session state anywhere. Any drift
+/// in the sessions' span bookkeeping (ring slots, slice starts,
+/// eviction order) diverges from this bitwise.
+pub fn truncated_oracle(
+    kind: DecodeKind,
+    w: &Workload,
+    win: usize,
+    mode: SchedulerMode,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(w.n);
+    for t in 0..w.n {
+        let start = (t + 1).saturating_sub(win);
+        let mut built = build_step(
+            kind,
+            &w.q[t],
+            &w.k[start..=t],
+            &w.v[start..=t],
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        built.engine.set_scheduler_mode(mode);
+        let (rows, _) = built.run().unwrap();
+        out.push(rows.into_iter().next().expect("one output row"));
+    }
+    out
+}

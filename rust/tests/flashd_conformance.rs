@@ -1,0 +1,240 @@
+//! FLASH-D differential-conformance suite.
+//!
+//! The tenth variant hides the softmax division inside the exponential
+//! recurrence (see `attention::flashd`), so it must be proven the way
+//! every variant family before it was: differentially, across every
+//! execution axis the simulator exposes.
+//!
+//! 1. **Prefill vs the oracles** — the streaming FLASH-D graph equals
+//!    the structure-matched sequential f32 recurrence tightly (1e-6)
+//!    and the f64 oracle loosely (1e-4), over N ∈ {1, 4, 16, 64} ×
+//!    d ∈ {4, 16} × {full, causal, window} masks × both `SDPA_SCHED`
+//!    modes × threads {1, 4} — with thread counts proven bit-identical.
+//! 2. **Decode chain vs prefill** — a FLASH-D decode session replayed
+//!    over a workload equals the causal FLASH-D prefill row for row
+//!    (the compressed and the masked mapping compute the same f32
+//!    sequence; masked slots are exact identity updates).
+//! 3. **Paged ≡ contiguous ≡ windowed-truncated, bitwise** — the
+//!    serving stack must be invisible to the numbers for the new
+//!    `DecodeKind` exactly as it is for the others.
+//! 4. **No divider, O(1) memory** — no node named `div` anywhere,
+//!    every FIFO depth 2 and never flagged long, runtime peaks ≤ 2.
+
+use sdpa_dataflow::attention::decode::{build_step, DecodeKind, DecodeSession};
+use sdpa_dataflow::attention::reference::{
+    assert_close, max_abs_diff, sdpa_f64_masked, sdpa_flashd_f32_masked,
+};
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{causal, DepthPolicy, Mask, Variant};
+use sdpa_dataflow::sim::{Capacity, RunOutcome, SchedulerMode};
+
+mod common;
+use common::{chain, paged, truncated_oracle, windowed_contiguous, windowed_paged, MODES};
+
+const THREADS: [usize; 2] = [1, 4];
+
+/// Build and run the masked FLASH-D prefill graph under an explicit
+/// scheduler mode and worker-thread count.
+fn flashd_prefill(
+    w: &Workload,
+    mask: &Mask,
+    mode: SchedulerMode,
+    threads: usize,
+) -> Vec<Vec<f32>> {
+    let mut built = causal::build_masked(Variant::FlashD, w, mask, DepthPolicy::Inferred).unwrap();
+    built.engine.set_scheduler_mode(mode);
+    built.engine.set_threads(threads);
+    let (out, summary) = built.run().unwrap();
+    assert_eq!(summary.outcome, RunOutcome::Completed);
+    out
+}
+
+/// A FLASH-D decode chain over `w` with mode and threads pinned.
+fn flashd_chain(w: &Workload, mode: SchedulerMode, threads: usize) -> Vec<Vec<f32>> {
+    let mut s = DecodeSession::new(DecodeKind::FlashD, w.d);
+    s.set_scheduler_mode(mode);
+    s.set_threads(threads);
+    for t in 0..w.n {
+        s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
+            .unwrap();
+    }
+    s.outputs().clone()
+}
+
+#[test]
+fn prefill_matches_the_oracles_over_the_full_grid() {
+    for n in [1usize, 4, 16, 64] {
+        for d in [4usize, 16] {
+            let w = Workload::random(n, d, (n * 100 + d) as u64 ^ 0xF1A5);
+            for mask in [Mask::Full, Mask::Causal, Mask::window(3)] {
+                let tight = sdpa_flashd_f32_masked(&w, &mask);
+                let gold = sdpa_f64_masked(&w, &mask);
+                for mode in MODES {
+                    let mut per_thread = Vec::new();
+                    for threads in THREADS {
+                        let label =
+                            format!("N={n} d={d} {} {mode:?} threads={threads}", mask.name());
+                        let out = flashd_prefill(&w, &mask, mode, threads);
+                        // Structure-matched f32 recurrence: tight.
+                        assert_close(&out, &tight, 1e-6, &format!("vs sequential, {label}"));
+                        // Accuracy oracle: standard bound.
+                        assert_close(&out, &gold, 1e-4, &format!("vs f64, {label}"));
+                        per_thread.push((out, label));
+                    }
+                    // Thread counts only choose which worker runs a
+                    // component — results are bit-identical.
+                    let (first, _) = &per_thread[0];
+                    for (out, label) in &per_thread[1..] {
+                        assert_eq!(first, out, "{label}: thread count moved a bit");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_chain_equals_causal_prefill_row_for_row() {
+    for n in [1usize, 4, 16, 64] {
+        for d in [4usize, 16] {
+            let w = Workload::random(n, d, (n * 100 + d) as u64 ^ 0xF1A6);
+            let tight = sdpa_flashd_f32_masked(&w, &Mask::Causal);
+            let gold = sdpa_f64_masked(&w, &Mask::Causal);
+            for mode in MODES {
+                let mut per_thread = Vec::new();
+                for threads in THREADS {
+                    let label = format!("N={n} d={d} {mode:?} threads={threads}");
+                    let chain_out = flashd_chain(&w, mode, threads);
+                    // The compressed step graph and the sequential
+                    // reference fold the same scores through the same
+                    // helpers in the same order.
+                    assert!(
+                        max_abs_diff(&chain_out, &tight) <= 1e-6,
+                        "{label}: chain drifted from the step-for-step oracle"
+                    );
+                    // The masked prefill graph adds only exact identity
+                    // updates on the masked slots.
+                    let prefill = flashd_prefill(&w, &Mask::Causal, mode, threads);
+                    for (t, (c, p)) in chain_out.iter().zip(&prefill).enumerate() {
+                        assert!(
+                            max_abs_diff(&[c.clone()], &[p.clone()]) <= 1e-6,
+                            "{label}: chain row {t} diverged from prefill row {t}"
+                        );
+                    }
+                    assert_close(&chain_out, &gold, 1e-4, &format!("chain vs f64, {label}"));
+                    per_thread.push((chain_out, label));
+                }
+                let (first, _) = &per_thread[0];
+                for (out, label) in &per_thread[1..] {
+                    assert_eq!(first, out, "{label}: thread count moved a bit");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_contiguous_and_truncated_chains_agree_bitwise() {
+    for n in [1usize, 4, 16, 64] {
+        let w = Workload::random(n, 4, 0xF1A7 + n as u64);
+        for mode in MODES {
+            // Unwindowed: paged ≡ contiguous.
+            assert_eq!(
+                paged(DecodeKind::FlashD, &w, mode),
+                chain(DecodeKind::FlashD, &w, mode),
+                "N={n} {mode:?}: flashd paged must equal contiguous bitwise"
+            );
+            // Windowed: ring ≡ sliced ≡ per-step truncated oracle.
+            for win in [4usize, 16] {
+                let label = format!("N={n} W={win} {mode:?}");
+                let paged_out = windowed_paged(DecodeKind::FlashD, &w, win, mode);
+                let contiguous_out = windowed_contiguous(DecodeKind::FlashD, &w, win, mode);
+                let oracle_out = truncated_oracle(DecodeKind::FlashD, &w, win, mode);
+                assert_eq!(
+                    paged_out, contiguous_out,
+                    "{label}: windowed paged ≡ windowed contiguous bitwise"
+                );
+                assert_eq!(
+                    contiguous_out, oracle_out,
+                    "{label}: windowed contiguous ≡ truncated oracle bitwise"
+                );
+                let mask = Mask::window(win);
+                assert_close(
+                    &paged_out,
+                    &sdpa_flashd_f32_masked(&w, &mask),
+                    1e-6,
+                    &format!("windowed vs sequential, {label}"),
+                );
+                assert_close(
+                    &paged_out,
+                    &sdpa_f64_masked(&w, &mask),
+                    1e-4,
+                    &format!("windowed vs f64, {label}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn no_divider_node_and_o1_memory_on_both_twins() {
+    // Prefill twin: every mask keeps the depth-2-everywhere report, no
+    // node named `div` ever fires, runtime peaks stay ≤ 2.
+    let w = Workload::random(16, 8, 0xF1A8);
+    for mask in [Mask::Full, Mask::Causal, Mask::window(5)] {
+        let mut built =
+            causal::build_masked(Variant::FlashD, &w, &mask, DepthPolicy::Inferred).unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "{}: '{}' flagged long", mask.name(), c.name);
+            assert_eq!(
+                c.capacity,
+                Capacity::Bounded(2),
+                "{}: '{}' not depth-2",
+                mask.name(),
+                c.name
+            );
+        }
+        let (_, summary) = built.run().unwrap();
+        assert!(
+            summary.node_fires.iter().all(|(name, _)| name != "div"),
+            "{}: a divider node fired in the prefill twin",
+            mask.name()
+        );
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "{}: channel '{name}' peaked at {}",
+                mask.name(),
+                st.peak_occupancy_elems
+            );
+        }
+    }
+    // Decode twin: same properties at every cache length.
+    for len in [1usize, 4, 16, 64] {
+        let p = Workload::random(64, 8, 0xF1A9).prefix(len.max(1));
+        let mut built = build_step(
+            DecodeKind::FlashD,
+            &p.q[len - 1],
+            &p.k,
+            &p.v,
+            DepthPolicy::Inferred,
+        )
+        .unwrap();
+        for c in built.engine.depth_report() {
+            assert!(!c.is_long, "len={len}: '{}' flagged long", c.name);
+            assert_eq!(c.capacity, Capacity::Bounded(2), "len={len}: '{}'", c.name);
+        }
+        let (_, summary) = built.run().unwrap();
+        assert!(
+            summary.node_fires.iter().all(|(name, _)| name != "div"),
+            "len={len}: a divider node fired in the decode twin"
+        );
+        for (name, st) in &summary.channel_stats {
+            assert!(
+                st.peak_occupancy_elems <= 2,
+                "len={len}: channel '{name}' peaked at {}",
+                st.peak_occupancy_elems
+            );
+        }
+    }
+}

@@ -31,45 +31,10 @@ use sdpa_dataflow::coordinator::{
 };
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
 use sdpa_dataflow::runtime::kvcache::{BlockPool, BlockTable, SwappedKv};
-use sdpa_dataflow::sim::SchedulerMode;
 use sdpa_dataflow::Error;
 
-const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
-
-fn pool(block_size: usize, num_blocks: usize) -> BlockPool {
-    BlockPool::new(KvCacheConfig {
-        block_size,
-        num_blocks,
-    })
-    .unwrap()
-}
-
-/// Contiguous chain over `w` under an explicit scheduler mode — the
-/// baseline every paged transcript is compared against bitwise.
-fn contiguous(kind: DecodeKind, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
-    let mut s = DecodeSession::new(kind, w.d);
-    s.set_scheduler_mode(mode);
-    for t in 0..w.n {
-        s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
-            .unwrap();
-    }
-    s.outputs().clone()
-}
-
-/// Paged chain over `w` (block size 4, so multi-block tables appear
-/// from N = 5 on) under an explicit scheduler mode.
-fn paged(kind: DecodeKind, w: &Workload, mode: SchedulerMode) -> Vec<Vec<f32>> {
-    let mut p = pool(4, 2 * w.n.div_ceil(4).max(1));
-    let mut s = PagedDecodeSession::new(kind, w.d);
-    s.set_scheduler_mode(mode);
-    for t in 0..w.n {
-        s.step(&mut p, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
-            .unwrap();
-    }
-    let out = s.close(&mut p);
-    assert_eq!(p.used_blocks(), 0, "chain close must free every block");
-    out
-}
+mod common;
+use common::{chain as contiguous, paged, pool, MODES};
 
 #[test]
 fn paged_chain_is_bit_identical_to_contiguous_over_the_grid() {

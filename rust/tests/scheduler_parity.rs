@@ -7,8 +7,9 @@
 //! Coverage: randomized linear pipelines (latencies, capacities, vector
 //! elements), randomized reconvergent diamonds (the Figure-2 shape,
 //! including undersized-bypass deadlocks), imbalanced independent
-//! joins, scan/repeat/reduce chains, all nine attention variants
-//! (prefill, causal, decode) plus multihead at N ∈ {4, 16, 64}, masked
+//! joins, scan/repeat/reduce chains, all ten attention variants
+//! (prefill, causal, decode, FLASH-D) plus multihead at N ∈ {4, 16,
+//! 64}, masked
 //! ragged and sliding-window streams, decode-step graphs across cache
 //! lengths, and tiny budgets for the budget-exceeded path.
 //!
@@ -378,11 +379,19 @@ fn multihead_cycle_exact_across_modes() {
 #[test]
 fn property_masked_ragged_streams_cycle_exact() {
     // Masked streams carry long runs of −∞/zero elements — firing
-    // patterns the cycle-jump path never saw before this suite.
+    // patterns the cycle-jump path never saw before this suite. The
+    // maskable bases are the paper's four plus FLASH-D.
+    const MASKED_BASES: [Variant; 5] = [
+        Variant::Naive,
+        Variant::Scaled,
+        Variant::Reordered,
+        Variant::MemoryFree,
+        Variant::FlashD,
+    ];
     for_each_case(0xCA7, 12, |case, rng| {
         let n = 2 + rng.below(14) as usize;
         let d = 1 + rng.below(6) as usize;
-        let base = *rng.choose(&Variant::PAPER);
+        let base = *rng.choose(&MASKED_BASES);
         let mask = match rng.below(3) {
             0 => Mask::Causal,
             1 => Mask::ragged(1 + rng.below(n as u64) as usize),
@@ -594,11 +603,11 @@ fn attention_variants_thread_invariant() {
 fn windowed_prefill_thread_invariant() {
     // Sliding-window masks stream long −∞/zero runs on *both* sides of
     // the diagonal; the compiled graph must stay bit-identical across
-    // worker counts for every paper variant.
+    // worker counts for every paper variant plus FLASH-D.
     let n = 16;
     let win = 5;
     let w = Workload::random(n, 4, 0x77D0);
-    for base in Variant::PAPER {
+    for base in Variant::PAPER.into_iter().chain([Variant::FlashD]) {
         assert_thread_invariant(
             || {
                 causal::build_masked(base, &w, &Mask::window(win), DepthPolicy::Paper(n))

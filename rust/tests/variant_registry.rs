@@ -1,0 +1,116 @@
+//! Registry property test: [`Variant::ALL`] is the single source of
+//! truth for the CLI, the experiments, and the conformance grids, so
+//! every entry must be fully wired — parseable, oracle-backed,
+//! buildable, and listed in the usage string. A variant added to the
+//! enum but missed in any `match` fails here before it fails a human.
+
+use sdpa_dataflow::attention::workload::Workload;
+use sdpa_dataflow::attention::{Mask, Variant};
+use sdpa_dataflow::sim::RunOutcome;
+
+#[test]
+fn the_registry_holds_all_ten_variants() {
+    assert_eq!(Variant::ALL.len(), 10, "ALL must list every variant");
+    assert!(
+        Variant::ALL.contains(&Variant::FlashD),
+        "the division-free extension must be registered"
+    );
+    // No duplicates: names are distinct.
+    let mut names: Vec<&str> = Variant::ALL.iter().map(|v| v.name()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), Variant::ALL.len(), "duplicate variant names");
+}
+
+#[test]
+fn every_variant_round_trips_through_parse() {
+    for v in Variant::ALL {
+        let parsed = Variant::parse(v.name())
+            .unwrap_or_else(|e| panic!("{v}: name() does not parse back: {e}"));
+        assert_eq!(parsed, v, "{v}: parse(name()) round-trip");
+        // Display agrees with name() — reports and CLI echo match.
+        assert_eq!(format!("{v}"), v.name(), "{v}: Display vs name()");
+    }
+    assert!(
+        Variant::parse("no-such-variant").is_err(),
+        "parse must reject unknown names"
+    );
+}
+
+#[test]
+fn every_variant_appears_in_the_usage_list() {
+    let usage = Variant::usage_list();
+    for v in Variant::ALL {
+        assert!(
+            usage.split('|').any(|name| name == v.name()),
+            "{v}: missing from usage_list() '{usage}'"
+        );
+    }
+}
+
+#[test]
+fn every_variant_exposes_callable_base_mask_and_figure() {
+    for v in Variant::ALL {
+        let base = v.base();
+        assert!(
+            Variant::ALL.contains(&base),
+            "{v}: base() {base} is not a registered variant"
+        );
+        assert_eq!(base.base(), base, "{v}: base() must be idempotent");
+        assert!(!base.is_causal(), "{v}: base() must be an unmasked algorithm");
+        // mask() is total and consistent with the causal/decode flags.
+        match v.mask() {
+            Mask::Causal => assert!(v.is_causal() || v.is_decode(), "{v}: causal mask"),
+            Mask::Full => assert!(!v.is_causal() && !v.is_decode(), "{v}: full mask"),
+            other => panic!("{v}: unexpected registry mask {}", other.name()),
+        }
+        assert!(!v.figure().is_empty(), "{v}: figure() must describe itself");
+    }
+}
+
+#[test]
+fn every_variant_has_a_shape_correct_oracle_and_reference() {
+    let w = Workload::random(6, 4, 0x9E61);
+    for v in Variant::ALL {
+        let rows = if v.is_decode() { 1 } else { w.n };
+        let gold = v.oracle_f64(&w);
+        assert_eq!(gold.len(), rows, "{v}: oracle_f64 row count");
+        let refr = v.reference(&w);
+        assert_eq!(refr.len(), rows, "{v}: reference row count");
+        for (out, label) in [(&gold, "oracle_f64"), (&refr, "reference")] {
+            for (i, row) in out.iter().enumerate() {
+                assert_eq!(row.len(), w.d, "{v}: {label} row {i} width");
+                assert!(
+                    row.iter().all(|x| x.is_finite()),
+                    "{v}: {label} row {i} not finite"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_variant_builds_and_completes_under_inferred_depths() {
+    let w = Workload::random(6, 4, 0x9E62);
+    for v in Variant::ALL {
+        let mut built = v
+            .build_inferred(&w)
+            .unwrap_or_else(|e| panic!("{v}: build_inferred failed: {e}"));
+        // The depth report flags exactly the registered long FIFOs
+        // (set equality — report order follows channel creation).
+        let mut long: Vec<&str> = built
+            .engine
+            .depth_report()
+            .iter()
+            .filter(|c| c.is_long)
+            .map(|c| c.name.as_str())
+            .collect();
+        long.sort_unstable();
+        let mut registered = v.long_fifos().to_vec();
+        registered.sort_unstable();
+        assert_eq!(long, registered, "{v}: long-FIFO registry mismatch");
+        let (out, summary) = built.run().unwrap();
+        assert_eq!(summary.outcome, RunOutcome::Completed, "{v}: completion");
+        assert_eq!(out.len(), v.oracle_f64(&w).len(), "{v}: output rows");
+    }
+}

@@ -26,98 +26,17 @@
 
 use sdpa_dataflow::attention::causal::build_masked;
 use sdpa_dataflow::attention::decode::{
-    build_step, step_long_fifo_bound, DecodeKind, DecodeSession, PagedDecodeSession,
+    step_long_fifo_bound, DecodeKind, DecodeSession, PagedDecodeSession,
 };
 use sdpa_dataflow::attention::reference::{assert_close, sdpa_f64_masked, sdpa_online_f32_masked};
 use sdpa_dataflow::attention::workload::Workload;
 use sdpa_dataflow::attention::{DepthPolicy, Mask, Variant};
 use sdpa_dataflow::prng::{for_each_case, SplitMix64};
-use sdpa_dataflow::runtime::kvcache::{BlockPool, BlockTable, KvCacheConfig, SwappedKv};
-use sdpa_dataflow::sim::SchedulerMode;
+use sdpa_dataflow::runtime::kvcache::{BlockPool, BlockTable, SwappedKv};
 use sdpa_dataflow::Error;
 
-const MODES: [SchedulerMode; 2] = [SchedulerMode::Dense, SchedulerMode::EventDriven];
-
-fn pool(block_size: usize, num_blocks: usize) -> BlockPool {
-    BlockPool::new(KvCacheConfig {
-        block_size,
-        num_blocks,
-    })
-    .unwrap()
-}
-
-/// Implementation 1: the windowed paged chain (block size 4). The pool
-/// is sized barely above the ring, and the ring cap is asserted at
-/// every step — a windowed session's footprint must never depend on
-/// how long it has run.
-fn windowed_paged(
-    kind: DecodeKind,
-    w: &Workload,
-    win: usize,
-    mode: SchedulerMode,
-) -> Vec<Vec<f32>> {
-    let bs = 4;
-    let cap = win.div_ceil(bs);
-    let mut p = pool(bs, cap + 2);
-    let mut s = PagedDecodeSession::new_windowed(kind, w.d, win);
-    s.set_scheduler_mode(mode);
-    for t in 0..w.n {
-        s.step(&mut p, w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
-            .unwrap();
-        assert!(
-            s.table().num_blocks() <= cap,
-            "step {t}: W={win} ring exceeded ⌈W/{bs}⌉ = {cap} blocks"
-        );
-    }
-    let out = s.close(&mut p);
-    assert_eq!(p.used_blocks(), 0, "windowed close must free every block");
-    out
-}
-
-/// Implementation 2: the windowed contiguous chain.
-fn windowed_contiguous(
-    kind: DecodeKind,
-    w: &Workload,
-    win: usize,
-    mode: SchedulerMode,
-) -> Vec<Vec<f32>> {
-    let mut s = DecodeSession::new_windowed(kind, w.d, win);
-    s.set_scheduler_mode(mode);
-    for t in 0..w.n {
-        s.step(w.q[t].clone(), w.k[t].clone(), w.v[t].clone())
-            .unwrap();
-    }
-    s.outputs().clone()
-}
-
-/// Implementation 3: the truncated sequential oracle — step `t` builds
-/// a fresh compressed graph over exactly the workload rows a window-W
-/// session may attend (`max(0, t+1−W) .. t+1`), with no session state
-/// anywhere. Any drift in the sessions' span bookkeeping (ring slots,
-/// slice starts, eviction order) diverges from this bitwise.
-fn truncated_oracle(
-    kind: DecodeKind,
-    w: &Workload,
-    win: usize,
-    mode: SchedulerMode,
-) -> Vec<Vec<f32>> {
-    let mut out = Vec::with_capacity(w.n);
-    for t in 0..w.n {
-        let start = (t + 1).saturating_sub(win);
-        let mut built = build_step(
-            kind,
-            &w.q[t],
-            &w.k[start..=t],
-            &w.v[start..=t],
-            DepthPolicy::Inferred,
-        )
-        .unwrap();
-        built.engine.set_scheduler_mode(mode);
-        let (rows, _) = built.run().unwrap();
-        out.push(rows.into_iter().next().expect("one output row"));
-    }
-    out
-}
+mod common;
+use common::{pool, truncated_oracle, windowed_contiguous, windowed_paged, MODES};
 
 #[test]
 fn windowed_grid_three_way_bitwise_agreement() {
